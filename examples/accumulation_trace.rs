@@ -1,0 +1,83 @@
+//! Figure 8 study: serialized accumulation of one real neuron's weighted
+//! inputs under several customized-precision formats, with an ASCII
+//! rendering of the trajectories and the saturation events.
+//!
+//!     cargo run --release --example accumulation_trace [-- <network> <sample>]
+
+use anyhow::Result;
+
+use precis::figures::{fig8_formats, neuron_chain};
+use precis::nn::Zoo;
+use precis::numerics::trace::{trace_accumulation, trace_exact};
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let net_name = args.first().map(|s| s.as_str()).unwrap_or("alexnet-mini");
+    let sample: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(0);
+
+    let zoo = Zoo::load("artifacts")?;
+    let net = zoo.network(net_name)?;
+    let (weights, inputs) = neuron_chain(&net, sample)?;
+    println!(
+        "neuron: deepest conv of {net_name}, center position, out-channel 0; \
+         chain length {} (eval sample {sample})\n",
+        weights.len()
+    );
+
+    let exact = trace_exact(&weights, &inputs);
+    let fmts = fig8_formats();
+    let traces: Vec<_> = fmts
+        .iter()
+        .map(|f| trace_accumulation(&weights, &inputs, f))
+        .collect();
+
+    // table every ~K/16 steps
+    print!("{:>6} {:>12}", "step", "exact");
+    for f in &fmts {
+        print!(" {:>14}", f.id());
+    }
+    println!();
+    let n = exact.len();
+    for step in (0..n).step_by((n / 16).max(1)).chain([n - 1]) {
+        print!("{:>6} {:>12.5}", step, exact[step]);
+        for t in &traces {
+            print!(" {:>14.5}", t.running[step]);
+        }
+        println!();
+    }
+
+    println!("\nfinal values & saturation:");
+    println!("  {:<16} final {:>12.5}", "exact(f32)", exact[n - 1]);
+    for t in &traces {
+        println!(
+            "  {:<16} final {:>12.5}   first saturation: {}",
+            t.format.id(),
+            t.final_value,
+            t.first_saturation
+                .map(|s| format!("step {s}"))
+                .unwrap_or_else(|| "never".into()),
+        );
+    }
+
+    // ASCII trajectory of exact vs the most error-prone format
+    println!("\ntrajectory (x = exact, o = {}):", fmts[0].id());
+    let rows = 14usize;
+    let cols = 72usize;
+    let all: Vec<f32> = exact.iter().chain(traces[0].running.iter()).copied().collect();
+    let lo = all.iter().cloned().fold(f32::INFINITY, f32::min);
+    let hi = all.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let span = (hi - lo).max(1e-6);
+    let mut grid = vec![vec![b' '; cols]; rows];
+    for (series, ch) in [(&exact, b'x'), (&traces[0].running, b'o')] {
+        for (i, &v) in series.iter().enumerate() {
+            let cx = i * (cols - 1) / (n - 1).max(1);
+            let cy = ((v - lo) / span * (rows - 1) as f32).round() as usize;
+            grid[rows - 1 - cy.min(rows - 1)][cx] = ch;
+        }
+    }
+    for row in grid {
+        println!("  |{}", String::from_utf8_lossy(&row));
+    }
+    println!("  +{}", "-".repeat(cols));
+    Ok(())
+}

@@ -1,0 +1,115 @@
+//! END-TO-END DRIVER — the full paper pipeline on the real (small)
+//! workload, proving all layers compose:
+//!
+//! 1. loads the AOT-trained model zoo (built by `make artifacts` — JAX
+//!    training + Pallas-kernel HLO lowering, Python never runs again);
+//! 2. cross-validates the §3.3 accuracy model (fit on the other
+//!    reference networks, never on the network under search);
+//! 3. runs the model-driven precision search (10-input probes + 2
+//!    refinement evaluations) for every network over the full design
+//!    space, on the native engine;
+//! 4. validates the chosen configuration END-TO-END through the PJRT
+//!    path (the AOT artifact), confirming the two backends agree;
+//! 5. reports the Fig 11 table and the paper's headline metric: mean
+//!    speedup at <1% accuracy degradation.
+//!
+//!     cargo run --release --example precision_search [-- --samples 128]
+//!
+//! The full run is recorded in EXPERIMENTS.md.
+
+use anyhow::Result;
+
+use precis::coordinator::cache::ResultCache;
+use precis::coordinator::Coordinator;
+use precis::eval::sweep::EvalOptions;
+use precis::eval::topk_accuracy;
+use precis::figures::cross_validated_model;
+use precis::formats;
+use precis::nn::Zoo;
+use precis::runtime::Runtime;
+use precis::search::{search, SearchSpec};
+use precis::util::cli::Args;
+use precis::util::timer::Timer;
+
+fn main() -> Result<()> {
+    let raw: Vec<String> = std::env::args().skip(1).collect();
+    let args = Args::parse(&raw, &[])?;
+    let samples = args.get_usize("samples", 128)?;
+    let seed = args.get_usize("seed", 2018)? as u64;
+    let opts = EvalOptions { samples, batch: 32 };
+
+    let t_total = Timer::start();
+    let zoo = Zoo::load("artifacts")?;
+    let cache = ResultCache::open("results/cache.json");
+    let coord = Coordinator::new(zoo, cache);
+    let rt = Runtime::cpu()?;
+    println!("PJRT platform: {}\n", rt.platform());
+
+    println!(
+        "{:<16} {:>8} {:<14} {:>9} {:>9} {:>10} {:>12}",
+        "network", "params", "chosen", "speedup", "energy", "norm_acc", "pjrt_agrees"
+    );
+
+    let mut speedups: Vec<f64> = Vec::new();
+    let mut deployable: Vec<f64> = Vec::new();
+    for net in coord.zoo.by_size_desc() {
+        let t = Timer::start();
+        let model = cross_validated_model(&coord, &net.name, &opts, seed)?;
+        let spec = SearchSpec {
+            formats: formats::design_space(1),
+            target: 0.99,
+            refine_samples: 2,
+            opts,
+            seed,
+        };
+        let out = search(&net, &spec, &model);
+        let Some(chosen) = out.chosen else {
+            println!("{:<16} -- no configuration met the target --", net.name);
+            continue;
+        };
+
+        // end-to-end validation through the AOT/PJRT path
+        let kind = if chosen.is_float() { "float" } else { "fixed" };
+        let loaded = rt.load_network(&net, &coord.zoo.dir, kind, coord.zoo.batch)?;
+        let (logits, labels) = loaded.run_eval(samples, &chosen)?;
+        let pjrt_acc = topk_accuracy(&logits, &labels, net.classes, net.topk);
+        let native_acc = precis::eval::accuracy(&net, &chosen, samples)?;
+        let agrees = (pjrt_acc - native_acc).abs() < 1e-12;
+
+        println!(
+            "{:<16} {:>8} {:<14} {:>8.2}x {:>8.2}x {:>10.4} {:>12} ({:.0}s)",
+            net.name,
+            net.n_params,
+            chosen.id(),
+            out.speedup,
+            precis::hw::energy_savings(&chosen),
+            out.measured_norm_acc,
+            if agrees { "yes" } else { "NO" },
+            t.elapsed_s(),
+        );
+        assert!(agrees, "PJRT and native disagree on {}", net.name);
+
+        speedups.push(out.speedup);
+        if matches!(net.name.as_str(), "googlenet-mini" | "vgg-mini" | "alexnet-mini") {
+            deployable.push(out.speedup);
+        }
+    }
+    coord.cache.flush()?;
+
+    let gmean = |v: &[f64]| (v.iter().map(|s| s.ln()).sum::<f64>() / v.len() as f64).exp();
+    println!("\nheadline (paper: 7.6x average at <1% degradation on deployable DNNs):");
+    println!(
+        "  mean speedup, all 5 networks      : {:.2}x (geo {:.2}x)",
+        speedups.iter().sum::<f64>() / speedups.len() as f64,
+        gmean(&speedups)
+    );
+    if !deployable.is_empty() {
+        println!(
+            "  mean speedup, deployable networks : {:.2}x (geo {:.2}x)",
+            deployable.iter().sum::<f64>() / deployable.len() as f64,
+            gmean(&deployable)
+        );
+    }
+    println!("\ntotal wall-clock: {:.0}s", t_total.elapsed_s());
+    Ok(())
+}

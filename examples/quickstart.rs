@@ -1,0 +1,53 @@
+//! Quickstart: load the zoo, evaluate a few customized-precision
+//! configurations on LeNet-5, and print the accuracy/efficiency
+//! trade-off.  Run with:
+//!
+//!     make artifacts && cargo run --release --example quickstart
+
+use anyhow::Result;
+
+use precis::eval::accuracy;
+use precis::formats::Format;
+use precis::hw;
+use precis::nn::Zoo;
+
+fn main() -> Result<()> {
+    let zoo = Zoo::load("artifacts")?;
+    let net = zoo.network("lenet5")?;
+    println!(
+        "network: {} ({} params, longest MAC chain {})\n",
+        net.name, net.n_params, net.max_chain
+    );
+
+    println!(
+        "{:<14} {:>6} {:>9} {:>9} {:>9}",
+        "format", "bits", "top-1", "speedup", "energy"
+    );
+    for fmt in [
+        Format::SINGLE,
+        Format::float(10, 6),
+        Format::float(7, 6),
+        Format::float(4, 5),
+        Format::float(2, 3),
+        Format::fixed(8, 8),
+        Format::fixed(4, 6),
+        Format::fixed(2, 2),
+    ] {
+        let acc = accuracy(&net, &fmt, 128)?;
+        println!(
+            "{:<14} {:>6} {:>9.3} {:>8.2}x {:>8.2}x",
+            fmt.id(),
+            fmt.total_bits(),
+            acc,
+            hw::speedup(&fmt),
+            hw::energy_savings(&fmt),
+        );
+    }
+
+    println!(
+        "\nThe sweet spot keeps accuracy at the baseline while running\n\
+         several times faster — the paper's core observation.  Run the\n\
+         precision_search example for the full §3.3 pipeline."
+    );
+    Ok(())
+}

@@ -1,0 +1,115 @@
+//! Serving-style driver: the PJRT-backed dynamic-batching inference
+//! server under a closed-loop client population, reporting latency
+//! percentiles, throughput and batching efficiency.
+//!
+//!     cargo run --release --example serve -- [--net lenet5] \
+//!         [--format float:m10e6] [--requests 256] [--clients 8]
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use precis::coordinator::server::{InferenceServer, PjrtRunner};
+use precis::eval::topk_accuracy;
+use precis::formats::Format;
+use precis::nn::Zoo;
+use precis::runtime::Runtime;
+use precis::util::cli::Args;
+
+fn main() -> Result<()> {
+    let raw: Vec<String> = std::env::args().skip(1).collect();
+    let args = Args::parse(&raw, &[])?;
+    let net_name = args.get_or("net", "lenet5").to_string();
+    let fmt = Format::parse(args.get_or("format", "float:m10e6"))?;
+    let n_requests = args.get_usize("requests", 256)?;
+    let n_clients = args.get_usize("clients", 8)?;
+    let wait_ms = args.get_usize("wait-ms", 10)?;
+
+    let zoo = Zoo::load("artifacts")?;
+    let net = zoo.network(&net_name)?;
+    let batch = zoo.batch;
+    let dir = zoo.dir.clone();
+    let kind = if fmt.is_float() { "float" } else { "fixed" };
+
+    println!(
+        "serving {net_name} @ {} (batch {batch}, {n_clients} closed-loop clients, {n_requests} requests)",
+        fmt.id()
+    );
+
+    // PJRT handles are not Send: the runner is built on the dispatcher
+    // thread via the factory.
+    let net2 = net.clone();
+    let kind2 = kind.to_string();
+    let server = Arc::new(InferenceServer::spawn(
+        net.clone(),
+        batch,
+        fmt,
+        Duration::from_millis(wait_ms as u64),
+        move || {
+            let rt = Runtime::cpu()?;
+            let model = rt.load_network(&net2, &dir, &kind2, batch)?;
+            Ok(PjrtRunner { model })
+        },
+    ));
+
+    let px: usize = net.input.iter().product();
+    let t0 = Instant::now();
+    let mut latencies: Vec<f64> = Vec::with_capacity(n_requests);
+    let mut predictions: Vec<(usize, Vec<f32>)> = Vec::with_capacity(n_requests);
+
+    std::thread::scope(|scope| {
+        let mut handles = Vec::new();
+        for cid in 0..n_clients {
+            let server = server.clone();
+            let net = net.clone();
+            handles.push(scope.spawn(move || {
+                let mut out = Vec::new();
+                let mut i = cid;
+                while i < n_requests {
+                    let sample = i % net.eval_len();
+                    let pixels = net.eval_x.data()[sample * px..(sample + 1) * px].to_vec();
+                    let t = Instant::now();
+                    let logits = server.infer(pixels).expect("inference failed");
+                    out.push((i, t.elapsed().as_secs_f64(), logits));
+                    i += n_clients;
+                }
+                out
+            }));
+        }
+        for h in handles {
+            for (i, lat, logits) in h.join().unwrap() {
+                latencies.push(lat);
+                predictions.push((i, logits));
+            }
+        }
+    });
+    let wall = t0.elapsed().as_secs_f64();
+
+    // accuracy over the served responses
+    predictions.sort_by_key(|(i, _)| *i);
+    let classes = net.classes;
+    let logits: Vec<f32> = predictions.iter().flat_map(|(_, l)| l.iter().copied()).collect();
+    let labels: Vec<i32> = (0..n_requests).map(|i| net.eval_y[i % net.eval_len()]).collect();
+    let acc = topk_accuracy(&logits, &labels, classes, net.topk);
+
+    latencies.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let pct = |q: f64| latencies[((latencies.len() - 1) as f64 * q) as usize] * 1e3;
+    let stats = Arc::try_unwrap(server)
+        .map(|s| s.shutdown())
+        .unwrap_or_default();
+
+    println!("\nresults:");
+    println!("  throughput     : {:.1} req/s", n_requests as f64 / wall);
+    println!("  latency p50    : {:.2} ms", pct(0.5));
+    println!("  latency p90    : {:.2} ms", pct(0.9));
+    println!("  latency p99    : {:.2} ms", pct(0.99));
+    println!("  top-{} accuracy : {:.4}", net.topk, acc);
+    println!(
+        "  batches        : {} ({:.1} req/batch, {:.1}% padded slots)",
+        stats.batches,
+        stats.requests as f64 / stats.batches.max(1) as f64,
+        100.0 * stats.padded_slots as f64 / (stats.batches.max(1) * batch as u64) as f64
+    );
+    Ok(())
+}

@@ -1,0 +1,168 @@
+"""AOT builder: train the zoo, export weights/eval sets, lower HLO text.
+
+This is the single build-time entry point (`make artifacts`).  Python
+never runs again after it: the Rust coordinator loads
+`artifacts/<net>_<kind>.hlo.txt` via PJRT and the `.prt` containers
+natively.
+
+Interchange is HLO **text**, not a serialized HloModuleProto: jax >= 0.5
+emits 64-bit instruction ids that the xla_extension 0.5.1 proto parser
+rejects; the text parser reassigns ids (see /opt/xla-example/README.md).
+
+Artifact signature, per (network, kind):
+    inputs : x f32[B, H, W, C], fmt f32[4], then the weights in
+             meta.json["networks"][net]["weights"] order
+    output : 1-tuple of logits f32[B, classes]   (return_tuple=True)
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .datagen import make_dataset
+from .io_prt import write_prt
+from .model import NETWORKS, count_params, forward, max_chain, weight_shapes
+from .train import evaluate, train, topk_accuracy
+
+BATCH = 32  # static batch baked into the HLO artifacts
+N_TRAIN = 4096
+N_EVAL = 512
+KINDS = ("float", "fixed")
+
+TRAIN_STEPS = {
+    "lenet5": 400,
+    "cifarnet": 500,
+    "alexnet-mini": 600,
+    "vgg-mini": 600,
+    "googlenet-mini": 600,
+}
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_network(spec, kind: str, batch: int) -> str:
+    """Lower the quantized forward pass to HLO text (one artifact serves
+    the entire design space of this representation kind — the format is
+    the runtime fmt[4] parameter)."""
+    wshapes = weight_shapes(spec)
+
+    def fn(x, fmtp, *ws):
+        params = {name: w for (name, _), w in zip(wshapes, ws)}
+        return (forward(spec, params, x, fmt=(fmtp, kind)),)
+
+    args = [
+        jax.ShapeDtypeStruct((batch, *spec["input"]), jnp.float32),
+        jax.ShapeDtypeStruct((4,), jnp.float32),
+    ] + [jax.ShapeDtypeStruct(shape, jnp.float32) for _, shape in wshapes]
+    lowered = jax.jit(fn).lower(*args)
+    return to_hlo_text(lowered)
+
+
+def build_network(name: str, out_dir: str, steps: int | None, seed: int) -> dict:
+    spec = NETWORKS[name]
+    print(f"== {name}: params={count_params(spec)} max_chain={max_chain(spec)}")
+
+    dskind = spec["dataset"]
+    shape = spec["input"]
+    classes = spec["classes"]
+    x_train, y_train = make_dataset(
+        dskind, N_TRAIN, shape, classes, task_seed=seed, split_seed=seed + 1
+    )
+    x_eval, y_eval = make_dataset(
+        dskind, N_EVAL, shape, classes, task_seed=seed, split_seed=seed + 2
+    )
+
+    n_steps = steps or TRAIN_STEPS[name]
+    t0 = time.time()
+    params, history = train(spec, x_train, y_train, steps=n_steps, seed=seed)
+    train_time = time.time() - t0
+
+    k = spec["topk"]
+    acc_train = evaluate(spec, params, x_train[:1024], y_train[:1024], k)
+    acc_eval = evaluate(spec, params, x_eval, y_eval, k)
+    print(f"   trained {n_steps} steps in {train_time:.0f}s; "
+          f"top-{k} train={acc_train:.3f} eval={acc_eval:.3f}")
+
+    wshapes = weight_shapes(spec)
+    write_prt(
+        os.path.join(out_dir, f"{name}.weights.prt"),
+        [(n, params[n]) for n, _ in wshapes],
+    )
+    write_prt(
+        os.path.join(out_dir, f"{name}.eval.prt"),
+        [("x", x_eval), ("y", y_eval)],
+    )
+
+    hlo_files = {}
+    for kind in KINDS:
+        t0 = time.time()
+        text = lower_network(spec, kind, BATCH)
+        fname = f"{name}_{kind}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        hlo_files[kind] = fname
+        print(f"   lowered {kind}: {len(text)/1e6:.2f} MB in {time.time()-t0:.0f}s")
+
+    return {
+        "input": shape,
+        "classes": classes,
+        "topk": k,
+        "dataset": dskind,
+        "layers": spec["layers"],
+        "weights": [n for n, _ in wshapes],
+        "weight_shapes": {n: list(s) for n, s in wshapes},
+        "params": count_params(spec),
+        "max_chain": max_chain(spec),
+        "hlo": hlo_files,
+        "weights_file": f"{name}.weights.prt",
+        "eval_file": f"{name}.eval.prt",
+        "train_steps": n_steps,
+        "train_history": history,
+        "train_acc": acc_train,
+        "eval_acc_exact": acc_eval,
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument(
+        "--out-dir",
+        default=os.path.join(os.path.dirname(__file__), "..", "..", "artifacts"),
+    )
+    ap.add_argument("--nets", nargs="*", default=list(NETWORKS))
+    ap.add_argument("--steps", type=int, default=None, help="override train steps (all nets)")
+    ap.add_argument("--seed", type=int, default=2018)
+    args = ap.parse_args()
+
+    out_dir = os.path.abspath(args.out_dir)
+    os.makedirs(out_dir, exist_ok=True)
+
+    meta = {"batch": BATCH, "n_eval": N_EVAL, "seed": args.seed, "networks": {}}
+    for i, name in enumerate(args.nets):
+        meta["networks"][name] = build_network(name, out_dir, args.steps, args.seed + 100 * i)
+
+    with open(os.path.join(out_dir, "meta.json"), "w") as f:
+        json.dump(meta, f, indent=1)
+    # build stamp for the Makefile
+    with open(os.path.join(out_dir, ".stamp"), "w") as f:
+        f.write(str(time.time()))
+    print(f"wrote {out_dir}/meta.json")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,123 @@
+"""Deterministic synthetic datasets (build-time only).
+
+Substitutes for the paper's MNIST / CIFAR-10 / ImageNet validation sets
+(not available offline; see DESIGN.md §1).  Two families:
+
+* `synclass`  — smooth random class prototypes + per-sample interference,
+  noise and random circular shifts.  Difficulty is controlled by the
+  noise level and prototype smoothness; the resulting tasks train to
+  ~90-97% accuracy, leaving enough headroom for precision-induced
+  degradation to be measurable (the paper's accuracy cliffs).
+* `digits`    — rasterized 5x7-font digits with random placement, scale
+  jitter and noise; the MNIST stand-in for lenet5.
+
+Everything is seeded and pure-numpy: the same seeds reproduce the same
+bytes in `artifacts/*.eval.prt` on every run.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+__all__ = ["synclass", "digits", "make_dataset"]
+
+
+def _smooth(img: np.ndarray, iters: int = 3) -> np.ndarray:
+    """Separable 3-tap box blur (axis 1 and 2), applied `iters` times."""
+    out = img
+    for _ in range(iters):
+        for ax in (1, 2):
+            out = (np.roll(out, 1, axis=ax) + out + np.roll(out, -1, axis=ax)) / 3.0
+    return out
+
+
+def synclass(
+    n: int,
+    shape: tuple[int, int, int],
+    classes: int,
+    proto_seed: int,
+    sample_seed: int,
+    noise: float = 0.9,
+    shift: int = 2,
+    similarity: float = 0.85,
+):
+    """Cluster-classification images: y = class of the dominant prototype.
+
+    `proto_seed` fixes the class prototypes (the *task*); `sample_seed`
+    draws the samples — train and eval splits share the proto_seed and
+    differ only in sample_seed, exactly like a held-out validation set.
+
+    `similarity` mixes a shared base field into every prototype so the
+    class-discriminative signal is only the (1 - similarity) component —
+    this is what keeps trained accuracy off the ceiling (the paper's
+    networks sit at 75-90%, leaving room for precision-induced cliffs).
+    """
+    h, w, c = shape
+    prng = np.random.default_rng(proto_seed)
+    base = _smooth(prng.standard_normal((1, h, w, c)))
+    delta = _smooth(prng.standard_normal((classes, h, w, c)))
+    protos = np.sqrt(similarity) * base + np.sqrt(1.0 - similarity) * delta
+    protos /= protos.std(axis=(1, 2, 3), keepdims=True) + 1e-9
+
+    rng = np.random.default_rng(sample_seed)
+    labels = rng.integers(0, classes, size=n)
+    # per-sample interference from a second (wrong) prototype keeps the
+    # task from being linearly separable at high SNR
+    other = (labels + 1 + rng.integers(0, classes - 1, size=n)) % classes
+    alpha = rng.uniform(0.15, 0.4, size=(n, 1, 1, 1)).astype(np.float64)
+    x = protos[labels] * (1.0 - alpha) + protos[other] * alpha
+    x = x + rng.standard_normal((n, h, w, c)) * noise
+    if shift > 0:
+        sh = rng.integers(-shift, shift + 1, size=(n, 2))
+        for i in range(n):
+            x[i] = np.roll(x[i], (sh[i, 0], sh[i, 1]), axis=(0, 1))
+    x = x.astype(np.float32)
+    return x, labels.astype(np.int32)
+
+
+# 5x7 bitmap font for digits 0-9 (rows top->bottom, 1 = ink)
+_FONT = {
+    0: ["01110", "10001", "10011", "10101", "11001", "10001", "01110"],
+    1: ["00100", "01100", "00100", "00100", "00100", "00100", "01110"],
+    2: ["01110", "10001", "00001", "00110", "01000", "10000", "11111"],
+    3: ["01110", "10001", "00001", "00110", "00001", "10001", "01110"],
+    4: ["00010", "00110", "01010", "10010", "11111", "00010", "00010"],
+    5: ["11111", "10000", "11110", "00001", "00001", "10001", "01110"],
+    6: ["01110", "10000", "11110", "10001", "10001", "10001", "01110"],
+    7: ["11111", "00001", "00010", "00100", "01000", "01000", "01000"],
+    8: ["01110", "10001", "10001", "01110", "10001", "10001", "01110"],
+    9: ["01110", "10001", "10001", "01111", "00001", "00001", "01110"],
+}
+
+
+def _glyph(d: int) -> np.ndarray:
+    return np.array([[int(ch) for ch in row] for row in _FONT[d]], dtype=np.float32)
+
+
+def digits(n: int, size: int, seed: int, noise: float = 0.1):
+    """MNIST stand-in: noisy rasterized digits on a `size` x `size` canvas."""
+    rng = np.random.default_rng(seed)
+    labels = rng.integers(0, 10, size=n).astype(np.int32)
+    x = np.zeros((n, size, size, 1), dtype=np.float32)
+    for i in range(n):
+        g = _glyph(int(labels[i]))
+        # nearest-neighbour upscale by 1x or 2x
+        s = int(rng.integers(1, 3)) if size >= 15 else 1
+        g = np.kron(g, np.ones((s, s), dtype=np.float32))
+        gh, gw = g.shape
+        oy = int(rng.integers(0, size - gh + 1))
+        ox = int(rng.integers(0, size - gw + 1))
+        x[i, oy : oy + gh, ox : ox + gw, 0] = g * float(rng.uniform(0.7, 1.3))
+    x += rng.standard_normal(x.shape).astype(np.float32) * noise
+    return x.astype(np.float32), labels
+
+
+def make_dataset(kind: str, n: int, shape, classes: int, *, task_seed: int, split_seed: int):
+    """task_seed pins the task (prototypes / font); split_seed picks the
+    sample draw — train/eval share task_seed, differ in split_seed."""
+    if kind == "digits":
+        assert shape[2] == 1
+        return digits(n, shape[0], split_seed)
+    if kind == "synclass":
+        return synclass(n, tuple(shape), classes, task_seed, split_seed)
+    raise ValueError(f"unknown dataset kind {kind!r}")

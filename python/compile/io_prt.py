@@ -1,0 +1,56 @@
+"""Writer for the `.prt` tensor container (read by rust/src/tensor/io.rs).
+
+Layout (all little-endian):
+    u32 magic = 0x50525431 ("PRT1")
+    u32 tensor_count
+    per tensor:
+        u16 name_len, name bytes (utf-8)
+        u8  dtype   (0 = f32, 1 = i32)
+        u8  ndim
+        u32 dims[ndim]
+        raw data, row-major
+"""
+
+from __future__ import annotations
+
+import struct
+
+import numpy as np
+
+MAGIC = 0x50525431
+
+_DTYPES = {np.dtype(np.float32): 0, np.dtype(np.int32): 1}
+
+
+def write_prt(path: str, tensors: list[tuple[str, np.ndarray]]) -> None:
+    with open(path, "wb") as f:
+        f.write(struct.pack("<II", MAGIC, len(tensors)))
+        for name, arr in tensors:
+            arr = np.ascontiguousarray(arr)
+            if arr.dtype not in _DTYPES:
+                raise TypeError(f"{name}: unsupported dtype {arr.dtype}")
+            nb = name.encode("utf-8")
+            f.write(struct.pack("<H", len(nb)))
+            f.write(nb)
+            f.write(struct.pack("<BB", _DTYPES[arr.dtype], arr.ndim))
+            f.write(struct.pack(f"<{arr.ndim}I", *arr.shape))
+            f.write(arr.tobytes(order="C"))
+
+
+def read_prt(path: str) -> list[tuple[str, np.ndarray]]:
+    """Reader (tests + round-trip verification only; Rust owns the runtime)."""
+    out = []
+    with open(path, "rb") as f:
+        magic, count = struct.unpack("<II", f.read(8))
+        if magic != MAGIC:
+            raise ValueError(f"{path}: bad magic {magic:#x}")
+        for _ in range(count):
+            (nlen,) = struct.unpack("<H", f.read(2))
+            name = f.read(nlen).decode("utf-8")
+            dt, ndim = struct.unpack("<BB", f.read(2))
+            dims = struct.unpack(f"<{ndim}I", f.read(4 * ndim))
+            dtype = np.float32 if dt == 0 else np.int32
+            n = int(np.prod(dims)) if ndim else 1
+            data = np.frombuffer(f.read(4 * n), dtype=dtype).reshape(dims)
+            out.append((name, data.copy()))
+    return out

@@ -1,0 +1,223 @@
+"""Customized-precision quantizers (the paper's §2.2 number formats).
+
+These are the *normative* semantics of the whole repository — the Pallas
+kernel (qmatmul.py), the pure-jnp oracle (ref.py) and the Rust softfloat
+(rust/src/numerics/) all implement exactly this behaviour and are
+cross-checked bit-exactly against each other:
+
+* custom float  F(m, e, bias):  sign + m-bit mantissa (hidden leading 1)
+  + e-bit exponent (unsigned, offset by `bias`).  Round-to-nearest-even
+  at m mantissa bits; exponent overflow SATURATES to +/- max-finite;
+  exponent underflow FLUSHES TO ZERO (no subnormals).  F(23, 8, 127) is
+  IEEE-754 single precision minus the inf/NaN encodings and is used as
+  the exact baseline.
+* custom fixed  X(l, r):  sign + l integer bits + r fractional bits
+  (sign-magnitude, symmetric saturation).  Round-to-nearest-even at step
+  2^-r, saturate to +/- (2^l - 2^-r).
+
+Like the paper (which modified Caffe but "continue[d] to store values as
+C floats"), we *simulate* the formats on f32 carriers: a quantizer maps
+f32 -> f32 values representable in the custom format.  The simulation is
+exact while the format's values are exactly representable in f32
+(m <= 23, l + r <= 24 for round-trip-exact fixed point); wider formats
+degrade gracefully exactly as the paper's float-carrier simulation did.
+
+Runtime parameterization: one HLO artifact per (network, representation
+kind) serves the *entire* design space — the format is a length-4 f32
+vector parameter `fmt`:
+
+  kind == "float": fmt = [shift, min_normal, max_val, 0]
+      shift       = 23 - m          (bits of f32 mantissa to drop)
+      min_normal  = 2^emin          (emin = -bias)
+      max_val     = 2^emax * (2 - 2^-m)   (emax = 2^e - 1 - bias)
+  kind == "fixed": fmt = [scale, inv_scale, max_val, 0]
+      scale = 2^r, inv_scale = 2^-r, max_val = 2^l - 2^-r
+
+The representation *kind* is static (staged into the HLO); everything
+else is a runtime scalar, so the Rust coordinator sweeps hundreds of
+configurations without recompiling anything.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+import jax.numpy as jnp
+from jax import lax
+
+__all__ = [
+    "FloatFormat",
+    "FixedFormat",
+    "quantize",
+    "quantize_float",
+    "quantize_fixed",
+    "float_params",
+    "fixed_params",
+    "format_params",
+]
+
+# numpy scalars (not jnp arrays): they stage as literals, so quantize_*
+# remains usable inside Pallas kernels (which forbid captured jax consts).
+_SIGN_MASK = np.uint32(0x8000_0000)
+_MAG_MASK = np.uint32(0x7FFF_FFFF)
+_ONE = np.uint32(1)
+_ONE_F32_BITS = np.uint32(0x3F80_0000)
+
+
+@dataclasses.dataclass(frozen=True)
+class FloatFormat:
+    """Custom floating-point format descriptor F(m, e, bias)."""
+
+    mantissa: int
+    exponent: int
+    bias: int | None = None  # default: 2^(e-1) - 1
+
+    def __post_init__(self):
+        if not (0 <= self.mantissa <= 23):
+            raise ValueError(f"mantissa bits must be in [0, 23], got {self.mantissa}")
+        if not (1 <= self.exponent <= 8):
+            raise ValueError(f"exponent bits must be in [1, 8], got {self.exponent}")
+
+    @property
+    def effective_bias(self) -> int:
+        return (1 << (self.exponent - 1)) - 1 if self.bias is None else self.bias
+
+    @property
+    def emin(self) -> int:
+        return -self.effective_bias
+
+    @property
+    def emax(self) -> int:
+        return (1 << self.exponent) - 1 - self.effective_bias
+
+    @property
+    def total_bits(self) -> int:
+        return 1 + self.mantissa + self.exponent
+
+    @property
+    def min_normal(self) -> float:
+        # f32-carrier clamp: below 2^-126 the carrier is subnormal and the
+        # mantissa bit-trick rounds at the wrong granularity, so the
+        # simulated format's normal range is clipped to the carrier's.
+        # (Semantically irrelevant for DNN activations; documented in
+        # DESIGN.md §2 and mirrored by the Rust softfloat.)
+        return 2.0 ** max(self.emin, -126)
+
+    @property
+    def max_value(self) -> float:
+        # f32-carrier clamp on the other end: emax = 128 (e = 8, all
+        # exponent codes usable) exceeds the carrier's largest finite
+        # exponent, so saturate at f32::MAX instead.
+        return min((2.0 - 2.0**-self.mantissa) * 2.0**self.emax, 3.4028234663852886e38)
+
+    def name(self) -> str:
+        return f"float_m{self.mantissa}e{self.exponent}"
+
+
+@dataclasses.dataclass(frozen=True)
+class FixedFormat:
+    """Custom fixed-point format descriptor X(l, r): sign + l int + r frac bits."""
+
+    int_bits: int
+    frac_bits: int
+
+    def __post_init__(self):
+        if self.int_bits < 0 or self.frac_bits < 0:
+            raise ValueError("int/frac bits must be non-negative")
+
+    @property
+    def total_bits(self) -> int:
+        return 1 + self.int_bits + self.frac_bits
+
+    @property
+    def scale(self) -> float:
+        return 2.0**self.frac_bits
+
+    @property
+    def max_value(self) -> float:
+        return 2.0**self.int_bits - 2.0**-self.frac_bits
+
+    def name(self) -> str:
+        return f"fixed_l{self.int_bits}r{self.frac_bits}"
+
+
+def float_params(fmt: FloatFormat) -> jnp.ndarray:
+    """Runtime fmt vector for a float format (see module docstring)."""
+    return jnp.array(
+        [23 - fmt.mantissa, fmt.min_normal, fmt.max_value, 0.0], dtype=jnp.float32
+    )
+
+
+def fixed_params(fmt: FixedFormat) -> jnp.ndarray:
+    """Runtime fmt vector for a fixed format (see module docstring)."""
+    return jnp.array(
+        [fmt.scale, 1.0 / fmt.scale, fmt.max_value, 0.0], dtype=jnp.float32
+    )
+
+
+def format_params(fmt) -> jnp.ndarray:
+    if isinstance(fmt, FloatFormat):
+        return float_params(fmt)
+    if isinstance(fmt, FixedFormat):
+        return fixed_params(fmt)
+    raise TypeError(f"unsupported format: {fmt!r}")
+
+
+def quantize_float(x: jnp.ndarray, fmt: jnp.ndarray) -> jnp.ndarray:
+    """Quantize f32 values to the custom float format described by `fmt`.
+
+    Exact bit manipulation on the f32 carrier: round-to-nearest-even of
+    the mantissa by integer arithmetic on the raw bits (the carry from a
+    mantissa all-ones round-up propagates into the exponent field, which
+    is precisely the semantics of normalized rounding), then saturate /
+    flush against the format's max / min-normal.
+    """
+    shift = fmt[0].astype(jnp.uint32)
+    min_normal = fmt[1]
+    max_val = fmt[2]
+
+    bits = lax.bitcast_convert_type(x, jnp.uint32)
+    sign = bits & _SIGN_MASK
+    mag = bits & _MAG_MASK
+
+    # round-half-to-even at bit `shift` of the mantissa:
+    #   half = 2^(shift-1) - 1 + lsb   (lsb = bit `shift`, the tie-breaker)
+    # `shift == 0` (m == 23) is the identity; both where-branches are
+    # evaluated, and XLA defines out-of-range shifts to produce 0, so the
+    # dead branch is harmless.
+    lsb = (mag >> shift) & _ONE
+    half = (_ONE << (shift - _ONE)) - _ONE + lsb
+    rounded = ((mag + half) >> shift) << shift
+    rmag = jnp.where(shift == 0, mag, rounded)
+
+    y = lax.bitcast_convert_type(rmag, jnp.float32)  # |rounded x|
+    y = jnp.where(y > max_val, max_val, y)  # exponent overflow: saturate
+    y = jnp.where(y < min_normal, 0.0, y)  # underflow: flush to zero
+    signf = lax.bitcast_convert_type(sign | _ONE_F32_BITS, jnp.float32)  # +/-1.0
+    return y * signf
+
+
+def quantize_fixed(x: jnp.ndarray, fmt: jnp.ndarray) -> jnp.ndarray:
+    """Quantize f32 values to the custom fixed format described by `fmt`.
+
+    Pre-clamps to the representable range (so the scaled value stays in
+    f32's exactly-rounding integer range whenever l + r <= 24), rounds
+    half-to-even at step 2^-r, and saturates symmetrically.
+    """
+    scale = fmt[0]
+    inv_scale = fmt[1]
+    max_val = fmt[2]
+    y = jnp.clip(x, -max_val, max_val)
+    y = jnp.round(y * scale) * inv_scale  # jnp.round is round-half-even
+    return jnp.clip(y, -max_val, max_val)
+
+
+def quantize(x: jnp.ndarray, fmt: jnp.ndarray, kind: str) -> jnp.ndarray:
+    """Dispatch on the *static* representation kind ("float" | "fixed")."""
+    if kind == "float":
+        return quantize_float(x, fmt)
+    if kind == "fixed":
+        return quantize_fixed(x, fmt)
+    raise ValueError(f"unknown representation kind: {kind!r}")

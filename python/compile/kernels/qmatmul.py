@@ -1,0 +1,102 @@
+"""L1 Pallas kernel: customized-precision matmul with per-MAC-step rounding.
+
+This is the paper's compute hot-spot: every multiply and every add of the
+MAC chain is immediately re-quantized to the customized format ("we ...
+truncate the mantissa and exponent to the desired format after each
+arithmetic operation", §3.1).  The K dimension of the GEMM is therefore a
+*serial* dependence chain; M and N remain data-parallel.
+
+TPU mapping of the paper's insight (see DESIGN.md §Hardware-Adaptation):
+the grid tiles M×N for VMEM residency via BlockSpec (each program owns a
+(block_m, block_n) output tile plus the (block_m, K) / (K, block_n) operand
+panels); the accumulator tile lives in registers/VMEM across the whole
+fori_loop — the quantize epilogue is fused into the loop body, so no value
+ever round-trips to HBM between MAC steps.  The rank-1-update formulation
+keeps every step a dense (block_m, block_n) VPU op.
+
+`interpret=True` always: the CPU PJRT client cannot execute Mosaic
+custom-calls; interpret mode lowers the kernel to plain HLO, which is what
+`aot.py` ships to the Rust runtime.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+from .qformat import quantize
+
+__all__ = ["qmatmul", "qmatmul_coarse", "pick_block"]
+
+
+def pick_block(dim: int, preferred: int) -> int:
+    """Largest divisor of `dim` that is <= preferred (VMEM-friendly tiles
+    without padding logic; model dims are chosen MXU-aligned upstream)."""
+    b = min(dim, preferred)
+    while dim % b != 0:
+        b -= 1
+    return b
+
+
+def _qmm_kernel(fmt_ref, a_ref, b_ref, o_ref, *, kind: str, k_dim: int):
+    """One (block_m, block_n) output tile: serial quantized MAC chain over K."""
+    fmt = fmt_ref[...]
+    a = a_ref[...]  # (bm, K)
+    b = b_ref[...]  # (K, bn)
+    bm, _ = a.shape
+    _, bn = b.shape
+
+    def body(k, acc):
+        col = lax.dynamic_slice(a, (0, k), (bm, 1))  # (bm, 1)
+        row = lax.dynamic_slice(b, (k, 0), (1, bn))  # (1, bn)
+        prod = quantize(col * row, fmt, kind)  # q after the multiply
+        return quantize(acc + prod, fmt, kind)  # q after the add
+
+    acc0 = jnp.zeros((bm, bn), dtype=jnp.float32)
+    o_ref[...] = lax.fori_loop(0, k_dim, body, acc0)
+
+
+@functools.partial(jax.jit, static_argnames=("kind", "block_m", "block_n"))
+def qmatmul(a, b, fmt, *, kind: str, block_m: int = 128, block_n: int = 128):
+    """Quantized matmul  c = qmac(a @ b)  with per-op rounding.
+
+    a: (M, K) f32, b: (K, N) f32, fmt: (4,) f32 runtime format descriptor
+    (see qformat module docstring).  `kind` is static ("float"/"fixed").
+    Inputs are assumed already quantized by the caller (layer code
+    quantizes weights and activations before the GEMM, as the simulated
+    hardware stores them in the custom format).
+    """
+    m, k = a.shape
+    k2, n = b.shape
+    if k != k2:
+        raise ValueError(f"inner dims mismatch: {a.shape} @ {b.shape}")
+    bm = pick_block(m, block_m)
+    bn = pick_block(n, block_n)
+    grid = (m // bm, n // bn)
+    kernel = functools.partial(_qmm_kernel, kind=kind, k_dim=k)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((4,), lambda i, j: (0,)),  # fmt: broadcast
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),  # A panel
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),  # B panel
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(fmt, a, b)
+
+
+@functools.partial(jax.jit, static_argnames=("kind",))
+def qmatmul_coarse(a, b, fmt, *, kind: str):
+    """Ablation variant: exact f32 accumulation, ONE quantization of the
+    final dot product (what an accelerator with a wide internal
+    accumulator would do).  Used by the ablation benches to measure how
+    much of the paper's accuracy cliff comes from per-step rounding."""
+    c = jnp.matmul(a, b, preferred_element_type=jnp.float32)
+    return quantize(c, fmt, kind)

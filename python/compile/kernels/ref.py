@@ -1,0 +1,107 @@
+"""Independent pure-numpy / pure-jnp oracles for the quantizers and the
+per-op-truncated matmul.
+
+`ref_quantize_float` is deliberately implemented via `np.frexp` floating
+point arithmetic (NOT bit manipulation) so that it constitutes an
+*independent* derivation of the same semantics as qformat.quantize_float;
+pytest cross-checks them bit-exactly.  `ref_qmatmul` is the slow, obviously
+correct accumulation-order-faithful matmul the Pallas kernel must match.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from .qformat import FixedFormat, FloatFormat
+
+__all__ = [
+    "ref_quantize_float",
+    "ref_quantize_fixed",
+    "ref_quantize",
+    "ref_qmatmul",
+    "ref_matmul_exact",
+]
+
+
+def ref_quantize_float(x, fmt: FloatFormat):
+    """Oracle float quantizer: frexp-based snap-to-grid with RNE.
+
+    For each element: decompose |x| = f * 2^ex (f in [0.5, 1)), so the
+    normalized exponent is ex - 1; the representable grid around x has
+    step 2^(exp - m).  x/step = 1.mantissa * 2^m <= 2^24 is exactly
+    representable in f64, so np.round (half-to-even) on it implements RNE
+    exactly.  Overflow saturates, underflow flushes — same as qformat.
+    """
+    x = np.asarray(x, dtype=np.float32)
+    out = np.zeros_like(x)
+    flat = x.ravel()
+    res = out.ravel()
+    for i, v in enumerate(flat):
+        if v == 0.0 or np.isnan(v):
+            res[i] = v
+            continue
+        a = abs(float(v))
+        _, ex = np.frexp(a)
+        exp = int(ex) - 1  # a = 1.mant * 2^exp
+        step = 2.0 ** (exp - fmt.mantissa)
+        q = np.round(a / step) * step  # RNE; exact in f64
+        if q > fmt.max_value:
+            q = fmt.max_value
+        if q < fmt.min_normal:
+            q = 0.0
+        res[i] = np.float32(np.copysign(q, v))
+    return out
+
+
+def ref_quantize_fixed(x, fmt: FixedFormat):
+    """Oracle fixed quantizer: f64 snap-to-grid with RNE + symmetric clamp."""
+    x = np.asarray(x, dtype=np.float32).astype(np.float64)
+    y = np.clip(x, -fmt.max_value, fmt.max_value)
+    y = np.round(y * fmt.scale) / fmt.scale
+    y = np.clip(y, -fmt.max_value, fmt.max_value)
+    return y.astype(np.float32)
+
+
+def ref_quantize(x, fmt):
+    if isinstance(fmt, FloatFormat):
+        return ref_quantize_float(x, fmt)
+    if isinstance(fmt, FixedFormat):
+        return ref_quantize_fixed(x, fmt)
+    raise TypeError(f"unsupported format: {fmt!r}")
+
+
+def ref_qmatmul(a, b, fmt):
+    """Accumulation-order-faithful quantized matmul oracle.
+
+    c[i, j] = q(... q(q(c_0 + q(a[i,0]*b[0,j])) + q(a[i,1]*b[1,j])) ...)
+    — quantize after every multiply and after every add, accumulating in
+    increasing k order, exactly the MAC-chain semantics of §2 and of the
+    Pallas kernel.  Inputs are NOT pre-quantized here; callers quantize
+    weights/activations first (as the layers do).
+    """
+    a = np.asarray(a, dtype=np.float32)
+    b = np.asarray(b, dtype=np.float32)
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2
+    acc = np.zeros((m, n), dtype=np.float32)
+    for kk in range(k):
+        prod = ref_quantize(np.outer(a[:, kk], b[kk, :]).astype(np.float32), fmt)
+        acc = ref_quantize((acc + prod).astype(np.float32), fmt)
+    return acc
+
+
+def ref_matmul_exact(a, b):
+    """Serial-K f32 matmul (the exact-baseline semantics: F(23,8) per-op
+    quantization is the identity, so the chain is plain f32 accumulation
+    in increasing k order)."""
+    a = np.asarray(a, dtype=np.float32)
+    b = np.asarray(b, dtype=np.float32)
+    m, k = a.shape
+    _, n = b.shape
+    acc = np.zeros((m, n), dtype=np.float32)
+    for kk in range(k):
+        acc = (acc + np.outer(a[:, kk], b[kk, :]).astype(np.float32)).astype(
+            np.float32
+        )
+    return acc

@@ -1,0 +1,324 @@
+"""L2: the DNN model zoo — spec-driven forward passes calling the L1 kernel.
+
+Five networks mirror the paper's suite (GoogLeNet, VGG, AlexNet, CIFARNET,
+LeNet-5) as architecture-faithful scaled-down versions sized for the
+single-core CPU testbed (DESIGN.md §1).  What is preserved is what drives
+the paper's findings: the *ordering of accumulation-chain lengths* (max
+dot-product K per network: googlenet-mini 1000 > alexnet-mini 600 >
+vgg-mini 432 > cifarnet 400 > lenet5 256), inception structure for
+googlenet-mini, uniformly small 3x3 kernels for vgg-mini, and large
+first-layer kernels + deep dense stack for alexnet-mini.
+
+A network is a JSON-able layer list (`spec["layers"]`).  The same spec is
+exported to artifacts/meta.json and interpreted by the Rust-native engine
+(rust/src/nn/), which must match this forward pass BIT-exactly in
+quantized mode.  Normative layout decisions (mirrored in Rust):
+
+* activations are NHWC, f32; flatten is row-major (H, W, C);
+* im2col patch index = ((ki*kw + kj)*C + c)  (kernel-position major);
+* conv/dense weights: w[kh, kw, cin, cout] reshaped to (kh*kw*cin, cout),
+  dense w[in, out]; bias per output channel;
+* quantized forward: q(input); per conv/dense: q(w), q(b), per-op-rounded
+  MAC chain (L1 kernel), then q(acc + b); relu/maxpool are exact
+  (selection never creates unrepresentable values); zero padding; global
+  avgpool accumulates serially with per-add rounding then multiplies by
+  q(1/HW) with a final rounding.
+
+`forward(..., fmt=None)` is the exact f32 path used for training;
+`fmt=(params, kind)` is the customized-precision path that gets AOT-lowered.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .kernels.qformat import quantize
+from .kernels.qmatmul import qmatmul
+
+__all__ = ["NETWORKS", "init_params", "forward", "weight_names", "count_params", "max_chain"]
+
+
+def conv(name, kh, kw, in_ch, out_ch, stride=1, pad=None):
+    if pad is None:
+        pad = (kh - 1) // 2  # 'same' for odd kernels, stride 1
+    return {
+        "op": "conv", "name": name, "kh": kh, "kw": kw,
+        "in_ch": in_ch, "out_ch": out_ch, "stride": stride, "pad": pad,
+    }
+
+
+def dense(name, in_dim, out_dim):
+    return {"op": "dense", "name": name, "in_dim": in_dim, "out_dim": out_dim}
+
+
+def inception(name, in_ch, c1, c3, c5, cp):
+    """Mini inception module: 1x1, 3x3, 5x5 and maxpool(3x3,s1,p1)+1x1
+    branches, channel-concatenated (in that order)."""
+    return {
+        "op": "inception", "name": name, "in_ch": in_ch,
+        "c1": c1, "c3": c3, "c5": c5, "cp": cp,
+    }
+
+
+RELU = {"op": "relu"}
+FLAT = {"op": "flatten"}
+
+
+def maxpool(k=2, stride=2, pad=0):
+    return {"op": "maxpool", "k": k, "stride": stride, "pad": pad}
+
+
+GAVG = {"op": "gavgpool"}
+
+
+NETWORKS = {
+    # ---- the two "small prior-work" networks -------------------------
+    "lenet5": {
+        "input": [16, 16, 1], "classes": 10, "topk": 1, "dataset": "digits",
+        "layers": [
+            conv("conv1", 5, 5, 1, 6), RELU, maxpool(),
+            conv("conv2", 5, 5, 6, 16), RELU, maxpool(),
+            FLAT,
+            dense("fc1", 256, 120), RELU,
+            dense("fc2", 120, 84), RELU,
+            dense("fc3", 84, 10),
+        ],
+    },
+    "cifarnet": {
+        "input": [16, 16, 3], "classes": 10, "topk": 1, "dataset": "synclass",
+        "layers": [
+            conv("conv1", 5, 5, 3, 16), RELU, maxpool(),
+            conv("conv2", 5, 5, 16, 24), RELU, maxpool(),
+            conv("conv3", 3, 3, 24, 32), RELU, maxpool(),
+            FLAT,
+            dense("fc1", 128, 64), RELU,
+            dense("fc2", 64, 10),
+        ],
+    },
+    # ---- the three "production-grade" networks -----------------------
+    "alexnet-mini": {
+        "input": [20, 20, 3], "classes": 20, "topk": 5, "dataset": "synclass",
+        "layers": [
+            conv("conv1", 7, 7, 3, 24), RELU, maxpool(),
+            conv("conv2", 5, 5, 24, 32), RELU, maxpool(),
+            conv("conv3", 3, 3, 32, 48), RELU,
+            conv("conv4", 3, 3, 48, 32), RELU, maxpool(),
+            FLAT,
+            dense("fc1", 128, 128), RELU,
+            dense("fc2", 128, 64), RELU,
+            dense("fc3", 64, 20),
+        ],
+    },
+    "vgg-mini": {
+        "input": [20, 20, 3], "classes": 20, "topk": 5, "dataset": "synclass",
+        "layers": [
+            conv("conv1a", 3, 3, 3, 16), RELU,
+            conv("conv1b", 3, 3, 16, 16), RELU, maxpool(),
+            conv("conv2a", 3, 3, 16, 32), RELU,
+            conv("conv2b", 3, 3, 32, 32), RELU, maxpool(),
+            conv("conv3a", 3, 3, 32, 48), RELU,
+            conv("conv3b", 3, 3, 48, 48), RELU, maxpool(),
+            FLAT,
+            dense("fc1", 192, 128), RELU,
+            dense("fc2", 128, 20),
+        ],
+    },
+    "googlenet-mini": {
+        "input": [20, 20, 3], "classes": 20, "topk": 5, "dataset": "synclass",
+        "layers": [
+            conv("conv1", 5, 5, 3, 16), RELU, maxpool(),
+            inception("inc1", 16, 8, 16, 8, 8), RELU, maxpool(),
+            inception("inc2", 40, 12, 24, 12, 12), RELU,
+            GAVG,
+            dense("fc", 60, 20),
+        ],
+    },
+}
+
+
+# ----------------------------------------------------------------------
+# parameters
+
+
+def _conv_weights(layer):
+    yield layer["name"] + ".w", (layer["kh"], layer["kw"], layer["in_ch"], layer["out_ch"])
+    yield layer["name"] + ".b", (layer["out_ch"],)
+
+
+def _inception_convs(layer):
+    """The four branch convolutions of an inception module, as conv specs."""
+    n, ic = layer["name"], layer["in_ch"]
+    return [
+        conv(n + ".1x1", 1, 1, ic, layer["c1"]),
+        conv(n + ".3x3", 3, 3, ic, layer["c3"]),
+        conv(n + ".5x5", 5, 5, ic, layer["c5"]),
+        conv(n + ".proj", 1, 1, ic, layer["cp"]),
+    ]
+
+
+def weight_shapes(spec):
+    """Ordered (name, shape) pairs — the order of HLO parameters."""
+    out = []
+    for layer in spec["layers"]:
+        if layer["op"] == "conv":
+            out.extend(_conv_weights(layer))
+        elif layer["op"] == "dense":
+            out.append((layer["name"] + ".w", (layer["in_dim"], layer["out_dim"])))
+            out.append((layer["name"] + ".b", (layer["out_dim"],)))
+        elif layer["op"] == "inception":
+            for c in _inception_convs(layer):
+                out.extend(_conv_weights(c))
+    return out
+
+
+def weight_names(spec):
+    return [n for n, _ in weight_shapes(spec)]
+
+
+def count_params(spec):
+    return sum(int(np.prod(s)) for _, s in weight_shapes(spec))
+
+
+def max_chain(spec):
+    """Longest MAC accumulation chain (the driver of precision demand)."""
+    best = 0
+    for layer in spec["layers"]:
+        if layer["op"] == "conv":
+            best = max(best, layer["kh"] * layer["kw"] * layer["in_ch"])
+        elif layer["op"] == "dense":
+            best = max(best, layer["in_dim"])
+        elif layer["op"] == "inception":
+            for c in _inception_convs(layer):
+                best = max(best, c["kh"] * c["kw"] * c["in_ch"])
+    return best
+
+
+def init_params(spec, seed: int) -> dict[str, np.ndarray]:
+    """He-normal init, deterministic per (network, seed)."""
+    rng = np.random.default_rng(seed)
+    params = {}
+    for name, shape in weight_shapes(spec):
+        if name.endswith(".b"):
+            params[name] = np.zeros(shape, dtype=np.float32)
+        else:
+            fan_in = int(np.prod(shape[:-1]))
+            std = float(np.sqrt(2.0 / fan_in))
+            params[name] = (rng.standard_normal(shape) * std).astype(np.float32)
+    return params
+
+
+# ----------------------------------------------------------------------
+# forward pass
+
+
+def _im2col(x, kh, kw, stride, pad):
+    """NHWC -> (B*oh*ow, kh*kw*C) patches; index ((ki*kw+kj)*C + c)."""
+    b, h, w, c = x.shape
+    if pad > 0:
+        x = jnp.pad(x, ((0, 0), (pad, pad), (pad, pad), (0, 0)))
+    oh = (h + 2 * pad - kh) // stride + 1
+    ow = (w + 2 * pad - kw) // stride + 1
+    cols = []
+    for i in range(kh):
+        for j in range(kw):
+            cols.append(
+                x[:, i : i + (oh - 1) * stride + 1 : stride,
+                  j : j + (ow - 1) * stride + 1 : stride, :]
+            )
+    p = jnp.stack(cols, axis=3)  # (B, oh, ow, kh*kw, C)
+    return p.reshape(b * oh * ow, kh * kw * c), (b, oh, ow)
+
+
+def _matmul(a, w, fmt):
+    """Dispatch: exact f32 GEMM for training, L1 quantized kernel otherwise."""
+    if fmt is None:
+        return jnp.matmul(a, w, preferred_element_type=jnp.float32)
+    params, kind = fmt
+    return qmatmul(a, w, params, kind=kind)
+
+
+def _q(x, fmt):
+    if fmt is None:
+        return x
+    params, kind = fmt
+    return quantize(x, params, kind)
+
+
+def _conv_apply(x, layer, params, fmt):
+    w = params[layer["name"] + ".w"]
+    bia = params[layer["name"] + ".b"]
+    patches, (b, oh, ow) = _im2col(x, layer["kh"], layer["kw"], layer["stride"], layer["pad"])
+    w2 = jnp.reshape(w, (layer["kh"] * layer["kw"] * layer["in_ch"], layer["out_ch"]))
+    y = _matmul(patches, _q(w2, fmt), fmt)
+    y = _q(y + _q(bia, fmt), fmt)
+    return y.reshape(b, oh, ow, layer["out_ch"])
+
+
+def _maxpool(x, k, stride, pad):
+    b, h, w, c = x.shape
+    if pad > 0:
+        x = jnp.pad(x, ((0, 0), (pad, pad), (pad, pad), (0, 0)))  # zero pad
+    oh = (h + 2 * pad - k) // stride + 1
+    ow = (w + 2 * pad - k) // stride + 1
+    best = None
+    for i in range(k):
+        for j in range(k):
+            v = x[:, i : i + (oh - 1) * stride + 1 : stride,
+                  j : j + (ow - 1) * stride + 1 : stride, :]
+            best = v if best is None else jnp.maximum(best, v)
+    return best
+
+
+def _gavgpool(x, fmt):
+    b, h, w, c = x.shape
+    flat = x.reshape(b, h * w, c)
+    if fmt is None:
+        return jnp.mean(flat, axis=1)
+    # serial adder chain with per-add rounding, then one rounded multiply
+    def body(i, acc):
+        return _q(acc + lax.dynamic_slice(flat, (0, i, 0), (b, 1, c))[:, 0, :], fmt)
+
+    acc = lax.fori_loop(0, h * w, body, jnp.zeros((b, c), jnp.float32))
+    inv = _q(jnp.float32(1.0 / (h * w)), fmt)
+    return _q(acc * inv, fmt)
+
+
+def forward(spec, params, x, fmt=None):
+    """Run the network; returns logits (B, classes).
+
+    fmt: None for the exact f32 path, or (format_params, kind) for the
+    customized-precision path (this is what aot.py lowers).
+    """
+    x = _q(x, fmt)
+    for layer in spec["layers"]:
+        op = layer["op"]
+        if op == "conv":
+            x = _conv_apply(x, layer, params, fmt)
+        elif op == "dense":
+            w = _q(params[layer["name"] + ".w"], fmt)
+            bia = _q(params[layer["name"] + ".b"], fmt)
+            x = _q(_matmul(x, w, fmt) + bia, fmt)
+        elif op == "relu":
+            x = jnp.maximum(x, 0.0)
+        elif op == "maxpool":
+            x = _maxpool(x, layer["k"], layer["stride"], layer["pad"])
+        elif op == "flatten":
+            x = x.reshape(x.shape[0], -1)
+        elif op == "gavgpool":
+            x = _gavgpool(x, fmt)
+        elif op == "inception":
+            branches = []
+            for c in _inception_convs(layer):
+                if c["name"].endswith(".proj"):
+                    pooled = _maxpool(x, 3, 1, 1)
+                    branches.append(_conv_apply(pooled, c, params, fmt))
+                else:
+                    branches.append(_conv_apply(x, c, params, fmt))
+            x = jnp.concatenate(branches, axis=-1)
+        else:
+            raise ValueError(f"unknown layer op {op!r}")
+    return x

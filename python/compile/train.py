@@ -1,0 +1,96 @@
+"""Build-time training of the model zoo (exact f32 forward).
+
+The paper evaluates *pre-trained* networks (Caffe model zoo); the training
+loop here produces our equivalent pre-trained weights on the synthetic
+datasets.  Plain SGD + momentum with cosine decay and cross-entropy loss;
+deliberately dependency-free (no optax in the image).
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from .model import forward, init_params
+
+__all__ = ["train", "evaluate", "topk_accuracy"]
+
+
+def _cross_entropy(logits, labels):
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+    return jnp.mean(logz - gold)
+
+
+def topk_accuracy(logits: np.ndarray, labels: np.ndarray, k: int) -> float:
+    """Top-k accuracy with deterministic tie handling (argsort is stable,
+    we take the k largest by value, ties broken toward lower index —
+    matches rust/src/eval/metrics.rs)."""
+    idx = np.argsort(-logits, axis=-1, kind="stable")[:, :k]
+    return float(np.mean(np.any(idx == labels[:, None], axis=-1)))
+
+
+def evaluate(spec, params, x, y, k: int, batch: int = 64) -> float:
+    outs = []
+    for i in range(0, len(x), batch):
+        outs.append(np.asarray(forward(spec, params, jnp.asarray(x[i : i + batch]))))
+    return topk_accuracy(np.concatenate(outs), y, k)
+
+
+def train(
+    spec,
+    x_train: np.ndarray,
+    y_train: np.ndarray,
+    *,
+    steps: int = 600,
+    batch: int = 64,
+    lr: float = 2e-3,
+    beta1: float = 0.9,
+    beta2: float = 0.999,
+    eps: float = 1e-8,
+    weight_decay: float = 1e-4,
+    seed: int = 0,
+    log_every: int = 100,
+):
+    """Adam + cosine decay.  Returns (params, history); history is a list
+    of (step, loss) pairs recorded every `log_every` steps."""
+    params = {k: jnp.asarray(v) for k, v in init_params(spec, seed).items()}
+    m0 = {k: jnp.zeros_like(v) for k, v in params.items()}
+    v0 = {k: jnp.zeros_like(v) for k, v in params.items()}
+
+    def loss_fn(p, xb, yb):
+        logits = forward(spec, p, xb)
+        return _cross_entropy(logits, yb)
+
+    @jax.jit
+    def step_fn(p, m, v, xb, yb, stepk):
+        loss, grads = jax.value_and_grad(loss_fn)(p, xb, yb)
+        cur_lr = lr * 0.5 * (1.0 + jnp.cos(jnp.pi * stepk / steps))
+        t = stepk + 1.0
+        new_p, new_m, new_v = {}, {}, {}
+        for k in p:
+            g = grads[k] + weight_decay * p[k]
+            new_m[k] = beta1 * m[k] + (1 - beta1) * g
+            new_v[k] = beta2 * v[k] + (1 - beta2) * g * g
+            mhat = new_m[k] / (1 - beta1**t)
+            vhat = new_v[k] / (1 - beta2**t)
+            new_p[k] = p[k] - cur_lr * mhat / (jnp.sqrt(vhat) + eps)
+        return new_p, new_m, new_v, loss
+
+    rng = np.random.default_rng(seed + 1)
+    history = []
+    t0 = time.time()
+    for s in range(steps):
+        idx = rng.integers(0, len(x_train), size=batch)
+        params, m0, v0, loss = step_fn(
+            params, m0, v0, jnp.asarray(x_train[idx]), jnp.asarray(y_train[idx]),
+            jnp.float32(s),
+        )
+        if s % log_every == 0 or s == steps - 1:
+            history.append((s, float(loss)))
+            print(f"    step {s:4d}  loss {float(loss):.4f}  ({time.time()-t0:.1f}s)")
+    return {k: np.asarray(v) for k, v in params.items()}, history

@@ -1,0 +1,42 @@
+""".prt container: python round-trip (the Rust reader is tested on the
+same byte layout in rust/src/tensor/io.rs)."""
+
+import os
+import tempfile
+
+import numpy as np
+import pytest
+
+from compile.io_prt import read_prt, write_prt
+
+
+def test_roundtrip_order_and_dtypes():
+    with tempfile.TemporaryDirectory() as d:
+        p = os.path.join(d, "t.prt")
+        tensors = [
+            ("w", np.arange(24, dtype=np.float32).reshape(2, 3, 4)),
+            ("y", np.array([3, -1, 0], dtype=np.int32)),
+            ("b", np.zeros((7,), dtype=np.float32)),
+        ]
+        write_prt(p, tensors)
+        back = read_prt(p)
+        assert [n for n, _ in back] == ["w", "y", "b"]
+        for (n0, a0), (n1, a1) in zip(tensors, back):
+            assert a0.dtype == a1.dtype
+            np.testing.assert_array_equal(a0, a1)
+
+
+def test_rejects_unsupported_dtype():
+    with tempfile.TemporaryDirectory() as d:
+        p = os.path.join(d, "t.prt")
+        with pytest.raises(TypeError):
+            write_prt(p, [("x", np.zeros(3, dtype=np.float64))])
+
+
+def test_rejects_bad_magic():
+    with tempfile.TemporaryDirectory() as d:
+        p = os.path.join(d, "bad.prt")
+        with open(p, "wb") as f:
+            f.write(b"\x00" * 16)
+        with pytest.raises(ValueError):
+            read_prt(p)

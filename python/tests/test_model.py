@@ -1,0 +1,122 @@
+"""Model zoo: spec consistency, forward shapes, conv correctness of the
+im2col formulation against lax.conv, and quantized-path sanity."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile.kernels.qformat import FloatFormat, FixedFormat, format_params
+from compile.model import (
+    NETWORKS,
+    count_params,
+    forward,
+    init_params,
+    max_chain,
+    weight_shapes,
+    _im2col,
+)
+
+ALL_NETS = sorted(NETWORKS)
+
+
+@pytest.fixture(scope="module")
+def tiny_params():
+    return {
+        name: {k: jnp.asarray(v) for k, v in init_params(NETWORKS[name], 0).items()}
+        for name in ALL_NETS
+    }
+
+
+@pytest.mark.parametrize("name", ALL_NETS)
+def test_forward_shapes_exact_and_quantized(name, tiny_params):
+    spec = NETWORKS[name]
+    x = jnp.zeros((2, *spec["input"]), jnp.float32)
+    y = forward(spec, tiny_params[name], x)
+    assert y.shape == (2, spec["classes"])
+    fmt = (format_params(FloatFormat(7, 6)), "float")
+    yq = forward(spec, tiny_params[name], x, fmt=fmt)
+    assert yq.shape == (2, spec["classes"])
+    fmt = (format_params(FixedFormat(6, 6)), "fixed")
+    yx = forward(spec, tiny_params[name], x, fmt=fmt)
+    assert yx.shape == (2, spec["classes"])
+
+
+@pytest.mark.parametrize("name", ALL_NETS)
+def test_weight_shapes_match_params(name):
+    spec = NETWORKS[name]
+    params = init_params(spec, 1)
+    shapes = dict(weight_shapes(spec))
+    assert set(shapes) == set(params)
+    for k, s in shapes.items():
+        assert params[k].shape == tuple(s), k
+    assert count_params(spec) == sum(v.size for v in params.values())
+
+
+def test_chain_length_ordering_matches_design():
+    # DESIGN.md: googlenet > alexnet > vgg > cifarnet > lenet5
+    chains = {n: max_chain(NETWORKS[n]) for n in ALL_NETS}
+    order = sorted(chains, key=chains.get, reverse=True)
+    assert order == ["googlenet-mini", "alexnet-mini", "vgg-mini", "cifarnet", "lenet5"]
+
+
+def test_exact_quantized_f23e8_close_to_exact_path():
+    # per-op rounding at F(23,8) is identity; only summation ORDER
+    # differs from jnp.matmul, so logits agree to fp tolerance
+    spec = NETWORKS["lenet5"]
+    params = {k: jnp.asarray(v) for k, v in init_params(spec, 3).items()}
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal((2, *spec["input"])).astype(np.float32))
+    y_exact = np.asarray(forward(spec, params, x))
+    y_q = np.asarray(forward(spec, params, x, fmt=(format_params(FloatFormat(23, 8)), "float")))
+    np.testing.assert_allclose(y_q, y_exact, rtol=2e-4, atol=2e-5)
+
+
+def test_im2col_conv_matches_lax_conv():
+    """The exact-path conv (im2col + matmul) must equal lax.conv."""
+    rng = np.random.default_rng(5)
+    x = rng.standard_normal((2, 8, 8, 3)).astype(np.float32)
+    w = rng.standard_normal((3, 3, 3, 5)).astype(np.float32)
+    patches, (b, oh, ow) = _im2col(jnp.asarray(x), 3, 3, 1, 1)
+    y = (patches @ w.reshape(27, 5)).reshape(b, oh, ow, 5)
+    ref = jax.lax.conv_general_dilated(
+        jnp.asarray(x), jnp.asarray(w),
+        window_strides=(1, 1), padding=((1, 1), (1, 1)),
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    np.testing.assert_allclose(np.asarray(y), np.asarray(ref), rtol=1e-5, atol=1e-5)
+
+
+def test_im2col_stride_2():
+    rng = np.random.default_rng(6)
+    x = rng.standard_normal((1, 9, 9, 2)).astype(np.float32)
+    w = rng.standard_normal((3, 3, 2, 4)).astype(np.float32)
+    patches, (b, oh, ow) = _im2col(jnp.asarray(x), 3, 3, 2, 0)
+    assert (oh, ow) == (4, 4)
+    y = (patches @ w.reshape(18, 4)).reshape(b, oh, ow, 4)
+    ref = jax.lax.conv_general_dilated(
+        jnp.asarray(x), jnp.asarray(w),
+        window_strides=(2, 2), padding="VALID",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    np.testing.assert_allclose(np.asarray(y), np.asarray(ref), rtol=1e-5, atol=1e-5)
+
+
+def test_quantized_narrow_format_changes_logits():
+    spec = NETWORKS["cifarnet"]
+    params = {k: jnp.asarray(v) for k, v in init_params(spec, 4).items()}
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.standard_normal((2, *spec["input"])).astype(np.float32))
+    y_wide = np.asarray(forward(spec, params, x, fmt=(format_params(FloatFormat(16, 8)), "float")))
+    y_narrow = np.asarray(forward(spec, params, x, fmt=(format_params(FloatFormat(2, 3)), "float")))
+    assert not np.allclose(y_wide, y_narrow)
+
+
+def test_init_is_deterministic_per_seed():
+    spec = NETWORKS["lenet5"]
+    a = init_params(spec, 9)
+    b = init_params(spec, 9)
+    c = init_params(spec, 10)
+    for k in a:
+        np.testing.assert_array_equal(a[k], b[k])
+    assert any((a[k] != c[k]).any() for k in a if k.endswith(".w"))

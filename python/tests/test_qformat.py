@@ -1,0 +1,189 @@
+"""Quantizer correctness: jnp bit-trick vs the independent frexp oracle,
+plus the algebraic invariants every real rounding unit must satisfy."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.qformat import (
+    FixedFormat,
+    FloatFormat,
+    fixed_params,
+    float_params,
+    format_params,
+    quantize,
+)
+from compile.kernels.ref import ref_quantize
+
+F32_MAX = 3.4028234663852886e38
+
+float_formats = st.builds(
+    FloatFormat,
+    mantissa=st.integers(min_value=0, max_value=23),
+    exponent=st.integers(min_value=2, max_value=8),
+)
+fixed_formats = st.builds(
+    FixedFormat,
+    int_bits=st.integers(min_value=0, max_value=16),
+    frac_bits=st.integers(min_value=0, max_value=16),
+)
+finite_f32 = st.floats(
+    min_value=np.float32(-1e30),
+    max_value=np.float32(1e30),
+    allow_nan=False,
+    allow_infinity=False,
+    width=32,
+)
+
+
+def q(x, fmt):
+    kind = "float" if isinstance(fmt, FloatFormat) else "fixed"
+    return np.asarray(quantize(jnp.asarray(x, dtype=jnp.float32), format_params(fmt), kind))
+
+
+def bits(a):
+    return np.asarray(a, dtype=np.float32).view(np.uint32)
+
+
+@settings(max_examples=60, deadline=None)
+@given(xs=st.lists(finite_f32, min_size=1, max_size=32), fmt=float_formats)
+def test_float_matches_oracle_bitexact(xs, fmt):
+    x = np.array(xs, dtype=np.float32)
+    got = q(x, fmt)
+    want = ref_quantize(x, fmt)
+    # -0.0 vs +0.0 both mean "flushed"; compare canonicalized bits
+    got, want = got + 0.0, want + 0.0
+    np.testing.assert_array_equal(bits(got), bits(want))
+
+
+@settings(max_examples=60, deadline=None)
+@given(xs=st.lists(finite_f32, min_size=1, max_size=32), fmt=fixed_formats)
+def test_fixed_matches_oracle(xs, fmt):
+    x = np.array(xs, dtype=np.float32)
+    np.testing.assert_allclose(q(x, fmt), ref_quantize(x, fmt), rtol=0, atol=0)
+
+
+@settings(max_examples=40, deadline=None)
+@given(xs=st.lists(finite_f32, min_size=1, max_size=16), fmt=float_formats)
+def test_float_idempotent(xs, fmt):
+    x = np.array(xs, dtype=np.float32)
+    once = q(x, fmt)
+    np.testing.assert_array_equal(bits(once + 0.0), bits(q(once, fmt) + 0.0))
+
+
+@settings(max_examples=40, deadline=None)
+@given(xs=st.lists(finite_f32, min_size=1, max_size=16), fmt=fixed_formats)
+def test_fixed_idempotent(xs, fmt):
+    x = np.array(xs, dtype=np.float32)
+    once = q(x, fmt)
+    np.testing.assert_array_equal(once, q(once, fmt))
+
+
+@settings(max_examples=40, deadline=None)
+@given(x=finite_f32, y=finite_f32, fmt=float_formats)
+def test_float_monotone(x, y, fmt):
+    lo, hi = sorted([x, y])
+    a = q(np.array([lo], np.float32), fmt)[0]
+    b = q(np.array([hi], np.float32), fmt)[0]
+    assert a <= b
+
+
+@settings(max_examples=40, deadline=None)
+@given(xs=st.lists(finite_f32, min_size=1, max_size=16), fmt=float_formats)
+def test_float_odd_symmetry(xs, fmt):
+    x = np.array(xs, dtype=np.float32)
+    np.testing.assert_array_equal(bits(q(-x, fmt) + 0.0), bits(-q(x, fmt) + 0.0))
+
+
+@settings(max_examples=40, deadline=None)
+@given(xs=st.lists(finite_f32, min_size=1, max_size=16), fmt=float_formats)
+def test_float_saturation_bound(xs, fmt):
+    x = np.array(xs, dtype=np.float32)
+    y = q(x, fmt)
+    assert np.all(np.abs(y) <= fmt.max_value)
+
+
+@settings(max_examples=40, deadline=None)
+@given(xs=st.lists(finite_f32, min_size=1, max_size=16), fmt=fixed_formats)
+def test_fixed_grid_and_bound(xs, fmt):
+    x = np.array(xs, dtype=np.float32)
+    y = q(x, fmt).astype(np.float64)
+    # the clamp bound lives on the f32 carrier, so compare against the
+    # carrier-rounded max (exact only while 1 + l + r <= 25)
+    assert np.all(np.abs(y) <= np.float32(fmt.max_value))
+    if fmt.total_bits <= 25:
+        # every output lies exactly on the 2^-r grid
+        k = y * fmt.scale
+        np.testing.assert_array_equal(k, np.round(k))
+
+
+def test_f23e8_is_identity_on_normals():
+    rng = np.random.default_rng(1)
+    x = (rng.standard_normal(4096).astype(np.float32)
+         * np.exp2(rng.integers(-100, 100, 4096)).astype(np.float32))
+    fmt = FloatFormat(23, 8)
+    np.testing.assert_array_equal(bits(q(x, fmt)), bits(x))
+
+
+def test_flush_to_zero_below_min_normal():
+    fmt = FloatFormat(4, 4)  # emin = -7, min_normal = 2^-7
+    x = np.array([2.0**-8, -(2.0**-8), 2.0**-7, 0.0], np.float32)
+    y = q(x, fmt)
+    np.testing.assert_array_equal(y + 0.0, np.array([0, 0, 2.0**-7, 0], np.float32))
+
+
+def test_saturate_at_max():
+    fmt = FloatFormat(4, 4)  # emax = 8, max = (2 - 2^-4) * 256 = 496
+    x = np.array([1e6, -1e6, 496.0], np.float32)
+    y = q(x, fmt)
+    np.testing.assert_array_equal(y, np.array([496.0, -496.0, 496.0], np.float32))
+
+
+def test_round_half_even_float():
+    # m=2: grid at 1.00, 1.25, 1.50, 1.75, 2.0; ties go to even mantissa
+    fmt = FloatFormat(2, 4)
+    x = np.array([1.125, 1.375, 1.625, 1.875], np.float32)
+    y = q(x, fmt)
+    np.testing.assert_array_equal(y, np.array([1.0, 1.5, 1.5, 2.0], np.float32))
+
+
+def test_round_half_even_fixed():
+    fmt = FixedFormat(4, 1)  # step 0.5
+    x = np.array([0.25, 0.75, 1.25, 1.75], np.float32)
+    y = q(x, fmt)
+    np.testing.assert_array_equal(y, np.array([0.0, 1.0, 1.0, 2.0], np.float32))
+
+
+def test_fixed_16bit_center_radix_max_is_256ish():
+    # the paper's §4.3 example: 16 bits, radix point in the center,
+    # saturates just above 255
+    fmt = FixedFormat(8, 8)
+    assert fmt.max_value == pytest.approx(256.0, abs=0.01)
+    assert q(np.array([300.0], np.float32), fmt)[0] == np.float32(fmt.max_value)
+
+
+def test_e8_carrier_clamps():
+    fmt = FloatFormat(7, 8)
+    assert fmt.max_value <= F32_MAX
+    assert fmt.min_normal >= 2.0**-126
+
+
+def test_param_vectors():
+    f = FloatFormat(7, 6)
+    p = np.asarray(float_params(f))
+    assert p[0] == 16 and p[1] == np.float32(f.min_normal) and p[2] == np.float32(f.max_value)
+    g = FixedFormat(4, 4)
+    p = np.asarray(fixed_params(g))
+    assert p[0] == 16.0 and p[1] == np.float32(1 / 16.0) and p[2] == np.float32(g.max_value)
+
+
+def test_invalid_formats_rejected():
+    with pytest.raises(ValueError):
+        FloatFormat(24, 8)
+    with pytest.raises(ValueError):
+        FloatFormat(5, 0)
+    with pytest.raises(ValueError):
+        FixedFormat(-1, 3)
+    with pytest.raises(ValueError):
+        quantize(jnp.zeros(3), jnp.zeros(4), "decimal")

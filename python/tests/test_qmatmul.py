@@ -1,0 +1,129 @@
+"""Pallas qmatmul vs the accumulation-order-faithful oracle.
+
+The kernel must be BIT-exact against ref_qmatmul: same per-op rounding,
+same serial-K order, independent of the (block_m, block_n) tiling chosen.
+One exception is normative: the SIGN OF ZERO is unspecified (XLA's
+algebraic simplifier rewrites `0 + x -> x`, which differs from strict
+IEEE for x = -0.0), so comparisons canonicalize zeros with `+ 0.0`.
+All zeros behave identically in every downstream op we use.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.qformat import FixedFormat, FloatFormat, format_params
+from compile.kernels.qmatmul import pick_block, qmatmul, qmatmul_coarse
+from compile.kernels.ref import ref_qmatmul, ref_matmul_exact, ref_quantize
+
+
+def canon(a):
+    """Canonicalize -0.0 to +0.0 for bit comparison."""
+    return (np.asarray(a, dtype=np.float32) + 0.0).view(np.uint32)
+
+
+def kind_of(fmt):
+    return "float" if isinstance(fmt, FloatFormat) else "fixed"
+
+
+def run_qmm(a, b, fmt, **kw):
+    return np.asarray(
+        qmatmul(jnp.asarray(a), jnp.asarray(b), format_params(fmt), kind=kind_of(fmt), **kw)
+    )
+
+
+small_formats = st.sampled_from(
+    [
+        FloatFormat(7, 6),
+        FloatFormat(2, 8),
+        FloatFormat(10, 4),
+        FloatFormat(23, 8),
+        FloatFormat(4, 3),
+        FixedFormat(8, 8),
+        FixedFormat(2, 6),
+        FixedFormat(12, 2),
+        FixedFormat(0, 8),
+    ]
+)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.integers(1, 10),
+    k=st.integers(1, 24),
+    n=st.integers(1, 10),
+    fmt=small_formats,
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_qmatmul_matches_oracle(m, k, n, fmt, seed):
+    rng = np.random.default_rng(seed)
+    a = rng.standard_normal((m, k)).astype(np.float32)
+    b = rng.standard_normal((k, n)).astype(np.float32)
+    got = run_qmm(a, b, fmt)
+    want = ref_qmatmul(a, b, fmt)
+    np.testing.assert_array_equal(canon(got), canon(want))
+
+
+@pytest.mark.parametrize("bm,bn", [(1, 1), (2, 4), (4, 2), (8, 8), (128, 128)])
+def test_tiling_invariance(bm, bn):
+    """The output must not depend on the BlockSpec tiling."""
+    rng = np.random.default_rng(7)
+    a = rng.standard_normal((8, 16)).astype(np.float32)
+    b = rng.standard_normal((16, 8)).astype(np.float32)
+    fmt = FloatFormat(7, 6)
+    want = ref_qmatmul(a, b, fmt)
+    got = run_qmm(a, b, fmt, block_m=bm, block_n=bn)
+    np.testing.assert_array_equal(canon(got), canon(want))
+
+
+def test_exact_format_equals_serial_f32():
+    rng = np.random.default_rng(3)
+    a = rng.standard_normal((6, 40)).astype(np.float32)
+    b = rng.standard_normal((40, 5)).astype(np.float32)
+    got = run_qmm(a, b, FloatFormat(23, 8))
+    want = ref_matmul_exact(a, b)
+    np.testing.assert_array_equal(canon(got), canon(want))
+
+
+def test_saturation_visible_in_long_accumulation():
+    """Paper §4.3: with a narrow fixed format the running sum saturates;
+    the final dot product must equal the saturated bound, not the true sum."""
+    fmt = FixedFormat(4, 4)  # max 16 - 1/16
+    k = 64
+    a = np.ones((1, k), np.float32)
+    b = np.ones((k, 1), np.float32)
+    got = run_qmm(a, b, fmt)[0, 0]
+    assert got == np.float32(fmt.max_value)  # saturated, not 64
+
+
+def test_coarse_ablation_differs_from_per_op():
+    """qmatmul_coarse (wide-accumulator ablation) must be the quantized
+    exact product — strictly more accurate than the per-op chain when the
+    chain saturates."""
+    fmt = FixedFormat(4, 4)
+    k = 64
+    rng = np.random.default_rng(11)
+    a = np.abs(rng.standard_normal((2, k))).astype(np.float32)
+    b = np.abs(rng.standard_normal((k, 2))).astype(np.float32)
+    coarse = np.asarray(
+        qmatmul_coarse(jnp.asarray(a), jnp.asarray(b), format_params(fmt), kind="fixed")
+    )
+    want = ref_quantize(np.matmul(a, b), fmt)
+    np.testing.assert_array_equal(coarse, want)
+
+
+def test_pick_block():
+    assert pick_block(128, 128) == 128
+    assert pick_block(96, 128) == 96
+    assert pick_block(10, 4) == 2
+    assert pick_block(7, 4) == 1
+    assert pick_block(12, 8) == 6
+
+
+def test_shape_mismatch_raises():
+    with pytest.raises(ValueError):
+        qmatmul(
+            jnp.zeros((2, 3)), jnp.zeros((4, 2)),
+            format_params(FloatFormat(7, 6)), kind="float",
+        )

@@ -1,0 +1,40 @@
+"""Trainer: loss decreases, accuracy metric semantics, determinism."""
+
+import numpy as np
+
+from compile.datagen import digits
+from compile.model import NETWORKS
+from compile.train import topk_accuracy, train
+
+
+def test_topk_accuracy_semantics():
+    logits = np.array([[0.1, 0.9, 0.0], [0.8, 0.1, 0.1]], np.float32)
+    labels = np.array([1, 2], np.int32)
+    assert topk_accuracy(logits, labels, 1) == 0.5
+    assert topk_accuracy(logits, labels, 3) == 1.0
+
+
+def test_topk_ties_break_to_lower_index():
+    # matches rust/src/eval/metrics.rs: stable argsort of -logits
+    logits = np.array([[5.0, 5.0, 5.0, 5.0]], np.float32)
+    assert topk_accuracy(logits, np.array([0], np.int32), 1) == 1.0
+    assert topk_accuracy(logits, np.array([3], np.int32), 1) == 0.0
+    assert topk_accuracy(logits, np.array([1], np.int32), 2) == 1.0
+
+
+def test_short_training_reduces_loss():
+    spec = NETWORKS["lenet5"]
+    x, y = digits(512, 16, seed=3)
+    _, hist = train(spec, x, y, steps=60, log_every=59, seed=0)
+    first = hist[0][1]
+    last = hist[-1][1]
+    assert last < first * 0.8, f"loss {first} -> {last}"
+
+
+def test_training_is_deterministic():
+    spec = NETWORKS["lenet5"]
+    x, y = digits(256, 16, seed=3)
+    p1, _ = train(spec, x, y, steps=12, log_every=100, seed=5)
+    p2, _ = train(spec, x, y, steps=12, log_every=100, seed=5)
+    for k in p1:
+        np.testing.assert_array_equal(p1[k], p2[k])

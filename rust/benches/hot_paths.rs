@@ -1,0 +1,100 @@
+//! Micro-benchmarks of the hot paths (in-repo harness; criterion is not
+//! in the offline crate set).  Run: `cargo bench --offline`.
+//!
+//! Sections: quantizer kernels, quantized GEMM, native forward passes,
+//! PJRT batch execution.  These are the §Perf L3 measurement points —
+//! before/after numbers live in EXPERIMENTS.md.
+
+use precis::bench_harness::{section, Bench};
+use precis::formats::Format;
+use precis::nn::{Engine, Zoo};
+use precis::numerics::{dot_q, Quantizer};
+use precis::runtime::Runtime;
+use precis::util::rng::Pcg32;
+
+fn randv(n: usize, seed: u64) -> Vec<f32> {
+    let mut r = Pcg32::seeded(seed);
+    (0..n).map(|_| r.normal()).collect()
+}
+
+fn main() {
+    let mut b = Bench::default();
+
+    section("quantizer");
+    let xs = randv(4096, 1);
+    for fmt in [Format::float(7, 6), Format::SINGLE, Format::fixed(8, 8)] {
+        let q = Quantizer::new(&fmt);
+        let mut buf = xs.clone();
+        let r = b.run(&format!("quantize_slice/4096/{}", fmt.id()), || {
+            buf.copy_from_slice(&xs);
+            precis::numerics::quantize_slice(&mut buf, &q);
+            buf[0]
+        });
+        println!(
+            "    -> {:.0} Melem/s",
+            r.throughput(4096.0) / 1e6
+        );
+    }
+
+    section("dot_q (per-op-rounded MAC chain)");
+    for k in [256usize, 1000] {
+        let a = randv(k, 2);
+        let w = randv(k, 3);
+        for fmt in [Format::float(7, 6), Format::fixed(8, 8)] {
+            let q = Quantizer::new(&fmt);
+            let r = b.run(&format!("dot_q/K={k}/{}", fmt.id()), || dot_q(&a, &w, &q));
+            println!("    -> {:.1} Mmac/s", r.throughput(k as f64) / 1e6);
+        }
+    }
+
+    section("gemm_q");
+    for (m, k, n) in [(64usize, 256usize, 32usize), (400, 147, 24), (100, 600, 32)] {
+        let a = randv(m * k, 4);
+        let w = randv(k * n, 5);
+        let mut out = vec![0.0f32; m * n];
+        let q = Quantizer::new(&Format::float(7, 6));
+        let r = b.run(&format!("gemm_q/{m}x{k}x{n}/float:m7e6"), || {
+            precis::nn::gemm_q(&a, &w, &mut out, m, k, n, &q);
+            out[0]
+        });
+        println!(
+            "    -> {:.1} Mmac/s",
+            r.throughput((m * k * n) as f64) / 1e6
+        );
+    }
+
+    // artifact-dependent benches are skipped gracefully when absent
+    let Ok(zoo) = Zoo::load(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts")) else {
+        println!("\n(artifacts/ missing — run `make artifacts` for the network benches)");
+        return;
+    };
+
+    section("native forward (batch 32)");
+    let mut engine = Engine::new();
+    for name in ["lenet5", "cifarnet", "alexnet-mini", "vgg-mini", "googlenet-mini"] {
+        let net = zoo.network(name).unwrap();
+        let x = net.eval_x.slice_rows(0, 32);
+        let fmt = Format::float(7, 6);
+        let r = b.run(&format!("forward/{name}/batch32"), || {
+            engine.forward(&net, &x, &fmt).data()[0]
+        });
+        println!("    -> {:.1} samples/s", r.throughput(32.0));
+    }
+
+    section("PJRT batch execution (lenet5)");
+    match Runtime::cpu() {
+        Ok(rt) => {
+            let net = zoo.network("lenet5").unwrap();
+            let model = rt
+                .load_network(&net, &zoo.dir, "float", zoo.batch)
+                .expect("load artifact");
+            let x = net.eval_x.slice_rows(0, zoo.batch);
+            let fmt = Format::float(7, 6);
+            let r = b.run("pjrt_run_batch/lenet5/batch32", || {
+                model.run_batch(&x, &fmt).unwrap().data()[0]
+            });
+            println!("    -> {:.1} samples/s", r.throughput(32.0));
+        }
+        Err(e) => println!("(PJRT unavailable: {e})"),
+    }
+}

@@ -1,0 +1,74 @@
+//! One bench per paper figure: times the end-to-end regeneration of each
+//! figure's data series (in-repo harness; criterion unavailable offline).
+//!
+//! Figures that need accuracy sweeps are benched at reduced sample
+//! counts/strides — the point is tracking the *cost* of each pipeline,
+//! not regenerating publication data (use `repro figures` for that).
+
+use precis::bench_harness::{section, Bench};
+use precis::coordinator::cache::ResultCache;
+use precis::coordinator::Coordinator;
+use precis::eval::sweep::EvalOptions;
+use precis::figures;
+use precis::formats::{self, Format};
+use precis::nn::Zoo;
+use precis::search::{collect_model_points, search, AccuracyModel, SearchSpec};
+
+fn main() {
+    let mut b = Bench::quick();
+
+    section("fig4/fig5 (hardware model, analytic)");
+    b.run("fig4_mac_delay_area", || figures::fig4().rows.len());
+    b.run("fig5_speedup_composition", || figures::fig5().rows.len());
+
+    let Ok(zoo) = Zoo::load(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts")) else {
+        println!("(artifacts/ missing — run `make artifacts` for the sweep benches)");
+        return;
+    };
+    let opts = EvalOptions { samples: 32, batch: 32 };
+
+    section("fig6 (design-space sweep, 32 samples, stride 8)");
+    {
+        // ephemeral cache: we are timing the compute, not the cache
+        let coord = Coordinator::new(zoo, ResultCache::ephemeral());
+        b.run("fig6_lenet5/str8", || {
+            figures::fig6(&coord, "lenet5", &opts, 8).unwrap().rows.len()
+        });
+
+        section("fig7 heatmap path (cached after first sweep)");
+        b.run("fig7_lenet5_cached", || {
+            figures::fig7(&coord, "lenet5", &opts).unwrap().rows.len()
+        });
+
+        section("fig8 (accumulation trace)");
+        let net = coord.zoo.network("alexnet-mini").unwrap();
+        b.run("fig8_alexnet_trace", || {
+            figures::fig8(&net, 0).unwrap().rows.len()
+        });
+
+        section("fig9 (model points, lenet5 slice)");
+        let lenet = coord.zoo.network("lenet5").unwrap();
+        let space = formats::design_space(8);
+        b.run("fig9_points_lenet5/str8", || {
+            collect_model_points(&lenet, &space, &opts, 7).len()
+        });
+
+        section("fig10/fig11 (model-driven search)");
+        let pts: Vec<_> = collect_model_points(&lenet, &formats::design_space(4), &opts, 7)
+            .into_iter()
+            .map(|(_, p)| p)
+            .collect();
+        let model = AccuracyModel::fit(&pts);
+        let cifar = coord.zoo.network("cifarnet").unwrap();
+        let spec = SearchSpec {
+            formats: (1..=18).map(|m| Format::float(m, 6)).collect(),
+            target: 0.99,
+            refine_samples: 2,
+            opts,
+            seed: 7,
+        };
+        b.run("search_cifarnet/float_ladder", || {
+            search(&cifar, &spec, &model).sample_forwards
+        });
+    }
+}

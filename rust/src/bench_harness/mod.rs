@@ -1,0 +1,140 @@
+//! In-repo micro-benchmark framework (criterion is not in the offline
+//! crate set — DESIGN.md §6).  Used by the `[[bench]]` targets with
+//! `harness = false`.
+//!
+//! Protocol per benchmark: warm up for `warmup_iters`, then run timed
+//! batches until `min_time` elapses (at least `min_batches`), and report
+//! median / p10 / p90 per-iteration time plus derived throughput.
+
+use std::hint::black_box;
+use std::time::Instant;
+
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    /// seconds per iteration
+    pub median: f64,
+    pub p10: f64,
+    pub p90: f64,
+    pub iters_per_batch: u64,
+    pub batches: usize,
+}
+
+impl BenchResult {
+    pub fn throughput(&self, units_per_iter: f64) -> f64 {
+        units_per_iter / self.median
+    }
+}
+
+pub struct Bench {
+    pub warmup_iters: u64,
+    pub min_batches: usize,
+    pub min_time_s: f64,
+    results: Vec<BenchResult>,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Bench {
+            warmup_iters: 3,
+            min_batches: 10,
+            min_time_s: 0.5,
+            results: Vec::new(),
+        }
+    }
+}
+
+impl Bench {
+    pub fn quick() -> Bench {
+        Bench { warmup_iters: 1, min_batches: 5, min_time_s: 0.1, ..Default::default() }
+    }
+
+    /// Time `f` (one logical iteration per call).
+    pub fn run<R>(&mut self, name: &str, mut f: impl FnMut() -> R) -> BenchResult {
+        // warmup + calibrate iterations per batch to ~10ms
+        let t0 = Instant::now();
+        for _ in 0..self.warmup_iters.max(1) {
+            black_box(f());
+        }
+        let per_iter = t0.elapsed().as_secs_f64() / self.warmup_iters.max(1) as f64;
+        let iters = ((0.01 / per_iter.max(1e-9)) as u64).clamp(1, 1_000_000);
+
+        let mut samples = Vec::new();
+        let bench_start = Instant::now();
+        while samples.len() < self.min_batches
+            || bench_start.elapsed().as_secs_f64() < self.min_time_s
+        {
+            let t = Instant::now();
+            for _ in 0..iters {
+                black_box(f());
+            }
+            samples.push(t.elapsed().as_secs_f64() / iters as f64);
+            if samples.len() > 10_000 {
+                break;
+            }
+        }
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let pick = |q: f64| samples[((samples.len() - 1) as f64 * q) as usize];
+        let r = BenchResult {
+            name: name.to_string(),
+            median: pick(0.5),
+            p10: pick(0.1),
+            p90: pick(0.9),
+            iters_per_batch: iters,
+            batches: samples.len(),
+        };
+        println!(
+            "{:<44} {:>12}/iter   (p10 {:>10}, p90 {:>10}, {} x {} iters)",
+            r.name,
+            crate::util::timer::human(r.median),
+            crate::util::timer::human(r.p10),
+            crate::util::timer::human(r.p90),
+            r.batches,
+            r.iters_per_batch,
+        );
+        self.results.push(r.clone());
+        r
+    }
+
+    pub fn results(&self) -> &[BenchResult] {
+        &self.results
+    }
+}
+
+/// Print a section header in bench output.
+pub fn section(title: &str) {
+    println!("\n== {title} {}", "=".repeat(66usize.saturating_sub(title.len())));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something_positive() {
+        let mut b = Bench { warmup_iters: 1, min_batches: 3, min_time_s: 0.01, results: vec![] };
+        let r = b.run("spin", || {
+            let mut s = 0u64;
+            for i in 0..100 {
+                s = s.wrapping_add(i * i);
+            }
+            s
+        });
+        assert!(r.median > 0.0);
+        assert!(r.p10 <= r.median && r.median <= r.p90 + 1e-12);
+        assert_eq!(b.results().len(), 1);
+    }
+
+    #[test]
+    fn throughput_derivation() {
+        let r = BenchResult {
+            name: "x".into(),
+            median: 0.002,
+            p10: 0.001,
+            p90: 0.003,
+            iters_per_batch: 1,
+            batches: 1,
+        };
+        assert!((r.throughput(10.0) - 5000.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,158 @@
+//! Persistent sweep-result cache.
+//!
+//! Keyed by `(network, format id, samples)`; stores (accuracy,
+//! normalized accuracy).  Hardware numbers are analytic and never
+//! cached.  The figure harness re-runs are near-instant once the sweep
+//! has been paid for.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use anyhow::Result;
+
+use crate::util::json::Json;
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct CachedAccuracy {
+    pub accuracy: f64,
+    pub normalized_accuracy: f64,
+}
+
+pub struct ResultCache {
+    path: Option<PathBuf>,
+    map: Mutex<BTreeMap<String, CachedAccuracy>>,
+    dirty: Mutex<bool>,
+}
+
+fn key(net: &str, fmt_id: &str, samples: usize) -> String {
+    format!("{net}|{fmt_id}|{samples}")
+}
+
+impl ResultCache {
+    /// In-memory cache (tests).
+    pub fn ephemeral() -> ResultCache {
+        ResultCache {
+            path: None,
+            map: Mutex::new(BTreeMap::new()),
+            dirty: Mutex::new(false),
+        }
+    }
+
+    /// Load (or start) a cache backed by a JSON file.
+    pub fn open(path: impl AsRef<Path>) -> ResultCache {
+        let path = path.as_ref().to_path_buf();
+        let mut map = BTreeMap::new();
+        if let Ok(text) = std::fs::read_to_string(&path) {
+            if let Ok(j) = Json::parse(&text) {
+                if let Some(obj) = j.as_obj() {
+                    for (k, v) in obj {
+                        let (Some(acc), Some(na)) = (
+                            v.get("acc").and_then(Json::as_f64),
+                            v.get("na").and_then(Json::as_f64),
+                        ) else {
+                            continue;
+                        };
+                        map.insert(k.clone(), CachedAccuracy { accuracy: acc, normalized_accuracy: na });
+                    }
+                }
+            }
+        }
+        ResultCache {
+            path: Some(path),
+            map: Mutex::new(map),
+            dirty: Mutex::new(false),
+        }
+    }
+
+    pub fn get(&self, net: &str, fmt_id: &str, samples: usize) -> Option<CachedAccuracy> {
+        self.map.lock().unwrap().get(&key(net, fmt_id, samples)).copied()
+    }
+
+    pub fn put(&self, net: &str, fmt_id: &str, samples: usize, v: CachedAccuracy) {
+        self.map.lock().unwrap().insert(key(net, fmt_id, samples), v);
+        *self.dirty.lock().unwrap() = true;
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Write back to disk if dirty (no-op for ephemeral caches).
+    pub fn flush(&self) -> Result<()> {
+        let Some(path) = &self.path else { return Ok(()) };
+        if !*self.dirty.lock().unwrap() {
+            return Ok(());
+        }
+        let map = self.map.lock().unwrap();
+        let obj: BTreeMap<String, Json> = map
+            .iter()
+            .map(|(k, v)| {
+                (
+                    k.clone(),
+                    Json::obj(vec![
+                        ("acc", Json::num(v.accuracy)),
+                        ("na", Json::num(v.normalized_accuracy)),
+                    ]),
+                )
+            })
+            .collect();
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        std::fs::write(path, Json::Obj(obj).to_string())?;
+        *self.dirty.lock().unwrap() = false;
+        Ok(())
+    }
+}
+
+impl Drop for ResultCache {
+    fn drop(&mut self) {
+        let _ = self.flush();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn put_get_roundtrip() {
+        let c = ResultCache::ephemeral();
+        assert!(c.get("net", "float:m7e6", 128).is_none());
+        let v = CachedAccuracy { accuracy: 0.9, normalized_accuracy: 0.97 };
+        c.put("net", "float:m7e6", 128, v);
+        assert_eq!(c.get("net", "float:m7e6", 128), Some(v));
+        // different samples => different key
+        assert!(c.get("net", "float:m7e6", 64).is_none());
+    }
+
+    #[test]
+    fn persists_across_open() {
+        let p = std::env::temp_dir().join("precis_cache_test.json");
+        std::fs::remove_file(&p).ok();
+        {
+            let c = ResultCache::open(&p);
+            c.put("a", "fixed:l8r8", 32, CachedAccuracy { accuracy: 0.5, normalized_accuracy: 0.55 });
+            c.flush().unwrap();
+        }
+        let c2 = ResultCache::open(&p);
+        let v = c2.get("a", "fixed:l8r8", 32).unwrap();
+        assert_eq!(v.accuracy, 0.5);
+        assert_eq!(v.normalized_accuracy, 0.55);
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn corrupt_file_is_ignored() {
+        let p = std::env::temp_dir().join("precis_cache_corrupt.json");
+        std::fs::write(&p, "not json at all").unwrap();
+        let c = ResultCache::open(&p);
+        assert!(c.is_empty());
+        std::fs::remove_file(&p).ok();
+    }
+}

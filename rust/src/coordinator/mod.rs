@@ -1,0 +1,18 @@
+//! L3 coordination: worker pool, parallel design-space sweeps, result
+//! cache, and a batching inference server.
+//!
+//! The paper's workload is *sweep-shaped* (hundreds of (network, format)
+//! evaluations feeding the search and every figure), so the coordinator
+//! is organized around a work-stealing job pool with per-worker engine
+//! reuse and a persistent result cache keyed by
+//! (network, format, samples).  The [`server`] submodule provides the
+//! request-path façade: single-sample requests are dynamically batched
+//! to the artifact batch size and dispatched to a pluggable runner
+//! (native engine or PJRT executable).
+
+pub mod cache;
+pub mod pool;
+pub mod server;
+mod sweep;
+
+pub use sweep::{sweep_formats, Coordinator};

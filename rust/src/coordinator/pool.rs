@@ -1,0 +1,120 @@
+//! Work-stealing worker pool on std threads (tokio/rayon are not in the
+//! offline crate set — DESIGN.md §6).
+//!
+//! Jobs are indexed; workers claim indices with an atomic counter and
+//! send `(index, result)` down an mpsc channel, so results come back in
+//! job order regardless of completion order.  Each worker owns a
+//! `state` value created by `init` (the sweep uses this for its
+//! scratch-buffer [`crate::nn::Engine`]).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc;
+
+/// Run `jobs.len()` tasks over `workers` threads.  `init()` runs once
+/// per worker; `f(state, job)` per job.  Results are returned in job
+/// order.  Panics in jobs propagate (fail fast).
+pub fn run_indexed<J, R, S>(
+    jobs: &[J],
+    workers: usize,
+    init: impl Fn() -> S + Sync,
+    f: impl Fn(&mut S, &J) -> R + Sync,
+) -> Vec<R>
+where
+    J: Sync,
+    R: Send,
+{
+    let n = jobs.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let workers = workers.clamp(1, n);
+    let next = AtomicUsize::new(0);
+    let (tx, rx) = mpsc::channel::<(usize, R)>();
+
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            let tx = tx.clone();
+            let next = &next;
+            let f = &f;
+            let init = &init;
+            scope.spawn(move || {
+                let mut state = init();
+                loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= n {
+                        break;
+                    }
+                    let r = f(&mut state, &jobs[i]);
+                    if tx.send((i, r)).is_err() {
+                        break;
+                    }
+                }
+            });
+        }
+        drop(tx);
+
+        let mut out: Vec<Option<R>> = (0..n).map(|_| None).collect();
+        for (i, r) in rx {
+            out[i] = Some(r);
+        }
+        out.into_iter()
+            .map(|r| r.expect("worker panicked before completing its job"))
+            .collect()
+    })
+}
+
+/// Default worker count: one per available core.
+pub fn default_workers() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::prop::run_prop;
+
+    #[test]
+    fn preserves_job_order() {
+        let jobs: Vec<usize> = (0..100).collect();
+        let out = run_indexed(&jobs, 8, || (), |_, &j| j * 2);
+        assert_eq!(out, (0..100).map(|j| j * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn per_worker_state_is_isolated() {
+        // each worker counts its own jobs; totals must sum to n
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        static TOTAL: AtomicUsize = AtomicUsize::new(0);
+        struct Counter(usize);
+        impl Drop for Counter {
+            fn drop(&mut self) {
+                TOTAL.fetch_add(self.0, Ordering::SeqCst);
+            }
+        }
+        let jobs: Vec<u32> = (0..57).collect();
+        let _ = run_indexed(&jobs, 4, || Counter(0), |s, _| s.0 += 1);
+        assert_eq!(TOTAL.load(Ordering::SeqCst), 57);
+    }
+
+    #[test]
+    fn empty_and_single() {
+        let out: Vec<u32> = run_indexed(&[] as &[u32], 4, || (), |_, &j| j);
+        assert!(out.is_empty());
+        let out = run_indexed(&[9u32], 16, || (), |_, &j| j + 1);
+        assert_eq!(out, vec![10]);
+    }
+
+    #[test]
+    fn prop_matches_sequential_map() {
+        run_prop("pool_matches_map", 30, |g| {
+            let n = g.usize_in(0, 64);
+            let jobs: Vec<i64> = (0..n).map(|_| g.int_in(-1000, 1000)).collect();
+            let workers = g.usize_in(1, 9);
+            let par = run_indexed(&jobs, workers, || (), |_, &j| j * j - 3);
+            let seq: Vec<i64> = jobs.iter().map(|&j| j * j - 3).collect();
+            assert_eq!(par, seq);
+        });
+    }
+}

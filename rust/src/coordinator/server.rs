@@ -1,0 +1,230 @@
+//! Dynamic-batching inference server (the request-path façade).
+//!
+//! Single-sample requests are queued; the dispatcher thread flushes a
+//! batch when either the artifact batch size is reached or the oldest
+//! queued request exceeds `max_wait` (classic dynamic batching, as in
+//! vLLM-style routers).  The execution backend is pluggable via
+//! [`BatchRunner`] — the PJRT executable on the request path, or the
+//! native engine (tests, quickstart).
+//!
+//! PJRT handles are not `Send` (the xla crate wraps raw pointers in
+//! `Rc`), so the server takes a *factory*: the backend is constructed on
+//! the dispatcher thread itself and never crosses a thread boundary.
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Result};
+
+use crate::formats::Format;
+use crate::nn::{Engine, Network};
+use crate::runtime::LoadedModel;
+use crate::tensor::Tensor;
+
+/// Anything that can run a fixed-size batch (B, H, W, C) -> (B, classes).
+pub trait BatchRunner {
+    fn run(&mut self, x: &Tensor, fmt: &Format) -> Result<Tensor>;
+}
+
+/// Native-engine backend.
+pub struct NativeRunner {
+    pub net: Arc<Network>,
+    engine: Engine,
+}
+
+impl NativeRunner {
+    pub fn new(net: Arc<Network>) -> NativeRunner {
+        NativeRunner { net, engine: Engine::new() }
+    }
+}
+
+impl BatchRunner for NativeRunner {
+    fn run(&mut self, x: &Tensor, fmt: &Format) -> Result<Tensor> {
+        Ok(self.engine.forward(&self.net, x, fmt))
+    }
+}
+
+/// PJRT backend (the AOT artifact executable).  Construct it inside the
+/// server's factory closure — it cannot cross threads.
+pub struct PjrtRunner {
+    pub model: LoadedModel,
+}
+
+impl BatchRunner for PjrtRunner {
+    fn run(&mut self, x: &Tensor, fmt: &Format) -> Result<Tensor> {
+        self.model.run_batch(x, fmt)
+    }
+}
+
+struct Request {
+    /// one sample, H*W*C values
+    pixels: Vec<f32>,
+    reply: Sender<Result<Vec<f32>>>,
+    enqueued: Instant,
+}
+
+/// Per-batch telemetry, folded into [`ServerStats`].
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ServerStats {
+    pub requests: u64,
+    pub batches: u64,
+    pub padded_slots: u64,
+}
+
+/// Handle for submitting requests; dropping it shuts the server down.
+pub struct InferenceServer {
+    tx: Sender<Request>,
+    worker: Option<JoinHandle<ServerStats>>,
+    input_len: usize,
+}
+
+impl InferenceServer {
+    /// Spawn the dispatcher.  `factory` builds the backend **on the
+    /// dispatcher thread**; `batch` is the fixed execution batch size.
+    pub fn spawn<R, F>(
+        net: Arc<Network>,
+        batch: usize,
+        fmt: Format,
+        max_wait: Duration,
+        factory: F,
+    ) -> InferenceServer
+    where
+        R: BatchRunner,
+        F: FnOnce() -> Result<R> + Send + 'static,
+    {
+        let (tx, rx): (Sender<Request>, Receiver<Request>) = channel();
+        let [h, w, c] = net.input;
+        let input_len = h * w * c;
+        let classes = net.classes;
+
+        let worker = std::thread::spawn(move || -> ServerStats {
+            let mut stats = ServerStats::default();
+            let mut runner = match factory() {
+                Ok(r) => r,
+                Err(e) => {
+                    // fail every request with the construction error
+                    while let Ok(r) = rx.recv() {
+                        let _ = r.reply.send(Err(anyhow!("backend init failed: {e}")));
+                    }
+                    return stats;
+                }
+            };
+            let mut queue: Vec<Request> = Vec::with_capacity(batch);
+            loop {
+                if queue.is_empty() {
+                    match rx.recv() {
+                        Ok(r) => queue.push(r),
+                        Err(_) => break, // all senders gone: shut down
+                    }
+                }
+                // drain whatever already queued up while the previous
+                // batch was executing (closed-loop clients resubmit
+                // during compute, so the backlog is usually here) ...
+                while queue.len() < batch {
+                    match rx.try_recv() {
+                        Ok(r) => queue.push(r),
+                        Err(_) => break,
+                    }
+                }
+                // ... then accumulate until full or the oldest request
+                // exceeds its batching window
+                while queue.len() < batch {
+                    let age = queue[0].enqueued.elapsed();
+                    if age >= max_wait {
+                        break;
+                    }
+                    match rx.recv_timeout(max_wait - age) {
+                        Ok(r) => queue.push(r),
+                        Err(_) => break,
+                    }
+                }
+
+                let live = queue.len();
+                let mut xdata = Vec::with_capacity(batch * input_len);
+                for r in &queue {
+                    xdata.extend_from_slice(&r.pixels);
+                }
+                xdata.resize(batch * input_len, 0.0); // pad dead slots
+                stats.requests += live as u64;
+                stats.batches += 1;
+                stats.padded_slots += (batch - live) as u64;
+
+                let x = match Tensor::new(vec![batch, h, w, c], xdata) {
+                    Ok(t) => t,
+                    Err(e) => {
+                        let msg = format!("{e}");
+                        for r in queue.drain(..) {
+                            let _ = r.reply.send(Err(anyhow!("bad batch: {msg}")));
+                        }
+                        continue;
+                    }
+                };
+
+                match runner.run(&x, &fmt) {
+                    Ok(out) => {
+                        for (i, r) in queue.drain(..).enumerate() {
+                            let row = out.data()[i * classes..(i + 1) * classes].to_vec();
+                            let _ = r.reply.send(Ok(row));
+                        }
+                    }
+                    Err(e) => {
+                        let msg = format!("{e}");
+                        for r in queue.drain(..) {
+                            let _ = r.reply.send(Err(anyhow!("batch failed: {msg}")));
+                        }
+                    }
+                }
+            }
+            stats
+        });
+
+        InferenceServer { tx, worker: Some(worker), input_len }
+    }
+
+    /// Convenience: native-engine server.
+    pub fn native(net: Arc<Network>, batch: usize, fmt: Format, max_wait: Duration) -> InferenceServer {
+        let net2 = net.clone();
+        Self::spawn(net, batch, fmt, max_wait, move || Ok(NativeRunner::new(net2)))
+    }
+
+    /// Submit one sample; blocks until its logits come back.
+    pub fn infer(&self, pixels: Vec<f32>) -> Result<Vec<f32>> {
+        self.infer_async(pixels)?
+            .recv()
+            .map_err(|_| anyhow!("server dropped the request"))?
+    }
+
+    /// Async-style submit: returns a receiver for the logits.
+    pub fn infer_async(&self, pixels: Vec<f32>) -> Result<Receiver<Result<Vec<f32>>>> {
+        if pixels.len() != self.input_len {
+            anyhow::bail!("expected {} pixels, got {}", self.input_len, pixels.len());
+        }
+        let (rtx, rrx) = channel();
+        self.tx
+            .send(Request { pixels, reply: rtx, enqueued: Instant::now() })
+            .map_err(|_| anyhow!("server is down"))?;
+        Ok(rrx)
+    }
+
+    /// Shut down and return the dispatcher's telemetry.
+    pub fn shutdown(mut self) -> ServerStats {
+        let (dead_tx, _) = channel();
+        self.tx = dead_tx;
+        self.worker
+            .take()
+            .map(|h| h.join().unwrap_or_default())
+            .unwrap_or_default()
+    }
+}
+
+impl Drop for InferenceServer {
+    fn drop(&mut self) {
+        let (dead_tx, _) = channel();
+        self.tx = dead_tx;
+        if let Some(h) = self.worker.take() {
+            let _ = h.join();
+        }
+    }
+}

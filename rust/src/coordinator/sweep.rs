@@ -1,0 +1,109 @@
+//! The parallel sweep coordinator.
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::coordinator::cache::{CachedAccuracy, ResultCache};
+use crate::coordinator::pool::{default_workers, run_indexed};
+use crate::eval::metrics::topk_accuracy;
+use crate::eval::sweep::{forward_eval, ConfigResult, EvalOptions};
+use crate::formats::Format;
+use crate::hw;
+use crate::nn::{Engine, Network, Zoo};
+
+/// Parallel sweep of `formats` over one network, with caching.
+pub fn sweep_formats(
+    net: &Arc<Network>,
+    formats: &[Format],
+    opts: &EvalOptions,
+    workers: usize,
+    cache: &ResultCache,
+) -> Vec<ConfigResult> {
+    let samples = opts.samples.min(net.eval_len());
+
+    // baseline accuracy on the identical subset (cached like any config)
+    let baseline = cached_accuracy(net, &Format::SINGLE, opts, cache, 1.0).accuracy;
+
+    let jobs: Vec<Format> = formats.to_vec();
+    let results = run_indexed(
+        &jobs,
+        workers,
+        Engine::new,
+        |engine, fmt| -> (Format, CachedAccuracy) {
+            if let Some(hit) = cache.get(&net.name, &fmt.id(), samples) {
+                return (*fmt, hit);
+            }
+            let (logits, labels) = forward_eval(engine, net, fmt, opts);
+            let acc = topk_accuracy(&logits, &labels, net.classes, net.topk);
+            let na = if baseline > 0.0 { acc / baseline } else { 0.0 };
+            let v = CachedAccuracy { accuracy: acc, normalized_accuracy: na };
+            cache.put(&net.name, &fmt.id(), samples, v);
+            (*fmt, v)
+        },
+    );
+
+    results
+        .into_iter()
+        .map(|(fmt, v)| {
+            let eff = hw::speedup::efficiency(&fmt);
+            ConfigResult {
+                format: fmt,
+                accuracy: v.accuracy,
+                normalized_accuracy: v.normalized_accuracy,
+                speedup: eff.speedup,
+                energy_savings: eff.energy_savings,
+            }
+        })
+        .collect()
+}
+
+fn cached_accuracy(
+    net: &Arc<Network>,
+    fmt: &Format,
+    opts: &EvalOptions,
+    cache: &ResultCache,
+    na: f64,
+) -> CachedAccuracy {
+    let samples = opts.samples.min(net.eval_len());
+    if let Some(hit) = cache.get(&net.name, &fmt.id(), samples) {
+        return hit;
+    }
+    let mut engine = Engine::new();
+    let (logits, labels) = forward_eval(&mut engine, net, fmt, opts);
+    let acc = topk_accuracy(&logits, &labels, net.classes, net.topk);
+    let v = CachedAccuracy { accuracy: acc, normalized_accuracy: na };
+    cache.put(&net.name, &fmt.id(), samples, v);
+    v
+}
+
+/// High-level façade over a zoo: owns the cache and worker settings.
+pub struct Coordinator {
+    pub zoo: Zoo,
+    pub workers: usize,
+    pub cache: ResultCache,
+}
+
+impl Coordinator {
+    pub fn new(zoo: Zoo, cache: ResultCache) -> Coordinator {
+        Coordinator { zoo, workers: default_workers(), cache }
+    }
+
+    pub fn with_workers(mut self, workers: usize) -> Coordinator {
+        self.workers = workers.max(1);
+        self
+    }
+
+    /// Sweep one network across `formats`.
+    pub fn sweep(
+        &self,
+        net_name: &str,
+        formats: &[Format],
+        opts: &EvalOptions,
+    ) -> Result<Vec<ConfigResult>> {
+        let net = self.zoo.network(net_name)?;
+        let out = sweep_formats(&net, formats, opts, self.workers, &self.cache);
+        self.cache.flush()?;
+        Ok(out)
+    }
+}

@@ -1,0 +1,76 @@
+//! Classification metrics.
+//!
+//! Tie handling is normative and matches `python/compile/train.py`'s
+//! `topk_accuracy` (numpy stable argsort of the negated logits): among
+//! equal logits the *lower class index* ranks first.
+
+/// Number of samples whose label is within the top-k logits.
+pub fn topk_hits(logits: &[f32], labels: &[i32], classes: usize, k: usize) -> usize {
+    assert_eq!(logits.len(), labels.len() * classes);
+    let mut hits = 0;
+    let mut idx: Vec<usize> = Vec::with_capacity(classes);
+    for (s, &label) in labels.iter().enumerate() {
+        let row = &logits[s * classes..(s + 1) * classes];
+        idx.clear();
+        idx.extend(0..classes);
+        // descending by value, ascending by index for ties (stable sort
+        // over an already-ascending index list)
+        idx.sort_by(|&a, &b| row[b].partial_cmp(&row[a]).unwrap_or(std::cmp::Ordering::Equal));
+        if idx[..k.min(classes)].contains(&(label as usize)) {
+            hits += 1;
+        }
+    }
+    hits
+}
+
+/// Top-k accuracy in [0, 1].
+pub fn topk_accuracy(logits: &[f32], labels: &[i32], classes: usize, k: usize) -> f64 {
+    if labels.is_empty() {
+        return 0.0;
+    }
+    topk_hits(logits, labels, classes, k) as f64 / labels.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn top1_basic() {
+        let logits = [0.1f32, 0.9, 0.0, /**/ 0.8, 0.1, 0.1];
+        assert_eq!(topk_accuracy(&logits, &[1, 0], 3, 1), 1.0);
+        assert_eq!(topk_accuracy(&logits, &[0, 0], 3, 1), 0.5);
+    }
+
+    #[test]
+    fn top5_catches_lower_ranks() {
+        let mut logits = vec![0.0f32; 10];
+        for (i, v) in logits.iter_mut().enumerate() {
+            *v = -(i as f32); // class 0 best, 9 worst
+        }
+        assert_eq!(topk_accuracy(&logits, &[4], 10, 5), 1.0);
+        assert_eq!(topk_accuracy(&logits, &[5], 10, 5), 0.0);
+    }
+
+    #[test]
+    fn ties_break_to_lower_index() {
+        // all-equal logits (e.g. a fully saturated network): top-1 is class 0
+        let logits = vec![7.0f32; 4];
+        assert_eq!(topk_accuracy(&logits, &[0], 4, 1), 1.0);
+        assert_eq!(topk_accuracy(&logits, &[3], 4, 1), 0.0);
+        // top-2 covers classes {0, 1}
+        assert_eq!(topk_accuracy(&logits, &[1], 4, 2), 1.0);
+        assert_eq!(topk_accuracy(&logits, &[2], 4, 2), 0.0);
+    }
+
+    #[test]
+    fn k_larger_than_classes_is_always_hit() {
+        let logits = vec![1.0f32, 2.0];
+        assert_eq!(topk_accuracy(&logits, &[0], 2, 5), 1.0);
+    }
+
+    #[test]
+    fn empty_is_zero() {
+        assert_eq!(topk_accuracy(&[], &[], 3, 1), 0.0);
+    }
+}

@@ -1,0 +1,7 @@
+//! Accuracy metrics and the design-space evaluation driver (§3.1, §4.2).
+
+pub mod metrics;
+pub mod sweep;
+
+pub use metrics::{topk_accuracy, topk_hits};
+pub use sweep::{accuracy, eval_config, sweep_design_space, ConfigResult, EvalOptions};

@@ -1,0 +1,127 @@
+//! Design-space evaluation: run a network under one or many customized
+//! precision configurations and measure accuracy + last-layer activations.
+//!
+//! This is the sequential core; [`crate::coordinator`] parallelizes it
+//! across worker threads and caches results.
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::eval::metrics::topk_accuracy;
+use crate::formats::Format;
+use crate::hw;
+use crate::nn::{Engine, Network};
+use crate::tensor::Tensor;
+
+/// Evaluation options shared by sweeps and the search.
+#[derive(Clone, Copy, Debug)]
+pub struct EvalOptions {
+    /// number of eval samples (clamped to the eval set size)
+    pub samples: usize,
+    /// batch size for the native engine
+    pub batch: usize,
+}
+
+impl Default for EvalOptions {
+    fn default() -> Self {
+        EvalOptions { samples: 128, batch: 32 }
+    }
+}
+
+/// Result of evaluating one (network, format) configuration.
+#[derive(Clone, Debug)]
+pub struct ConfigResult {
+    pub format: Format,
+    /// top-k accuracy on the evaluated subset
+    pub accuracy: f64,
+    /// accuracy normalized to the exact baseline on the same subset
+    pub normalized_accuracy: f64,
+    /// hardware speedup over the SP-float baseline
+    pub speedup: f64,
+    /// hardware energy savings over the SP-float baseline
+    pub energy_savings: f64,
+}
+
+/// Forward the first `opts.samples` eval inputs; returns (logits, labels).
+pub fn forward_eval(
+    engine: &mut Engine,
+    net: &Network,
+    fmt: &Format,
+    opts: &EvalOptions,
+) -> (Vec<f32>, Vec<i32>) {
+    let n = opts.samples.min(net.eval_len()).max(1);
+    let classes = net.classes;
+    let mut logits = Vec::with_capacity(n * classes);
+    let mut lo = 0;
+    while lo < n {
+        let hi = (lo + opts.batch).min(n);
+        let xb = net.eval_x.slice_rows(lo, hi);
+        let out = engine.forward(net, &xb, fmt);
+        logits.extend_from_slice(out.data());
+        lo = hi;
+    }
+    (logits, net.eval_y[..n].to_vec())
+}
+
+/// Forward specific eval indices (the search's 10-input probe, §3.3).
+pub fn forward_indices(
+    engine: &mut Engine,
+    net: &Network,
+    fmt: &Format,
+    indices: &[usize],
+) -> Vec<f32> {
+    let [h, w, c] = net.input;
+    let px = h * w * c;
+    let mut xdata = Vec::with_capacity(indices.len() * px);
+    for &i in indices {
+        xdata.extend_from_slice(&net.eval_x.data()[i * px..(i + 1) * px]);
+    }
+    let x = Tensor::new(vec![indices.len(), h, w, c], xdata).unwrap();
+    engine.forward(net, &x, fmt).into_data()
+}
+
+/// Top-k accuracy of one configuration on the eval subset.
+pub fn accuracy(net: &Network, fmt: &Format, samples: usize) -> Result<f64> {
+    let mut engine = Engine::new();
+    let opts = EvalOptions { samples, ..Default::default() };
+    let (logits, labels) = forward_eval(&mut engine, net, fmt, &opts);
+    Ok(topk_accuracy(&logits, &labels, net.classes, net.topk))
+}
+
+/// Evaluate one configuration fully (accuracy + hardware efficiency).
+/// `baseline_acc` is the exact-format accuracy on the *same* subset.
+pub fn eval_config(
+    engine: &mut Engine,
+    net: &Network,
+    fmt: &Format,
+    baseline_acc: f64,
+    opts: &EvalOptions,
+) -> ConfigResult {
+    let (logits, labels) = forward_eval(engine, net, fmt, opts);
+    let acc = topk_accuracy(&logits, &labels, net.classes, net.topk);
+    let eff = hw::speedup::efficiency(fmt);
+    ConfigResult {
+        format: *fmt,
+        accuracy: acc,
+        normalized_accuracy: if baseline_acc > 0.0 { acc / baseline_acc } else { 0.0 },
+        speedup: eff.speedup,
+        energy_savings: eff.energy_savings,
+    }
+}
+
+/// Sequentially sweep a set of formats (the coordinator parallelizes
+/// this; sequential version kept for tests and small runs).
+pub fn sweep_design_space(
+    net: &Arc<Network>,
+    formats: &[Format],
+    opts: &EvalOptions,
+) -> Vec<ConfigResult> {
+    let mut engine = Engine::new();
+    let (logits, labels) = forward_eval(&mut engine, net, &Format::SINGLE, opts);
+    let baseline = topk_accuracy(&logits, &labels, net.classes, net.topk);
+    formats
+        .iter()
+        .map(|f| eval_config(&mut engine, net, f, baseline, opts))
+        .collect()
+}

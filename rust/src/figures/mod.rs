@@ -1,0 +1,520 @@
+//! Regeneration of every figure in the paper's evaluation (Figs 4-11).
+//!
+//! Each `figN` function computes the same data series the paper plots
+//! and returns it as a TSV table (`Table`): headers + rows.  The CLI
+//! (`repro figure <id>`) prints them and `repro figures` writes all of
+//! them under `results/`.  EXPERIMENTS.md records the paper-vs-measured
+//! comparison for each.
+
+use std::path::Path;
+use std::sync::Arc;
+
+use anyhow::{anyhow, Result};
+
+use crate::coordinator::Coordinator;
+use crate::eval::sweep::EvalOptions;
+use crate::eval::ConfigResult;
+use crate::formats::{self, Format};
+use crate::hw;
+use crate::nn::{Engine, Network};
+use crate::numerics::trace::{trace_accumulation, trace_exact};
+use crate::search::{
+    collect_model_points_cached, predictions_from_r2s, probe_r2s, select_candidates,
+    AccuracyModel,
+};
+
+/// Memo of probe R²s per network (model-independent, so fig10 and
+/// fig11 share one probe pass per network over the full design space).
+pub type ProbeMemo = std::collections::BTreeMap<String, Vec<(Format, f64)>>;
+
+fn memo_probe_r2s<'a>(
+    memo: &'a mut ProbeMemo,
+    net: &Arc<Network>,
+    seed: u64,
+) -> &'a [(Format, f64)] {
+    memo.entry(net.name.clone())
+        .or_insert_with(|| probe_r2s(net, &formats::design_space(1), seed))
+}
+
+/// A printable/storable data table.
+#[derive(Clone, Debug)]
+pub struct Table {
+    pub name: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(name: &str, headers: &[&str]) -> Table {
+        Table {
+            name: name.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn push(&mut self, row: Vec<String>) {
+        assert_eq!(row.len(), self.headers.len(), "row arity mismatch in {}", self.name);
+        self.rows.push(row);
+    }
+
+    pub fn to_tsv(&self) -> String {
+        let mut s = String::new();
+        s.push_str(&self.headers.join("\t"));
+        s.push('\n');
+        for r in &self.rows {
+            s.push_str(&r.join("\t"));
+            s.push('\n');
+        }
+        s
+    }
+
+    pub fn write_to(&self, dir: &Path) -> Result<std::path::PathBuf> {
+        std::fs::create_dir_all(dir)?;
+        let path = dir.join(format!("{}.tsv", self.name));
+        std::fs::write(&path, self.to_tsv())?;
+        Ok(path)
+    }
+}
+
+fn f(v: f64) -> String {
+    format!("{v:.6}")
+}
+
+// ---------------------------------------------------------------------
+// Fig 4: MAC delay & area vs mantissa width (hardware model only)
+
+pub fn fig4() -> Table {
+    let mut t = Table::new("fig4_mac_delay_area", &["mantissa_bits", "delay_norm", "area_norm"]);
+    for m in 1..=23u32 {
+        let fmt = Format::float(m, 8);
+        t.push(vec![m.to_string(), f(hw::delay(&fmt)), f(hw::area(&fmt))]);
+    }
+    t
+}
+
+// ---------------------------------------------------------------------
+// Fig 5: the fixed-area speedup composition (frequency x parallelism)
+
+pub fn fig5() -> Table {
+    let mut t = Table::new(
+        "fig5_speedup_composition",
+        &["format", "total_bits", "delay_norm", "area_norm", "freq_gain", "parallel_gain", "speedup"],
+    );
+    for fmt in [
+        Format::SINGLE,
+        Format::float(16, 8),
+        Format::float(10, 6),
+        Format::float(7, 6),
+        Format::float(4, 5),
+        Format::fixed(16, 15),
+        Format::fixed(8, 8),
+        Format::fixed(4, 4),
+    ] {
+        let c = hw::mac::cost(&fmt);
+        t.push(vec![
+            fmt.id(),
+            fmt.total_bits().to_string(),
+            f(c.delay),
+            f(c.area),
+            f(1.0 / c.delay),
+            f(1.0 / c.area),
+            f(hw::speedup(&fmt)),
+        ]);
+    }
+    t
+}
+
+// ---------------------------------------------------------------------
+// Fig 6: accuracy vs speedup scatter per network (the core sweep)
+
+pub fn fig6(coord: &Coordinator, net_name: &str, opts: &EvalOptions, stride: usize) -> Result<Table> {
+    let space = formats::design_space(stride);
+    let results = coord.sweep(net_name, &space, opts)?;
+    let mut t = Table::new(
+        &format!("fig6_design_space_{net_name}"),
+        &["format", "kind", "total_bits", "speedup", "accuracy", "normalized_accuracy"],
+    );
+    for r in &results {
+        t.push(vec![
+            r.format.id(),
+            if r.format.is_float() { "float".into() } else { "fixed".into() },
+            r.format.total_bits().to_string(),
+            f(r.speedup),
+            f(r.accuracy),
+            f(r.normalized_accuracy),
+        ]);
+    }
+    Ok(t)
+}
+
+// ---------------------------------------------------------------------
+// Fig 7: speedup & energy heatmaps over bit allocations, with the
+// <1%-loss region marked for alexnet-mini
+
+pub fn fig7(coord: &Coordinator, net_name: &str, opts: &EvalOptions) -> Result<Table> {
+    let space = formats::design_space(1);
+    let results = coord.sweep(net_name, &space, opts)?;
+    let mut t = Table::new(
+        &format!("fig7_heatmap_{net_name}"),
+        &["kind", "x_bits", "y_bits", "speedup", "energy_savings", "acceptable"],
+    );
+    for r in &results {
+        let (kind, x, y) = match r.format {
+            Format::Float { mantissa, exponent } => ("float", mantissa, exponent),
+            Format::Fixed { int_bits, frac_bits } => ("fixed", int_bits, frac_bits),
+        };
+        t.push(vec![
+            kind.to_string(),
+            x.to_string(),
+            y.to_string(),
+            f(r.speedup),
+            f(r.energy_savings),
+            (r.normalized_accuracy >= 0.99).to_string(),
+        ]);
+    }
+    Ok(t)
+}
+
+// ---------------------------------------------------------------------
+// Fig 8: serialized accumulation of one neuron under several formats
+
+/// The formats the paper plots in Fig 8, adapted to this testbed's
+/// dynamic range.  Two adaptations (DESIGN.md §1): (a) FL m2/e14 is out
+/// of the f32 carrier's exponent range — FL m2 e8 preserves the
+/// illustrated phenomenon (excessive rounding once the sum is large);
+/// (b) the paper's AlexNet neuron accumulates into the hundreds, where
+/// X(8,8) saturates at 255 — our mini-net sums peak at a few units, so
+/// the "radix point too high" saturation case is X(1,14) (16 bits like
+/// the paper's, saturating at 2.0), keeping the same story at our scale.
+pub fn fig8_formats() -> Vec<Format> {
+    vec![
+        Format::fixed(8, 8),   // FI 16-bit, radix centered: tracks well here
+        Format::fixed(1, 14),  // FI 16-bit, saturates mid-chain (paper's green line)
+        Format::float(10, 4),  // FL m10 e4
+        Format::float(2, 8),   // FL m2: excessive rounding (paper: m2 e14)
+        Format::float(8, 6),   // FL m8 e6: the accurate/fast pick
+    ]
+}
+
+/// Extract one neuron's MAC chain: the im2col row feeding the first
+/// conv-layer-with-max-chain of `net` at the center output position of
+/// eval input `sample`, paired with the weight column of out-channel 0.
+pub fn neuron_chain(net: &Arc<Network>, sample: usize) -> Result<(Vec<f32>, Vec<f32>)> {
+    // find the deepest conv layer (paper uses AlexNet's third conv)
+    let conv_idx = net
+        .layers
+        .iter()
+        .enumerate()
+        .filter(|(_, l)| matches!(l, crate::nn::Layer::Conv { .. }))
+        .map(|(i, _)| i)
+        .next_back()
+        .ok_or_else(|| anyhow!("{} has no conv layer", net.name))?;
+    let crate::nn::Layer::Conv { name, kh, kw, in_ch, out_ch, stride, pad } =
+        net.layers[conv_idx].clone()
+    else {
+        unreachable!()
+    };
+
+    // input activations of that conv under the exact format
+    let mut engine = Engine::new();
+    let x = net.eval_x.slice_rows(sample, sample + 1);
+    let act = engine.forward_prefix(net, &x, &Format::SINGLE, conv_idx);
+    let shape = act.shape().to_vec();
+    let (h, w, c) = (shape[1], shape[2], shape[3]);
+    assert_eq!(c, in_ch);
+
+    // im2col row at the center output position
+    let oy = ((h + 2 * pad - kh) / stride + 1) / 2;
+    let ox = ((w + 2 * pad - kw) / stride + 1) / 2;
+    let mut inputs = Vec::with_capacity(kh * kw * c);
+    for ki in 0..kh {
+        for kj in 0..kw {
+            let iy = (oy * stride + ki) as isize - pad as isize;
+            let ix = (ox * stride + kj) as isize - pad as isize;
+            for ci in 0..c {
+                let v = if iy >= 0 && (iy as usize) < h && ix >= 0 && (ix as usize) < w {
+                    act.data()[((iy as usize * w) + ix as usize) * c + ci]
+                } else {
+                    0.0
+                };
+                inputs.push(v);
+            }
+        }
+    }
+
+    // weight column for out-channel 0: w[kh, kw, cin, cout] row-major
+    let wt = net.weight(&format!("{name}.w"));
+    let mut weights = Vec::with_capacity(kh * kw * c);
+    for i in 0..kh * kw * c {
+        weights.push(wt.data()[i * out_ch]);
+    }
+    Ok((weights, inputs))
+}
+
+pub fn fig8(net: &Arc<Network>, sample: usize) -> Result<Table> {
+    let (weights, inputs) = neuron_chain(net, sample)?;
+    let fmts = fig8_formats();
+    let mut headers: Vec<String> = vec!["step".into(), "exact".into()];
+    headers.extend(fmts.iter().map(|f| f.id()));
+    let mut t = Table {
+        name: format!("fig8_accumulation_{}", net.name),
+        headers,
+        rows: Vec::new(),
+    };
+    let exact = trace_exact(&weights, &inputs);
+    let traces: Vec<_> = fmts
+        .iter()
+        .map(|fm| trace_accumulation(&weights, &inputs, fm))
+        .collect();
+    for step in 0..exact.len() {
+        let mut row = vec![step.to_string(), f(exact[step] as f64)];
+        row.extend(traces.iter().map(|tr| f(tr.running[step] as f64)));
+        t.rows.push(row);
+    }
+    Ok(t)
+}
+
+// ---------------------------------------------------------------------
+// Fig 9: the linear correlation-accuracy model
+
+/// The paper builds the Fig 9 model from AlexNet + CIFARNET + LeNet-5.
+pub const MODEL_NETS: [&str; 3] = ["alexnet-mini", "cifarnet", "lenet5"];
+
+pub fn fig9(coord: &Coordinator, opts: &EvalOptions, seed: u64) -> Result<(Table, AccuracyModel)> {
+    let mut points = Vec::new();
+    let mut t = Table::new(
+        "fig9_correlation_model",
+        &["network", "format", "r2", "normalized_accuracy"],
+    );
+    let space = formats::design_space(1);
+    for name in MODEL_NETS {
+        let net = coord.zoo.network(name)?;
+        for (fmt, p) in
+            collect_model_points_cached(&net, &space, opts, seed, Some(&coord.cache))
+        {
+            t.push(vec![name.to_string(), fmt.id(), f(p.r2), f(p.normalized_accuracy)]);
+            points.push(p);
+        }
+    }
+    coord.cache.flush()?;
+    let model = AccuracyModel::fit(&points);
+    Ok((t, model))
+}
+
+// ---------------------------------------------------------------------
+// Fig 10: search validation (exhaustive vs model + N samples)
+
+pub fn fig10(
+    coord: &Coordinator,
+    opts: &EvalOptions,
+    targets: &[f64],
+    seed: u64,
+    probes: &mut ProbeMemo,
+) -> Result<Table> {
+    let mut t = Table::new(
+        "fig10_search_validation",
+        &["network", "kind", "target", "method", "chosen", "speedup", "measured_norm_acc", "sample_forwards"],
+    );
+    for net_name in coord.zoo.names().iter().map(|s| s.to_string()).collect::<Vec<_>>() {
+        let net = coord.zoo.network(&net_name)?;
+        let samples = opts.samples.min(net.eval_len());
+        // cross-validated model: fit on the OTHER model networks (§4.4)
+        let model = cross_validated_model(coord, &net_name, opts, seed)?;
+        let all_r2s: Vec<(Format, f64)> = memo_probe_r2s(probes, &net, seed).to_vec();
+        for kind in ["float", "fixed"] {
+            let r2s: Vec<(Format, f64)> = all_r2s
+                .iter()
+                .copied()
+                .filter(|(fm, _)| fm.is_float() == (kind == "float"))
+                .collect();
+            let space: Vec<Format> = r2s.iter().map(|(fm, _)| *fm).collect();
+            // one memoized probe pass + one (cached) accuracy table per (net, kind)
+            let cands = predictions_from_r2s(&r2s, &model);
+            let table = coord.sweep(&net_name, &space, opts)?;
+            let na_of = |fm: &Format| -> f64 {
+                table
+                    .iter()
+                    .find(|r| r.format == *fm)
+                    .map(|r| r.normalized_accuracy)
+                    .unwrap_or(0.0)
+            };
+            let probe_cost = (space.len() + 1) * crate::search::PROBE_INPUTS;
+
+            for &target in targets {
+                // exhaustive: fastest config whose measured na clears
+                let best = table
+                    .iter()
+                    .filter(|r| r.normalized_accuracy >= target)
+                    .max_by(|a, b| a.speedup.partial_cmp(&b.speedup).unwrap());
+                t.push(vec![
+                    net_name.clone(),
+                    kind.into(),
+                    format!("{target}"),
+                    "exhaustive".into(),
+                    best.map(|r| r.format.id()).unwrap_or_else(|| "-".into()),
+                    f(best.map(|r| r.speedup).unwrap_or(0.0)),
+                    f(best.map(|r| r.normalized_accuracy).unwrap_or(0.0)),
+                    ((space.len() + 1) * samples).to_string(),
+                ]);
+                // model + N refinement evaluations
+                for refine in [0usize, 1, 2] {
+                    let mut evals = 0usize;
+                    let sel = select_candidates(&cands, target, refine, |fm| {
+                        evals += 1;
+                        na_of(fm)
+                    });
+                    let (chosen, na) = match sel {
+                        Some((idx, _, _)) => {
+                            let c = cands[idx].0;
+                            (Some(c), na_of(&c))
+                        }
+                        None => (None, 0.0),
+                    };
+                    t.push(vec![
+                        net_name.clone(),
+                        kind.into(),
+                        format!("{target}"),
+                        format!("model+{refine}"),
+                        chosen.map(|c| c.id()).unwrap_or_else(|| "-".into()),
+                        f(chosen.map(|c| hw::speedup(&c)).unwrap_or(0.0)),
+                        f(na),
+                        (probe_cost + (evals + 1) * samples).to_string(),
+                    ]);
+                }
+            }
+        }
+    }
+    coord.cache.flush()?;
+    Ok(t)
+}
+
+/// Fit the accuracy model on the Fig 9 reference networks, excluding
+/// `exclude` (the paper's cross-validation protocol).
+pub fn cross_validated_model(
+    coord: &Coordinator,
+    exclude: &str,
+    opts: &EvalOptions,
+    seed: u64,
+) -> Result<AccuracyModel> {
+    let space = formats::design_space(1);
+    let mut points = Vec::new();
+    for name in MODEL_NETS.iter().filter(|n| **n != exclude) {
+        let net = coord.zoo.network(name)?;
+        points.extend(
+            collect_model_points_cached(&net, &space, opts, seed, Some(&coord.cache))
+                .into_iter()
+                .map(|(_, p)| p),
+        );
+    }
+    Ok(AccuracyModel::fit(&points))
+}
+
+// ---------------------------------------------------------------------
+// Fig 11: final speedups at 99% target with 2 refinement samples
+
+pub fn fig11(
+    coord: &Coordinator,
+    opts: &EvalOptions,
+    seed: u64,
+    probes: &mut ProbeMemo,
+) -> Result<Table> {
+    let mut t = Table::new(
+        "fig11_final_speedup",
+        &["network", "params", "chosen", "speedup", "measured_norm_acc"],
+    );
+    let mut speedups = Vec::new();
+    for net in coord.zoo.by_size_desc() {
+        let model = cross_validated_model(coord, &net.name, opts, seed)?;
+        let cands = predictions_from_r2s(memo_probe_r2s(probes, &net, seed), &model);
+        // refinement evaluations come from the (cached) accuracy table
+        let table = coord.sweep(&net.name, &formats::design_space(1), opts)?;
+        let na_of = |fm: &Format| -> f64 {
+            table
+                .iter()
+                .find(|r| r.format == *fm)
+                .map(|r| r.normalized_accuracy)
+                .unwrap_or(0.0)
+        };
+        let sel = select_candidates(&cands, 0.99, 2, |fm| na_of(fm));
+        if let Some((idx, _, _)) = sel {
+            let chosen = cands[idx].0;
+            let speedup = hw::speedup(&chosen);
+            speedups.push(speedup);
+            t.push(vec![
+                net.name.clone(),
+                net.n_params.to_string(),
+                chosen.id(),
+                f(speedup),
+                f(na_of(&chosen)),
+            ]);
+        }
+    }
+    let gmean = if speedups.is_empty() {
+        0.0
+    } else {
+        (speedups.iter().map(|s| s.ln()).sum::<f64>() / speedups.len() as f64).exp()
+    };
+    let amean = speedups.iter().sum::<f64>() / speedups.len().max(1) as f64;
+    t.push(vec![
+        "MEAN(arith)".into(),
+        "-".into(),
+        "-".into(),
+        f(amean),
+        "-".into(),
+    ]);
+    t.push(vec!["MEAN(geo)".into(), "-".into(), "-".into(), f(gmean), "-".into()]);
+    Ok(t)
+}
+
+/// Helper for examples: summarize a sweep's Pareto frontier.
+pub fn pareto(results: &[ConfigResult], target_na: f64) -> Option<&ConfigResult> {
+    results
+        .iter()
+        .filter(|r| r.normalized_accuracy >= target_na)
+        .max_by(|a, b| a.speedup.partial_cmp(&b.speedup).unwrap())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig4_is_monotone_and_normalized() {
+        let t = fig4();
+        assert_eq!(t.rows.len(), 23);
+        let last = t.rows.last().unwrap();
+        assert_eq!(last[0], "23");
+        assert!((last[1].parse::<f64>().unwrap() - 1.0).abs() < 1e-9);
+        assert!((last[2].parse::<f64>().unwrap() - 1.0).abs() < 1e-9);
+        let mut prev = 0.0;
+        for r in &t.rows {
+            let d: f64 = r[1].parse().unwrap();
+            assert!(d > prev);
+            prev = d;
+        }
+    }
+
+    #[test]
+    fn fig5_baseline_row_is_unity() {
+        let t = fig5();
+        let base = &t.rows[0];
+        assert_eq!(base[0], Format::SINGLE.id());
+        assert!((base[6].parse::<f64>().unwrap() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn table_tsv_shape() {
+        let mut t = Table::new("x", &["a", "b"]);
+        t.push(vec!["1".into(), "2".into()]);
+        let tsv = t.to_tsv();
+        assert_eq!(tsv, "a\tb\n1\t2\n");
+    }
+
+    #[test]
+    #[should_panic(expected = "row arity")]
+    fn table_rejects_misshapen_rows() {
+        let mut t = Table::new("x", &["a", "b"]);
+        t.push(vec!["1".into()]);
+    }
+}

@@ -1,0 +1,260 @@
+//! The customized-precision design space (paper §2.2).
+//!
+//! A [`Format`] is either a custom float `F(m, e)` (sign + m-bit mantissa
+//! with hidden leading 1 + e-bit exponent, bias `2^(e-1)-1`) or a custom
+//! fixed point `X(l, r)` (sign + l integer bits + r fractional bits,
+//! sign-magnitude, symmetric saturation).  Semantics are normative in
+//! `python/compile/kernels/qformat.py` and mirrored bit-exactly by
+//! [`crate::numerics`].
+//!
+//! [`design_space`] enumerates the grid the paper sweeps (~240 designs,
+//! matching the paper's "hundreds of designs ... 340" scale), and
+//! [`Format::runtime_params`] produces the 4-float descriptor consumed by
+//! the AOT HLO artifacts.
+
+use std::fmt;
+
+use anyhow::{anyhow, bail, Result};
+
+/// Largest finite f32 — the carrier clamp for e=8 float formats
+/// (see qformat.py: the simulated format cannot exceed its carrier).
+pub const F32_MAX: f64 = 3.402_823_466_385_288_6e38;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Format {
+    /// Custom float: mantissa bits (0..=23), exponent bits (1..=8).
+    Float { mantissa: u32, exponent: u32 },
+    /// Custom fixed: integer bits and fractional bits (excluding sign).
+    Fixed { int_bits: u32, frac_bits: u32 },
+}
+
+impl Format {
+    pub fn float(mantissa: u32, exponent: u32) -> Format {
+        assert!(mantissa <= 23, "mantissa bits must be <= 23 (f32 carrier)");
+        assert!((1..=8).contains(&exponent), "exponent bits must be in 1..=8");
+        Format::Float { mantissa, exponent }
+    }
+
+    pub fn fixed(int_bits: u32, frac_bits: u32) -> Format {
+        assert!(int_bits <= 64 && frac_bits <= 64);
+        Format::Fixed { int_bits, frac_bits }
+    }
+
+    /// IEEE-754 single precision (the paper's baseline, 1x speedup).
+    pub const SINGLE: Format = Format::Float { mantissa: 23, exponent: 8 };
+
+    pub fn is_float(&self) -> bool {
+        matches!(self, Format::Float { .. })
+    }
+
+    /// Total storage bits incl. sign.
+    pub fn total_bits(&self) -> u32 {
+        match *self {
+            Format::Float { mantissa, exponent } => 1 + mantissa + exponent,
+            Format::Fixed { int_bits, frac_bits } => 1 + int_bits + frac_bits,
+        }
+    }
+
+    /// Exponent bias `2^(e-1) - 1`.
+    pub fn bias(&self) -> i32 {
+        match *self {
+            Format::Float { exponent, .. } => (1i32 << (exponent - 1)) - 1,
+            _ => 0,
+        }
+    }
+
+    /// Smallest positive normal value (floats; f32-carrier clamped).
+    pub fn min_normal(&self) -> f64 {
+        match *self {
+            Format::Float { .. } => {
+                let emin = -self.bias();
+                2.0f64.powi(emin.max(-126))
+            }
+            Format::Fixed { frac_bits, .. } => 2.0f64.powi(-(frac_bits as i32)),
+        }
+    }
+
+    /// Largest representable magnitude (f32-carrier clamped for floats).
+    pub fn max_value(&self) -> f64 {
+        match *self {
+            Format::Float { mantissa, exponent } => {
+                let emax = (1i32 << exponent) - 1 - self.bias();
+                let v = (2.0 - 2.0f64.powi(-(mantissa as i32))) * 2.0f64.powi(emax);
+                v.min(F32_MAX)
+            }
+            Format::Fixed { int_bits, frac_bits } => {
+                2.0f64.powi(int_bits as i32) - 2.0f64.powi(-(frac_bits as i32))
+            }
+        }
+    }
+
+    /// The runtime `fmt[4]` descriptor fed to the HLO artifacts and the
+    /// native engine (layout documented in qformat.py).
+    pub fn runtime_params(&self) -> [f32; 4] {
+        match *self {
+            Format::Float { mantissa, .. } => [
+                (23 - mantissa) as f32,
+                self.min_normal() as f32,
+                self.max_value() as f32,
+                0.0,
+            ],
+            Format::Fixed { frac_bits, .. } => {
+                let scale = 2.0f64.powi(frac_bits as i32);
+                [scale as f32, (1.0 / scale) as f32, self.max_value() as f32, 0.0]
+            }
+        }
+    }
+
+    /// Stable identifier, also the parse format: `float:m7e6` / `fixed:l8r8`.
+    pub fn id(&self) -> String {
+        match *self {
+            Format::Float { mantissa, exponent } => format!("float:m{mantissa}e{exponent}"),
+            Format::Fixed { int_bits, frac_bits } => format!("fixed:l{int_bits}r{frac_bits}"),
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Format> {
+        let (kind, rest) = s
+            .split_once(':')
+            .ok_or_else(|| anyhow!("format {s:?}: expected kind:params"))?;
+        let grab = |txt: &str, a: char, b: Option<char>| -> Result<(u32, u32)> {
+            let txt = txt
+                .strip_prefix(a)
+                .ok_or_else(|| anyhow!("format {s:?}: expected {a}..."))?;
+            let bpos = match b {
+                Some(bc) => txt
+                    .find(bc)
+                    .ok_or_else(|| anyhow!("format {s:?}: expected ...{bc}..."))?,
+                None => txt.len(),
+            };
+            let first: u32 = txt[..bpos].parse().map_err(|_| anyhow!("bad number in {s:?}"))?;
+            let second: u32 = txt[bpos + 1..].parse().map_err(|_| anyhow!("bad number in {s:?}"))?;
+            Ok((first, second))
+        };
+        match kind {
+            "float" => {
+                let (m, e) = grab(rest, 'm', Some('e'))?;
+                if m > 23 || !(1..=8).contains(&e) {
+                    bail!("format {s:?}: out of range (m<=23, 1<=e<=8)");
+                }
+                Ok(Format::float(m, e))
+            }
+            "fixed" => {
+                let (l, r) = grab(rest, 'l', Some('r'))?;
+                Ok(Format::fixed(l, r))
+            }
+            _ => bail!("format {s:?}: unknown kind {kind:?}"),
+        }
+    }
+}
+
+impl fmt::Display for Format {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match *self {
+            Format::Float { mantissa, exponent } => write!(f, "FL m{mantissa} e{exponent}"),
+            Format::Fixed { int_bits, frac_bits } => write!(f, "FI l{int_bits} r{frac_bits}"),
+        }
+    }
+}
+
+/// The sweep grid: every float `m in 1..=20 x e in 2..=8` plus every
+/// fixed `l, r in {0, 2, 4, .., 18}` — 240 designs, comparable to the
+/// paper's 340.  `stride` thins the grid uniformly (for quick runs).
+pub fn design_space(stride: usize) -> Vec<Format> {
+    let mut out = Vec::new();
+    for e in 2..=8u32 {
+        for m in 1..=20u32 {
+            out.push(Format::float(m, e));
+        }
+    }
+    for l in (0..=18u32).step_by(2) {
+        for r in (0..=18u32).step_by(2) {
+            out.push(Format::fixed(l, r));
+        }
+    }
+    if stride > 1 {
+        out = out.into_iter().step_by(stride).collect();
+    }
+    out
+}
+
+/// Only the float half of the space (Fig 10 top row).
+pub fn float_space() -> Vec<Format> {
+    design_space(1).into_iter().filter(|f| f.is_float()).collect()
+}
+
+/// Only the fixed half of the space (Fig 10 bottom row).
+pub fn fixed_space() -> Vec<Format> {
+    design_space(1).into_iter().filter(|f| !f.is_float()).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_precision_properties() {
+        let f = Format::SINGLE;
+        assert_eq!(f.total_bits(), 32);
+        assert_eq!(f.bias(), 127);
+        assert_eq!(f.min_normal(), 2.0f64.powi(-126));
+        assert!((f.max_value() - F32_MAX).abs() < 1e30);
+    }
+
+    #[test]
+    fn fixed_16bit_center() {
+        // paper §4.3: 16-bit, radix point centered => saturates near 256
+        let f = Format::fixed(8, 8);
+        assert_eq!(f.total_bits(), 17);
+        assert!((f.max_value() - (256.0 - 1.0 / 256.0)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn runtime_params_float() {
+        let p = Format::float(7, 6).runtime_params();
+        assert_eq!(p[0], 16.0);
+        assert_eq!(p[1] as f64, Format::float(7, 6).min_normal());
+        assert_eq!(p[2] as f64, Format::float(7, 6).max_value() as f32 as f64);
+    }
+
+    #[test]
+    fn runtime_params_fixed() {
+        let p = Format::fixed(4, 4).runtime_params();
+        assert_eq!(p[0], 16.0);
+        assert_eq!(p[1], 1.0 / 16.0);
+        assert_eq!(p[2], 16.0 - 1.0 / 16.0);
+    }
+
+    #[test]
+    fn id_parse_roundtrip() {
+        for f in design_space(1) {
+            assert_eq!(Format::parse(&f.id()).unwrap(), f);
+        }
+    }
+
+    #[test]
+    fn parse_rejects_bad() {
+        assert!(Format::parse("float:m24e8").is_err());
+        assert!(Format::parse("float:m5e0").is_err());
+        assert!(Format::parse("decimal:x1y2").is_err());
+        assert!(Format::parse("float").is_err());
+        assert!(Format::parse("fixed:l2q3").is_err());
+    }
+
+    #[test]
+    fn design_space_size_and_split() {
+        let all = design_space(1);
+        assert_eq!(all.len(), 20 * 7 + 10 * 10);
+        assert_eq!(float_space().len(), 140);
+        assert_eq!(fixed_space().len(), 100);
+        let thin = design_space(4);
+        assert_eq!(thin.len(), all.len().div_ceil(4));
+    }
+
+    #[test]
+    fn e8_carrier_clamp() {
+        let f = Format::float(7, 8);
+        assert!(f.max_value() <= F32_MAX);
+        assert!(f.min_normal() >= 2.0f64.powi(-126));
+    }
+}

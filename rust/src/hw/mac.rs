@@ -1,0 +1,228 @@
+//! Analytic delay/area/power model of a multiply-accumulate unit.
+//!
+//! # Model
+//!
+//! **Float MAC** `F(m, e)` (significand width s = m+1):
+//! * significand multiplier — partial-product array reduced by a
+//!   Wallace/Dadda tree: area ∝ s², delay ∝ log₂(s) CSA levels plus a
+//!   final carry-propagate adder over 2s bits (∝ log₂(2s));
+//! * exponent path — small adders: area ∝ e, delay ∝ log₂(e);
+//! * alignment barrel shifter (mantissa alignment before the add, the
+//!   step the paper calls out in Fig 3): area ∝ s·log₂(s), delay ∝ log₂(s);
+//! * significand adder (width ≈ 2s + guard): delay ∝ log₂(2s+2);
+//! * LZA + normalization shifter: area ∝ s·log₂(s), delay ∝ log₂(s);
+//! * rounding incrementer + flags: constant.
+//!
+//! **Fixed MAC** `X(l, r)` (word width n = 1+l+r): n×n array multiplier
+//! (area ∝ n², delay ∝ log₂ n + log₂ 2n) + 2n-wide saturating
+//! accumulator (area ∝ n, delay: constant saturation mux).
+//!
+//! Power tracks switched capacitance ≈ area (activity factors cancel in
+//! normalization).
+//!
+//! # Calibration
+//!
+//! Constants are fixed by normalizing the IEEE single-precision MAC
+//! (m=23, e=8) to delay = area = power = 1 and checking the paper's
+//! anchors (asserted in tests, tolerances ±25%):
+//! * F(7,6): speedup ≈ 7.2×, energy savings ≈ 3.4×   (paper §4.2)
+//! * F(8,6): speedup ≈ 5.7×, energy savings ≈ 3.0×   (paper §4.2)
+//! * fixed ≥ ~40 bits is *slower* than the SP-float baseline (paper §1
+//!   finding 3 — the GoogLeNet fixed-vs-float argument)
+
+use crate::formats::Format;
+
+/// Relative delay/area/power of one MAC unit (1.0 = IEEE-754 single).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct MacCost {
+    pub delay: f64,
+    pub area: f64,
+    pub power: f64,
+}
+
+// ---- gate-level building blocks (unit: one FO4-ish gate delay / one
+// unit cell of area; absolute units cancel in normalization) ----------
+
+fn log2(x: f64) -> f64 {
+    x.max(1.0).log2()
+}
+
+/// Wallace-tree multiplier of two w-bit operands.
+fn mult_delay(w: f64) -> f64 {
+    // CSA tree depth (3:2 compressors) + final CPA over 2w bits
+    1.0 + 1.5 * log2(w) + 1.0 * log2(2.0 * w)
+}
+
+fn mult_area(w: f64) -> f64 {
+    w * w + 2.0 * w * log2(w) // PP array + reduction wiring/CPA
+}
+
+/// Logarithmic carry-lookahead adder of width w.
+fn add_delay(w: f64) -> f64 {
+    1.0 + log2(w)
+}
+
+fn add_area(w: f64) -> f64 {
+    2.0 * w
+}
+
+/// Barrel shifter over w positions.
+fn shift_delay(w: f64) -> f64 {
+    log2(w)
+}
+
+fn shift_area(w: f64) -> f64 {
+    w * log2(w)
+}
+
+const ROUND_DELAY: f64 = 2.0; // rounding incrementer + sticky logic
+const FLOAT_FIXED_OVERHEAD_AREA: f64 = 48.0; // flags, sign, control
+const SAT_DELAY: f64 = 1.5; // fixed-point saturation mux
+const SAT_AREA_PER_BIT: f64 = 1.0;
+
+fn float_raw(m: u32, e: u32) -> (f64, f64) {
+    let s = (m + 1) as f64; // significand incl. hidden bit
+    let ew = e as f64;
+    // delays along the MAC critical path (Fig 3c): multiply -> align ->
+    // add -> normalize -> round, plus the exponent compare feeding align
+    let delay = mult_delay(s)
+        + shift_delay(s).max(add_delay(ew)) // align vs exponent path overlap
+        + add_delay(2.0 * s + 2.0)
+        + shift_delay(s)
+        + ROUND_DELAY;
+    let area = mult_area(s)
+        + 2.0 * shift_area(s)            // align + normalize shifters
+        + add_area(2.0 * s + 2.0)
+        + 3.0 * add_area(ew)             // exponent add/sub/compare
+        + FLOAT_FIXED_OVERHEAD_AREA;
+    (delay, area)
+}
+
+fn fixed_raw(total_bits: u32) -> (f64, f64) {
+    let n = total_bits as f64;
+    let delay = mult_delay(n) + add_delay(2.0 * n) + SAT_DELAY;
+    let area = mult_area(n) + add_area(2.0 * n) + SAT_AREA_PER_BIT * 2.0 * n;
+    (delay, area)
+}
+
+fn baseline() -> (f64, f64) {
+    float_raw(23, 8)
+}
+
+/// Relative critical-path delay (1.0 = SP float MAC).
+pub fn delay(fmt: &Format) -> f64 {
+    let (base_d, _) = baseline();
+    let d = match *fmt {
+        Format::Float { mantissa, exponent } => float_raw(mantissa, exponent).0,
+        Format::Fixed { .. } => fixed_raw(fmt.total_bits()).0,
+    };
+    d / base_d
+}
+
+/// Relative silicon area (1.0 = SP float MAC).
+pub fn area(fmt: &Format) -> f64 {
+    let (_, base_a) = baseline();
+    let a = match *fmt {
+        Format::Float { mantissa, exponent } => float_raw(mantissa, exponent).1,
+        Format::Fixed { .. } => fixed_raw(fmt.total_bits()).1,
+    };
+    a / base_a
+}
+
+/// Relative power ≈ switched capacitance ≈ area.
+pub fn power(fmt: &Format) -> f64 {
+    area(fmt)
+}
+
+/// All three at once.
+pub fn cost(fmt: &Format) -> MacCost {
+    MacCost {
+        delay: delay(fmt),
+        area: area(fmt),
+        power: power(fmt),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hw::speedup::{energy_savings, speedup};
+
+    #[test]
+    fn baseline_is_unity() {
+        let f = Format::SINGLE;
+        assert!((delay(&f) - 1.0).abs() < 1e-12);
+        assert!((area(&f) - 1.0).abs() < 1e-12);
+        assert!((power(&f) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn monotone_in_mantissa() {
+        // Fig 4: delay and area rise monotonically with mantissa width
+        let mut last_d = 0.0;
+        let mut last_a = 0.0;
+        for m in 1..=23 {
+            let f = Format::float(m, 8);
+            assert!(delay(&f) > last_d, "delay not monotone at m={m}");
+            assert!(area(&f) > last_a, "area not monotone at m={m}");
+            last_d = delay(&f);
+            last_a = area(&f);
+        }
+    }
+
+    #[test]
+    fn paper_anchor_f7e6() {
+        // §4.2: F(7,6) => ~7.2x speedup, ~3.4x energy savings
+        let f = Format::float(7, 6);
+        let s = speedup(&f);
+        let e = energy_savings(&f);
+        assert!((5.4..=9.0).contains(&s), "speedup {s}");
+        assert!((2.5..=4.3).contains(&e), "energy {e}");
+    }
+
+    #[test]
+    fn paper_anchor_f8e6() {
+        // §4.2: F(8,6) => ~5.7x speedup, ~3.0x energy savings
+        let f = Format::float(8, 6);
+        let s = speedup(&f);
+        let e = energy_savings(&f);
+        assert!((4.3..=7.2).contains(&s), "speedup {s}");
+        assert!((2.2..=3.8).contains(&e), "energy {e}");
+        assert!(s < speedup(&Format::float(7, 6)));
+    }
+
+    #[test]
+    fn paper_anchor_wide_fixed_loses_to_sp_float() {
+        // §1 finding 3: fixed-point at >= ~40 bits is more expensive
+        // than the SP float baseline
+        let f40 = Format::fixed(20, 19); // 40 bits
+        assert!(speedup(&f40) < 1.0, "fixed-40 speedup {}", speedup(&f40));
+        let f48 = Format::fixed(24, 23);
+        assert!(speedup(&f48) < speedup(&f40));
+    }
+
+    #[test]
+    fn fixed_beats_float_at_iso_multiplier_width() {
+        // §2.1: "floating-point computation units are substantially
+        // larger, slower, and more complex than integer units" — at the
+        // same significand/word width, the float unit pays for shifters,
+        // exponent logic and rounding that the integer unit does not.
+        for n in [8u32, 12, 16, 24] {
+            let fx = Format::fixed(n / 2, n - 1 - n / 2); // n-bit word
+            let fl = Format::float(n - 1, 5); // (n)-bit significand
+            assert_eq!(fx.total_bits(), n);
+            assert!(
+                delay(&fx) < delay(&fl) && area(&fx) < area(&fl),
+                "fixed should win at word width {n}"
+            );
+        }
+    }
+
+    #[test]
+    fn exponent_bits_cost_little_area() {
+        // mantissa dominates (Fig 4's message)
+        let a6 = area(&Format::float(10, 6));
+        let a8 = area(&Format::float(10, 8));
+        assert!((a8 - a6) / a6 < 0.05);
+    }
+}

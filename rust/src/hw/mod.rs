@@ -1,0 +1,19 @@
+//! Customized-precision MAC hardware model (paper §2.3 / §3.2).
+//!
+//! The paper synthesized each candidate MAC unit with Synopsys Design
+//! Compiler + PrimeTime on a commercial 28 nm process and consumed the
+//! resulting *normalized* delay/area/power trends.  Neither tool nor PDK
+//! is available offline, so [`mac`] provides the standard analytic
+//! gate-level scaling laws (Wallace-tree multiplier, logarithmic carry
+//! lookahead, barrel shifters), calibrated so that the paper's anchor
+//! observations hold — see `mac.rs` for the calibration table.
+//!
+//! [`speedup`] implements Figure 5: with a fixed silicon area budget, a
+//! smaller & faster unit wins twice — higher clock *and* more parallel
+//! replicas — hence the paper's "quadratic improvement" in throughput.
+
+pub mod mac;
+pub mod speedup;
+
+pub use mac::{area, delay, power, MacCost};
+pub use speedup::{energy_savings, speedup, Efficiency};

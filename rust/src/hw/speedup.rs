@@ -1,0 +1,91 @@
+//! Figure 5: speedup & energy at a fixed area budget.
+//!
+//! With DNN-scale parallelism, a MAC that is `1/area` the size fits
+//! `area_base/area` more replicas in the same silicon, and a shorter
+//! critical path clocks `delay_base/delay` faster; total throughput
+//! gain is the product (the paper's "quadratic improvement", §3.2).
+//!
+//! Energy per operation tracks switched capacitance (≈ area), plus a
+//! fixed platform overhead (clock tree, SRAM, control) that narrow
+//! units cannot shrink — calibrated so F(7,6) lands at the paper's
+//! 3.4× energy savings while its speedup is 7.2×.
+
+use crate::formats::Format;
+use crate::hw::mac;
+
+/// Fraction of per-op energy that scales with MAC area; the remainder
+/// is fixed platform overhead.  See module docs.
+pub const ENERGY_AREA_FRACTION: f64 = 0.9;
+
+/// Combined efficiency figures for one format.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Efficiency {
+    pub speedup: f64,
+    pub energy_savings: f64,
+    pub delay: f64,
+    pub area: f64,
+}
+
+/// Throughput gain over the SP-float baseline at equal silicon area:
+/// `(1/delay) * (1/area)`.
+pub fn speedup(fmt: &Format) -> f64 {
+    let c = mac::cost(fmt);
+    (1.0 / c.delay) * (1.0 / c.area)
+}
+
+/// Energy-per-op savings over the SP-float baseline.
+pub fn energy_savings(fmt: &Format) -> f64 {
+    let c = mac::cost(fmt);
+    let rel_energy = ENERGY_AREA_FRACTION * c.power + (1.0 - ENERGY_AREA_FRACTION);
+    1.0 / rel_energy
+}
+
+pub fn efficiency(fmt: &Format) -> Efficiency {
+    let c = mac::cost(fmt);
+    Efficiency {
+        speedup: speedup(fmt),
+        energy_savings: energy_savings(fmt),
+        delay: c.delay,
+        area: c.area,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn baseline_is_one() {
+        assert!((speedup(&Format::SINGLE) - 1.0).abs() < 1e-12);
+        assert!((energy_savings(&Format::SINGLE) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn speedup_is_quadratic_combination() {
+        let f = Format::float(7, 6);
+        let c = mac::cost(&f);
+        assert!((speedup(&f) - 1.0 / (c.delay * c.area)).abs() < 1e-12);
+        // both factors contribute: speedup exceeds either alone
+        assert!(speedup(&f) > 1.0 / c.delay);
+        assert!(speedup(&f) > 1.0 / c.area);
+    }
+
+    #[test]
+    fn narrower_is_never_slower_float() {
+        // within a fixed exponent width, fewer mantissa bits => more speedup
+        let mut last = 0.0;
+        for m in (1..=23).rev() {
+            let s = speedup(&Format::float(m, 6));
+            assert!(s >= last * 0.9999, "m={m}: {s} < {last}");
+            last = s;
+        }
+    }
+
+    #[test]
+    fn energy_savings_saturate() {
+        // fixed platform overhead bounds energy savings at 1/(1-fraction)
+        let tiny = Format::float(1, 2);
+        assert!(energy_savings(&tiny) < 1.0 / (1.0 - ENERGY_AREA_FRACTION));
+        assert!(energy_savings(&tiny) > 1.0);
+    }
+}

@@ -1,0 +1,48 @@
+//! # precis — customized-precision DNN inference
+//!
+//! Reproduction of *“Rethinking Numerical Representations for Deep Neural
+//! Networks”* (Hill et al., 2018) as a three-layer Rust + JAX + Pallas
+//! system.  This crate is Layer 3: everything on the request path.
+//!
+//! * [`formats`]    — the customized-precision design space (§2.2)
+//! * [`numerics`]   — softfloat/softfixed quantizers + MAC chains (§2.2, Fig 8)
+//! * [`hw`]         — MAC delay/area/power model, speedup/energy (§2.3, Figs 4/5/7)
+//! * [`tensor`]     — minimal NDArray + `.prt` container IO
+//! * [`nn`]         — pure-Rust quantized inference engine (the "modified
+//!                    Caffe" substitute; bit-exact vs the Pallas kernel)
+//! * [`runtime`]    — PJRT client: load + execute `artifacts/*.hlo.txt`
+//! * [`coordinator`]— sweep orchestrator: job queue, worker pool, cache
+//! * [`search`]     — the paper's §3.3 contribution: last-layer R² →
+//!                    linear accuracy model → model+N-samples search
+//! * [`eval`]       — accuracy metrics + design-space sweep driver
+//! * [`figures`]    — regenerates every paper figure's data series
+//! * [`util`]       — PRNG, mini-JSON, CLI parsing, timing (offline-build
+//!                    substrates; see DESIGN.md §6)
+//! * [`testing`]    — in-repo property-testing framework
+//! * [`bench_harness`] — in-repo micro-benchmark framework
+//!
+//! Quickstart (after `make artifacts`):
+//!
+//! ```no_run
+//! use precis::{formats::Format, nn::Zoo};
+//!
+//! let zoo = Zoo::load("artifacts").unwrap();
+//! let net = zoo.network("lenet5").unwrap();
+//! let fmt = Format::float(7, 6);
+//! let acc = precis::eval::accuracy(&net, &fmt, 128).unwrap();
+//! println!("lenet5 @ {fmt}: top-1 = {:.3}", acc);
+//! ```
+
+pub mod bench_harness;
+pub mod coordinator;
+pub mod eval;
+pub mod figures;
+pub mod formats;
+pub mod hw;
+pub mod nn;
+pub mod numerics;
+pub mod runtime;
+pub mod search;
+pub mod tensor;
+pub mod testing;
+pub mod util;

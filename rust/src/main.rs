@@ -1,0 +1,241 @@
+//! `repro` — the precis command-line interface.
+//!
+//! Subcommands:
+//!   info                         zoo summary (networks, params, chains)
+//!   eval     --net N --format F  accuracy of one configuration
+//!   sweep    --net N             design-space sweep (Fig 6 data)
+//!   search   --net N             model-driven precision search (§3.3)
+//!   trace    --net N             accumulation trace (Fig 8 data)
+//!   figure   <fig4..fig11>       regenerate one paper figure's series
+//!   figures                      regenerate all figures into --out
+//!
+//! Common flags: --artifacts DIR (default artifacts), --out DIR (default
+//! results), --samples N, --workers W, --seed S, --stride K.
+
+use std::path::PathBuf;
+
+use anyhow::{bail, Context, Result};
+
+use precis::coordinator::cache::ResultCache;
+use precis::coordinator::Coordinator;
+use precis::eval::sweep::EvalOptions;
+use precis::eval::{accuracy, sweep_design_space};
+use precis::figures;
+use precis::formats::{self, Format};
+use precis::nn::Zoo;
+use precis::search::{exhaustive_search, search, SearchSpec};
+use precis::util::cli::Args;
+use precis::util::timer::Timer;
+
+fn main() {
+    let raw: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = run(&raw) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+const USAGE: &str = "usage: repro <info|eval|sweep|search|trace|figure|figures> [flags]
+  repro info
+  repro eval   --net lenet5 --format float:m7e6 [--samples 128] [--backend native|pjrt]
+  repro sweep  --net lenet5 [--samples 128] [--stride 1]
+  repro search --net lenet5 [--target 0.99] [--refine 2] [--kind float|fixed|both]
+  repro trace  --net alexnet-mini [--sample 0]
+  repro figure <fig4|fig5|fig6|fig7|fig8|fig9|fig10|fig11> [--net N]
+  repro figures [--out results]
+common: --artifacts DIR --out DIR --samples N --workers W --seed S";
+
+fn run(raw: &[String]) -> Result<()> {
+    let args = Args::parse(raw, &["quiet"])?;
+    let Some(cmd) = args.positional().first().map(|s| s.as_str()) else {
+        println!("{USAGE}");
+        return Ok(());
+    };
+
+    let artifacts = PathBuf::from(args.get_or("artifacts", "artifacts"));
+    let out_dir = PathBuf::from(args.get_or("out", "results"));
+    let samples = args.get_usize("samples", 128)?;
+    let workers = args.get_usize("workers", 0)?;
+    let seed = args.get_usize("seed", 2018)? as u64;
+    let stride = args.get_usize("stride", 1)?.max(1);
+    let opts = EvalOptions { samples, batch: 32 };
+
+    let load_coord = || -> Result<Coordinator> {
+        let zoo = Zoo::load(&artifacts).context("loading artifacts")?;
+        let cache = ResultCache::open(out_dir.join("cache.json"));
+        let mut c = Coordinator::new(zoo, cache);
+        if workers > 0 {
+            c = c.with_workers(workers);
+        }
+        Ok(c)
+    };
+
+    match cmd {
+        "info" => {
+            let zoo = Zoo::load(&artifacts)?;
+            println!("{:<16} {:>8} {:>10} {:>7} {:>6} {:>10}", "network", "params", "max_chain", "classes", "topk", "exact_acc");
+            for net in zoo.by_size_desc() {
+                println!(
+                    "{:<16} {:>8} {:>10} {:>7} {:>6} {:>10.3}",
+                    net.name, net.n_params, net.max_chain, net.classes, net.topk, net.eval_acc_exact
+                );
+            }
+            println!("\ndesign space: {} formats ({} float, {} fixed)",
+                formats::design_space(1).len(),
+                formats::float_space().len(),
+                formats::fixed_space().len());
+        }
+        "eval" => {
+            let net_name = args.get("net").context("--net required")?;
+            let fmt = Format::parse(args.get("format").context("--format required")?)?;
+            let zoo = Zoo::load(&artifacts)?;
+            let net = zoo.network(net_name)?;
+            let t = Timer::start();
+            let acc = match args.get_or("backend", "native") {
+                "native" => accuracy(&net, &fmt, samples)?,
+                "pjrt" => {
+                    let rt = precis::runtime::Runtime::cpu()?;
+                    let kind = if fmt.is_float() { "float" } else { "fixed" };
+                    let model = rt.load_network(&net, &artifacts, kind, zoo.batch)?;
+                    let (logits, labels) = model.run_eval(samples, &fmt)?;
+                    precis::eval::topk_accuracy(&logits, &labels, net.classes, net.topk)
+                }
+                b => bail!("unknown backend {b:?}"),
+            };
+            println!(
+                "{net_name} @ {fmt}: top-{} = {:.4}  (speedup {:.2}x, energy {:.2}x, {} samples, {:.1}s)",
+                net.topk,
+                acc,
+                precis::hw::speedup(&fmt),
+                precis::hw::energy_savings(&fmt),
+                samples.min(net.eval_len()),
+                t.elapsed_s()
+            );
+        }
+        "sweep" => {
+            let net_name = args.get("net").context("--net required")?;
+            let coord = load_coord()?;
+            let t = Timer::start();
+            let table = figures::fig6(&coord, net_name, &opts, stride)?;
+            print!("{}", table.to_tsv());
+            eprintln!("# sweep of {} configs in {:.1}s", table.rows.len(), t.elapsed_s());
+        }
+        "search" => {
+            let net_name = args.get("net").context("--net required")?;
+            let target = args.get_f64("target", 0.99)?;
+            let refine = args.get_usize("refine", 2)?;
+            let kind = args.get_or("kind", "both");
+            let coord = load_coord()?;
+            let net = coord.zoo.network(net_name)?;
+            let space: Vec<Format> = match kind {
+                "float" => formats::float_space(),
+                "fixed" => formats::fixed_space(),
+                "both" => formats::design_space(1),
+                k => bail!("unknown --kind {k:?}"),
+            };
+            let model = figures::cross_validated_model(&coord, net_name, &opts, seed)?;
+            let spec = SearchSpec { formats: space, target, refine_samples: refine, opts, seed };
+            let t = Timer::start();
+            let out = search(&net, &spec, &model);
+            let (ex, _) = exhaustive_search(&net, &spec);
+            coord.cache.flush()?;
+            println!("model search : {:?} speedup {:.2}x measured_na {:.4} ({} sample-forwards)",
+                out.chosen.map(|c| c.id()), out.speedup, out.measured_norm_acc, out.sample_forwards);
+            println!("exhaustive   : {:?} speedup {:.2}x measured_na {:.4} ({} sample-forwards)",
+                ex.chosen.map(|c| c.id()), ex.speedup, ex.measured_norm_acc, ex.sample_forwards);
+            println!("search-cost reduction: {:.0}x  ({:.1}s total)",
+                ex.sample_forwards as f64 / out.sample_forwards.max(1) as f64, t.elapsed_s());
+        }
+        "trace" => {
+            let net_name = args.get_or("net", "alexnet-mini");
+            let sample = args.get_usize("sample", 0)?;
+            let zoo = Zoo::load(&artifacts)?;
+            let net = zoo.network(net_name)?;
+            let table = figures::fig8(&net, sample)?;
+            print!("{}", table.to_tsv());
+        }
+        "figure" => {
+            let which = args
+                .positional()
+                .get(1)
+                .context("figure id required (fig4..fig11)")?
+                .clone();
+            let table = one_figure(&which, &args, &opts, seed, stride, load_coord)?;
+            print!("{}", table.to_tsv());
+        }
+        "figures" => {
+            let coord = load_coord()?;
+            let t = Timer::start();
+            let mut tables: Vec<figures::Table> = vec![figures::fig4(), figures::fig5()];
+            for name in coord.zoo.names().iter().map(|s| s.to_string()).collect::<Vec<_>>() {
+                eprintln!("# fig6 sweep: {name}");
+                tables.push(figures::fig6(&coord, &name, &opts, stride)?);
+            }
+            eprintln!("# fig7 heatmap");
+            tables.push(figures::fig7(&coord, "alexnet-mini", &opts)?);
+            eprintln!("# fig8 trace");
+            tables.push(figures::fig8(&coord.zoo.network("alexnet-mini")?, 0)?);
+            eprintln!("# fig9 model");
+            let (t9, model) = figures::fig9(&coord, &opts, seed)?;
+            eprintln!("#   fit: na = {:.4} * r2 + {:.4} (r = {:.4}, n = {})",
+                model.a, model.b, model.fit_r, model.n_points);
+            tables.push(t9);
+            eprintln!("# fig10 search validation");
+            let mut probes = figures::ProbeMemo::new();
+            tables.push(figures::fig10(&coord, &opts, &[0.95, 0.99, 0.999], seed, &mut probes)?);
+            eprintln!("# fig11 final speedups");
+            tables.push(figures::fig11(&coord, &opts, seed, &mut probes)?);
+            for table in &tables {
+                let p = table.write_to(&out_dir)?;
+                eprintln!("wrote {}", p.display());
+            }
+            coord.cache.flush()?;
+            eprintln!("# all figures in {:.1}s", t.elapsed_s());
+        }
+        "bench-sweep" => {
+            // hidden: quick sequential sweep timing (perf work)
+            let net_name = args.get("net").context("--net required")?;
+            let zoo = Zoo::load(&artifacts)?;
+            let net = zoo.network(net_name)?;
+            let space = formats::design_space(stride);
+            let t = Timer::start();
+            let res = sweep_design_space(&net, &space, &opts);
+            println!("{} configs in {:.2}s ({:.2} cfg/s)",
+                res.len(), t.elapsed_s(), res.len() as f64 / t.elapsed_s());
+        }
+        other => {
+            bail!("unknown command {other:?}\n{USAGE}");
+        }
+    }
+    Ok(())
+}
+
+fn one_figure(
+    which: &str,
+    args: &Args,
+    opts: &EvalOptions,
+    seed: u64,
+    stride: usize,
+    load_coord: impl Fn() -> Result<Coordinator>,
+) -> Result<figures::Table> {
+    Ok(match which {
+        "fig4" => figures::fig4(),
+        "fig5" => figures::fig5(),
+        "fig6" => {
+            let net = args.get("net").context("--net required for fig6")?;
+            figures::fig6(&load_coord()?, net, opts, stride)?
+        }
+        "fig7" => figures::fig7(&load_coord()?, args.get_or("net", "alexnet-mini"), opts)?,
+        "fig8" => {
+            let coord = load_coord()?;
+            let net = coord.zoo.network(args.get_or("net", "alexnet-mini"))?;
+            figures::fig8(&net, args.get_usize("sample", 0)?)?
+        }
+        "fig9" => figures::fig9(&load_coord()?, opts, seed)?.0,
+        "fig10" => {
+            figures::fig10(&load_coord()?, opts, &[0.95, 0.99, 0.999], seed, &mut figures::ProbeMemo::new())?
+        }
+        "fig11" => figures::fig11(&load_coord()?, opts, seed, &mut figures::ProbeMemo::new())?,
+        other => bail!("unknown figure {other:?} (fig4..fig11)"),
+    })
+}

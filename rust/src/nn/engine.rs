@@ -1,0 +1,525 @@
+//! The forward-pass interpreter (sweep hot path).
+//!
+//! Bit-exactness contract with `python/compile/model.py` (and therefore
+//! with the AOT HLO artifacts):
+//! * activations NHWC, flatten row-major;
+//! * im2col patch index ((ki*kw + kj)*C + c); conv weights (kh,kw,cin,cout)
+//!   row-major are *already* the (K, N) GEMM operand in that indexing;
+//! * quantize input once; per conv/dense: quantize weights & bias, run
+//!   the per-op-rounded MAC chain in increasing-k order starting from a
+//!   zero accumulator, then one rounded bias add;
+//! * relu/maxpool are exact (selection); zero padding;
+//! * global avgpool: serial per-add-rounded accumulation over row-major
+//!   spatial positions, then one rounded multiply by q(1/HW).
+//!
+//! The engine owns scratch buffers so a sweep makes **zero heap
+//! allocations per forward** after warm-up (§Perf L3 target).
+
+use crate::formats::Format;
+use crate::nn::layers::Layer;
+use crate::nn::network::Network;
+use crate::numerics::Quantizer;
+use crate::tensor::Tensor;
+
+/// Reusable forward-pass executor (one per worker thread).
+pub struct Engine {
+    /// ping-pong activation buffers
+    act_a: Vec<f32>,
+    act_b: Vec<f32>,
+    /// im2col patch buffer
+    patches: Vec<f32>,
+    /// quantized-weight staging buffer
+    wq: Vec<f32>,
+    /// per-layer output staging for inception concat
+    branch_out: Vec<f32>,
+}
+
+/// Shape of the activation tensor flowing through the engine.
+#[derive(Clone, Copy, Debug, PartialEq)]
+enum ActShape {
+    /// batch, height, width, channels
+    Hwc(usize, usize, usize, usize),
+    /// batch, features
+    Flat(usize, usize),
+}
+
+impl ActShape {
+    fn len(&self) -> usize {
+        match *self {
+            ActShape::Hwc(b, h, w, c) => b * h * w * c,
+            ActShape::Flat(b, f) => b * f,
+        }
+    }
+}
+
+impl Default for Engine {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Engine {
+    pub fn new() -> Engine {
+        Engine {
+            act_a: Vec::new(),
+            act_b: Vec::new(),
+            patches: Vec::new(),
+            wq: Vec::new(),
+            branch_out: Vec::new(),
+        }
+    }
+
+    /// Run the network on a batch `x` of shape (B, H, W, C); returns
+    /// logits (B, classes).
+    pub fn forward(&mut self, net: &Network, x: &Tensor, fmt: &Format) -> Tensor {
+        let t = self.forward_prefix(net, x, fmt, net.layers.len());
+        assert_eq!(
+            t.shape().len(),
+            2,
+            "network must end with a dense layer (got shape {:?})",
+            t.shape()
+        );
+        assert_eq!(t.shape()[1], net.classes);
+        t
+    }
+
+    /// Run only the first `n_layers` layers; returns the intermediate
+    /// activation tensor ((B,H,W,C) or (B,F)).  Used by the Fig 8
+    /// accumulation study to tap a convolution's input.
+    pub fn forward_prefix(&mut self, net: &Network, x: &Tensor, fmt: &Format, n_layers: usize) -> Tensor {
+        let q = Quantizer::new(fmt);
+        let shape = x.shape();
+        assert_eq!(shape.len(), 4, "input must be (B, H, W, C)");
+        assert_eq!(&shape[1..], &net.input, "input shape mismatch");
+        let b = shape[0];
+        let mut cur = ActShape::Hwc(b, net.input[0], net.input[1], net.input[2]);
+
+        // stage input into act_a, quantized
+        self.act_a.clear();
+        self.act_a.extend_from_slice(x.data());
+        for v in self.act_a.iter_mut() {
+            *v = q.q(*v);
+        }
+
+        for layer in net.layers.iter().take(n_layers) {
+            cur = self.apply_layer(net, layer, cur, &q);
+        }
+
+        let (shape, n) = match cur {
+            ActShape::Hwc(b, h, w, c) => (vec![b, h, w, c], b * h * w * c),
+            ActShape::Flat(b, f) => (vec![b, f], b * f),
+        };
+        Tensor::new(shape, self.act_a[..n].to_vec()).unwrap()
+    }
+
+    /// Apply one layer reading from `act_a`, leaving the result in `act_a`.
+    fn apply_layer(&mut self, net: &Network, layer: &Layer, cur: ActShape, q: &Quantizer) -> ActShape {
+        match layer {
+            Layer::Conv { .. } => {
+                let out = self.conv(net, layer, cur, q, None);
+                std::mem::swap(&mut self.act_a, &mut self.act_b);
+                out
+            }
+            Layer::Dense { name, in_dim, out_dim } => {
+                let ActShape::Flat(b, f) = cur else {
+                    panic!("dense after non-flat activation");
+                };
+                assert_eq!(f, *in_dim, "dense {name}: input dim mismatch");
+                let w = net.weight(&format!("{name}.w"));
+                let bias = net.weight(&format!("{name}.b"));
+                self.stage_quantized_weights(w.data(), q);
+                resize(&mut self.act_b, b * out_dim);
+                gemm_q(
+                    &self.act_a[..b * f],
+                    &self.wq,
+                    &mut self.act_b,
+                    b,
+                    *in_dim,
+                    *out_dim,
+                    q,
+                );
+                add_bias_q(&mut self.act_b, bias.data(), b, *out_dim, q);
+                std::mem::swap(&mut self.act_a, &mut self.act_b);
+                ActShape::Flat(b, *out_dim)
+            }
+            Layer::Relu => {
+                for v in self.act_a[..cur.len()].iter_mut() {
+                    if *v < 0.0 {
+                        *v = 0.0;
+                    }
+                }
+                cur
+            }
+            Layer::MaxPool { k, stride, pad } => {
+                let ActShape::Hwc(b, h, w, c) = cur else {
+                    panic!("maxpool on flat activation");
+                };
+                let (oh, ow) = out_hw(h, w, *k, *stride, *pad);
+                resize(&mut self.act_b, b * oh * ow * c);
+                maxpool(
+                    &self.act_a, &mut self.act_b, b, h, w, c, *k, *stride, *pad, oh, ow,
+                );
+                std::mem::swap(&mut self.act_a, &mut self.act_b);
+                ActShape::Hwc(b, oh, ow, c)
+            }
+            Layer::Flatten => {
+                let ActShape::Hwc(b, h, w, c) = cur else {
+                    panic!("flatten on flat activation");
+                };
+                // NHWC row-major is already the flattened layout
+                ActShape::Flat(b, h * w * c)
+            }
+            Layer::GAvgPool => {
+                let ActShape::Hwc(b, h, w, c) = cur else {
+                    panic!("gavgpool on flat activation");
+                };
+                resize(&mut self.act_b, b * c);
+                gavgpool_q(&self.act_a, &mut self.act_b, b, h, w, c, q);
+                std::mem::swap(&mut self.act_a, &mut self.act_b);
+                ActShape::Flat(b, c)
+            }
+            Layer::Inception { .. } => {
+                let ActShape::Hwc(b, h, w, c) = cur else {
+                    panic!("inception on flat activation");
+                };
+                let branches = layer.inception_branches();
+                let out_ch: usize = branches
+                    .iter()
+                    .map(|br| match br {
+                        Layer::Conv { out_ch, .. } => *out_ch,
+                        _ => 0,
+                    })
+                    .sum();
+                // run each branch; concatenate along channels into branch_out
+                resize(&mut self.branch_out, b * h * w * out_ch);
+                let mut ch_off = 0;
+                let mut saved_input: Vec<f32> = self.act_a[..b * h * w * c].to_vec();
+                for (bi, br) in branches.iter().enumerate() {
+                    // restore the module input for every branch after the first
+                    if bi > 0 {
+                        self.act_a[..b * h * w * c].copy_from_slice(&saved_input);
+                    }
+                    let is_proj = matches!(br, Layer::Conv { name, .. } if name.ends_with(".proj"));
+                    let mut bshape = ActShape::Hwc(b, h, w, c);
+                    if is_proj {
+                        // pool branch: maxpool 3x3 s1 p1 first
+                        let (oh, ow) = out_hw(h, w, 3, 1, 1);
+                        resize(&mut self.act_b, b * oh * ow * c);
+                        maxpool(&self.act_a, &mut self.act_b, b, h, w, c, 3, 1, 1, oh, ow);
+                        std::mem::swap(&mut self.act_a, &mut self.act_b);
+                        bshape = ActShape::Hwc(b, oh, ow, c);
+                    }
+                    let out = self.conv(net, br, bshape, q, None);
+                    let ActShape::Hwc(_, boh, bow, bc) = out else { unreachable!() };
+                    assert_eq!((boh, bow), (h, w), "inception branches must preserve HxW");
+                    // scatter branch channels into the concat buffer
+                    for p in 0..b * h * w {
+                        let src = &self.act_b[p * bc..(p + 1) * bc];
+                        let dst = &mut self.branch_out[p * out_ch + ch_off..p * out_ch + ch_off + bc];
+                        dst.copy_from_slice(src);
+                    }
+                    ch_off += bc;
+                }
+                saved_input.clear();
+                std::mem::swap(&mut self.act_a, &mut self.branch_out);
+                ActShape::Hwc(b, h, w, out_ch)
+            }
+        }
+    }
+
+    /// Conv via im2col + quantized GEMM.  Reads `act_a`, writes `act_b`
+    /// (does NOT swap — callers decide).  Returns the output shape.
+    fn conv(
+        &mut self,
+        net: &Network,
+        layer: &Layer,
+        cur: ActShape,
+        q: &Quantizer,
+        weight_override: Option<(&[f32], &[f32])>,
+    ) -> ActShape {
+        let Layer::Conv { name, kh, kw, in_ch, out_ch, stride, pad } = layer else {
+            panic!("conv() on non-conv layer");
+        };
+        let ActShape::Hwc(b, h, w, c) = cur else {
+            panic!("conv on flat activation");
+        };
+        assert_eq!(c, *in_ch, "conv {name}: channel mismatch");
+        let (oh, ow) = out_hw(h, w, *kh, *stride, *pad);
+        let k_dim = kh * kw * in_ch;
+        let m = b * oh * ow;
+
+        resize(&mut self.patches, m * k_dim);
+        im2col(
+            &self.act_a, &mut self.patches, b, h, w, c, *kh, *kw, *stride, *pad, oh, ow,
+        );
+
+        let (wdata, bdata) = match weight_override {
+            Some((wd, bd)) => (wd, bd),
+            None => (
+                net.weight(&format!("{name}.w")).data(),
+                net.weight(&format!("{name}.b")).data(),
+            ),
+        };
+        self.stage_quantized_weights(wdata, q);
+        resize(&mut self.act_b, m * out_ch);
+        gemm_q(&self.patches, &self.wq, &mut self.act_b, m, k_dim, *out_ch, q);
+        add_bias_q(&mut self.act_b, bdata, m, *out_ch, q);
+        ActShape::Hwc(b, oh, ow, *out_ch)
+    }
+
+    fn stage_quantized_weights(&mut self, w: &[f32], q: &Quantizer) {
+        self.wq.clear();
+        self.wq.extend_from_slice(w);
+        for v in self.wq.iter_mut() {
+            *v = q.q(*v);
+        }
+    }
+}
+
+fn resize(buf: &mut Vec<f32>, n: usize) {
+    buf.clear();
+    buf.resize(n, 0.0);
+}
+
+fn out_hw(h: usize, w: usize, k: usize, stride: usize, pad: usize) -> (usize, usize) {
+    ((h + 2 * pad - k) / stride + 1, (w + 2 * pad - k) / stride + 1)
+}
+
+/// NHWC im2col with zero padding; patch index ((ki*kw + kj)*C + c).
+#[allow(clippy::too_many_arguments)]
+fn im2col(
+    x: &[f32],
+    out: &mut [f32],
+    b: usize,
+    h: usize,
+    w: usize,
+    c: usize,
+    kh: usize,
+    kw: usize,
+    stride: usize,
+    pad: usize,
+    oh: usize,
+    ow: usize,
+) {
+    let k_dim = kh * kw * c;
+    for bi in 0..b {
+        let xb = &x[bi * h * w * c..(bi + 1) * h * w * c];
+        for oy in 0..oh {
+            for ox in 0..ow {
+                let row = &mut out[((bi * oh + oy) * ow + ox) * k_dim..][..k_dim];
+                for ki in 0..kh {
+                    let iy = (oy * stride + ki) as isize - pad as isize;
+                    for kj in 0..kw {
+                        let ix = (ox * stride + kj) as isize - pad as isize;
+                        let dst = &mut row[(ki * kw + kj) * c..][..c];
+                        if iy >= 0 && (iy as usize) < h && ix >= 0 && (ix as usize) < w {
+                            let src = &xb[(iy as usize * w + ix as usize) * c..][..c];
+                            dst.copy_from_slice(src);
+                        } else {
+                            dst.fill(0.0);
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Per-op-truncated GEMM: out[m][n] = chain_k q(acc + q(a[m][k] * w[k][n])).
+/// Row-major A (M,K), W (K,N), out (M,N).  The inner n-loop is the
+/// vectorizable hot loop of the whole repository.
+pub fn gemm_q(a: &[f32], w: &[f32], out: &mut [f32], m: usize, k: usize, n: usize, q: &Quantizer) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(w.len(), k * n);
+    debug_assert_eq!(out.len(), m * n);
+    for mi in 0..m {
+        let arow = &a[mi * k..(mi + 1) * k];
+        let orow = &mut out[mi * n..(mi + 1) * n];
+        orow.fill(0.0);
+        for ki in 0..k {
+            let av = arow[ki];
+            let wrow = &w[ki * n..(ki + 1) * n];
+            for ni in 0..n {
+                orow[ni] = q.q(orow[ni] + q.q(av * wrow[ni]));
+            }
+        }
+    }
+}
+
+/// One rounded bias add per output element: y = q(y + q(b)).
+fn add_bias_q(y: &mut [f32], bias: &[f32], m: usize, n: usize, q: &Quantizer) {
+    debug_assert_eq!(bias.len(), n);
+    // bias is quantized once (it is a stored parameter)
+    let mut bq = [0f32; 512];
+    assert!(n <= bq.len(), "bias wider than staging buffer");
+    for (i, &b) in bias.iter().enumerate() {
+        bq[i] = q.q(b);
+    }
+    for mi in 0..m {
+        let row = &mut y[mi * n..(mi + 1) * n];
+        for ni in 0..n {
+            row[ni] = q.q(row[ni] + bq[ni]);
+        }
+    }
+}
+
+/// Max pooling with zero padding (activations are post-relu, so the
+/// zero pad never wins spuriously in our networks; same choice as the
+/// JAX side).
+#[allow(clippy::too_many_arguments)]
+fn maxpool(
+    x: &[f32],
+    out: &mut [f32],
+    b: usize,
+    h: usize,
+    w: usize,
+    c: usize,
+    k: usize,
+    stride: usize,
+    pad: usize,
+    oh: usize,
+    ow: usize,
+) {
+    for bi in 0..b {
+        let xb = &x[bi * h * w * c..(bi + 1) * h * w * c];
+        for oy in 0..oh {
+            for ox in 0..ow {
+                let dst = &mut out[((bi * oh + oy) * ow + ox) * c..][..c];
+                let mut first = true;
+                for ki in 0..k {
+                    let iy = (oy * stride + ki) as isize - pad as isize;
+                    for kj in 0..k {
+                        let ix = (ox * stride + kj) as isize - pad as isize;
+                        let inside =
+                            iy >= 0 && (iy as usize) < h && ix >= 0 && (ix as usize) < w;
+                        if inside {
+                            let src = &xb[(iy as usize * w + ix as usize) * c..][..c];
+                            if first {
+                                dst.copy_from_slice(src);
+                            } else {
+                                for ci in 0..c {
+                                    if src[ci] > dst[ci] {
+                                        dst[ci] = src[ci];
+                                    }
+                                }
+                            }
+                        } else if first {
+                            dst.fill(0.0);
+                        } else {
+                            for v in dst.iter_mut() {
+                                if 0.0 > *v {
+                                    *v = 0.0;
+                                }
+                            }
+                        }
+                        first = false;
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Global average pool with the serial per-add-rounded adder chain over
+/// row-major spatial positions, then one rounded multiply by q(1/HW).
+fn gavgpool_q(x: &[f32], out: &mut [f32], b: usize, h: usize, w: usize, c: usize, q: &Quantizer) {
+    let hw = h * w;
+    let inv = q.q(1.0 / hw as f32);
+    for bi in 0..b {
+        let xb = &x[bi * hw * c..(bi + 1) * hw * c];
+        let dst = &mut out[bi * c..(bi + 1) * c];
+        dst.fill(0.0);
+        for p in 0..hw {
+            let src = &xb[p * c..(p + 1) * c];
+            for ci in 0..c {
+                dst[ci] = q.q(dst[ci] + src[ci]);
+            }
+        }
+        for v in dst.iter_mut() {
+            *v = q.q(*v * inv);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::formats::Format;
+
+    fn q_exact() -> Quantizer {
+        Quantizer::new(&Format::SINGLE)
+    }
+
+    #[test]
+    fn gemm_q_exact_matches_serial_matmul() {
+        let m = 3;
+        let k = 5;
+        let n = 4;
+        let a: Vec<f32> = (0..m * k).map(|i| (i as f32 * 0.7).sin()).collect();
+        let w: Vec<f32> = (0..k * n).map(|i| (i as f32 * 0.3).cos()).collect();
+        let mut out = vec![0.0; m * n];
+        gemm_q(&a, &w, &mut out, m, k, n, &q_exact());
+        for mi in 0..m {
+            for ni in 0..n {
+                let mut acc = 0.0f32;
+                for ki in 0..k {
+                    acc += a[mi * k + ki] * w[ki * n + ni];
+                }
+                assert_eq!(out[mi * n + ni], acc);
+            }
+        }
+    }
+
+    #[test]
+    fn gemm_q_saturates_like_dot_q() {
+        use crate::numerics::dot_q;
+        let qz = Quantizer::new(&Format::fixed(4, 4));
+        let k = 64;
+        let a = vec![1.0f32; k];
+        let w = vec![1.0f32; k];
+        let mut out = vec![0.0; 1];
+        gemm_q(&a, &w, &mut out, 1, k, 1, &qz);
+        assert_eq!(out[0], dot_q(&a, &w, &qz));
+        assert_eq!(out[0], 16.0 - 1.0 / 16.0);
+    }
+
+    #[test]
+    fn im2col_identity_kernel() {
+        // 1x1 kernel, no pad: patches == input
+        let (b, h, w, c) = (1, 2, 2, 3);
+        let x: Vec<f32> = (0..b * h * w * c).map(|i| i as f32).collect();
+        let mut p = vec![0.0; b * h * w * c];
+        im2col(&x, &mut p, b, h, w, c, 1, 1, 1, 0, 2, 2);
+        assert_eq!(p, x);
+    }
+
+    #[test]
+    fn im2col_padding_and_order() {
+        // 1 channel 2x2 input, 3x3 kernel, pad 1: center patch sees all
+        let x = vec![1.0f32, 2.0, 3.0, 4.0]; // (1,2,2,1)
+        let mut p = vec![0.0; 4 * 9];
+        im2col(&x, &mut p, 1, 2, 2, 1, 3, 3, 1, 1, 2, 2);
+        // output position (0,0): kernel rows cover pad; patch index (ki*3+kj)
+        let p00 = &p[0..9];
+        assert_eq!(p00, &[0.0, 0.0, 0.0, 0.0, 1.0, 2.0, 0.0, 3.0, 4.0]);
+        let p11 = &p[3 * 9..4 * 9];
+        assert_eq!(p11, &[1.0, 2.0, 0.0, 3.0, 4.0, 0.0, 0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn maxpool_2x2() {
+        // (1, 2, 2, 1) -> (1, 1, 1, 1)
+        let x = vec![1.0f32, 5.0, 3.0, 2.0];
+        let mut o = vec![0.0; 1];
+        maxpool(&x, &mut o, 1, 2, 2, 1, 2, 2, 0, 1, 1);
+        assert_eq!(o[0], 5.0);
+    }
+
+    #[test]
+    fn gavgpool_exact_mean() {
+        let x = vec![1.0f32, 2.0, 3.0, 4.0]; // (1,2,2,1)
+        let mut o = vec![0.0; 1];
+        gavgpool_q(&x, &mut o, 1, 2, 2, 1, &q_exact());
+        assert_eq!(o[0], 2.5);
+    }
+}

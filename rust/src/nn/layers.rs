@@ -1,0 +1,191 @@
+//! Layer specs — the Rust mirror of `python/compile/model.py`'s
+//! JSON-able layer dictionaries (parsed from `artifacts/meta.json`).
+
+use anyhow::{bail, Result};
+
+use crate::util::json::Json;
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum Layer {
+    Conv {
+        name: String,
+        kh: usize,
+        kw: usize,
+        in_ch: usize,
+        out_ch: usize,
+        stride: usize,
+        pad: usize,
+    },
+    Dense {
+        name: String,
+        in_dim: usize,
+        out_dim: usize,
+    },
+    Relu,
+    MaxPool {
+        k: usize,
+        stride: usize,
+        pad: usize,
+    },
+    Flatten,
+    GAvgPool,
+    /// Mini inception: 1x1, 3x3, 5x5 and maxpool(3,1,1)+1x1 branches,
+    /// channel-concatenated in that order (model.py `_inception_convs`).
+    Inception {
+        name: String,
+        in_ch: usize,
+        c1: usize,
+        c3: usize,
+        c5: usize,
+        cp: usize,
+    },
+}
+
+impl Layer {
+    pub fn from_json(j: &Json) -> Result<Layer> {
+        let op = j
+            .req("op")?
+            .as_str()
+            .ok_or_else(|| anyhow::anyhow!("layer op must be a string"))?;
+        let geti = |key: &str| -> Result<usize> {
+            j.req(key)?
+                .as_usize()
+                .ok_or_else(|| anyhow::anyhow!("layer field {key:?} must be a number"))
+        };
+        let gets = |key: &str| -> Result<String> {
+            Ok(j.req(key)?
+                .as_str()
+                .ok_or_else(|| anyhow::anyhow!("layer field {key:?} must be a string"))?
+                .to_string())
+        };
+        Ok(match op {
+            "conv" => Layer::Conv {
+                name: gets("name")?,
+                kh: geti("kh")?,
+                kw: geti("kw")?,
+                in_ch: geti("in_ch")?,
+                out_ch: geti("out_ch")?,
+                stride: geti("stride")?,
+                pad: geti("pad")?,
+            },
+            "dense" => Layer::Dense {
+                name: gets("name")?,
+                in_dim: geti("in_dim")?,
+                out_dim: geti("out_dim")?,
+            },
+            "relu" => Layer::Relu,
+            "maxpool" => Layer::MaxPool {
+                k: geti("k")?,
+                stride: geti("stride")?,
+                pad: geti("pad")?,
+            },
+            "flatten" => Layer::Flatten,
+            "gavgpool" => Layer::GAvgPool,
+            "inception" => Layer::Inception {
+                name: gets("name")?,
+                in_ch: geti("in_ch")?,
+                c1: geti("c1")?,
+                c3: geti("c3")?,
+                c5: geti("c5")?,
+                cp: geti("cp")?,
+            },
+            other => bail!("unknown layer op {other:?}"),
+        })
+    }
+
+    /// The four branch convolutions of an inception module, in concat
+    /// order (matches model.py `_inception_convs`).
+    pub fn inception_branches(&self) -> Vec<Layer> {
+        let Layer::Inception { name, in_ch, c1, c3, c5, cp } = self else {
+            panic!("inception_branches on non-inception layer");
+        };
+        let conv = |suffix: &str, k: usize, out: usize| Layer::Conv {
+            name: format!("{name}.{suffix}"),
+            kh: k,
+            kw: k,
+            in_ch: *in_ch,
+            out_ch: out,
+            stride: 1,
+            pad: (k - 1) / 2,
+        };
+        vec![
+            conv("1x1", 1, *c1),
+            conv("3x3", 3, *c3),
+            conv("5x5", 5, *c5),
+            conv("proj", 1, *cp),
+        ]
+    }
+
+    /// MAC-chain length (dot-product K) of this layer, if it has one.
+    pub fn chain_len(&self) -> Option<usize> {
+        match self {
+            Layer::Conv { kh, kw, in_ch, .. } => Some(kh * kw * in_ch),
+            Layer::Dense { in_dim, .. } => Some(*in_dim),
+            Layer::Inception { .. } => self
+                .inception_branches()
+                .iter()
+                .filter_map(|b| b.chain_len())
+                .max(),
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_conv_from_json() {
+        let j = Json::parse(
+            r#"{"op":"conv","name":"c1","kh":5,"kw":5,"in_ch":3,"out_ch":16,"stride":1,"pad":2}"#,
+        )
+        .unwrap();
+        let l = Layer::from_json(&j).unwrap();
+        assert_eq!(
+            l,
+            Layer::Conv {
+                name: "c1".into(),
+                kh: 5,
+                kw: 5,
+                in_ch: 3,
+                out_ch: 16,
+                stride: 1,
+                pad: 2
+            }
+        );
+        assert_eq!(l.chain_len(), Some(75));
+    }
+
+    #[test]
+    fn parses_simple_ops() {
+        assert_eq!(
+            Layer::from_json(&Json::parse(r#"{"op":"relu"}"#).unwrap()).unwrap(),
+            Layer::Relu
+        );
+        assert_eq!(
+            Layer::from_json(&Json::parse(r#"{"op":"flatten"}"#).unwrap()).unwrap(),
+            Layer::Flatten
+        );
+        assert!(Layer::from_json(&Json::parse(r#"{"op":"warp"}"#).unwrap()).is_err());
+    }
+
+    #[test]
+    fn inception_branch_expansion() {
+        let j = Json::parse(
+            r#"{"op":"inception","name":"inc1","in_ch":16,"c1":8,"c3":16,"c5":8,"cp":8}"#,
+        )
+        .unwrap();
+        let l = Layer::from_json(&j).unwrap();
+        let b = l.inception_branches();
+        assert_eq!(b.len(), 4);
+        match &b[2] {
+            Layer::Conv { name, kh, pad, out_ch, .. } => {
+                assert_eq!(name, "inc1.5x5");
+                assert_eq!((*kh, *pad, *out_ch), (5, 2, 8));
+            }
+            _ => panic!(),
+        }
+        assert_eq!(l.chain_len(), Some(5 * 5 * 16));
+    }
+}

@@ -1,0 +1,17 @@
+//! Pure-Rust customized-precision inference engine.
+//!
+//! This is the repository's equivalent of the paper's modified Caffe: a
+//! forward pass in which **every arithmetic operation is immediately
+//! re-quantized** to the customized format (§3.1).  It interprets the
+//! same layer specs the JAX model zoo exports to `artifacts/meta.json`
+//! and matches the Pallas-kernel HLO path BIT-exactly (proved by the
+//! `pjrt_cross_check` test), which is what makes it safe to use as the
+//! fast sweep engine while the PJRT path serves requests.
+
+mod engine;
+mod layers;
+mod network;
+
+pub use engine::{gemm_q, Engine};
+pub use layers::Layer;
+pub use network::{Network, Zoo};

@@ -1,0 +1,175 @@
+//! Network = layer graph + trained weights + eval set, loaded from
+//! `artifacts/` (meta.json + .prt containers).  [`Zoo`] is the set of
+//! all networks an artifact directory provides.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::nn::layers::Layer;
+use crate::tensor::io::read_container;
+use crate::tensor::Tensor;
+use crate::util::json::Json;
+
+/// One loaded network.
+#[derive(Debug)]
+pub struct Network {
+    pub name: String,
+    /// input spatial shape [H, W, C]
+    pub input: [usize; 3],
+    pub classes: usize,
+    /// accuracy metric arity (1 or 5, per the paper's methodology §3.1)
+    pub topk: usize,
+    pub layers: Vec<Layer>,
+    /// HLO parameter order (after x and fmt)
+    pub weight_order: Vec<String>,
+    pub weights: BTreeMap<String, Tensor>,
+    /// held-out eval set
+    pub eval_x: Tensor,
+    pub eval_y: Vec<i32>,
+    /// exact-path eval accuracy recorded by the trainer (meta.json)
+    pub eval_acc_exact: f64,
+    /// artifact file names per representation kind ("float"/"fixed")
+    pub hlo_files: BTreeMap<String, String>,
+    pub n_params: usize,
+    pub max_chain: usize,
+}
+
+impl Network {
+    fn from_meta(name: &str, meta: &Json, dir: &Path) -> Result<Network> {
+        let input: Vec<usize> = meta
+            .req("input")?
+            .as_arr()
+            .ok_or_else(|| anyhow!("input must be an array"))?
+            .iter()
+            .map(|v| v.as_usize().unwrap_or(0))
+            .collect();
+        if input.len() != 3 {
+            bail!("network {name}: input must be [H, W, C]");
+        }
+
+        let layers = meta
+            .req("layers")?
+            .as_arr()
+            .ok_or_else(|| anyhow!("layers must be an array"))?
+            .iter()
+            .map(Layer::from_json)
+            .collect::<Result<Vec<_>>>()?;
+
+        let weight_order: Vec<String> = meta
+            .req("weights")?
+            .as_arr()
+            .ok_or_else(|| anyhow!("weights must be an array"))?
+            .iter()
+            .map(|v| v.as_str().unwrap_or("").to_string())
+            .collect();
+
+        let wfile = meta.req("weights_file")?.as_str().unwrap().to_string();
+        let weights_c = read_container(&dir.join(&wfile))
+            .with_context(|| format!("loading weights for {name}"))?;
+        let mut weights = BTreeMap::new();
+        for wname in &weight_order {
+            weights.insert(wname.clone(), weights_c.f32(wname)?.clone());
+        }
+
+        let efile = meta.req("eval_file")?.as_str().unwrap().to_string();
+        let eval_c = read_container(&dir.join(&efile))
+            .with_context(|| format!("loading eval set for {name}"))?;
+        let eval_x = eval_c.f32("x")?.clone();
+        let eval_y = eval_c.i32("y")?.data.clone();
+        if eval_x.shape()[0] != eval_y.len() {
+            bail!("network {name}: eval x/y length mismatch");
+        }
+
+        let mut hlo_files = BTreeMap::new();
+        if let Some(hlo) = meta.get("hlo").and_then(|h| h.as_obj()) {
+            for (kind, fname) in hlo {
+                hlo_files.insert(kind.clone(), fname.as_str().unwrap_or("").to_string());
+            }
+        }
+
+        Ok(Network {
+            name: name.to_string(),
+            input: [input[0], input[1], input[2]],
+            classes: meta.req("classes")?.as_usize().unwrap(),
+            topk: meta.req("topk")?.as_usize().unwrap(),
+            layers,
+            weight_order,
+            weights,
+            eval_x,
+            eval_y,
+            eval_acc_exact: meta.req("eval_acc_exact")?.as_f64().unwrap_or(0.0),
+            hlo_files,
+            n_params: meta.req("params")?.as_usize().unwrap(),
+            max_chain: meta.req("max_chain")?.as_usize().unwrap(),
+        })
+    }
+
+    pub fn eval_len(&self) -> usize {
+        self.eval_y.len()
+    }
+
+    /// Weight tensor by name (panics on unknown name — a spec bug).
+    pub fn weight(&self, name: &str) -> &Tensor {
+        self.weights
+            .get(name)
+            .unwrap_or_else(|| panic!("weight {name:?} missing in {}", self.name))
+    }
+
+    /// Absolute path of the HLO artifact for a representation kind.
+    pub fn hlo_path(&self, dir: &Path, kind: &str) -> Result<PathBuf> {
+        let f = self
+            .hlo_files
+            .get(kind)
+            .ok_or_else(|| anyhow!("{}: no HLO artifact for kind {kind:?}", self.name))?;
+        Ok(dir.join(f))
+    }
+}
+
+/// All networks in an artifact directory.
+pub struct Zoo {
+    pub dir: PathBuf,
+    pub batch: usize,
+    networks: BTreeMap<String, Arc<Network>>,
+}
+
+impl Zoo {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Zoo> {
+        let dir = dir.as_ref().to_path_buf();
+        let meta_path = dir.join("meta.json");
+        let text = std::fs::read_to_string(&meta_path)
+            .with_context(|| format!("reading {} (run `make artifacts` first)", meta_path.display()))?;
+        let meta = Json::parse(&text).context("parsing meta.json")?;
+        let batch = meta.req("batch")?.as_usize().unwrap_or(32);
+
+        let mut networks = BTreeMap::new();
+        for (name, nm) in meta
+            .req("networks")?
+            .as_obj()
+            .ok_or_else(|| anyhow!("networks must be an object"))?
+        {
+            networks.insert(name.clone(), Arc::new(Network::from_meta(name, nm, &dir)?));
+        }
+        Ok(Zoo { dir, batch, networks })
+    }
+
+    pub fn network(&self, name: &str) -> Result<Arc<Network>> {
+        self.networks
+            .get(name)
+            .cloned()
+            .ok_or_else(|| anyhow!("unknown network {name:?} (have: {:?})", self.names()))
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        self.networks.keys().map(|s| s.as_str()).collect()
+    }
+
+    /// Networks ordered by descending size (the paper's Fig 11 ordering).
+    pub fn by_size_desc(&self) -> Vec<Arc<Network>> {
+        let mut v: Vec<_> = self.networks.values().cloned().collect();
+        v.sort_by(|a, b| b.n_params.cmp(&a.n_params));
+        v
+    }
+}

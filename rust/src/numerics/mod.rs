@@ -1,0 +1,12 @@
+//! Softfloat/softfixed quantizers and per-op-truncated MAC chains.
+//!
+//! This module is the Rust half of the repository's normative semantics
+//! (defined in `python/compile/kernels/qformat.py`): every function here
+//! is bit-exact against the jnp implementation and the Pallas kernel —
+//! the `pjrt_cross_check` integration test proves it end-to-end through
+//! whole networks.
+
+mod quant;
+pub mod trace;
+
+pub use quant::{dot_q, mac_q, quantize, quantize_slice, Quantizer};

@@ -1,0 +1,306 @@
+//! The branch-light f32-carrier quantizer (hot path of the entire sweep).
+//!
+//! Float path: integer round-half-even on the raw f32 bits — adding the
+//! tie-adjusted `half` into the mantissa field lets the carry propagate
+//! into the exponent, which is exactly normalized rounding.  Overflow
+//! saturates to the format's max-finite; values below the min normal
+//! flush to zero (no subnormals).  Fixed path: clamp, scale,
+//! `round_ties_even`, unscale, clamp.  Both match qformat.py bit-exactly
+//! (same carrier, same operation order).
+
+use crate::formats::Format;
+
+/// Precomputed quantization constants for one [`Format`] — build once,
+/// apply millions of times.
+#[derive(Clone, Copy, Debug)]
+pub struct Quantizer {
+    kind: Kind,
+    /// float: bits of f32 mantissa to drop (23 - m)
+    shift: u32,
+    /// float: min normal (f32-carrier clamped)
+    min_normal: f32,
+    /// saturation bound (both kinds)
+    max_val: f32,
+    /// fixed: 2^r and 2^-r
+    scale: f32,
+    inv_scale: f32,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Kind {
+    Float,
+    Fixed,
+}
+
+impl Quantizer {
+    pub fn new(fmt: &Format) -> Quantizer {
+        match *fmt {
+            Format::Float { mantissa, .. } => Quantizer {
+                kind: Kind::Float,
+                shift: 23 - mantissa,
+                min_normal: fmt.min_normal() as f32,
+                max_val: fmt.max_value() as f32,
+                scale: 0.0,
+                inv_scale: 0.0,
+            },
+            Format::Fixed { frac_bits, .. } => {
+                let scale = 2.0f64.powi(frac_bits as i32);
+                Quantizer {
+                    kind: Kind::Fixed,
+                    shift: 0,
+                    min_normal: 0.0,
+                    max_val: fmt.max_value() as f32,
+                    scale: scale as f32,
+                    inv_scale: (1.0 / scale) as f32,
+                }
+            }
+        }
+    }
+
+    /// Quantize one value.  `#[inline]` — this sits inside every MAC.
+    #[inline(always)]
+    pub fn q(&self, x: f32) -> f32 {
+        match self.kind {
+            Kind::Float => {
+                let bits = x.to_bits();
+                let sign = bits & 0x8000_0000;
+                let mag = bits & 0x7FFF_FFFF;
+                let shift = self.shift;
+                let rmag = if shift == 0 {
+                    mag
+                } else {
+                    let lsb = (mag >> shift) & 1;
+                    let half = (1u32 << (shift - 1)) - 1 + lsb;
+                    ((mag.wrapping_add(half)) >> shift) << shift
+                };
+                let y = f32::from_bits(rmag);
+                // match the jnp `where` chain exactly (incl. NaN: both
+                // comparisons false => NaN passes through)
+                let y = if y > self.max_val { self.max_val } else { y };
+                let y = if y < self.min_normal { 0.0 } else { y };
+                f32::from_bits(sign | 0x3F80_0000) * y
+            }
+            Kind::Fixed => {
+                let y = x.clamp(-self.max_val, self.max_val);
+                let y = (y * self.scale).round_ties_even() * self.inv_scale;
+                y.clamp(-self.max_val, self.max_val)
+            }
+        }
+    }
+
+    /// True if this quantizer is the identity on all normal f32 (the
+    /// exact baseline F(23,8)).
+    pub fn is_identity(&self) -> bool {
+        self.kind == Kind::Float && self.shift == 0 && self.max_val == f32::MAX
+    }
+}
+
+/// Quantize a whole value — convenience for tests/figures.
+pub fn quantize(x: f32, fmt: &Format) -> f32 {
+    Quantizer::new(fmt).q(x)
+}
+
+/// Quantize a slice in place.
+pub fn quantize_slice(xs: &mut [f32], q: &Quantizer) {
+    for x in xs.iter_mut() {
+        *x = q.q(*x);
+    }
+}
+
+/// One MAC step of the paper's §2 chain: `q(acc + q(a*b))`.
+#[inline(always)]
+pub fn mac_q(acc: f32, a: f32, b: f32, q: &Quantizer) -> f32 {
+    q.q(acc + q.q(a * b))
+}
+
+/// Full per-op-truncated dot product in increasing-index order, starting
+/// from a zero accumulator — the semantics of the Pallas kernel's K loop.
+pub fn dot_q(a: &[f32], b: &[f32], q: &Quantizer) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = 0.0f32;
+    for i in 0..a.len() {
+        acc = mac_q(acc, a[i], b[i], q);
+    }
+    acc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::formats::Format;
+    use crate::testing::prop::{run_prop, Gen};
+
+    fn qf(m: u32, e: u32) -> Quantizer {
+        Quantizer::new(&Format::float(m, e))
+    }
+
+    fn qx(l: u32, r: u32) -> Quantizer {
+        Quantizer::new(&Format::fixed(l, r))
+    }
+
+    #[test]
+    fn float_identity_at_single() {
+        let q = Quantizer::new(&Format::SINGLE);
+        for &x in &[0.0f32, 1.5, -3.25e-12, 7.0e30, f32::MIN_POSITIVE] {
+            assert_eq!(q.q(x).to_bits(), x.to_bits());
+        }
+    }
+
+    #[test]
+    fn float_round_half_even() {
+        // m=2: grid 1.0, 1.25, 1.5, 1.75, 2.0; ties to even mantissa
+        let q = qf(2, 4);
+        assert_eq!(q.q(1.125), 1.0);
+        assert_eq!(q.q(1.375), 1.5);
+        assert_eq!(q.q(1.625), 1.5);
+        assert_eq!(q.q(1.875), 2.0);
+    }
+
+    #[test]
+    fn float_saturate_and_flush() {
+        let q = qf(4, 4); // emin=-7, emax=8, max=(2-1/16)*256=496
+        assert_eq!(q.q(1e6), 496.0);
+        assert_eq!(q.q(-1e6), -496.0);
+        assert_eq!(q.q(2.0f32.powi(-8)), 0.0);
+        assert_eq!(q.q(2.0f32.powi(-7)), 2.0f32.powi(-7));
+    }
+
+    #[test]
+    fn float_mantissa_carry_into_exponent() {
+        // 1.1111...b rounds up to 2.0 at low mantissa widths
+        let q = qf(2, 6);
+        assert_eq!(q.q(1.999), 2.0);
+        assert_eq!(q.q(3.999), 4.0);
+    }
+
+    #[test]
+    fn fixed_grid_round_saturate() {
+        let q = qx(4, 1); // step 0.5, max 15.5
+        assert_eq!(q.q(0.25), 0.0); // tie to even
+        assert_eq!(q.q(0.75), 1.0);
+        assert_eq!(q.q(1.2), 1.0);
+        assert_eq!(q.q(99.0), 15.5);
+        assert_eq!(q.q(-99.0), -15.5);
+    }
+
+    #[test]
+    fn paper_16bit_fixed_saturates_at_256() {
+        let q = qx(8, 8);
+        assert_eq!(q.q(300.0), 256.0 - 1.0 / 256.0);
+    }
+
+    #[test]
+    fn dot_q_saturation_chain() {
+        // paper §4.3: all-ones dot of length 64 saturates X(4,4) at ~16
+        let q = qx(4, 4);
+        let a = vec![1.0f32; 64];
+        assert_eq!(dot_q(&a, &a, &q), 16.0 - 1.0 / 16.0);
+    }
+
+    #[test]
+    fn dot_q_exact_matches_f32_serial() {
+        let q = Quantizer::new(&Format::SINGLE);
+        let a: Vec<f32> = (0..37).map(|i| (i as f32 * 0.37).sin()).collect();
+        let b: Vec<f32> = (0..37).map(|i| (i as f32 * 0.11).cos()).collect();
+        let mut acc = 0.0f32;
+        for i in 0..37 {
+            acc += a[i] * b[i];
+        }
+        assert_eq!(dot_q(&a, &b, &q), acc);
+    }
+
+    #[test]
+    fn is_identity() {
+        assert!(Quantizer::new(&Format::SINGLE).is_identity());
+        assert!(!qf(22, 8).is_identity());
+        assert!(!qx(8, 8).is_identity());
+    }
+
+    // ---- property tests ----------------------------------------------
+
+    fn arb_float_format(g: &mut Gen) -> Format {
+        Format::float(g.int_in(0, 23) as u32, g.int_in(2, 8) as u32)
+    }
+
+    fn arb_fixed_format(g: &mut Gen) -> Format {
+        Format::fixed(g.int_in(0, 16) as u32, g.int_in(0, 16) as u32)
+    }
+
+    fn arb_value(g: &mut Gen) -> f32 {
+        let mag = g.f32_in(0.0, 1.0) * 2.0f32.powi(g.int_in(-30, 30) as i32);
+        if g.bool() {
+            -mag
+        } else {
+            mag
+        }
+    }
+
+    #[test]
+    fn prop_float_idempotent() {
+        run_prop("float_idempotent", 500, |g| {
+            let q = Quantizer::new(&arb_float_format(g));
+            let x = arb_value(g);
+            let once = q.q(x);
+            let twice = q.q(once);
+            assert_eq!(once.to_bits(), twice.to_bits(), "x={x}");
+        });
+    }
+
+    #[test]
+    fn prop_fixed_idempotent() {
+        run_prop("fixed_idempotent", 500, |g| {
+            let q = Quantizer::new(&arb_fixed_format(g));
+            let x = arb_value(g);
+            let once = q.q(x);
+            assert_eq!(once, q.q(once), "x={x}");
+        });
+    }
+
+    #[test]
+    fn prop_float_monotone() {
+        run_prop("float_monotone", 500, |g| {
+            let q = Quantizer::new(&arb_float_format(g));
+            let (a, b) = (arb_value(g), arb_value(g));
+            let (lo, hi) = if a <= b { (a, b) } else { (b, a) };
+            assert!(q.q(lo) <= q.q(hi), "lo={lo} hi={hi}");
+        });
+    }
+
+    #[test]
+    fn prop_float_odd_symmetry() {
+        run_prop("float_odd", 500, |g| {
+            let q = Quantizer::new(&arb_float_format(g));
+            let x = arb_value(g);
+            // compare canonicalized (+0.0) to ignore the sign of zero
+            assert_eq!((q.q(-x) + 0.0).to_bits(), (-q.q(x) + 0.0).to_bits());
+        });
+    }
+
+    #[test]
+    fn prop_bounded_by_max() {
+        run_prop("bounded", 500, |g| {
+            let fmt = if g.bool() { arb_float_format(g) } else { arb_fixed_format(g) };
+            let q = Quantizer::new(&fmt);
+            let y = q.q(arb_value(g) * 1e6);
+            assert!(y.abs() as f64 <= fmt.max_value().max(f32::MAX as f64));
+            assert!(y.is_finite());
+        });
+    }
+
+    #[test]
+    fn prop_error_bounded_by_half_ulp() {
+        // for in-range values, |q(x) - x| <= 2^(exp(x) - m - 1) (half ULP)
+        run_prop("half_ulp", 500, |g| {
+            let m = g.int_in(1, 23) as u32;
+            let fmt = Format::float(m, 8);
+            let q = Quantizer::new(&fmt);
+            let x = arb_value(g);
+            if x != 0.0 && x.abs() >= fmt.min_normal() as f32 && (x.abs() as f64) < fmt.max_value() {
+                let exp = x.abs().log2().floor() as i32;
+                let half_ulp = 2.0f64.powi(exp - m as i32 - 1) * 1.0001;
+                let err = (q.q(x) as f64 - x as f64).abs();
+                assert!(err <= half_ulp, "x={x} m={m} err={err} bound={half_ulp}");
+            }
+        });
+    }
+}

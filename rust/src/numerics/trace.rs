@@ -1,0 +1,108 @@
+//! Accumulation tracer — the instrument behind the paper's Figure 8.
+//!
+//! Records the running sum of a per-op-truncated dot product after every
+//! MAC step, for a set of formats plus the exact f32 baseline, and flags
+//! the first saturation event (the paper's "running sum exceeds 255
+//! after 60 inputs" analysis for X(8,8) on AlexNet conv3).
+
+use crate::formats::Format;
+use crate::numerics::{mac_q, Quantizer};
+
+/// The running-sum trajectory of one format over one neuron's inputs.
+#[derive(Clone, Debug)]
+pub struct AccumTrace {
+    pub format: Format,
+    /// running sum after each MAC step (len == number of inputs)
+    pub running: Vec<f32>,
+    /// first step index at which |acc| hit the format's max (saturation)
+    pub first_saturation: Option<usize>,
+    /// final accumulated value
+    pub final_value: f32,
+}
+
+/// Trace the serialized accumulation `q(acc + q(w_i * x_i))` for one
+/// neuron (weights/inputs in accumulation order).
+pub fn trace_accumulation(weights: &[f32], inputs: &[f32], fmt: &Format) -> AccumTrace {
+    assert_eq!(weights.len(), inputs.len());
+    let q = Quantizer::new(fmt);
+    let max = fmt.max_value() as f32;
+    let mut acc = 0.0f32;
+    let mut running = Vec::with_capacity(weights.len());
+    let mut first_saturation = None;
+    for i in 0..weights.len() {
+        acc = mac_q(acc, weights[i], inputs[i], &q);
+        if first_saturation.is_none() && acc.abs() >= max {
+            first_saturation = Some(i);
+        }
+        running.push(acc);
+    }
+    AccumTrace {
+        format: *fmt,
+        final_value: acc,
+        running,
+        first_saturation,
+    }
+}
+
+/// Exact serial-f32 baseline trajectory (the paper's black line).
+pub fn trace_exact(weights: &[f32], inputs: &[f32]) -> Vec<f32> {
+    assert_eq!(weights.len(), inputs.len());
+    let mut acc = 0.0f32;
+    weights
+        .iter()
+        .zip(inputs)
+        .map(|(w, x)| {
+            acc += w * x;
+            acc
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_trace_is_prefix_sums() {
+        let w = [1.0f32, 2.0, 3.0];
+        let x = [1.0f32, 1.0, 1.0];
+        assert_eq!(trace_exact(&w, &x), vec![1.0, 3.0, 6.0]);
+    }
+
+    #[test]
+    fn narrow_fixed_saturates_early() {
+        // constant positive inflow saturates X(4,4) (max ~16) at step 16
+        let w = vec![1.0f32; 64];
+        let x = vec![1.0f32; 64];
+        let t = trace_accumulation(&w, &x, &Format::fixed(4, 4));
+        assert_eq!(t.first_saturation, Some(15));
+        assert_eq!(t.final_value, 16.0 - 1.0 / 16.0);
+        // once saturated with positive inflow it stays saturated
+        assert!(t.running[20..].iter().all(|&v| v == t.final_value));
+    }
+
+    #[test]
+    fn wide_float_matches_exact() {
+        let w: Vec<f32> = (0..100).map(|i| ((i * 37) % 13) as f32 * 0.1 - 0.6).collect();
+        let x: Vec<f32> = (0..100).map(|i| ((i * 17) % 7) as f32 * 0.2 - 0.5).collect();
+        let t = trace_accumulation(&w, &x, &Format::SINGLE);
+        let e = trace_exact(&w, &x);
+        assert_eq!(t.running, e);
+        assert_eq!(t.first_saturation, None);
+    }
+
+    #[test]
+    fn few_mantissa_bits_stall_small_increments() {
+        // paper §4.3: F(m=2) — once the sum is large, increments below
+        // the ULP round away entirely
+        let n = 500;
+        let w = vec![1.0f32; n];
+        let x = vec![1.0f32; n];
+        let t = trace_accumulation(&w, &x, &Format::float(2, 8));
+        // sum stalls at 256: ULP(256) = 64 for m=2, so +1 rounds away
+        assert!(t.final_value <= 256.0, "final {}", t.final_value);
+        let e = *trace_exact(&w, &x).last().unwrap();
+        assert_eq!(e, n as f32);
+        assert!(t.final_value < e * 0.6);
+    }
+}

@@ -1,0 +1,74 @@
+//! Efficient customized-precision search — the paper's §3.3 contribution.
+//!
+//! Exhaustively measuring classification accuracy for every design in
+//! the space costs (#configs × #eval inputs) forward passes.  The
+//! paper's insight: the *last-layer activations* of the quantized
+//! network, compared with the exact network's on a handful of inputs,
+//! capture the propagation of numerical error; their linear coefficient
+//! of determination (R²) predicts normalized accuracy through a single
+//! linear model that transfers **across networks and representations**
+//! (Fig 9, fit correlation 0.96).
+//!
+//! Pipeline:
+//! 1. [`activation_r2`] — R² between exact & quantized last-layer
+//!    activations on ~10 probe inputs (`PROBE_INPUTS`).
+//! 2. [`AccuracyModel`] — OLS fit of normalized-accuracy vs R² pairs,
+//!    built from *other* networks (cross-validation, §4.4).
+//! 3. [`search`] — predict accuracy for every design, pick the fastest
+//!    one that clears the target, then (optionally) evaluate up to N
+//!    candidates for real, moving one bit at a time (§3.3 refinement).
+
+mod model;
+mod runner;
+
+pub use model::{collect_model_points, collect_model_points_cached, AccuracyModel, ModelPoint};
+pub use runner::{
+    exhaustive_search, predictions_from_r2s, probe_predictions, probe_r2s, search,
+    select_candidates, SearchOutcome, SearchSpec,
+};
+
+use crate::util::stats::r_squared;
+
+/// Number of probe inputs used for R² (paper: "only ten randomly
+/// selected inputs").
+pub const PROBE_INPUTS: usize = 10;
+
+/// R² between exact and quantized last-layer activations (flattened
+/// over all probe inputs and classes).
+pub fn activation_r2(exact: &[f32], quant: &[f32]) -> f64 {
+    debug_assert_eq!(exact.len(), quant.len());
+    let e: Vec<f64> = exact.iter().map(|&v| v as f64).collect();
+    let q: Vec<f64> = quant.iter().map(|&v| v as f64).collect();
+    r_squared(&e, &q)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn r2_of_identical_activations_is_one() {
+        let a = vec![0.5f32, -1.0, 2.0, 3.5];
+        assert!((activation_r2(&a, &a) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn r2_of_saturated_constant_output_is_zero() {
+        // a fully saturated quantized net emits constant logits:
+        // zero variance => R² = 0 (accuracy is chance)
+        let exact = vec![0.1f32, 0.9, -0.3, 0.7];
+        let quant = vec![5.0f32; 4];
+        assert_eq!(activation_r2(&exact, &quant), 0.0);
+    }
+
+    #[test]
+    fn r2_degrades_with_noise() {
+        let exact: Vec<f32> = (0..100).map(|i| (i as f32 * 0.37).sin()).collect();
+        let slight: Vec<f32> = exact.iter().map(|v| v + 0.01 * (v * 17.0).cos()).collect();
+        let heavy: Vec<f32> = exact.iter().map(|v| v + 0.8 * (v * 17.0).cos()).collect();
+        let r_slight = activation_r2(&exact, &slight);
+        let r_heavy = activation_r2(&exact, &heavy);
+        assert!(r_slight > 0.99);
+        assert!(r_heavy < r_slight);
+    }
+}

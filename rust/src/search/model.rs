@@ -1,0 +1,141 @@
+//! The linear correlation→accuracy model (Fig 9).
+
+use std::sync::Arc;
+
+use crate::eval::metrics::topk_accuracy;
+use crate::eval::sweep::{forward_eval, forward_indices, EvalOptions};
+use crate::formats::Format;
+use crate::nn::{Engine, Network};
+use crate::search::{activation_r2, PROBE_INPUTS};
+use crate::util::rng::Pcg32;
+use crate::util::stats::{ols, pearson};
+
+/// One (R², normalized accuracy) observation from some network+format.
+#[derive(Clone, Copy, Debug)]
+pub struct ModelPoint {
+    pub r2: f64,
+    pub normalized_accuracy: f64,
+}
+
+/// The fitted linear transformation `norm_acc ≈ a·R² + b`.
+#[derive(Clone, Copy, Debug)]
+pub struct AccuracyModel {
+    pub a: f64,
+    pub b: f64,
+    /// fit quality (Pearson r of the training points; paper reports 0.96)
+    pub fit_r: f64,
+    pub n_points: usize,
+}
+
+impl AccuracyModel {
+    pub fn fit(points: &[ModelPoint]) -> AccuracyModel {
+        let xs: Vec<f64> = points.iter().map(|p| p.r2).collect();
+        let ys: Vec<f64> = points.iter().map(|p| p.normalized_accuracy).collect();
+        let (a, b) = ols(&xs, &ys);
+        AccuracyModel {
+            a,
+            b,
+            fit_r: pearson(&xs, &ys),
+            n_points: points.len(),
+        }
+    }
+
+    /// Predicted normalized accuracy for an observed R².
+    pub fn predict(&self, r2: f64) -> f64 {
+        (self.a * r2 + self.b).clamp(0.0, 1.5)
+    }
+}
+
+/// Collect (R², normalized accuracy) pairs for every format in `formats`
+/// on one network — the raw material of Fig 9 and of the cross-validated
+/// search models.  Accuracy uses `opts.samples` inputs; R² uses only
+/// [`PROBE_INPUTS`] (that asymmetry is the point of the method: the
+/// pairs are collected *once*, offline, per reference network).
+///
+/// Accuracy measurements go through `cache` when provided (they are the
+/// same numbers the Fig 6 sweep produces, keyed identically).
+pub fn collect_model_points_cached(
+    net: &Arc<Network>,
+    formats: &[Format],
+    opts: &EvalOptions,
+    seed: u64,
+    cache: Option<&crate::coordinator::cache::ResultCache>,
+) -> Vec<(Format, ModelPoint)> {
+    let mut engine = Engine::new();
+    let samples = opts.samples.min(net.eval_len());
+
+    // exact baseline: accuracy on the subset + probe activations
+    let (base_logits, labels) = forward_eval(&mut engine, net, &Format::SINGLE, opts);
+    let base_acc = topk_accuracy(&base_logits, &labels, net.classes, net.topk);
+
+    let mut rng = Pcg32::seeded(seed);
+    let probe = rng.sample_indices(net.eval_len(), PROBE_INPUTS.min(net.eval_len()));
+    let exact_probe = forward_indices(&mut engine, net, &Format::SINGLE, &probe);
+
+    formats
+        .iter()
+        .map(|f| {
+            let quant_probe = forward_indices(&mut engine, net, f, &probe);
+            let r2 = activation_r2(&exact_probe, &quant_probe);
+            let na = if let Some(hit) =
+                cache.and_then(|c| c.get(&net.name, &f.id(), samples))
+            {
+                hit.normalized_accuracy
+            } else {
+                let (logits, _) = forward_eval(&mut engine, net, f, opts);
+                let acc = topk_accuracy(&logits, &labels, net.classes, net.topk);
+                let na = if base_acc > 0.0 { acc / base_acc } else { 0.0 };
+                if let Some(c) = cache {
+                    c.put(
+                        &net.name,
+                        &f.id(),
+                        samples,
+                        crate::coordinator::cache::CachedAccuracy {
+                            accuracy: acc,
+                            normalized_accuracy: na,
+                        },
+                    );
+                }
+                na
+            };
+            (*f, ModelPoint { r2, normalized_accuracy: na })
+        })
+        .collect()
+}
+
+/// Uncached variant (tests, standalone use).
+pub fn collect_model_points(
+    net: &Arc<Network>,
+    formats: &[Format],
+    opts: &EvalOptions,
+    seed: u64,
+) -> Vec<(Format, ModelPoint)> {
+    collect_model_points_cached(net, formats, opts, seed, None)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fit_recovers_linear_relation() {
+        let pts: Vec<ModelPoint> = (0..20)
+            .map(|i| {
+                let r2 = i as f64 / 19.0;
+                ModelPoint { r2, normalized_accuracy: 0.2 + 0.8 * r2 }
+            })
+            .collect();
+        let m = AccuracyModel::fit(&pts);
+        assert!((m.a - 0.8).abs() < 1e-9);
+        assert!((m.b - 0.2).abs() < 1e-9);
+        assert!(m.fit_r > 0.999);
+        assert!((m.predict(1.0) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn predict_is_clamped() {
+        let m = AccuracyModel { a: 10.0, b: -2.0, fit_r: 1.0, n_points: 0 };
+        assert_eq!(m.predict(0.0), 0.0);
+        assert_eq!(m.predict(1.0), 1.5);
+    }
+}

@@ -1,0 +1,159 @@
+//! `.prt` tensor-container reader (format defined in
+//! `python/compile/io_prt.py`; written once at `make artifacts`).
+
+use std::collections::BTreeMap;
+use std::fs::File;
+use std::io::{BufReader, Read};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+use byteorder::{LittleEndian, ReadBytesExt};
+
+use super::{Tensor, TensorI32};
+
+pub const MAGIC: u32 = 0x5052_5431; // "PRT1"
+
+/// Everything a `.prt` file can hold.
+#[derive(Clone, Debug)]
+pub enum AnyTensor {
+    F32(Tensor),
+    I32(TensorI32),
+}
+
+/// Ordered contents of a container (order matters: the HLO weight
+/// parameter order is the file order).
+pub struct Container {
+    pub entries: Vec<(String, AnyTensor)>,
+    index: BTreeMap<String, usize>,
+}
+
+impl Container {
+    pub fn get(&self, name: &str) -> Option<&AnyTensor> {
+        self.index.get(name).map(|&i| &self.entries[i].1)
+    }
+
+    pub fn f32(&self, name: &str) -> Result<&Tensor> {
+        match self.get(name) {
+            Some(AnyTensor::F32(t)) => Ok(t),
+            Some(AnyTensor::I32(_)) => bail!("tensor {name:?} is i32, expected f32"),
+            None => bail!("tensor {name:?} not in container"),
+        }
+    }
+
+    pub fn i32(&self, name: &str) -> Result<&TensorI32> {
+        match self.get(name) {
+            Some(AnyTensor::I32(t)) => Ok(t),
+            Some(AnyTensor::F32(_)) => bail!("tensor {name:?} is f32, expected i32"),
+            None => bail!("tensor {name:?} not in container"),
+        }
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        self.entries.iter().map(|(n, _)| n.as_str()).collect()
+    }
+}
+
+/// Read a `.prt` container.
+pub fn read_container(path: &Path) -> Result<Container> {
+    let f = File::open(path).with_context(|| format!("open {}", path.display()))?;
+    let mut r = BufReader::new(f);
+
+    let magic = r.read_u32::<LittleEndian>()?;
+    if magic != MAGIC {
+        bail!("{}: bad magic {magic:#x} (want {MAGIC:#x})", path.display());
+    }
+    let count = r.read_u32::<LittleEndian>()? as usize;
+    let mut entries = Vec::with_capacity(count);
+    let mut index = BTreeMap::new();
+
+    for _ in 0..count {
+        let name_len = r.read_u16::<LittleEndian>()? as usize;
+        let mut name_bytes = vec![0u8; name_len];
+        r.read_exact(&mut name_bytes)?;
+        let name = String::from_utf8(name_bytes).context("tensor name not utf-8")?;
+
+        let dtype = r.read_u8()?;
+        let ndim = r.read_u8()? as usize;
+        let mut shape = Vec::with_capacity(ndim);
+        for _ in 0..ndim {
+            shape.push(r.read_u32::<LittleEndian>()? as usize);
+        }
+        let n: usize = shape.iter().product::<usize>().max(1);
+        let n = if ndim == 0 { 1 } else { n };
+
+        let t = match dtype {
+            0 => {
+                let mut data = vec![0f32; n];
+                r.read_f32_into::<LittleEndian>(&mut data)?;
+                AnyTensor::F32(Tensor::new(shape, data)?)
+            }
+            1 => {
+                let mut data = vec![0i32; n];
+                r.read_i32_into::<LittleEndian>(&mut data)?;
+                AnyTensor::I32(TensorI32 { shape, data })
+            }
+            d => bail!("{}: unknown dtype {d} for {name:?}", path.display()),
+        };
+        index.insert(name.clone(), entries.len());
+        entries.push((name, t));
+    }
+    Ok(Container { entries, index })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    /// Hand-roll a container matching io_prt.py's layout.
+    fn write_test_container(path: &Path) {
+        let mut buf: Vec<u8> = Vec::new();
+        buf.extend(MAGIC.to_le_bytes());
+        buf.extend(2u32.to_le_bytes());
+        // f32 tensor "a" of shape (2, 2)
+        buf.extend(1u16.to_le_bytes());
+        buf.push(b'a');
+        buf.push(0); // dtype f32
+        buf.push(2); // ndim
+        buf.extend(2u32.to_le_bytes());
+        buf.extend(2u32.to_le_bytes());
+        for v in [1.0f32, 2.0, 3.0, 4.5] {
+            buf.extend(v.to_le_bytes());
+        }
+        // i32 tensor "y" of shape (3,)
+        buf.extend(1u16.to_le_bytes());
+        buf.push(b'y');
+        buf.push(1); // dtype i32
+        buf.push(1); // ndim
+        buf.extend(3u32.to_le_bytes());
+        for v in [7i32, -1, 0] {
+            buf.extend(v.to_le_bytes());
+        }
+        File::create(path).unwrap().write_all(&buf).unwrap();
+    }
+
+    #[test]
+    fn reads_both_dtypes_in_order() {
+        let p = std::env::temp_dir().join("precis_test_container.prt");
+        write_test_container(&p);
+        let c = read_container(&p).unwrap();
+        assert_eq!(c.names(), vec!["a", "y"]);
+        let a = c.f32("a").unwrap();
+        assert_eq!(a.shape(), &[2, 2]);
+        assert_eq!(a.data(), &[1.0, 2.0, 3.0, 4.5]);
+        let y = c.i32("y").unwrap();
+        assert_eq!(y.data, vec![7, -1, 0]);
+        assert!(c.f32("y").is_err());
+        assert!(c.i32("a").is_err());
+        assert!(c.f32("zz").is_err());
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let p = std::env::temp_dir().join("precis_test_badmagic.prt");
+        File::create(&p).unwrap().write_all(&[0u8; 16]).unwrap();
+        assert!(read_container(&p).is_err());
+        std::fs::remove_file(&p).ok();
+    }
+}

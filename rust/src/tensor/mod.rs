@@ -1,0 +1,126 @@
+//! Minimal dense f32/i32 tensors + the `.prt` container reader.
+//!
+//! Deliberately tiny: row-major contiguous storage, shape bookkeeping,
+//! and the handful of view ops the inference engine needs.  Not a
+//! general ndarray — the engine's hot loops index raw slices directly.
+
+pub mod io;
+
+use anyhow::{bail, Result};
+
+/// Row-major dense f32 tensor.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    shape: Vec<usize>,
+    data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Result<Tensor> {
+        let n: usize = shape.iter().product();
+        if n != data.len() {
+            bail!("shape {:?} wants {} elements, got {}", shape, n, data.len());
+        }
+        Ok(Tensor { shape, data })
+    }
+
+    pub fn zeros(shape: Vec<usize>) -> Tensor {
+        let n = shape.iter().product();
+        Tensor { shape, data: vec![0.0; n] }
+    }
+
+    pub fn from_fn(shape: Vec<usize>, mut f: impl FnMut(usize) -> f32) -> Tensor {
+        let n: usize = shape.iter().product();
+        Tensor { shape, data: (0..n).map(&mut f).collect() }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn into_data(self) -> Vec<f32> {
+        self.data
+    }
+
+    /// Reshape without copying (must preserve element count).
+    pub fn reshape(mut self, shape: Vec<usize>) -> Result<Tensor> {
+        let n: usize = shape.iter().product();
+        if n != self.data.len() {
+            bail!("reshape {:?} -> {:?}: element count mismatch", self.shape, shape);
+        }
+        self.shape = shape;
+        Ok(self)
+    }
+
+    /// Row `i` of a rank-2 tensor.
+    pub fn row(&self, i: usize) -> &[f32] {
+        assert_eq!(self.shape.len(), 2);
+        let w = self.shape[1];
+        &self.data[i * w..(i + 1) * w]
+    }
+
+    /// Slice of the leading axis: rows `[lo, hi)` of the flattened
+    /// [d0, rest...] view (used for batching the eval set).
+    pub fn slice_rows(&self, lo: usize, hi: usize) -> Tensor {
+        assert!(!self.shape.is_empty());
+        let rest: usize = self.shape[1..].iter().product();
+        let mut shape = self.shape.clone();
+        shape[0] = hi - lo;
+        Tensor {
+            shape,
+            data: self.data[lo * rest..hi * rest].to_vec(),
+        }
+    }
+}
+
+/// Row-major dense i32 tensor (labels).
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorI32 {
+    pub shape: Vec<usize>,
+    pub data: Vec<i32>,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn new_checks_element_count() {
+        assert!(Tensor::new(vec![2, 3], vec![0.0; 6]).is_ok());
+        assert!(Tensor::new(vec![2, 3], vec![0.0; 5]).is_err());
+    }
+
+    #[test]
+    fn reshape_and_rows() {
+        let t = Tensor::from_fn(vec![2, 3], |i| i as f32);
+        assert_eq!(t.row(1), &[3.0, 4.0, 5.0]);
+        let r = t.reshape(vec![3, 2]).unwrap();
+        assert_eq!(r.row(2), &[4.0, 5.0]);
+        assert!(r.clone().reshape(vec![7]).is_err());
+    }
+
+    #[test]
+    fn slice_rows_takes_leading_axis() {
+        let t = Tensor::from_fn(vec![4, 2, 2], |i| i as f32);
+        let s = t.slice_rows(1, 3);
+        assert_eq!(s.shape(), &[2, 2, 2]);
+        assert_eq!(s.data()[0], 4.0);
+        assert_eq!(s.len(), 8);
+    }
+}

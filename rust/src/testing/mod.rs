@@ -1,0 +1,4 @@
+//! In-repo testing substrates (proptest is not in the offline crate set —
+//! DESIGN.md §6).
+
+pub mod prop;

@@ -1,0 +1,167 @@
+//! Seeded property-testing mini-framework (the offline substitute for
+//! `proptest`; DESIGN.md §6).
+//!
+//! Model: a property is a closure over a [`Gen`]; [`run_prop`] executes
+//! it for N seeded cases.  On failure it re-runs a *shrinking* pass —
+//! re-executing the property with truncated size budgets — and always
+//! prints the failing case's seed, so a regression can be replayed with
+//! [`run_prop_seeded`].  Deliberately value-agnostic: shrinking reduces
+//! the generator's size budget (which generators consult for lengths and
+//! magnitudes) rather than structurally shrinking values; this keeps the
+//! framework ~150 lines while still converging on small counterexamples.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+
+use crate::util::rng::Pcg32;
+
+/// Random-value source handed to properties.
+pub struct Gen {
+    rng: Pcg32,
+    /// size budget in [0.0, 1.0]; generators scale ranges by it
+    pub size: f64,
+}
+
+impl Gen {
+    pub fn new(seed: u64, size: f64) -> Gen {
+        Gen { rng: Pcg32::seeded(seed), size }
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.next_u32() & 1 == 1
+    }
+
+    /// Inclusive integer range, scaled down by the size budget when shrinking.
+    pub fn int_in(&mut self, lo: i64, hi: i64) -> i64 {
+        assert!(lo <= hi);
+        let span = (hi - lo) as u64 + 1;
+        let eff = ((span as f64 * self.size).ceil() as u64).clamp(1, span);
+        lo + (self.rng.next_u64() % eff) as i64
+    }
+
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        self.int_in(lo as i64, hi as i64) as usize
+    }
+
+    pub fn f32_in(&mut self, lo: f32, hi: f32) -> f32 {
+        self.rng.range(lo, lo + (hi - lo) * self.size as f32)
+    }
+
+    pub fn f32_normal(&mut self) -> f32 {
+        self.rng.normal() * self.size as f32
+    }
+
+    /// Vector with length in [min_len, max_len] (size-scaled).
+    pub fn vec_f32(&mut self, min_len: usize, max_len: usize) -> Vec<f32> {
+        let n = self.usize_in(min_len, max_len);
+        (0..n).map(|_| self.f32_normal()).collect()
+    }
+
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.rng.below(xs.len() as u32) as usize]
+    }
+}
+
+/// Run `cases` seeded executions of `prop`.  Panics (failing the test)
+/// with the seed of the smallest failing case found.
+pub fn run_prop<F: Fn(&mut Gen)>(name: &str, cases: u32, prop: F) {
+    // fixed base seed for reproducibility; override via PRECIS_PROP_SEED
+    let base: u64 = std::env::var("PRECIS_PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0x5eed_0000);
+    for i in 0..cases {
+        let seed = base.wrapping_add(i as u64);
+        if let Err(msg) = try_case(&prop, seed, 1.0) {
+            // shrink: retry the same seed with smaller size budgets and
+            // report the smallest budget that still fails
+            let mut fail_size = 1.0;
+            let mut fail_msg = msg;
+            for &size in &[0.02, 0.05, 0.1, 0.25, 0.5] {
+                if let Err(m) = try_case(&prop, seed, size) {
+                    fail_size = size;
+                    fail_msg = m;
+                    break;
+                }
+            }
+            panic!(
+                "property {name:?} failed (seed={seed:#x}, size={fail_size}): {fail_msg}\n\
+                 replay with run_prop_seeded({name:?}, {seed:#x}, {fail_size}, ...)"
+            );
+        }
+    }
+}
+
+/// Replay a single case (for regression pinning).
+pub fn run_prop_seeded<F: Fn(&mut Gen)>(name: &str, seed: u64, size: f64, prop: F) {
+    if let Err(msg) = try_case(&prop, seed, size) {
+        panic!("property {name:?} failed (seed={seed:#x}, size={size}): {msg}");
+    }
+}
+
+fn try_case<F: Fn(&mut Gen)>(prop: &F, seed: u64, size: f64) -> Result<(), String> {
+    let result = catch_unwind(AssertUnwindSafe(|| {
+        let mut g = Gen::new(seed, size);
+        prop(&mut g);
+    }));
+    match result {
+        Ok(()) => Ok(()),
+        Err(e) => {
+            let msg = e
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| e.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".to_string());
+            Err(msg)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        run_prop("tautology", 100, |g| {
+            let v = g.vec_f32(0, 16);
+            assert!(v.len() <= 16);
+        });
+    }
+
+    #[test]
+    fn failing_property_reports_seed() {
+        let r = catch_unwind(AssertUnwindSafe(|| {
+            run_prop("always_false", 10, |g| {
+                let x = g.int_in(0, 100);
+                assert!(x < 0, "x={x} is not negative");
+            });
+        }));
+        let msg = match r {
+            Err(e) => e.downcast_ref::<String>().cloned().unwrap_or_default(),
+            Ok(()) => panic!("property should have failed"),
+        };
+        assert!(msg.contains("seed="), "missing seed in: {msg}");
+        assert!(msg.contains("always_false"));
+    }
+
+    #[test]
+    fn generators_respect_ranges() {
+        run_prop("ranges", 200, |g| {
+            let i = g.int_in(-5, 5);
+            assert!((-5..=5).contains(&i));
+            let u = g.usize_in(3, 9);
+            assert!((3..=9).contains(&u));
+            let f = g.f32_in(1.0, 2.0);
+            assert!((1.0..=2.0).contains(&f));
+        });
+    }
+
+    #[test]
+    fn seeded_replay_is_deterministic() {
+        let mut a = Gen::new(99, 1.0);
+        let mut b = Gen::new(99, 1.0);
+        for _ in 0..50 {
+            assert_eq!(a.int_in(0, 1000), b.int_in(0, 1000));
+        }
+    }
+}

@@ -1,0 +1,127 @@
+//! Tiny CLI argument parser (clap is not in the offline crate set).
+//!
+//! Model: `repro <subcommand> [--flag value]... [--switch]... [positional]...`
+//! Flags can be declared with defaults; unknown flags are an error so
+//! typos fail loudly.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Result};
+
+#[derive(Debug, Default)]
+pub struct Args {
+    flags: BTreeMap<String, String>,
+    switches: Vec<String>,
+    positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse raw arguments.  `known_switches` are boolean flags that take
+    /// no value; everything else starting with `--` consumes one value.
+    pub fn parse(raw: &[String], known_switches: &[&str]) -> Result<Args> {
+        let mut out = Args::default();
+        let mut i = 0;
+        while i < raw.len() {
+            let a = &raw[i];
+            if let Some(name) = a.strip_prefix("--") {
+                if known_switches.contains(&name) {
+                    out.switches.push(name.to_string());
+                } else {
+                    let v = raw
+                        .get(i + 1)
+                        .ok_or_else(|| anyhow!("flag --{name} needs a value"))?;
+                    out.flags.insert(name.to_string(), v.clone());
+                    i += 1;
+                }
+            } else {
+                out.positional.push(a.clone());
+            }
+            i += 1;
+        }
+        Ok(out)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> Result<usize> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(s) => s
+                .parse()
+                .map_err(|_| anyhow!("--{name} expects an integer, got {s:?}")),
+        }
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> Result<f64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(s) => s
+                .parse()
+                .map_err(|_| anyhow!("--{name} expects a number, got {s:?}")),
+        }
+    }
+
+    pub fn has(&self, switch: &str) -> bool {
+        self.switches.iter().any(|s| s == switch)
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+
+    /// Error if any flag outside `allowed` was passed (typo guard).
+    pub fn check_known(&self, allowed: &[&str]) -> Result<()> {
+        for k in self.flags.keys() {
+            if !allowed.contains(&k.as_str()) {
+                bail!("unknown flag --{k} (allowed: {})", allowed.join(", "));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn s(v: &[&str]) -> Vec<String> {
+        v.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_flags_switches_positional() {
+        let a = Args::parse(&s(&["fig6", "--net", "lenet5", "--verbose", "extra"]), &["verbose"])
+            .unwrap();
+        assert_eq!(a.positional(), &["fig6", "extra"]);
+        assert_eq!(a.get("net"), Some("lenet5"));
+        assert!(a.has("verbose"));
+        assert!(!a.has("quiet"));
+    }
+
+    #[test]
+    fn typed_getters() {
+        let a = Args::parse(&s(&["--n", "42", "--x", "1.5"]), &[]).unwrap();
+        assert_eq!(a.get_usize("n", 0).unwrap(), 42);
+        assert_eq!(a.get_f64("x", 0.0).unwrap(), 1.5);
+        assert_eq!(a.get_usize("missing", 7).unwrap(), 7);
+        assert!(a.get_usize("x", 0).is_err());
+    }
+
+    #[test]
+    fn missing_value_is_error() {
+        assert!(Args::parse(&s(&["--net"]), &[]).is_err());
+    }
+
+    #[test]
+    fn unknown_flag_guard() {
+        let a = Args::parse(&s(&["--good", "1", "--bad", "2"]), &[]).unwrap();
+        assert!(a.check_known(&["good"]).is_err());
+        assert!(a.check_known(&["good", "bad"]).is_ok());
+    }
+}

@@ -1,0 +1,11 @@
+//! Offline-build substrates: PRNG, mini-JSON, CLI parsing, timing.
+//!
+//! The vendored crate set excludes `rand`, `serde`, `clap` and friends
+//! (DESIGN.md §6), so these are small, fully tested from-scratch
+//! implementations sized exactly to this repository's needs.
+
+pub mod cli;
+pub mod json;
+pub mod rng;
+pub mod stats;
+pub mod timer;

@@ -1,0 +1,118 @@
+//! Small statistics helpers shared by search/ and figures/: mean,
+//! Pearson correlation, coefficient of determination (R²) and ordinary
+//! least squares for the paper's linear accuracy model (§3.3, Fig 9).
+
+/// Arithmetic mean; 0.0 for empty input.
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        0.0
+    } else {
+        xs.iter().sum::<f64>() / xs.len() as f64
+    }
+}
+
+/// Pearson product-moment correlation coefficient.
+pub fn pearson(xs: &[f64], ys: &[f64]) -> f64 {
+    assert_eq!(xs.len(), ys.len());
+    let n = xs.len();
+    if n < 2 {
+        return 0.0;
+    }
+    let mx = mean(xs);
+    let my = mean(ys);
+    let mut sxy = 0.0;
+    let mut sxx = 0.0;
+    let mut syy = 0.0;
+    for i in 0..n {
+        let dx = xs[i] - mx;
+        let dy = ys[i] - my;
+        sxy += dx * dy;
+        sxx += dx * dx;
+        syy += dy * dy;
+    }
+    if sxx == 0.0 || syy == 0.0 {
+        return 0.0;
+    }
+    sxy / (sxx * syy).sqrt()
+}
+
+/// Linear coefficient of determination between paired observations —
+/// the paper's similarity metric over last-layer activations (§3.3):
+/// the square of the Pearson correlation of (exact, quantized) pairs.
+pub fn r_squared(exact: &[f64], quant: &[f64]) -> f64 {
+    let r = pearson(exact, quant);
+    r * r
+}
+
+/// Ordinary least squares y ≈ a·x + b.  Returns (a, b).
+pub fn ols(xs: &[f64], ys: &[f64]) -> (f64, f64) {
+    assert_eq!(xs.len(), ys.len());
+    let n = xs.len();
+    if n == 0 {
+        return (0.0, 0.0);
+    }
+    let mx = mean(xs);
+    let my = mean(ys);
+    let mut sxy = 0.0;
+    let mut sxx = 0.0;
+    for i in 0..n {
+        sxy += (xs[i] - mx) * (ys[i] - my);
+        sxx += (xs[i] - mx) * (xs[i] - mx);
+    }
+    if sxx == 0.0 {
+        return (0.0, my);
+    }
+    let a = sxy / sxx;
+    (a, my - a * mx)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_basic() {
+        assert_eq!(mean(&[]), 0.0);
+        assert_eq!(mean(&[2.0, 4.0]), 3.0);
+    }
+
+    #[test]
+    fn pearson_perfect_and_anti() {
+        let x = [1.0, 2.0, 3.0, 4.0];
+        let y: Vec<f64> = x.iter().map(|v| 2.0 * v + 1.0).collect();
+        assert!((pearson(&x, &y) - 1.0).abs() < 1e-12);
+        let z: Vec<f64> = x.iter().map(|v| -v).collect();
+        assert!((pearson(&x, &z) + 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn pearson_degenerate() {
+        assert_eq!(pearson(&[1.0, 1.0, 1.0], &[1.0, 2.0, 3.0]), 0.0);
+        assert_eq!(pearson(&[1.0], &[2.0]), 0.0);
+    }
+
+    #[test]
+    fn r2_of_noisy_line_is_high() {
+        let x: Vec<f64> = (0..100).map(|i| i as f64).collect();
+        let y: Vec<f64> = x.iter().enumerate()
+            .map(|(i, v)| 3.0 * v + if i % 2 == 0 { 0.5 } else { -0.5 })
+            .collect();
+        assert!(r_squared(&x, &y) > 0.999);
+    }
+
+    #[test]
+    fn ols_recovers_line() {
+        let x: Vec<f64> = (0..50).map(|i| i as f64 / 10.0).collect();
+        let y: Vec<f64> = x.iter().map(|v| -1.5 * v + 4.0).collect();
+        let (a, b) = ols(&x, &y);
+        assert!((a + 1.5).abs() < 1e-12);
+        assert!((b - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ols_degenerate_x() {
+        let (a, b) = ols(&[2.0, 2.0], &[1.0, 3.0]);
+        assert_eq!(a, 0.0);
+        assert_eq!(b, 2.0);
+    }
+}

@@ -1,0 +1,58 @@
+//! Wall-clock timing helpers for coordinator metrics and benches.
+
+use std::time::Instant;
+
+/// Simple stopwatch.
+pub struct Timer {
+    start: Instant,
+}
+
+impl Timer {
+    pub fn start() -> Self {
+        Self { start: Instant::now() }
+    }
+
+    pub fn elapsed_s(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    pub fn elapsed_ms(&self) -> f64 {
+        self.elapsed_s() * 1e3
+    }
+}
+
+/// Format a duration in adaptive units.
+pub fn human(seconds: f64) -> String {
+    if seconds < 1e-6 {
+        format!("{:.1}ns", seconds * 1e9)
+    } else if seconds < 1e-3 {
+        format!("{:.1}µs", seconds * 1e6)
+    } else if seconds < 1.0 {
+        format!("{:.1}ms", seconds * 1e3)
+    } else if seconds < 120.0 {
+        format!("{seconds:.2}s")
+    } else {
+        format!("{:.1}min", seconds / 60.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timer_advances() {
+        let t = Timer::start();
+        std::thread::sleep(std::time::Duration::from_millis(5));
+        assert!(t.elapsed_ms() >= 4.0);
+    }
+
+    #[test]
+    fn human_units() {
+        assert!(human(3e-9).ends_with("ns"));
+        assert!(human(3e-5).ends_with("µs"));
+        assert!(human(3e-2).ends_with("ms"));
+        assert!(human(3.0).ends_with('s'));
+        assert!(human(300.0).ends_with("min"));
+    }
+}

@@ -1,0 +1,305 @@
+//! End-to-end integration over the real artifacts (requires
+//! `make artifacts` to have run; the Makefile orders this).
+//!
+//! Covers: zoo loading, native-engine accuracy vs the trainer's recorded
+//! exact accuracy, precision-degradation behaviour across the design
+//! space, the §3.3 search against the exhaustive baseline, the parallel
+//! sweep coordinator, and the batching server.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use precis::coordinator::cache::ResultCache;
+use precis::coordinator::server::InferenceServer;
+use precis::coordinator::{sweep_formats, Coordinator};
+use precis::eval::sweep::{forward_eval, EvalOptions};
+use precis::eval::{accuracy, topk_accuracy};
+use precis::figures;
+use precis::formats::Format;
+use precis::nn::{Engine, Network, Zoo};
+use precis::search::{
+    collect_model_points, exhaustive_search, search, AccuracyModel, SearchSpec,
+};
+
+fn zoo() -> Zoo {
+    Zoo::load(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts")).expect("run `make artifacts` first")
+}
+
+fn opts(samples: usize) -> EvalOptions {
+    EvalOptions { samples, batch: 32 }
+}
+
+/// A small-but-representative slice of the design space for fast tests.
+fn test_space() -> Vec<Format> {
+    vec![
+        Format::float(2, 4),
+        Format::float(4, 5),
+        Format::float(7, 6),
+        Format::float(10, 6),
+        Format::float(16, 8),
+        Format::fixed(2, 2),
+        Format::fixed(4, 8),
+        Format::fixed(8, 8),
+        Format::fixed(12, 12),
+    ]
+}
+
+#[test]
+fn zoo_loads_all_five_networks() {
+    let z = zoo();
+    let mut names = z.names();
+    names.sort();
+    assert_eq!(
+        names,
+        vec!["alexnet-mini", "cifarnet", "googlenet-mini", "lenet5", "vgg-mini"]
+    );
+    for net in z.by_size_desc() {
+        assert!(net.n_params > 10_000, "{} too small", net.name);
+        assert_eq!(net.eval_len(), 512);
+        assert!(net.eval_acc_exact > 0.85, "{} undertrained", net.name);
+    }
+    // paper ordering precondition: googlenet has the longest MAC chain
+    let g = z.network("googlenet-mini").unwrap();
+    for other in z.by_size_desc() {
+        assert!(g.max_chain >= other.max_chain);
+    }
+}
+
+#[test]
+fn native_exact_accuracy_matches_trainer() {
+    // the native serial-K engine and jnp's parallel-reduction matmul
+    // differ only in f32 association; accuracy must agree closely
+    let z = zoo();
+    for name in ["lenet5", "cifarnet"] {
+        let net = z.network(name).unwrap();
+        let acc = accuracy(&net, &Format::SINGLE, 512).unwrap();
+        assert!(
+            (acc - net.eval_acc_exact).abs() < 0.02,
+            "{name}: native {acc} vs trainer {}",
+            net.eval_acc_exact
+        );
+    }
+}
+
+#[test]
+fn degradation_anatomy_across_formats() {
+    let z = zoo();
+    let net = z.network("lenet5").unwrap();
+    let base = accuracy(&net, &Format::SINGLE, 96).unwrap();
+
+    // wide float: within noise of exact
+    let wide = accuracy(&net, &Format::float(16, 8), 96).unwrap();
+    assert!((wide - base).abs() < 0.03, "wide {wide} vs base {base}");
+
+    // 1-bit mantissa + 2-bit exponent: collapses to ~chance
+    let tiny = accuracy(&net, &Format::float(1, 2), 96).unwrap();
+    assert!(tiny < base * 0.6, "tiny float should collapse: {tiny} vs {base}");
+
+    // fixed with zero integer bits saturates at 1: collapses
+    let sat = accuracy(&net, &Format::fixed(0, 2), 96).unwrap();
+    assert!(sat < base * 0.7, "saturating fixed should collapse: {sat}");
+}
+
+#[test]
+fn float_beats_fixed_at_iso_accuracy_on_long_chain_net() {
+    // paper finding 3, on the longest-chain network: compare the total
+    // bits needed to stay within 1% of baseline
+    let z = zoo();
+    let net = z.network("googlenet-mini").unwrap();
+    let o = opts(96);
+    let mut engine = Engine::new();
+    let (bl, labels) = forward_eval(&mut engine, &net, &Format::SINGLE, &o);
+    let base = topk_accuracy(&bl, &labels, net.classes, net.topk);
+
+    let need_bits = |fmts: &[Format]| -> Option<u32> {
+        let mut best: Option<u32> = None;
+        for f in fmts {
+            let (lg, _) = forward_eval(&mut Engine::new(), &net, f, &o);
+            let acc = topk_accuracy(&lg, &labels, net.classes, net.topk);
+            if acc >= 0.99 * base {
+                best = Some(best.map_or(f.total_bits(), |b| b.min(f.total_bits())));
+            }
+        }
+        best
+    };
+
+    // total-bit ladders at representative allocations
+    let floats: Vec<Format> = (4..=14).map(|m| Format::float(m, 6)).collect();
+    let fixeds: Vec<Format> = (4..=14).map(|r| Format::fixed(6, r)).collect();
+    let fb = need_bits(&floats).expect("some float config must reach 99%");
+    if let Some(xb) = need_bits(&fixeds) {
+        assert!(fb <= xb, "float needs {fb} bits, fixed needs {xb}");
+    }
+    assert!(fb <= 21, "float should reach 99% within 21 bits, needed {fb}");
+}
+
+#[test]
+fn sweep_coordinator_matches_sequential_and_caches() {
+    let z = zoo();
+    let net = z.network("lenet5").unwrap();
+    let o = opts(64);
+    let space = test_space();
+    let cache = ResultCache::ephemeral();
+
+    let par = sweep_formats(&net, &space, &o, 4, &cache);
+    let seq = precis::eval::sweep_design_space(&net, &space, &o);
+    assert_eq!(par.len(), seq.len());
+    for (p, s) in par.iter().zip(seq.iter()) {
+        assert_eq!(p.format, s.format);
+        assert!((p.accuracy - s.accuracy).abs() < 1e-12, "{}", p.format);
+        assert!((p.speedup - s.speedup).abs() < 1e-12);
+    }
+    // second run hits the cache (same values, cache populated)
+    assert!(cache.len() >= space.len());
+    let par2 = sweep_formats(&net, &space, &o, 2, &cache);
+    for (a, b) in par.iter().zip(par2.iter()) {
+        assert_eq!(a.accuracy, b.accuracy);
+    }
+}
+
+#[test]
+fn accuracy_model_transfers_across_networks() {
+    // fit on lenet5+cifarnet points, check it ranks alexnet-mini configs:
+    // high-R² configs must predict near-1 normalized accuracy
+    let z = zoo();
+    let o = opts(64);
+    let space = test_space();
+    let mut pts = Vec::new();
+    for name in ["lenet5", "cifarnet"] {
+        let net = z.network(name).unwrap();
+        pts.extend(collect_model_points(&net, &space, &o, 7).into_iter().map(|(_, p)| p));
+    }
+    let model = AccuracyModel::fit(&pts);
+    assert!(model.fit_r > 0.7, "fit r = {} too weak", model.fit_r);
+    assert!(model.predict(1.0) > 0.9);
+    assert!(model.predict(1.0) > model.predict(0.2));
+}
+
+#[test]
+fn search_with_two_refinements_matches_exhaustive() {
+    // the paper's Fig 10 claim, on a thinned float space over lenet5
+    let z = zoo();
+    let net = z.network("lenet5").unwrap();
+    let o = opts(64);
+    let space: Vec<Format> = (1..=18).map(|m| Format::float(m, 6)).collect();
+
+    let mut pts = Vec::new();
+    for name in ["cifarnet", "alexnet-mini"] {
+        let n = z.network(name).unwrap();
+        pts.extend(collect_model_points(&n, &space, &o, 7).into_iter().map(|(_, p)| p));
+    }
+    let model = AccuracyModel::fit(&pts);
+
+    let spec = SearchSpec {
+        formats: space,
+        target: 0.99,
+        refine_samples: 2,
+        opts: o,
+        seed: 7,
+    };
+    let (ex, _) = exhaustive_search(&net, &spec);
+    let out = search(&net, &spec, &model);
+
+    let exf = ex.chosen.expect("exhaustive must find a config");
+    let ouf = out.chosen.expect("search must find a config");
+    // the chosen config always meets the target...
+    assert!(out.measured_norm_acc >= spec.target, "{}", out.measured_norm_acc);
+    // ...and is within one ladder step of the exhaustive optimum
+    let d = (exf.total_bits() as i64 - ouf.total_bits() as i64).abs();
+    assert!(d <= 1, "exhaustive {exf} vs search {ouf}");
+    // and it is substantially cheaper.  (On this 18-config test ladder
+    // the probe pass is a third of the exhaustive cost; the paper's
+    // 170x ratio needs the full ~240-config space with full eval sets —
+    // that ratio is reported by `repro search` / fig10.)
+    assert!(
+        out.sample_forwards * 3 < ex.sample_forwards,
+        "search {} vs exhaustive {}",
+        out.sample_forwards,
+        ex.sample_forwards
+    );
+}
+
+#[test]
+fn batching_server_native_end_to_end() {
+    let z = zoo();
+    let net: Arc<Network> = z.network("lenet5").unwrap();
+    let fmt = Format::float(10, 6);
+    let server = InferenceServer::native(net.clone(), 8, fmt, Duration::from_millis(5));
+
+    // submit 20 async requests (forces batching + a padded final batch)
+    let px = net.input.iter().product::<usize>();
+    let mut pending = Vec::new();
+    for i in 0..20 {
+        let pixels = net.eval_x.data()[i * px..(i + 1) * px].to_vec();
+        pending.push((i, server.infer_async(pixels).unwrap()));
+    }
+    // responses must match the engine run directly
+    let mut engine = Engine::new();
+    let direct = engine.forward(&net, &net.eval_x.slice_rows(0, 20), &fmt);
+    for (i, rx) in pending {
+        let got = rx.recv().unwrap().unwrap();
+        let want = &direct.data()[i * net.classes..(i + 1) * net.classes];
+        assert_eq!(got.as_slice(), want, "request {i}");
+    }
+    let stats = server.shutdown();
+    assert_eq!(stats.requests, 20);
+    assert!(stats.batches >= 3);
+}
+
+#[test]
+fn server_rejects_malformed_input() {
+    let z = zoo();
+    let net = z.network("lenet5").unwrap();
+    let server = InferenceServer::native(net, 4, Format::SINGLE, Duration::from_millis(1));
+    assert!(server.infer(vec![0.0; 3]).is_err());
+}
+
+#[test]
+fn fig8_trace_reproduces_saturation_story() {
+    let z = zoo();
+    let net = z.network("alexnet-mini").unwrap();
+    let t = figures::fig8(&net, 0).unwrap();
+    // chain length = deepest conv K = 3*3*48
+    assert_eq!(t.rows.len(), 3 * 3 * 48);
+    // the exact column and the m8e6 column should end close; the m2
+    // column should show visible rounding error
+    let last = t.rows.last().unwrap();
+    let exact: f64 = last[1].parse().unwrap();
+    let idx_m8 = t.headers.iter().position(|h| h == "float:m8e6").unwrap();
+    let idx_m2 = t.headers.iter().position(|h| h == "float:m2e8").unwrap();
+    let m8: f64 = last[idx_m8].parse().unwrap();
+    let m2: f64 = last[idx_m2].parse().unwrap();
+    let scale = exact.abs().max(0.1);
+    assert!((m8 - exact).abs() / scale < 0.05, "m8e6 {m8} vs exact {exact}");
+    assert!((m8 - exact).abs() <= (m2 - exact).abs());
+}
+
+#[test]
+fn pareto_helper_picks_fastest_meeting_target() {
+    let z = zoo();
+    let net = z.network("cifarnet").unwrap();
+    let o = opts(64);
+    let cache = ResultCache::ephemeral();
+    let res = sweep_formats(&net, &test_space(), &o, 2, &cache);
+    if let Some(best) = figures::pareto(&res, 0.99) {
+        assert!(best.normalized_accuracy >= 0.99);
+        for r in &res {
+            if r.normalized_accuracy >= 0.99 {
+                assert!(best.speedup >= r.speedup);
+            }
+        }
+    }
+}
+
+#[test]
+fn coordinator_facade_sweeps_with_cache_file() {
+    let z = zoo();
+    let dir = std::env::temp_dir().join("precis_it_cache");
+    std::fs::remove_dir_all(&dir).ok();
+    let cache = ResultCache::open(dir.join("cache.json"));
+    let coord = Coordinator::new(z, cache).with_workers(2);
+    let res = coord.sweep("lenet5", &test_space()[..4], &opts(48)).unwrap();
+    assert_eq!(res.len(), 4);
+    assert!(dir.join("cache.json").exists());
+    std::fs::remove_dir_all(&dir).ok();
+}

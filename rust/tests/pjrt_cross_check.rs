@@ -1,0 +1,126 @@
+//! THE three-layer equivalence proof: the AOT artifacts (JAX model +
+//! Pallas per-op-rounded kernels, lowered to HLO and executed through
+//! PJRT) must agree with the pure-Rust native engine **bit-exactly**,
+//! for every representation kind, across real networks.
+//!
+//! This is what licenses using the native engine for the big sweeps
+//! while the PJRT path serves requests: they are the same function.
+
+use precis::eval::topk_accuracy;
+use precis::formats::Format;
+use precis::nn::{Engine, Zoo};
+use precis::runtime::Runtime;
+use precis::tensor::Tensor;
+
+fn artifacts_dir() -> std::path::PathBuf {
+    std::path::PathBuf::from(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts"))
+}
+
+fn max_ulp_diff(a: &[f32], b: &[f32]) -> u32 {
+    a.iter()
+        .zip(b)
+        .map(|(x, y)| {
+            let (bx, by) = ((x + 0.0).to_bits() as i64, (y + 0.0).to_bits() as i64);
+            (bx - by).unsigned_abs() as u32
+        })
+        .max()
+        .unwrap_or(0)
+}
+
+fn cross_check(net_name: &str, fmts: &[Format]) {
+    let dir = artifacts_dir();
+    let zoo = Zoo::load(&dir).expect("run `make artifacts` first");
+    let rt = Runtime::cpu().expect("PJRT cpu client");
+    let net = zoo.network(net_name).unwrap();
+    let mut engine = Engine::new();
+
+    let x = net.eval_x.slice_rows(0, zoo.batch);
+    let mut models = std::collections::BTreeMap::new();
+    for fmt in fmts {
+        let kind = if fmt.is_float() { "float" } else { "fixed" };
+        let model = models.entry(kind).or_insert_with(|| {
+            rt.load_network(&net, &dir, kind, zoo.batch)
+                .unwrap_or_else(|e| panic!("load {net_name} {kind}: {e:#}"))
+        });
+
+        let pjrt_logits = model.run_batch(&x, fmt).unwrap();
+        let native_logits = engine.forward(&net, &x, fmt);
+        assert_eq!(pjrt_logits.shape(), native_logits.shape());
+        let ulp = max_ulp_diff(pjrt_logits.data(), native_logits.data());
+        assert_eq!(
+            ulp, 0,
+            "{net_name} @ {fmt}: PJRT and native logits differ (max {ulp} ulp)"
+        );
+    }
+}
+
+#[test]
+fn lenet5_bitexact_across_formats() {
+    cross_check(
+        "lenet5",
+        &[
+            Format::SINGLE,
+            Format::float(7, 6),
+            Format::float(2, 4),
+            Format::float(12, 8),
+            Format::fixed(8, 8),
+            Format::fixed(2, 6),
+            Format::fixed(0, 4),
+        ],
+    );
+}
+
+#[test]
+fn cifarnet_bitexact() {
+    cross_check("cifarnet", &[Format::float(8, 5), Format::fixed(6, 10)]);
+}
+
+#[test]
+fn googlenet_mini_bitexact_exercises_inception_and_gavgpool() {
+    cross_check(
+        "googlenet-mini",
+        &[Format::SINGLE, Format::float(9, 6), Format::fixed(10, 8)],
+    );
+}
+
+#[test]
+fn vgg_and_alexnet_bitexact() {
+    cross_check("vgg-mini", &[Format::float(6, 6)]);
+    cross_check("alexnet-mini", &[Format::fixed(8, 12)]);
+}
+
+#[test]
+fn pjrt_eval_accuracy_matches_native() {
+    let dir = artifacts_dir();
+    let zoo = Zoo::load(&dir).unwrap();
+    let rt = Runtime::cpu().unwrap();
+    let net = zoo.network("lenet5").unwrap();
+    let fmt = Format::float(10, 6);
+    let model = rt.load_network(&net, &dir, "float", zoo.batch).unwrap();
+    let n = 96;
+    let (logits, labels) = model.run_eval(n, &fmt).unwrap();
+    let pjrt_acc = topk_accuracy(&logits, &labels, net.classes, net.topk);
+    let native_acc = precis::eval::accuracy(&net, &fmt, n).unwrap();
+    assert!(
+        (pjrt_acc - native_acc).abs() < 1e-12,
+        "pjrt {pjrt_acc} vs native {native_acc}"
+    );
+}
+
+#[test]
+fn run_batch_rejects_wrong_kind_and_shape() {
+    let dir = artifacts_dir();
+    let zoo = Zoo::load(&dir).unwrap();
+    let rt = Runtime::cpu().unwrap();
+    let net = zoo.network("lenet5").unwrap();
+    let model = rt.load_network(&net, &dir, "float", zoo.batch).unwrap();
+    let x = net.eval_x.slice_rows(0, zoo.batch);
+    // fixed format into a float executable
+    assert!(model.run_batch(&x, &Format::fixed(8, 8)).is_err());
+    // wrong batch size
+    let bad = net.eval_x.slice_rows(0, 3);
+    assert!(model.run_batch(&bad, &Format::float(7, 6)).is_err());
+    // tensor of the wrong rank entirely
+    let junk = Tensor::zeros(vec![zoo.batch, 2, 2, 1]);
+    assert!(model.run_batch(&junk, &Format::float(7, 6)).is_err());
+}
