@@ -1,0 +1,23 @@
+# Build-time entry points.  `artifacts` is the only step that needs
+# Python/JAX; everything after it is pure cargo (DESIGN.md §2).
+
+.PHONY: verify artifacts bench clean-artifacts
+
+# tier-1 verify (ROADMAP.md)
+verify:
+	cargo build --release && cargo test -q
+
+# train the mini zoo + AOT-lower the HLO artifacts into artifacts/
+artifacts: artifacts/.stamp
+
+artifacts/.stamp: python/compile/aot.py python/compile/model.py \
+		python/compile/train.py python/compile/datagen.py \
+		python/compile/io_prt.py python/compile/kernels/qformat.py \
+		python/compile/kernels/qmatmul.py python/compile/kernels/ref.py
+	python3 -m python.compile.aot --out-dir artifacts
+
+bench:
+	cargo bench
+
+clean-artifacts:
+	rm -rf artifacts

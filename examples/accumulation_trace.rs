@@ -10,12 +10,15 @@ use precis::figures::{fig8_formats, neuron_chain};
 use precis::nn::Zoo;
 use precis::numerics::trace::{trace_accumulation, trace_exact};
 
+/// Repo-root artifacts dir, valid from any cwd (matches tests/benches).
+const ARTIFACTS: &str = concat!(env!("CARGO_MANIFEST_DIR"), "/../artifacts");
+
 fn main() -> Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let net_name = args.first().map(|s| s.as_str()).unwrap_or("alexnet-mini");
     let sample: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(0);
 
-    let zoo = Zoo::load("artifacts")?;
+    let zoo = Zoo::load(ARTIFACTS)?;
     let net = zoo.network(net_name)?;
     let (weights, inputs) = neuron_chain(&net, sample)?;
     println!(

@@ -9,7 +9,9 @@
 //!    refinement evaluations) for every network over the full design
 //!    space, on the native engine;
 //! 4. validates the chosen configuration END-TO-END through the PJRT
-//!    path (the AOT artifact), confirming the two backends agree;
+//!    path (the AOT artifact), confirming the two backends agree —
+//!    `pjrt` feature builds only, otherwise reported as skipped
+//!    (DESIGN.md §5);
 //! 5. reports the Fig 11 table and the paper's headline metric: mean
 //!    speedup at <1% accuracy degradation.
 //!
@@ -22,14 +24,77 @@ use anyhow::Result;
 use precis::coordinator::cache::ResultCache;
 use precis::coordinator::Coordinator;
 use precis::eval::sweep::EvalOptions;
-use precis::eval::topk_accuracy;
 use precis::figures::cross_validated_model;
-use precis::formats;
-use precis::nn::Zoo;
-use precis::runtime::Runtime;
+use precis::formats::{self, Format};
+use precis::nn::{Network, Zoo};
 use precis::search::{search, SearchSpec};
 use precis::util::cli::Args;
 use precis::util::timer::Timer;
+
+/// Repo-root artifacts/results dirs, valid from any cwd (matches
+/// tests/benches).
+const ARTIFACTS: &str = concat!(env!("CARGO_MANIFEST_DIR"), "/../artifacts");
+const CACHE: &str = concat!(env!("CARGO_MANIFEST_DIR"), "/../results/cache.json");
+
+/// One PJRT client for the whole run (PJRT clients are one-per-process;
+/// see `runtime/pjrt.rs`).  `accuracy` returns `Ok(None)` only for "no
+/// usable PJRT runtime" (feature off, or the client cannot start —
+/// e.g. the offline `xla` stub), reported as a skip; a runtime that
+/// *does* start but then fails to load or execute the artifact is a
+/// real error and propagates — a broken artifact must not be
+/// indistinguishable from a native-only build.
+#[cfg(feature = "pjrt")]
+struct PjrtValidator {
+    rt: Option<precis::runtime::Runtime>,
+}
+
+#[cfg(feature = "pjrt")]
+impl PjrtValidator {
+    fn new() -> PjrtValidator {
+        match precis::runtime::Runtime::cpu() {
+            Ok(rt) => PjrtValidator { rt: Some(rt) },
+            Err(e) => {
+                eprintln!("(PJRT unavailable: {e:#})");
+                PjrtValidator { rt: None }
+            }
+        }
+    }
+
+    fn accuracy(
+        &self,
+        net: &std::sync::Arc<Network>,
+        coord: &Coordinator,
+        chosen: &Format,
+        samples: usize,
+    ) -> Result<Option<f64>> {
+        use precis::eval::topk_accuracy;
+        let Some(rt) = &self.rt else { return Ok(None) };
+        let kind = if chosen.is_float() { "float" } else { "fixed" };
+        let loaded = rt.load_network(net, &coord.zoo.dir, kind, coord.zoo.batch)?;
+        let (logits, labels) = loaded.run_eval(samples, chosen)?;
+        Ok(Some(topk_accuracy(&logits, &labels, net.classes, net.topk)))
+    }
+}
+
+#[cfg(not(feature = "pjrt"))]
+struct PjrtValidator;
+
+#[cfg(not(feature = "pjrt"))]
+impl PjrtValidator {
+    fn new() -> PjrtValidator {
+        PjrtValidator
+    }
+
+    fn accuracy(
+        &self,
+        _net: &std::sync::Arc<Network>,
+        _coord: &Coordinator,
+        _chosen: &Format,
+        _samples: usize,
+    ) -> Result<Option<f64>> {
+        Ok(None)
+    }
+}
 
 fn main() -> Result<()> {
     let raw: Vec<String> = std::env::args().skip(1).collect();
@@ -39,11 +104,13 @@ fn main() -> Result<()> {
     let opts = EvalOptions { samples, batch: 32 };
 
     let t_total = Timer::start();
-    let zoo = Zoo::load("artifacts")?;
-    let cache = ResultCache::open("results/cache.json");
+    let zoo = Zoo::load(ARTIFACTS)?;
+    let cache = ResultCache::open(CACHE);
     let coord = Coordinator::new(zoo, cache);
-    let rt = Runtime::cpu()?;
-    println!("PJRT platform: {}\n", rt.platform());
+    if !precis::runtime::AVAILABLE {
+        println!("(native-only build: PJRT validation reported as `skip` — DESIGN.md §5)\n");
+    }
+    let validator = PjrtValidator::new();
 
     println!(
         "{:<16} {:>8} {:<14} {:>9} {:>9} {:>10} {:>12}",
@@ -68,14 +135,18 @@ fn main() -> Result<()> {
             continue;
         };
 
-        // end-to-end validation through the AOT/PJRT path
-        let kind = if chosen.is_float() { "float" } else { "fixed" };
-        let loaded = rt.load_network(&net, &coord.zoo.dir, kind, coord.zoo.batch)?;
-        let (logits, labels) = loaded.run_eval(samples, &chosen)?;
-        let pjrt_acc = topk_accuracy(&logits, &labels, net.classes, net.topk);
+        // end-to-end validation through the AOT/PJRT path, when available
         let native_acc = precis::eval::accuracy(&net, &chosen, samples)?;
-        let agrees = (pjrt_acc - native_acc).abs() < 1e-12;
+        let pjrt_acc = validator.accuracy(&net, &coord, &chosen, samples)?;
+        let ok = pjrt_acc.map(|p| (p - native_acc).abs() < 1e-12);
+        let agrees = match ok {
+            Some(true) => "yes",
+            Some(false) => "NO",
+            None => "skip",
+        };
 
+        // print the row before failing on disagreement, so the numbers
+        // a mismatch needs debugging with are on screen
         println!(
             "{:<16} {:>8} {:<14} {:>8.2}x {:>8.2}x {:>10.4} {:>12} ({:.0}s)",
             net.name,
@@ -84,10 +155,16 @@ fn main() -> Result<()> {
             out.speedup,
             precis::hw::energy_savings(&chosen),
             out.measured_norm_acc,
-            if agrees { "yes" } else { "NO" },
+            agrees,
             t.elapsed_s(),
         );
-        assert!(agrees, "PJRT and native disagree on {}", net.name);
+        if ok == Some(false) {
+            anyhow::bail!(
+                "PJRT and native disagree on {}: pjrt {:?} vs native {native_acc}",
+                net.name,
+                pjrt_acc
+            );
+        }
 
         speedups.push(out.speedup);
         if matches!(net.name.as_str(), "googlenet-mini" | "vgg-mini" | "alexnet-mini") {

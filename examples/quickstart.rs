@@ -11,8 +11,11 @@ use precis::formats::Format;
 use precis::hw;
 use precis::nn::Zoo;
 
+/// Repo-root artifacts dir, valid from any cwd (matches tests/benches).
+const ARTIFACTS: &str = concat!(env!("CARGO_MANIFEST_DIR"), "/../artifacts");
+
 fn main() -> Result<()> {
-    let zoo = Zoo::load("artifacts")?;
+    let zoo = Zoo::load(ARTIFACTS)?;
     let net = zoo.network("lenet5")?;
     println!(
         "network: {} ({} params, longest MAC chain {})\n",

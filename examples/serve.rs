@@ -1,21 +1,67 @@
-//! Serving-style driver: the PJRT-backed dynamic-batching inference
-//! server under a closed-loop client population, reporting latency
-//! percentiles, throughput and batching efficiency.
+//! Serving-style driver: the dynamic-batching inference server under a
+//! closed-loop client population, reporting latency percentiles,
+//! throughput and batching efficiency.
+//!
+//! With the `pjrt` feature (and a real `xla` crate — DESIGN.md §5) the
+//! backend is the AOT/PJRT executable; otherwise it falls back cleanly
+//! to the native engine, which is bit-exact by contract (DESIGN.md §3).
 //!
 //!     cargo run --release --example serve -- [--net lenet5] \
-//!         [--format float:m10e6] [--requests 256] [--clients 8]
+//!         [--format float:m10e6] [--requests 256] [--clients 8] \
+//!         [--backend auto|native|pjrt]
 
+use std::path::PathBuf;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
-use precis::coordinator::server::{InferenceServer, PjrtRunner};
+use precis::coordinator::server::InferenceServer;
 use precis::eval::topk_accuracy;
 use precis::formats::Format;
-use precis::nn::Zoo;
-use precis::runtime::Runtime;
+use precis::nn::{Network, Zoo};
 use precis::util::cli::Args;
+
+/// Repo-root artifacts dir, valid from any cwd (matches tests/benches).
+const ARTIFACTS: &str = concat!(env!("CARGO_MANIFEST_DIR"), "/../artifacts");
+
+/// Spawn the PJRT-backed server, or `Err` when this build has no PJRT
+/// runtime or the artifact is missing.  PJRT handles are not Send, so
+/// the one-and-only client is built on the dispatcher thread via the
+/// factory; runtime startup failures surface on the caller's warm-up
+/// request (below), never as a second probe client.
+#[cfg(feature = "pjrt")]
+fn spawn_pjrt(
+    net: Arc<Network>,
+    dir: PathBuf,
+    kind: String,
+    batch: usize,
+    fmt: Format,
+    wait: Duration,
+) -> Result<InferenceServer> {
+    use precis::coordinator::server::PjrtRunner;
+    use precis::runtime::Runtime;
+    let hlo = net.hlo_path(&dir, &kind)?;
+    anyhow::ensure!(hlo.exists(), "missing HLO artifact {}", hlo.display());
+    let net2 = net.clone();
+    Ok(InferenceServer::spawn(net, batch, fmt, wait, move || {
+        let rt = Runtime::cpu()?;
+        let model = rt.load_network(&net2, &dir, &kind, batch)?;
+        Ok(PjrtRunner { model })
+    }))
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn spawn_pjrt(
+    _net: Arc<Network>,
+    _dir: PathBuf,
+    _kind: String,
+    _batch: usize,
+    _fmt: Format,
+    _wait: Duration,
+) -> Result<InferenceServer> {
+    anyhow::bail!("this build has no PJRT runtime (rebuild with `--features pjrt` — DESIGN.md §5)")
+}
 
 fn main() -> Result<()> {
     let raw: Vec<String> = std::env::args().skip(1).collect();
@@ -25,35 +71,58 @@ fn main() -> Result<()> {
     let n_requests = args.get_usize("requests", 256)?;
     let n_clients = args.get_usize("clients", 8)?;
     let wait_ms = args.get_usize("wait-ms", 10)?;
+    let backend = args.get_or("backend", "auto").to_string();
 
-    let zoo = Zoo::load("artifacts")?;
+    let zoo = Zoo::load(ARTIFACTS)?;
     let net = zoo.network(&net_name)?;
     let batch = zoo.batch;
     let dir = zoo.dir.clone();
     let kind = if fmt.is_float() { "float" } else { "fixed" };
+    let wait = Duration::from_millis(wait_ms as u64);
 
     println!(
-        "serving {net_name} @ {} (batch {batch}, {n_clients} closed-loop clients, {n_requests} requests)",
+        "serving {net_name} @ {} (batch {batch}, {n_clients} closed-loop clients, \
+         {n_requests} requests, backend {backend})",
         fmt.id()
     );
 
-    // PJRT handles are not Send: the runner is built on the dispatcher
-    // thread via the factory.
-    let net2 = net.clone();
-    let kind2 = kind.to_string();
-    let server = Arc::new(InferenceServer::spawn(
-        net.clone(),
-        batch,
-        fmt,
-        Duration::from_millis(wait_ms as u64),
-        move || {
-            let rt = Runtime::cpu()?;
-            let model = rt.load_network(&net2, &dir, &kind2, batch)?;
-            Ok(PjrtRunner { model })
-        },
-    ));
-
     let px: usize = net.input.iter().product();
+    // Every backend gets one warm-up request before measurement: it
+    // proves the backend end to end (the PJRT client + compile happen
+    // lazily on the dispatcher thread) and absorbs cold-start latency
+    // symmetrically, so native and pjrt telemetry stay comparable —
+    // each includes exactly one artificial 1-request warm-up batch.
+    let warm_up = |s: InferenceServer| -> Result<InferenceServer> {
+        s.infer(net.eval_x.data()[..px].to_vec())?;
+        Ok(s)
+    };
+    // `resolved` records which backend actually serves, so the stdout
+    // report can never label auto-fallback native numbers as pjrt
+    let (server, resolved) = match backend.as_str() {
+        "native" => (warm_up(InferenceServer::native(net.clone(), batch, fmt, wait))?, "native"),
+        // explicit pjrt: unavailability is a hard error, never a silent
+        // native run mislabeled as pjrt
+        "pjrt" => (
+            warm_up(spawn_pjrt(net.clone(), dir, kind.to_string(), batch, fmt, wait)?)?,
+            "pjrt",
+        ),
+        "auto" => {
+            match spawn_pjrt(net.clone(), dir, kind.to_string(), batch, fmt, wait)
+                .and_then(&warm_up)
+            {
+                Ok(s) => (s, "pjrt"),
+                Err(e) => {
+                    eprintln!("(PJRT unavailable — serving on the native engine: {e:#})");
+                    (
+                        warm_up(InferenceServer::native(net.clone(), batch, fmt, wait))?,
+                        "native",
+                    )
+                }
+            }
+        }
+        b => anyhow::bail!("unknown backend {b:?} (auto|native|pjrt)"),
+    };
+    let server = Arc::new(server);
     let t0 = Instant::now();
     let mut latencies: Vec<f64> = Vec::with_capacity(n_requests);
     let mut predictions: Vec<(usize, Vec<f32>)> = Vec::with_capacity(n_requests);
@@ -99,7 +168,7 @@ fn main() -> Result<()> {
         .map(|s| s.shutdown())
         .unwrap_or_default();
 
-    println!("\nresults:");
+    println!("\nresults (backend {resolved}):");
     println!("  throughput     : {:.1} req/s", n_requests as f64 / wall);
     println!("  latency p50    : {:.2} ms", pct(0.5));
     println!("  latency p90    : {:.2} ms", pct(0.9));

@@ -1,21 +1,33 @@
 //! Micro-benchmarks of the hot paths (in-repo harness; criterion is not
-//! in the offline crate set).  Run: `cargo bench --offline`.
+//! in the offline crate set — DESIGN.md §6).  Run: `cargo bench`.
 //!
-//! Sections: quantizer kernels, quantized GEMM, native forward passes,
-//! PJRT batch execution.  These are the §Perf L3 measurement points —
-//! before/after numbers live in EXPERIMENTS.md.
+//! Sections: quantizer kernels, quantized GEMM (blocked vs the retained
+//! naive reference — the ISSUE 1 ≥2x acceptance gate), native forward
+//! passes, PJRT batch execution (`pjrt` feature).  These are the
+//! §Perf L3 measurement points — before/after numbers live in
+//! CHANGES.md / EXPERIMENTS.md.
 
 use precis::bench_harness::{section, Bench};
 use precis::formats::Format;
-use precis::nn::{Engine, Zoo};
+use precis::nn::{gemm_q, gemm_q_naive, Engine, Zoo};
 use precis::numerics::{dot_q, Quantizer};
-use precis::runtime::Runtime;
 use precis::util::rng::Pcg32;
+
+const ARTIFACTS: &str = concat!(env!("CARGO_MANIFEST_DIR"), "/../artifacts");
 
 fn randv(n: usize, seed: u64) -> Vec<f32> {
     let mut r = Pcg32::seeded(seed);
     (0..n).map(|_| r.normal()).collect()
 }
+
+/// GEMM shapes of the seed networks' conv (im2col) and dense layers at
+/// batch 32: (M, K, N) = (b*oh*ow, kh*kw*cin, cout) / (b, in, out).
+const GEMM_SHAPES: [(usize, usize, usize); 4] = [
+    (25088, 25, 20), // lenet5 conv1 at batch 32: 5x5x1 -> 20
+    (32, 400, 120),  // lenet5 dense1 at batch 32: 400 -> 120
+    (6272, 147, 24), // cifarnet conv1 at batch 32: 7x7x3 -> 24
+    (3200, 432, 48), // alexnet-mini conv2 at batch 32: 3x3x48 -> 48
+];
 
 fn main() {
     let mut b = Bench::default();
@@ -30,10 +42,7 @@ fn main() {
             precis::numerics::quantize_slice(&mut buf, &q);
             buf[0]
         });
-        println!(
-            "    -> {:.0} Melem/s",
-            r.throughput(4096.0) / 1e6
-        );
+        println!("    -> {:.0} Melem/s", r.throughput(4096.0) / 1e6);
     }
 
     section("dot_q (per-op-rounded MAC chain)");
@@ -47,24 +56,33 @@ fn main() {
         }
     }
 
-    section("gemm_q");
-    for (m, k, n) in [(64usize, 256usize, 32usize), (400, 147, 24), (100, 600, 32)] {
+    section("gemm_q: blocked kernel vs naive reference (seed-net shapes)");
+    for (m, k, n) in GEMM_SHAPES {
         let a = randv(m * k, 4);
         let w = randv(k * n, 5);
         let mut out = vec![0.0f32; m * n];
-        let q = Quantizer::new(&Format::float(7, 6));
-        let r = b.run(&format!("gemm_q/{m}x{k}x{n}/float:m7e6"), || {
-            precis::nn::gemm_q(&a, &w, &mut out, m, k, n, &q);
-            out[0]
-        });
-        println!(
-            "    -> {:.1} Mmac/s",
-            r.throughput((m * k * n) as f64) / 1e6
-        );
+        let macs = (m * k * n) as f64;
+        for fmt in [Format::float(7, 6), Format::fixed(8, 8), Format::SINGLE] {
+            let q = Quantizer::new(&fmt);
+            let blocked = b.run(&format!("gemm_q/{m}x{k}x{n}/{}", fmt.id()), || {
+                gemm_q(&a, &w, &mut out, m, k, n, &q);
+                out[0]
+            });
+            let naive = b.run(&format!("gemm_q_naive/{m}x{k}x{n}/{}", fmt.id()), || {
+                gemm_q_naive(&a, &w, &mut out, m, k, n, &q);
+                out[0]
+            });
+            println!(
+                "    -> blocked {:.1} Mmac/s, naive {:.1} Mmac/s: {:.2}x",
+                blocked.throughput(macs) / 1e6,
+                naive.throughput(macs) / 1e6,
+                naive.median / blocked.median
+            );
+        }
     }
 
     // artifact-dependent benches are skipped gracefully when absent
-    let Ok(zoo) = Zoo::load(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts")) else {
+    let Ok(zoo) = Zoo::load(ARTIFACTS) else {
         println!("\n(artifacts/ missing — run `make artifacts` for the network benches)");
         return;
     };
@@ -80,6 +98,13 @@ fn main() {
         });
         println!("    -> {:.1} samples/s", r.throughput(32.0));
     }
+
+    pjrt_bench(&mut b, &zoo);
+}
+
+#[cfg(feature = "pjrt")]
+fn pjrt_bench(b: &mut Bench, zoo: &Zoo) {
+    use precis::runtime::Runtime;
 
     section("PJRT batch execution (lenet5)");
     match Runtime::cpu() {
@@ -97,4 +122,9 @@ fn main() {
         }
         Err(e) => println!("(PJRT unavailable: {e})"),
     }
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn pjrt_bench(_b: &mut Bench, _zoo: &Zoo) {
+    println!("\n(PJRT bench skipped: build with --features pjrt — DESIGN.md §5)");
 }

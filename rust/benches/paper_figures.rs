@@ -21,7 +21,7 @@ fn main() {
     b.run("fig4_mac_delay_area", || figures::fig4().rows.len());
     b.run("fig5_speedup_composition", || figures::fig5().rows.len());
 
-    let Ok(zoo) = Zoo::load(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts")) else {
+    let Ok(zoo) = Zoo::load(concat!(env!("CARGO_MANIFEST_DIR"), "/../artifacts")) else {
         println!("(artifacts/ missing — run `make artifacts` for the sweep benches)");
         return;
     };

@@ -20,7 +20,6 @@ use anyhow::{anyhow, Result};
 
 use crate::formats::Format;
 use crate::nn::{Engine, Network};
-use crate::runtime::LoadedModel;
 use crate::tensor::Tensor;
 
 /// Anything that can run a fixed-size batch (B, H, W, C) -> (B, classes).
@@ -46,12 +45,16 @@ impl BatchRunner for NativeRunner {
     }
 }
 
-/// PJRT backend (the AOT artifact executable).  Construct it inside the
-/// server's factory closure — it cannot cross threads.
+/// PJRT backend (the AOT artifact executable; `pjrt` feature only —
+/// builds without it fall back to [`NativeRunner`], DESIGN.md §5).
+/// Construct it inside the server's factory closure — it cannot cross
+/// threads.
+#[cfg(feature = "pjrt")]
 pub struct PjrtRunner {
-    pub model: LoadedModel,
+    pub model: crate::runtime::LoadedModel,
 }
 
+#[cfg(feature = "pjrt")]
 impl BatchRunner for PjrtRunner {
     fn run(&mut self, x: &Tensor, fmt: &Format) -> Result<Tensor> {
         self.model.run_batch(x, fmt)

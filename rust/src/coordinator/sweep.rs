@@ -7,12 +7,18 @@ use anyhow::Result;
 use crate::coordinator::cache::{CachedAccuracy, ResultCache};
 use crate::coordinator::pool::{default_workers, run_indexed};
 use crate::eval::metrics::topk_accuracy;
-use crate::eval::sweep::{forward_eval, ConfigResult, EvalOptions};
+use crate::eval::sweep::{forward_eval, forward_eval_parallel, ConfigResult, EvalOptions};
 use crate::formats::Format;
 use crate::hw;
 use crate::nn::{Engine, Network, Zoo};
 
 /// Parallel sweep of `formats` over one network, with caching.
+///
+/// Two levels of parallelism, both through the same pool
+/// (DESIGN.md §7): the formats fan out over `workers` with one engine
+/// per worker, and the baseline evaluation that gates the sweep — a
+/// single config, which format-level fan-out alone would run on one
+/// core — fans its *batches* out instead.
 pub fn sweep_formats(
     net: &Arc<Network>,
     formats: &[Format],
@@ -23,7 +29,7 @@ pub fn sweep_formats(
     let samples = opts.samples.min(net.eval_len());
 
     // baseline accuracy on the identical subset (cached like any config)
-    let baseline = cached_accuracy(net, &Format::SINGLE, opts, cache, 1.0).accuracy;
+    let baseline = cached_accuracy(net, &Format::SINGLE, opts, cache, 1.0, workers).accuracy;
 
     let jobs: Vec<Format> = formats.to_vec();
     let results = run_indexed(
@@ -64,13 +70,13 @@ fn cached_accuracy(
     opts: &EvalOptions,
     cache: &ResultCache,
     na: f64,
+    workers: usize,
 ) -> CachedAccuracy {
     let samples = opts.samples.min(net.eval_len());
     if let Some(hit) = cache.get(&net.name, &fmt.id(), samples) {
         return hit;
     }
-    let mut engine = Engine::new();
-    let (logits, labels) = forward_eval(&mut engine, net, fmt, opts);
+    let (logits, labels) = forward_eval_parallel(net, fmt, opts, workers);
     let acc = topk_accuracy(&logits, &labels, net.classes, net.topk);
     let v = CachedAccuracy { accuracy: acc, normalized_accuracy: na };
     cache.put(&net.name, &fmt.id(), samples, v);

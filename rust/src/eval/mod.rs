@@ -4,4 +4,6 @@ pub mod metrics;
 pub mod sweep;
 
 pub use metrics::{topk_accuracy, topk_hits};
-pub use sweep::{accuracy, eval_config, sweep_design_space, ConfigResult, EvalOptions};
+pub use sweep::{
+    accuracy, eval_config, forward_eval_parallel, sweep_design_space, ConfigResult, EvalOptions,
+};

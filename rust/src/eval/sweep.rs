@@ -8,6 +8,7 @@ use std::sync::Arc;
 
 use anyhow::Result;
 
+use crate::coordinator::pool::{default_workers, run_indexed};
 use crate::eval::metrics::topk_accuracy;
 use crate::formats::Format;
 use crate::hw;
@@ -44,6 +45,7 @@ pub struct ConfigResult {
 }
 
 /// Forward the first `opts.samples` eval inputs; returns (logits, labels).
+/// `opts.batch` is clamped to at least 1 (a zero batch would not advance).
 pub fn forward_eval(
     engine: &mut Engine,
     net: &Network,
@@ -51,15 +53,52 @@ pub fn forward_eval(
     opts: &EvalOptions,
 ) -> (Vec<f32>, Vec<i32>) {
     let n = opts.samples.min(net.eval_len()).max(1);
+    let batch = opts.batch.max(1);
     let classes = net.classes;
     let mut logits = Vec::with_capacity(n * classes);
     let mut lo = 0;
     while lo < n {
-        let hi = (lo + opts.batch).min(n);
+        let hi = (lo + batch).min(n);
         let xb = net.eval_x.slice_rows(lo, hi);
         let out = engine.forward(net, &xb, fmt);
         logits.extend_from_slice(out.data());
         lo = hi;
+    }
+    (logits, net.eval_y[..n].to_vec())
+}
+
+/// Batch-parallel [`forward_eval`]: the same batches, fanned out over
+/// [`run_indexed`] with one scratch-buffer [`Engine`] per worker
+/// (DESIGN.md §7).  Per-sample computation is identical regardless of
+/// which worker runs a batch, so the logits are bit-identical to the
+/// sequential driver — only wall-clock changes.  This is what keeps a
+/// design-space sweep saturating all cores even when it has fewer
+/// formats in flight than the machine has cores (e.g. the baseline
+/// evaluation every sweep starts with, or a single-config `eval`).
+pub fn forward_eval_parallel(
+    net: &Network,
+    fmt: &Format,
+    opts: &EvalOptions,
+    workers: usize,
+) -> (Vec<f32>, Vec<i32>) {
+    let n = opts.samples.min(net.eval_len()).max(1);
+    // same clamp as forward_eval, so both paths use identical batching
+    let batch = opts.batch.max(1);
+    let jobs: Vec<(usize, usize)> = (0..n)
+        .step_by(batch)
+        .map(|lo| (lo, (lo + batch).min(n)))
+        .collect();
+    if workers <= 1 || jobs.len() <= 1 {
+        let mut engine = Engine::new();
+        return forward_eval(&mut engine, net, fmt, opts);
+    }
+    let chunks = run_indexed(&jobs, workers, Engine::new, |engine, &(lo, hi)| {
+        let xb = net.eval_x.slice_rows(lo, hi);
+        engine.forward(net, &xb, fmt).into_data()
+    });
+    let mut logits = Vec::with_capacity(n * net.classes);
+    for chunk in chunks {
+        logits.extend_from_slice(&chunk);
     }
     (logits, net.eval_y[..n].to_vec())
 }
@@ -81,11 +120,11 @@ pub fn forward_indices(
     engine.forward(net, &x, fmt).into_data()
 }
 
-/// Top-k accuracy of one configuration on the eval subset.
+/// Top-k accuracy of one configuration on the eval subset, with the
+/// batches spread over all cores (bit-identical to the sequential path).
 pub fn accuracy(net: &Network, fmt: &Format, samples: usize) -> Result<f64> {
-    let mut engine = Engine::new();
     let opts = EvalOptions { samples, ..Default::default() };
-    let (logits, labels) = forward_eval(&mut engine, net, fmt, &opts);
+    let (logits, labels) = forward_eval_parallel(net, fmt, &opts, default_workers());
     Ok(topk_accuracy(&logits, &labels, net.classes, net.topk))
 }
 

@@ -11,6 +11,7 @@
 //! * [`nn`]         — pure-Rust quantized inference engine (the "modified
 //!                    Caffe" substitute; bit-exact vs the Pallas kernel)
 //! * [`runtime`]    — PJRT client: load + execute `artifacts/*.hlo.txt`
+//!                    (behind the `pjrt` feature; DESIGN.md §5)
 //! * [`coordinator`]— sweep orchestrator: job queue, worker pool, cache
 //! * [`search`]     — the paper's §3.3 contribution: last-layer R² →
 //!                    linear accuracy model → model+N-samples search
@@ -21,7 +22,7 @@
 //! * [`testing`]    — in-repo property-testing framework
 //! * [`bench_harness`] — in-repo micro-benchmark framework
 //!
-//! Quickstart (after `make artifacts`):
+//! Quickstart (after `make artifacts`; see README.md):
 //!
 //! ```no_run
 //! use precis::{formats::Format, nn::Zoo};
@@ -30,7 +31,7 @@
 //! let net = zoo.network("lenet5").unwrap();
 //! let fmt = Format::float(7, 6);
 //! let acc = precis::eval::accuracy(&net, &fmt, 128).unwrap();
-//! println!("lenet5 @ {fmt}: top-1 = {:.3}", acc);
+//! println!("lenet5 @ {fmt}: top-1 = {acc:.3}");
 //! ```
 
 pub mod bench_harness;

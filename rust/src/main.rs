@@ -93,13 +93,7 @@ fn run(raw: &[String]) -> Result<()> {
             let t = Timer::start();
             let acc = match args.get_or("backend", "native") {
                 "native" => accuracy(&net, &fmt, samples)?,
-                "pjrt" => {
-                    let rt = precis::runtime::Runtime::cpu()?;
-                    let kind = if fmt.is_float() { "float" } else { "fixed" };
-                    let model = rt.load_network(&net, &artifacts, kind, zoo.batch)?;
-                    let (logits, labels) = model.run_eval(samples, &fmt)?;
-                    precis::eval::topk_accuracy(&logits, &labels, net.classes, net.topk)
-                }
+                "pjrt" => pjrt_eval(&net, &artifacts, &fmt, samples, zoo.batch)?,
                 b => bail!("unknown backend {b:?}"),
             };
             println!(
@@ -208,6 +202,36 @@ fn run(raw: &[String]) -> Result<()> {
         }
     }
     Ok(())
+}
+
+/// `eval --backend pjrt`: run the AOT HLO artifact through the PJRT
+/// runtime (`pjrt` feature; DESIGN.md §5).
+#[cfg(feature = "pjrt")]
+fn pjrt_eval(
+    net: &std::sync::Arc<precis::nn::Network>,
+    artifacts: &std::path::Path,
+    fmt: &Format,
+    samples: usize,
+    batch: usize,
+) -> Result<f64> {
+    let rt = precis::runtime::Runtime::cpu()?;
+    let kind = if fmt.is_float() { "float" } else { "fixed" };
+    let model = rt.load_network(net, artifacts, kind, batch)?;
+    let (logits, labels) = model.run_eval(samples, fmt)?;
+    Ok(precis::eval::topk_accuracy(&logits, &labels, net.classes, net.topk))
+}
+
+/// Native-only builds: fail with a pointer at the feature instead of a
+/// missing symbol.
+#[cfg(not(feature = "pjrt"))]
+fn pjrt_eval(
+    _net: &std::sync::Arc<precis::nn::Network>,
+    _artifacts: &std::path::Path,
+    _fmt: &Format,
+    _samples: usize,
+    _batch: usize,
+) -> Result<f64> {
+    bail!("this build has no PJRT runtime; rebuild with `--features pjrt` (DESIGN.md §5)")
 }
 
 fn one_figure(

@@ -13,7 +13,9 @@
 //!   spatial positions, then one rounded multiply by q(1/HW).
 //!
 //! The engine owns scratch buffers so a sweep makes **zero heap
-//! allocations per forward** after warm-up (§Perf L3 target).
+//! allocations per forward** after warm-up, and the GEMM at its core is
+//! the M/N cache-blocked [`gemm_q`] with a strictly serial k chain per
+//! output element (§Perf L3 target; DESIGN.md §4).
 
 use crate::formats::Format;
 use crate::nn::layers::Layer;
@@ -325,10 +327,107 @@ fn im2col(
     }
 }
 
+/// Rows of A processed together per tile.  Each output element's MAC
+/// chain is a serial dependence of ~the full quantizer latency per k
+/// step; interleaving `GEMM_MR` independent rows inside the k loop keeps
+/// that many chains in flight, which is where the blocked kernel beats
+/// the naive one at the small-N GEMM shapes the seed networks produce
+/// (conv out_ch 16..64, dense out_dim 10..512).
+const GEMM_MR: usize = 8;
+/// Output columns per tile: the out tile (`GEMM_MR * GEMM_NC` floats)
+/// and one W row stay L1-resident across the whole k loop.
+const GEMM_NC: usize = 64;
+
 /// Per-op-truncated GEMM: out[m][n] = chain_k q(acc + q(a[m][k] * w[k][n])).
-/// Row-major A (M,K), W (K,N), out (M,N).  The inner n-loop is the
-/// vectorizable hot loop of the whole repository.
+/// Row-major A (M,K), W (K,N), out (M,N).
+///
+/// This is THE sweep hot path, so it is cache-blocked over M and N
+/// (DESIGN.md §4).  The k loop stays **strictly serial in increasing k
+/// per output element** — that ordering is the bit-exactness contract
+/// (module header; DESIGN.md §3) and the reason K is never tiled out of
+/// order.  Tiling M/N only regroups *independent* chains, so the result
+/// is bit-identical to [`gemm_q_naive`] (property test below; ratio
+/// re-measured by the `hot_paths` bench).
+///
+/// The exact baseline `Format::SINGLE` takes an identity-quantizer fast
+/// path: the mantissa-rounding machinery (dead at m = 23) is elided,
+/// while the flush-to-zero and ±inf-saturation steps are **kept** via
+/// `ftz_sat` — normal operands can still cancel into the subnormal
+/// window mid-chain, so dropping the flush would silently break the
+/// 0-ulp contract with the Pallas/PJRT path.  Bit-exactness of the fast
+/// path therefore holds unconditionally
+/// (`single_fast_path_is_bitexact_even_off_normal_range`).
 pub fn gemm_q(a: &[f32], w: &[f32], out: &mut [f32], m: usize, k: usize, n: usize, q: &Quantizer) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(w.len(), k * n);
+    debug_assert_eq!(out.len(), m * n);
+    if q.is_identity() {
+        gemm_blocked(a, w, out, m, k, n, |acc, av, wv| ftz_sat(acc + ftz_sat(av * wv)));
+    } else {
+        gemm_blocked(a, w, out, m, k, n, |acc, av, wv| q.q(acc + q.q(av * wv)));
+    }
+}
+
+/// [`crate::numerics::Quantizer::q`] at F(23,8), with the rounding step
+/// (a no-op when no mantissa bits are dropped) removed: flush subnormal
+/// magnitudes to zero, saturate ±inf to max-finite, pass NaN through —
+/// the same operation order as the generic path, so bit-exact with it
+/// on every input.
+#[inline(always)]
+fn ftz_sat(x: f32) -> f32 {
+    let bits = x.to_bits();
+    let sign = bits & 0x8000_0000;
+    let mag = f32::from_bits(bits & 0x7FFF_FFFF);
+    let y = if mag > f32::MAX { f32::MAX } else { mag };
+    let y = if y < f32::MIN_POSITIVE { 0.0 } else { y };
+    f32::from_bits(sign | 0x3F80_0000) * y
+}
+
+/// The one blocked loop nest, monomorphized per MAC step: the quantized
+/// chain and the `SINGLE` fast path share tiling by construction, so a
+/// tiling change can never desynchronize them.
+#[inline(always)]
+fn gemm_blocked(
+    a: &[f32],
+    w: &[f32],
+    out: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    mac: impl Fn(f32, f32, f32) -> f32,
+) {
+    for n0 in (0..n).step_by(GEMM_NC) {
+        let n1 = (n0 + GEMM_NC).min(n);
+        for m0 in (0..m).step_by(GEMM_MR) {
+            let m1 = (m0 + GEMM_MR).min(m);
+            for mi in m0..m1 {
+                out[mi * n + n0..mi * n + n1].fill(0.0);
+            }
+            for ki in 0..k {
+                let wrow = &w[ki * n + n0..ki * n + n1];
+                for mi in m0..m1 {
+                    let av = a[mi * k + ki];
+                    let orow = &mut out[mi * n + n0..mi * n + n1];
+                    for (o, &wv) in orow.iter_mut().zip(wrow) {
+                        *o = mac(*o, av, wv);
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// The retained naive triple loop — the readable reference the blocked
+/// kernel is verified against (bit-exact; same per-element k chain).
+pub fn gemm_q_naive(
+    a: &[f32],
+    w: &[f32],
+    out: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    q: &Quantizer,
+) {
     debug_assert_eq!(a.len(), m * k);
     debug_assert_eq!(w.len(), k * n);
     debug_assert_eq!(out.len(), m * n);
@@ -481,6 +580,92 @@ mod tests {
         gemm_q(&a, &w, &mut out, 1, k, 1, &qz);
         assert_eq!(out[0], dot_q(&a, &w, &qz));
         assert_eq!(out[0], 16.0 - 1.0 / 16.0);
+    }
+
+    /// Deterministic ragged-tile check: shapes that straddle both the
+    /// `GEMM_MR` and `GEMM_NC` boundaries must agree bitwise with the
+    /// naive reference.
+    #[test]
+    fn blocked_matches_naive_on_ragged_tiles() {
+        let (m, k, n) = (GEMM_MR + 1, 19, GEMM_NC + 3);
+        let a: Vec<f32> = (0..m * k).map(|i| (i as f32 * 0.19).sin()).collect();
+        let w: Vec<f32> = (0..k * n).map(|i| (i as f32 * 0.41).cos()).collect();
+        for fmt in [Format::float(5, 5), Format::fixed(3, 6), Format::SINGLE] {
+            let q = Quantizer::new(&fmt);
+            let mut blocked = vec![0.0; m * n];
+            let mut naive = vec![7.0; m * n]; // nonzero: fill must overwrite
+            gemm_q(&a, &w, &mut blocked, m, k, n, &q);
+            gemm_q_naive(&a, &w, &mut naive, m, k, n, &q);
+            for i in 0..m * n {
+                assert_eq!(blocked[i].to_bits(), naive[i].to_bits(), "{fmt} elem {i}");
+            }
+        }
+    }
+
+    /// The `SINGLE` fast path keeps the flush/saturate steps, so it is
+    /// bit-exact with the reference even when values *leave* the normal
+    /// f32 range — a raw subnormal product, and the subtler case of two
+    /// normal partial sums cancelling into the subnormal window, where
+    /// a plain mul-add chain would silently diverge from the
+    /// Pallas/PJRT contract.
+    #[test]
+    fn single_fast_path_is_bitexact_even_off_normal_range() {
+        let q = Quantizer::new(&Format::SINGLE);
+        // subnormal product (1e-40 is a representable f32 subnormal)
+        let (a, w) = (vec![1.0e-30f32], vec![1.0e-10f32]);
+        let (mut fast, mut reference) = (vec![7.0f32], vec![7.0f32]);
+        gemm_q(&a, &w, &mut fast, 1, 1, 1, &q);
+        gemm_q_naive(&a, &w, &mut reference, 1, 1, 1, &q);
+        assert_eq!(reference[0], 0.0, "reference must flush the subnormal");
+        assert_eq!(fast[0].to_bits(), reference[0].to_bits());
+        // cancellation: normal acc + normal product -> subnormal sum
+        let (a, w) = (vec![1.0f32, 1.0], vec![1.2e-38f32, -1.19e-38]);
+        let (mut fast, mut reference) = (vec![7.0f32], vec![7.0f32]);
+        gemm_q(&a, &w, &mut fast, 1, 2, 1, &q);
+        gemm_q_naive(&a, &w, &mut reference, 1, 2, 1, &q);
+        assert_eq!(reference[0], 0.0, "cancellation result must flush");
+        assert_eq!(fast[0].to_bits(), reference[0].to_bits());
+        // normal-range chain: still bit-equal
+        let (a, w) = (vec![f32::MIN_POSITIVE, -3.5], vec![2.0f32, 0.25]);
+        let (mut fast, mut reference) = (vec![7.0f32], vec![7.0f32]);
+        gemm_q(&a, &w, &mut fast, 1, 2, 1, &q);
+        gemm_q_naive(&a, &w, &mut reference, 1, 2, 1, &q);
+        assert_eq!(fast[0].to_bits(), reference[0].to_bits());
+    }
+
+    /// The kernel-equivalence property test (ISSUE 1 acceptance): blocked
+    /// `gemm_q` is bit-exact against the retained naive reference across
+    /// random shapes and both representation kinds, including the
+    /// identity fast path at `Format::SINGLE`.
+    #[test]
+    fn prop_blocked_gemm_bitexact_vs_naive() {
+        use crate::testing::prop::run_prop;
+        run_prop("blocked_gemm_matches_naive", 60, |g| {
+            let m = g.usize_in(1, 2 * GEMM_MR + 3);
+            let k = g.usize_in(1, 48);
+            let n = g.usize_in(1, GEMM_NC + 9);
+            let fmt = match g.usize_in(0, 2) {
+                0 => Format::float(g.usize_in(1, 23) as u32, g.usize_in(2, 8) as u32),
+                1 => Format::fixed(g.usize_in(0, 12) as u32, g.usize_in(0, 12) as u32),
+                _ => Format::SINGLE,
+            };
+            let q = Quantizer::new(&fmt);
+            let a: Vec<f32> = (0..m * k).map(|_| g.f32_normal()).collect();
+            let w: Vec<f32> = (0..k * n).map(|_| g.f32_normal()).collect();
+            let mut blocked = vec![0.0; m * n];
+            let mut naive = vec![0.0; m * n];
+            gemm_q(&a, &w, &mut blocked, m, k, n, &q);
+            gemm_q_naive(&a, &w, &mut naive, m, k, n, &q);
+            for i in 0..m * n {
+                assert_eq!(
+                    blocked[i].to_bits(),
+                    naive[i].to_bits(),
+                    "{fmt} m={m} k={k} n={n} elem {i}: {} vs {}",
+                    blocked[i],
+                    naive[i]
+                );
+            }
+        });
     }
 
     #[test]

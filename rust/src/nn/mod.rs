@@ -12,6 +12,6 @@ mod engine;
 mod layers;
 mod network;
 
-pub use engine::{gemm_q, Engine};
+pub use engine::{gemm_q, gemm_q_naive, Engine};
 pub use layers::Layer;
 pub use network::{Network, Zoo};

@@ -1,0 +1,192 @@
+//! The PJRT-backed executor (compiled only with the `pjrt` feature —
+//! see the module docs in `runtime/mod.rs` and DESIGN.md §5).
+//!
+//! One [`LoadedModel`] = one compiled executable per (network, kind);
+//! the format descriptor is a runtime input, so the whole design space
+//! runs on a single executable with zero recompiles.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::sync::Arc;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::formats::Format;
+use crate::nn::Network;
+use crate::tensor::Tensor;
+
+/// Shared PJRT CPU client (one per process).
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+impl Runtime {
+    pub fn cpu() -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e}"))?;
+        Ok(Runtime { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile one HLO-text artifact.
+    pub fn load_hlo(&self, path: &Path) -> Result<xla::PjRtLoadedExecutable> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .map_err(|e| anyhow!("parse {}: {e}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        self.client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compile {}: {e}", path.display()))
+    }
+
+    /// Load a network's artifact for one representation kind and bind
+    /// its weights.
+    pub fn load_network(
+        &self,
+        net: &Arc<Network>,
+        artifacts_dir: &Path,
+        kind: &str,
+        batch: usize,
+    ) -> Result<LoadedModel> {
+        let path = net.hlo_path(artifacts_dir, kind)?;
+        let exe = self
+            .load_hlo(&path)
+            .with_context(|| format!("loading {} ({kind})", net.name))?;
+        Ok(LoadedModel {
+            net: net.clone(),
+            kind: kind.to_string(),
+            batch,
+            exe,
+        })
+    }
+}
+
+/// A compiled (network, kind) executable with weight binding.
+pub struct LoadedModel {
+    pub net: Arc<Network>,
+    pub kind: String,
+    pub batch: usize,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl LoadedModel {
+    /// Check the format kind matches this executable.
+    fn check_kind(&self, fmt: &Format) -> Result<()> {
+        let want_float = self.kind == "float";
+        if fmt.is_float() != want_float {
+            bail!(
+                "format {fmt} fed to a {} executable of {}",
+                self.kind,
+                self.net.name
+            );
+        }
+        Ok(())
+    }
+
+    /// Execute one batch.  `x` must be (batch, H, W, C) with the static
+    /// artifact batch size; returns logits (batch, classes).
+    pub fn run_batch(&self, x: &Tensor, fmt: &Format) -> Result<Tensor> {
+        self.check_kind(fmt)?;
+        let [h, w, c] = self.net.input;
+        if x.shape() != [self.batch, h, w, c] {
+            bail!(
+                "{}: batch shape {:?} != expected {:?}",
+                self.net.name,
+                x.shape(),
+                [self.batch, h, w, c]
+            );
+        }
+
+        let dims: Vec<i64> = x.shape().iter().map(|&d| d as i64).collect();
+        let mut inputs: Vec<xla::Literal> = Vec::with_capacity(2 + self.net.weight_order.len());
+        inputs.push(
+            xla::Literal::vec1(x.data())
+                .reshape(&dims)
+                .map_err(|e| anyhow!("reshape input: {e}"))?,
+        );
+        let params = fmt.runtime_params();
+        inputs.push(xla::Literal::vec1(&params));
+        for wname in &self.net.weight_order {
+            let t = self.net.weight(wname);
+            let wdims: Vec<i64> = t.shape().iter().map(|&d| d as i64).collect();
+            inputs.push(
+                xla::Literal::vec1(t.data())
+                    .reshape(&wdims)
+                    .map_err(|e| anyhow!("reshape weight {wname}: {e}"))?,
+            );
+        }
+
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&inputs)
+            .map_err(|e| anyhow!("execute {}: {e}", self.net.name))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch result: {e}"))?;
+        // aot.py lowers with return_tuple=True: unwrap the 1-tuple
+        let out = lit.to_tuple1().map_err(|e| anyhow!("untuple: {e}"))?;
+        let values = out.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e}"))?;
+        Tensor::new(vec![self.batch, self.net.classes], values)
+    }
+
+    /// Run `n` eval samples (padding the tail batch), returning logits
+    /// (n, classes) and the matching labels.
+    pub fn run_eval(&self, n: usize, fmt: &Format) -> Result<(Vec<f32>, Vec<i32>)> {
+        let n = n.min(self.net.eval_len()).max(1);
+        let [h, w, c] = self.net.input;
+        let px = h * w * c;
+        let classes = self.net.classes;
+        let mut logits = Vec::with_capacity(n * classes);
+        let mut lo = 0;
+        while lo < n {
+            let hi = (lo + self.batch).min(n);
+            // pad the final partial batch by repeating the last sample
+            let mut xdata = Vec::with_capacity(self.batch * px);
+            xdata.extend_from_slice(&self.net.eval_x.data()[lo * px..hi * px]);
+            while xdata.len() < self.batch * px {
+                let last = &self.net.eval_x.data()[(hi - 1) * px..hi * px];
+                xdata.extend_from_slice(last);
+            }
+            let x = Tensor::new(vec![self.batch, h, w, c], xdata)?;
+            let out = self.run_batch(&x, fmt)?;
+            logits.extend_from_slice(&out.data()[..(hi - lo) * classes]);
+            lo = hi;
+        }
+        Ok((logits, self.net.eval_y[..n].to_vec()))
+    }
+}
+
+/// Cache of compiled executables keyed by (network, kind).
+pub struct ModelCache {
+    runtime: Runtime,
+    artifacts_dir: std::path::PathBuf,
+    batch: usize,
+    models: BTreeMap<(String, String), Arc<LoadedModel>>,
+}
+
+impl ModelCache {
+    pub fn new(runtime: Runtime, artifacts_dir: impl AsRef<Path>, batch: usize) -> ModelCache {
+        ModelCache {
+            runtime,
+            artifacts_dir: artifacts_dir.as_ref().to_path_buf(),
+            batch,
+            models: BTreeMap::new(),
+        }
+    }
+
+    pub fn get(&mut self, net: &Arc<Network>, kind: &str) -> Result<Arc<LoadedModel>> {
+        let key = (net.name.clone(), kind.to_string());
+        if let Some(m) = self.models.get(&key) {
+            return Ok(m.clone());
+        }
+        let m = Arc::new(
+            self.runtime
+                .load_network(net, &self.artifacts_dir, kind, self.batch)?,
+        );
+        self.models.insert(key, m.clone());
+        Ok(m)
+    }
+}

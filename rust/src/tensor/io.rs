@@ -1,5 +1,9 @@
 //! `.prt` tensor-container reader (format defined in
 //! `python/compile/io_prt.py`; written once at `make artifacts`).
+//!
+//! All fields are little-endian; decoding is hand-rolled over
+//! `from_le_bytes` because `byteorder` is not in the offline crate set
+//! (DESIGN.md §6).
 
 use std::collections::BTreeMap;
 use std::fs::File;
@@ -7,7 +11,6 @@ use std::io::{BufReader, Read};
 use std::path::Path;
 
 use anyhow::{bail, Context, Result};
-use byteorder::{LittleEndian, ReadBytesExt};
 
 use super::{Tensor, TensorI32};
 
@@ -53,45 +56,70 @@ impl Container {
     }
 }
 
+// ---- little-endian primitives ---------------------------------------
+
+fn read_bytes<const N: usize>(r: &mut impl Read) -> Result<[u8; N]> {
+    let mut buf = [0u8; N];
+    r.read_exact(&mut buf)?;
+    Ok(buf)
+}
+
+fn read_u8(r: &mut impl Read) -> Result<u8> {
+    Ok(read_bytes::<1>(r)?[0])
+}
+
+fn read_u16(r: &mut impl Read) -> Result<u16> {
+    Ok(u16::from_le_bytes(read_bytes(r)?))
+}
+
+fn read_u32(r: &mut impl Read) -> Result<u32> {
+    Ok(u32::from_le_bytes(read_bytes(r)?))
+}
+
+/// Bulk-read `n` little-endian 4-byte values through `decode`.
+fn read_vec4<T>(r: &mut impl Read, n: usize, decode: fn([u8; 4]) -> T) -> Result<Vec<T>> {
+    let mut bytes = vec![0u8; n * 4];
+    r.read_exact(&mut bytes)?;
+    Ok(bytes
+        .chunks_exact(4)
+        .map(|c| decode([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
 /// Read a `.prt` container.
 pub fn read_container(path: &Path) -> Result<Container> {
     let f = File::open(path).with_context(|| format!("open {}", path.display()))?;
     let mut r = BufReader::new(f);
 
-    let magic = r.read_u32::<LittleEndian>()?;
+    let magic = read_u32(&mut r)?;
     if magic != MAGIC {
         bail!("{}: bad magic {magic:#x} (want {MAGIC:#x})", path.display());
     }
-    let count = r.read_u32::<LittleEndian>()? as usize;
+    let count = read_u32(&mut r)? as usize;
     let mut entries = Vec::with_capacity(count);
     let mut index = BTreeMap::new();
 
     for _ in 0..count {
-        let name_len = r.read_u16::<LittleEndian>()? as usize;
+        let name_len = read_u16(&mut r)? as usize;
         let mut name_bytes = vec![0u8; name_len];
         r.read_exact(&mut name_bytes)?;
         let name = String::from_utf8(name_bytes).context("tensor name not utf-8")?;
 
-        let dtype = r.read_u8()?;
-        let ndim = r.read_u8()? as usize;
+        let dtype = read_u8(&mut r)?;
+        let ndim = read_u8(&mut r)? as usize;
         let mut shape = Vec::with_capacity(ndim);
         for _ in 0..ndim {
-            shape.push(r.read_u32::<LittleEndian>()? as usize);
+            shape.push(read_u32(&mut r)? as usize);
         }
         let n: usize = shape.iter().product::<usize>().max(1);
         let n = if ndim == 0 { 1 } else { n };
 
         let t = match dtype {
-            0 => {
-                let mut data = vec![0f32; n];
-                r.read_f32_into::<LittleEndian>(&mut data)?;
-                AnyTensor::F32(Tensor::new(shape, data)?)
-            }
-            1 => {
-                let mut data = vec![0i32; n];
-                r.read_i32_into::<LittleEndian>(&mut data)?;
-                AnyTensor::I32(TensorI32 { shape, data })
-            }
+            0 => AnyTensor::F32(Tensor::new(shape, read_vec4(&mut r, n, f32::from_le_bytes)?)?),
+            1 => AnyTensor::I32(TensorI32 {
+                shape,
+                data: read_vec4(&mut r, n, i32::from_le_bytes)?,
+            }),
             d => bail!("{}: unknown dtype {d} for {name:?}", path.display()),
         };
         index.insert(name.clone(), entries.len());
@@ -153,6 +181,23 @@ mod tests {
     fn rejects_bad_magic() {
         let p = std::env::temp_dir().join("precis_test_badmagic.prt");
         File::create(&p).unwrap().write_all(&[0u8; 16]).unwrap();
+        assert!(read_container(&p).is_err());
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn truncated_payload_is_an_error_not_a_panic() {
+        let p = std::env::temp_dir().join("precis_test_truncated.prt");
+        let mut buf: Vec<u8> = Vec::new();
+        buf.extend(MAGIC.to_le_bytes());
+        buf.extend(1u32.to_le_bytes());
+        buf.extend(1u16.to_le_bytes());
+        buf.push(b'a');
+        buf.push(0); // dtype f32
+        buf.push(1); // ndim
+        buf.extend(8u32.to_le_bytes()); // claims 8 elements...
+        buf.extend(1.0f32.to_le_bytes()); // ...delivers one
+        File::create(&p).unwrap().write_all(&buf).unwrap();
         assert!(read_container(&p).is_err());
         std::fs::remove_file(&p).ok();
     }

@@ -2,3 +2,11 @@
 //! DESIGN.md §6).
 
 pub mod prop;
+
+/// Truthiness rule for the `PRECIS_REQUIRE_*` strict-mode env vars used
+/// by the artifact-dependent test suites: set and neither empty nor
+/// `"0"`.  Shared so all test binaries promote skips to failures under
+/// exactly the same condition.
+pub fn strict_env(var: &str) -> bool {
+    std::env::var(var).map(|v| !v.is_empty() && v != "0").unwrap_or(false)
+}

@@ -1,5 +1,13 @@
-//! End-to-end integration over the real artifacts (requires
-//! `make artifacts` to have run; the Makefile orders this).
+//! End-to-end integration over the real artifacts.
+//!
+//! Artifacts are produced by `make artifacts` (JAX training + AOT HLO
+//! lowering; see README.md).  They are a build product, not checked in,
+//! so every test here degrades to a **skip** (early return with a
+//! stderr note) when `artifacts/` is absent — tier-1 `cargo test` stays
+//! green on a fresh clone, and turns these tests on automatically once
+//! the artifacts exist.  Set `PRECIS_REQUIRE_ARTIFACTS=1` to turn a
+//! missing-artifacts skip into a hard failure, so a CI lane that *did*
+//! build artifacts can never go green vacuously.
 //!
 //! Covers: zoo loading, native-engine accuracy vs the trainer's recorded
 //! exact accuracy, precision-degradation behaviour across the design
@@ -21,8 +29,25 @@ use precis::search::{
     collect_model_points, exhaustive_search, search, AccuracyModel, SearchSpec,
 };
 
-fn zoo() -> Zoo {
-    Zoo::load(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts")).expect("run `make artifacts` first")
+/// `artifacts/` lives at the repo root (aot.py's default output), one
+/// level above this crate.
+const ARTIFACTS: &str = concat!(env!("CARGO_MANIFEST_DIR"), "/../artifacts");
+
+/// Load the zoo, or skip the calling test when artifacts are missing
+/// (a hard failure instead when `PRECIS_REQUIRE_ARTIFACTS` is set).
+fn zoo() -> Option<Zoo> {
+    match Zoo::load(ARTIFACTS) {
+        Ok(z) => Some(z),
+        Err(e) => {
+            if precis::testing::strict_env("PRECIS_REQUIRE_ARTIFACTS") {
+                panic!("PRECIS_REQUIRE_ARTIFACTS is set but artifacts are unusable: {e:#}");
+            }
+            // keep the real error visible: "missing" and "corrupt" need
+            // different operator responses
+            eprintln!("skipping: artifacts unusable at {ARTIFACTS}: {e:#} (run `make artifacts`)");
+            None
+        }
+    }
 }
 
 fn opts(samples: usize) -> EvalOptions {
@@ -46,7 +71,7 @@ fn test_space() -> Vec<Format> {
 
 #[test]
 fn zoo_loads_all_five_networks() {
-    let z = zoo();
+    let Some(z) = zoo() else { return };
     let mut names = z.names();
     names.sort();
     assert_eq!(
@@ -69,7 +94,7 @@ fn zoo_loads_all_five_networks() {
 fn native_exact_accuracy_matches_trainer() {
     // the native serial-K engine and jnp's parallel-reduction matmul
     // differ only in f32 association; accuracy must agree closely
-    let z = zoo();
+    let Some(z) = zoo() else { return };
     for name in ["lenet5", "cifarnet"] {
         let net = z.network(name).unwrap();
         let acc = accuracy(&net, &Format::SINGLE, 512).unwrap();
@@ -83,7 +108,7 @@ fn native_exact_accuracy_matches_trainer() {
 
 #[test]
 fn degradation_anatomy_across_formats() {
-    let z = zoo();
+    let Some(z) = zoo() else { return };
     let net = z.network("lenet5").unwrap();
     let base = accuracy(&net, &Format::SINGLE, 96).unwrap();
 
@@ -104,7 +129,7 @@ fn degradation_anatomy_across_formats() {
 fn float_beats_fixed_at_iso_accuracy_on_long_chain_net() {
     // paper finding 3, on the longest-chain network: compare the total
     // bits needed to stay within 1% of baseline
-    let z = zoo();
+    let Some(z) = zoo() else { return };
     let net = z.network("googlenet-mini").unwrap();
     let o = opts(96);
     let mut engine = Engine::new();
@@ -135,7 +160,7 @@ fn float_beats_fixed_at_iso_accuracy_on_long_chain_net() {
 
 #[test]
 fn sweep_coordinator_matches_sequential_and_caches() {
-    let z = zoo();
+    let Some(z) = zoo() else { return };
     let net = z.network("lenet5").unwrap();
     let o = opts(64);
     let space = test_space();
@@ -158,10 +183,28 @@ fn sweep_coordinator_matches_sequential_and_caches() {
 }
 
 #[test]
+fn batch_parallel_eval_is_bit_identical_to_sequential() {
+    // forward_eval_parallel fans batches over the pool; the logits must
+    // match the sequential driver bitwise (DESIGN.md §7)
+    let Some(z) = zoo() else { return };
+    let net = z.network("lenet5").unwrap();
+    let o = opts(80); // 2.5 batches: exercises the ragged tail
+    for fmt in [Format::SINGLE, Format::float(7, 6), Format::fixed(8, 8)] {
+        let (seq, seq_labels) = forward_eval(&mut Engine::new(), &net, &fmt, &o);
+        let (par, par_labels) = precis::eval::forward_eval_parallel(&net, &fmt, &o, 4);
+        assert_eq!(seq_labels, par_labels);
+        assert_eq!(seq.len(), par.len());
+        for i in 0..seq.len() {
+            assert_eq!(seq[i].to_bits(), par[i].to_bits(), "{fmt} logit {i}");
+        }
+    }
+}
+
+#[test]
 fn accuracy_model_transfers_across_networks() {
     // fit on lenet5+cifarnet points, check it ranks alexnet-mini configs:
     // high-R² configs must predict near-1 normalized accuracy
-    let z = zoo();
+    let Some(z) = zoo() else { return };
     let o = opts(64);
     let space = test_space();
     let mut pts = Vec::new();
@@ -178,7 +221,7 @@ fn accuracy_model_transfers_across_networks() {
 #[test]
 fn search_with_two_refinements_matches_exhaustive() {
     // the paper's Fig 10 claim, on a thinned float space over lenet5
-    let z = zoo();
+    let Some(z) = zoo() else { return };
     let net = z.network("lenet5").unwrap();
     let o = opts(64);
     let space: Vec<Format> = (1..=18).map(|m| Format::float(m, 6)).collect();
@@ -221,7 +264,7 @@ fn search_with_two_refinements_matches_exhaustive() {
 
 #[test]
 fn batching_server_native_end_to_end() {
-    let z = zoo();
+    let Some(z) = zoo() else { return };
     let net: Arc<Network> = z.network("lenet5").unwrap();
     let fmt = Format::float(10, 6);
     let server = InferenceServer::native(net.clone(), 8, fmt, Duration::from_millis(5));
@@ -248,7 +291,7 @@ fn batching_server_native_end_to_end() {
 
 #[test]
 fn server_rejects_malformed_input() {
-    let z = zoo();
+    let Some(z) = zoo() else { return };
     let net = z.network("lenet5").unwrap();
     let server = InferenceServer::native(net, 4, Format::SINGLE, Duration::from_millis(1));
     assert!(server.infer(vec![0.0; 3]).is_err());
@@ -256,7 +299,7 @@ fn server_rejects_malformed_input() {
 
 #[test]
 fn fig8_trace_reproduces_saturation_story() {
-    let z = zoo();
+    let Some(z) = zoo() else { return };
     let net = z.network("alexnet-mini").unwrap();
     let t = figures::fig8(&net, 0).unwrap();
     // chain length = deepest conv K = 3*3*48
@@ -276,7 +319,7 @@ fn fig8_trace_reproduces_saturation_story() {
 
 #[test]
 fn pareto_helper_picks_fastest_meeting_target() {
-    let z = zoo();
+    let Some(z) = zoo() else { return };
     let net = z.network("cifarnet").unwrap();
     let o = opts(64);
     let cache = ResultCache::ephemeral();
@@ -293,7 +336,7 @@ fn pareto_helper_picks_fastest_meeting_target() {
 
 #[test]
 fn coordinator_facade_sweeps_with_cache_file() {
-    let z = zoo();
+    let Some(z) = zoo() else { return };
     let dir = std::env::temp_dir().join("precis_it_cache");
     std::fs::remove_dir_all(&dir).ok();
     let cache = ResultCache::open(dir.join("cache.json"));

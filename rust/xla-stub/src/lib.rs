@@ -1,0 +1,148 @@
+//! Offline placeholder for the `xla` PJRT bindings.
+//!
+//! The published PJRT binding crates ship a multi-hundred-megabyte
+//! `xla_extension` native bundle and are not part of this repository's
+//! offline crate set (DESIGN.md §6).  This stub mirrors exactly the API
+//! surface `precis::runtime` uses, so that `cargo build --features pjrt`
+//! type-checks the whole PJRT code path without the native library.  At
+//! runtime every entry point fails fast with an [`Error`] that points
+//! back at DESIGN.md §5, and `precis` degrades to its native engine.
+//!
+//! To run the real thing, point the `xla` dependency in `rust/Cargo.toml`
+//! at a checkout of a PJRT binding crate with this API (DESIGN.md §5).
+
+use std::fmt;
+
+/// Error type mirroring the binding crate's (Display is all `precis`
+/// relies on — every call site wraps it in `anyhow`).
+#[derive(Debug, Clone)]
+pub struct Error(pub String);
+
+impl Error {
+    fn stub(what: &str) -> Error {
+        Error(format!(
+            "{what}: built against the offline xla stub; point the `xla` \
+             dependency at a real PJRT binding crate (DESIGN.md §5)"
+        ))
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// PJRT client handle (one per process in the real bindings).
+pub struct PjRtClient {
+    _private: (),
+}
+
+impl PjRtClient {
+    /// The real bindings spin up the PJRT CPU plugin here; the stub
+    /// fails fast so callers fall back to the native engine.
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(Error::stub("PjRtClient::cpu"))
+    }
+
+    pub fn platform_name(&self) -> String {
+        "xla-stub".to_string()
+    }
+
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(Error::stub("PjRtClient::compile"))
+    }
+}
+
+/// Parsed HLO module (text interchange format).
+pub struct HloModuleProto {
+    _private: (),
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        Err(Error::stub("HloModuleProto::from_text_file"))
+    }
+}
+
+/// An XLA computation wrapping an HLO module.
+pub struct XlaComputation {
+    _private: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _private: () }
+    }
+}
+
+/// A compiled executable.
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    /// Execute with on-host inputs; the real bindings return one buffer
+    /// list per device.
+    pub fn execute<T>(&self, _inputs: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::stub("PjRtLoadedExecutable::execute"))
+    }
+}
+
+/// A device buffer returned by [`PjRtLoadedExecutable::execute`].
+pub struct PjRtBuffer {
+    _private: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(Error::stub("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+/// A host-side literal (dense array value).
+pub struct Literal {
+    _private: (),
+}
+
+impl Literal {
+    pub fn vec1(_data: &[f32]) -> Literal {
+        Literal { _private: () }
+    }
+
+    pub fn reshape(self, _dims: &[i64]) -> Result<Literal> {
+        Ok(self)
+    }
+
+    pub fn to_tuple1(self) -> Result<Literal> {
+        Err(Error::stub("Literal::to_tuple1"))
+    }
+
+    pub fn to_vec<T>(&self) -> Result<Vec<T>> {
+        Err(Error::stub("Literal::to_vec"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stub_fails_fast_with_pointer_to_design_doc() {
+        let e = PjRtClient::cpu().err().expect("stub must not create clients");
+        let msg = e.to_string();
+        assert!(msg.contains("stub"), "{msg}");
+        assert!(msg.contains("DESIGN.md"), "{msg}");
+    }
+
+    #[test]
+    fn literal_construction_is_infallible() {
+        // runtime stages inputs before execute(); that path must not panic
+        let l = Literal::vec1(&[1.0, 2.0]).reshape(&[2]).unwrap();
+        assert!(l.to_vec::<f32>().is_err());
+    }
+}
