@@ -129,7 +129,7 @@ fn main() -> Result<()> {
             opts,
             seed,
         };
-        let out = search(&net, &spec, &model);
+        let out = search(&net, &spec, &model)?;
         let Some(chosen) = out.chosen else {
             println!("{:<16} -- no configuration met the target --", net.name);
             continue;

@@ -1,184 +1,114 @@
-//! Serving-style driver: the dynamic-batching inference server under a
-//! closed-loop client population, reporting latency percentiles,
-//! throughput and batching efficiency.
+//! Serving-style driver: the multi-model, multi-format gateway under a
+//! closed-loop client population, reporting per-session latency
+//! percentiles, accuracy, throughput and batching efficiency.
 //!
-//! With the `pjrt` feature (and a real `xla` crate — DESIGN.md §5) the
-//! backend is the AOT/PJRT executable; otherwise it falls back cleanly
-//! to the native engine, which is bit-exact by contract (DESIGN.md §3).
+//! One process hosts N `(network, format)` sessions simultaneously —
+//! by default `lenet5@float:m7e6` and `alexnet-mini@fixed:l8r8` — and
+//! routes every request by session key.  With the `pjrt` feature (and
+//! a real `xla` crate — DESIGN.md §5) the sessions execute the
+//! AOT/PJRT artifacts; otherwise they fall back cleanly to the native
+//! engine, which is bit-exact by contract (DESIGN.md §3).
 //!
-//!     cargo run --release --example serve -- [--net lenet5] \
-//!         [--format float:m10e6] [--requests 256] [--clients 8] \
+//!     cargo run --release --example serve -- \
+//!         [--sessions lenet5@float:m7e6,alexnet-mini@fixed:l8r8] \
+//!         [--requests 256] [--clients 8] [--wait-ms 5] \
 //!         [--backend auto|native|pjrt]
 
-use std::path::PathBuf;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
-use precis::coordinator::server::InferenceServer;
 use precis::eval::topk_accuracy;
-use precis::formats::Format;
-use precis::nn::{Network, Zoo};
+use precis::nn::Zoo;
+use precis::serving::{
+    drive_closed_loop, warm_up, BackendKind, Gateway, SessionKey, SessionOptions,
+};
 use precis::util::cli::Args;
 
 /// Repo-root artifacts dir, valid from any cwd (matches tests/benches).
 const ARTIFACTS: &str = concat!(env!("CARGO_MANIFEST_DIR"), "/../artifacts");
 
-/// Spawn the PJRT-backed server, or `Err` when this build has no PJRT
-/// runtime or the artifact is missing.  PJRT handles are not Send, so
-/// the one-and-only client is built on the dispatcher thread via the
-/// factory; runtime startup failures surface on the caller's warm-up
-/// request (below), never as a second probe client.
-#[cfg(feature = "pjrt")]
-fn spawn_pjrt(
-    net: Arc<Network>,
-    dir: PathBuf,
-    kind: String,
-    batch: usize,
-    fmt: Format,
-    wait: Duration,
-) -> Result<InferenceServer> {
-    use precis::coordinator::server::PjrtRunner;
-    use precis::runtime::Runtime;
-    let hlo = net.hlo_path(&dir, &kind)?;
-    anyhow::ensure!(hlo.exists(), "missing HLO artifact {}", hlo.display());
-    let net2 = net.clone();
-    Ok(InferenceServer::spawn(net, batch, fmt, wait, move || {
-        let rt = Runtime::cpu()?;
-        let model = rt.load_network(&net2, &dir, &kind, batch)?;
-        Ok(PjrtRunner { model })
-    }))
-}
-
-#[cfg(not(feature = "pjrt"))]
-fn spawn_pjrt(
-    _net: Arc<Network>,
-    _dir: PathBuf,
-    _kind: String,
-    _batch: usize,
-    _fmt: Format,
-    _wait: Duration,
-) -> Result<InferenceServer> {
-    anyhow::bail!("this build has no PJRT runtime (rebuild with `--features pjrt` — DESIGN.md §5)")
-}
-
 fn main() -> Result<()> {
     let raw: Vec<String> = std::env::args().skip(1).collect();
     let args = Args::parse(&raw, &[])?;
-    let net_name = args.get_or("net", "lenet5").to_string();
-    let fmt = Format::parse(args.get_or("format", "float:m10e6"))?;
+    let specs = args
+        .get_or("sessions", "lenet5@float:m7e6,alexnet-mini@fixed:l8r8")
+        .to_string();
     let n_requests = args.get_usize("requests", 256)?;
-    let n_clients = args.get_usize("clients", 8)?;
-    let wait_ms = args.get_usize("wait-ms", 10)?;
-    let backend = args.get_or("backend", "auto").to_string();
+    let n_clients = args.get_usize("clients", 8)?.max(1);
+    let wait_ms = args.get_usize("wait-ms", 5)?;
+    let kind = BackendKind::parse(args.get_or("backend", "auto"))?;
 
     let zoo = Zoo::load(ARTIFACTS)?;
-    let net = zoo.network(&net_name)?;
     let batch = zoo.batch;
-    let dir = zoo.dir.clone();
-    let kind = if fmt.is_float() { "float" } else { "fixed" };
-    let wait = Duration::from_millis(wait_ms as u64);
+    let gateway = Gateway::new(zoo, kind).with_options(SessionOptions {
+        batch: 0, // the artifact batch size
+        max_wait: Duration::from_millis(wait_ms as u64),
+    });
+    let keys: Vec<SessionKey> = specs
+        .split(',')
+        .map(|s| gateway.open_spec(s.trim()))
+        .collect::<Result<_>>()?;
 
     println!(
-        "serving {net_name} @ {} (batch {batch}, {n_clients} closed-loop clients, \
-         {n_requests} requests, backend {backend})",
-        fmt.id()
+        "gateway: {} concurrent session(s) in one process (batch {batch}, backend {}, \
+         {n_clients} closed-loop clients, {n_requests} requests round-robined by key)",
+        keys.len(),
+        kind.as_str()
     );
 
-    let px: usize = net.input.iter().product();
-    // Every backend gets one warm-up request before measurement: it
-    // proves the backend end to end (the PJRT client + compile happen
-    // lazily on the dispatcher thread) and absorbs cold-start latency
-    // symmetrically, so native and pjrt telemetry stay comparable —
-    // each includes exactly one artificial 1-request warm-up batch.
-    let warm_up = |s: InferenceServer| -> Result<InferenceServer> {
-        s.infer(net.eval_x.data()[..px].to_vec())?;
-        Ok(s)
-    };
-    // `resolved` records which backend actually serves, so the stdout
-    // report can never label auto-fallback native numbers as pjrt
-    let (server, resolved) = match backend.as_str() {
-        "native" => (warm_up(InferenceServer::native(net.clone(), batch, fmt, wait))?, "native"),
-        // explicit pjrt: unavailability is a hard error, never a silent
-        // native run mislabeled as pjrt
-        "pjrt" => (
-            warm_up(spawn_pjrt(net.clone(), dir, kind.to_string(), batch, fmt, wait)?)?,
-            "pjrt",
-        ),
-        "auto" => {
-            match spawn_pjrt(net.clone(), dir, kind.to_string(), batch, fmt, wait)
-                .and_then(&warm_up)
-            {
-                Ok(s) => (s, "pjrt"),
-                Err(e) => {
-                    eprintln!("(PJRT unavailable — serving on the native engine: {e:#})");
-                    (
-                        warm_up(InferenceServer::native(net.clone(), batch, fmt, wait))?,
-                        "native",
-                    )
-                }
-            }
-        }
-        b => anyhow::bail!("unknown backend {b:?} (auto|native|pjrt)"),
-    };
-    let server = Arc::new(server);
-    let t0 = Instant::now();
-    let mut latencies: Vec<f64> = Vec::with_capacity(n_requests);
-    let mut predictions: Vec<(usize, Vec<f32>)> = Vec::with_capacity(n_requests);
+    // One warm-up request per session before measurement (proves each
+    // backend end to end, absorbs cold-start symmetrically), then the
+    // shared closed-loop driver — the same one `repro serve` uses.
+    warm_up(&gateway, &keys)?;
 
-    std::thread::scope(|scope| {
-        let mut handles = Vec::new();
-        for cid in 0..n_clients {
-            let server = server.clone();
-            let net = net.clone();
-            handles.push(scope.spawn(move || {
-                let mut out = Vec::new();
-                let mut i = cid;
-                while i < n_requests {
-                    let sample = i % net.eval_len();
-                    let pixels = net.eval_x.data()[sample * px..(sample + 1) * px].to_vec();
-                    let t = Instant::now();
-                    let logits = server.infer(pixels).expect("inference failed");
-                    out.push((i, t.elapsed().as_secs_f64(), logits));
-                    i += n_clients;
-                }
-                out
-            }));
-        }
-        for h in handles {
-            for (i, lat, logits) in h.join().unwrap() {
-                latencies.push(lat);
-                predictions.push((i, logits));
-            }
-        }
-    });
+    let t0 = Instant::now();
+    let served = drive_closed_loop(&gateway, &keys, n_requests, n_clients);
     let wall = t0.elapsed().as_secs_f64();
 
-    // accuracy over the served responses
-    predictions.sort_by_key(|(i, _)| *i);
-    let classes = net.classes;
-    let logits: Vec<f32> = predictions.iter().flat_map(|(_, l)| l.iter().copied()).collect();
-    let labels: Vec<i32> = (0..n_requests).map(|i| net.eval_y[i % net.eval_len()]).collect();
-    let acc = topk_accuracy(&logits, &labels, classes, net.topk);
+    // live telemetry snapshot while the gateway still serves — stats
+    // are not a shutdown-only artifact
+    println!("\n{}", gateway.stats().render());
+    println!("throughput: {:.1} req/s aggregate ({wall:.2}s wall)\n", n_requests as f64 / wall);
 
-    latencies.sort_by(|a, b| a.partial_cmp(b).unwrap());
-    let pct = |q: f64| latencies[((latencies.len() - 1) as f64 * q) as usize] * 1e3;
-    let stats = Arc::try_unwrap(server)
-        .map(|s| s.shutdown())
-        .unwrap_or_default();
+    // per-session report: end-to-end latency percentiles + the accuracy
+    // of the actually-served responses
+    for (ki, key) in keys.iter().enumerate() {
+        let net: Arc<_> = gateway.session(key).unwrap().network().clone();
+        let mut lats: Vec<f64> = Vec::new();
+        let mut rows: Vec<(usize, &[f32])> = Vec::new();
+        for (k, sample, lat, logits) in &served {
+            if k == &ki {
+                lats.push(*lat);
+                rows.push((*sample, logits.as_slice()));
+            }
+        }
+        lats.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let pct = |q: f64| {
+            if lats.is_empty() { 0.0 } else { lats[((lats.len() - 1) as f64 * q) as usize] * 1e3 }
+        };
+        let logits: Vec<f32> = rows.iter().flat_map(|(_, l)| l.iter().copied()).collect();
+        let labels: Vec<i32> = rows.iter().map(|(s, _)| net.eval_y[*s]).collect();
+        let acc = topk_accuracy(&logits, &labels, net.classes, net.topk);
+        println!(
+            "{:<32} {} requests  p50 {:.2} ms  p90 {:.2} ms  p99 {:.2} ms  top-{} acc {:.4}",
+            key.to_string(),
+            rows.len(),
+            pct(0.5),
+            pct(0.9),
+            pct(0.99),
+            net.topk,
+            acc
+        );
+    }
 
-    println!("\nresults (backend {resolved}):");
-    println!("  throughput     : {:.1} req/s", n_requests as f64 / wall);
-    println!("  latency p50    : {:.2} ms", pct(0.5));
-    println!("  latency p90    : {:.2} ms", pct(0.9));
-    println!("  latency p99    : {:.2} ms", pct(0.99));
-    println!("  top-{} accuracy : {:.4}", net.topk, acc);
+    let stats = gateway.shutdown();
     println!(
-        "  batches        : {} ({:.1} req/batch, {:.1}% padded slots)",
-        stats.batches,
-        stats.requests as f64 / stats.batches.max(1) as f64,
-        100.0 * stats.padded_slots as f64 / (stats.batches.max(1) * batch as u64) as f64
+        "\nshutdown: {} requests in {} batches across {} session(s)",
+        stats.total_requests(),
+        stats.total_batches(),
+        stats.sessions.len()
     );
     Ok(())
 }

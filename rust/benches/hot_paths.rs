@@ -9,8 +9,9 @@
 
 use precis::bench_harness::{section, Bench};
 use precis::formats::Format;
-use precis::nn::{gemm_q, gemm_q_naive, Engine, Zoo};
+use precis::nn::{gemm_q, gemm_q_naive, Zoo};
 use precis::numerics::{dot_q, Quantizer};
+use precis::serving::{Backend, NativeBackend};
 use precis::util::rng::Pcg32;
 
 const ARTIFACTS: &str = concat!(env!("CARGO_MANIFEST_DIR"), "/../artifacts");
@@ -87,14 +88,14 @@ fn main() {
         return;
     };
 
-    section("native forward (batch 32)");
-    let mut engine = Engine::new();
+    section("native forward via serving::Backend (batch 32)");
     for name in ["lenet5", "cifarnet", "alexnet-mini", "vgg-mini", "googlenet-mini"] {
         let net = zoo.network(name).unwrap();
+        let mut backend = NativeBackend::new(net.clone());
         let x = net.eval_x.slice_rows(0, 32);
         let fmt = Format::float(7, 6);
         let r = b.run(&format!("forward/{name}/batch32"), || {
-            engine.forward(&net, &x, &fmt).data()[0]
+            backend.run_batch(&x, &fmt).unwrap().data()[0]
         });
         println!("    -> {:.1} samples/s", r.throughput(32.0));
     }

@@ -50,11 +50,12 @@ fn main() {
         let lenet = coord.zoo.network("lenet5").unwrap();
         let space = formats::design_space(8);
         b.run("fig9_points_lenet5/str8", || {
-            collect_model_points(&lenet, &space, &opts, 7).len()
+            collect_model_points(&lenet, &space, &opts, 7).unwrap().len()
         });
 
         section("fig10/fig11 (model-driven search)");
         let pts: Vec<_> = collect_model_points(&lenet, &formats::design_space(4), &opts, 7)
+            .unwrap()
             .into_iter()
             .map(|(_, p)| p)
             .collect();
@@ -68,7 +69,7 @@ fn main() {
             seed: 7,
         };
         b.run("search_cifarnet/float_ladder", || {
-            search(&cifar, &spec, &model).sample_forwards
+            search(&cifar, &spec, &model).unwrap().sample_forwards
         });
     }
 }

@@ -1,18 +1,18 @@
-//! L3 coordination: worker pool, parallel design-space sweeps, result
-//! cache, and a batching inference server.
+//! L3 sweep coordination: worker pool, parallel design-space sweeps,
+//! and the persistent result cache.
 //!
 //! The paper's workload is *sweep-shaped* (hundreds of (network, format)
 //! evaluations feeding the search and every figure), so the coordinator
-//! is organized around a work-stealing job pool with per-worker engine
-//! reuse and a persistent result cache keyed by
-//! (network, format, samples).  The [`server`] submodule provides the
-//! request-path façade: single-sample requests are dynamically batched
-//! to the artifact batch size and dispatched to a pluggable runner
-//! (native engine or PJRT executable).
+//! is organized around a work-stealing job pool with one
+//! [`crate::serving::NativeBackend`] per worker and a persistent result
+//! cache keyed by (network, format, samples).  The request path lives
+//! in [`crate::serving`]: the old single-pair `coordinator::server`
+//! façade was replaced by the multi-session `serving::Gateway`, which
+//! executes through the same [`crate::serving::Backend`] substrate as
+//! the sweeps here.
 
 pub mod cache;
 pub mod pool;
-pub mod server;
 mod sweep;
 
 pub use sweep::{sweep_formats, Coordinator};

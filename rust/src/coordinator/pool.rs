@@ -5,7 +5,7 @@
 //! send `(index, result)` down an mpsc channel, so results come back in
 //! job order regardless of completion order.  Each worker owns a
 //! `state` value created by `init` (the sweep uses this for its
-//! scratch-buffer [`crate::nn::Engine`]).
+//! scratch-buffer [`crate::serving::NativeBackend`]).
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc;

@@ -10,58 +10,59 @@ use crate::eval::metrics::topk_accuracy;
 use crate::eval::sweep::{forward_eval, forward_eval_parallel, ConfigResult, EvalOptions};
 use crate::formats::Format;
 use crate::hw;
-use crate::nn::{Engine, Network, Zoo};
+use crate::nn::{Network, Zoo};
+use crate::serving::NativeBackend;
 
 /// Parallel sweep of `formats` over one network, with caching.
 ///
 /// Two levels of parallelism, both through the same pool
-/// (DESIGN.md §7): the formats fan out over `workers` with one engine
-/// per worker, and the baseline evaluation that gates the sweep — a
-/// single config, which format-level fan-out alone would run on one
-/// core — fans its *batches* out instead.
+/// (DESIGN.md §7): the formats fan out over `workers` with one
+/// [`NativeBackend`] per worker, and the baseline evaluation that gates
+/// the sweep — a single config, which format-level fan-out alone would
+/// run on one core — fans its *batches* out instead.
 pub fn sweep_formats(
     net: &Arc<Network>,
     formats: &[Format],
     opts: &EvalOptions,
     workers: usize,
     cache: &ResultCache,
-) -> Vec<ConfigResult> {
+) -> Result<Vec<ConfigResult>> {
     let samples = opts.samples.min(net.eval_len());
 
     // baseline accuracy on the identical subset (cached like any config)
-    let baseline = cached_accuracy(net, &Format::SINGLE, opts, cache, 1.0, workers).accuracy;
+    let baseline = cached_accuracy(net, &Format::SINGLE, opts, cache, 1.0, workers)?.accuracy;
 
     let jobs: Vec<Format> = formats.to_vec();
     let results = run_indexed(
         &jobs,
         workers,
-        Engine::new,
-        |engine, fmt| -> (Format, CachedAccuracy) {
+        || NativeBackend::new(net.clone()),
+        |backend, fmt| -> Result<(Format, CachedAccuracy)> {
             if let Some(hit) = cache.get(&net.name, &fmt.id(), samples) {
-                return (*fmt, hit);
+                return Ok((*fmt, hit));
             }
-            let (logits, labels) = forward_eval(engine, net, fmt, opts);
+            let (logits, labels) = forward_eval(backend, fmt, opts)?;
             let acc = topk_accuracy(&logits, &labels, net.classes, net.topk);
             let na = if baseline > 0.0 { acc / baseline } else { 0.0 };
             let v = CachedAccuracy { accuracy: acc, normalized_accuracy: na };
             cache.put(&net.name, &fmt.id(), samples, v);
-            (*fmt, v)
+            Ok((*fmt, v))
         },
     );
 
-    results
-        .into_iter()
-        .map(|(fmt, v)| {
-            let eff = hw::speedup::efficiency(&fmt);
-            ConfigResult {
-                format: fmt,
-                accuracy: v.accuracy,
-                normalized_accuracy: v.normalized_accuracy,
-                speedup: eff.speedup,
-                energy_savings: eff.energy_savings,
-            }
-        })
-        .collect()
+    let mut out = Vec::with_capacity(results.len());
+    for r in results {
+        let (fmt, v) = r?;
+        let eff = hw::speedup::efficiency(&fmt);
+        out.push(ConfigResult {
+            format: fmt,
+            accuracy: v.accuracy,
+            normalized_accuracy: v.normalized_accuracy,
+            speedup: eff.speedup,
+            energy_savings: eff.energy_savings,
+        });
+    }
+    Ok(out)
 }
 
 fn cached_accuracy(
@@ -71,16 +72,16 @@ fn cached_accuracy(
     cache: &ResultCache,
     na: f64,
     workers: usize,
-) -> CachedAccuracy {
+) -> Result<CachedAccuracy> {
     let samples = opts.samples.min(net.eval_len());
     if let Some(hit) = cache.get(&net.name, &fmt.id(), samples) {
-        return hit;
+        return Ok(hit);
     }
-    let (logits, labels) = forward_eval_parallel(net, fmt, opts, workers);
+    let (logits, labels) = forward_eval_parallel(net, fmt, opts, workers)?;
     let acc = topk_accuracy(&logits, &labels, net.classes, net.topk);
     let v = CachedAccuracy { accuracy: acc, normalized_accuracy: na };
     cache.put(&net.name, &fmt.id(), samples, v);
-    v
+    Ok(v)
 }
 
 /// High-level façade over a zoo: owns the cache and worker settings.
@@ -108,7 +109,7 @@ impl Coordinator {
         opts: &EvalOptions,
     ) -> Result<Vec<ConfigResult>> {
         let net = self.zoo.network(net_name)?;
-        let out = sweep_formats(&net, formats, opts, self.workers, &self.cache);
+        let out = sweep_formats(&net, formats, opts, self.workers, &self.cache)?;
         self.cache.flush()?;
         Ok(out)
     }

@@ -1,8 +1,12 @@
 //! Design-space evaluation: run a network under one or many customized
 //! precision configurations and measure accuracy + last-layer activations.
 //!
-//! This is the sequential core; [`crate::coordinator`] parallelizes it
-//! across worker threads and caches results.
+//! Every forward pass here executes through [`Backend`] — the same
+//! substrate the request path ([`crate::serving::Session`]) runs on —
+//! so offline sweep numbers and served responses are the same function
+//! by construction (DESIGN.md §Serving).  [`crate::coordinator`]
+//! parallelizes this sequential core across worker threads and caches
+//! results.
 
 use std::sync::Arc;
 
@@ -12,7 +16,8 @@ use crate::coordinator::pool::{default_workers, run_indexed};
 use crate::eval::metrics::topk_accuracy;
 use crate::formats::Format;
 use crate::hw;
-use crate::nn::{Engine, Network};
+use crate::nn::Network;
+use crate::serving::{Backend, NativeBackend};
 use crate::tensor::Tensor;
 
 /// Evaluation options shared by sweeps and the search.
@@ -44,31 +49,59 @@ pub struct ConfigResult {
     pub energy_savings: f64,
 }
 
-/// Forward the first `opts.samples` eval inputs; returns (logits, labels).
-/// `opts.batch` is clamped to at least 1 (a zero batch would not advance).
+/// Run a batch of `b <= fixed_batch` samples through a backend that
+/// may be compiled at a static batch size: pad with zero samples up to
+/// that size and truncate the logits back to `b`.  Zero padding cannot
+/// perturb live rows — per-sample computation is independent
+/// (DESIGN.md §3) — so the result is bit-identical to an unconstrained
+/// backend's.  No-op pass-through for unconstrained backends.
+fn run_padded(backend: &mut dyn Backend, x: &Tensor, fmt: &Format) -> Result<Tensor> {
+    let b = x.shape()[0];
+    let Some(fb) = backend.fixed_batch().filter(|&fb| fb != b) else {
+        return backend.run_batch(x, fmt);
+    };
+    anyhow::ensure!(
+        b < fb,
+        "batch of {b} exceeds the backend's fixed batch size {fb}"
+    );
+    let mut shape = x.shape().to_vec();
+    let px: usize = shape[1..].iter().product();
+    shape[0] = fb;
+    let mut data = x.data().to_vec();
+    data.resize(fb * px, 0.0);
+    let out = backend.run_batch(&Tensor::new(shape, data)?, fmt)?;
+    let classes = out.shape()[1];
+    Tensor::new(vec![b, classes], out.data()[..b * classes].to_vec())
+}
+
+/// Forward the first `opts.samples` eval inputs through `backend`;
+/// returns (logits, labels).  `opts.batch` is clamped to at least 1 (a
+/// zero batch would not advance) and overridden by the backend's
+/// [`Backend::fixed_batch`] when it has one, with the ragged tail
+/// zero-padded — so the same driver runs on native AND PJRT backends.
 pub fn forward_eval(
-    engine: &mut Engine,
-    net: &Network,
+    backend: &mut dyn Backend,
     fmt: &Format,
     opts: &EvalOptions,
-) -> (Vec<f32>, Vec<i32>) {
+) -> Result<(Vec<f32>, Vec<i32>)> {
+    let net = backend.network().clone();
     let n = opts.samples.min(net.eval_len()).max(1);
-    let batch = opts.batch.max(1);
+    let batch = backend.fixed_batch().unwrap_or_else(|| opts.batch.max(1));
     let classes = net.classes;
     let mut logits = Vec::with_capacity(n * classes);
     let mut lo = 0;
     while lo < n {
         let hi = (lo + batch).min(n);
         let xb = net.eval_x.slice_rows(lo, hi);
-        let out = engine.forward(net, &xb, fmt);
+        let out = run_padded(backend, &xb, fmt)?;
         logits.extend_from_slice(out.data());
         lo = hi;
     }
-    (logits, net.eval_y[..n].to_vec())
+    Ok((logits, net.eval_y[..n].to_vec()))
 }
 
 /// Batch-parallel [`forward_eval`]: the same batches, fanned out over
-/// [`run_indexed`] with one scratch-buffer [`Engine`] per worker
+/// [`run_indexed`] with one scratch-buffer [`NativeBackend`] per worker
 /// (DESIGN.md §7).  Per-sample computation is identical regardless of
 /// which worker runs a batch, so the logits are bit-identical to the
 /// sequential driver — only wall-clock changes.  This is what keeps a
@@ -76,11 +109,11 @@ pub fn forward_eval(
 /// formats in flight than the machine has cores (e.g. the baseline
 /// evaluation every sweep starts with, or a single-config `eval`).
 pub fn forward_eval_parallel(
-    net: &Network,
+    net: &Arc<Network>,
     fmt: &Format,
     opts: &EvalOptions,
     workers: usize,
-) -> (Vec<f32>, Vec<i32>) {
+) -> Result<(Vec<f32>, Vec<i32>)> {
     let n = opts.samples.min(net.eval_len()).max(1);
     // same clamp as forward_eval, so both paths use identical batching
     let batch = opts.batch.max(1);
@@ -89,64 +122,76 @@ pub fn forward_eval_parallel(
         .map(|lo| (lo, (lo + batch).min(n)))
         .collect();
     if workers <= 1 || jobs.len() <= 1 {
-        let mut engine = Engine::new();
-        return forward_eval(&mut engine, net, fmt, opts);
+        let mut backend = NativeBackend::new(net.clone());
+        return forward_eval(&mut backend, fmt, opts);
     }
-    let chunks = run_indexed(&jobs, workers, Engine::new, |engine, &(lo, hi)| {
-        let xb = net.eval_x.slice_rows(lo, hi);
-        engine.forward(net, &xb, fmt).into_data()
-    });
+    let chunks = run_indexed(
+        &jobs,
+        workers,
+        || NativeBackend::new(net.clone()),
+        |backend, &(lo, hi)| -> Result<Vec<f32>> {
+            let xb = net.eval_x.slice_rows(lo, hi);
+            Ok(backend.run_batch(&xb, fmt)?.into_data())
+        },
+    );
     let mut logits = Vec::with_capacity(n * net.classes);
     for chunk in chunks {
-        logits.extend_from_slice(&chunk);
+        logits.extend_from_slice(&chunk?);
     }
-    (logits, net.eval_y[..n].to_vec())
+    Ok((logits, net.eval_y[..n].to_vec()))
 }
 
 /// Forward specific eval indices (the search's 10-input probe, §3.3).
+/// Chunked and zero-padded to the backend's [`Backend::fixed_batch`]
+/// when it has one, like [`forward_eval`].
 pub fn forward_indices(
-    engine: &mut Engine,
-    net: &Network,
+    backend: &mut dyn Backend,
     fmt: &Format,
     indices: &[usize],
-) -> Vec<f32> {
+) -> Result<Vec<f32>> {
+    let net = backend.network().clone();
     let [h, w, c] = net.input;
     let px = h * w * c;
-    let mut xdata = Vec::with_capacity(indices.len() * px);
-    for &i in indices {
-        xdata.extend_from_slice(&net.eval_x.data()[i * px..(i + 1) * px]);
+    let chunk = backend.fixed_batch().unwrap_or(indices.len()).max(1);
+    let mut out = Vec::with_capacity(indices.len() * net.classes);
+    for idx in indices.chunks(chunk) {
+        let mut xdata = Vec::with_capacity(idx.len() * px);
+        for &i in idx {
+            xdata.extend_from_slice(&net.eval_x.data()[i * px..(i + 1) * px]);
+        }
+        let x = Tensor::new(vec![idx.len(), h, w, c], xdata)?;
+        out.extend_from_slice(run_padded(backend, &x, fmt)?.data());
     }
-    let x = Tensor::new(vec![indices.len(), h, w, c], xdata).unwrap();
-    engine.forward(net, &x, fmt).into_data()
+    Ok(out)
 }
 
 /// Top-k accuracy of one configuration on the eval subset, with the
 /// batches spread over all cores (bit-identical to the sequential path).
-pub fn accuracy(net: &Network, fmt: &Format, samples: usize) -> Result<f64> {
+pub fn accuracy(net: &Arc<Network>, fmt: &Format, samples: usize) -> Result<f64> {
     let opts = EvalOptions { samples, ..Default::default() };
-    let (logits, labels) = forward_eval_parallel(net, fmt, &opts, default_workers());
+    let (logits, labels) = forward_eval_parallel(net, fmt, &opts, default_workers())?;
     Ok(topk_accuracy(&logits, &labels, net.classes, net.topk))
 }
 
 /// Evaluate one configuration fully (accuracy + hardware efficiency).
 /// `baseline_acc` is the exact-format accuracy on the *same* subset.
 pub fn eval_config(
-    engine: &mut Engine,
-    net: &Network,
+    backend: &mut dyn Backend,
     fmt: &Format,
     baseline_acc: f64,
     opts: &EvalOptions,
-) -> ConfigResult {
-    let (logits, labels) = forward_eval(engine, net, fmt, opts);
+) -> Result<ConfigResult> {
+    let (logits, labels) = forward_eval(backend, fmt, opts)?;
+    let net = backend.network();
     let acc = topk_accuracy(&logits, &labels, net.classes, net.topk);
     let eff = hw::speedup::efficiency(fmt);
-    ConfigResult {
+    Ok(ConfigResult {
         format: *fmt,
         accuracy: acc,
         normalized_accuracy: if baseline_acc > 0.0 { acc / baseline_acc } else { 0.0 },
         speedup: eff.speedup,
         energy_savings: eff.energy_savings,
-    }
+    })
 }
 
 /// Sequentially sweep a set of formats (the coordinator parallelizes
@@ -155,12 +200,83 @@ pub fn sweep_design_space(
     net: &Arc<Network>,
     formats: &[Format],
     opts: &EvalOptions,
-) -> Vec<ConfigResult> {
-    let mut engine = Engine::new();
-    let (logits, labels) = forward_eval(&mut engine, net, &Format::SINGLE, opts);
+) -> Result<Vec<ConfigResult>> {
+    let mut backend = NativeBackend::new(net.clone());
+    let (logits, labels) = forward_eval(&mut backend, &Format::SINGLE, opts)?;
     let baseline = topk_accuracy(&logits, &labels, net.classes, net.topk);
     formats
         .iter()
-        .map(|f| eval_config(&mut engine, net, f, baseline, opts))
+        .map(|f| eval_config(&mut backend, f, baseline, opts))
         .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::fixtures::tiny_network;
+
+    /// A native backend constrained to a static batch size, modelling
+    /// the AOT/PJRT executables (which reject any other batch shape).
+    struct FixedBatch(NativeBackend, usize);
+
+    impl Backend for FixedBatch {
+        fn run_batch(&mut self, x: &Tensor, fmt: &Format) -> Result<Tensor> {
+            anyhow::ensure!(
+                x.shape()[0] == self.1,
+                "batch {} != fixed batch {}",
+                x.shape()[0],
+                self.1
+            );
+            self.0.run_batch(x, fmt)
+        }
+
+        fn network(&self) -> &Arc<Network> {
+            self.0.network()
+        }
+
+        fn label(&self) -> &'static str {
+            "fixed-native"
+        }
+
+        fn fixed_batch(&self) -> Option<usize> {
+            Some(self.1)
+        }
+    }
+
+    /// The eval drivers must serve a fixed-batch backend (chunk +
+    /// zero-pad ragged tails) and produce logits bit-identical to an
+    /// unconstrained backend's — the guarantee that lets PJRT run the
+    /// same offline code paths as the native engine.
+    #[test]
+    fn fixed_batch_backend_is_bit_identical_on_ragged_tails() {
+        let net = tiny_network(10);
+        let fmt = Format::float(7, 6);
+        let opts = EvalOptions { samples: 10, batch: 4 };
+        let (free, labels_a) =
+            forward_eval(&mut NativeBackend::new(net.clone()), &fmt, &opts).unwrap();
+        let (fixed, labels_b) =
+            forward_eval(&mut FixedBatch(NativeBackend::new(net.clone()), 4), &fmt, &opts)
+                .unwrap();
+        assert_eq!(labels_a, labels_b);
+        assert_eq!(free.len(), fixed.len());
+        for i in 0..free.len() {
+            assert_eq!(free[i].to_bits(), fixed[i].to_bits(), "logit {i}");
+        }
+
+        // the probe path chunks + pads too
+        let idx = [0usize, 3, 7, 9, 1];
+        let a = forward_indices(&mut NativeBackend::new(net.clone()), &fmt, &idx).unwrap();
+        let b =
+            forward_indices(&mut FixedBatch(NativeBackend::new(net.clone()), 4), &fmt, &idx)
+                .unwrap();
+        assert_eq!(a.len(), b.len());
+        for i in 0..a.len() {
+            assert_eq!(a[i].to_bits(), b[i].to_bits(), "probe logit {i}");
+        }
+
+        // an over-size batch is a clean error, not a silent truncation
+        let x = net.eval_x.slice_rows(0, 6);
+        assert!(run_padded(&mut FixedBatch(NativeBackend::new(net.clone()), 4), &x, &fmt)
+            .is_err());
+    }
 }

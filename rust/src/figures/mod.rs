@@ -16,12 +16,13 @@ use crate::eval::sweep::EvalOptions;
 use crate::eval::ConfigResult;
 use crate::formats::{self, Format};
 use crate::hw;
-use crate::nn::{Engine, Network};
+use crate::nn::Network;
 use crate::numerics::trace::{trace_accumulation, trace_exact};
 use crate::search::{
     collect_model_points_cached, predictions_from_r2s, probe_r2s, select_candidates,
     AccuracyModel,
 };
+use crate::serving::NativeBackend;
 
 /// Memo of probe R²s per network (model-independent, so fig10 and
 /// fig11 share one probe pass per network over the full design space).
@@ -31,9 +32,13 @@ fn memo_probe_r2s<'a>(
     memo: &'a mut ProbeMemo,
     net: &Arc<Network>,
     seed: u64,
-) -> &'a [(Format, f64)] {
-    memo.entry(net.name.clone())
-        .or_insert_with(|| probe_r2s(net, &formats::design_space(1), seed))
+) -> Result<&'a [(Format, f64)]> {
+    use std::collections::btree_map::Entry;
+    let slot = match memo.entry(net.name.clone()) {
+        Entry::Occupied(e) => e.into_mut(),
+        Entry::Vacant(v) => v.insert(probe_r2s(net, &formats::design_space(1), seed)?),
+    };
+    Ok(slot)
 }
 
 /// A printable/storable data table.
@@ -216,10 +221,11 @@ pub fn neuron_chain(net: &Arc<Network>, sample: usize) -> Result<(Vec<f32>, Vec<
         unreachable!()
     };
 
-    // input activations of that conv under the exact format
-    let mut engine = Engine::new();
+    // input activations of that conv under the exact format, tapped
+    // through the serving substrate's native backend
+    let mut backend = NativeBackend::new(net.clone());
     let x = net.eval_x.slice_rows(sample, sample + 1);
-    let act = engine.forward_prefix(net, &x, &Format::SINGLE, conv_idx);
+    let act = backend.forward_prefix(&x, &Format::SINGLE, conv_idx);
     let shape = act.shape().to_vec();
     let (h, w, c) = (shape[1], shape[2], shape[3]);
     assert_eq!(c, in_ch);
@@ -291,7 +297,7 @@ pub fn fig9(coord: &Coordinator, opts: &EvalOptions, seed: u64) -> Result<(Table
     for name in MODEL_NETS {
         let net = coord.zoo.network(name)?;
         for (fmt, p) in
-            collect_model_points_cached(&net, &space, opts, seed, Some(&coord.cache))
+            collect_model_points_cached(&net, &space, opts, seed, Some(&coord.cache))?
         {
             t.push(vec![name.to_string(), fmt.id(), f(p.r2), f(p.normalized_accuracy)]);
             points.push(p);
@@ -321,7 +327,7 @@ pub fn fig10(
         let samples = opts.samples.min(net.eval_len());
         // cross-validated model: fit on the OTHER model networks (§4.4)
         let model = cross_validated_model(coord, &net_name, opts, seed)?;
-        let all_r2s: Vec<(Format, f64)> = memo_probe_r2s(probes, &net, seed).to_vec();
+        let all_r2s: Vec<(Format, f64)> = memo_probe_r2s(probes, &net, seed)?.to_vec();
         for kind in ["float", "fixed"] {
             let r2s: Vec<(Format, f64)> = all_r2s
                 .iter()
@@ -402,7 +408,7 @@ pub fn cross_validated_model(
     for name in MODEL_NETS.iter().filter(|n| **n != exclude) {
         let net = coord.zoo.network(name)?;
         points.extend(
-            collect_model_points_cached(&net, &space, opts, seed, Some(&coord.cache))
+            collect_model_points_cached(&net, &space, opts, seed, Some(&coord.cache))?
                 .into_iter()
                 .map(|(_, p)| p),
         );
@@ -426,7 +432,7 @@ pub fn fig11(
     let mut speedups = Vec::new();
     for net in coord.zoo.by_size_desc() {
         let model = cross_validated_model(coord, &net.name, opts, seed)?;
-        let cands = predictions_from_r2s(memo_probe_r2s(probes, &net, seed), &model);
+        let cands = predictions_from_r2s(memo_probe_r2s(probes, &net, seed)?, &model);
         // refinement evaluations come from the (cached) accuracy table
         let table = coord.sweep(&net.name, &formats::design_space(1), opts)?;
         let na_of = |fm: &Format| -> f64 {

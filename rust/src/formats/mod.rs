@@ -141,6 +141,12 @@ impl Format {
             }
             "fixed" => {
                 let (l, r) = grab(rest, 'l', Some('r'))?;
+                // range-check here so untrusted input (CLI flags,
+                // session specs) gets an Err instead of tripping the
+                // `Format::fixed` assert
+                if l > 64 || r > 64 {
+                    bail!("format {s:?}: out of range (l<=64, r<=64)");
+                }
                 Ok(Format::fixed(l, r))
             }
             _ => bail!("format {s:?}: unknown kind {kind:?}"),
@@ -239,6 +245,17 @@ mod tests {
         assert!(Format::parse("decimal:x1y2").is_err());
         assert!(Format::parse("float").is_err());
         assert!(Format::parse("fixed:l2q3").is_err());
+    }
+
+    /// Regression: out-of-range fixed formats must return `Err`, not
+    /// panic in the `Format::fixed` constructor assert.
+    #[test]
+    fn parse_rejects_out_of_range_fixed() {
+        assert!(Format::parse("fixed:l100r100").is_err());
+        assert!(Format::parse("fixed:l65r0").is_err());
+        assert!(Format::parse("fixed:l0r65").is_err());
+        // the constructor's full accepted range still parses
+        assert_eq!(Format::parse("fixed:l64r64").unwrap(), Format::fixed(64, 64));
     }
 
     #[test]

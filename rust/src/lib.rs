@@ -12,6 +12,9 @@
 //!                    Caffe" substitute; bit-exact vs the Pallas kernel)
 //! * [`runtime`]    — PJRT client: load + execute `artifacts/*.hlo.txt`
 //!                    (behind the `pjrt` feature; DESIGN.md §5)
+//! * [`serving`]    — the unified execution API: `Backend` (the one
+//!                    substrate), `Session` (dynamic batching) and the
+//!                    multi-model `Gateway` (DESIGN.md §Serving)
 //! * [`coordinator`]— sweep orchestrator: job queue, worker pool, cache
 //! * [`search`]     — the paper's §3.3 contribution: last-layer R² →
 //!                    linear accuracy model → model+N-samples search
@@ -44,6 +47,7 @@ pub mod nn;
 pub mod numerics;
 pub mod runtime;
 pub mod search;
+pub mod serving;
 pub mod tensor;
 pub mod testing;
 pub mod util;

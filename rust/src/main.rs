@@ -8,11 +8,15 @@
 //!   trace    --net N             accumulation trace (Fig 8 data)
 //!   figure   <fig4..fig11>       regenerate one paper figure's series
 //!   figures                      regenerate all figures into --out
+//!   serve    --sessions K,...    multi-model gateway under closed-loop
+//!                                load; K = net@format
+//!   bench-sweep --net N          quick sequential sweep timing
 //!
 //! Common flags: --artifacts DIR (default artifacts), --out DIR (default
 //! results), --samples N, --workers W, --seed S, --stride K.
 
 use std::path::PathBuf;
+use std::time::Duration;
 
 use anyhow::{bail, Context, Result};
 
@@ -24,6 +28,7 @@ use precis::figures;
 use precis::formats::{self, Format};
 use precis::nn::Zoo;
 use precis::search::{exhaustive_search, search, SearchSpec};
+use precis::serving::{drive_closed_loop, warm_up, BackendKind, Gateway, SessionOptions};
 use precis::util::cli::Args;
 use precis::util::timer::Timer;
 
@@ -35,7 +40,7 @@ fn main() {
     }
 }
 
-const USAGE: &str = "usage: repro <info|eval|sweep|search|trace|figure|figures> [flags]
+const USAGE: &str = "usage: repro <info|eval|sweep|search|trace|figure|figures|serve|bench-sweep> [flags]
   repro info
   repro eval   --net lenet5 --format float:m7e6 [--samples 128] [--backend native|pjrt]
   repro sweep  --net lenet5 [--samples 128] [--stride 1]
@@ -43,6 +48,9 @@ const USAGE: &str = "usage: repro <info|eval|sweep|search|trace|figure|figures> 
   repro trace  --net alexnet-mini [--sample 0]
   repro figure <fig4|fig5|fig6|fig7|fig8|fig9|fig10|fig11> [--net N]
   repro figures [--out results]
+  repro serve  --sessions lenet5@float:m7e6,alexnet-mini@fixed:l8r8
+               [--requests 256] [--clients 8] [--wait-ms 5] [--backend native|pjrt|auto]
+  repro bench-sweep --net lenet5 [--stride 1]
 common: --artifacts DIR --out DIR --samples N --workers W --seed S";
 
 fn run(raw: &[String]) -> Result<()> {
@@ -130,8 +138,8 @@ fn run(raw: &[String]) -> Result<()> {
             let model = figures::cross_validated_model(&coord, net_name, &opts, seed)?;
             let spec = SearchSpec { formats: space, target, refine_samples: refine, opts, seed };
             let t = Timer::start();
-            let out = search(&net, &spec, &model);
-            let (ex, _) = exhaustive_search(&net, &spec);
+            let out = search(&net, &spec, &model)?;
+            let (ex, _) = exhaustive_search(&net, &spec)?;
             coord.cache.flush()?;
             println!("model search : {:?} speedup {:.2}x measured_na {:.4} ({} sample-forwards)",
                 out.chosen.map(|c| c.id()), out.speedup, out.measured_norm_acc, out.sample_forwards);
@@ -186,14 +194,59 @@ fn run(raw: &[String]) -> Result<()> {
             coord.cache.flush()?;
             eprintln!("# all figures in {:.1}s", t.elapsed_s());
         }
+        "serve" => {
+            let specs = args
+                .get("sessions")
+                .context("--sessions net@format[,net@format...] required")?
+                .to_string();
+            let n_requests = args.get_usize("requests", 256)?;
+            let n_clients = args.get_usize("clients", 8)?.max(1);
+            let wait_ms = args.get_usize("wait-ms", 5)?;
+            let kind = BackendKind::parse(args.get_or("backend", "native"))?;
+            let zoo = Zoo::load(&artifacts)?;
+            let gateway = Gateway::new(zoo, kind).with_options(SessionOptions {
+                batch: 0, // artifact batch size
+                max_wait: Duration::from_millis(wait_ms as u64),
+            });
+            let mut keys = Vec::new();
+            for spec in specs.split(',') {
+                keys.push(gateway.open_spec(spec.trim())?);
+            }
+            println!(
+                "gateway: {} session(s) [{}], backend {}, {n_clients} closed-loop clients, {n_requests} requests",
+                keys.len(),
+                keys.iter().map(|k| k.to_string()).collect::<Vec<_>>().join(", "),
+                kind.as_str()
+            );
+
+            // one warm-up request per session proves each backend end
+            // to end before the measured load
+            warm_up(&gateway, &keys)?;
+
+            let t = Timer::start();
+            let served = drive_closed_loop(&gateway, &keys, n_requests, n_clients);
+            let wall = t.elapsed_s();
+            debug_assert_eq!(served.len(), n_requests);
+
+            // live stats snapshot (the gateway is still serving here —
+            // telemetry is not a shutdown-only artifact)
+            println!("\n{}", gateway.stats().render());
+            println!(
+                "throughput: {:.1} req/s over {} session(s) ({wall:.2}s wall)",
+                n_requests as f64 / wall.max(1e-9),
+                keys.len()
+            );
+            let fin = gateway.shutdown();
+            println!("served {} requests in {} batches total", fin.total_requests(), fin.total_batches());
+        }
         "bench-sweep" => {
-            // hidden: quick sequential sweep timing (perf work)
+            // quick sequential sweep timing (perf work; listed in USAGE)
             let net_name = args.get("net").context("--net required")?;
             let zoo = Zoo::load(&artifacts)?;
             let net = zoo.network(net_name)?;
             let space = formats::design_space(stride);
             let t = Timer::start();
-            let res = sweep_design_space(&net, &space, &opts);
+            let res = sweep_design_space(&net, &space, &opts)?;
             println!("{} configs in {:.2}s ({:.2} cfg/s)",
                 res.len(), t.elapsed_s(), res.len() as f64 / t.elapsed_s());
         }

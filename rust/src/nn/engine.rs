@@ -16,6 +16,11 @@
 //! allocations per forward** after warm-up, and the GEMM at its core is
 //! the M/N cache-blocked [`gemm_q`] with a strictly serial k chain per
 //! output element (§Perf L3 target; DESIGN.md §4).
+//!
+//! `Engine` is crate-private: all consumers — offline sweeps and the
+//! request path alike — run it through `serving::NativeBackend`, the
+//! native implementation of the one execution substrate
+//! (DESIGN.md §Serving).
 
 use crate::formats::Format;
 use crate::nn::layers::Layer;

@@ -7,11 +7,18 @@
 //! and matches the Pallas-kernel HLO path BIT-exactly (proved by the
 //! `pjrt_cross_check` test), which is what makes it safe to use as the
 //! fast sweep engine while the PJRT path serves requests.
+//!
+//! The scratch-buffer `Engine` itself is crate-private: every consumer
+//! — offline sweeps and the request path alike — executes through
+//! [`crate::serving::Backend`] (the one-substrate guarantee, DESIGN.md
+//! §Serving), so `serving::NativeBackend` is the only constructor of
+//! engines outside this module.
 
 mod engine;
 mod layers;
 mod network;
 
-pub use engine::{gemm_q, gemm_q_naive, Engine};
+pub(crate) use engine::Engine;
+pub use engine::{gemm_q, gemm_q_naive};
 pub use layers::Layer;
 pub use network::{Network, Zoo};

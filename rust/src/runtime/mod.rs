@@ -14,10 +14,12 @@
 //!
 //! * **default build** — this module exports only [`AVAILABLE`]
 //!   (`false`); everything that would need a PJRT executable falls back
-//!   to the native engine ([`crate::nn::Engine`]), which is bit-exact
-//!   with the Pallas kernels by contract (DESIGN.md §3).
+//!   to the native engine ([`crate::serving::NativeBackend`]), which is
+//!   bit-exact with the Pallas kernels by contract (DESIGN.md §3).
 //! * **`--features pjrt`** — compiles the executor in this module
-//!   against the `xla` dependency.  Out of the box that dependency is
+//!   against the `xla` dependency (and the
+//!   `serving::PjrtBackend` adapter the session factory builds on the
+//!   dispatcher thread).  Out of the box that dependency is
 //!   the in-repo `rust/xla-stub` placeholder, which type-checks the
 //!   path but fails fast at runtime; point it at a real PJRT binding
 //!   crate to execute the artifacts.

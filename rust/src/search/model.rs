@@ -2,11 +2,14 @@
 
 use std::sync::Arc;
 
+use anyhow::Result;
+
 use crate::eval::metrics::topk_accuracy;
 use crate::eval::sweep::{forward_eval, forward_indices, EvalOptions};
 use crate::formats::Format;
-use crate::nn::{Engine, Network};
+use crate::nn::Network;
 use crate::search::{activation_r2, PROBE_INPUTS};
+use crate::serving::NativeBackend;
 use crate::util::rng::Pcg32;
 use crate::util::stats::{ols, pearson};
 
@@ -60,47 +63,44 @@ pub fn collect_model_points_cached(
     opts: &EvalOptions,
     seed: u64,
     cache: Option<&crate::coordinator::cache::ResultCache>,
-) -> Vec<(Format, ModelPoint)> {
-    let mut engine = Engine::new();
+) -> Result<Vec<(Format, ModelPoint)>> {
+    let mut backend = NativeBackend::new(net.clone());
     let samples = opts.samples.min(net.eval_len());
 
     // exact baseline: accuracy on the subset + probe activations
-    let (base_logits, labels) = forward_eval(&mut engine, net, &Format::SINGLE, opts);
+    let (base_logits, labels) = forward_eval(&mut backend, &Format::SINGLE, opts)?;
     let base_acc = topk_accuracy(&base_logits, &labels, net.classes, net.topk);
 
     let mut rng = Pcg32::seeded(seed);
     let probe = rng.sample_indices(net.eval_len(), PROBE_INPUTS.min(net.eval_len()));
-    let exact_probe = forward_indices(&mut engine, net, &Format::SINGLE, &probe);
+    let exact_probe = forward_indices(&mut backend, &Format::SINGLE, &probe)?;
 
-    formats
-        .iter()
-        .map(|f| {
-            let quant_probe = forward_indices(&mut engine, net, f, &probe);
-            let r2 = activation_r2(&exact_probe, &quant_probe);
-            let na = if let Some(hit) =
-                cache.and_then(|c| c.get(&net.name, &f.id(), samples))
-            {
-                hit.normalized_accuracy
-            } else {
-                let (logits, _) = forward_eval(&mut engine, net, f, opts);
-                let acc = topk_accuracy(&logits, &labels, net.classes, net.topk);
-                let na = if base_acc > 0.0 { acc / base_acc } else { 0.0 };
-                if let Some(c) = cache {
-                    c.put(
-                        &net.name,
-                        &f.id(),
-                        samples,
-                        crate::coordinator::cache::CachedAccuracy {
-                            accuracy: acc,
-                            normalized_accuracy: na,
-                        },
-                    );
-                }
-                na
-            };
-            (*f, ModelPoint { r2, normalized_accuracy: na })
-        })
-        .collect()
+    let mut points = Vec::with_capacity(formats.len());
+    for f in formats {
+        let quant_probe = forward_indices(&mut backend, f, &probe)?;
+        let r2 = activation_r2(&exact_probe, &quant_probe);
+        let na = if let Some(hit) = cache.and_then(|c| c.get(&net.name, &f.id(), samples)) {
+            hit.normalized_accuracy
+        } else {
+            let (logits, _) = forward_eval(&mut backend, f, opts)?;
+            let acc = topk_accuracy(&logits, &labels, net.classes, net.topk);
+            let na = if base_acc > 0.0 { acc / base_acc } else { 0.0 };
+            if let Some(c) = cache {
+                c.put(
+                    &net.name,
+                    &f.id(),
+                    samples,
+                    crate::coordinator::cache::CachedAccuracy {
+                        accuracy: acc,
+                        normalized_accuracy: na,
+                    },
+                );
+            }
+            na
+        };
+        points.push((*f, ModelPoint { r2, normalized_accuracy: na }));
+    }
+    Ok(points)
 }
 
 /// Uncached variant (tests, standalone use).
@@ -109,7 +109,7 @@ pub fn collect_model_points(
     formats: &[Format],
     opts: &EvalOptions,
     seed: u64,
-) -> Vec<(Format, ModelPoint)> {
+) -> Result<Vec<(Format, ModelPoint)>> {
     collect_model_points_cached(net, formats, opts, seed, None)
 }
 
@@ -137,5 +137,23 @@ mod tests {
         let m = AccuracyModel { a: 10.0, b: -2.0, fit_r: 1.0, n_points: 0 };
         assert_eq!(m.predict(0.0), 0.0);
         assert_eq!(m.predict(1.0), 1.5);
+    }
+
+    /// The whole pipeline runs on the in-memory fixture network, so the
+    /// Backend-substrate plumbing is exercised without artifacts.
+    #[test]
+    fn collect_points_on_fixture_network() {
+        let net = crate::testing::fixtures::tiny_network(16);
+        let opts = EvalOptions { samples: 16, batch: 4 };
+        let pts = collect_model_points(
+            &net,
+            &[Format::SINGLE, Format::float(7, 6), Format::fixed(0, 2)],
+            &opts,
+            7,
+        )
+        .unwrap();
+        assert_eq!(pts.len(), 3);
+        // exact format: perfect correlation with itself
+        assert!((pts[0].1.r2 - 1.0).abs() < 1e-12);
     }
 }

@@ -1,15 +1,20 @@
 //! Exhaustive baseline + the model-driven search with refinement (§3.3,
-//! Figs 10/11).
+//! Figs 10/11).  All measurement passes execute through
+//! [`crate::serving::Backend`] (the native backend), the same substrate
+//! the request path serves on.
 
 use std::sync::Arc;
+
+use anyhow::Result;
 
 use crate::eval::metrics::topk_accuracy;
 use crate::eval::sweep::{forward_eval, forward_indices, EvalOptions};
 use crate::formats::Format;
 use crate::hw;
-use crate::nn::{Engine, Network};
+use crate::nn::Network;
 use crate::search::model::AccuracyModel;
 use crate::search::{activation_r2, PROBE_INPUTS};
+use crate::serving::{Backend, NativeBackend};
 use crate::util::rng::Pcg32;
 
 /// What to search.
@@ -46,20 +51,19 @@ pub struct SearchOutcome {
 }
 
 fn norm_acc(
-    engine: &mut Engine,
-    net: &Network,
+    backend: &mut dyn Backend,
     fmt: &Format,
     base_acc: f64,
     labels: &[i32],
     opts: &EvalOptions,
-) -> f64 {
-    let (logits, _) = forward_eval(engine, net, fmt, opts);
-    let acc = topk_accuracy(&logits, labels, net.classes, net.topk);
-    if base_acc > 0.0 {
-        acc / base_acc
-    } else {
-        0.0
-    }
+) -> Result<f64> {
+    let (classes, topk) = {
+        let net = backend.network();
+        (net.classes, net.topk)
+    };
+    let (logits, _) = forward_eval(backend, fmt, opts)?;
+    let acc = topk_accuracy(&logits, labels, classes, topk);
+    Ok(if base_acc > 0.0 { acc / base_acc } else { 0.0 })
 }
 
 /// Exhaustive baseline: evaluate the real accuracy of EVERY candidate
@@ -68,14 +72,14 @@ fn norm_acc(
 pub fn exhaustive_search(
     net: &Arc<Network>,
     spec: &SearchSpec,
-) -> (SearchOutcome, Vec<(Format, f64)>) {
-    let mut engine = Engine::new();
-    let (base_logits, labels) = forward_eval(&mut engine, net, &Format::SINGLE, &spec.opts);
+) -> Result<(SearchOutcome, Vec<(Format, f64)>)> {
+    let mut backend = NativeBackend::new(net.clone());
+    let (base_logits, labels) = forward_eval(&mut backend, &Format::SINGLE, &spec.opts)?;
     let base_acc = topk_accuracy(&base_logits, &labels, net.classes, net.topk);
 
     let mut table = Vec::with_capacity(spec.formats.len());
     for f in &spec.formats {
-        let na = norm_acc(&mut engine, net, f, base_acc, &labels, &spec.opts);
+        let na = norm_acc(&mut backend, f, base_acc, &labels, &spec.opts)?;
         table.push((*f, na));
     }
     let chosen = table
@@ -92,7 +96,7 @@ pub fn exhaustive_search(
         .map(|(_, na)| *na)
         .unwrap_or(0.0);
     let samples = spec.opts.samples.min(net.eval_len());
-    (
+    Ok((
         SearchOutcome {
             chosen,
             speedup: chosen.map(|f| hw::speedup(&f)).unwrap_or(0.0),
@@ -101,11 +105,11 @@ pub fn exhaustive_search(
             sample_forwards: spec.formats.len() * samples + samples,
         },
         table,
-    )
+    ))
 }
 
 /// The refinement/selection core, factored out so callers can plug in
-/// either a live engine (the `search` entry point) or a precomputed
+/// either a live backend (the `search` entry point) or a precomputed
 /// accuracy table (the Fig 10 harness).  `cands` must be sorted fastest
 /// first; `eval` returns the *measured* normalized accuracy of a
 /// candidate.  Returns (chosen index, evaluations spent, last measured
@@ -168,20 +172,22 @@ pub fn select_candidates(
 /// probe inputs, sorted fastest-first.  R² is independent of the
 /// accuracy model, so callers (the figure harness) can compute this
 /// once per network and apply several models to it.
-pub fn probe_r2s(net: &Arc<Network>, formats: &[Format], seed: u64) -> Vec<(Format, f64)> {
-    let mut engine = Engine::new();
+pub fn probe_r2s(
+    net: &Arc<Network>,
+    formats: &[Format],
+    seed: u64,
+) -> Result<Vec<(Format, f64)>> {
+    let mut backend = NativeBackend::new(net.clone());
     let mut rng = Pcg32::seeded(seed);
     let probe = rng.sample_indices(net.eval_len(), PROBE_INPUTS.min(net.eval_len()));
-    let exact_probe = forward_indices(&mut engine, net, &Format::SINGLE, &probe);
-    let mut cands: Vec<(Format, f64)> = formats
-        .iter()
-        .map(|f| {
-            let qp = forward_indices(&mut engine, net, f, &probe);
-            (*f, activation_r2(&exact_probe, &qp))
-        })
-        .collect();
+    let exact_probe = forward_indices(&mut backend, &Format::SINGLE, &probe)?;
+    let mut cands = Vec::with_capacity(formats.len());
+    for f in formats {
+        let qp = forward_indices(&mut backend, f, &probe)?;
+        cands.push((*f, activation_r2(&exact_probe, &qp)));
+    }
     cands.sort_by(|a, b| hw::speedup(&b.0).partial_cmp(&hw::speedup(&a.0)).unwrap());
-    cands
+    Ok(cands)
 }
 
 /// Map probe R²s through the accuracy model (preserves order).
@@ -195,8 +201,8 @@ pub fn probe_predictions(
     formats: &[Format],
     model: &AccuracyModel,
     seed: u64,
-) -> Vec<(Format, f64)> {
-    predictions_from_r2s(&probe_r2s(net, formats, seed), model)
+) -> Result<Vec<(Format, f64)>> {
+    Ok(predictions_from_r2s(&probe_r2s(net, formats, seed)?, model))
 }
 
 /// The §3.3 model-driven search.
@@ -210,50 +216,67 @@ pub fn probe_predictions(
 ///    "add a bit" move generalized to the speedup ordering, which is the
 ///    bit ordering within a representation kind); if it measures above,
 ///    probe the next-faster one and keep it only if it also clears.
-pub fn search(net: &Arc<Network>, spec: &SearchSpec, model: &AccuracyModel) -> SearchOutcome {
-    let mut engine = Engine::new();
+pub fn search(
+    net: &Arc<Network>,
+    spec: &SearchSpec,
+    model: &AccuracyModel,
+) -> Result<SearchOutcome> {
+    let mut backend = NativeBackend::new(net.clone());
     let samples = spec.opts.samples.min(net.eval_len());
 
     // --- probe pass (cheap): R² + prediction per candidate ------------
-    let cands = probe_predictions(net, &spec.formats, model, spec.seed);
+    let cands = probe_predictions(net, &spec.formats, model, spec.seed)?;
     let mut sample_forwards =
         (spec.formats.len() + 1) * PROBE_INPUTS.min(net.eval_len());
 
     // baseline for real evaluations (shared by refinement + validation)
-    let (base_logits, labels) = forward_eval(&mut engine, net, &Format::SINGLE, &spec.opts);
+    let (base_logits, labels) = forward_eval(&mut backend, &Format::SINGLE, &spec.opts)?;
     let base_acc = topk_accuracy(&base_logits, &labels, net.classes, net.topk);
     sample_forwards += samples;
 
+    // the selection closure is infallible by contract; a (native-path
+    // impossible) backend error is parked and re-raised after selection
+    let mut eval_error: Option<anyhow::Error> = None;
     let mut evals_spent = 0usize;
     let selection = select_candidates(&cands, spec.target, spec.refine_samples, |f| {
         evals_spent += 1;
         sample_forwards += samples;
-        norm_acc(&mut engine, net, f, base_acc, &labels, &spec.opts)
+        match norm_acc(&mut backend, f, base_acc, &labels, &spec.opts) {
+            Ok(na) => na,
+            Err(e) => {
+                eval_error.get_or_insert(e);
+                0.0
+            }
+        }
     });
+    if let Some(e) = eval_error {
+        return Err(e);
+    }
     let Some((idx, evals, measured)) = selection else {
-        return SearchOutcome {
+        return Ok(SearchOutcome {
             chosen: None,
             speedup: 0.0,
             measured_norm_acc: 0.0,
             evals_spent: 0,
             sample_forwards,
-        };
+        });
     };
     debug_assert_eq!(evals, evals_spent);
 
     let chosen = cands[idx].0;
     // post-hoc validation (reporting only; not charged to the search)
-    let measured_norm_acc = measured.unwrap_or_else(|| {
-        norm_acc(&mut engine, net, &chosen, base_acc, &labels, &spec.opts)
-    });
+    let measured_norm_acc = match measured {
+        Some(na) => na,
+        None => norm_acc(&mut backend, &chosen, base_acc, &labels, &spec.opts)?,
+    };
 
-    SearchOutcome {
+    Ok(SearchOutcome {
         chosen: Some(chosen),
         speedup: hw::speedup(&chosen),
         measured_norm_acc,
         evals_spent: evals,
         sample_forwards,
-    }
+    })
 }
 
 #[cfg(test)]
@@ -382,5 +405,30 @@ mod tests {
             .max_by(|a, b| hw::speedup(a.0).partial_cmp(&hw::speedup(b.0)).unwrap())
             .map(|(f, _)| *f);
         assert_eq!(best, Some(Format::float(8, 6)));
+    }
+
+    /// End-to-end search over the fixture network: exercises the whole
+    /// Backend-substrate pipeline without artifacts.
+    #[test]
+    fn search_runs_on_fixture_network() {
+        let net = crate::testing::fixtures::tiny_network(16);
+        let opts = EvalOptions { samples: 16, batch: 4 };
+        let spec = SearchSpec {
+            // the ladder tops out at m=23 e=8 == Format::SINGLE, whose
+            // normalized accuracy is exactly 1.0 — so a clearing
+            // candidate always exists
+            formats: (4..=23).map(|m| Format::float(m, 8)).collect(),
+            target: 0.99,
+            refine_samples: 2,
+            opts,
+            seed: 7,
+        };
+        let model = AccuracyModel { a: 1.0, b: 0.0, fit_r: 1.0, n_points: 0 };
+        let out = search(&net, &spec, &model).unwrap();
+        let (ex, table) = exhaustive_search(&net, &spec).unwrap();
+        assert_eq!(table.len(), spec.formats.len());
+        assert!(out.chosen.is_some());
+        assert!(ex.chosen.is_some(), "SINGLE must clear the target");
+        assert!(out.sample_forwards > 0);
     }
 }

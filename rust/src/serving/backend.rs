@@ -1,0 +1,230 @@
+//! The pluggable execution backend behind every [`crate::serving::Session`].
+//!
+//! [`Backend`] is the **one execution substrate** of the crate: the
+//! offline drivers (`eval`, `search`, the sweep coordinator) and the
+//! online request path (`Session` / `Gateway`) all run batches through
+//! this trait, so comparing numeric formats never compares two
+//! different forward passes (DESIGN.md §Serving).
+//!
+//! Construction is unified behind [`BackendKind`] + the session
+//! factory: PJRT handles are not `Send` (the xla crate wraps raw
+//! pointers in `Rc`), so a [`BackendFactory`] — which *is* `Send` — is
+//! what crosses threads, and the backend itself is built on the
+//! session's dispatcher thread and never leaves it.  That used to be a
+//! public contortion of the old `InferenceServer::spawn`; it is now an
+//! implementation detail.
+
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+use crate::formats::Format;
+use crate::nn::{Engine, Network};
+use crate::tensor::Tensor;
+
+/// Anything that can run a batch (B, H, W, C) -> (B, classes) under a
+/// customized-precision format.  Object-safe; see the module docs for
+/// the one-substrate guarantee.
+pub trait Backend {
+    /// Execute one batch of inputs, returning the logits.
+    fn run_batch(&mut self, x: &Tensor, fmt: &Format) -> Result<Tensor>;
+
+    /// The network this backend executes.
+    fn network(&self) -> &Arc<Network>;
+
+    /// Short telemetry label (`"native"` / `"pjrt"`).
+    fn label(&self) -> &'static str;
+
+    /// The only batch size this backend can execute, when constrained
+    /// (the AOT/PJRT executables are compiled at a static batch size);
+    /// `None` means any batch works.  Drivers pad partial batches with
+    /// zero samples up to this size and truncate the logits — zero
+    /// padding cannot perturb live rows, since per-sample computation
+    /// is independent (DESIGN.md §3).
+    fn fixed_batch(&self) -> Option<usize> {
+        None
+    }
+}
+
+/// Builds a backend **on the thread that calls it** (the session
+/// dispatcher).  The factory is `Send` even when the backend it builds
+/// is not.
+pub type BackendFactory = Box<dyn FnOnce() -> Result<Box<dyn Backend>> + Send + 'static>;
+
+/// Which execution backend a [`crate::serving::Session`] should open.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BackendKind {
+    /// The pure-Rust engine — always available, bit-exact with the
+    /// Pallas/PJRT path by contract (DESIGN.md §3).
+    Native,
+    /// The AOT/PJRT executable (`pjrt` feature + artifacts required).
+    /// The backend is built lazily on the session's dispatcher thread,
+    /// so `open` itself succeeds and an unavailable runtime surfaces
+    /// as a hard `backend init failed` error on every request — never
+    /// as a silent native fallback.  Drivers send one warm-up request
+    /// per session ([`crate::serving::warm_up`]) to fail fast.
+    Pjrt,
+    /// PJRT when it can be brought up, otherwise the native engine.
+    Auto,
+}
+
+impl BackendKind {
+    /// Parse the CLI spelling (`native` / `pjrt` / `auto`).
+    pub fn parse(s: &str) -> Result<BackendKind> {
+        match s {
+            "native" => Ok(BackendKind::Native),
+            "pjrt" => Ok(BackendKind::Pjrt),
+            "auto" => Ok(BackendKind::Auto),
+            other => bail!("unknown backend {other:?} (native|pjrt|auto)"),
+        }
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            BackendKind::Native => "native",
+            BackendKind::Pjrt => "pjrt",
+            BackendKind::Auto => "auto",
+        }
+    }
+}
+
+/// The native-engine backend: one scratch-buffer engine bound to one
+/// network (zero heap allocations per forward after warm-up).
+pub struct NativeBackend {
+    net: Arc<Network>,
+    engine: Engine,
+}
+
+impl NativeBackend {
+    pub fn new(net: Arc<Network>) -> NativeBackend {
+        NativeBackend { net, engine: Engine::new() }
+    }
+
+    /// Run only the first `n_layers` layers and return the intermediate
+    /// activation — the Fig 8 accumulation study taps a convolution's
+    /// input this way.  Native-only: the AOT artifacts expose logits,
+    /// not intermediate activations.
+    pub fn forward_prefix(&mut self, x: &Tensor, fmt: &Format, n_layers: usize) -> Tensor {
+        self.engine.forward_prefix(&self.net, x, fmt, n_layers)
+    }
+}
+
+impl Backend for NativeBackend {
+    fn run_batch(&mut self, x: &Tensor, fmt: &Format) -> Result<Tensor> {
+        Ok(self.engine.forward(&self.net, x, fmt))
+    }
+
+    fn network(&self) -> &Arc<Network> {
+        &self.net
+    }
+
+    fn label(&self) -> &'static str {
+        "native"
+    }
+}
+
+/// The PJRT backend: the AOT artifact executable (`pjrt` feature only;
+/// DESIGN.md §5).  Built by the session factory on the dispatcher
+/// thread — it cannot cross threads.
+#[cfg(feature = "pjrt")]
+pub struct PjrtBackend {
+    pub model: crate::runtime::LoadedModel,
+}
+
+#[cfg(feature = "pjrt")]
+impl Backend for PjrtBackend {
+    fn run_batch(&mut self, x: &Tensor, fmt: &Format) -> Result<Tensor> {
+        self.model.run_batch(x, fmt)
+    }
+
+    fn network(&self) -> &Arc<Network> {
+        &self.model.net
+    }
+
+    fn label(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn fixed_batch(&self) -> Option<usize> {
+        Some(self.model.batch)
+    }
+}
+
+/// Bring up the PJRT backend for `(net, fmt)` at the artifact batch
+/// size, or fail with a pointer at the feature / the missing artifact.
+#[cfg(feature = "pjrt")]
+fn pjrt_backend(
+    net: &Arc<Network>,
+    dir: &Path,
+    batch: usize,
+    fmt: &Format,
+) -> Result<Box<dyn Backend>> {
+    let kind = if fmt.is_float() { "float" } else { "fixed" };
+    let hlo = net.hlo_path(dir, kind)?;
+    anyhow::ensure!(hlo.exists(), "missing HLO artifact {}", hlo.display());
+    let rt = crate::runtime::Runtime::cpu()?;
+    let model = rt.load_network(net, dir, kind, batch)?;
+    Ok(Box::new(PjrtBackend { model }))
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn pjrt_backend(
+    _net: &Arc<Network>,
+    _dir: &Path,
+    _batch: usize,
+    _fmt: &Format,
+) -> Result<Box<dyn Backend>> {
+    bail!("this build has no PJRT runtime; rebuild with `--features pjrt` (DESIGN.md §5)")
+}
+
+/// The unified construction path: a `Send` factory that resolves
+/// `kind` on the dispatcher thread.  `Auto` degrades to the native
+/// engine with a note on stderr; `Pjrt` makes unavailability a hard
+/// error so a silent native run can never be mislabeled as pjrt.
+pub(crate) fn make_factory(
+    net: Arc<Network>,
+    dir: PathBuf,
+    batch: usize,
+    fmt: Format,
+    kind: BackendKind,
+) -> BackendFactory {
+    Box::new(move || match kind {
+        BackendKind::Native => Ok(Box::new(NativeBackend::new(net)) as Box<dyn Backend>),
+        BackendKind::Pjrt => pjrt_backend(&net, &dir, batch, &fmt),
+        BackendKind::Auto => match pjrt_backend(&net, &dir, batch, &fmt) {
+            Ok(b) => Ok(b),
+            Err(e) => {
+                eprintln!(
+                    "(PJRT unavailable for {} — serving on the native engine: {e:#})",
+                    net.name
+                );
+                Ok(Box::new(NativeBackend::new(net)) as Box<dyn Backend>)
+            }
+        },
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backend_kind_parse_roundtrip() {
+        for kind in [BackendKind::Native, BackendKind::Pjrt, BackendKind::Auto] {
+            assert_eq!(BackendKind::parse(kind.as_str()).unwrap(), kind);
+        }
+        assert!(BackendKind::parse("cuda").is_err());
+    }
+
+    #[test]
+    fn native_backend_runs_the_tiny_network() {
+        let net = crate::testing::fixtures::tiny_network(8);
+        let mut b = NativeBackend::new(net.clone());
+        let x = net.eval_x.slice_rows(0, 4);
+        let out = b.run_batch(&x, &Format::SINGLE).unwrap();
+        assert_eq!(out.shape(), &[4, net.classes]);
+        assert_eq!(b.label(), "native");
+        assert_eq!(b.network().name, net.name);
+    }
+}

@@ -1,0 +1,331 @@
+//! The multi-model, multi-format serving gateway.
+//!
+//! A [`Gateway`] hosts N concurrent [`Session`]s keyed by
+//! `(network, format)` and routes single-sample requests by
+//! [`SessionKey`].  Each session runs its own dynamic-batching
+//! dispatcher, so one process serves e.g. `lenet5@float:m7e6` and
+//! `alexnet-mini@fixed:l8r8` simultaneously; sessions can be added and
+//! removed while traffic is flowing (a sweep can be served live).
+//!
+//! This replaces the old single-pair `InferenceServer`: what used to be
+//! one `(network, format)` hard-wired to one dispatcher thread is now a
+//! routing table of sessions sharing one aggregate telemetry view
+//! ([`GatewayStats`]).
+
+use std::collections::btree_map::Entry;
+use std::collections::BTreeMap;
+use std::sync::{Arc, PoisonError, RwLock};
+
+use anyhow::{anyhow, Result};
+
+use crate::formats::Format;
+use crate::nn::Zoo;
+use crate::serving::backend::BackendKind;
+use crate::serving::session::{Session, SessionKey, SessionOptions, SessionStats};
+
+/// Aggregate serving telemetry: one [`SessionStats`] per hosted
+/// session, keyed and sorted by [`SessionKey`].  Like the per-session
+/// stats it is accumulated over each session's whole lifetime and can
+/// be snapshotted live at any point.
+#[derive(Clone, Debug, Default)]
+pub struct GatewayStats {
+    pub sessions: Vec<(SessionKey, SessionStats)>,
+}
+
+impl GatewayStats {
+    /// Requests answered across every session.
+    pub fn total_requests(&self) -> u64 {
+        self.sessions.iter().map(|(_, s)| s.requests).sum()
+    }
+
+    /// Batches flushed across every session.
+    pub fn total_batches(&self) -> u64 {
+        self.sessions.iter().map(|(_, s)| s.batches).sum()
+    }
+
+    /// Fixed-width table for CLI/reporting output.
+    pub fn render(&self) -> String {
+        let mut out = format!(
+            "{:<32} {:>8} {:>9} {:>8} {:>9} {:>7} {:>10} {:>10}\n",
+            "session", "backend", "requests", "batches", "req/batch", "padded", "p50_queue", "p99_queue"
+        );
+        for (key, s) in &self.sessions {
+            let slots = s.requests + s.padded_slots;
+            out.push_str(&format!(
+                "{:<32} {:>8} {:>9} {:>8} {:>9.1} {:>6.1}% {:>8.2}ms {:>8.2}ms\n",
+                key.to_string(),
+                s.backend,
+                s.requests,
+                s.batches,
+                s.requests as f64 / s.batches.max(1) as f64,
+                100.0 * s.padded_slots as f64 / slots.max(1) as f64,
+                s.p50_queue_ms,
+                s.p99_queue_ms,
+            ));
+        }
+        out
+    }
+}
+
+/// The multi-session router.  All methods take `&self`; the gateway is
+/// shared freely across client threads.
+pub struct Gateway {
+    zoo: Option<Zoo>,
+    kind: BackendKind,
+    opts: SessionOptions,
+    sessions: RwLock<BTreeMap<SessionKey, Arc<Session>>>,
+}
+
+impl Gateway {
+    /// A gateway over a model zoo; sessions opened through it execute
+    /// on `kind` backends.
+    pub fn new(zoo: Zoo, kind: BackendKind) -> Gateway {
+        Gateway {
+            zoo: Some(zoo),
+            kind,
+            opts: SessionOptions::default(),
+            sessions: RwLock::new(BTreeMap::new()),
+        }
+    }
+
+    /// A gateway with no zoo: only [`Gateway::adopt`]ed sessions can be
+    /// hosted (custom backends, tests).
+    pub fn empty() -> Gateway {
+        Gateway {
+            zoo: None,
+            kind: BackendKind::Native,
+            opts: SessionOptions::default(),
+            sessions: RwLock::new(BTreeMap::new()),
+        }
+    }
+
+    /// Set the batching options used by subsequently opened sessions.
+    pub fn with_options(mut self, opts: SessionOptions) -> Gateway {
+        self.opts = opts;
+        self
+    }
+
+    /// The zoo this gateway serves from (None for [`Gateway::empty`]).
+    pub fn zoo(&self) -> Option<&Zoo> {
+        self.zoo.as_ref()
+    }
+
+    /// Hot-add a session for `(net, fmt)`.  Idempotent: opening a key
+    /// that is already hosted returns it unchanged.
+    pub fn open(&self, net: &str, fmt: Format) -> Result<SessionKey> {
+        let key = SessionKey::new(net, fmt);
+        if self.session(&key).is_some() {
+            return Ok(key);
+        }
+        let zoo = self
+            .zoo
+            .as_ref()
+            .ok_or_else(|| anyhow!("gateway has no zoo; use adopt() for custom sessions"))?;
+        let session = Session::open_with(zoo, net, fmt, self.kind, self.opts)?;
+        let mut map = self.write_lock();
+        // on a lost race with a concurrent open, keep the incumbent —
+        // but release the routing lock BEFORE dropping the duplicate,
+        // since its Drop joins a dispatcher thread
+        let mut duplicate = None;
+        match map.entry(key.clone()) {
+            Entry::Vacant(v) => {
+                v.insert(Arc::new(session));
+            }
+            Entry::Occupied(_) => duplicate = Some(session),
+        }
+        drop(map);
+        drop(duplicate);
+        Ok(key)
+    }
+
+    /// [`Gateway::open`] for the `net@format` CLI spelling.
+    pub fn open_spec(&self, spec: &str) -> Result<SessionKey> {
+        let key = SessionKey::parse(spec)?;
+        self.open(&key.net, key.fmt)
+    }
+
+    /// Hot-add a pre-built session (custom factory / no zoo).  An
+    /// existing session under the same key is replaced and retires
+    /// once its in-flight requests drain.
+    pub fn adopt(&self, session: Session) -> SessionKey {
+        let key = session.key().clone();
+        // bind the displaced session so the write-guard temporary is
+        // released before the old session drops (its Drop may join a
+        // dispatcher draining in-flight requests)
+        let displaced = self.write_lock().insert(key.clone(), Arc::new(session));
+        drop(displaced);
+        key
+    }
+
+    /// Hot-remove: stop routing to `key` and return the session's final
+    /// telemetry (None if it was not hosted).  In-flight requests are
+    /// still answered — the dispatcher drains its queue before
+    /// retiring, and clients holding the session directly keep it
+    /// alive until they drop it.
+    pub fn close(&self, key: &SessionKey) -> Option<SessionStats> {
+        let session = self.write_lock().remove(key)?;
+        Some(match Arc::try_unwrap(session) {
+            Ok(s) => s.shutdown(),
+            // other holders remain: snapshot now, they drain it later
+            Err(arc) => arc.stats(),
+        })
+    }
+
+    /// The hosted session for `key`, if any.
+    pub fn session(&self, key: &SessionKey) -> Option<Arc<Session>> {
+        self.read_lock().get(key).cloned()
+    }
+
+    /// Every hosted key, sorted.
+    pub fn keys(&self) -> Vec<SessionKey> {
+        self.read_lock().keys().cloned().collect()
+    }
+
+    /// Route one request to the session for `key` and wait for its
+    /// logits.
+    pub fn infer(&self, key: &SessionKey, pixels: Vec<f32>) -> Result<Vec<f32>> {
+        let session = self
+            .session(key)
+            .ok_or_else(|| anyhow!("gateway hosts no session {key}"))?;
+        session.infer(pixels)
+    }
+
+    /// Live aggregate telemetry across every hosted session.
+    pub fn stats(&self) -> GatewayStats {
+        let sessions = self
+            .read_lock()
+            .iter()
+            .map(|(k, s)| (k.clone(), s.stats()))
+            .collect();
+        GatewayStats { sessions }
+    }
+
+    /// Shut every session down and return the aggregate telemetry.
+    /// Sessions whose only holder is the gateway are joined after
+    /// draining their queued requests; for a session some client still
+    /// holds an `Arc` to, the stats are a live snapshot and the
+    /// dispatcher retires only when that last holder drops it (same
+    /// caveat as [`Gateway::close`]).
+    pub fn shutdown(self) -> GatewayStats {
+        let map = self
+            .sessions
+            .into_inner()
+            .unwrap_or_else(PoisonError::into_inner);
+        let mut sessions = Vec::with_capacity(map.len());
+        for (key, session) in map {
+            let stats = match Arc::try_unwrap(session) {
+                Ok(s) => s.shutdown(),
+                Err(arc) => arc.stats(),
+            };
+            sessions.push((key, stats));
+        }
+        GatewayStats { sessions }
+    }
+
+    fn read_lock(&self) -> std::sync::RwLockReadGuard<'_, BTreeMap<SessionKey, Arc<Session>>> {
+        self.sessions.read().unwrap_or_else(PoisonError::into_inner)
+    }
+
+    fn write_lock(&self) -> std::sync::RwLockWriteGuard<'_, BTreeMap<SessionKey, Arc<Session>>> {
+        self.sessions.write().unwrap_or_else(PoisonError::into_inner)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    use crate::serving::backend::{Backend, NativeBackend};
+    use crate::testing::fixtures::tiny_network;
+
+    fn adopt_native(gw: &Gateway, fmt: Format, batch: usize) -> SessionKey {
+        let net = tiny_network(8);
+        let n = net.clone();
+        gw.adopt(Session::with_factory(
+            net,
+            fmt,
+            batch,
+            Duration::from_millis(3),
+            Box::new(move || Ok(Box::new(NativeBackend::new(n)) as Box<dyn Backend>)),
+        ))
+    }
+
+    /// Concurrent clients across two sessions: every response must be
+    /// bit-identical to the matching direct backend run.
+    #[test]
+    fn routes_concurrent_clients_across_two_sessions() {
+        let gw = Gateway::empty();
+        let k1 = adopt_native(&gw, Format::float(7, 6), 4);
+        let k2 = adopt_native(&gw, Format::fixed(8, 8), 4);
+        assert_eq!(gw.keys(), vec![k1.clone(), k2.clone()]);
+
+        let net = tiny_network(8);
+        let px = net.input.iter().product::<usize>();
+        let direct = |fmt: &Format| {
+            NativeBackend::new(net.clone())
+                .run_batch(&net.eval_x.slice_rows(0, 8), fmt)
+                .unwrap()
+        };
+        let want1 = direct(&k1.fmt);
+        let want2 = direct(&k2.fmt);
+
+        std::thread::scope(|scope| {
+            for (key, want) in [(&k1, &want1), (&k2, &want2)] {
+                for client in 0..3usize {
+                    let gw = &gw;
+                    let net = &net;
+                    scope.spawn(move || {
+                        let mut i = client;
+                        while i < 8 {
+                            let pixels = net.eval_x.data()[i * px..(i + 1) * px].to_vec();
+                            let got = gw.infer(key, pixels).unwrap();
+                            let row = &want.data()[i * net.classes..(i + 1) * net.classes];
+                            assert_eq!(got.as_slice(), row, "{key} sample {i}");
+                            i += 3;
+                        }
+                    });
+                }
+            }
+        });
+
+        let stats = gw.shutdown();
+        assert_eq!(stats.sessions.len(), 2);
+        assert_eq!(stats.total_requests(), 16);
+        for (_, s) in &stats.sessions {
+            assert_eq!(s.backend, "native");
+            assert!(s.batches >= 2);
+        }
+    }
+
+    #[test]
+    fn hot_remove_stops_routing_but_spares_the_other_session() {
+        let gw = Gateway::empty();
+        let k1 = adopt_native(&gw, Format::float(7, 6), 2);
+        let k2 = adopt_native(&gw, Format::SINGLE, 2);
+        let net = tiny_network(8);
+        let px = net.input.iter().product::<usize>();
+        let pixels = net.eval_x.data()[..px].to_vec();
+
+        gw.infer(&k1, pixels.clone()).unwrap();
+        let closed = gw.close(&k1).expect("k1 was hosted");
+        assert_eq!(closed.requests, 1);
+        assert!(gw.infer(&k1, pixels.clone()).is_err(), "closed key must not route");
+        assert!(gw.close(&k1).is_none(), "double close");
+        gw.infer(&k2, pixels).unwrap();
+        assert_eq!(gw.keys(), vec![k2.clone()]);
+        let stats = gw.shutdown();
+        assert_eq!(stats.sessions.len(), 1);
+        assert_eq!(stats.sessions[0].0, k2);
+    }
+
+    #[test]
+    fn open_requires_a_zoo_and_render_formats_stats() {
+        let gw = Gateway::empty();
+        assert!(gw.open("lenet5", Format::SINGLE).is_err());
+        let k = adopt_native(&gw, Format::SINGLE, 2);
+        let table = gw.stats().render();
+        assert!(table.contains(&k.to_string()), "{table}");
+        assert_eq!(gw.stats().total_batches(), 0);
+    }
+}

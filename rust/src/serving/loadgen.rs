@@ -1,0 +1,130 @@
+//! Closed-loop load generation over a [`Gateway`] — shared by the
+//! `repro serve` subcommand and the `serve` example so the two drivers
+//! cannot drift.
+
+use std::time::Instant;
+
+use anyhow::{anyhow, Result};
+
+use crate::serving::{Gateway, SessionKey};
+
+/// One served request: (key index into the driven key list, eval-sample
+/// index, end-to-end latency in seconds, logits).
+pub type ServedRequest = (usize, usize, f64, Vec<f32>);
+
+/// Send one request per session, outside any measurement window: it
+/// proves each backend end to end (`Auto` resolves its fallback here —
+/// the PJRT client + compile happen lazily on that session's
+/// dispatcher thread) and absorbs cold-start latency symmetrically, so
+/// native and pjrt telemetry stay comparable.
+pub fn warm_up(gateway: &Gateway, keys: &[SessionKey]) -> Result<()> {
+    for key in keys {
+        let net = gateway
+            .session(key)
+            .ok_or_else(|| anyhow!("gateway hosts no session {key}"))?
+            .network()
+            .clone();
+        let px: usize = net.input.iter().product();
+        gateway.infer(key, net.eval_x.data()[..px].to_vec())?;
+    }
+    Ok(())
+}
+
+/// Drive `n_requests` through the gateway from `n_clients` closed-loop
+/// client threads, round-robining by session key: request `i` goes to
+/// `keys[i % keys.len()]` with eval sample `(i / keys.len()) %
+/// eval_len`, so every key receives an identical, deterministic sample
+/// stream regardless of client count.  Returns one record per request;
+/// callers aggregate what they need (latency percentiles, accuracy, or
+/// nothing).  Panics if a session vanishes or a request fails
+/// mid-drive — load-generator semantics, not server semantics.
+pub fn drive_closed_loop(
+    gateway: &Gateway,
+    keys: &[SessionKey],
+    n_requests: usize,
+    n_clients: usize,
+) -> Vec<ServedRequest> {
+    assert!(!keys.is_empty(), "drive_closed_loop needs at least one session key");
+    let n_clients = n_clients.max(1);
+    let mut served: Vec<ServedRequest> = Vec::with_capacity(n_requests);
+    std::thread::scope(|scope| {
+        let mut handles = Vec::new();
+        for cid in 0..n_clients {
+            handles.push(scope.spawn(move || {
+                let mut out = Vec::new();
+                let mut i = cid;
+                while i < n_requests {
+                    let ki = i % keys.len();
+                    let session = gateway.session(&keys[ki]).expect("session vanished");
+                    let net = session.network();
+                    let px: usize = net.input.iter().product();
+                    let sample = (i / keys.len()) % net.eval_len();
+                    let pixels = net.eval_x.data()[sample * px..(sample + 1) * px].to_vec();
+                    let t = Instant::now();
+                    let logits = session.infer(pixels).expect("inference failed");
+                    out.push((ki, sample, t.elapsed().as_secs_f64(), logits));
+                    i += n_clients;
+                }
+                out
+            }));
+        }
+        for h in handles {
+            served.extend(h.join().unwrap());
+        }
+    });
+    served
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    use crate::formats::Format;
+    use crate::serving::backend::{Backend, NativeBackend};
+    use crate::serving::Session;
+    use crate::testing::fixtures::tiny_network;
+
+    #[test]
+    fn drives_every_request_exactly_once_across_keys() {
+        let gw = Gateway::empty();
+        let mut keys = Vec::new();
+        for fmt in [Format::float(7, 6), Format::fixed(8, 8)] {
+            let net = tiny_network(8);
+            let n = net.clone();
+            keys.push(gw.adopt(Session::with_factory(
+                net,
+                fmt,
+                4,
+                Duration::from_millis(3),
+                Box::new(move || Ok(Box::new(NativeBackend::new(n)) as Box<dyn Backend>)),
+            )));
+        }
+        warm_up(&gw, &keys).unwrap();
+        let served = drive_closed_loop(&gw, &keys, 24, 3);
+        assert_eq!(served.len(), 24);
+        for ki in 0..keys.len() {
+            let mut samples: Vec<usize> = served
+                .iter()
+                .filter(|(k, _, _, _)| *k == ki)
+                .map(|(_, s, _, _)| *s)
+                .collect();
+            samples.sort_unstable();
+            // 12 requests per key over an 8-sample eval set wrap around
+            let want: Vec<usize> = (0..12).map(|i| i % 8).collect();
+            let mut want_sorted = want;
+            want_sorted.sort_unstable();
+            assert_eq!(samples, want_sorted);
+        }
+        // warm-up (1/key) + 12/key driven requests
+        let stats = gw.shutdown();
+        assert_eq!(stats.total_requests(), 2 * (12 + 1));
+    }
+
+    #[test]
+    fn warm_up_surfaces_missing_sessions() {
+        let gw = Gateway::empty();
+        let key = SessionKey::new("ghost", Format::SINGLE);
+        assert!(warm_up(&gw, std::slice::from_ref(&key)).is_err());
+    }
+}

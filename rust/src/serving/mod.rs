@@ -1,0 +1,50 @@
+//! The unified execution API: sessions, backends, and the multi-model
+//! serving gateway.
+//!
+//! The paper's pitch is serving production DNNs under customized
+//! precision; comparing formats fairly requires **one execution
+//! substrate with swappable precision**.  This module is that
+//! substrate's front door:
+//!
+//! * [`Backend`] — the object-safe batch executor every code path runs
+//!   through: the native engine ([`NativeBackend`]) or the AOT/PJRT
+//!   executable (`PjrtBackend`, `pjrt` feature).  The offline drivers
+//!   (`eval`, `search`, the sweep coordinator) execute through the same
+//!   trait as the request path, so sweep numbers and served responses
+//!   are the same function by construction (bit-identity is
+//!   integration-tested).
+//! * [`Session`] — one hosted `(network, format)` pair:
+//!   [`Session::open`] → [`Session::infer`] / [`Session::run_batch`] /
+//!   [`Session::stats`].  Single-sample requests are dynamically
+//!   batched to the execution batch size with a bounded queueing delay.
+//! * [`Gateway`] — N concurrent sessions keyed by `(network, format)`
+//!   with per-key routing, hot add/remove, and live aggregate
+//!   telemetry ([`GatewayStats`] — requests, batches, padded slots,
+//!   p50/p99 queue latency per session).
+//!
+//! ```no_run
+//! use precis::formats::Format;
+//! use precis::nn::Zoo;
+//! use precis::serving::{BackendKind, Gateway};
+//!
+//! let zoo = Zoo::load("artifacts").unwrap();
+//! let gw = Gateway::new(zoo, BackendKind::Native);
+//! let lenet = gw.open("lenet5", Format::parse("float:m7e6").unwrap()).unwrap();
+//! let alex = gw.open("alexnet-mini", Format::parse("fixed:l8r8").unwrap()).unwrap();
+//! let sample = vec![0.0; 28 * 28]; // one lenet5 input
+//! let logits = gw.infer(&lenet, sample).unwrap();
+//! println!("{logits:?}\n{}", gw.stats().render());
+//! # let _ = alex;
+//! ```
+
+mod backend;
+mod gateway;
+mod loadgen;
+mod session;
+
+#[cfg(feature = "pjrt")]
+pub use backend::PjrtBackend;
+pub use backend::{Backend, BackendFactory, BackendKind, NativeBackend};
+pub use gateway::{Gateway, GatewayStats};
+pub use loadgen::{drive_closed_loop, warm_up, ServedRequest};
+pub use session::{QUEUE_LAT_WINDOW, Session, SessionKey, SessionOptions, SessionStats};

@@ -1,0 +1,575 @@
+//! A `Session` = one hosted `(network, format)` pair with its own
+//! dynamic-batching dispatcher.
+//!
+//! Single-sample requests are queued; the dispatcher thread flushes a
+//! batch when either the execution batch size is reached or the oldest
+//! queued request exceeds `max_wait` (classic dynamic batching, as in
+//! vLLM-style routers).  The backend is built **on the dispatcher
+//! thread** by a [`BackendFactory`] and never crosses a thread boundary
+//! (PJRT handles are not `Send` — `serving::backend` module docs).
+//!
+//! Telemetry is **live**: the dispatcher folds every flushed batch into
+//! a shared stats cell, so [`Session::stats`] (and the gateway's
+//! aggregate view) can be read at any time, not only at shutdown.
+
+use std::fmt;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex, PoisonError};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Result};
+
+use crate::formats::Format;
+use crate::nn::{Network, Zoo};
+use crate::serving::backend::{make_factory, BackendFactory, BackendKind};
+use crate::tensor::Tensor;
+
+/// Identity of one hosted session: the `(network, format)` pair the
+/// gateway routes by.  Spelled `net@format-id`, e.g.
+/// `lenet5@float:m7e6`.
+#[derive(Clone, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub struct SessionKey {
+    pub net: String,
+    pub fmt: Format,
+}
+
+impl SessionKey {
+    pub fn new(net: &str, fmt: Format) -> SessionKey {
+        SessionKey { net: net.to_string(), fmt }
+    }
+
+    /// Parse the `net@format` spelling used by `repro serve --sessions`.
+    pub fn parse(s: &str) -> Result<SessionKey> {
+        let (net, fmt) = s
+            .split_once('@')
+            .ok_or_else(|| anyhow!("session {s:?}: expected net@format (e.g. lenet5@float:m7e6)"))?;
+        Ok(SessionKey { net: net.to_string(), fmt: Format::parse(fmt)? })
+    }
+}
+
+impl fmt::Display for SessionKey {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}@{}", self.net, self.fmt.id())
+    }
+}
+
+/// Aggregate serving telemetry for one session, accumulated over every
+/// batch its dispatcher has flushed since open (it is lifetime-total,
+/// not per-batch).  Queue-latency percentiles are computed over a
+/// sliding window of the most recent [`QUEUE_LAT_WINDOW`] requests.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct SessionStats {
+    /// resolved backend label ("native"/"pjrt"; empty until the
+    /// factory has run)
+    pub backend: String,
+    /// single-sample requests answered (or failed)
+    pub requests: u64,
+    /// batches flushed to the backend
+    pub batches: u64,
+    /// dead slots padded into partially-full batches — nonzero only
+    /// for statically-batched backends (PJRT); native sessions execute
+    /// the live rows as-is
+    pub padded_slots: u64,
+    /// median time a request waited in the batching queue
+    pub p50_queue_ms: f64,
+    /// 99th-percentile batching-queue wait
+    pub p99_queue_ms: f64,
+}
+
+/// Sliding-window size for the queue-latency percentiles.
+pub const QUEUE_LAT_WINDOW: usize = 4096;
+
+/// Shared between the dispatcher (writer) and any stats reader.
+#[derive(Default)]
+struct StatsCell {
+    backend: &'static str,
+    requests: u64,
+    batches: u64,
+    padded_slots: u64,
+    queue_lat_s: Vec<f64>,
+    lat_next: usize,
+}
+
+impl StatsCell {
+    fn push_lat(&mut self, secs: f64) {
+        if self.queue_lat_s.len() < QUEUE_LAT_WINDOW {
+            self.queue_lat_s.push(secs);
+        } else {
+            self.queue_lat_s[self.lat_next] = secs;
+            self.lat_next = (self.lat_next + 1) % QUEUE_LAT_WINDOW;
+        }
+    }
+
+    /// Copy the raw fields out — a cheap memcpy-style clone, so the
+    /// lock (which the dispatcher takes for every flushed batch) is
+    /// held only briefly; the percentile sort happens in
+    /// [`Session::stats`] *after* the lock is released.
+    fn raw(&self) -> (SessionStats, Vec<f64>) {
+        (
+            SessionStats {
+                backend: self.backend.to_string(),
+                requests: self.requests,
+                batches: self.batches,
+                padded_slots: self.padded_slots,
+                p50_queue_ms: 0.0,
+                p99_queue_ms: 0.0,
+            },
+            self.queue_lat_s.clone(),
+        )
+    }
+}
+
+struct Request {
+    /// one sample, H*W*C values
+    pixels: Vec<f32>,
+    reply: Sender<Result<Vec<f32>>>,
+    enqueued: Instant,
+}
+
+/// Tuning knobs for [`Session::open_with`].
+#[derive(Clone, Copy, Debug)]
+pub struct SessionOptions {
+    /// execution batch size; 0 means "the artifact batch size from the
+    /// zoo" (the only size the PJRT executables accept)
+    pub batch: usize,
+    /// how long the oldest queued request may wait before a partial
+    /// batch is flushed
+    pub max_wait: Duration,
+}
+
+impl Default for SessionOptions {
+    fn default() -> Self {
+        SessionOptions { batch: 0, max_wait: Duration::from_millis(5) }
+    }
+}
+
+/// Handle for one live `(network, format)` execution session.
+///
+/// Cheap to share behind an `Arc`: every method takes `&self`.
+/// Dropping the last handle shuts the dispatcher down after it drains
+/// the requests already queued.
+pub struct Session {
+    key: SessionKey,
+    net: Arc<Network>,
+    tx: Sender<Request>,
+    worker: Option<JoinHandle<()>>,
+    input_len: usize,
+    classes: usize,
+    stats: Arc<Mutex<StatsCell>>,
+}
+
+impl Session {
+    /// Open a session on `zoo`'s network `net` under `fmt`, executing
+    /// on `kind`, with default batching options.
+    pub fn open(zoo: &Zoo, net: &str, fmt: Format, kind: BackendKind) -> Result<Session> {
+        Self::open_with(zoo, net, fmt, kind, SessionOptions::default())
+    }
+
+    /// [`Session::open`] with explicit batching options.
+    pub fn open_with(
+        zoo: &Zoo,
+        net: &str,
+        fmt: Format,
+        kind: BackendKind,
+        opts: SessionOptions,
+    ) -> Result<Session> {
+        let network = zoo.network(net)?;
+        let batch = if opts.batch == 0 { zoo.batch } else { opts.batch };
+        let factory = make_factory(network.clone(), zoo.dir.clone(), batch, fmt, kind);
+        Ok(Self::with_factory(network, fmt, batch, opts.max_wait, factory))
+    }
+
+    /// Advanced constructor: run on a caller-supplied backend factory
+    /// (custom backends, fault-injection tests).  The factory executes
+    /// on the dispatcher thread; if it fails, every queued and future
+    /// request receives the construction error.
+    pub fn with_factory(
+        net: Arc<Network>,
+        fmt: Format,
+        batch: usize,
+        max_wait: Duration,
+        factory: BackendFactory,
+    ) -> Session {
+        assert!(batch >= 1, "session batch size must be >= 1");
+        let (tx, rx): (Sender<Request>, Receiver<Request>) = channel();
+        let [h, w, c] = net.input;
+        let classes = net.classes;
+        let stats = Arc::new(Mutex::new(StatsCell::default()));
+        let key = SessionKey::new(&net.name, fmt);
+
+        let worker = {
+            let net = net.clone();
+            let stats = stats.clone();
+            std::thread::spawn(move || dispatch(net, fmt, batch, max_wait, factory, rx, stats))
+        };
+
+        Session {
+            key,
+            net,
+            tx,
+            worker: Some(worker),
+            input_len: h * w * c,
+            classes,
+            stats,
+        }
+    }
+
+    /// The `(network, format)` pair this session serves.
+    pub fn key(&self) -> &SessionKey {
+        &self.key
+    }
+
+    /// The network this session serves.
+    pub fn network(&self) -> &Arc<Network> {
+        &self.net
+    }
+
+    /// Submit one sample; blocks until its logits come back.
+    pub fn infer(&self, pixels: Vec<f32>) -> Result<Vec<f32>> {
+        self.infer_async(pixels)?
+            .recv()
+            .map_err(|_| anyhow!("session {} dropped the request", self.key))?
+    }
+
+    /// Async-style submit: returns a receiver for the logits.
+    pub fn infer_async(&self, pixels: Vec<f32>) -> Result<Receiver<Result<Vec<f32>>>> {
+        if pixels.len() != self.input_len {
+            anyhow::bail!(
+                "{}: expected {} pixels, got {}",
+                self.key,
+                self.input_len,
+                pixels.len()
+            );
+        }
+        let (rtx, rrx) = channel();
+        self.tx
+            .send(Request { pixels, reply: rtx, enqueued: Instant::now() })
+            .map_err(|_| anyhow!("session {} is down", self.key))?;
+        Ok(rrx)
+    }
+
+    /// Run a whole (B, H, W, C) tensor through the request path and
+    /// reassemble the logits (B, classes).  Each row travels the same
+    /// queue as [`Session::infer`] — per-sample computation is
+    /// independent, so the result is bit-identical to a direct
+    /// backend batch of any grouping.
+    pub fn run_batch(&self, x: &Tensor) -> Result<Tensor> {
+        let shape = x.shape();
+        anyhow::ensure!(shape.len() == 4, "{}: input must be (B, H, W, C)", self.key);
+        let b = shape[0];
+        let px: usize = shape[1..].iter().product();
+        anyhow::ensure!(
+            px == self.input_len,
+            "{}: expected {} pixels per sample, got {px}",
+            self.key,
+            self.input_len
+        );
+        let mut pending = Vec::with_capacity(b);
+        for i in 0..b {
+            let pixels = x.data()[i * px..(i + 1) * px].to_vec();
+            pending.push(self.infer_async(pixels)?);
+        }
+        let mut out = Vec::with_capacity(b * self.classes);
+        for rx in pending {
+            let row = rx
+                .recv()
+                .map_err(|_| anyhow!("session {} dropped the request", self.key))??;
+            out.extend_from_slice(&row);
+        }
+        Tensor::new(vec![b, self.classes], out)
+    }
+
+    /// Live telemetry snapshot (available any time, not only at
+    /// shutdown).
+    pub fn stats(&self) -> SessionStats {
+        let (mut stats, mut lats) = self
+            .stats
+            .lock()
+            .unwrap_or_else(PoisonError::into_inner)
+            .raw();
+        lats.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let pct = |q: f64| -> f64 {
+            if lats.is_empty() {
+                0.0
+            } else {
+                lats[((lats.len() - 1) as f64 * q) as usize] * 1e3
+            }
+        };
+        stats.p50_queue_ms = pct(0.5);
+        stats.p99_queue_ms = pct(0.99);
+        stats
+    }
+
+    /// Shut down: stop accepting requests, drain the queue, join the
+    /// dispatcher, and return the final telemetry.
+    pub fn shutdown(mut self) -> SessionStats {
+        self.disconnect_and_join();
+        self.stats()
+    }
+
+    fn disconnect_and_join(&mut self) {
+        // swap in a dead sender so the dispatcher sees disconnection
+        // once the already-queued requests are drained
+        let (dead_tx, _) = channel();
+        self.tx = dead_tx;
+        if let Some(h) = self.worker.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Session {
+    fn drop(&mut self) {
+        self.disconnect_and_join();
+    }
+}
+
+/// The dispatcher loop: build the backend, then batch-and-flush until
+/// every sender is gone and the queue is drained.
+fn dispatch(
+    net: Arc<Network>,
+    fmt: Format,
+    batch: usize,
+    max_wait: Duration,
+    factory: BackendFactory,
+    rx: Receiver<Request>,
+    stats: Arc<Mutex<StatsCell>>,
+) {
+    let mut backend = match factory() {
+        Ok(b) => {
+            let mut s = stats.lock().unwrap_or_else(PoisonError::into_inner);
+            s.backend = b.label();
+            drop(s);
+            b
+        }
+        Err(e) => {
+            // fail every queued and future request with the
+            // construction error, then retire
+            while let Ok(r) = rx.recv() {
+                let _ = r.reply.send(Err(anyhow!("backend init failed: {e}")));
+            }
+            return;
+        }
+    };
+    let [h, w, c] = net.input;
+    let input_len = h * w * c;
+    let classes = net.classes;
+    let mut queue: Vec<Request> = Vec::with_capacity(batch);
+    loop {
+        if queue.is_empty() {
+            match rx.recv() {
+                Ok(r) => queue.push(r),
+                Err(_) => break, // all senders gone: shut down
+            }
+        }
+        // drain whatever already queued up while the previous batch was
+        // executing (closed-loop clients resubmit during compute, so
+        // the backlog is usually here) ...
+        while queue.len() < batch {
+            match rx.try_recv() {
+                Ok(r) => queue.push(r),
+                Err(_) => break,
+            }
+        }
+        // ... then accumulate until full or the oldest request exceeds
+        // its batching window
+        while queue.len() < batch {
+            let age = queue[0].enqueued.elapsed();
+            if age >= max_wait {
+                break;
+            }
+            match rx.recv_timeout(max_wait - age) {
+                Ok(r) => queue.push(r),
+                Err(_) => break,
+            }
+        }
+
+        let live = queue.len();
+        // only a statically-batched backend (PJRT executables) needs
+        // dead slots; the native engine executes the live rows as-is,
+        // so sparse traffic never pays for a full-batch forward
+        let rows = backend.fixed_batch().unwrap_or(live).max(live);
+        let mut xdata = Vec::with_capacity(rows * input_len);
+        for r in &queue {
+            xdata.extend_from_slice(&r.pixels);
+        }
+        xdata.resize(rows * input_len, 0.0); // pad dead slots (if any)
+        {
+            let mut s = stats.lock().unwrap_or_else(PoisonError::into_inner);
+            s.requests += live as u64;
+            s.batches += 1;
+            s.padded_slots += (rows - live) as u64;
+            for r in &queue {
+                s.push_lat(r.enqueued.elapsed().as_secs_f64());
+            }
+        }
+
+        let x = match Tensor::new(vec![rows, h, w, c], xdata) {
+            Ok(t) => t,
+            Err(e) => {
+                let msg = format!("{e}");
+                for r in queue.drain(..) {
+                    let _ = r.reply.send(Err(anyhow!("bad batch: {msg}")));
+                }
+                continue;
+            }
+        };
+
+        match backend.run_batch(&x, &fmt) {
+            Ok(out) => {
+                for (i, r) in queue.drain(..).enumerate() {
+                    let row = out.data()[i * classes..(i + 1) * classes].to_vec();
+                    let _ = r.reply.send(Ok(row));
+                }
+            }
+            Err(e) => {
+                let msg = format!("{e}");
+                for r in queue.drain(..) {
+                    let _ = r.reply.send(Err(anyhow!("batch failed: {msg}")));
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serving::backend::{Backend, NativeBackend};
+    use crate::testing::fixtures::tiny_network;
+
+    fn native_session(net: &Arc<Network>, fmt: Format, batch: usize) -> Session {
+        let n = net.clone();
+        Session::with_factory(
+            net.clone(),
+            fmt,
+            batch,
+            Duration::from_millis(5),
+            Box::new(move || Ok(Box::new(NativeBackend::new(n)) as Box<dyn Backend>)),
+        )
+    }
+
+    #[test]
+    fn key_parse_display_roundtrip() {
+        let k = SessionKey::parse("lenet5@float:m7e6").unwrap();
+        assert_eq!(k.net, "lenet5");
+        assert_eq!(k.fmt, Format::float(7, 6));
+        assert_eq!(SessionKey::parse(&k.to_string()).unwrap(), k);
+        assert!(SessionKey::parse("lenet5").is_err());
+        assert!(SessionKey::parse("lenet5@decimal:x1y2").is_err());
+    }
+
+    /// The request path must agree bitwise with a direct backend batch,
+    /// including across padded partial batches.
+    #[test]
+    fn session_is_bit_identical_to_direct_backend() {
+        let net = tiny_network(10);
+        let fmt = Format::float(7, 6);
+        let session = native_session(&net, fmt, 4); // 10 samples -> ragged batching
+        let x = net.eval_x.slice_rows(0, 10);
+
+        let via_session = session.run_batch(&x).unwrap();
+        let direct = NativeBackend::new(net.clone()).run_batch(&x, &fmt).unwrap();
+        assert_eq!(via_session.shape(), direct.shape());
+        for (i, (a, b)) in via_session.data().iter().zip(direct.data()).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "logit {i}");
+        }
+
+        let st = session.shutdown();
+        assert_eq!(st.backend, "native");
+        assert_eq!(st.requests, 10);
+        assert!(st.batches >= 3);
+    }
+
+    #[test]
+    fn session_rejects_malformed_input() {
+        let net = tiny_network(4);
+        let session = native_session(&net, Format::SINGLE, 2);
+        assert!(session.infer(vec![0.0; 3]).is_err());
+        let bad = Tensor::new(vec![1, 2, 2], vec![0.0; 4]).unwrap();
+        assert!(session.run_batch(&bad).is_err());
+    }
+
+    /// A failing factory must propagate its error to every queued
+    /// request instead of hanging or dropping them.
+    #[test]
+    fn backend_init_failure_fails_every_queued_request() {
+        let net = tiny_network(6);
+        let gate = Arc::new(std::sync::Barrier::new(2));
+        let gate2 = gate.clone();
+        let session = Session::with_factory(
+            net.clone(),
+            Format::SINGLE,
+            4,
+            Duration::from_millis(50),
+            Box::new(move || {
+                // hold construction until the requests are queued, so
+                // the error provably reaches *queued* requests
+                gate2.wait();
+                Err(anyhow!("induced init failure"))
+            }),
+        );
+        let px = net.input.iter().product::<usize>();
+        let pending: Vec<_> = (0..5)
+            .map(|i| {
+                session
+                    .infer_async(net.eval_x.data()[i * px..(i + 1) * px].to_vec())
+                    .unwrap()
+            })
+            .collect();
+        gate.wait();
+        for rx in pending {
+            let got = rx.recv().expect("reply channel must stay open");
+            let e = got.expect_err("request must fail");
+            assert!(e.to_string().contains("induced init failure"), "{e}");
+        }
+        // a request submitted after the failure also gets the error
+        let late = session.infer(net.eval_x.data()[..px].to_vec());
+        assert!(late.is_err());
+    }
+
+    /// Dropping/shutting the session with requests in flight must still
+    /// answer every request (the dispatcher drains before retiring).
+    #[test]
+    fn shutdown_answers_requests_in_flight() {
+        let net = tiny_network(8);
+        let fmt = Format::fixed(8, 8);
+        let session = native_session(&net, fmt, 4);
+        let px = net.input.iter().product::<usize>();
+        let pending: Vec<_> = (0..7)
+            .map(|i| {
+                session
+                    .infer_async(net.eval_x.data()[i * px..(i + 1) * px].to_vec())
+                    .unwrap()
+            })
+            .collect();
+        let stats = session.shutdown(); // requests still queued here
+        assert_eq!(stats.requests, 7, "every in-flight request must be served");
+        let direct = NativeBackend::new(net.clone())
+            .run_batch(&net.eval_x.slice_rows(0, 7), &fmt)
+            .unwrap();
+        for (i, rx) in pending.into_iter().enumerate() {
+            let got = rx.recv().unwrap().unwrap();
+            let want = &direct.data()[i * net.classes..(i + 1) * net.classes];
+            assert_eq!(got.as_slice(), want, "request {i}");
+        }
+    }
+
+    #[test]
+    fn stats_are_live_not_only_at_shutdown() {
+        let net = tiny_network(4);
+        let session = native_session(&net, Format::SINGLE, 2);
+        let px = net.input.iter().product::<usize>();
+        assert_eq!(session.stats().requests, 0);
+        session.infer(net.eval_x.data()[..px].to_vec()).unwrap();
+        let mid = session.stats();
+        assert_eq!(mid.requests, 1);
+        assert_eq!(mid.batches, 1);
+        // the native backend has no fixed batch, so the partial flush
+        // executes 1 live row with no dead padding
+        assert_eq!(mid.padded_slots, 0);
+        assert!(mid.p99_queue_ms >= mid.p50_queue_ms);
+        assert_eq!(mid.backend, "native");
+    }
+}

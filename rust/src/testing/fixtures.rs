@@ -1,0 +1,99 @@
+//! Deterministic in-memory test fixtures.
+//!
+//! The integration suites exercise the real artifact zoo (and skip
+//! without it); these fixtures give the serving layer a network that
+//! exists on every fresh clone, so the session/gateway contracts
+//! (bit-identity, error propagation, drain-on-shutdown) are verified
+//! by tier-1 `cargo test` unconditionally.
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use crate::formats::Format;
+use crate::nn::{Layer, Network};
+use crate::serving::{Backend, NativeBackend};
+use crate::tensor::Tensor;
+use crate::util::rng::Pcg32;
+
+/// A tiny fully-deterministic network: (2, 2, 1) input → flatten →
+/// dense(4 → 3), with `eval_n` synthetic eval samples whose labels are
+/// the network's own exact-format argmax — so baseline accuracy is
+/// exactly 1.0 and format-degradation behaviour is observable.  Two
+/// calls with the same `eval_n` produce bit-identical networks, so
+/// fixtures built independently (e.g. one inside a session, one as the
+/// reference) are comparable at 0 ulp.
+pub fn tiny_network(eval_n: usize) -> Arc<Network> {
+    let mut rng = Pcg32::seeded(0x7e57_f1f7);
+    let in_dim = 4;
+    let classes = 3;
+
+    let w = Tensor::new(
+        vec![in_dim, classes],
+        (0..in_dim * classes).map(|_| rng.normal()).collect(),
+    )
+    .unwrap();
+    let b = Tensor::new(vec![classes], (0..classes).map(|_| rng.normal() * 0.1).collect()).unwrap();
+    let eval_x = Tensor::new(
+        vec![eval_n, 2, 2, 1],
+        (0..eval_n * in_dim).map(|_| rng.normal()).collect(),
+    )
+    .unwrap();
+
+    let mut weights = BTreeMap::new();
+    weights.insert("fc.w".to_string(), w);
+    weights.insert("fc.b".to_string(), b);
+
+    let mut net = Arc::new(Network {
+        name: "tiny-fixture".to_string(),
+        input: [2, 2, 1],
+        classes,
+        topk: 1,
+        layers: vec![
+            Layer::Flatten,
+            Layer::Dense { name: "fc".to_string(), in_dim, out_dim: classes },
+        ],
+        weight_order: vec!["fc.w".to_string(), "fc.b".to_string()],
+        weights,
+        eval_x,
+        eval_y: vec![0; eval_n],
+        eval_acc_exact: 1.0,
+        hlo_files: BTreeMap::new(),
+        n_params: in_dim * classes + classes,
+        max_chain: in_dim,
+    });
+
+    // label every sample with the exact forward pass's argmax, run
+    // through the same serving substrate everything else uses
+    let logits = NativeBackend::new(net.clone())
+        .run_batch(&net.eval_x.slice_rows(0, eval_n), &Format::SINGLE)
+        .unwrap();
+    let labels = (0..eval_n)
+        .map(|i| {
+            let row = &logits.data()[i * classes..(i + 1) * classes];
+            row.iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .map(|(c, _)| c as i32)
+                .unwrap()
+        })
+        .collect();
+    Arc::get_mut(&mut net).expect("backend dropped; sole owner").eval_y = labels;
+    net
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tiny_network_is_deterministic() {
+        let a = tiny_network(6);
+        let b = tiny_network(6);
+        assert_eq!(a.eval_x.data(), b.eval_x.data());
+        assert_eq!(
+            a.weight("fc.w").data(),
+            b.weight("fc.w").data()
+        );
+        assert_eq!(a.eval_len(), 6);
+    }
+}

@@ -1,6 +1,7 @@
 //! In-repo testing substrates (proptest is not in the offline crate set —
 //! DESIGN.md §6).
 
+pub mod fixtures;
 pub mod prop;
 
 /// Truthiness rule for the `PRECIS_REQUIRE_*` strict-mode env vars used

@@ -1,0 +1,182 @@
+//! Gateway integration over the real artifacts: the ISSUE 2 acceptance
+//! scenario.  One process serves two `(network, format)` sessions —
+//! `lenet5@float:m7e6` and `alexnet-mini@fixed:l8r8` — under concurrent
+//! clients, and the served logits are bit-identical to the offline
+//! `eval` path for the same inputs (the one-substrate guarantee,
+//! DESIGN.md §Serving).
+//!
+//! Like `tests/integration.rs`, every test skips with a stderr note
+//! when `artifacts/` is absent (`PRECIS_REQUIRE_ARTIFACTS=1` promotes
+//! the skip to a failure).  The artifact-independent session/gateway
+//! contracts (init-failure propagation, drain-on-shutdown, routing)
+//! are unit-tested in `src/serving/` against the fixture network and
+//! run on every fresh clone.
+
+use std::time::Duration;
+
+use precis::eval::sweep::EvalOptions;
+use precis::eval::{accuracy, forward_eval_parallel, topk_accuracy};
+use precis::formats::Format;
+use precis::nn::Zoo;
+use precis::serving::{BackendKind, Gateway, SessionKey, SessionOptions};
+
+const ARTIFACTS: &str = concat!(env!("CARGO_MANIFEST_DIR"), "/../artifacts");
+
+fn zoo() -> Option<Zoo> {
+    match Zoo::load(ARTIFACTS) {
+        Ok(z) => Some(z),
+        Err(e) => {
+            if precis::testing::strict_env("PRECIS_REQUIRE_ARTIFACTS") {
+                panic!("PRECIS_REQUIRE_ARTIFACTS is set but artifacts are unusable: {e:#}");
+            }
+            eprintln!("skipping: artifacts unusable at {ARTIFACTS}: {e:#} (run `make artifacts`)");
+            None
+        }
+    }
+}
+
+/// The acceptance scenario: ≥2 concurrent sessions in one gateway, and
+/// for every session the gateway's responses are bit-identical to the
+/// logits `eval` computes offline — i.e. `eval::accuracy` and the
+/// served traffic are the same function.
+#[test]
+fn gateway_serves_two_sessions_bit_identical_to_eval() {
+    let Some(z) = zoo() else { return };
+    let samples = 48usize;
+    let gateway = Gateway::new(z, BackendKind::Native).with_options(SessionOptions {
+        batch: 8,
+        max_wait: Duration::from_millis(3),
+    });
+    let k1 = gateway.open_spec("lenet5@float:m7e6").unwrap();
+    let k2 = gateway.open_spec("alexnet-mini@fixed:l8r8").unwrap();
+    assert_eq!(gateway.keys().len(), 2);
+
+    // offline reference: the eval path (batch-parallel pool) on the
+    // same inputs, plus the plain accuracy number
+    let opts = EvalOptions { samples, batch: 32 };
+    let mut reference = Vec::new();
+    for key in [&k1, &k2] {
+        let net = gateway.session(key).unwrap().network().clone();
+        let (logits, labels) = forward_eval_parallel(&net, &key.fmt, &opts, 4).unwrap();
+        let eval_acc = accuracy(&net, &key.fmt, samples).unwrap();
+        reference.push((key.clone(), net, logits, labels, eval_acc));
+    }
+
+    // drive both sessions with concurrent closed-loop clients,
+    // collecting the gateway's actual responses per session
+    let mut served: Vec<Vec<(usize, Vec<f32>)>> =
+        (0..reference.len()).map(|_| Vec::new()).collect();
+    std::thread::scope(|scope| {
+        let mut handles = Vec::new();
+        for (kidx, (key, net, logits, _, _)) in reference.iter().enumerate() {
+            for client in 0..3usize {
+                let gateway = &gateway;
+                let handle = scope.spawn(move || {
+                    let px: usize = net.input.iter().product();
+                    let mut rows = Vec::new();
+                    let mut i = client;
+                    while i < samples {
+                        let pixels = net.eval_x.data()[i * px..(i + 1) * px].to_vec();
+                        let got = gateway.infer(key, pixels).unwrap();
+                        let want = &logits[i * net.classes..(i + 1) * net.classes];
+                        for (j, (a, b)) in got.iter().zip(want).enumerate() {
+                            assert_eq!(
+                                a.to_bits(),
+                                b.to_bits(),
+                                "{key} sample {i} logit {j}: served {a} vs eval {b}"
+                            );
+                        }
+                        rows.push((i, got));
+                        i += 3;
+                    }
+                    rows
+                });
+                handles.push((kidx, handle));
+            }
+        }
+        for (kidx, handle) in handles {
+            served[kidx].extend(handle.join().unwrap());
+        }
+    });
+
+    // accuracy computed from the RESPONSES THE GATEWAY SERVED equals
+    // eval::accuracy exactly (not merely the reference against itself)
+    for (kidx, (key, net, _, labels, eval_acc)) in reference.iter().enumerate() {
+        let mut rows = std::mem::take(&mut served[kidx]);
+        rows.sort_by_key(|(i, _)| *i);
+        assert_eq!(rows.len(), samples, "{key}: every sample served once");
+        let served_logits: Vec<f32> =
+            rows.iter().flat_map(|(_, l)| l.iter().copied()).collect();
+        let served_acc = topk_accuracy(&served_logits, labels, net.classes, net.topk);
+        assert_eq!(
+            served_acc, *eval_acc,
+            "{key}: served-path accuracy must equal eval::accuracy"
+        );
+    }
+
+    let stats = gateway.shutdown();
+    assert_eq!(stats.sessions.len(), 2);
+    assert_eq!(stats.total_requests(), 2 * samples as u64);
+    for (key, s) in &stats.sessions {
+        assert_eq!(s.backend, "native", "{key}");
+        assert!(s.batches >= samples as u64 / 8, "{key}: {s:?}");
+        assert!(s.p99_queue_ms >= s.p50_queue_ms, "{key}: {s:?}");
+    }
+    // stats are keyed and sorted by session key
+    let got: Vec<SessionKey> = stats.sessions.iter().map(|(k, _)| k.clone()).collect();
+    let mut want = vec![k1, k2];
+    want.sort();
+    assert_eq!(got, want);
+}
+
+/// Hot add/remove while traffic flows: a sweep can be served live.
+#[test]
+fn gateway_hot_add_remove_under_traffic() {
+    let Some(z) = zoo() else { return };
+    let gateway = Gateway::new(z, BackendKind::Native).with_options(SessionOptions {
+        batch: 4,
+        max_wait: Duration::from_millis(2),
+    });
+    let k1 = gateway.open("lenet5", Format::float(10, 6)).unwrap();
+    let net = gateway.session(&k1).unwrap().network().clone();
+    let px: usize = net.input.iter().product();
+    let pixels = |i: usize| net.eval_x.data()[i * px..(i + 1) * px].to_vec();
+
+    gateway.infer(&k1, pixels(0)).unwrap();
+
+    // hot-add a second format of the same network mid-flight (the
+    // sweep-served-live scenario), then a request to each
+    let k2 = gateway.open("lenet5", Format::fixed(8, 8)).unwrap();
+    gateway.infer(&k1, pixels(1)).unwrap();
+    gateway.infer(&k2, pixels(1)).unwrap();
+
+    // re-opening an existing key is idempotent
+    let again = gateway.open("lenet5", Format::float(10, 6)).unwrap();
+    assert_eq!(again, k1);
+    assert_eq!(gateway.keys().len(), 2);
+
+    // hot-remove the first: routing stops, the survivor still serves
+    let closed = gateway.close(&k1).expect("k1 was hosted");
+    assert_eq!(closed.requests, 2);
+    assert!(gateway.infer(&k1, pixels(2)).is_err());
+    gateway.infer(&k2, pixels(2)).unwrap();
+
+    let stats = gateway.shutdown();
+    assert_eq!(stats.sessions.len(), 1);
+    assert_eq!(stats.sessions[0].0, k2);
+    assert_eq!(stats.total_requests(), 2);
+}
+
+/// An unknown network in a session spec must surface as a clean error
+/// (and an out-of-range format must not panic — the `Format::parse`
+/// regression, exercised through the serving entry point).
+#[test]
+fn gateway_open_rejects_bad_specs() {
+    let Some(z) = zoo() else { return };
+    let gateway = Gateway::new(z, BackendKind::Native);
+    assert!(gateway.open_spec("no-such-net@float:m7e6").is_err());
+    assert!(gateway.open_spec("lenet5@fixed:l100r100").is_err());
+    assert!(gateway.open_spec("lenet5").is_err());
+    assert!(gateway.keys().is_empty());
+    let _ = SessionKey::parse("lenet5@float:m7e6").unwrap();
+}

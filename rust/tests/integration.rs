@@ -12,22 +12,23 @@
 //! Covers: zoo loading, native-engine accuracy vs the trainer's recorded
 //! exact accuracy, precision-degradation behaviour across the design
 //! space, the §3.3 search against the exhaustive baseline, the parallel
-//! sweep coordinator, and the batching server.
+//! sweep coordinator, and the serving session (the gateway proper is
+//! covered by `tests/gateway.rs`).
 
 use std::sync::Arc;
 use std::time::Duration;
 
 use precis::coordinator::cache::ResultCache;
-use precis::coordinator::server::InferenceServer;
 use precis::coordinator::{sweep_formats, Coordinator};
 use precis::eval::sweep::{forward_eval, EvalOptions};
 use precis::eval::{accuracy, topk_accuracy};
 use precis::figures;
 use precis::formats::Format;
-use precis::nn::{Engine, Network, Zoo};
+use precis::nn::{Network, Zoo};
 use precis::search::{
     collect_model_points, exhaustive_search, search, AccuracyModel, SearchSpec,
 };
+use precis::serving::{Backend, BackendKind, NativeBackend, Session, SessionOptions};
 
 /// `artifacts/` lives at the repo root (aot.py's default output), one
 /// level above this crate.
@@ -132,14 +133,14 @@ fn float_beats_fixed_at_iso_accuracy_on_long_chain_net() {
     let Some(z) = zoo() else { return };
     let net = z.network("googlenet-mini").unwrap();
     let o = opts(96);
-    let mut engine = Engine::new();
-    let (bl, labels) = forward_eval(&mut engine, &net, &Format::SINGLE, &o);
+    let mut backend = NativeBackend::new(net.clone());
+    let (bl, labels) = forward_eval(&mut backend, &Format::SINGLE, &o).unwrap();
     let base = topk_accuracy(&bl, &labels, net.classes, net.topk);
 
-    let need_bits = |fmts: &[Format]| -> Option<u32> {
+    let mut need_bits = |fmts: &[Format]| -> Option<u32> {
         let mut best: Option<u32> = None;
         for f in fmts {
-            let (lg, _) = forward_eval(&mut Engine::new(), &net, f, &o);
+            let (lg, _) = forward_eval(&mut backend, f, &o).unwrap();
             let acc = topk_accuracy(&lg, &labels, net.classes, net.topk);
             if acc >= 0.99 * base {
                 best = Some(best.map_or(f.total_bits(), |b| b.min(f.total_bits())));
@@ -166,8 +167,8 @@ fn sweep_coordinator_matches_sequential_and_caches() {
     let space = test_space();
     let cache = ResultCache::ephemeral();
 
-    let par = sweep_formats(&net, &space, &o, 4, &cache);
-    let seq = precis::eval::sweep_design_space(&net, &space, &o);
+    let par = sweep_formats(&net, &space, &o, 4, &cache).unwrap();
+    let seq = precis::eval::sweep_design_space(&net, &space, &o).unwrap();
     assert_eq!(par.len(), seq.len());
     for (p, s) in par.iter().zip(seq.iter()) {
         assert_eq!(p.format, s.format);
@@ -176,7 +177,7 @@ fn sweep_coordinator_matches_sequential_and_caches() {
     }
     // second run hits the cache (same values, cache populated)
     assert!(cache.len() >= space.len());
-    let par2 = sweep_formats(&net, &space, &o, 2, &cache);
+    let par2 = sweep_formats(&net, &space, &o, 2, &cache).unwrap();
     for (a, b) in par.iter().zip(par2.iter()) {
         assert_eq!(a.accuracy, b.accuracy);
     }
@@ -190,8 +191,10 @@ fn batch_parallel_eval_is_bit_identical_to_sequential() {
     let net = z.network("lenet5").unwrap();
     let o = opts(80); // 2.5 batches: exercises the ragged tail
     for fmt in [Format::SINGLE, Format::float(7, 6), Format::fixed(8, 8)] {
-        let (seq, seq_labels) = forward_eval(&mut Engine::new(), &net, &fmt, &o);
-        let (par, par_labels) = precis::eval::forward_eval_parallel(&net, &fmt, &o, 4);
+        let (seq, seq_labels) =
+            forward_eval(&mut NativeBackend::new(net.clone()), &fmt, &o).unwrap();
+        let (par, par_labels) =
+            precis::eval::forward_eval_parallel(&net, &fmt, &o, 4).unwrap();
         assert_eq!(seq_labels, par_labels);
         assert_eq!(seq.len(), par.len());
         for i in 0..seq.len() {
@@ -210,7 +213,12 @@ fn accuracy_model_transfers_across_networks() {
     let mut pts = Vec::new();
     for name in ["lenet5", "cifarnet"] {
         let net = z.network(name).unwrap();
-        pts.extend(collect_model_points(&net, &space, &o, 7).into_iter().map(|(_, p)| p));
+        pts.extend(
+            collect_model_points(&net, &space, &o, 7)
+                .unwrap()
+                .into_iter()
+                .map(|(_, p)| p),
+        );
     }
     let model = AccuracyModel::fit(&pts);
     assert!(model.fit_r > 0.7, "fit r = {} too weak", model.fit_r);
@@ -229,7 +237,12 @@ fn search_with_two_refinements_matches_exhaustive() {
     let mut pts = Vec::new();
     for name in ["cifarnet", "alexnet-mini"] {
         let n = z.network(name).unwrap();
-        pts.extend(collect_model_points(&n, &space, &o, 7).into_iter().map(|(_, p)| p));
+        pts.extend(
+            collect_model_points(&n, &space, &o, 7)
+                .unwrap()
+                .into_iter()
+                .map(|(_, p)| p),
+        );
     }
     let model = AccuracyModel::fit(&pts);
 
@@ -240,8 +253,8 @@ fn search_with_two_refinements_matches_exhaustive() {
         opts: o,
         seed: 7,
     };
-    let (ex, _) = exhaustive_search(&net, &spec);
-    let out = search(&net, &spec, &model);
+    let (ex, _) = exhaustive_search(&net, &spec).unwrap();
+    let out = search(&net, &spec, &model).unwrap();
 
     let exf = ex.chosen.expect("exhaustive must find a config");
     let ouf = out.chosen.expect("search must find a config");
@@ -263,38 +276,53 @@ fn search_with_two_refinements_matches_exhaustive() {
 }
 
 #[test]
-fn batching_server_native_end_to_end() {
+fn serving_session_native_end_to_end() {
     let Some(z) = zoo() else { return };
     let net: Arc<Network> = z.network("lenet5").unwrap();
     let fmt = Format::float(10, 6);
-    let server = InferenceServer::native(net.clone(), 8, fmt, Duration::from_millis(5));
+    let session = Session::open_with(
+        &z,
+        "lenet5",
+        fmt,
+        BackendKind::Native,
+        SessionOptions { batch: 8, max_wait: Duration::from_millis(5) },
+    )
+    .unwrap();
 
     // submit 20 async requests (forces batching + a padded final batch)
     let px = net.input.iter().product::<usize>();
     let mut pending = Vec::new();
     for i in 0..20 {
         let pixels = net.eval_x.data()[i * px..(i + 1) * px].to_vec();
-        pending.push((i, server.infer_async(pixels).unwrap()));
+        pending.push((i, session.infer_async(pixels).unwrap()));
     }
-    // responses must match the engine run directly
-    let mut engine = Engine::new();
-    let direct = engine.forward(&net, &net.eval_x.slice_rows(0, 20), &fmt);
+    // responses must match the backend run directly
+    let direct = NativeBackend::new(net.clone())
+        .run_batch(&net.eval_x.slice_rows(0, 20), &fmt)
+        .unwrap();
     for (i, rx) in pending {
         let got = rx.recv().unwrap().unwrap();
         let want = &direct.data()[i * net.classes..(i + 1) * net.classes];
         assert_eq!(got.as_slice(), want, "request {i}");
     }
-    let stats = server.shutdown();
+    let stats = session.shutdown();
     assert_eq!(stats.requests, 20);
     assert!(stats.batches >= 3);
+    assert_eq!(stats.backend, "native");
 }
 
 #[test]
-fn server_rejects_malformed_input() {
+fn session_rejects_malformed_input() {
     let Some(z) = zoo() else { return };
-    let net = z.network("lenet5").unwrap();
-    let server = InferenceServer::native(net, 4, Format::SINGLE, Duration::from_millis(1));
-    assert!(server.infer(vec![0.0; 3]).is_err());
+    let session = Session::open_with(
+        &z,
+        "lenet5",
+        Format::SINGLE,
+        BackendKind::Native,
+        SessionOptions { batch: 4, max_wait: Duration::from_millis(1) },
+    )
+    .unwrap();
+    assert!(session.infer(vec![0.0; 3]).is_err());
 }
 
 #[test]
@@ -323,7 +351,7 @@ fn pareto_helper_picks_fastest_meeting_target() {
     let net = z.network("cifarnet").unwrap();
     let o = opts(64);
     let cache = ResultCache::ephemeral();
-    let res = sweep_formats(&net, &test_space(), &o, 2, &cache);
+    let res = sweep_formats(&net, &test_space(), &o, 2, &cache).unwrap();
     if let Some(best) = figures::pareto(&res, 0.99) {
         assert!(best.normalized_accuracy >= 0.99);
         for r in &res {

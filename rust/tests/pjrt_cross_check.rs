@@ -19,8 +19,9 @@
 
 use precis::eval::topk_accuracy;
 use precis::formats::Format;
-use precis::nn::{Engine, Zoo};
+use precis::nn::Zoo;
 use precis::runtime::Runtime;
+use precis::serving::{Backend, NativeBackend};
 use precis::tensor::Tensor;
 
 const ARTIFACTS: &str = concat!(env!("CARGO_MANIFEST_DIR"), "/../artifacts");
@@ -66,7 +67,7 @@ fn cross_check(net_name: &str, fmts: &[Format]) {
     let Some((zoo, rt)) = setup() else { return };
     let dir = std::path::PathBuf::from(ARTIFACTS);
     let net = zoo.network(net_name).unwrap();
-    let mut engine = Engine::new();
+    let mut native = NativeBackend::new(net.clone());
 
     let x = net.eval_x.slice_rows(0, zoo.batch);
     let mut models = std::collections::BTreeMap::new();
@@ -78,7 +79,7 @@ fn cross_check(net_name: &str, fmts: &[Format]) {
         });
 
         let pjrt_logits = model.run_batch(&x, fmt).unwrap();
-        let native_logits = engine.forward(&net, &x, fmt);
+        let native_logits = native.run_batch(&x, fmt).unwrap();
         assert_eq!(pjrt_logits.shape(), native_logits.shape());
         let ulp = max_ulp_diff(pjrt_logits.data(), native_logits.data());
         assert_eq!(
