@@ -1,0 +1,59 @@
+#!/usr/bin/env python3
+"""Per-module line-coverage report + floor gate over a cargo-llvm-cov
+JSON export (`cargo llvm-cov --json`).
+
+Reports aggregate line coverage for the numerics, formats, and serving
+modules, and FAILS if `numerics` drops below the floor established when
+the coverage lane landed (the cross-language golden-vector suite plus
+the quantizer property tests put numerics well above it; the floor is
+deliberately conservative — ratchet it upward, never down).
+
+Usage: coverage_gate.py <coverage.json>
+"""
+
+import json
+import sys
+
+# module path fragment -> floor percent (None = report only)
+MODULES = {
+    "rust/src/numerics/": 85.0,
+    "rust/src/formats/": None,
+    "rust/src/serving/": None,
+}
+
+
+def main() -> int:
+    with open(sys.argv[1]) as fh:
+        export = json.load(fh)
+    files = export["data"][0]["files"]
+
+    failed = False
+    print(f"{'module':<24} {'lines':>8} {'covered':>8} {'percent':>8}  floor")
+    for frag, floor in MODULES.items():
+        count = covered = 0
+        for f in files:
+            if frag in f["filename"].replace("\\", "/"):
+                lines = f["summary"]["lines"]
+                count += lines["count"]
+                covered += lines["covered"]
+        if count == 0:
+            print(f"{frag:<24} {'-':>8} {'-':>8} {'-':>8}  NO FILES MATCHED")
+            failed = True
+            continue
+        pct = 100.0 * covered / count
+        floor_s = f">= {floor:.0f}%" if floor is not None else "(report only)"
+        verdict = ""
+        if floor is not None and pct < floor:
+            verdict = "  <-- BELOW FLOOR"
+            failed = True
+        print(f"{frag:<24} {count:>8} {covered:>8} {pct:>7.1f}%  {floor_s}{verdict}")
+
+    if failed:
+        print("\ncoverage gate FAILED", file=sys.stderr)
+        return 1
+    print("\ncoverage gate passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

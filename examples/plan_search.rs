@@ -1,0 +1,71 @@
+//! PER-LAYER MIXED-PRECISION DRIVER — the greedy plan search over the
+//! whole model zoo (DESIGN.md §Mixed precision):
+//!
+//! 1. loads the AOT-trained model zoo (`make artifacts`);
+//! 2. cross-validates the §3.3 accuracy model per network (fit on the
+//!    other reference networks, never on the network under search);
+//! 3. runs `search::plan_search` — start uniform-wide, narrow one layer
+//!    at a time ranked by probe-R², validate only the survivors — and
+//!    compares the resulting per-layer plan against the uniform format
+//!    the single-format search would pick;
+//! 4. reports predicted vs measured accuracy, the MAC-weighted hardware
+//!    speedup of each plan, and the search cost against exhaustive
+//!    per-layer enumeration (`ladder^layers` plans).
+//!
+//!     cargo run --release --example plan_search [-- --samples 128]
+
+use anyhow::Result;
+
+use precis::coordinator::cache::ResultCache;
+use precis::coordinator::Coordinator;
+use precis::eval::sweep::EvalOptions;
+use precis::figures::cross_validated_model;
+use precis::nn::Zoo;
+use precis::search::{plan_search, PlanSearchSpec};
+use precis::util::cli::Args;
+use precis::util::timer::Timer;
+
+/// Repo-root artifacts/results dirs, valid from any cwd (matches
+/// tests/benches).
+const ARTIFACTS: &str = concat!(env!("CARGO_MANIFEST_DIR"), "/../artifacts");
+const CACHE: &str = concat!(env!("CARGO_MANIFEST_DIR"), "/../results/cache.json");
+
+fn main() -> Result<()> {
+    let raw: Vec<String> = std::env::args().skip(1).collect();
+    let args = Args::parse(&raw, &[])?;
+    let samples = args.get_usize("samples", 128)?;
+    let seed = args.get_usize("seed", 2018)? as u64;
+    let target = args.get_f64("target", 0.99)?;
+    let opts = EvalOptions { samples, batch: 32 };
+
+    let t_total = Timer::start();
+    let zoo = Zoo::load(ARTIFACTS)?;
+    let cache = ResultCache::open(CACHE);
+    let coord = Coordinator::new(zoo, cache);
+
+    println!(
+        "{:<16} {:>9} {:>9} {:>10} {:>12} {:>14}",
+        "network", "speedup", "pred_na", "meas_na", "validations", "vs_exhaustive"
+    );
+
+    for net in coord.zoo.by_size_desc() {
+        let t = Timer::start();
+        let model = cross_validated_model(&coord, &net.name, &opts, seed)?;
+        let spec = PlanSearchSpec { target, opts, seed, ..Default::default() };
+        let out = plan_search(&net, &spec, &model)?;
+        println!(
+            "{:<16} {:>8.2}x {:>9.4} {:>10.4} {:>12} {:>13.0}x  ({:.0}s)",
+            net.name,
+            out.speedup,
+            out.predicted_norm_acc,
+            out.measured_norm_acc,
+            out.validations_spent,
+            out.exhaustive_plans / out.validations_spent.max(1) as f64,
+            t.elapsed_s(),
+        );
+        println!("    plan: {}", out.plan.id());
+    }
+    coord.cache.flush()?;
+    println!("\ntotal wall-clock: {:.0}s", t_total.elapsed_s());
+    Ok(())
+}

@@ -22,7 +22,8 @@ use anyhow::Result;
 use precis::eval::topk_accuracy;
 use precis::nn::Zoo;
 use precis::serving::{
-    drive_closed_loop, warm_up, BackendKind, Gateway, SessionKey, SessionOptions,
+    drive_closed_loop, split_session_specs, warm_up, BackendKind, Gateway, SessionKey,
+    SessionOptions,
 };
 use precis::util::cli::Args;
 
@@ -46,9 +47,9 @@ fn main() -> Result<()> {
         batch: 0, // the artifact batch size
         max_wait: Duration::from_millis(wait_ms as u64),
     });
-    let keys: Vec<SessionKey> = specs
-        .split(',')
-        .map(|s| gateway.open_spec(s.trim()))
+    let keys: Vec<SessionKey> = split_session_specs(&specs)
+        .iter()
+        .map(|s| gateway.open_spec(s))
         .collect::<Result<_>>()?;
 
     println!(

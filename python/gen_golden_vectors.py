@@ -1,0 +1,161 @@
+#!/usr/bin/env python3
+"""Generate the cross-language quantization golden vectors.
+
+Runs the NORMATIVE quantizers (python/compile/kernels/qformat.py, the
+same jnp code the Pallas kernel and the AOT HLO artifacts stage) over a
+curated set of edge-case and random inputs for ~a dozen float and fixed
+formats, and writes the resulting (input bits, output bits) pairs to
+
+    rust/tests/golden/quant_golden.json
+
+which is CHECKED IN.  The tier-1 test rust/tests/golden_quant.rs then
+asserts `precis::numerics` reproduces every vector bit-exactly on every
+fresh clone — no artifacts, no Python, no JAX needed at test time.  The
+pjrt_cross_check integration test proves the same contract end-to-end
+through whole networks, but only when artifacts and a PJRT runtime
+exist; this file is the always-on conformance anchor.
+
+Edge cases covered per format: signed zero, subnormal flush (just below
+min_normal, and f32-carrier subnormals), saturation (just above
+max_value, huge values, infinities), exact round-half-to-even ties on
+both sides of the even/odd grid step, plus seeded random values across
+the dynamic range.
+
+Regenerate with:  python3 python/gen_golden_vectors.py
+(The output is deterministic; regeneration must be a no-op unless
+qformat.py's semantics changed — which is exactly what the Rust test
+would then catch.)
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+import numpy as np
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from python.compile.kernels.qformat import (  # noqa: E402
+    FixedFormat,
+    FloatFormat,
+    fixed_params,
+    float_params,
+    quantize,
+)
+
+OUT_PATH = os.path.join(
+    os.path.dirname(__file__), "..", "rust", "tests", "golden", "quant_golden.json"
+)
+
+# ~a dozen formats spanning the design space: the exact baseline, the
+# paper's headline pick F(7,6), extremes of each knob, and centered /
+# skewed fixed points (including l=0, which saturates at < 1).
+FLOAT_FORMATS = [
+    FloatFormat(23, 8),  # exact baseline (identity + carrier clamps)
+    FloatFormat(7, 6),   # paper's 14-bit pick
+    FloatFormat(4, 4),
+    FloatFormat(10, 3),
+    FloatFormat(2, 8),
+    FloatFormat(1, 2),
+    FloatFormat(0, 5),   # hidden-one only: pure powers of two
+]
+FIXED_FORMATS = [
+    FixedFormat(8, 8),   # paper §4.3 16-bit centered
+    FixedFormat(4, 4),
+    FixedFormat(0, 2),   # saturates below 1.0
+    FixedFormat(2, 12),
+    FixedFormat(12, 2),
+    FixedFormat(1, 3),
+]
+
+
+def f32(x) -> np.float32:
+    return np.float32(x)
+
+
+def bits(x: np.float32) -> int:
+    return int(np.asarray(x, dtype=np.float32).view(np.uint32))
+
+
+def float_inputs(fmt: FloatFormat, rng: np.random.Generator) -> list[np.float32]:
+    xs: list[np.float32] = []
+    mn = f32(fmt.min_normal)
+    mx = f32(fmt.max_value)
+    xs += [f32(0.0), f32(-0.0), f32(1.0), f32(-1.0), f32(2.0 / 3.0), f32(-np.pi)]
+    # flush-to-zero: just below min normal (both signs), and an
+    # f32-carrier subnormal
+    xs += [np.nextafter(mn, f32(0.0)), -np.nextafter(mn, f32(0.0)), f32(1e-40), f32(-1e-40)]
+    # the min normal itself must survive
+    xs += [mn, -mn]
+    # saturation: just above max, far above max, infinities
+    xs += [np.nextafter(mx, f32(np.inf)), f32(-1e38), f32(np.inf), f32(-np.inf)]
+    if fmt.max_value < 1e38:
+        xs += [f32(fmt.max_value * 1.5), f32(-fmt.max_value * 1.5)]
+    xs += [mx, -mx]
+    # exact round-half-to-even ties at m bits: 1 + (2k+1)/2^(m+1) sits
+    # exactly between grid steps k and k+1 (representable: m+1 <= 23)
+    if fmt.mantissa < 23:
+        for k in (0, 1, 2, 5):
+            tie = f32(1.0 + (2 * k + 1) / 2.0 ** (fmt.mantissa + 1))
+            xs += [tie, -tie, f32(4.0) * tie]
+    # random values across the dynamic range
+    for _ in range(10):
+        mag = rng.uniform(0.0, 1.0) * 2.0 ** rng.integers(-30, 31)
+        xs.append(f32(mag if rng.uniform() < 0.5 else -mag))
+    return xs
+
+
+def fixed_inputs(fmt: FixedFormat, rng: np.random.Generator) -> list[np.float32]:
+    xs: list[np.float32] = []
+    step = 2.0 ** -fmt.frac_bits
+    mx = f32(fmt.max_value)
+    xs += [f32(0.0), f32(-0.0), f32(1.0), f32(-1.0), f32(2.0 / 3.0), f32(-np.pi)]
+    # carrier subnormal rounds to zero
+    xs += [f32(1e-40), f32(-1e-40)]
+    # saturation both ways, including far overflow and infinities
+    xs += [mx, -mx, f32(fmt.max_value + 1.0), f32(-fmt.max_value - 1.0), f32(1e30), f32(np.inf)]
+    # exact ties at half a grid step: (2k+1) * step/2 (representable
+    # whenever the scaled value fits f32's exact-integer range)
+    for k in (0, 1, 2, 5):
+        tie = f32((2 * k + 1) * step / 2.0)
+        xs += [tie, -tie]
+    # random values, mostly in range with some overflow
+    for _ in range(10):
+        v = rng.uniform(-2.0, 2.0) * max(fmt.max_value, step)
+        xs.append(f32(v))
+    return xs
+
+
+def main() -> None:
+    rng = np.random.default_rng(2018)
+    cases = []
+    for fmt in FLOAT_FORMATS:
+        params = float_params(fmt)
+        name = f"float:m{fmt.mantissa}e{fmt.exponent}"
+        for x in float_inputs(fmt, rng):
+            y = np.asarray(quantize(x, params, "float"), dtype=np.float32)
+            cases.append({"fmt": name, "x": f"{bits(x):08x}", "q": f"{bits(y):08x}"})
+    for fmt in FIXED_FORMATS:
+        params = fixed_params(fmt)
+        name = f"fixed:l{fmt.int_bits}r{fmt.frac_bits}"
+        for x in fixed_inputs(fmt, rng):
+            y = np.asarray(quantize(x, params, "fixed"), dtype=np.float32)
+            cases.append({"fmt": name, "x": f"{bits(x):08x}", "q": f"{bits(y):08x}"})
+
+    out = {
+        "_generator": "python/gen_golden_vectors.py (normative: qformat.py)",
+        "_seed": 2018,
+        "formats": sorted({c["fmt"] for c in cases}),
+        "cases": cases,
+    }
+    os.makedirs(os.path.dirname(OUT_PATH), exist_ok=True)
+    with open(OUT_PATH, "w") as fh:
+        json.dump(out, fh, indent=1)
+        fh.write("\n")
+    print(f"wrote {len(cases)} cases for {len(out['formats'])} formats -> {OUT_PATH}")
+
+
+if __name__ == "__main__":
+    main()

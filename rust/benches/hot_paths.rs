@@ -8,7 +8,7 @@
 //! CHANGES.md / EXPERIMENTS.md.
 
 use precis::bench_harness::{section, Bench};
-use precis::formats::Format;
+use precis::formats::{Format, PrecisionSpec};
 use precis::nn::{gemm_q, gemm_q_naive, Zoo};
 use precis::numerics::{dot_q, Quantizer};
 use precis::serving::{Backend, NativeBackend};
@@ -96,6 +96,22 @@ fn main() {
         let fmt = Format::float(7, 6);
         let r = b.run(&format!("forward/{name}/batch32"), || {
             backend.run_batch(&x, &fmt).unwrap().data()[0]
+        });
+        println!("    -> {:.1} samples/s", r.throughput(32.0));
+    }
+
+    // per-layer plans ride the same engine through a memoized quantizer
+    // table: the mixed-plan forward must cost the same as uniform
+    section("mixed-precision plan forward (first layer fixed:l8r8, rest float:m7e6)");
+    for name in ["lenet5", "alexnet-mini"] {
+        let net = zoo.network(name).unwrap();
+        let first = net.quantized_layer_names()[0].clone();
+        let spec =
+            PrecisionSpec::parse(&format!("plan:{first}=fixed:l8r8,*=float:m7e6")).unwrap();
+        let mut backend = NativeBackend::new(net.clone());
+        let x = net.eval_x.slice_rows(0, 32);
+        let r = b.run(&format!("forward_plan/{name}/batch32"), || {
+            backend.run_spec(&x, &spec).unwrap().data()[0]
         });
         println!("    -> {:.1} samples/s", r.throughput(32.0));
     }

@@ -14,7 +14,7 @@ use anyhow::Result;
 
 use crate::coordinator::pool::{default_workers, run_indexed};
 use crate::eval::metrics::topk_accuracy;
-use crate::formats::Format;
+use crate::formats::{Format, PrecisionSpec};
 use crate::hw;
 use crate::nn::Network;
 use crate::serving::{Backend, NativeBackend};
@@ -55,10 +55,10 @@ pub struct ConfigResult {
 /// perturb live rows — per-sample computation is independent
 /// (DESIGN.md §3) — so the result is bit-identical to an unconstrained
 /// backend's.  No-op pass-through for unconstrained backends.
-fn run_padded(backend: &mut dyn Backend, x: &Tensor, fmt: &Format) -> Result<Tensor> {
+fn run_padded(backend: &mut dyn Backend, x: &Tensor, spec: &PrecisionSpec) -> Result<Tensor> {
     let b = x.shape()[0];
     let Some(fb) = backend.fixed_batch().filter(|&fb| fb != b) else {
-        return backend.run_batch(x, fmt);
+        return backend.run_spec(x, spec);
     };
     anyhow::ensure!(
         b < fb,
@@ -69,21 +69,25 @@ fn run_padded(backend: &mut dyn Backend, x: &Tensor, fmt: &Format) -> Result<Ten
     shape[0] = fb;
     let mut data = x.data().to_vec();
     data.resize(fb * px, 0.0);
-    let out = backend.run_batch(&Tensor::new(shape, data)?, fmt)?;
+    let out = backend.run_spec(&Tensor::new(shape, data)?, spec)?;
     let classes = out.shape()[1];
     Tensor::new(vec![b, classes], out.data()[..b * classes].to_vec())
 }
 
 /// Forward the first `opts.samples` eval inputs through `backend`;
-/// returns (logits, labels).  `opts.batch` is clamped to at least 1 (a
-/// zero batch would not advance) and overridden by the backend's
-/// [`Backend::fixed_batch`] when it has one, with the ragged tail
-/// zero-padded — so the same driver runs on native AND PJRT backends.
+/// returns (logits, labels).  `spec` is anything convertible to a
+/// [`PrecisionSpec`] — a `&Format` (the legacy single-format calls
+/// compile unchanged), a per-layer `Plan`, or a `&PrecisionSpec`.
+/// `opts.batch` is clamped to at least 1 (a zero batch would not
+/// advance) and overridden by the backend's [`Backend::fixed_batch`]
+/// when it has one, with the ragged tail zero-padded — so the same
+/// driver runs on native AND PJRT backends.
 pub fn forward_eval(
     backend: &mut dyn Backend,
-    fmt: &Format,
+    spec: impl Into<PrecisionSpec>,
     opts: &EvalOptions,
 ) -> Result<(Vec<f32>, Vec<i32>)> {
+    let spec: PrecisionSpec = spec.into();
     let net = backend.network().clone();
     let n = opts.samples.min(net.eval_len()).max(1);
     let batch = backend.fixed_batch().unwrap_or_else(|| opts.batch.max(1));
@@ -93,7 +97,7 @@ pub fn forward_eval(
     while lo < n {
         let hi = (lo + batch).min(n);
         let xb = net.eval_x.slice_rows(lo, hi);
-        let out = run_padded(backend, &xb, fmt)?;
+        let out = run_padded(backend, &xb, &spec)?;
         logits.extend_from_slice(out.data());
         lo = hi;
     }
@@ -110,10 +114,11 @@ pub fn forward_eval(
 /// evaluation every sweep starts with, or a single-config `eval`).
 pub fn forward_eval_parallel(
     net: &Arc<Network>,
-    fmt: &Format,
+    spec: impl Into<PrecisionSpec>,
     opts: &EvalOptions,
     workers: usize,
 ) -> Result<(Vec<f32>, Vec<i32>)> {
+    let spec: PrecisionSpec = spec.into();
     let n = opts.samples.min(net.eval_len()).max(1);
     // same clamp as forward_eval, so both paths use identical batching
     let batch = opts.batch.max(1);
@@ -123,15 +128,16 @@ pub fn forward_eval_parallel(
         .collect();
     if workers <= 1 || jobs.len() <= 1 {
         let mut backend = NativeBackend::new(net.clone());
-        return forward_eval(&mut backend, fmt, opts);
+        return forward_eval(&mut backend, &spec, opts);
     }
+    let spec = &spec;
     let chunks = run_indexed(
         &jobs,
         workers,
         || NativeBackend::new(net.clone()),
         |backend, &(lo, hi)| -> Result<Vec<f32>> {
             let xb = net.eval_x.slice_rows(lo, hi);
-            Ok(backend.run_batch(&xb, fmt)?.into_data())
+            Ok(backend.run_spec(&xb, spec)?.into_data())
         },
     );
     let mut logits = Vec::with_capacity(n * net.classes);
@@ -143,12 +149,14 @@ pub fn forward_eval_parallel(
 
 /// Forward specific eval indices (the search's 10-input probe, §3.3).
 /// Chunked and zero-padded to the backend's [`Backend::fixed_batch`]
-/// when it has one, like [`forward_eval`].
+/// when it has one, like [`forward_eval`].  Accepts plans like every
+/// eval driver.
 pub fn forward_indices(
     backend: &mut dyn Backend,
-    fmt: &Format,
+    spec: impl Into<PrecisionSpec>,
     indices: &[usize],
 ) -> Result<Vec<f32>> {
+    let spec: PrecisionSpec = spec.into();
     let net = backend.network().clone();
     let [h, w, c] = net.input;
     let px = h * w * c;
@@ -160,16 +168,21 @@ pub fn forward_indices(
             xdata.extend_from_slice(&net.eval_x.data()[i * px..(i + 1) * px]);
         }
         let x = Tensor::new(vec![idx.len(), h, w, c], xdata)?;
-        out.extend_from_slice(run_padded(backend, &x, fmt)?.data());
+        out.extend_from_slice(run_padded(backend, &x, &spec)?.data());
     }
     Ok(out)
 }
 
-/// Top-k accuracy of one configuration on the eval subset, with the
-/// batches spread over all cores (bit-identical to the sequential path).
-pub fn accuracy(net: &Arc<Network>, fmt: &Format, samples: usize) -> Result<f64> {
+/// Top-k accuracy of one configuration (uniform format or plan) on the
+/// eval subset, with the batches spread over all cores (bit-identical
+/// to the sequential path).
+pub fn accuracy(
+    net: &Arc<Network>,
+    spec: impl Into<PrecisionSpec>,
+    samples: usize,
+) -> Result<f64> {
     let opts = EvalOptions { samples, ..Default::default() };
-    let (logits, labels) = forward_eval_parallel(net, fmt, &opts, default_workers())?;
+    let (logits, labels) = forward_eval_parallel(net, spec, &opts, default_workers())?;
     Ok(topk_accuracy(&logits, &labels, net.classes, net.topk))
 }
 
@@ -220,14 +233,14 @@ mod tests {
     struct FixedBatch(NativeBackend, usize);
 
     impl Backend for FixedBatch {
-        fn run_batch(&mut self, x: &Tensor, fmt: &Format) -> Result<Tensor> {
+        fn run_spec(&mut self, x: &Tensor, spec: &PrecisionSpec) -> Result<Tensor> {
             anyhow::ensure!(
                 x.shape()[0] == self.1,
                 "batch {} != fixed batch {}",
                 x.shape()[0],
                 self.1
             );
-            self.0.run_batch(x, fmt)
+            self.0.run_spec(x, spec)
         }
 
         fn network(&self) -> &Arc<Network> {
@@ -276,7 +289,8 @@ mod tests {
 
         // an over-size batch is a clean error, not a silent truncation
         let x = net.eval_x.slice_rows(0, 6);
-        assert!(run_padded(&mut FixedBatch(NativeBackend::new(net.clone()), 4), &x, &fmt)
+        let spec = PrecisionSpec::from(fmt);
+        assert!(run_padded(&mut FixedBatch(NativeBackend::new(net.clone()), 4), &x, &spec)
             .is_err());
     }
 }

@@ -11,10 +11,19 @@
 //! matching the paper's "hundreds of designs ... 340" scale), and
 //! [`Format::runtime_params`] produces the 4-float descriptor consumed by
 //! the AOT HLO artifacts.
+//!
+//! The [`plan`] submodule generalizes the single-format setting to
+//! per-layer mixed precision: a [`Plan`] assigns a format per named
+//! layer, and [`PrecisionSpec`] (uniform format | plan) is what every
+//! execution driver accepts (DESIGN.md §Mixed precision).
+
+pub mod plan;
+
+pub use plan::{Plan, PrecisionSpec, ResolvedPlan};
 
 use std::fmt;
 
-use anyhow::{anyhow, bail, Result};
+use anyhow::{anyhow, bail, Context, Result};
 
 /// Largest finite f32 — the carrier clamp for e=8 float formats
 /// (see qformat.py: the simulated format cannot exceed its carrier).
@@ -29,15 +38,38 @@ pub enum Format {
 }
 
 impl Format {
+    /// Trusted-input constructor: panics out of range.  Untrusted input
+    /// (CLI flags, session specs, plan rules) must come through
+    /// [`Format::try_float`] / [`Format::parse`] instead, which return
+    /// `Err` — every parse path in the crate does, so the asserts here
+    /// are unreachable from parsed input.
     pub fn float(mantissa: u32, exponent: u32) -> Format {
-        assert!(mantissa <= 23, "mantissa bits must be <= 23 (f32 carrier)");
-        assert!((1..=8).contains(&exponent), "exponent bits must be in 1..=8");
-        Format::Float { mantissa, exponent }
+        Format::try_float(mantissa, exponent)
+            .expect("Format::float out of range (use try_float for untrusted input)")
     }
 
+    /// See [`Format::float`] for the trusted/untrusted split.
     pub fn fixed(int_bits: u32, frac_bits: u32) -> Format {
-        assert!(int_bits <= 64 && frac_bits <= 64);
-        Format::Fixed { int_bits, frac_bits }
+        Format::try_fixed(int_bits, frac_bits)
+            .expect("Format::fixed out of range (use try_fixed for untrusted input)")
+    }
+
+    /// Range-checked [`Format::float`]: `Err` instead of a panic, the
+    /// single place the float range is enforced.
+    pub fn try_float(mantissa: u32, exponent: u32) -> Result<Format> {
+        if mantissa > 23 || !(1..=8).contains(&exponent) {
+            bail!("float format out of range: m{mantissa}e{exponent} (m<=23, 1<=e<=8)");
+        }
+        Ok(Format::Float { mantissa, exponent })
+    }
+
+    /// Range-checked [`Format::fixed`]: `Err` instead of a panic, the
+    /// single place the fixed range is enforced.
+    pub fn try_fixed(int_bits: u32, frac_bits: u32) -> Result<Format> {
+        if int_bits > 64 || frac_bits > 64 {
+            bail!("fixed format out of range: l{int_bits}r{frac_bits} (l<=64, r<=64)");
+        }
+        Ok(Format::Fixed { int_bits, frac_bits })
     }
 
     /// IEEE-754 single precision (the paper's baseline, 1x speedup).
@@ -134,20 +166,14 @@ impl Format {
         match kind {
             "float" => {
                 let (m, e) = grab(rest, 'm', Some('e'))?;
-                if m > 23 || !(1..=8).contains(&e) {
-                    bail!("format {s:?}: out of range (m<=23, 1<=e<=8)");
-                }
-                Ok(Format::float(m, e))
+                Format::try_float(m, e).with_context(|| format!("format {s:?}"))
             }
             "fixed" => {
                 let (l, r) = grab(rest, 'l', Some('r'))?;
-                // range-check here so untrusted input (CLI flags,
-                // session specs) gets an Err instead of tripping the
-                // `Format::fixed` assert
-                if l > 64 || r > 64 {
-                    bail!("format {s:?}: out of range (l<=64, r<=64)");
-                }
-                Ok(Format::fixed(l, r))
+                // the range-checked constructor makes out-of-range
+                // untrusted input (CLI flags, session specs, plan
+                // rules) an Err instead of a `Format::fixed` assert
+                Format::try_fixed(l, r).with_context(|| format!("format {s:?}"))
             }
             _ => bail!("format {s:?}: unknown kind {kind:?}"),
         }

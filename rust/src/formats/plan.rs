@@ -1,0 +1,532 @@
+//! Per-layer mixed-precision plans — the `PrecisionPlan` subsystem.
+//!
+//! The paper assigns ONE custom format to the whole network (§2.2);
+//! related work (Lai et al., arXiv:1703.03073) shows per-layer format
+//! choices recover accuracy at narrower widths.  A [`Plan`] is an
+//! ordered list of `layer=format` rules with an optional `*` wildcard
+//! default, spelled
+//!
+//! ```text
+//! plan:conv1=float:m4e5,conv2=fixed:l2r12,*=float:m7e6
+//! ```
+//!
+//! Rules apply **first-match-wins** in written order; a rule after the
+//! wildcard would be unreachable and is rejected at parse time, as are
+//! duplicate patterns.  `Plan::parse` ⇄ `Display` round-trip exactly.
+//!
+//! [`PrecisionSpec`] is the execution-facing sum of both worlds — a
+//! single [`Format`] (the paper's setting, and the bit-exactness
+//! anchor: a uniform plan executes the identical per-layer quantizer
+//! table a single format does) or a per-layer [`Plan`].  Every
+//! execution driver ([`crate::serving::Backend`], `eval::forward_eval`,
+//! the sweep/search runners) accepts a `PrecisionSpec`.
+//!
+//! Resolution ([`PrecisionSpec::resolve`] / [`Plan::resolve`]) validates
+//! a plan against a [`Network`]'s named quantized layers (conv / dense;
+//! inception modules contribute their four branch convolutions) and
+//! produces the [`ResolvedPlan`] assignment the engine's quantizer
+//! table is built from.  Validation is total: every quantized layer
+//! must be covered, and every non-wildcard rule must bind a real layer
+//! (typos fail loudly, never silently fall through).
+
+use std::fmt;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::formats::Format;
+use crate::nn::Network;
+
+/// One `pattern=format` rule: `pattern` is an exact layer name or the
+/// wildcard `*`.
+#[derive(Clone, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+struct PlanRule {
+    pattern: String,
+    fmt: Format,
+}
+
+/// An ordered per-layer format assignment (see the module docs for the
+/// syntax and matching semantics).
+#[derive(Clone, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct Plan {
+    rules: Vec<PlanRule>,
+}
+
+impl Plan {
+    /// The plan that assigns `fmt` to every layer: `plan:*=<fmt>`.
+    /// Executing it is bit-identical to executing `fmt` directly (the
+    /// uniform-plan anchor; property-tested in `serving::backend`).
+    pub fn uniform(fmt: Format) -> Plan {
+        Plan {
+            rules: vec![PlanRule { pattern: "*".to_string(), fmt }],
+        }
+    }
+
+    /// A plan with one explicit rule per (layer, format) pair, in
+    /// order.  Errs on duplicate layer names.
+    pub fn explicit(pairs: Vec<(String, Format)>) -> Result<Plan> {
+        let rules = pairs
+            .into_iter()
+            .map(|(pattern, fmt)| PlanRule { pattern, fmt })
+            .collect();
+        Plan::validated(rules)
+    }
+
+    fn validated(rules: Vec<PlanRule>) -> Result<Plan> {
+        if rules.is_empty() {
+            bail!("plan has no rules");
+        }
+        for (i, r) in rules.iter().enumerate() {
+            if r.pattern.is_empty() {
+                bail!("plan rule {i}: empty layer pattern");
+            }
+            if r.pattern != "*" && r.pattern.contains(['*', '=', ',', '@', ':']) {
+                bail!("plan rule {i}: invalid layer pattern {:?}", r.pattern);
+            }
+            if rules[..i].iter().any(|p| p.pattern == r.pattern) {
+                bail!("plan rule {i}: duplicate pattern {:?}", r.pattern);
+            }
+            if i + 1 < rules.len() && r.pattern == "*" {
+                bail!("plan rule {i}: rules after the `*` wildcard are unreachable");
+            }
+        }
+        Ok(Plan { rules })
+    }
+
+    /// Parse the `plan:layer=format[,layer=format...]` spelling.  Every
+    /// format goes through the range-checked [`Format::parse`], so an
+    /// out-of-range format (e.g. `fixed:l100r100`) is an `Err` here
+    /// too, never a constructor panic.
+    pub fn parse(s: &str) -> Result<Plan> {
+        let body = s
+            .strip_prefix("plan:")
+            .ok_or_else(|| anyhow!("plan {s:?}: expected `plan:layer=format,...`"))?;
+        let mut rules = Vec::new();
+        for part in body.split(',') {
+            let (pattern, fmt) = part
+                .split_once('=')
+                .ok_or_else(|| anyhow!("plan {s:?}: rule {part:?} is not `layer=format`"))?;
+            rules.push(PlanRule {
+                pattern: pattern.to_string(),
+                fmt: Format::parse(fmt)?,
+            });
+        }
+        Plan::validated(rules)
+    }
+
+    /// Stable identifier; identical to the [`Display`](fmt::Display)
+    /// form and accepted back by [`Plan::parse`].
+    pub fn id(&self) -> String {
+        self.to_string()
+    }
+
+    /// The format the first matching rule assigns to `layer`, if any.
+    pub fn format_for(&self, layer: &str) -> Option<Format> {
+        self.rules
+            .iter()
+            .find(|r| r.pattern == layer || r.pattern == "*")
+            .map(|r| r.fmt)
+    }
+
+    /// `Some(fmt)` when this plan is the single-wildcard uniform shape
+    /// (the [`Plan::uniform`] constructor's output).
+    pub fn uniform_format(&self) -> Option<Format> {
+        match self.rules.as_slice() {
+            [r] if r.pattern == "*" => Some(r.fmt),
+            _ => None,
+        }
+    }
+
+    /// Validate this plan against `net`'s named quantized layers and
+    /// return the per-layer assignment.  Errors when a quantized layer
+    /// is left unassigned, or when a non-wildcard rule names no layer
+    /// of the network.
+    pub fn resolve(&self, net: &Network) -> Result<ResolvedPlan> {
+        let names = net.quantized_layer_names();
+        if names.is_empty() {
+            bail!("{}: network has no quantized layers to plan", net.name);
+        }
+        let mut assignments = Vec::with_capacity(names.len());
+        for name in &names {
+            let fmt = self.format_for(name).ok_or_else(|| {
+                anyhow!(
+                    "plan {self} leaves layer {name:?} of {} unassigned (add `*=<format>` as a default)",
+                    net.name
+                )
+            })?;
+            assignments.push((name.clone(), fmt));
+        }
+        for r in &self.rules {
+            if r.pattern != "*" && !names.iter().any(|n| *n == r.pattern) {
+                bail!(
+                    "plan rule {:?} matches no quantized layer of {} (layers: {})",
+                    r.pattern,
+                    net.name,
+                    names.join(", ")
+                );
+            }
+        }
+        Ok(ResolvedPlan { assignments })
+    }
+}
+
+impl fmt::Display for Plan {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "plan:")?;
+        for (i, r) in self.rules.iter().enumerate() {
+            if i > 0 {
+                write!(f, ",")?;
+            }
+            write!(f, "{}={}", r.pattern, r.fmt.id())?;
+        }
+        Ok(())
+    }
+}
+
+/// A plan resolved against one network: the format of every named
+/// quantized layer, in execution order.  This is what the engine's
+/// per-layer quantizer table and [`crate::hw::plan_speedup`] consume.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ResolvedPlan {
+    /// `(layer name, format)` per quantized layer, in network order.
+    pub assignments: Vec<(String, Format)>,
+}
+
+impl ResolvedPlan {
+    /// The assigned format of `layer`, if it is a quantized layer.
+    pub fn format_for(&self, layer: &str) -> Option<Format> {
+        self.assignments
+            .iter()
+            .find(|(n, _)| n == layer)
+            .map(|(_, f)| *f)
+    }
+
+    /// `Some(fmt)` when every layer resolved to the same format — the
+    /// gate for single-format backends (the AOT/PJRT executables take
+    /// one runtime `fmt` vector).
+    pub fn uniform(&self) -> Option<Format> {
+        let (_, first) = self.assignments.first()?;
+        self.assignments
+            .iter()
+            .all(|(_, f)| f == first)
+            .then_some(*first)
+    }
+}
+
+impl fmt::Display for ResolvedPlan {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        for (i, (name, fmt)) in self.assignments.iter().enumerate() {
+            if i > 0 {
+                write!(f, ",")?;
+            }
+            write!(f, "{name}={}", fmt.id())?;
+        }
+        Ok(())
+    }
+}
+
+/// What a session / driver executes under: one format for every layer
+/// (the paper's §2.2 setting) or a per-layer [`Plan`].  The parse
+/// spelling is either a bare format id (`float:m7e6`) or the
+/// `plan:...` syntax, so existing `net@format` session keys and CLI
+/// flags keep their meaning unchanged.
+#[derive(Clone, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum PrecisionSpec {
+    /// One format for the whole network.
+    Uniform(Format),
+    /// A per-layer plan (native engine only, unless it resolves
+    /// uniform).
+    PerLayer(Plan),
+}
+
+impl PrecisionSpec {
+    /// Parse a bare format id or a `plan:...` string.
+    pub fn parse(s: &str) -> Result<PrecisionSpec> {
+        if s.starts_with("plan:") {
+            Ok(PrecisionSpec::PerLayer(Plan::parse(s)?))
+        } else {
+            Ok(PrecisionSpec::Uniform(Format::parse(s)?))
+        }
+    }
+
+    /// Stable identifier in the parse spelling (`float:m7e6` /
+    /// `plan:...`); also the [`Display`](fmt::Display) form.
+    pub fn id(&self) -> String {
+        match self {
+            PrecisionSpec::Uniform(f) => f.id(),
+            PrecisionSpec::PerLayer(p) => p.id(),
+        }
+    }
+
+    /// Resolve to a per-layer assignment on `net`.  Uniform specs
+    /// resolve to every quantized layer (and never fail); plans
+    /// validate per [`Plan::resolve`].
+    pub fn resolve(&self, net: &Network) -> Result<ResolvedPlan> {
+        match self {
+            PrecisionSpec::Uniform(f) => Ok(ResolvedPlan {
+                assignments: net
+                    .quantized_layer_names()
+                    .into_iter()
+                    .map(|n| (n, *f))
+                    .collect(),
+            }),
+            PrecisionSpec::PerLayer(p) => p.resolve(net),
+        }
+    }
+
+    /// The single format this spec runs under on `net`, for backends
+    /// that take one runtime format vector (PJRT).  Uniform specs pass
+    /// through unresolved; a plan qualifies iff its resolved assignment
+    /// is uniform.
+    pub fn resolved_uniform(&self, net: &Network) -> Result<Format> {
+        match self {
+            PrecisionSpec::Uniform(f) => Ok(*f),
+            PrecisionSpec::PerLayer(p) => p.resolve(net)?.uniform().ok_or_else(|| {
+                anyhow!(
+                    "{}: per-layer plan is not uniform — single-format backends (PJRT) cannot \
+                     execute it; use the native engine",
+                    self.id()
+                )
+            }),
+        }
+    }
+
+    /// `Some(fmt)` for specs that are syntactically uniform (a bare
+    /// format, or the single-wildcard plan) without needing a network.
+    pub fn uniform_format(&self) -> Option<Format> {
+        match self {
+            PrecisionSpec::Uniform(f) => Some(*f),
+            PrecisionSpec::PerLayer(p) => p.uniform_format(),
+        }
+    }
+}
+
+impl fmt::Display for PrecisionSpec {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            PrecisionSpec::Uniform(x) => write!(f, "{}", x.id()),
+            PrecisionSpec::PerLayer(p) => write!(f, "{p}"),
+        }
+    }
+}
+
+impl From<Format> for PrecisionSpec {
+    fn from(f: Format) -> PrecisionSpec {
+        PrecisionSpec::Uniform(f)
+    }
+}
+
+impl From<&Format> for PrecisionSpec {
+    fn from(f: &Format) -> PrecisionSpec {
+        PrecisionSpec::Uniform(*f)
+    }
+}
+
+impl From<Plan> for PrecisionSpec {
+    fn from(p: Plan) -> PrecisionSpec {
+        PrecisionSpec::PerLayer(p)
+    }
+}
+
+impl From<&Plan> for PrecisionSpec {
+    fn from(p: &Plan) -> PrecisionSpec {
+        PrecisionSpec::PerLayer(p.clone())
+    }
+}
+
+impl From<&PrecisionSpec> for PrecisionSpec {
+    fn from(s: &PrecisionSpec) -> PrecisionSpec {
+        s.clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::fixtures::{tiny_conv_network, tiny_network};
+    use crate::testing::prop::{run_prop, Gen};
+
+    #[test]
+    fn uniform_plan_shape_and_id() {
+        let p = Plan::uniform(Format::float(7, 6));
+        assert_eq!(p.id(), "plan:*=float:m7e6");
+        assert_eq!(p.uniform_format(), Some(Format::float(7, 6)));
+        assert_eq!(p.format_for("anything"), Some(Format::float(7, 6)));
+        assert_eq!(Plan::parse(&p.id()).unwrap(), p);
+    }
+
+    #[test]
+    fn parse_display_roundtrip_explicit() {
+        let s = "plan:conv1=float:m4e5,conv2=fixed:l2r12,*=float:m7e6";
+        let p = Plan::parse(s).unwrap();
+        assert_eq!(p.to_string(), s);
+        assert_eq!(Plan::parse(&p.to_string()).unwrap(), p);
+        assert_eq!(p.format_for("conv1"), Some(Format::float(4, 5)));
+        assert_eq!(p.format_for("conv2"), Some(Format::fixed(2, 12)));
+        // first-match-wins: unknown names fall to the wildcard
+        assert_eq!(p.format_for("fc9"), Some(Format::float(7, 6)));
+        assert_eq!(p.uniform_format(), None);
+    }
+
+    #[test]
+    fn parse_rejects_malformed() {
+        for bad in [
+            "",
+            "plan:",
+            "plan",
+            "conv1=float:m4e5",             // missing plan: prefix
+            "plan:conv1",                   // no '='
+            "plan:=float:m7e6",             // empty pattern
+            "plan:conv1=decimal:x1y2",      // bad format
+            "plan:conv1=float:m99e9",       // out-of-range format
+            "plan:a=float:m7e6,a=fixed:l8r8", // duplicate pattern
+            "plan:*=float:m7e6,a=fixed:l8r8", // unreachable after wildcard
+            "plan:a*b=float:m7e6",          // '*' inside a name
+            "plan:a=float:m7e6,",           // trailing empty rule
+        ] {
+            assert!(Plan::parse(bad).is_err(), "accepted {bad:?}");
+        }
+    }
+
+    /// Regression mirroring the PR 2 `fixed:l100r100` case for plan
+    /// syntax: an out-of-range format inside a plan (or a plan session
+    /// spec) must be `Err`, never an assert panic in `Format::fixed`.
+    #[test]
+    fn plan_rejects_out_of_range_fixed_format() {
+        assert!(Plan::parse("plan:*=fixed:l100r100").is_err());
+        assert!(Plan::parse("plan:c1=fixed:l100r100,*=float:m7e6").is_err());
+        assert!(PrecisionSpec::parse("plan:*=fixed:l65r0").is_err());
+        // the full accepted constructor range still parses
+        assert_eq!(
+            Plan::parse("plan:*=fixed:l64r64").unwrap().uniform_format(),
+            Some(Format::fixed(64, 64))
+        );
+    }
+
+    #[test]
+    fn spec_parse_dispatches_on_prefix() {
+        assert_eq!(
+            PrecisionSpec::parse("float:m7e6").unwrap(),
+            PrecisionSpec::Uniform(Format::float(7, 6))
+        );
+        let s = PrecisionSpec::parse("plan:*=fixed:l8r8").unwrap();
+        assert_eq!(s, PrecisionSpec::PerLayer(Plan::uniform(Format::fixed(8, 8))));
+        assert_eq!(s.uniform_format(), Some(Format::fixed(8, 8)));
+        // a uniform plan stays a plan through parse (faithful round-trip)
+        assert_eq!(PrecisionSpec::parse(&s.id()).unwrap(), s);
+        assert!(PrecisionSpec::parse("warp:x1y2").is_err());
+    }
+
+    #[test]
+    fn resolve_covers_and_validates_layers() {
+        let net = tiny_conv_network(4); // quantized layers: c1, fc
+        assert_eq!(net.quantized_layer_names(), vec!["c1", "fc"]);
+
+        let p = Plan::parse("plan:c1=float:m4e5,*=fixed:l8r8").unwrap();
+        let r = p.resolve(&net).unwrap();
+        assert_eq!(
+            r.assignments,
+            vec![
+                ("c1".to_string(), Format::float(4, 5)),
+                ("fc".to_string(), Format::fixed(8, 8)),
+            ]
+        );
+        assert_eq!(r.uniform(), None);
+        assert_eq!(r.format_for("fc"), Some(Format::fixed(8, 8)));
+        assert_eq!(r.to_string(), "c1=float:m4e5,fc=fixed:l8r8");
+
+        // uncovered layer: error (no wildcard)
+        assert!(Plan::parse("plan:c1=float:m4e5").unwrap().resolve(&net).is_err());
+        // rule naming no real layer: error (typo protection)
+        assert!(Plan::parse("plan:conv9=float:m4e5,*=fixed:l8r8")
+            .unwrap()
+            .resolve(&net)
+            .is_err());
+
+        // explicit all-layers plan with equal formats resolves uniform
+        let q = Plan::parse("plan:c1=float:m7e6,fc=float:m7e6").unwrap();
+        assert_eq!(q.resolve(&net).unwrap().uniform(), Some(Format::float(7, 6)));
+        // ...and the PJRT gate accepts exactly that shape
+        let spec = PrecisionSpec::PerLayer(q);
+        assert_eq!(spec.resolved_uniform(&net).unwrap(), Format::float(7, 6));
+        let mixed = PrecisionSpec::parse("plan:c1=float:m4e5,*=fixed:l8r8").unwrap();
+        assert!(mixed.resolved_uniform(&net).is_err());
+    }
+
+    #[test]
+    fn uniform_spec_resolves_on_any_network() {
+        let net = tiny_network(4); // dense-only fixture
+        let spec = PrecisionSpec::Uniform(Format::fixed(4, 4));
+        let r = spec.resolve(&net).unwrap();
+        assert_eq!(r.assignments, vec![("fc".to_string(), Format::fixed(4, 4))]);
+        assert_eq!(r.uniform(), Some(Format::fixed(4, 4)));
+    }
+
+    fn arb_format(g: &mut Gen) -> Format {
+        if g.bool() {
+            Format::float(g.usize_in(0, 23) as u32, g.usize_in(1, 8) as u32)
+        } else {
+            Format::fixed(g.usize_in(0, 64) as u32, g.usize_in(0, 64) as u32)
+        }
+    }
+
+    /// Plan (and PrecisionSpec) Display ⇄ parse round-trips for random
+    /// valid rule lists over the whole constructor-valid format range.
+    #[test]
+    fn prop_plan_roundtrip() {
+        const NAMES: [&str; 6] = ["conv1", "conv2", "inc1.1x1", "inc1.proj", "fc1", "fc2"];
+        run_prop("plan_roundtrip", 200, |g| {
+            let n = g.usize_in(1, NAMES.len());
+            let mut pool: Vec<&str> = NAMES.to_vec();
+            let mut rules = Vec::new();
+            for _ in 0..n {
+                let i = g.usize_in(0, pool.len() - 1);
+                rules.push((pool.swap_remove(i).to_string(), arb_format(g)));
+            }
+            let mut plan = Plan::explicit(rules).unwrap();
+            if g.bool() {
+                // append a wildcard default
+                let mut with_star = plan
+                    .rules
+                    .iter()
+                    .map(|r| (r.pattern.clone(), r.fmt))
+                    .collect::<Vec<_>>();
+                with_star.push(("*".to_string(), arb_format(g)));
+                plan = Plan::explicit(with_star).unwrap();
+            }
+            assert_eq!(Plan::parse(&plan.id()).unwrap(), plan);
+            let spec = PrecisionSpec::PerLayer(plan.clone());
+            assert_eq!(PrecisionSpec::parse(&spec.id()).unwrap(), spec);
+        });
+    }
+
+    /// Format Display is the human form, `id()` the parse form; the
+    /// parse form round-trips for every constructor-valid format.
+    #[test]
+    fn prop_format_id_roundtrip() {
+        run_prop("format_id_roundtrip", 300, |g| {
+            let f = arb_format(g);
+            assert_eq!(Format::parse(&f.id()).unwrap(), f);
+            let spec = PrecisionSpec::Uniform(f);
+            assert_eq!(PrecisionSpec::parse(&spec.id()).unwrap(), spec);
+        });
+    }
+
+    /// Malformed plan strings must return `Err` — never panic — for
+    /// arbitrary mutations of valid plans and for random garbage.
+    #[test]
+    fn prop_malformed_plans_err_not_panic() {
+        const CHARS: [char; 14] =
+            ['p', 'l', 'a', 'n', ':', '=', ',', '*', 'm', 'e', 'r', '1', '@', '.'];
+        run_prop("malformed_plan_err", 300, |g| {
+            let len = g.usize_in(0, 40);
+            let s: String = (0..len).map(|_| *g.choose(&CHARS)).collect();
+            // must return (Ok or Err), not panic
+            let _ = Plan::parse(&s);
+            let _ = PrecisionSpec::parse(&s);
+            // mutated valid plan: truncate at a random byte boundary
+            let valid = "plan:conv1=float:m4e5,conv2=fixed:l2r12,*=float:m7e6";
+            let cut = g.usize_in(0, valid.len());
+            let _ = Plan::parse(&valid[..cut]);
+        });
+    }
+}

@@ -16,4 +16,4 @@ pub mod mac;
 pub mod speedup;
 
 pub use mac::{area, delay, power, MacCost};
-pub use speedup::{energy_savings, speedup, Efficiency};
+pub use speedup::{energy_savings, plan_energy_savings, plan_speedup, speedup, Efficiency};

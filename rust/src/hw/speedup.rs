@@ -10,8 +10,9 @@
 //! units cannot shrink — calibrated so F(7,6) lands at the paper's
 //! 3.4× energy savings while its speedup is 7.2×.
 
-use crate::formats::Format;
+use crate::formats::{Format, ResolvedPlan};
 use crate::hw::mac;
+use crate::nn::Network;
 
 /// Fraction of per-op energy that scales with MAC area; the remainder
 /// is fixed platform overhead.  See module docs.
@@ -38,6 +39,46 @@ pub fn energy_savings(fmt: &Format) -> f64 {
     let c = mac::cost(fmt);
     let rel_energy = ENERGY_AREA_FRACTION * c.power + (1.0 - ENERGY_AREA_FRACTION);
     1.0 / rel_energy
+}
+
+/// MAC-weighted throughput gain of a per-layer plan over the SP-float
+/// baseline: layer `i` contributes its per-sample MAC count at its
+/// format's [`speedup`]; the aggregate is total MACs over total
+/// weighted time (harmonic composition — a wide, slow layer dominates
+/// exactly as it would on hardware provisioned per layer).  A uniform
+/// assignment reduces to `speedup(fmt)`.
+///
+/// Panics if `plan` was not resolved against `net` (a layer the network
+/// has but the plan does not cover) — the same fail-loudly rule as the
+/// engine's quantizer table, never a silently wrong estimate.
+pub fn plan_speedup(net: &Network, plan: &ResolvedPlan) -> f64 {
+    plan_harmonic(net, plan, speedup)
+}
+
+/// MAC-weighted energy savings of a per-layer plan over the SP-float
+/// baseline (same harmonic composition as [`plan_speedup`], over
+/// [`energy_savings`]).  Panics on a plan/network mismatch, like
+/// [`plan_speedup`].
+pub fn plan_energy_savings(net: &Network, plan: &ResolvedPlan) -> f64 {
+    plan_harmonic(net, plan, energy_savings)
+}
+
+fn plan_harmonic(net: &Network, plan: &ResolvedPlan, gain: impl Fn(&Format) -> f64) -> f64 {
+    let macs = net.quantized_layer_macs();
+    let total: f64 = macs.iter().map(|(_, m)| *m as f64).sum();
+    if total == 0.0 {
+        return 1.0;
+    }
+    let weighted: f64 = macs
+        .iter()
+        .map(|(name, m)| {
+            let fmt = plan.format_for(name).unwrap_or_else(|| {
+                panic!("plan was not resolved against {}: layer {name:?} unassigned", net.name)
+            });
+            *m as f64 / gain(&fmt)
+        })
+        .sum();
+    total / weighted
 }
 
 pub fn efficiency(fmt: &Format) -> Efficiency {
@@ -79,6 +120,54 @@ mod tests {
             assert!(s >= last * 0.9999, "m={m}: {s} < {last}");
             last = s;
         }
+    }
+
+    #[test]
+    fn plan_speedup_is_mac_weighted() {
+        use crate::formats::{Plan, PrecisionSpec};
+        let net = crate::testing::fixtures::tiny_conv_network(4);
+        // fixture MAC ledger: c1 = 4*4*3*3*1*2, fc = 8*3
+        assert_eq!(
+            net.quantized_layer_macs(),
+            vec![("c1".to_string(), 288), ("fc".to_string(), 24)]
+        );
+        // a uniform assignment reduces to the format's own speedup
+        let f = Format::float(7, 6);
+        let uni = PrecisionSpec::Uniform(f).resolve(&net).unwrap();
+        assert!((plan_speedup(&net, &uni) - speedup(&f)).abs() < 1e-9);
+        // a mixed plan lands strictly between its formats' speedups
+        let mixed = Plan::parse("plan:c1=float:m4e5,*=float:m10e6")
+            .unwrap()
+            .resolve(&net)
+            .unwrap();
+        let s = plan_speedup(&net, &mixed);
+        let (lo, hi) = (speedup(&Format::float(10, 6)), speedup(&Format::float(4, 5)));
+        assert!(s > lo && s < hi, "expected {lo} < {s} < {hi}");
+        // hand-computed harmonic composition over the MAC ledger
+        let want = 312.0 / (288.0 / hi + 24.0 / lo);
+        assert!((s - want).abs() < 1e-9);
+        // the energy aggregate composes the same way and reduces to the
+        // format's own figure under a uniform assignment
+        assert!((plan_energy_savings(&net, &uni) - energy_savings(&f)).abs() < 1e-9);
+        let e = plan_energy_savings(&net, &mixed);
+        let (elo, ehi) = (
+            energy_savings(&Format::float(10, 6)),
+            energy_savings(&Format::float(4, 5)),
+        );
+        assert!(e > elo && e < ehi, "expected {elo} < {e} < {ehi}");
+    }
+
+    /// A plan that was not resolved against the network must panic —
+    /// never produce a silently wrong baseline-weighted estimate.
+    #[test]
+    #[should_panic(expected = "not resolved against")]
+    fn plan_speedup_panics_on_network_mismatch() {
+        use crate::formats::ResolvedPlan;
+        let net = crate::testing::fixtures::tiny_conv_network(4);
+        let foreign = ResolvedPlan {
+            assignments: vec![("conv9".to_string(), Format::float(7, 6))],
+        };
+        let _ = plan_speedup(&net, &foreign);
     }
 
     #[test]

@@ -4,7 +4,9 @@
 //! Networks”* (Hill et al., 2018) as a three-layer Rust + JAX + Pallas
 //! system.  This crate is Layer 3: everything on the request path.
 //!
-//! * [`formats`]    — the customized-precision design space (§2.2)
+//! * [`formats`]    — the customized-precision design space (§2.2) +
+//!                    per-layer mixed-precision plans (`PrecisionSpec`,
+//!                    DESIGN.md §Mixed precision)
 //! * [`numerics`]   — softfloat/softfixed quantizers + MAC chains (§2.2, Fig 8)
 //! * [`hw`]         — MAC delay/area/power model, speedup/energy (§2.3, Figs 4/5/7)
 //! * [`tensor`]     — minimal NDArray + `.prt` container IO
@@ -17,7 +19,8 @@
 //!                    multi-model `Gateway` (DESIGN.md §Serving)
 //! * [`coordinator`]— sweep orchestrator: job queue, worker pool, cache
 //! * [`search`]     — the paper's §3.3 contribution: last-layer R² →
-//!                    linear accuracy model → model+N-samples search
+//!                    linear accuracy model → model+N-samples search,
+//!                    plus the greedy per-layer `plan_search`
 //! * [`eval`]       — accuracy metrics + design-space sweep driver
 //! * [`figures`]    — regenerates every paper figure's data series
 //! * [`util`]       — PRNG, mini-JSON, CLI parsing, timing (offline-build

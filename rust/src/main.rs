@@ -5,6 +5,7 @@
 //!   eval     --net N --format F  accuracy of one configuration
 //!   sweep    --net N             design-space sweep (Fig 6 data)
 //!   search   --net N             model-driven precision search (§3.3)
+//!   plan     --net N             greedy per-layer mixed-precision search
 //!   trace    --net N             accumulation trace (Fig 8 data)
 //!   figure   <fig4..fig11>       regenerate one paper figure's series
 //!   figures                      regenerate all figures into --out
@@ -25,10 +26,12 @@ use precis::coordinator::Coordinator;
 use precis::eval::sweep::EvalOptions;
 use precis::eval::{accuracy, sweep_design_space};
 use precis::figures;
-use precis::formats::{self, Format};
+use precis::formats::{self, Format, PrecisionSpec};
 use precis::nn::Zoo;
-use precis::search::{exhaustive_search, search, SearchSpec};
-use precis::serving::{drive_closed_loop, warm_up, BackendKind, Gateway, SessionOptions};
+use precis::search::{default_ladder, exhaustive_search, plan_search, search, PlanSearchSpec, SearchSpec};
+use precis::serving::{
+    drive_closed_loop, split_session_specs, warm_up, BackendKind, Gateway, SessionOptions,
+};
 use precis::util::cli::Args;
 use precis::util::timer::Timer;
 
@@ -40,15 +43,17 @@ fn main() {
     }
 }
 
-const USAGE: &str = "usage: repro <info|eval|sweep|search|trace|figure|figures|serve|bench-sweep> [flags]
+const USAGE: &str = "usage: repro <info|eval|sweep|search|plan|trace|figure|figures|serve|bench-sweep> [flags]
   repro info
-  repro eval   --net lenet5 --format float:m7e6 [--samples 128] [--backend native|pjrt]
+  repro eval   --net lenet5 --format float:m7e6|plan:... [--samples 128] [--backend native|pjrt]
   repro sweep  --net lenet5 [--samples 128] [--stride 1]
   repro search --net lenet5 [--target 0.99] [--refine 2] [--kind float|fixed|both]
+  repro plan   <net> [--target 0.99] [--validate 4]
+               [--ladder float:m23e8,float:m7e6,...]
   repro trace  --net alexnet-mini [--sample 0]
   repro figure <fig4|fig5|fig6|fig7|fig8|fig9|fig10|fig11> [--net N]
   repro figures [--out results]
-  repro serve  --sessions lenet5@float:m7e6,alexnet-mini@fixed:l8r8
+  repro serve  --sessions lenet5@float:m7e6,lenet5@plan:conv1=float:m4e5,*=fixed:l8r8
                [--requests 256] [--clients 8] [--wait-ms 5] [--backend native|pjrt|auto]
   repro bench-sweep --net lenet5 [--stride 1]
 common: --artifacts DIR --out DIR --samples N --workers W --seed S";
@@ -95,21 +100,37 @@ fn run(raw: &[String]) -> Result<()> {
         }
         "eval" => {
             let net_name = args.get("net").context("--net required")?;
-            let fmt = Format::parse(args.get("format").context("--format required")?)?;
+            let spec = PrecisionSpec::parse(args.get("format").context("--format required")?)?;
             let zoo = Zoo::load(&artifacts)?;
             let net = zoo.network(net_name)?;
+            let resolved = spec.resolve(&net)?;
             let t = Timer::start();
             let acc = match args.get_or("backend", "native") {
-                "native" => accuracy(&net, &fmt, samples)?,
-                "pjrt" => pjrt_eval(&net, &artifacts, &fmt, samples, zoo.batch)?,
+                "native" => accuracy(&net, &spec, samples)?,
+                // the AOT executables take one fmt vector: any spec
+                // that resolves uniform runs on PJRT
+                "pjrt" => {
+                    let fmt = spec.resolved_uniform(&net)?;
+                    pjrt_eval(&net, &artifacts, &fmt, samples, zoo.batch)?
+                }
                 b => bail!("unknown backend {b:?}"),
             };
+            // uniform specs report the format's own figures; plans the
+            // MAC-weighted aggregates
+            let (speedup, energy) = match spec.uniform_format() {
+                Some(fmt) => (precis::hw::speedup(&fmt), precis::hw::energy_savings(&fmt)),
+                None => (
+                    precis::hw::plan_speedup(&net, &resolved),
+                    precis::hw::plan_energy_savings(&net, &resolved),
+                ),
+            };
             println!(
-                "{net_name} @ {fmt}: top-{} = {:.4}  (speedup {:.2}x, energy {:.2}x, {} samples, {:.1}s)",
+                "{net_name} @ {}: top-{} = {:.4}  (speedup {:.2}x, energy {:.2}x, {} samples, {:.1}s)",
+                spec.id(),
                 net.topk,
                 acc,
-                precis::hw::speedup(&fmt),
-                precis::hw::energy_savings(&fmt),
+                speedup,
+                energy,
                 samples.min(net.eval_len()),
                 t.elapsed_s()
             );
@@ -147,6 +168,58 @@ fn run(raw: &[String]) -> Result<()> {
                 ex.chosen.map(|c| c.id()), ex.speedup, ex.measured_norm_acc, ex.sample_forwards);
             println!("search-cost reduction: {:.0}x  ({:.1}s total)",
                 ex.sample_forwards as f64 / out.sample_forwards.max(1) as f64, t.elapsed_s());
+        }
+        "plan" => {
+            // greedy per-layer mixed-precision search (DESIGN.md §Mixed
+            // precision): probe-ranked descent, survivors validated
+            let net_name = args
+                .get("net")
+                .or_else(|| args.positional().get(1).map(|s| s.as_str()))
+                .context("--net (or a positional network name) required")?;
+            let target = args.get_f64("target", 0.99)?;
+            let validate = args.get_usize("validate", 4)?;
+            let ladder: Vec<Format> = match args.get("ladder") {
+                Some(list) => list
+                    .split(',')
+                    .map(|s| Format::parse(s.trim()))
+                    .collect::<Result<_>>()?,
+                None => default_ladder(),
+            };
+            let coord = load_coord()?;
+            let net = coord.zoo.network(net_name)?;
+            let model = figures::cross_validated_model(&coord, net_name, &opts, seed)?;
+            let spec = PlanSearchSpec {
+                ladder,
+                target,
+                max_validations: validate.max(1),
+                opts,
+                seed,
+            };
+            let t = Timer::start();
+            let out = plan_search(&net, &spec, &model)?;
+            coord.cache.flush()?;
+
+            println!("{:<16} {:>14} {:>10} {:>10}", "layer", "format", "macs", "speedup");
+            let resolved = out.plan.resolve(&net)?;
+            for (name, macs) in net.quantized_layer_macs() {
+                let fmt = resolved.format_for(&name).expect("resolved plan covers every layer");
+                println!(
+                    "{name:<16} {:>14} {macs:>10} {:>9.2}x",
+                    fmt.id(),
+                    precis::hw::speedup(&fmt)
+                );
+            }
+            println!("\nchosen plan  : {}", out.plan.id());
+            println!("serve it as  : {net_name}@{}", out.plan.id());
+            println!(
+                "accuracy     : predicted {:.4}, measured {:.4} (target {:.2})",
+                out.predicted_norm_acc, out.measured_norm_acc, target
+            );
+            println!("hw speedup   : {:.2}x (MAC-weighted over the plan)", out.speedup);
+            println!(
+                "search cost  : {} probe plans + {} validations vs {} exhaustive per-layer plans ({:.1}s)",
+                out.plans_probed, out.validations_spent, out.exhaustive_plans, t.elapsed_s()
+            );
         }
         "trace" => {
             let net_name = args.get_or("net", "alexnet-mini");
@@ -209,8 +282,8 @@ fn run(raw: &[String]) -> Result<()> {
                 max_wait: Duration::from_millis(wait_ms as u64),
             });
             let mut keys = Vec::new();
-            for spec in specs.split(',') {
-                keys.push(gateway.open_spec(spec.trim())?);
+            for spec in split_session_specs(&specs) {
+                keys.push(gateway.open_spec(&spec)?);
             }
             println!(
                 "gateway: {} session(s) [{}], backend {}, {n_clients} closed-loop clients, {n_requests} requests",

@@ -12,21 +12,152 @@
 //! * global avgpool: serial per-add-rounded accumulation over row-major
 //!   spatial positions, then one rounded multiply by q(1/HW).
 //!
+//! The forward pass consumes a resolved per-layer quantizer table
+//! ([`QuantTable`]) rather than a single format: each conv/dense (and
+//! inception branch) runs under its assigned quantizer, so per-layer
+//! mixed-precision plans and the legacy uniform setting execute the
+//! SAME code path — a uniform table makes every entry the same
+//! quantizer, which is the bit-exactness anchor (DESIGN.md §Mixed
+//! precision).
+//!
 //! The engine owns scratch buffers so a sweep makes **zero heap
-//! allocations per forward** after warm-up, and the GEMM at its core is
-//! the M/N cache-blocked [`gemm_q`] with a strictly serial k chain per
-//! output element (§Perf L3 target; DESIGN.md §4).
+//! allocations per forward** after warm-up (tables are resolved once
+//! per spec by the backend, not per forward), and the GEMM at its core
+//! is the M/N cache-blocked [`gemm_q`] with a strictly serial k chain
+//! per output element (§Perf L3 target; DESIGN.md §4).
 //!
 //! `Engine` is crate-private: all consumers — offline sweeps and the
 //! request path alike — run it through `serving::NativeBackend`, the
 //! native implementation of the one execution substrate
 //! (DESIGN.md §Serving).
 
-use crate::formats::Format;
+use anyhow::{bail, Result};
+
+use crate::formats::{Format, PrecisionSpec};
 use crate::nn::layers::Layer;
 use crate::nn::network::Network;
 use crate::numerics::Quantizer;
 use crate::tensor::Tensor;
+
+/// The engine-facing form of a [`PrecisionSpec`]: one prebuilt
+/// [`Quantizer`] per layer position, resolved and validated against a
+/// network ONCE and then applied per forward — so per-layer plans cost
+/// nothing on the hot path and the "zero heap allocations per forward"
+/// contract survives the mixed-precision refactor.
+///
+/// Assignment semantics (DESIGN.md §Mixed precision): named quantized
+/// layers (conv / dense / inception branch convs) use their assigned
+/// format; **unnamed** quantized ops — the input staging pass and
+/// global average pooling — inherit the format of the next named layer
+/// downstream, whose operand they compute (for an inception module,
+/// its first branch).  Exact ops (relu / maxpool / flatten) quantize
+/// nothing.  Under a uniform assignment every entry is the same
+/// quantizer, which is why a uniform plan is bit-identical to the
+/// legacy single-format forward.
+pub struct QuantTable {
+    /// quantizer for the input staging pass (the first named layer's)
+    input: Quantizer,
+    /// one entry per network layer, in execution order
+    per_layer: Vec<LayerQuant>,
+}
+
+enum LayerQuant {
+    /// conv / dense: the layer's own quantizer; unnamed quantized ops:
+    /// the inherited downstream quantizer; exact ops: unused
+    One(Quantizer),
+    /// inception: per-branch quantizers in concat order
+    Branches(Vec<Quantizer>),
+}
+
+impl QuantTable {
+    /// Resolve `spec` against `net` (validating plan coverage) and
+    /// prebuild every layer's quantizer.  Uniform specs never fail —
+    /// the legacy single-format behaviour for any network shape.
+    pub fn resolve(net: &Network, spec: &PrecisionSpec) -> Result<QuantTable> {
+        match spec {
+            PrecisionSpec::Uniform(f) => Ok(QuantTable::uniform_for(net, f)),
+            PrecisionSpec::PerLayer(p) => {
+                let resolved = p.resolve(net)?;
+                let fmt_of = |name: &str| -> Quantizer {
+                    let f = resolved
+                        .format_for(name)
+                        .unwrap_or_else(|| panic!("resolved plan misses layer {name:?}"));
+                    Quantizer::new(&f)
+                };
+                let mut per_layer: Vec<LayerQuant> = Vec::with_capacity(net.layers.len());
+                // reverse pass: unnamed quantized ops inherit the next
+                // named layer downstream (see type docs).  `None` means
+                // no named layer follows — fatal for an op that
+                // actually quantizes (gavgpool), harmless for exact ops
+                // whose table entry is never read.
+                let mut next: Option<Quantizer> = None;
+                for layer in net.layers.iter().rev() {
+                    let lq = match layer {
+                        Layer::Conv { name, .. } | Layer::Dense { name, .. } => {
+                            let q = fmt_of(name);
+                            next = Some(q);
+                            LayerQuant::One(q)
+                        }
+                        Layer::Inception { .. } => {
+                            let qs: Vec<Quantizer> = layer
+                                .inception_branches()
+                                .iter()
+                                .map(|b| match b {
+                                    Layer::Conv { name, .. } => fmt_of(name),
+                                    _ => unreachable!("inception branches are convs"),
+                                })
+                                .collect();
+                            next = Some(qs[0]);
+                            LayerQuant::Branches(qs)
+                        }
+                        Layer::GAvgPool => {
+                            let Some(q) = next else {
+                                bail!(
+                                    "{}: global average pool has no named quantized layer \
+                                     downstream to inherit a format from — per-layer plans \
+                                     need one (DESIGN.md §Mixed precision)",
+                                    net.name
+                                );
+                            };
+                            LayerQuant::One(q)
+                        }
+                        // exact ops never consult their entry; the
+                        // placeholder is unreachable by construction
+                        _ => LayerQuant::One(
+                            next.unwrap_or_else(|| Quantizer::new(&Format::SINGLE)),
+                        ),
+                    };
+                    per_layer.push(lq);
+                }
+                per_layer.reverse();
+                let Some(input) = next else {
+                    // unreachable: p.resolve() errors when the network
+                    // has no quantized layers; kept as a hard error so
+                    // a future refactor cannot silently mis-quantize
+                    bail!("{}: no quantized layer to derive the input format from", net.name);
+                };
+                Ok(QuantTable { input, per_layer })
+            }
+        }
+    }
+
+    /// The table a single format induces: the same quantizer
+    /// everywhere.  Infallible (no names to validate).
+    pub fn uniform_for(net: &Network, fmt: &Format) -> QuantTable {
+        let q = Quantizer::new(fmt);
+        let per_layer = net
+            .layers
+            .iter()
+            .map(|l| match l {
+                Layer::Inception { .. } => {
+                    LayerQuant::Branches(vec![q; l.inception_branches().len()])
+                }
+                _ => LayerQuant::One(q),
+            })
+            .collect();
+        QuantTable { input: q, per_layer }
+    }
+}
 
 /// Reusable forward-pass executor (one per worker thread).
 pub struct Engine {
@@ -76,10 +207,10 @@ impl Engine {
         }
     }
 
-    /// Run the network on a batch `x` of shape (B, H, W, C); returns
-    /// logits (B, classes).
-    pub fn forward(&mut self, net: &Network, x: &Tensor, fmt: &Format) -> Tensor {
-        let t = self.forward_prefix(net, x, fmt, net.layers.len());
+    /// Run the network on a batch `x` of shape (B, H, W, C) under a
+    /// resolved per-layer quantizer table; returns logits (B, classes).
+    pub fn forward(&mut self, net: &Network, x: &Tensor, table: &QuantTable) -> Tensor {
+        let t = self.forward_prefix(net, x, table, net.layers.len());
         assert_eq!(
             t.shape().len(),
             2,
@@ -92,24 +223,38 @@ impl Engine {
 
     /// Run only the first `n_layers` layers; returns the intermediate
     /// activation tensor ((B,H,W,C) or (B,F)).  Used by the Fig 8
-    /// accumulation study to tap a convolution's input.
-    pub fn forward_prefix(&mut self, net: &Network, x: &Tensor, fmt: &Format, n_layers: usize) -> Tensor {
-        let q = Quantizer::new(fmt);
+    /// accumulation study to tap a convolution's input.  Layer
+    /// quantizers come from the table's full-network resolution, so a
+    /// prefix run quantizes each executed layer exactly as the full
+    /// forward would.
+    pub fn forward_prefix(
+        &mut self,
+        net: &Network,
+        x: &Tensor,
+        table: &QuantTable,
+        n_layers: usize,
+    ) -> Tensor {
         let shape = x.shape();
         assert_eq!(shape.len(), 4, "input must be (B, H, W, C)");
         assert_eq!(&shape[1..], &net.input, "input shape mismatch");
+        assert_eq!(
+            table.per_layer.len(),
+            net.layers.len(),
+            "quantizer table resolved against a different network"
+        );
         let b = shape[0];
         let mut cur = ActShape::Hwc(b, net.input[0], net.input[1], net.input[2]);
 
-        // stage input into act_a, quantized
+        // stage input into act_a, quantized as the first GEMM's operand
+        let qin = table.input;
         self.act_a.clear();
         self.act_a.extend_from_slice(x.data());
         for v in self.act_a.iter_mut() {
-            *v = q.q(*v);
+            *v = qin.q(*v);
         }
 
-        for layer in net.layers.iter().take(n_layers) {
-            cur = self.apply_layer(net, layer, cur, &q);
+        for (layer, lq) in net.layers.iter().zip(&table.per_layer).take(n_layers) {
+            cur = self.apply_layer(net, layer, cur, lq);
         }
 
         let (shape, n) = match cur {
@@ -119,15 +264,23 @@ impl Engine {
         Tensor::new(shape, self.act_a[..n].to_vec()).unwrap()
     }
 
-    /// Apply one layer reading from `act_a`, leaving the result in `act_a`.
-    fn apply_layer(&mut self, net: &Network, layer: &Layer, cur: ActShape, q: &Quantizer) -> ActShape {
+    /// Apply one layer reading from `act_a`, leaving the result in
+    /// `act_a`.  `lq` is the layer's entry in the resolved quantizer
+    /// table (per-branch for inception).
+    fn apply_layer(&mut self, net: &Network, layer: &Layer, cur: ActShape, lq: &LayerQuant) -> ActShape {
         match layer {
             Layer::Conv { .. } => {
+                let LayerQuant::One(q) = lq else {
+                    panic!("conv layer with branch quantizers");
+                };
                 let out = self.conv(net, layer, cur, q, None);
                 std::mem::swap(&mut self.act_a, &mut self.act_b);
                 out
             }
             Layer::Dense { name, in_dim, out_dim } => {
+                let LayerQuant::One(q) = lq else {
+                    panic!("dense layer with branch quantizers");
+                };
                 let ActShape::Flat(b, f) = cur else {
                     panic!("dense after non-flat activation");
                 };
@@ -180,6 +333,11 @@ impl Engine {
                 let ActShape::Hwc(b, h, w, c) = cur else {
                     panic!("gavgpool on flat activation");
                 };
+                // unnamed quantized op: runs in the inherited
+                // downstream format (QuantTable docs)
+                let LayerQuant::One(q) = lq else {
+                    panic!("gavgpool with branch quantizers");
+                };
                 resize(&mut self.act_b, b * c);
                 gavgpool_q(&self.act_a, &mut self.act_b, b, h, w, c, q);
                 std::mem::swap(&mut self.act_a, &mut self.act_b);
@@ -189,7 +347,11 @@ impl Engine {
                 let ActShape::Hwc(b, h, w, c) = cur else {
                     panic!("inception on flat activation");
                 };
+                let LayerQuant::Branches(qs) = lq else {
+                    panic!("inception layer without branch quantizers");
+                };
                 let branches = layer.inception_branches();
+                assert_eq!(qs.len(), branches.len(), "branch quantizer arity");
                 let out_ch: usize = branches
                     .iter()
                     .map(|br| match br {
@@ -216,7 +378,7 @@ impl Engine {
                         std::mem::swap(&mut self.act_a, &mut self.act_b);
                         bshape = ActShape::Hwc(b, oh, ow, c);
                     }
-                    let out = self.conv(net, br, bshape, q, None);
+                    let out = self.conv(net, br, bshape, &qs[bi], None);
                     let ActShape::Hwc(_, boh, bow, bc) = out else { unreachable!() };
                     assert_eq!((boh, bow), (h, w), "inception branches must preserve HxW");
                     // scatter branch channels into the concat buffer

@@ -19,6 +19,6 @@ mod layers;
 mod network;
 
 pub(crate) use engine::Engine;
-pub use engine::{gemm_q, gemm_q_naive};
+pub use engine::{gemm_q, gemm_q_naive, QuantTable};
 pub use layers::Layer;
 pub use network::{Network, Zoo};

@@ -118,6 +118,70 @@ impl Network {
             .unwrap_or_else(|| panic!("weight {name:?} missing in {}", self.name))
     }
 
+    /// Names of the quantized (GEMM) layers in execution order — the
+    /// layers a mixed-precision plan assigns formats to.  Inception
+    /// modules contribute their four branch convolutions
+    /// (`<name>.1x1`, `.3x3`, `.5x5`, `.proj`).
+    pub fn quantized_layer_names(&self) -> Vec<String> {
+        let mut out = Vec::new();
+        for l in &self.layers {
+            match l {
+                Layer::Conv { name, .. } | Layer::Dense { name, .. } => out.push(name.clone()),
+                Layer::Inception { .. } => {
+                    for b in l.inception_branches() {
+                        if let Layer::Conv { name, .. } = b {
+                            out.push(name);
+                        }
+                    }
+                }
+                _ => {}
+            }
+        }
+        out
+    }
+
+    /// Per-sample MAC count of every quantized layer, in execution
+    /// order (the weights for `hw::plan_speedup`'s MAC-weighted
+    /// aggregate).  Tracks activation shapes with the same arithmetic
+    /// the engine uses.
+    pub fn quantized_layer_macs(&self) -> Vec<(String, usize)> {
+        let (mut h, mut w) = (self.input[0], self.input[1]);
+        let out_dim = |x: usize, k: usize, s: usize, p: usize| (x + 2 * p - k) / s + 1;
+        let mut out = Vec::new();
+        for l in &self.layers {
+            match l {
+                Layer::Conv { name, kh, kw, in_ch, out_ch, stride, pad } => {
+                    let oh = out_dim(h, *kh, *stride, *pad);
+                    let ow = out_dim(w, *kw, *stride, *pad);
+                    out.push((name.clone(), oh * ow * kh * kw * in_ch * out_ch));
+                    h = oh;
+                    w = ow;
+                }
+                Layer::Dense { name, in_dim, out_dim } => {
+                    out.push((name.clone(), in_dim * out_dim));
+                }
+                Layer::MaxPool { k, stride, pad } => {
+                    h = out_dim(h, *k, *stride, *pad);
+                    w = out_dim(w, *k, *stride, *pad);
+                }
+                Layer::GAvgPool => {
+                    h = 1;
+                    w = 1;
+                }
+                Layer::Inception { .. } => {
+                    // branches preserve HxW (stride 1, same-padding)
+                    for b in l.inception_branches() {
+                        if let Layer::Conv { name, kh, kw, in_ch, out_ch, .. } = b {
+                            out.push((name, h * w * kh * kw * in_ch * out_ch));
+                        }
+                    }
+                }
+                Layer::Relu | Layer::Flatten => {}
+            }
+        }
+        out
+    }
+
     /// Absolute path of the HLO artifact for a representation kind.
     pub fn hlo_path(&self, dir: &Path, kind: &str) -> Result<PathBuf> {
         let f = self

@@ -17,11 +17,18 @@
 //! 3. [`search`] — predict accuracy for every design, pick the fastest
 //!    one that clears the target, then (optionally) evaluate up to N
 //!    candidates for real, moving one bit at a time (§3.3 refinement).
+//! 4. [`plan_search`] — the per-layer generalization: a greedy descent
+//!    over mixed-precision [`crate::formats::Plan`]s, ranking one-layer
+//!    narrowing moves by probe-R² through the same accuracy model and
+//!    validating only the surviving plan (`ladder^layers` is far too
+//!    big to enumerate — which is the point of the fast search).
 
 mod model;
+mod plan;
 mod runner;
 
 pub use model::{collect_model_points, collect_model_points_cached, AccuracyModel, ModelPoint};
+pub use plan::{default_ladder, plan_search, PlanSearchOutcome, PlanSearchSpec};
 pub use runner::{
     exhaustive_search, predictions_from_r2s, probe_predictions, probe_r2s, search,
     select_candidates, SearchOutcome, SearchSpec,

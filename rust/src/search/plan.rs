@@ -1,0 +1,291 @@
+//! Greedy per-layer mixed-precision search.
+//!
+//! Per-layer assignment blows the design space up combinatorially
+//! (`ladder^layers` plans), which is exactly where the paper's fast
+//! probe machinery pays off: instead of measuring accuracy for every
+//! plan, [`plan_search`] walks a **greedy descent** —
+//!
+//! 1. start from the uniform-wide plan (every layer at `ladder[0]`);
+//! 2. each round, propose narrowing ONE layer one ladder step; rank
+//!    every proposal by its last-layer probe-R² (ten inputs, §3.3)
+//!    mapped through the fitted [`AccuracyModel`], and accept the
+//!    best-R² proposal whose *prediction* still clears the target;
+//! 3. stop when no proposal clears; only then spend full accuracy
+//!    evaluations — validate the surviving plan, and walk accepted
+//!    moves back one at a time if the measurement misses the target.
+//!
+//! Cost: `O(layers² · ladder)` ten-input probes plus a handful of full
+//! evaluations, against `ladder^layers` full evaluations for exhaustive
+//! per-layer enumeration — the `repro plan` subcommand reports both
+//! numbers, plus the [`crate::hw::plan_speedup`] estimate of the chosen
+//! plan.
+
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+use crate::eval::metrics::topk_accuracy;
+use crate::eval::sweep::{forward_eval, forward_indices, EvalOptions};
+use crate::formats::{Format, Plan, PrecisionSpec};
+use crate::hw;
+use crate::nn::Network;
+use crate::search::model::AccuracyModel;
+use crate::search::{activation_r2, PROBE_INPUTS};
+use crate::serving::NativeBackend;
+use crate::util::rng::Pcg32;
+
+/// What the greedy per-layer search explores.
+#[derive(Clone, Debug)]
+pub struct PlanSearchSpec {
+    /// Shared per-layer format ladder, widest first; `ladder[0]` is the
+    /// uniform-wide starting point and the search only ever narrows.
+    pub ladder: Vec<Format>,
+    /// Normalized-accuracy target (paper: 0.99).
+    pub target: f64,
+    /// Budget of full accuracy evaluations for validating/backtracking
+    /// the surviving plan (the probes are not counted — they are the
+    /// cheap part).
+    pub max_validations: usize,
+    pub opts: EvalOptions,
+    pub seed: u64,
+}
+
+impl Default for PlanSearchSpec {
+    fn default() -> Self {
+        PlanSearchSpec {
+            ladder: default_ladder(),
+            target: 0.99,
+            max_validations: 4,
+            opts: EvalOptions::default(),
+            seed: 2018,
+        }
+    }
+}
+
+/// The default ladder: float formats from the exact baseline down to
+/// 8 total bits, tracking the sweet-spot region of the paper's Fig 6.
+pub fn default_ladder() -> Vec<Format> {
+    vec![
+        Format::SINGLE,
+        Format::float(10, 6),
+        Format::float(8, 6),
+        Format::float(7, 6),
+        Format::float(6, 5),
+        Format::float(5, 5),
+        Format::float(4, 5),
+        Format::float(3, 4),
+    ]
+}
+
+/// Result + cost accounting of one greedy per-layer search.
+#[derive(Clone, Debug)]
+pub struct PlanSearchOutcome {
+    /// The chosen per-layer plan (explicit, one rule per layer).
+    pub plan: Plan,
+    /// Model prediction for the plan the descent stopped at.
+    pub predicted_norm_acc: f64,
+    /// Measured normalized accuracy of the returned plan.
+    pub measured_norm_acc: f64,
+    /// MAC-weighted `hw` speedup estimate of the returned plan.
+    pub speedup: f64,
+    /// Candidate plans probed (ten-input probes — the cheap currency).
+    pub plans_probed: usize,
+    /// Full accuracy evaluations spent on validation/backtracking.
+    pub validations_spent: usize,
+    /// Total forward passes in sample units (probes + baseline +
+    /// validations).
+    pub sample_forwards: usize,
+    /// `ladder^layers`: what exhaustive per-layer enumeration would
+    /// have had to validate.
+    pub exhaustive_plans: f64,
+}
+
+/// Run the greedy descent described in the module docs.  `model` maps
+/// probe-R² to predicted normalized accuracy (use the cross-validated
+/// fit, like the single-format search).
+pub fn plan_search(
+    net: &Arc<Network>,
+    spec: &PlanSearchSpec,
+    model: &AccuracyModel,
+) -> Result<PlanSearchOutcome> {
+    if spec.ladder.is_empty() {
+        bail!("plan_search needs a non-empty format ladder");
+    }
+    let layers = net.quantized_layer_names();
+    if layers.is_empty() {
+        bail!("{}: no quantized layers to plan", net.name);
+    }
+    let mut backend = NativeBackend::new(net.clone());
+    let samples = spec.opts.samples.min(net.eval_len());
+    let probe_n = PROBE_INPUTS.min(net.eval_len());
+
+    // probe inputs + exact reference activations, once (§3.3)
+    let mut rng = Pcg32::seeded(spec.seed);
+    let probe = rng.sample_indices(net.eval_len(), probe_n);
+    let exact_probe = forward_indices(&mut backend, &Format::SINGLE, &probe)?;
+
+    let plan_of = |pos: &[usize]| -> Plan {
+        let pairs: Vec<(String, Format)> = layers
+            .iter()
+            .cloned()
+            .zip(pos.iter().map(|&i| spec.ladder[i]))
+            .collect();
+        Plan::explicit(pairs).expect("quantized layer names are unique")
+    };
+
+    // ladder position per layer; 0 = widest
+    let mut pos = vec![0usize; layers.len()];
+    let mut plans_probed = 0usize;
+    let probe_pred = |backend: &mut NativeBackend,
+                      pos: &[usize],
+                      plans_probed: &mut usize|
+     -> Result<f64> {
+        let cand = PrecisionSpec::from(plan_of(pos));
+        let qp = forward_indices(backend, &cand, &probe)?;
+        *plans_probed += 1;
+        Ok(model.predict(activation_r2(&exact_probe, &qp)))
+    };
+
+    // honest prediction for the uniform-wide start
+    let start_pred = probe_pred(&mut backend, &pos, &mut plans_probed)?;
+    let mut predicted = start_pred;
+    // accepted moves in order: (layer index, prediction after the move)
+    let mut accepted: Vec<(usize, f64)> = Vec::new();
+    loop {
+        let mut best: Option<(usize, f64)> = None; // (layer, prediction)
+        for li in 0..layers.len() {
+            if pos[li] + 1 >= spec.ladder.len() {
+                continue;
+            }
+            let mut cand = pos.to_vec();
+            cand[li] += 1;
+            let pred = probe_pred(&mut backend, &cand, &mut plans_probed)?;
+            // rank by prediction (a monotone map of probe-R²): narrow
+            // the layer that damages the activations least
+            let improves = match best {
+                Some((_, bp)) => pred > bp,
+                None => true,
+            };
+            if pred >= spec.target && improves {
+                best = Some((li, pred));
+            }
+        }
+        let Some((li, pred)) = best else { break };
+        pos[li] += 1;
+        accepted.push((li, pred));
+        predicted = pred;
+    }
+
+    // validation pass: measure the survivor; if it misses, un-narrow
+    // the most recent accepted move and re-measure, within budget
+    let (base_logits, labels) = forward_eval(&mut backend, &Format::SINGLE, &spec.opts)?;
+    let base_acc = topk_accuracy(&base_logits, &labels, net.classes, net.topk);
+    let mut validations = 0usize;
+    let measured = loop {
+        let cur = PrecisionSpec::from(plan_of(&pos));
+        let (logits, _) = forward_eval(&mut backend, &cur, &spec.opts)?;
+        let acc = topk_accuracy(&logits, &labels, net.classes, net.topk);
+        let na = if base_acc > 0.0 { acc / base_acc } else { 0.0 };
+        validations += 1;
+        if na >= spec.target || validations >= spec.max_validations.max(1) {
+            break na;
+        }
+        let Some((li, _)) = accepted.pop() else { break na };
+        pos[li] -= 1;
+        predicted = accepted.last().map(|&(_, p)| p).unwrap_or(start_pred);
+    };
+
+    let plan = plan_of(&pos);
+    let resolved = plan.resolve(net)?;
+    Ok(PlanSearchOutcome {
+        plan,
+        predicted_norm_acc: predicted,
+        measured_norm_acc: measured,
+        speedup: hw::plan_speedup(net, &resolved),
+        plans_probed,
+        validations_spent: validations,
+        sample_forwards: (plans_probed + 1) * probe_n + (validations + 1) * samples,
+        exhaustive_plans: (spec.ladder.len() as f64).powi(layers.len() as i32),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::fixtures::tiny_conv_network;
+
+    fn identity_model() -> AccuracyModel {
+        AccuracyModel { a: 1.0, b: 0.0, fit_r: 1.0, n_points: 0 }
+    }
+
+    /// End-to-end greedy search on the two-layer fixture: finishes,
+    /// meets the target after validation, and spends incomparably
+    /// fewer full evaluations than exhaustive per-layer enumeration.
+    #[test]
+    fn plan_search_runs_on_fixture_and_validates_cheaply() {
+        let net = tiny_conv_network(16);
+        let spec = PlanSearchSpec {
+            ladder: vec![
+                Format::SINGLE,
+                Format::float(10, 6),
+                Format::float(5, 5),
+                Format::float(2, 3),
+            ],
+            target: 0.99,
+            // enough budget to walk all the way back to uniform-wide
+            // (whose normalized accuracy is exactly 1.0 on the
+            // self-labeled fixture), so the target is always reachable
+            max_validations: 8,
+            opts: EvalOptions { samples: 16, batch: 4 },
+            seed: 7,
+        };
+        let out = plan_search(&net, &spec, &identity_model()).unwrap();
+
+        assert!(out.measured_norm_acc >= spec.target, "{}", out.measured_norm_acc);
+        assert_eq!(out.exhaustive_plans, 16.0, "4 ladder steps ^ 2 layers");
+        assert!(
+            (out.validations_spent as f64) < out.exhaustive_plans,
+            "greedy must validate fewer plans than exhaustive ({} vs {})",
+            out.validations_spent,
+            out.exhaustive_plans
+        );
+        assert!(out.plans_probed >= 1);
+        assert!(out.sample_forwards > 0);
+        assert!(out.speedup >= 1.0 - 1e-9, "narrowing never slows down: {}", out.speedup);
+        // the chosen plan is explicit and resolves on its network
+        let resolved = out.plan.resolve(&net).unwrap();
+        assert_eq!(resolved.assignments.len(), 2);
+        for (_, fmt) in &resolved.assignments {
+            assert!(spec.ladder.contains(fmt), "{fmt} not from the ladder");
+        }
+        // round-trips through the session-key syntax
+        let key = format!("tiny@{}", out.plan.id());
+        assert!(crate::serving::SessionKey::parse(&key).is_ok());
+    }
+
+    /// Degenerate inputs fail cleanly.
+    #[test]
+    fn plan_search_rejects_empty_ladder() {
+        let net = tiny_conv_network(4);
+        let spec = PlanSearchSpec { ladder: Vec::new(), ..Default::default() };
+        assert!(plan_search(&net, &spec, &identity_model()).is_err());
+    }
+
+    /// A one-step ladder cannot narrow anything: the outcome is the
+    /// uniform-wide plan, validated once.
+    #[test]
+    fn plan_search_with_singleton_ladder_returns_uniform_wide() {
+        let net = tiny_conv_network(8);
+        let spec = PlanSearchSpec {
+            ladder: vec![Format::SINGLE],
+            opts: EvalOptions { samples: 8, batch: 4 },
+            ..Default::default()
+        };
+        let out = plan_search(&net, &spec, &identity_model()).unwrap();
+        assert_eq!(out.measured_norm_acc, 1.0);
+        assert_eq!(out.validations_spent, 1);
+        assert!((out.speedup - 1.0).abs() < 1e-9);
+        let resolved = out.plan.resolve(&net).unwrap();
+        assert_eq!(resolved.uniform(), Some(Format::SINGLE));
+    }
+}

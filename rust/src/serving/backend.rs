@@ -19,16 +19,25 @@ use std::sync::Arc;
 
 use anyhow::{bail, Result};
 
-use crate::formats::Format;
-use crate::nn::{Engine, Network};
+use crate::formats::{Format, PrecisionSpec};
+use crate::nn::{Engine, Network, QuantTable};
 use crate::tensor::Tensor;
 
 /// Anything that can run a batch (B, H, W, C) -> (B, classes) under a
-/// customized-precision format.  Object-safe; see the module docs for
-/// the one-substrate guarantee.
+/// precision spec — a uniform customized format or a per-layer plan.
+/// Object-safe; see the module docs for the one-substrate guarantee.
 pub trait Backend {
-    /// Execute one batch of inputs, returning the logits.
-    fn run_batch(&mut self, x: &Tensor, fmt: &Format) -> Result<Tensor>;
+    /// Execute one batch of inputs under `spec`, returning the logits.
+    /// Single-format implementations (PJRT) accept any spec that
+    /// resolves uniform and reject genuinely mixed plans with an `Err`.
+    fn run_spec(&mut self, x: &Tensor, spec: &PrecisionSpec) -> Result<Tensor>;
+
+    /// Convenience: [`Backend::run_spec`] under a uniform format (the
+    /// paper's single-format setting; bit-identical to passing
+    /// `PrecisionSpec::Uniform(*fmt)`).
+    fn run_batch(&mut self, x: &Tensor, fmt: &Format) -> Result<Tensor> {
+        self.run_spec(x, &PrecisionSpec::Uniform(*fmt))
+    }
 
     /// The network this backend executes.
     fn network(&self) -> &Arc<Network>;
@@ -90,15 +99,34 @@ impl BackendKind {
 }
 
 /// The native-engine backend: one scratch-buffer engine bound to one
-/// network (zero heap allocations per forward after warm-up).
+/// network (zero heap allocations per forward after warm-up).  The
+/// per-layer quantizer table for the active spec is memoized — resolved
+/// once when the spec changes, reused across every batch after — so
+/// both sweeps (many batches per format) and plan execution stay off
+/// the allocator on the hot path.
 pub struct NativeBackend {
     net: Arc<Network>,
     engine: Engine,
+    /// memoized (spec, resolved quantizer table) for the last spec run
+    table: Option<(PrecisionSpec, QuantTable)>,
 }
 
 impl NativeBackend {
     pub fn new(net: Arc<Network>) -> NativeBackend {
-        NativeBackend { net, engine: Engine::new() }
+        NativeBackend { net, engine: Engine::new(), table: None }
+    }
+
+    /// Resolve (or reuse) the quantizer table for `spec`.
+    fn ensure_table(&mut self, spec: &PrecisionSpec) -> Result<()> {
+        let stale = match &self.table {
+            Some((cached, _)) => cached != spec,
+            None => true,
+        };
+        if stale {
+            let table = QuantTable::resolve(&self.net, spec)?;
+            self.table = Some((spec.clone(), table));
+        }
+        Ok(())
     }
 
     /// Run only the first `n_layers` layers and return the intermediate
@@ -106,13 +134,16 @@ impl NativeBackend {
     /// input this way.  Native-only: the AOT artifacts expose logits,
     /// not intermediate activations.
     pub fn forward_prefix(&mut self, x: &Tensor, fmt: &Format, n_layers: usize) -> Tensor {
-        self.engine.forward_prefix(&self.net, x, fmt, n_layers)
+        let table = QuantTable::uniform_for(&self.net, fmt);
+        self.engine.forward_prefix(&self.net, x, &table, n_layers)
     }
 }
 
 impl Backend for NativeBackend {
-    fn run_batch(&mut self, x: &Tensor, fmt: &Format) -> Result<Tensor> {
-        Ok(self.engine.forward(&self.net, x, fmt))
+    fn run_spec(&mut self, x: &Tensor, spec: &PrecisionSpec) -> Result<Tensor> {
+        self.ensure_table(spec)?;
+        let (_, table) = self.table.as_ref().expect("table resolved above");
+        Ok(self.engine.forward(&self.net, x, table))
     }
 
     fn network(&self) -> &Arc<Network> {
@@ -134,8 +165,11 @@ pub struct PjrtBackend {
 
 #[cfg(feature = "pjrt")]
 impl Backend for PjrtBackend {
-    fn run_batch(&mut self, x: &Tensor, fmt: &Format) -> Result<Tensor> {
-        self.model.run_batch(x, fmt)
+    fn run_spec(&mut self, x: &Tensor, spec: &PrecisionSpec) -> Result<Tensor> {
+        // the AOT executables take ONE runtime fmt vector: any spec
+        // that resolves uniform runs; a mixed plan is a clean error
+        let fmt = spec.resolved_uniform(&self.model.net)?;
+        self.model.run_batch(x, &fmt)
     }
 
     fn network(&self) -> &Arc<Network> {
@@ -158,8 +192,11 @@ fn pjrt_backend(
     net: &Arc<Network>,
     dir: &Path,
     batch: usize,
-    fmt: &Format,
+    spec: &PrecisionSpec,
 ) -> Result<Box<dyn Backend>> {
+    // per-layer plans need the native engine unless they resolve
+    // uniform (one executable serves one runtime fmt vector)
+    let fmt = spec.resolved_uniform(net)?;
     let kind = if fmt.is_float() { "float" } else { "fixed" };
     let hlo = net.hlo_path(dir, kind)?;
     anyhow::ensure!(hlo.exists(), "missing HLO artifact {}", hlo.display());
@@ -173,26 +210,27 @@ fn pjrt_backend(
     _net: &Arc<Network>,
     _dir: &Path,
     _batch: usize,
-    _fmt: &Format,
+    _spec: &PrecisionSpec,
 ) -> Result<Box<dyn Backend>> {
     bail!("this build has no PJRT runtime; rebuild with `--features pjrt` (DESIGN.md §5)")
 }
 
 /// The unified construction path: a `Send` factory that resolves
 /// `kind` on the dispatcher thread.  `Auto` degrades to the native
-/// engine with a note on stderr; `Pjrt` makes unavailability a hard
-/// error so a silent native run can never be mislabeled as pjrt.
+/// engine with a note on stderr (including for mixed per-layer plans,
+/// which only the native engine executes); `Pjrt` makes unavailability
+/// a hard error so a silent native run can never be mislabeled as pjrt.
 pub(crate) fn make_factory(
     net: Arc<Network>,
     dir: PathBuf,
     batch: usize,
-    fmt: Format,
+    spec: PrecisionSpec,
     kind: BackendKind,
 ) -> BackendFactory {
     Box::new(move || match kind {
         BackendKind::Native => Ok(Box::new(NativeBackend::new(net)) as Box<dyn Backend>),
-        BackendKind::Pjrt => pjrt_backend(&net, &dir, batch, &fmt),
-        BackendKind::Auto => match pjrt_backend(&net, &dir, batch, &fmt) {
+        BackendKind::Pjrt => pjrt_backend(&net, &dir, batch, &spec),
+        BackendKind::Auto => match pjrt_backend(&net, &dir, batch, &spec) {
             Ok(b) => Ok(b),
             Err(e) => {
                 eprintln!(
@@ -226,5 +264,78 @@ mod tests {
         assert_eq!(out.shape(), &[4, net.classes]);
         assert_eq!(b.label(), "native");
         assert_eq!(b.network().name, net.name);
+    }
+
+    /// The uniform-plan anchor (ISSUE 3 satellite): for random formats
+    /// across both representation kinds, running `plan:*=<fmt>` is
+    /// bit-identical to running `<fmt>` directly — through the conv AND
+    /// dense paths of the fixture network.
+    #[test]
+    fn prop_uniform_plan_forward_is_bit_identical_to_single_format() {
+        use crate::formats::{Plan, PrecisionSpec};
+        use crate::testing::prop::run_prop;
+        let net = crate::testing::fixtures::tiny_conv_network(6);
+        let x = net.eval_x.slice_rows(0, 6);
+        run_prop("uniform_plan_bitexact", 40, |g| {
+            let fmt = if g.bool() {
+                Format::float(g.usize_in(0, 23) as u32, g.usize_in(1, 8) as u32)
+            } else {
+                Format::fixed(g.usize_in(0, 16) as u32, g.usize_in(0, 16) as u32)
+            };
+            let via_fmt = NativeBackend::new(net.clone()).run_batch(&x, &fmt).unwrap();
+            let via_plan = NativeBackend::new(net.clone())
+                .run_spec(&x, &PrecisionSpec::from(Plan::uniform(fmt)))
+                .unwrap();
+            // an explicit all-layers plan with one format is the same
+            // assignment spelled differently — also bit-identical
+            let explicit = Plan::explicit(
+                net.quantized_layer_names().into_iter().map(|n| (n, fmt)).collect(),
+            )
+            .unwrap();
+            let via_explicit = NativeBackend::new(net.clone())
+                .run_spec(&x, &PrecisionSpec::from(explicit))
+                .unwrap();
+            for i in 0..via_fmt.data().len() {
+                assert_eq!(
+                    via_fmt.data()[i].to_bits(),
+                    via_plan.data()[i].to_bits(),
+                    "{fmt} wildcard-plan logit {i}"
+                );
+                assert_eq!(
+                    via_fmt.data()[i].to_bits(),
+                    via_explicit.data()[i].to_bits(),
+                    "{fmt} explicit-plan logit {i}"
+                );
+            }
+        });
+    }
+
+    /// A genuinely mixed plan routes different quantizers to different
+    /// layers: narrowing ONLY the dense layer must change the logits
+    /// relative to uniform-exact, and differ from narrowing only the
+    /// conv layer.
+    #[test]
+    fn mixed_plan_routes_formats_per_layer() {
+        use crate::formats::PrecisionSpec;
+        let net = crate::testing::fixtures::tiny_conv_network(6);
+        let x = net.eval_x.slice_rows(0, 6);
+        let run = |spec: &str| -> Vec<f32> {
+            NativeBackend::new(net.clone())
+                .run_spec(&x, &PrecisionSpec::parse(spec).unwrap())
+                .unwrap()
+                .into_data()
+        };
+        let exact = run("float:m23e8");
+        let narrow_fc = run("plan:fc=fixed:l0r2,*=float:m23e8");
+        let narrow_c1 = run("plan:c1=fixed:l0r2,*=float:m23e8");
+        assert_ne!(exact, narrow_fc, "narrowing fc must perturb the logits");
+        assert_ne!(exact, narrow_c1, "narrowing c1 must perturb the logits");
+        assert_ne!(narrow_fc, narrow_c1, "the two single-layer plans must differ");
+        // a plan that fails validation surfaces as Err, not a panic
+        let mut b = NativeBackend::new(net.clone());
+        let bad = PrecisionSpec::parse("plan:conv9=float:m7e6,*=fixed:l8r8").unwrap();
+        assert!(b.run_spec(&x, &bad).is_err());
+        // ...and the backend recovers: the next valid spec still runs
+        assert!(b.run_batch(&x, &Format::SINGLE).is_ok());
     }
 }

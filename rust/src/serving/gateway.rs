@@ -1,9 +1,10 @@
 //! The multi-model, multi-format serving gateway.
 //!
 //! A [`Gateway`] hosts N concurrent [`Session`]s keyed by
-//! `(network, format)` and routes single-sample requests by
+//! `(network, precision spec)` and routes single-sample requests by
 //! [`SessionKey`].  Each session runs its own dynamic-batching
-//! dispatcher, so one process serves e.g. `lenet5@float:m7e6` and
+//! dispatcher, so one process serves e.g. `lenet5@float:m7e6`, a
+//! per-layer `lenet5@plan:conv1=float:m4e5,*=fixed:l8r8`, and
 //! `alexnet-mini@fixed:l8r8` simultaneously; sessions can be added and
 //! removed while traffic is flowing (a sweep can be served live).
 //!
@@ -18,7 +19,7 @@ use std::sync::{Arc, PoisonError, RwLock};
 
 use anyhow::{anyhow, Result};
 
-use crate::formats::Format;
+use crate::formats::PrecisionSpec;
 use crate::nn::Zoo;
 use crate::serving::backend::BackendKind;
 use crate::serving::session::{Session, SessionKey, SessionOptions, SessionStats};
@@ -110,10 +111,12 @@ impl Gateway {
         self.zoo.as_ref()
     }
 
-    /// Hot-add a session for `(net, fmt)`.  Idempotent: opening a key
-    /// that is already hosted returns it unchanged.
-    pub fn open(&self, net: &str, fmt: Format) -> Result<SessionKey> {
-        let key = SessionKey::new(net, fmt);
+    /// Hot-add a session for `(net, spec)` — a uniform [`crate::formats::Format`]
+    /// or a per-layer [`crate::formats::Plan`].  Idempotent: opening a
+    /// key that is already hosted returns it unchanged.
+    pub fn open(&self, net: &str, spec: impl Into<PrecisionSpec>) -> Result<SessionKey> {
+        let spec: PrecisionSpec = spec.into();
+        let key = SessionKey::new(net, spec.clone());
         if self.session(&key).is_some() {
             return Ok(key);
         }
@@ -121,7 +124,7 @@ impl Gateway {
             .zoo
             .as_ref()
             .ok_or_else(|| anyhow!("gateway has no zoo; use adopt() for custom sessions"))?;
-        let session = Session::open_with(zoo, net, fmt, self.kind, self.opts)?;
+        let session = Session::open_with(zoo, net, spec, self.kind, self.opts)?;
         let mut map = self.write_lock();
         // on a lost race with a concurrent open, keep the incumbent —
         // but release the routing lock BEFORE dropping the duplicate,
@@ -138,10 +141,11 @@ impl Gateway {
         Ok(key)
     }
 
-    /// [`Gateway::open`] for the `net@format` CLI spelling.
+    /// [`Gateway::open`] for the `net@format` / `net@plan:...` CLI
+    /// spelling.
     pub fn open_spec(&self, spec: &str) -> Result<SessionKey> {
         let key = SessionKey::parse(spec)?;
-        self.open(&key.net, key.fmt)
+        self.open(&key.net, key.spec.clone())
     }
 
     /// Hot-add a pre-built session (custom factory / no zoo).  An
@@ -236,6 +240,7 @@ mod tests {
     use super::*;
     use std::time::Duration;
 
+    use crate::formats::Format;
     use crate::serving::backend::{Backend, NativeBackend};
     use crate::testing::fixtures::tiny_network;
 
@@ -256,8 +261,9 @@ mod tests {
     #[test]
     fn routes_concurrent_clients_across_two_sessions() {
         let gw = Gateway::empty();
-        let k1 = adopt_native(&gw, Format::float(7, 6), 4);
-        let k2 = adopt_native(&gw, Format::fixed(8, 8), 4);
+        let (f1, f2) = (Format::float(7, 6), Format::fixed(8, 8));
+        let k1 = adopt_native(&gw, f1, 4);
+        let k2 = adopt_native(&gw, f2, 4);
         assert_eq!(gw.keys(), vec![k1.clone(), k2.clone()]);
 
         let net = tiny_network(8);
@@ -267,8 +273,8 @@ mod tests {
                 .run_batch(&net.eval_x.slice_rows(0, 8), fmt)
                 .unwrap()
         };
-        let want1 = direct(&k1.fmt);
-        let want2 = direct(&k2.fmt);
+        let want1 = direct(&f1);
+        let want2 = direct(&f2);
 
         std::thread::scope(|scope| {
             for (key, want) in [(&k1, &want1), (&k2, &want2)] {

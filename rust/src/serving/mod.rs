@@ -13,11 +13,15 @@
 //!   trait as the request path, so sweep numbers and served responses
 //!   are the same function by construction (bit-identity is
 //!   integration-tested).
-//! * [`Session`] — one hosted `(network, format)` pair:
-//!   [`Session::open`] → [`Session::infer`] / [`Session::run_batch`] /
-//!   [`Session::stats`].  Single-sample requests are dynamically
-//!   batched to the execution batch size with a bounded queueing delay.
-//! * [`Gateway`] — N concurrent sessions keyed by `(network, format)`
+//! * [`Session`] — one hosted `(network, precision spec)` pair, where
+//!   the spec is a uniform format or a per-layer mixed-precision plan
+//!   (`net@plan:...` keys; uniform plans are bit-identical to the
+//!   single-format session they spell out — DESIGN.md §Mixed
+//!   precision): [`Session::open`] → [`Session::infer`] /
+//!   [`Session::run_batch`] / [`Session::stats`].  Single-sample
+//!   requests are dynamically batched to the execution batch size with
+//!   a bounded queueing delay.
+//! * [`Gateway`] — N concurrent sessions keyed by `(network, spec)`
 //!   with per-key routing, hot add/remove, and live aggregate
 //!   telemetry ([`GatewayStats`] — requests, batches, padded slots,
 //!   p50/p99 queue latency per session).
@@ -47,4 +51,6 @@ pub use backend::PjrtBackend;
 pub use backend::{Backend, BackendFactory, BackendKind, NativeBackend};
 pub use gateway::{Gateway, GatewayStats};
 pub use loadgen::{drive_closed_loop, warm_up, ServedRequest};
-pub use session::{QUEUE_LAT_WINDOW, Session, SessionKey, SessionOptions, SessionStats};
+pub use session::{
+    QUEUE_LAT_WINDOW, Session, SessionKey, SessionOptions, SessionStats, split_session_specs,
+};

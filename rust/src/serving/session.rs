@@ -1,5 +1,6 @@
-//! A `Session` = one hosted `(network, format)` pair with its own
-//! dynamic-batching dispatcher.
+//! A `Session` = one hosted `(network, precision spec)` pair — a
+//! uniform format or a per-layer plan — with its own dynamic-batching
+//! dispatcher.
 //!
 //! Single-sample requests are queued; the dispatcher thread flushes a
 //! batch when either the execution batch size is reached or the oldest
@@ -20,38 +21,58 @@ use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
 
-use crate::formats::Format;
+use crate::formats::PrecisionSpec;
 use crate::nn::{Network, Zoo};
 use crate::serving::backend::{make_factory, BackendFactory, BackendKind};
 use crate::tensor::Tensor;
 
-/// Identity of one hosted session: the `(network, format)` pair the
-/// gateway routes by.  Spelled `net@format-id`, e.g.
-/// `lenet5@float:m7e6`.
+/// Identity of one hosted session: the `(network, precision spec)`
+/// pair the gateway routes by.  Spelled `net@spec`, e.g.
+/// `lenet5@float:m7e6` or `lenet5@plan:conv1=float:m4e5,*=fixed:l8r8`.
 #[derive(Clone, Debug, PartialEq, Eq, PartialOrd, Ord)]
 pub struct SessionKey {
     pub net: String,
-    pub fmt: Format,
+    pub spec: PrecisionSpec,
 }
 
 impl SessionKey {
-    pub fn new(net: &str, fmt: Format) -> SessionKey {
-        SessionKey { net: net.to_string(), fmt }
+    pub fn new(net: &str, spec: impl Into<PrecisionSpec>) -> SessionKey {
+        SessionKey { net: net.to_string(), spec: spec.into() }
     }
 
-    /// Parse the `net@format` spelling used by `repro serve --sessions`.
+    /// Parse the `net@format` / `net@plan:...` spelling used by
+    /// `repro serve --sessions`.
     pub fn parse(s: &str) -> Result<SessionKey> {
-        let (net, fmt) = s
-            .split_once('@')
-            .ok_or_else(|| anyhow!("session {s:?}: expected net@format (e.g. lenet5@float:m7e6)"))?;
-        Ok(SessionKey { net: net.to_string(), fmt: Format::parse(fmt)? })
+        let (net, spec) = s.split_once('@').ok_or_else(|| {
+            anyhow!("session {s:?}: expected net@format or net@plan:... (e.g. lenet5@float:m7e6)")
+        })?;
+        Ok(SessionKey { net: net.to_string(), spec: PrecisionSpec::parse(spec)? })
     }
 }
 
 impl fmt::Display for SessionKey {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
-        write!(f, "{}@{}", self.net, self.fmt.id())
+        write!(f, "{}@{}", self.net, self.spec.id())
     }
+}
+
+/// Split a comma-separated `--sessions` list into individual `net@spec`
+/// strings.  Plan specs contain commas themselves
+/// (`net@plan:a=...,b=...`), so a comma only starts a new spec when the
+/// following segment contains `@` (every session spec does); other
+/// segments re-attach to the spec before them.
+pub fn split_session_specs(s: &str) -> Vec<String> {
+    let mut out: Vec<String> = Vec::new();
+    for seg in s.split(',') {
+        match out.last_mut() {
+            Some(last) if !seg.contains('@') => {
+                last.push(',');
+                last.push_str(seg.trim());
+            }
+            _ => out.push(seg.trim().to_string()),
+        }
+    }
+    out
 }
 
 /// Aggregate serving telemetry for one session, accumulated over every
@@ -127,6 +148,22 @@ struct Request {
     enqueued: Instant,
 }
 
+/// The (p50, p99) of a queue-latency window, in milliseconds, computed
+/// by nearest-rank over the sorted window: index `(n-1) * q`, truncated.
+/// An empty window reports `(0.0, 0.0)` — never NaN.  `total_cmp` makes
+/// the sort panic-free for any float input.
+fn window_percentiles_ms(mut lats_s: Vec<f64>) -> (f64, f64) {
+    lats_s.sort_by(|a, b| a.total_cmp(b));
+    let pct = |q: f64| -> f64 {
+        if lats_s.is_empty() {
+            0.0
+        } else {
+            lats_s[((lats_s.len() - 1) as f64 * q) as usize] * 1e3
+        }
+    };
+    (pct(0.5), pct(0.99))
+}
+
 /// Tuning knobs for [`Session::open_with`].
 #[derive(Clone, Copy, Debug)]
 pub struct SessionOptions {
@@ -160,24 +197,33 @@ pub struct Session {
 }
 
 impl Session {
-    /// Open a session on `zoo`'s network `net` under `fmt`, executing
-    /// on `kind`, with default batching options.
-    pub fn open(zoo: &Zoo, net: &str, fmt: Format, kind: BackendKind) -> Result<Session> {
-        Self::open_with(zoo, net, fmt, kind, SessionOptions::default())
+    /// Open a session on `zoo`'s network `net` under `spec` (a uniform
+    /// [`crate::formats::Format`] or a per-layer plan), executing on
+    /// `kind`, with default batching options.
+    pub fn open(
+        zoo: &Zoo,
+        net: &str,
+        spec: impl Into<PrecisionSpec>,
+        kind: BackendKind,
+    ) -> Result<Session> {
+        Self::open_with(zoo, net, spec, kind, SessionOptions::default())
     }
 
     /// [`Session::open`] with explicit batching options.
     pub fn open_with(
         zoo: &Zoo,
         net: &str,
-        fmt: Format,
+        spec: impl Into<PrecisionSpec>,
         kind: BackendKind,
         opts: SessionOptions,
     ) -> Result<Session> {
+        let spec: PrecisionSpec = spec.into();
         let network = zoo.network(net)?;
+        // fail malformed plans at open time, not on the first request
+        spec.resolve(&network)?;
         let batch = if opts.batch == 0 { zoo.batch } else { opts.batch };
-        let factory = make_factory(network.clone(), zoo.dir.clone(), batch, fmt, kind);
-        Ok(Self::with_factory(network, fmt, batch, opts.max_wait, factory))
+        let factory = make_factory(network.clone(), zoo.dir.clone(), batch, spec.clone(), kind);
+        Ok(Self::with_factory(network, spec, batch, opts.max_wait, factory))
     }
 
     /// Advanced constructor: run on a caller-supplied backend factory
@@ -186,22 +232,23 @@ impl Session {
     /// request receives the construction error.
     pub fn with_factory(
         net: Arc<Network>,
-        fmt: Format,
+        spec: impl Into<PrecisionSpec>,
         batch: usize,
         max_wait: Duration,
         factory: BackendFactory,
     ) -> Session {
         assert!(batch >= 1, "session batch size must be >= 1");
+        let spec: PrecisionSpec = spec.into();
         let (tx, rx): (Sender<Request>, Receiver<Request>) = channel();
         let [h, w, c] = net.input;
         let classes = net.classes;
         let stats = Arc::new(Mutex::new(StatsCell::default()));
-        let key = SessionKey::new(&net.name, fmt);
+        let key = SessionKey::new(&net.name, spec.clone());
 
         let worker = {
             let net = net.clone();
             let stats = stats.clone();
-            std::thread::spawn(move || dispatch(net, fmt, batch, max_wait, factory, rx, stats))
+            std::thread::spawn(move || dispatch(net, spec, batch, max_wait, factory, rx, stats))
         };
 
         Session {
@@ -215,7 +262,7 @@ impl Session {
         }
     }
 
-    /// The `(network, format)` pair this session serves.
+    /// The `(network, precision spec)` pair this session serves.
     pub fn key(&self) -> &SessionKey {
         &self.key
     }
@@ -283,21 +330,14 @@ impl Session {
     /// Live telemetry snapshot (available any time, not only at
     /// shutdown).
     pub fn stats(&self) -> SessionStats {
-        let (mut stats, mut lats) = self
+        let (mut stats, lats) = self
             .stats
             .lock()
             .unwrap_or_else(PoisonError::into_inner)
             .raw();
-        lats.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        let pct = |q: f64| -> f64 {
-            if lats.is_empty() {
-                0.0
-            } else {
-                lats[((lats.len() - 1) as f64 * q) as usize] * 1e3
-            }
-        };
-        stats.p50_queue_ms = pct(0.5);
-        stats.p99_queue_ms = pct(0.99);
+        let (p50, p99) = window_percentiles_ms(lats);
+        stats.p50_queue_ms = p50;
+        stats.p99_queue_ms = p99;
         stats
     }
 
@@ -329,7 +369,7 @@ impl Drop for Session {
 /// every sender is gone and the queue is drained.
 fn dispatch(
     net: Arc<Network>,
-    fmt: Format,
+    spec: PrecisionSpec,
     batch: usize,
     max_wait: Duration,
     factory: BackendFactory,
@@ -416,7 +456,7 @@ fn dispatch(
             }
         };
 
-        match backend.run_batch(&x, &fmt) {
+        match backend.run_spec(&x, &spec) {
             Ok(out) => {
                 for (i, r) in queue.drain(..).enumerate() {
                     let row = out.data()[i * classes..(i + 1) * classes].to_vec();
@@ -436,6 +476,7 @@ fn dispatch(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::formats::Format;
     use crate::serving::backend::{Backend, NativeBackend};
     use crate::testing::fixtures::tiny_network;
 
@@ -454,10 +495,71 @@ mod tests {
     fn key_parse_display_roundtrip() {
         let k = SessionKey::parse("lenet5@float:m7e6").unwrap();
         assert_eq!(k.net, "lenet5");
-        assert_eq!(k.fmt, Format::float(7, 6));
+        assert_eq!(k.spec, PrecisionSpec::Uniform(Format::float(7, 6)));
         assert_eq!(SessionKey::parse(&k.to_string()).unwrap(), k);
         assert!(SessionKey::parse("lenet5").is_err());
         assert!(SessionKey::parse("lenet5@decimal:x1y2").is_err());
+    }
+
+    #[test]
+    fn key_parses_plan_specs() {
+        let k = SessionKey::parse("lenet5@plan:conv1=float:m4e5,*=fixed:l8r8").unwrap();
+        assert_eq!(k.net, "lenet5");
+        assert_eq!(k.spec.uniform_format(), None);
+        assert_eq!(k.to_string(), "lenet5@plan:conv1=float:m4e5,*=fixed:l8r8");
+        assert_eq!(SessionKey::parse(&k.to_string()).unwrap(), k);
+        // the PR 2 out-of-range regression, through plan syntax
+        assert!(SessionKey::parse("lenet5@plan:*=fixed:l100r100").is_err());
+        assert!(SessionKey::parse("lenet5@plan:conv1=float:m99e9,*=fixed:l8r8").is_err());
+    }
+
+    #[test]
+    fn split_session_specs_handles_plan_commas() {
+        assert_eq!(
+            split_session_specs("lenet5@float:m7e6, alexnet-mini@fixed:l8r8"),
+            vec!["lenet5@float:m7e6", "alexnet-mini@fixed:l8r8"]
+        );
+        assert_eq!(
+            split_session_specs(
+                "lenet5@plan:conv1=float:m4e5,*=fixed:l8r8,alexnet-mini@fixed:l8r8"
+            ),
+            vec!["lenet5@plan:conv1=float:m4e5,*=fixed:l8r8", "alexnet-mini@fixed:l8r8"]
+        );
+        // every split piece parses as a session key
+        for spec in split_session_specs("a@plan:x=float:m7e6,*=float:m4e5,b@fixed:l8r8") {
+            assert!(SessionKey::parse(&spec).is_ok(), "{spec}");
+        }
+        // a malformed leading segment stays its own (unparsable) spec
+        assert_eq!(split_session_specs("oops,a@float:m7e6"), vec!["oops", "a@float:m7e6"]);
+    }
+
+    /// SessionKey Display ⇄ parse round-trips for random valid keys
+    /// (uniform and plan specs alike).
+    #[test]
+    fn prop_session_key_roundtrip() {
+        use crate::formats::Plan;
+        use crate::testing::prop::run_prop;
+        run_prop("session_key_roundtrip", 200, |g| {
+            let fmt = if g.bool() {
+                Format::float(g.usize_in(0, 23) as u32, g.usize_in(1, 8) as u32)
+            } else {
+                Format::fixed(g.usize_in(0, 64) as u32, g.usize_in(0, 64) as u32)
+            };
+            let net = ["lenet5", "alexnet-mini", "vgg-mini"][g.usize_in(0, 2)];
+            let key = if g.bool() {
+                SessionKey::new(net, fmt)
+            } else {
+                let mut pairs = vec![("conv1".to_string(), fmt)];
+                if g.bool() {
+                    pairs.push((
+                        "fc1".to_string(),
+                        Format::float(g.usize_in(0, 23) as u32, g.usize_in(1, 8) as u32),
+                    ));
+                }
+                SessionKey::new(net, Plan::explicit(pairs).unwrap())
+            };
+            assert_eq!(SessionKey::parse(&key.to_string()).unwrap(), key);
+        });
     }
 
     /// The request path must agree bitwise with a direct backend batch,
@@ -554,6 +656,69 @@ mod tests {
             let want = &direct.data()[i * net.classes..(i + 1) * net.classes];
             assert_eq!(got.as_slice(), want, "request {i}");
         }
+    }
+
+    /// Satellite (ISSUE 3): exact quantile values from synthetic queue
+    /// latencies through the real sliding-window path — deterministic,
+    /// no timing involved.
+    #[test]
+    fn stats_window_percentiles_are_exact() {
+        // 1..=100 ms, pushed in scrambled order: nearest-rank indices
+        // (n-1)*0.5 = 49 and (n-1)*0.99 = 98 pick exactly 50 and 99 ms
+        let mut cell = StatsCell::default();
+        for i in (1..=100u32).rev() {
+            cell.push_lat(i as f64 * 1e-3);
+        }
+        let (_, lats) = cell.raw();
+        assert_eq!(lats.len(), 100);
+        let (p50, p99) = window_percentiles_ms(lats);
+        assert_eq!(p50, 50.0);
+        assert_eq!(p99, 99.0);
+
+        // single-element window: both percentiles are that element
+        let (p50, p99) = window_percentiles_ms(vec![0.007]);
+        assert_eq!((p50, p99), (7.0, 7.0));
+
+        // empty window: zeros, never NaN and never a panic
+        let (p50, p99) = window_percentiles_ms(Vec::new());
+        assert_eq!((p50, p99), (0.0, 0.0));
+        assert!(!p50.is_nan() && !p99.is_nan());
+        let empty = StatsCell::default();
+        let (stats, lats) = empty.raw();
+        assert!(lats.is_empty());
+        assert_eq!(stats.requests, 0);
+    }
+
+    /// Window eviction: past `QUEUE_LAT_WINDOW` entries the ring
+    /// overwrites the OLDEST samples, so percentiles reflect only the
+    /// most recent window.
+    #[test]
+    fn stats_window_evicts_oldest_beyond_capacity() {
+        let mut cell = StatsCell::default();
+        // fill the window with a constant 1 ms...
+        for _ in 0..QUEUE_LAT_WINDOW {
+            cell.push_lat(1e-3);
+        }
+        // ...then push 8 late 100 ms outliers: they must displace the
+        // first 8 slots (ring order), leaving the window length capped
+        for _ in 0..8 {
+            cell.push_lat(100e-3);
+        }
+        let (_, lats) = cell.raw();
+        assert_eq!(lats.len(), QUEUE_LAT_WINDOW, "window length stays capped");
+        assert_eq!(lats.iter().filter(|&&v| v == 100e-3).count(), 8);
+        for (i, &v) in lats.iter().take(8).enumerate() {
+            assert_eq!(v, 100e-3, "slot {i} must hold an evicting sample");
+        }
+        let (p50, p99) = window_percentiles_ms(lats);
+        assert_eq!(p50, 1.0, "8/4096 outliers cannot move the median");
+        assert_eq!(p99, 1.0, "p99 rank (4095*0.99=4054) is below the outliers");
+        // wrap-around continues cyclically
+        for _ in 0..QUEUE_LAT_WINDOW {
+            cell.push_lat(2e-3);
+        }
+        let (_, lats) = cell.raw();
+        assert!(lats.iter().all(|&v| v == 2e-3), "a full extra pass rewrites every slot");
     }
 
     #[test]

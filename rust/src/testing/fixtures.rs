@@ -81,9 +81,112 @@ pub fn tiny_network(eval_n: usize) -> Arc<Network> {
     net
 }
 
+/// A tiny two-GEMM network exercising the conv path: (4, 4, 1) input →
+/// conv `c1` (3x3, pad 1, 2 channels) → relu → maxpool 2x2 → flatten →
+/// dense `fc` (8 → 3).  Having two named quantized layers (`c1`, `fc`)
+/// makes it the fixture for per-layer mixed-precision plans; like
+/// [`tiny_network`] it is fully deterministic and self-labeled with the
+/// exact forward's argmax (baseline accuracy exactly 1.0).
+pub fn tiny_conv_network(eval_n: usize) -> Arc<Network> {
+    let mut rng = Pcg32::seeded(0x7e57_c0ff);
+    let (h, w, cin) = (4usize, 4usize, 1usize);
+    let (kh, kw, cout) = (3usize, 3usize, 2usize);
+    let classes = 3usize;
+    let flat = (h / 2) * (w / 2) * cout; // after maxpool k2 s2
+
+    let c1_w = Tensor::new(
+        vec![kh, kw, cin, cout],
+        (0..kh * kw * cin * cout).map(|_| rng.normal() * 0.5).collect(),
+    )
+    .unwrap();
+    let c1_b = Tensor::new(vec![cout], (0..cout).map(|_| rng.normal() * 0.1).collect()).unwrap();
+    let fc_w = Tensor::new(
+        vec![flat, classes],
+        (0..flat * classes).map(|_| rng.normal() * 0.5).collect(),
+    )
+    .unwrap();
+    let fc_b = Tensor::new(vec![classes], (0..classes).map(|_| rng.normal() * 0.1).collect()).unwrap();
+    let eval_x = Tensor::new(
+        vec![eval_n, h, w, cin],
+        (0..eval_n * h * w * cin).map(|_| rng.normal()).collect(),
+    )
+    .unwrap();
+
+    let mut weights = BTreeMap::new();
+    weights.insert("c1.w".to_string(), c1_w);
+    weights.insert("c1.b".to_string(), c1_b);
+    weights.insert("fc.w".to_string(), fc_w);
+    weights.insert("fc.b".to_string(), fc_b);
+
+    let weight_order: Vec<String> =
+        ["c1.w", "c1.b", "fc.w", "fc.b"].iter().map(|s| s.to_string()).collect();
+    let n_params = kh * kw * cin * cout + cout + flat * classes + classes;
+
+    let mut net = Arc::new(Network {
+        name: "tiny-conv-fixture".to_string(),
+        input: [h, w, cin],
+        classes,
+        topk: 1,
+        layers: vec![
+            Layer::Conv {
+                name: "c1".to_string(),
+                kh,
+                kw,
+                in_ch: cin,
+                out_ch: cout,
+                stride: 1,
+                pad: 1,
+            },
+            Layer::Relu,
+            Layer::MaxPool { k: 2, stride: 2, pad: 0 },
+            Layer::Flatten,
+            Layer::Dense { name: "fc".to_string(), in_dim: flat, out_dim: classes },
+        ],
+        weight_order,
+        weights,
+        eval_x,
+        eval_y: vec![0; eval_n],
+        eval_acc_exact: 1.0,
+        hlo_files: BTreeMap::new(),
+        n_params,
+        max_chain: kh * kw * cin,
+    });
+
+    let logits = NativeBackend::new(net.clone())
+        .run_batch(&net.eval_x.slice_rows(0, eval_n), &Format::SINGLE)
+        .unwrap();
+    let labels = (0..eval_n)
+        .map(|i| {
+            let row = &logits.data()[i * classes..(i + 1) * classes];
+            row.iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .map(|(c, _)| c as i32)
+                .unwrap()
+        })
+        .collect();
+    Arc::get_mut(&mut net).expect("backend dropped; sole owner").eval_y = labels;
+    net
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn tiny_conv_network_is_deterministic_and_self_labeled() {
+        let a = tiny_conv_network(8);
+        let b = tiny_conv_network(8);
+        assert_eq!(a.eval_x.data(), b.eval_x.data());
+        assert_eq!(a.eval_y, b.eval_y);
+        assert_eq!(a.quantized_layer_names(), vec!["c1", "fc"]);
+        // self-labeling: exact-format accuracy is exactly 1.0
+        let logits = NativeBackend::new(a.clone())
+            .run_batch(&a.eval_x.slice_rows(0, 8), &Format::SINGLE)
+            .unwrap();
+        let acc = crate::eval::topk_accuracy(logits.data(), &a.eval_y, a.classes, 1);
+        assert_eq!(acc, 1.0);
+    }
 
     #[test]
     fn tiny_network_is_deterministic() {

@@ -57,8 +57,8 @@ fn gateway_serves_two_sessions_bit_identical_to_eval() {
     let mut reference = Vec::new();
     for key in [&k1, &k2] {
         let net = gateway.session(key).unwrap().network().clone();
-        let (logits, labels) = forward_eval_parallel(&net, &key.fmt, &opts, 4).unwrap();
-        let eval_acc = accuracy(&net, &key.fmt, samples).unwrap();
+        let (logits, labels) = forward_eval_parallel(&net, &key.spec, &opts, 4).unwrap();
+        let eval_acc = accuracy(&net, &key.spec, samples).unwrap();
         reference.push((key.clone(), net, logits, labels, eval_acc));
     }
 

@@ -1,0 +1,201 @@
+//! Mixed-precision plan acceptance (ISSUE 3) — tier-1, fixture-based,
+//! no artifacts required.
+//!
+//! The load-bearing contract: a UNIFORM plan (`plan:*=<fmt>`, or an
+//! explicit plan assigning one format everywhere) produces logits
+//! bit-identical to the single-format path it spells out, through BOTH
+//! the offline eval driver (`eval::forward_eval`) and a live serving
+//! `Session` — uniform plans are the bit-exactness anchor that lets the
+//! mixed-precision subsystem ride on the existing numerics contract
+//! (DESIGN.md §Mixed precision).  Mixed plans are then exercised
+//! through the same public surfaces: per-layer routing, session keys,
+//! and the greedy `plan_search`.
+
+use std::time::Duration;
+
+use precis::eval::sweep::{forward_eval, EvalOptions};
+use precis::formats::{Format, Plan, PrecisionSpec};
+use precis::nn::Network;
+use precis::search::{plan_search, AccuracyModel, PlanSearchSpec};
+use precis::serving::{Backend, BackendFactory, Gateway, NativeBackend, Session, SessionKey};
+use precis::testing::fixtures::tiny_conv_network;
+
+use std::sync::Arc;
+
+fn native_factory(net: Arc<Network>) -> BackendFactory {
+    Box::new(move || Ok(Box::new(NativeBackend::new(net)) as Box<dyn Backend>))
+}
+
+/// Acceptance: uniform plan ≡ single format through `forward_eval`,
+/// across both representation kinds and a ragged batch split.
+#[test]
+fn uniform_plan_is_bit_identical_through_forward_eval() {
+    let net = tiny_conv_network(10);
+    let opts = EvalOptions { samples: 10, batch: 4 }; // 2.5 batches: ragged tail
+    for fmt in [Format::float(7, 6), Format::fixed(8, 8), Format::SINGLE] {
+        let (via_fmt, labels_a) =
+            forward_eval(&mut NativeBackend::new(net.clone()), &fmt, &opts).unwrap();
+        let (via_plan, labels_b) = forward_eval(
+            &mut NativeBackend::new(net.clone()),
+            Plan::uniform(fmt),
+            &opts,
+        )
+        .unwrap();
+        assert_eq!(labels_a, labels_b);
+        assert_eq!(via_fmt.len(), via_plan.len());
+        for i in 0..via_fmt.len() {
+            assert_eq!(
+                via_fmt[i].to_bits(),
+                via_plan[i].to_bits(),
+                "{fmt} logit {i}: {} vs {}",
+                via_fmt[i],
+                via_plan[i]
+            );
+        }
+    }
+}
+
+/// Acceptance: uniform plan ≡ single format through a LIVE `Session`
+/// (dynamic batching and all), for every response it serves.
+#[test]
+fn uniform_plan_session_is_bit_identical_to_single_format_session() {
+    let net = tiny_conv_network(10);
+    let fmt = Format::float(7, 6);
+    let s_fmt = Session::with_factory(
+        net.clone(),
+        fmt,
+        4,
+        Duration::from_millis(3),
+        native_factory(net.clone()),
+    );
+    let s_plan = Session::with_factory(
+        net.clone(),
+        Plan::uniform(fmt),
+        4,
+        Duration::from_millis(3),
+        native_factory(net.clone()),
+    );
+    // distinct keys (a uniform plan is spelled differently)...
+    assert_eq!(s_fmt.key().to_string(), "tiny-conv-fixture@float:m7e6");
+    assert_eq!(s_plan.key().to_string(), "tiny-conv-fixture@plan:*=float:m7e6");
+
+    // ...same function: every served logit row is bit-identical, and
+    // both match the direct backend
+    let x = net.eval_x.slice_rows(0, 10);
+    let via_fmt = s_fmt.run_batch(&x).unwrap();
+    let via_plan = s_plan.run_batch(&x).unwrap();
+    let direct = NativeBackend::new(net.clone()).run_batch(&x, &fmt).unwrap();
+    assert_eq!(via_fmt.shape(), via_plan.shape());
+    for i in 0..via_fmt.data().len() {
+        assert_eq!(via_fmt.data()[i].to_bits(), via_plan.data()[i].to_bits(), "logit {i}");
+        assert_eq!(via_fmt.data()[i].to_bits(), direct.data()[i].to_bits(), "logit {i}");
+    }
+    assert_eq!(s_fmt.shutdown().requests, 10);
+    assert_eq!(s_plan.shutdown().requests, 10);
+}
+
+/// A gateway hosts a mixed-precision session next to uniform ones,
+/// keyed by the full plan spelling, with hot add/remove intact.
+#[test]
+fn gateway_hosts_mixed_plan_sessions_by_key() {
+    let net = tiny_conv_network(8);
+    let px: usize = net.input.iter().product();
+    let gw = Gateway::empty();
+    let uniform = gw.adopt(Session::with_factory(
+        net.clone(),
+        Format::float(7, 6),
+        4,
+        Duration::from_millis(3),
+        native_factory(net.clone()),
+    ));
+    let plan = Plan::parse("plan:c1=float:m4e5,*=fixed:l8r8").unwrap();
+    let mixed = gw.adopt(Session::with_factory(
+        net.clone(),
+        plan.clone(),
+        4,
+        Duration::from_millis(3),
+        native_factory(net.clone()),
+    ));
+    assert_eq!(mixed.to_string(), format!("tiny-conv-fixture@{}", plan.id()));
+    assert_eq!(gw.keys().len(), 2);
+
+    // served responses match the direct backend under the same spec
+    let pixels = net.eval_x.data()[..px].to_vec();
+    let got = gw.infer(&mixed, pixels.clone()).unwrap();
+    let want = NativeBackend::new(net.clone())
+        .run_spec(&net.eval_x.slice_rows(0, 1), &PrecisionSpec::from(plan))
+        .unwrap();
+    assert_eq!(got.len(), net.classes);
+    for i in 0..net.classes {
+        assert_eq!(got[i].to_bits(), want.data()[i].to_bits(), "logit {i}");
+    }
+    // ...and differ from the uniform session's (the plan genuinely
+    // changes the function)
+    let got_uniform = gw.infer(&uniform, pixels).unwrap();
+    assert_ne!(got, got_uniform);
+
+    let closed = gw.close(&mixed).expect("mixed session was hosted");
+    assert_eq!(closed.requests, 1);
+    let stats = gw.shutdown();
+    assert_eq!(stats.sessions.len(), 1);
+}
+
+/// Malformed and invalid plan session specs surface as clean errors
+/// through the serving entry points (never panics) — including the
+/// out-of-range `fixed:l100r100` regression through plan syntax.
+#[test]
+fn plan_session_specs_reject_bad_input_cleanly() {
+    assert!(SessionKey::parse("net@plan:*=fixed:l100r100").is_err());
+    assert!(SessionKey::parse("net@plan:c1=float:m99e9").is_err());
+    assert!(SessionKey::parse("net@plan:").is_err());
+    assert!(SessionKey::parse("net@plan:c1").is_err());
+    // valid syntax round-trips through Display
+    let k = SessionKey::parse("net@plan:c1=float:m4e5,*=fixed:l8r8").unwrap();
+    assert_eq!(SessionKey::parse(&k.to_string()).unwrap(), k);
+}
+
+/// `plan_search` end to end on the public API: the greedy search
+/// returns a plan that meets the target after validating at most its
+/// budget — orders of magnitude below exhaustive per-layer enumeration.
+#[test]
+fn plan_search_meets_target_with_few_validations() {
+    let net = tiny_conv_network(16);
+    let spec = PlanSearchSpec {
+        ladder: vec![
+            Format::SINGLE,
+            Format::float(10, 6),
+            Format::float(7, 6),
+            Format::float(4, 5),
+            Format::float(2, 3),
+        ],
+        target: 0.99,
+        max_validations: 10,
+        opts: EvalOptions { samples: 16, batch: 4 },
+        seed: 2018,
+    };
+    let model = AccuracyModel { a: 1.0, b: 0.0, fit_r: 1.0, n_points: 0 };
+    let out = plan_search(&net, &spec, &model).unwrap();
+    assert!(out.measured_norm_acc >= spec.target);
+    assert_eq!(out.exhaustive_plans, 25.0, "5^2 per-layer plans");
+    assert!((out.validations_spent as f64) < out.exhaustive_plans);
+    // the chosen plan serves: open a session under it and check one
+    // response against the offline eval path (the one-substrate rule)
+    let session = Session::with_factory(
+        net.clone(),
+        out.plan.clone(),
+        4,
+        Duration::from_millis(3),
+        native_factory(net.clone()),
+    );
+    let x = net.eval_x.slice_rows(0, 4);
+    let served = session.run_batch(&x).unwrap();
+    let (offline, _) = forward_eval(
+        &mut NativeBackend::new(net.clone()),
+        out.plan.clone(),
+        &EvalOptions { samples: 4, batch: 4 },
+    )
+    .unwrap();
+    for i in 0..offline.len() {
+        assert_eq!(served.data()[i].to_bits(), offline[i].to_bits(), "logit {i}");
+    }
+}
