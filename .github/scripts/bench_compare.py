@@ -1,0 +1,203 @@
+#!/usr/bin/env python3
+"""Diff two BENCH_*.json files with a noise-tolerant threshold.
+
+The perf-regression half of the repo's bench pipeline (DESIGN.md
+§Perf): `repro bench --json BENCH_<tag>.json` (or `make bench-json`)
+emits a machine-readable report of the headless hot-path suite; this
+script compares a current report against a checked-in baseline.
+
+Structure is validated STRICTLY (schema tag, field types, finite
+non-negative timings) and any violation exits 2 regardless of flags —
+a malformed report must never pass as "no regressions".  Timing
+comparison is noise-tolerant: only median slowdowns beyond --threshold
+count as regressions, and --warn-only downgrades even those to warnings
+(the bring-up mode the CI perf-smoke lane starts in, since shared
+runners are noisy).
+
+Exit codes: 0 ok / warnings only, 1 regressions (without --warn-only),
+2 structural error.
+
+Usage:
+  bench_compare.py BASELINE.json CURRENT.json [--threshold 0.25]
+                   [--warn-only] [--min-seconds 1e-6]
+"""
+
+import argparse
+import json
+import math
+import sys
+
+SCHEMA = "precis-bench/1"
+
+RESULT_FIELDS = {
+    "name": str,
+    "median_s": (int, float),
+    "p10_s": (int, float),
+    "p90_s": (int, float),
+    "iters_per_batch": (int, float),
+    "batches": (int, float),
+}
+
+
+class StructureError(Exception):
+    pass
+
+
+def load_report(path):
+    """Load and strictly validate one BENCH report; raise StructureError."""
+    try:
+        with open(path, "r", encoding="utf-8") as fh:
+            doc = json.load(fh)
+    except (OSError, json.JSONDecodeError) as e:
+        raise StructureError(f"{path}: cannot load: {e}") from e
+    if not isinstance(doc, dict):
+        raise StructureError(f"{path}: top level is not an object")
+    if doc.get("schema") != SCHEMA:
+        raise StructureError(
+            f"{path}: schema {doc.get('schema')!r} is not {SCHEMA!r}"
+        )
+    for key in ("tag", "preset"):
+        if not isinstance(doc.get(key), str):
+            raise StructureError(f"{path}: {key!r} missing or not a string")
+    results = doc.get("results")
+    if not isinstance(results, list) or not results:
+        raise StructureError(f"{path}: 'results' missing, not a list, or empty")
+    seen = set()
+    for i, r in enumerate(results):
+        if not isinstance(r, dict):
+            raise StructureError(f"{path}: results[{i}] is not an object")
+        for field, ty in RESULT_FIELDS.items():
+            if not isinstance(r.get(field), ty) or isinstance(r.get(field), bool):
+                raise StructureError(
+                    f"{path}: results[{i}].{field} missing or mistyped"
+                )
+        for field in ("median_s", "p10_s", "p90_s"):
+            v = float(r[field])
+            if not math.isfinite(v) or v < 0.0:
+                raise StructureError(
+                    f"{path}: results[{i}] ({r['name']!r}): {field} = {v}"
+                )
+        if r["name"] in seen:
+            raise StructureError(f"{path}: duplicate result name {r['name']!r}")
+        seen.add(r["name"])
+    ratios = doc.get("ratios")
+    if not isinstance(ratios, dict):
+        raise StructureError(f"{path}: 'ratios' missing or not an object")
+    for k, v in ratios.items():
+        if isinstance(v, bool) or not isinstance(v, (int, float)) or not math.isfinite(float(v)):
+            raise StructureError(f"{path}: ratio {k!r} = {v!r} is not a finite number")
+    return doc
+
+
+def human(seconds):
+    if seconds < 1e-6:
+        return f"{seconds * 1e9:.1f}ns"
+    if seconds < 1e-3:
+        return f"{seconds * 1e6:.1f}us"
+    if seconds < 1.0:
+        return f"{seconds * 1e3:.2f}ms"
+    return f"{seconds:.3f}s"
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("baseline")
+    ap.add_argument("current")
+    ap.add_argument(
+        "--threshold",
+        type=float,
+        default=0.25,
+        help="relative median slowdown tolerated before a benchmark "
+        "counts as regressed (default 0.25 = 25%%)",
+    )
+    ap.add_argument(
+        "--warn-only",
+        action="store_true",
+        help="report regressions but exit 0 (structural errors still exit 2)",
+    )
+    ap.add_argument(
+        "--min-seconds",
+        type=float,
+        default=1e-6,
+        help="ignore benchmarks whose baseline median is below this "
+        "(sub-microsecond timings are all noise on shared runners)",
+    )
+    args = ap.parse_args()
+
+    try:
+        base = load_report(args.baseline)
+        cur = load_report(args.current)
+    except StructureError as e:
+        print(f"STRUCTURE ERROR: {e}", file=sys.stderr)
+        return 2
+
+    base_by_name = {r["name"]: r for r in base["results"]}
+    cur_by_name = {r["name"]: r for r in cur["results"]}
+
+    print(
+        f"baseline {args.baseline} (tag={base['tag']}, preset={base['preset']}) "
+        f"vs current {args.current} (tag={cur['tag']}, preset={cur['preset']})"
+    )
+    if base["preset"] != cur["preset"]:
+        print(
+            f"warning: comparing different presets "
+            f"({base['preset']} vs {cur['preset']}) — overlap only"
+        )
+
+    regressions, improvements, skipped = [], [], []
+    common = [n for n in base_by_name if n in cur_by_name]
+    print(f"\n{'benchmark':<46} {'baseline':>10} {'current':>10} {'delta':>8}")
+    for name in common:
+        b, c = float(base_by_name[name]["median_s"]), float(cur_by_name[name]["median_s"])
+        if b < args.min_seconds:
+            skipped.append(name)
+            continue
+        delta = (c - b) / b
+        marker = ""
+        if delta > args.threshold:
+            regressions.append((name, delta))
+            marker = "  << REGRESSED"
+        elif delta < -args.threshold:
+            improvements.append((name, delta))
+            marker = "  (improved)"
+        print(f"{name:<46} {human(b):>10} {human(c):>10} {delta:>+7.1%}{marker}")
+
+    for name in sorted(set(base_by_name) - set(cur_by_name)):
+        print(f"warning: baseline benchmark {name!r} missing from current report")
+    for name in sorted(set(cur_by_name) - set(base_by_name)):
+        print(f"note: new benchmark {name!r} (no baseline yet)")
+    if skipped:
+        print(f"({len(skipped)} sub-{human(args.min_seconds)} benchmarks skipped as noise)")
+
+    # derived speedup ratios: informational trajectory, plus the repo's
+    # standing expectation that the blocked kernel beats the naive one
+    print(f"\n{'ratio':<56} {'baseline':>9} {'current':>9}")
+    for name in sorted(set(base["ratios"]) | set(cur["ratios"])):
+        b = base["ratios"].get(name)
+        c = cur["ratios"].get(name)
+        fmt = lambda v: f"{v:.2f}x" if v is not None else "-"
+        print(f"{name:<56} {fmt(b):>9} {fmt(c):>9}")
+    slow_blocked = [
+        (name, v)
+        for name, v in cur["ratios"].items()
+        if name.startswith("gemm_blocked_over_naive/") and float(v) < 1.0
+    ]
+    for name, v in slow_blocked:
+        print(f"warning: {name} = {float(v):.2f}x — blocked kernel slower than naive")
+
+    print(
+        f"\n{len(common)} compared, {len(regressions)} regressed, "
+        f"{len(improvements)} improved (threshold {args.threshold:.0%})"
+    )
+    if regressions:
+        for name, delta in regressions:
+            print(f"REGRESSION: {name} {delta:+.1%}", file=sys.stderr)
+        if args.warn_only:
+            print("(--warn-only: exiting 0 despite regressions)")
+            return 0
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

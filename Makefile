@@ -1,7 +1,7 @@
 # Build-time entry points.  `artifacts` is the only step that needs
 # Python/JAX; everything after it is pure cargo (DESIGN.md §2).
 
-.PHONY: verify artifacts bench clean-artifacts
+.PHONY: verify artifacts bench bench-json bench-compare clean-artifacts
 
 # tier-1 verify (ROADMAP.md)
 verify:
@@ -18,6 +18,19 @@ artifacts/.stamp: python/compile/aot.py python/compile/model.py \
 
 bench:
 	cargo bench
+
+# machine-readable perf trajectory (DESIGN.md §Perf): run the headless
+# hot-path suite and write BENCH_$(BENCH_TAG).json.  Diff two files:
+#   make bench-compare BASE=BENCH_pr4_baseline.json CUR=BENCH_local.json
+BENCH_TAG ?= local
+bench-json:
+	cargo run --release --bin repro -- bench --preset full \
+		--tag $(BENCH_TAG) --json BENCH_$(BENCH_TAG).json
+
+BASE ?= BENCH_pr4_baseline.json
+CUR ?= BENCH_local.json
+bench-compare:
+	python3 .github/scripts/bench_compare.py $(BASE) $(CUR)
 
 clean-artifacts:
 	rm -rf artifacts

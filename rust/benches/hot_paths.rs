@@ -1,85 +1,32 @@
 //! Micro-benchmarks of the hot paths (in-repo harness; criterion is not
 //! in the offline crate set — DESIGN.md §6).  Run: `cargo bench`.
 //!
-//! Sections: quantizer kernels, quantized GEMM (blocked vs the retained
-//! naive reference — the ISSUE 1 ≥2x acceptance gate), native forward
-//! passes, PJRT batch execution (`pjrt` feature).  These are the
-//! §Perf L3 measurement points — before/after numbers live in
-//! CHANGES.md / EXPERIMENTS.md.
+//! The headless sections (quantizer kernels, monomorphized-vs-scalar
+//! `q_slice`, blocked-vs-naive quantized GEMM, fixture forward with a
+//! mixed per-layer plan) are the shared `bench_harness::suite` — the
+//! exact suite `repro bench --json` runs for the perf-regression
+//! pipeline, so this bench and the `BENCH_*.json` trajectory can never
+//! measure different code.  Artifact-dependent sections (zoo forward
+//! passes, PJRT batch execution) follow and skip gracefully without
+//! `artifacts/`.  These are the §Perf L3 measurement points.
+//!
+//! Env knobs: `PRECIS_BENCH_QUICK=1` runs the quick preset;
+//! `PRECIS_BENCH_JSON=path.json` additionally writes the headless
+//! suite's machine-readable report.
 
-use precis::bench_harness::{section, Bench};
+use precis::bench_harness::{section, suite, Bench};
 use precis::formats::{Format, PrecisionSpec};
-use precis::nn::{gemm_q, gemm_q_naive, Zoo};
-use precis::numerics::{dot_q, Quantizer};
+use precis::nn::Zoo;
 use precis::serving::{Backend, NativeBackend};
-use precis::util::rng::Pcg32;
 
 const ARTIFACTS: &str = concat!(env!("CARGO_MANIFEST_DIR"), "/../artifacts");
 
-fn randv(n: usize, seed: u64) -> Vec<f32> {
-    let mut r = Pcg32::seeded(seed);
-    (0..n).map(|_| r.normal()).collect()
-}
-
-/// GEMM shapes of the seed networks' conv (im2col) and dense layers at
-/// batch 32: (M, K, N) = (b*oh*ow, kh*kw*cin, cout) / (b, in, out).
-const GEMM_SHAPES: [(usize, usize, usize); 4] = [
-    (25088, 25, 20), // lenet5 conv1 at batch 32: 5x5x1 -> 20
-    (32, 400, 120),  // lenet5 dense1 at batch 32: 400 -> 120
-    (6272, 147, 24), // cifarnet conv1 at batch 32: 7x7x3 -> 24
-    (3200, 432, 48), // alexnet-mini conv2 at batch 32: 3x3x48 -> 48
-];
-
 fn main() {
-    let mut b = Bench::default();
-
-    section("quantizer");
-    let xs = randv(4096, 1);
-    for fmt in [Format::float(7, 6), Format::SINGLE, Format::fixed(8, 8)] {
-        let q = Quantizer::new(&fmt);
-        let mut buf = xs.clone();
-        let r = b.run(&format!("quantize_slice/4096/{}", fmt.id()), || {
-            buf.copy_from_slice(&xs);
-            precis::numerics::quantize_slice(&mut buf, &q);
-            buf[0]
-        });
-        println!("    -> {:.0} Melem/s", r.throughput(4096.0) / 1e6);
-    }
-
-    section("dot_q (per-op-rounded MAC chain)");
-    for k in [256usize, 1000] {
-        let a = randv(k, 2);
-        let w = randv(k, 3);
-        for fmt in [Format::float(7, 6), Format::fixed(8, 8)] {
-            let q = Quantizer::new(&fmt);
-            let r = b.run(&format!("dot_q/K={k}/{}", fmt.id()), || dot_q(&a, &w, &q));
-            println!("    -> {:.1} Mmac/s", r.throughput(k as f64) / 1e6);
-        }
-    }
-
-    section("gemm_q: blocked kernel vs naive reference (seed-net shapes)");
-    for (m, k, n) in GEMM_SHAPES {
-        let a = randv(m * k, 4);
-        let w = randv(k * n, 5);
-        let mut out = vec![0.0f32; m * n];
-        let macs = (m * k * n) as f64;
-        for fmt in [Format::float(7, 6), Format::fixed(8, 8), Format::SINGLE] {
-            let q = Quantizer::new(&fmt);
-            let blocked = b.run(&format!("gemm_q/{m}x{k}x{n}/{}", fmt.id()), || {
-                gemm_q(&a, &w, &mut out, m, k, n, &q);
-                out[0]
-            });
-            let naive = b.run(&format!("gemm_q_naive/{m}x{k}x{n}/{}", fmt.id()), || {
-                gemm_q_naive(&a, &w, &mut out, m, k, n, &q);
-                out[0]
-            });
-            println!(
-                "    -> blocked {:.1} Mmac/s, naive {:.1} Mmac/s: {:.2}x",
-                blocked.throughput(macs) / 1e6,
-                naive.throughput(macs) / 1e6,
-                naive.median / blocked.median
-            );
-        }
+    let quick = std::env::var("PRECIS_BENCH_QUICK").is_ok();
+    let report = suite::hot_paths_report("hot_paths", quick);
+    if let Ok(path) = std::env::var("PRECIS_BENCH_JSON") {
+        report.save(std::path::Path::new(&path)).expect("write bench json");
+        println!("\n(wrote {path})");
     }
 
     // artifact-dependent benches are skipped gracefully when absent
@@ -87,6 +34,7 @@ fn main() {
         println!("\n(artifacts/ missing — run `make artifacts` for the network benches)");
         return;
     };
+    let mut b = if quick { Bench::quick() } else { Bench::default() };
 
     section("native forward via serving::Backend (batch 32)");
     for name in ["lenet5", "cifarnet", "alexnet-mini", "vgg-mini", "googlenet-mini"] {

@@ -4,8 +4,12 @@
 //! Figures that need accuracy sweeps are benched at reduced sample
 //! counts/strides — the point is tracking the *cost* of each pipeline,
 //! not regenerating publication data (use `repro figures` for that).
+//!
+//! `PRECIS_BENCH_JSON=path.json` writes the results as a
+//! machine-readable `BENCH_*.json` report (`bench_compare.py` diffs
+//! two; DESIGN.md §Perf).
 
-use precis::bench_harness::{section, Bench};
+use precis::bench_harness::{section, Bench, BenchReport};
 use precis::coordinator::cache::ResultCache;
 use precis::coordinator::Coordinator;
 use precis::eval::sweep::EvalOptions;
@@ -23,6 +27,7 @@ fn main() {
 
     let Ok(zoo) = Zoo::load(concat!(env!("CARGO_MANIFEST_DIR"), "/../artifacts")) else {
         println!("(artifacts/ missing — run `make artifacts` for the sweep benches)");
+        save_json_if_requested(b);
         return;
     };
     let opts = EvalOptions { samples: 32, batch: 32 };
@@ -71,5 +76,23 @@ fn main() {
         b.run("search_cifarnet/float_ladder", || {
             search(&cifar, &spec, &model).unwrap().sample_forwards
         });
+    }
+    save_json_if_requested(b);
+}
+
+/// Honor `PRECIS_BENCH_JSON` like the hot_paths bench: dump everything
+/// measured so far as a machine-readable report.  An empty report is
+/// never written — `bench_compare.py` strictly rejects reports with no
+/// results, so an empty file could only poison a comparison.
+fn save_json_if_requested(b: Bench) {
+    if let Ok(path) = std::env::var("PRECIS_BENCH_JSON") {
+        let mut report = BenchReport::new("paper_figures", "quick");
+        report.results = b.into_results();
+        if report.results.is_empty() {
+            println!("\n(nothing measured — not writing {path})");
+            return;
+        }
+        report.save(std::path::Path::new(&path)).expect("write bench json");
+        println!("\n(wrote {path})");
     }
 }

@@ -1,15 +1,42 @@
 //! In-repo micro-benchmark framework (criterion is not in the offline
 //! crate set — DESIGN.md §6).  Used by the `[[bench]]` targets with
-//! `harness = false`.
+//! `harness = false`, and by `repro bench` for the machine-readable
+//! perf-regression pipeline (DESIGN.md §Perf).
 //!
 //! Protocol per benchmark: warm up for `warmup_iters`, then run timed
-//! batches until `min_time` elapses (at least `min_batches`), and report
-//! median / p10 / p90 per-iteration time plus derived throughput.
+//! batches until `min_time` elapses (at least `min_batches`, at most
+//! [`MAX_BATCHES`]), and report median / p10 / p90 per-iteration time
+//! plus derived throughput.  The statistics ([`percentile`],
+//! [`summarize`]) and the stopping rule ([`Bench::keep_sampling`]) are
+//! plain functions over synthetic-testable inputs, so the harness
+//! itself is unit-tested without timing anything.
+//!
+//! [`BenchResult`] and [`BenchReport`] serialize to/from the crate's
+//! mini-JSON: `repro bench --json BENCH_<tag>.json` writes a report the
+//! checked-in `.github/scripts/bench_compare.py` diffs against a
+//! baseline with a noise-tolerant threshold — that pair is the repo's
+//! perf-regression harness and the source of the `BENCH_*.json`
+//! trajectory.
 
+pub mod suite;
+
+use std::collections::BTreeMap;
 use std::hint::black_box;
+use std::path::Path;
 use std::time::Instant;
 
-#[derive(Clone, Debug)]
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// Hard cap on timed batches per benchmark — bounds runaway cases where
+/// `min_time` never elapses cheaply.
+pub const MAX_BATCHES: usize = 10_000;
+
+/// Schema tag `bench_compare.py` validates strictly before comparing.
+pub const BENCH_SCHEMA: &str = "precis-bench/1";
+
+#[derive(Clone, Debug, PartialEq)]
 pub struct BenchResult {
     pub name: String,
     /// seconds per iteration
@@ -23,6 +50,70 @@ pub struct BenchResult {
 impl BenchResult {
     pub fn throughput(&self, units_per_iter: f64) -> f64 {
         units_per_iter / self.median
+    }
+
+    /// The machine-readable form consumed by `bench_compare.py`.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::str(&self.name)),
+            ("median_s", Json::num(self.median)),
+            ("p10_s", Json::num(self.p10)),
+            ("p90_s", Json::num(self.p90)),
+            ("iters_per_batch", Json::num(self.iters_per_batch as f64)),
+            ("batches", Json::num(self.batches as f64)),
+        ])
+    }
+
+    /// Parse one result object.  Malformed input (missing keys, wrong
+    /// types, non-finite or negative timings) is `Err` — never a panic.
+    pub fn from_json(j: &Json) -> Result<BenchResult> {
+        let name = j
+            .req("name")?
+            .as_str()
+            .ok_or_else(|| anyhow!("result name is not a string"))?
+            .to_string();
+        let num = |key: &str| -> Result<f64> {
+            let v = j
+                .req(key)?
+                .as_f64()
+                .ok_or_else(|| anyhow!("result {name:?}: {key} is not a number"))?;
+            if !v.is_finite() || v < 0.0 {
+                bail!("result {name:?}: {key} = {v} is not a finite non-negative number");
+            }
+            Ok(v)
+        };
+        Ok(BenchResult {
+            median: num("median_s")?,
+            p10: num("p10_s")?,
+            p90: num("p90_s")?,
+            iters_per_batch: num("iters_per_batch")? as u64,
+            batches: num("batches")? as usize,
+            name,
+        })
+    }
+}
+
+/// Exact order statistic the harness reports: the element at index
+/// `floor((len - 1) * q)` of the sorted samples (no interpolation — a
+/// reported time is always one that was measured).
+pub fn percentile(sorted: &[f64], q: f64) -> f64 {
+    assert!(!sorted.is_empty(), "percentile of an empty sample set");
+    sorted[((sorted.len() - 1) as f64 * q) as usize]
+}
+
+/// Reduce raw per-iteration batch timings to a [`BenchResult`] —
+/// the selection logic of [`Bench::run`], separated so tests can feed
+/// synthetic timing sequences.
+pub fn summarize(name: &str, mut samples: Vec<f64>, iters_per_batch: u64) -> BenchResult {
+    assert!(!samples.is_empty(), "summarize needs at least one batch");
+    samples.sort_by(|a, b| a.partial_cmp(b).expect("timings are finite"));
+    BenchResult {
+        name: name.to_string(),
+        median: percentile(&samples, 0.5),
+        p10: percentile(&samples, 0.1),
+        p90: percentile(&samples, 0.9),
+        iters_per_batch,
+        batches: samples.len(),
     }
 }
 
@@ -49,6 +140,12 @@ impl Bench {
         Bench { warmup_iters: 1, min_batches: 5, min_time_s: 0.1, ..Default::default() }
     }
 
+    /// The stopping rule: sample another batch while the batch floor or
+    /// the time floor is unmet, and the [`MAX_BATCHES`] cap is not hit.
+    pub fn keep_sampling(&self, batches: usize, elapsed_s: f64) -> bool {
+        batches < MAX_BATCHES && (batches < self.min_batches || elapsed_s < self.min_time_s)
+    }
+
     /// Time `f` (one logical iteration per call).
     pub fn run<R>(&mut self, name: &str, mut f: impl FnMut() -> R) -> BenchResult {
         // warmup + calibrate iterations per batch to ~10ms
@@ -61,28 +158,14 @@ impl Bench {
 
         let mut samples = Vec::new();
         let bench_start = Instant::now();
-        while samples.len() < self.min_batches
-            || bench_start.elapsed().as_secs_f64() < self.min_time_s
-        {
+        while self.keep_sampling(samples.len(), bench_start.elapsed().as_secs_f64()) {
             let t = Instant::now();
             for _ in 0..iters {
                 black_box(f());
             }
             samples.push(t.elapsed().as_secs_f64() / iters as f64);
-            if samples.len() > 10_000 {
-                break;
-            }
         }
-        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        let pick = |q: f64| samples[((samples.len() - 1) as f64 * q) as usize];
-        let r = BenchResult {
-            name: name.to_string(),
-            median: pick(0.5),
-            p10: pick(0.1),
-            p90: pick(0.9),
-            iters_per_batch: iters,
-            batches: samples.len(),
-        };
+        let r = summarize(name, samples, iters);
         println!(
             "{:<44} {:>12}/iter   (p10 {:>10}, p90 {:>10}, {} x {} iters)",
             r.name,
@@ -98,6 +181,108 @@ impl Bench {
 
     pub fn results(&self) -> &[BenchResult] {
         &self.results
+    }
+
+    /// Consume the harness, yielding everything it measured (what a
+    /// [`BenchReport`] is assembled from).
+    pub fn into_results(self) -> Vec<BenchResult> {
+        self.results
+    }
+}
+
+/// One `BENCH_*.json` file: a tagged set of results plus the derived
+/// speedup ratios the acceptance gates read (blocked-vs-naive GEMM,
+/// uniform-vs-mixed-plan forward, ...).  Strictly schema-tagged so a
+/// comparison between incompatible files fails loudly.
+#[derive(Clone, Debug, PartialEq)]
+pub struct BenchReport {
+    pub tag: String,
+    /// `"quick"` or `"full"` — which suite preset produced it.
+    pub preset: String,
+    pub results: Vec<BenchResult>,
+    /// named speedup ratios (dimensionless, > 1.0 means the first-named
+    /// side is faster), e.g. `gemm_blocked_over_naive/<shape>/<fmt>`
+    pub ratios: BTreeMap<String, f64>,
+}
+
+impl BenchReport {
+    pub fn new(tag: &str, preset: &str) -> BenchReport {
+        BenchReport {
+            tag: tag.to_string(),
+            preset: preset.to_string(),
+            results: Vec::new(),
+            ratios: BTreeMap::new(),
+        }
+    }
+
+    /// Record a derived speedup ratio.
+    pub fn ratio(&mut self, name: &str, value: f64) {
+        self.ratios.insert(name.to_string(), value);
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("schema", Json::str(BENCH_SCHEMA)),
+            ("tag", Json::str(&self.tag)),
+            ("preset", Json::str(&self.preset)),
+            ("results", Json::arr(self.results.iter().map(|r| r.to_json()))),
+            (
+                "ratios",
+                Json::Obj(self.ratios.iter().map(|(k, v)| (k.clone(), Json::num(*v))).collect()),
+            ),
+        ])
+    }
+
+    /// Parse a report object; any structural defect is `Err`.
+    pub fn from_json(j: &Json) -> Result<BenchReport> {
+        let schema = j.req("schema")?.as_str().unwrap_or_default();
+        if schema != BENCH_SCHEMA {
+            bail!("unsupported bench schema {schema:?} (want {BENCH_SCHEMA:?})");
+        }
+        let field = |key: &str| -> Result<String> {
+            Ok(j.req(key)?
+                .as_str()
+                .ok_or_else(|| anyhow!("{key} is not a string"))?
+                .to_string())
+        };
+        let results = j
+            .req("results")?
+            .as_arr()
+            .ok_or_else(|| anyhow!("results is not an array"))?
+            .iter()
+            .map(BenchResult::from_json)
+            .collect::<Result<Vec<_>>>()?;
+        let mut ratios = BTreeMap::new();
+        for (k, v) in j
+            .req("ratios")?
+            .as_obj()
+            .ok_or_else(|| anyhow!("ratios is not an object"))?
+        {
+            let r = v.as_f64().ok_or_else(|| anyhow!("ratio {k:?} is not a number"))?;
+            if !r.is_finite() {
+                bail!("ratio {k:?} = {r} is not finite");
+            }
+            ratios.insert(k.clone(), r);
+        }
+        Ok(BenchReport { tag: field("tag")?, preset: field("preset")?, results, ratios })
+    }
+
+    /// Parse a whole `BENCH_*.json` text.  Malformed JSON and schema
+    /// violations are `Err`, never a panic.
+    pub fn parse(text: &str) -> Result<BenchReport> {
+        let j = Json::parse(text).context("BENCH json does not parse")?;
+        BenchReport::from_json(&j)
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        std::fs::write(path, format!("{}\n", self.to_json()))
+            .with_context(|| format!("writing {}", path.display()))
+    }
+
+    pub fn load(path: &Path) -> Result<BenchReport> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        BenchReport::parse(&text)
     }
 }
 
@@ -136,5 +321,130 @@ mod tests {
             batches: 1,
         };
         assert!((r.throughput(10.0) - 5000.0).abs() < 1e-9);
+    }
+
+    /// Exact selection (ISSUE 4 satellite): on a known synthetic timing
+    /// sequence, median/p10/p90 are the exact elements at indices
+    /// `floor((len-1)*q)` of the sorted sequence — no interpolation.
+    #[test]
+    fn summarize_selects_exact_order_statistics() {
+        // 5 samples, shuffled: sorted = [1, 2, 3, 4, 5] (ms)
+        let r = summarize("synthetic", vec![0.005, 0.001, 0.004, 0.002, 0.003], 7);
+        assert_eq!(r.median, 0.003); // idx (4 * 0.5) = 2
+        assert_eq!(r.p10, 0.001); // idx (4 * 0.1) = 0
+        assert_eq!(r.p90, 0.004); // idx (4 * 0.9) = 3
+        assert_eq!(r.iters_per_batch, 7);
+        assert_eq!(r.batches, 5);
+
+        // 10 samples 1..=10: median idx 4 -> 5, p10 idx 0 -> 1, p90 idx 8 -> 9
+        let seq: Vec<f64> = (1..=10).rev().map(|i| i as f64).collect();
+        let r = summarize("synthetic10", seq, 1);
+        assert_eq!(r.median, 5.0);
+        assert_eq!(r.p10, 1.0);
+        assert_eq!(r.p90, 9.0);
+
+        // a single sample is every statistic
+        let r = summarize("one", vec![0.25], 1);
+        assert_eq!((r.p10, r.median, r.p90), (0.25, 0.25, 0.25));
+    }
+
+    /// The stopping rule in isolation: batch floor OR time floor keeps
+    /// sampling, both met stops, and the hard cap always stops.
+    #[test]
+    fn keep_sampling_stopping_rule() {
+        let b = Bench { min_batches: 5, min_time_s: 0.5, ..Bench::default() };
+        assert!(b.keep_sampling(0, 0.0), "must take at least one batch");
+        assert!(b.keep_sampling(4, 100.0), "batch floor unmet: keep going despite time");
+        assert!(b.keep_sampling(5, 0.49), "time floor unmet: keep going despite batches");
+        assert!(!b.keep_sampling(5, 0.5), "both floors met: stop");
+        assert!(!b.keep_sampling(17, 2.0), "well past both floors: stop");
+        // the hard cap is exact: one more batch is allowed at
+        // MAX_BATCHES - 1, none at MAX_BATCHES
+        assert!(b.keep_sampling(MAX_BATCHES - 1, 0.0), "one below the cap still samples");
+        assert!(!b.keep_sampling(MAX_BATCHES, 0.0), "hard cap dominates the time floor");
+    }
+
+    #[test]
+    fn bench_result_json_roundtrip_is_exact() {
+        let r = BenchResult {
+            name: "gemm_q/32x400x120/float:m7e6".into(),
+            median: 2.537e-5,
+            p10: 2.4e-5,
+            p90: 3.1e-5,
+            iters_per_batch: 394,
+            batches: 21,
+        };
+        let parsed = Json::parse(&r.to_json().to_string()).unwrap();
+        let back = BenchResult::from_json(&parsed).unwrap();
+        // f64 Display round-trips exactly, so the timings survive bitwise
+        assert_eq!(back, r);
+        assert_eq!(back.median.to_bits(), r.median.to_bits());
+    }
+
+    #[test]
+    fn bench_report_json_roundtrip() {
+        let mut rep = BenchReport::new("unit", "quick");
+        rep.results.push(BenchResult {
+            name: "a".into(),
+            median: 0.5,
+            p10: 0.25,
+            p90: 0.75,
+            iters_per_batch: 2,
+            batches: 3,
+        });
+        rep.ratio("gemm_blocked_over_naive/1x2x3/float:m7e6", 2.25);
+        let back = BenchReport::parse(&rep.to_json().to_string()).unwrap();
+        assert_eq!(back, rep);
+    }
+
+    /// Malformed input is `Err`, never a panic (ISSUE 4 satellite).
+    #[test]
+    fn malformed_bench_json_is_err_not_panic() {
+        // not JSON at all
+        assert!(BenchReport::parse("]]]").is_err());
+        assert!(BenchReport::parse("").is_err());
+        // valid JSON, wrong shape
+        assert!(BenchReport::parse("[1, 2, 3]").is_err());
+        assert!(BenchReport::parse(r#"{"schema": "precis-bench/1"}"#).is_err());
+        // wrong schema tag
+        assert!(BenchReport::parse(
+            r#"{"schema": "other/9", "tag": "t", "preset": "quick", "results": [], "ratios": {}}"#
+        )
+        .is_err());
+        // result entries with missing keys / wrong types / bad values
+        let r = |body: &str| {
+            BenchReport::parse(&format!(
+                r#"{{"schema": "precis-bench/1", "tag": "t", "preset": "quick",
+                     "results": [{body}], "ratios": {{}}}}"#
+            ))
+        };
+        assert!(r(r#"{"name": "x"}"#).is_err(), "missing timing keys");
+        assert!(r(r#"{"name": 3, "median_s": 1, "p10_s": 1, "p90_s": 1,
+                      "iters_per_batch": 1, "batches": 1}"#)
+            .is_err());
+        assert!(r(r#"{"name": "x", "median_s": -1, "p10_s": 1, "p90_s": 1,
+                      "iters_per_batch": 1, "batches": 1}"#)
+            .is_err());
+        assert!(r(r#"{"name": "x", "median_s": 1, "p10_s": 1, "p90_s": 1,
+                      "iters_per_batch": 1, "batches": 1}"#)
+            .is_ok());
+        // a non-numeric ratio
+        assert!(BenchReport::parse(
+            r#"{"schema": "precis-bench/1", "tag": "t", "preset": "quick",
+                "results": [], "ratios": {"r": "fast"}}"#
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn report_save_load_roundtrip() {
+        let dir = std::env::temp_dir().join("precis_bench_harness_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("BENCH_unit.json");
+        let mut rep = BenchReport::new("unit", "full");
+        rep.ratio("x", 1.5);
+        rep.save(&path).unwrap();
+        assert_eq!(BenchReport::load(&path).unwrap(), rep);
+        std::fs::remove_file(&path).ok();
     }
 }

@@ -1,0 +1,197 @@
+//! The headless `hot_paths` benchmark suite — the artifact-free half of
+//! `benches/hot_paths.rs`, shared with the `repro bench` subcommand so
+//! the interactive bench and the perf-regression pipeline can never
+//! measure different code (DESIGN.md §Perf).
+//!
+//! Every section runs on a fresh clone with no `artifacts/`: the
+//! quantizer and GEMM kernels use synthetic operands at seed-net
+//! shapes, and the forward sections use the deterministic
+//! `testing::fixtures::tiny_conv_network`.  Results and the derived
+//! speedup ratios are collected into a [`BenchReport`] for
+//! `BENCH_*.json` / `bench_compare.py`.
+
+use crate::bench_harness::{section, Bench, BenchReport, BenchResult};
+use crate::formats::{Format, PrecisionSpec};
+use crate::nn::{gemm_q, gemm_q_naive};
+use crate::numerics::{dot_q, quantize_slice, Quantizer};
+use crate::serving::{Backend, NativeBackend};
+use crate::testing::fixtures::tiny_conv_network;
+use crate::util::rng::Pcg32;
+use crate::with_quant_op;
+
+/// GEMM shapes of the seed networks' conv (im2col) and dense layers at
+/// batch 32: (M, K, N) = (b*oh*ow, kh*kw*cin, cout) / (b, in, out).
+pub const GEMM_SHAPES: [(usize, usize, usize); 4] = [
+    (25088, 25, 20), // lenet5 conv1 at batch 32: 5x5x1 -> 20
+    (32, 400, 120),  // lenet5 dense1 at batch 32: 400 -> 120
+    (6272, 147, 24), // cifarnet conv1 at batch 32: 7x7x3 -> 24
+    (3200, 432, 48), // alexnet-mini conv2 at batch 32: 3x3x48 -> 48
+];
+
+/// The three kernel kinds under test: a customized float, a customized
+/// fixed, and the `QIdentity` exact baseline.
+fn formats_under_test() -> [Format; 3] {
+    [Format::float(7, 6), Format::fixed(8, 8), Format::SINGLE]
+}
+
+fn randv(n: usize, seed: u64) -> Vec<f32> {
+    let mut r = Pcg32::seeded(seed);
+    (0..n).map(|_| r.normal()).collect()
+}
+
+fn ratio(num: &BenchResult, den: &BenchResult) -> f64 {
+    num.median / den.median
+}
+
+/// Run the headless hot-path suite and assemble the machine-readable
+/// report.  `quick` trades coverage (2 GEMM shapes instead of 4) and
+/// per-bench time floors for wall-clock — it is the CI perf-smoke
+/// preset; `full` is the `make bench-json` trajectory preset.
+pub fn hot_paths_report(tag: &str, quick: bool) -> BenchReport {
+    let mut bench = if quick { Bench::quick() } else { Bench::default() };
+    let mut report = BenchReport::new(tag, if quick { "quick" } else { "full" });
+    let shapes = if quick { &GEMM_SHAPES[..2] } else { &GEMM_SHAPES[..] };
+    run_suite(&mut bench, &mut report, 4096, &[256, 1000], shapes, 32);
+    report
+}
+
+/// The suite body, parameterized over problem sizes so the structural
+/// unit test can run it at trivial sizes (names and ratio families are
+/// identical either way; only the dimension strings differ).
+fn run_suite(
+    bench: &mut Bench,
+    report: &mut BenchReport,
+    slice_len: usize,
+    dot_ks: &[usize],
+    gemm_shapes: &[(usize, usize, usize)],
+    fwd_batch: usize,
+) {
+    section("q_slice: monomorphized kernel vs scalar enum-dispatch reference");
+    let xs = randv(slice_len, 1);
+    let mut buf = xs.clone();
+    for fmt in formats_under_test() {
+        let q = Quantizer::new(&fmt);
+        let mono = bench.run(&format!("q_slice/{slice_len}/{}", fmt.id()), || {
+            buf.copy_from_slice(&xs);
+            quantize_slice(&mut buf, &q);
+            buf[0]
+        });
+        let scalar = bench.run(&format!("q_slice_scalar/{slice_len}/{}", fmt.id()), || {
+            buf.copy_from_slice(&xs);
+            for v in buf.iter_mut() {
+                *v = q.q(*v);
+            }
+            buf[0]
+        });
+        report.ratio(&format!("q_slice_mono_over_scalar/{}", fmt.id()), ratio(&scalar, &mono));
+        println!(
+            "    -> mono {:.0} Melem/s, scalar {:.0} Melem/s: {:.2}x",
+            mono.throughput(slice_len as f64) / 1e6,
+            scalar.throughput(slice_len as f64) / 1e6,
+            ratio(&scalar, &mono),
+        );
+    }
+
+    section("dot_q (per-op-rounded MAC chain, scalar reference)");
+    for &k in dot_ks {
+        let a = randv(k, 2);
+        let w = randv(k, 3);
+        for fmt in [Format::float(7, 6), Format::fixed(8, 8)] {
+            let q = Quantizer::new(&fmt);
+            let r = bench.run(&format!("dot_q/K={k}/{}", fmt.id()), || dot_q(&a, &w, &q));
+            println!("    -> {:.1} Mmac/s", r.throughput(k as f64) / 1e6);
+        }
+    }
+
+    section("gemm_q: monomorphized blocked kernel vs scalar naive reference");
+    for &(m, k, n) in gemm_shapes {
+        let a = randv(m * k, 4);
+        let w = randv(k * n, 5);
+        let mut out = vec![0.0f32; m * n];
+        let macs = (m * k * n) as f64;
+        for fmt in formats_under_test() {
+            let q = Quantizer::new(&fmt);
+            let blocked = bench.run(&format!("gemm_q/{m}x{k}x{n}/{}", fmt.id()), || {
+                with_quant_op!(&q, op => gemm_q(&a, &w, &mut out, m, k, n, op));
+                out[0]
+            });
+            let naive = bench.run(&format!("gemm_q_naive/{m}x{k}x{n}/{}", fmt.id()), || {
+                gemm_q_naive(&a, &w, &mut out, m, k, n, &q);
+                out[0]
+            });
+            report.ratio(
+                &format!("gemm_blocked_over_naive/{m}x{k}x{n}/{}", fmt.id()),
+                ratio(&naive, &blocked),
+            );
+            println!(
+                "    -> blocked {:.1} Mmac/s, naive {:.1} Mmac/s: {:.2}x",
+                blocked.throughput(macs) / 1e6,
+                naive.throughput(macs) / 1e6,
+                ratio(&naive, &blocked),
+            );
+        }
+    }
+
+    section("fixture forward: uniform format vs mixed per-layer plan (no artifacts)");
+    let net = tiny_conv_network(fwd_batch);
+    let x = net.eval_x.slice_rows(0, fwd_batch);
+    let uniform = PrecisionSpec::parse("float:m7e6").expect("uniform spec parses");
+    let mixed = PrecisionSpec::parse("plan:c1=fixed:l8r8,*=float:m7e6").expect("plan parses");
+    let mut backend = NativeBackend::new(net.clone());
+    let u = bench.run(&format!("forward/tiny-conv/uniform/batch{fwd_batch}"), || {
+        backend.run_spec(&x, &uniform).expect("fixture forward").data()[0]
+    });
+    let p = bench.run(&format!("forward_plan/tiny-conv/mixed/batch{fwd_batch}"), || {
+        backend.run_spec(&x, &mixed).expect("fixture plan forward").data()[0]
+    });
+    // the memoized quantizer table means a mixed plan must cost what a
+    // uniform format costs (≈1.0x) — drift here is a plans regression
+    report.ratio("plan_uniform_over_mixed/tiny-conv", ratio(&u, &p));
+    println!("    -> uniform/mixed ratio {:.2}x (contract: ~1.0x)", ratio(&u, &p));
+
+    report.results.extend_from_slice(bench.results());
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The suite is the regression harness's data source: its report
+    /// must always carry the result names and the ratio families that
+    /// `bench_compare.py` and the acceptance gates read, and must
+    /// round-trip the JSON schema.  Run at trivial problem sizes with
+    /// the smallest stopping rule, so this stays fast under the debug
+    /// tier-1 `cargo test`.
+    #[test]
+    fn suite_report_has_the_gated_sections_and_roundtrips() {
+        let mut bench = Bench { warmup_iters: 1, min_batches: 2, min_time_s: 0.0, ..Bench::quick() };
+        let mut report = BenchReport::new("unit-test", "quick");
+        run_suite(&mut bench, &mut report, 64, &[16], &[(10, 7, 9), (3, 5, 4)], 4);
+
+        assert!(report.results.len() >= 10, "suspiciously few results");
+        assert!(
+            report.ratios.keys().any(|k| k.starts_with("gemm_blocked_over_naive/")),
+            "missing blocked-vs-naive ratios"
+        );
+        assert!(
+            report.ratios.contains_key("plan_uniform_over_mixed/tiny-conv"),
+            "missing mixed-plan ratio"
+        );
+        assert!(
+            report.ratios.keys().any(|k| k.starts_with("q_slice_mono_over_scalar/")),
+            "missing q_slice ratios"
+        );
+        for (k, v) in &report.ratios {
+            assert!(v.is_finite() && *v > 0.0, "ratio {k} = {v}");
+        }
+        // every result name is unique (bench_compare keys on them)
+        let mut names: Vec<&str> = report.results.iter().map(|r| r.name.as_str()).collect();
+        names.sort_unstable();
+        let before = names.len();
+        names.dedup();
+        assert_eq!(names.len(), before, "duplicate bench names");
+
+        let back = BenchReport::parse(&report.to_json().to_string()).unwrap();
+        assert_eq!(back, report);
+    }
+}

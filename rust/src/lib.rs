@@ -26,7 +26,9 @@
 //! * [`util`]       — PRNG, mini-JSON, CLI parsing, timing (offline-build
 //!                    substrates; see DESIGN.md §6)
 //! * [`testing`]    — in-repo property-testing framework
-//! * [`bench_harness`] — in-repo micro-benchmark framework
+//! * [`bench_harness`] — micro-benchmark framework + the machine-readable
+//!                    `BENCH_*.json` perf-regression pipeline
+//!                    (`repro bench --json`, DESIGN.md §Perf)
 //!
 //! Quickstart (after `make artifacts`; see README.md):
 //!

@@ -11,6 +11,8 @@
 //!   figures                      regenerate all figures into --out
 //!   serve    --sessions K,...    multi-model gateway under closed-loop
 //!                                load; K = net@format
+//!   bench    [--json PATH]       headless hot-path suite; --json writes
+//!                                the machine-readable BENCH report
 //!   bench-sweep --net N          quick sequential sweep timing
 //!
 //! Common flags: --artifacts DIR (default artifacts), --out DIR (default
@@ -43,7 +45,7 @@ fn main() {
     }
 }
 
-const USAGE: &str = "usage: repro <info|eval|sweep|search|plan|trace|figure|figures|serve|bench-sweep> [flags]
+const USAGE: &str = "usage: repro <info|eval|sweep|search|plan|trace|figure|figures|serve|bench|bench-sweep> [flags]
   repro info
   repro eval   --net lenet5 --format float:m7e6|plan:... [--samples 128] [--backend native|pjrt]
   repro sweep  --net lenet5 [--samples 128] [--stride 1]
@@ -55,6 +57,9 @@ const USAGE: &str = "usage: repro <info|eval|sweep|search|plan|trace|figure|figu
   repro figures [--out results]
   repro serve  --sessions lenet5@float:m7e6,lenet5@plan:conv1=float:m4e5,*=fixed:l8r8
                [--requests 256] [--clients 8] [--wait-ms 5] [--backend native|pjrt|auto]
+  repro bench  [--preset quick|full] [--tag T] [--json BENCH_T.json]
+               (headless: no artifacts needed; compare files with
+                .github/scripts/bench_compare.py)
   repro bench-sweep --net lenet5 [--stride 1]
 common: --artifacts DIR --out DIR --samples N --workers W --seed S";
 
@@ -311,6 +316,29 @@ fn run(raw: &[String]) -> Result<()> {
             );
             let fin = gateway.shutdown();
             println!("served {} requests in {} batches total", fin.total_requests(), fin.total_batches());
+        }
+        "bench" => {
+            // the headless hot-path suite + machine-readable report
+            // (the perf-regression pipeline; DESIGN.md §Perf)
+            let preset = args.get_or("preset", "quick");
+            let quick = match preset {
+                "quick" => true,
+                "full" => false,
+                p => bail!("unknown --preset {p:?} (quick|full)"),
+            };
+            let tag = args.get_or("tag", preset);
+            let t = Timer::start();
+            let report = precis::bench_harness::suite::hot_paths_report(tag, quick);
+            eprintln!("\n# hot_paths suite ({preset}) in {:.1}s", t.elapsed_s());
+            if let Some(path) = args.get("json") {
+                report.save(std::path::Path::new(path))?;
+                println!(
+                    "wrote {path} ({} results, {} ratios; diff two files with \
+                     .github/scripts/bench_compare.py)",
+                    report.results.len(),
+                    report.ratios.len()
+                );
+            }
         }
         "bench-sweep" => {
             // quick sequential sweep timing (perf work; listed in USAGE)

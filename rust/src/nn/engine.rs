@@ -26,6 +26,13 @@
 //! is the M/N cache-blocked [`gemm_q`] with a strictly serial k chain
 //! per output element (§Perf L3 target; DESIGN.md §4).
 //!
+//! Every quantized kernel here is **monomorphized** per representation
+//! kind (DESIGN.md §Perf): each layer's [`Quantizer`] is dispatched
+//! ONCE per kernel call via [`crate::with_quant_op!`], selecting the
+//! `gemm_q::<Q>` / `add_bias_q::<Q>` / `gavgpool_q::<Q>` instantiation
+//! for `QFloat` / `QFixed` / `QIdentity` — so no kind branch survives
+//! inside any per-MAC loop.
+//!
 //! `Engine` is crate-private: all consumers — offline sweeps and the
 //! request path alike — run it through `serving::NativeBackend`, the
 //! native implementation of the one execution substrate
@@ -36,8 +43,9 @@ use anyhow::{bail, Result};
 use crate::formats::{Format, PrecisionSpec};
 use crate::nn::layers::Layer;
 use crate::nn::network::Network;
-use crate::numerics::Quantizer;
+use crate::numerics::{quantize_slice, QuantOp, Quantizer};
 use crate::tensor::Tensor;
+use crate::with_quant_op;
 
 /// The engine-facing form of a [`PrecisionSpec`]: one prebuilt
 /// [`Quantizer`] per layer position, resolved and validated against a
@@ -246,12 +254,10 @@ impl Engine {
         let mut cur = ActShape::Hwc(b, net.input[0], net.input[1], net.input[2]);
 
         // stage input into act_a, quantized as the first GEMM's operand
-        let qin = table.input;
+        // (monomorphized q_slice via the dispatcher)
         self.act_a.clear();
         self.act_a.extend_from_slice(x.data());
-        for v in self.act_a.iter_mut() {
-            *v = qin.q(*v);
-        }
+        quantize_slice(&mut self.act_a, &table.input);
 
         for (layer, lq) in net.layers.iter().zip(&table.per_layer).take(n_layers) {
             cur = self.apply_layer(net, layer, cur, lq);
@@ -289,16 +295,19 @@ impl Engine {
                 let bias = net.weight(&format!("{name}.b"));
                 self.stage_quantized_weights(w.data(), q);
                 resize(&mut self.act_b, b * out_dim);
-                gemm_q(
-                    &self.act_a[..b * f],
-                    &self.wq,
-                    &mut self.act_b,
-                    b,
-                    *in_dim,
-                    *out_dim,
-                    q,
-                );
-                add_bias_q(&mut self.act_b, bias.data(), b, *out_dim, q);
+                // one dispatch selects the layer's monomorphized kernels
+                with_quant_op!(q, op => {
+                    gemm_q(
+                        &self.act_a[..b * f],
+                        &self.wq,
+                        &mut self.act_b,
+                        b,
+                        *in_dim,
+                        *out_dim,
+                        op,
+                    );
+                    add_bias_q(&mut self.act_b, bias.data(), b, *out_dim, op);
+                });
                 std::mem::swap(&mut self.act_a, &mut self.act_b);
                 ActShape::Flat(b, *out_dim)
             }
@@ -339,7 +348,7 @@ impl Engine {
                     panic!("gavgpool with branch quantizers");
                 };
                 resize(&mut self.act_b, b * c);
-                gavgpool_q(&self.act_a, &mut self.act_b, b, h, w, c, q);
+                with_quant_op!(q, op => gavgpool_q(&self.act_a, &mut self.act_b, b, h, w, c, op));
                 std::mem::swap(&mut self.act_a, &mut self.act_b);
                 ActShape::Flat(b, c)
             }
@@ -431,17 +440,18 @@ impl Engine {
         };
         self.stage_quantized_weights(wdata, q);
         resize(&mut self.act_b, m * out_ch);
-        gemm_q(&self.patches, &self.wq, &mut self.act_b, m, k_dim, *out_ch, q);
-        add_bias_q(&mut self.act_b, bdata, m, *out_ch, q);
+        // one dispatch selects the layer's monomorphized kernels
+        with_quant_op!(q, op => {
+            gemm_q(&self.patches, &self.wq, &mut self.act_b, m, k_dim, *out_ch, op);
+            add_bias_q(&mut self.act_b, bdata, m, *out_ch, op);
+        });
         ActShape::Hwc(b, oh, ow, *out_ch)
     }
 
     fn stage_quantized_weights(&mut self, w: &[f32], q: &Quantizer) {
         self.wq.clear();
         self.wq.extend_from_slice(w);
-        for v in self.wq.iter_mut() {
-            *v = q.q(*v);
-        }
+        quantize_slice(&mut self.wq, q);
     }
 }
 
@@ -509,60 +519,36 @@ const GEMM_NC: usize = 64;
 /// Row-major A (M,K), W (K,N), out (M,N).
 ///
 /// This is THE sweep hot path, so it is cache-blocked over M and N
-/// (DESIGN.md §4).  The k loop stays **strictly serial in increasing k
-/// per output element** — that ordering is the bit-exactness contract
-/// (module header; DESIGN.md §3) and the reason K is never tiled out of
-/// order.  Tiling M/N only regroups *independent* chains, so the result
-/// is bit-identical to [`gemm_q_naive`] (property test below; ratio
-/// re-measured by the `hot_paths` bench).
-///
-/// The exact baseline `Format::SINGLE` takes an identity-quantizer fast
-/// path: the mantissa-rounding machinery (dead at m = 23) is elided,
-/// while the flush-to-zero and ±inf-saturation steps are **kept** via
-/// `ftz_sat` — normal operands can still cancel into the subnormal
-/// window mid-chain, so dropping the flush would silently break the
-/// 0-ulp contract with the Pallas/PJRT path.  Bit-exactness of the fast
-/// path therefore holds unconditionally
+/// (DESIGN.md §4) **and monomorphized over the quantization op** `Q`:
+/// callers dispatch once per GEMM via [`crate::with_quant_op!`], so the
+/// instantiation for `QFloat` / `QFixed` / `QIdentity` contains that
+/// kind's arithmetic only — no per-MAC kind branch, no dead constants,
+/// and an inner loop the compiler can autovectorize.  The old
+/// `is_identity` runtime fast path is now just the `QIdentity`
+/// instantiation: it keeps the flush-to-zero and ±inf-saturation steps
+/// (normal operands can cancel into the subnormal window mid-chain), so
+/// bit-exactness with the Pallas/PJRT contract holds unconditionally
 /// (`single_fast_path_is_bitexact_even_off_normal_range`).
-pub fn gemm_q(a: &[f32], w: &[f32], out: &mut [f32], m: usize, k: usize, n: usize, q: &Quantizer) {
-    debug_assert_eq!(a.len(), m * k);
-    debug_assert_eq!(w.len(), k * n);
-    debug_assert_eq!(out.len(), m * n);
-    if q.is_identity() {
-        gemm_blocked(a, w, out, m, k, n, |acc, av, wv| ftz_sat(acc + ftz_sat(av * wv)));
-    } else {
-        gemm_blocked(a, w, out, m, k, n, |acc, av, wv| q.q(acc + q.q(av * wv)));
-    }
-}
-
-/// [`crate::numerics::Quantizer::q`] at F(23,8), with the rounding step
-/// (a no-op when no mantissa bits are dropped) removed: flush subnormal
-/// magnitudes to zero, saturate ±inf to max-finite, pass NaN through —
-/// the same operation order as the generic path, so bit-exact with it
-/// on every input.
-#[inline(always)]
-fn ftz_sat(x: f32) -> f32 {
-    let bits = x.to_bits();
-    let sign = bits & 0x8000_0000;
-    let mag = f32::from_bits(bits & 0x7FFF_FFFF);
-    let y = if mag > f32::MAX { f32::MAX } else { mag };
-    let y = if y < f32::MIN_POSITIVE { 0.0 } else { y };
-    f32::from_bits(sign | 0x3F80_0000) * y
-}
-
-/// The one blocked loop nest, monomorphized per MAC step: the quantized
-/// chain and the `SINGLE` fast path share tiling by construction, so a
-/// tiling change can never desynchronize them.
-#[inline(always)]
-fn gemm_blocked(
+///
+/// The k loop stays **strictly serial in increasing k per output
+/// element** — that ordering is the bit-exactness contract (module
+/// header; DESIGN.md §3) and the reason K is never tiled out of order.
+/// Tiling M/N only regroups *independent* chains, so every
+/// instantiation is bit-identical to the scalar [`gemm_q_naive`]
+/// reference (property test below; ratio re-measured by the `hot_paths`
+/// bench and recorded in the `BENCH_*.json` trajectory).
+pub fn gemm_q<Q: QuantOp>(
     a: &[f32],
     w: &[f32],
     out: &mut [f32],
     m: usize,
     k: usize,
     n: usize,
-    mac: impl Fn(f32, f32, f32) -> f32,
+    q: &Q,
 ) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(w.len(), k * n);
+    debug_assert_eq!(out.len(), m * n);
     for n0 in (0..n).step_by(GEMM_NC) {
         let n1 = (n0 + GEMM_NC).min(n);
         for m0 in (0..m).step_by(GEMM_MR) {
@@ -576,7 +562,7 @@ fn gemm_blocked(
                     let av = a[mi * k + ki];
                     let orow = &mut out[mi * n + n0..mi * n + n1];
                     for (o, &wv) in orow.iter_mut().zip(wrow) {
-                        *o = mac(*o, av, wv);
+                        *o = q.q(*o + q.q(av * wv));
                     }
                 }
             }
@@ -584,8 +570,11 @@ fn gemm_blocked(
     }
 }
 
-/// The retained naive triple loop — the readable reference the blocked
-/// kernel is verified against (bit-exact; same per-element k chain).
+/// The retained naive triple loop over the scalar [`Quantizer::q`]
+/// reference — the readable baseline every monomorphized `gemm_q::<Q>`
+/// instantiation is verified bit-exact against (same per-element k
+/// chain; deliberately NOT generic, so it always exercises the
+/// enum-dispatching scalar path).
 pub fn gemm_q_naive(
     a: &[f32],
     w: &[f32],
@@ -613,7 +602,8 @@ pub fn gemm_q_naive(
 }
 
 /// One rounded bias add per output element: y = q(y + q(b)).
-fn add_bias_q(y: &mut [f32], bias: &[f32], m: usize, n: usize, q: &Quantizer) {
+/// Monomorphized like [`gemm_q`] (dispatched together with it).
+fn add_bias_q<Q: QuantOp>(y: &mut [f32], bias: &[f32], m: usize, n: usize, q: &Q) {
     debug_assert_eq!(bias.len(), n);
     // bias is quantized once (it is a stored parameter)
     let mut bq = [0f32; 512];
@@ -688,7 +678,16 @@ fn maxpool(
 
 /// Global average pool with the serial per-add-rounded adder chain over
 /// row-major spatial positions, then one rounded multiply by q(1/HW).
-fn gavgpool_q(x: &[f32], out: &mut [f32], b: usize, h: usize, w: usize, c: usize, q: &Quantizer) {
+/// Monomorphized like [`gemm_q`].
+fn gavgpool_q<Q: QuantOp>(
+    x: &[f32],
+    out: &mut [f32],
+    b: usize,
+    h: usize,
+    w: usize,
+    c: usize,
+    q: &Q,
+) {
     let hw = h * w;
     let inv = q.q(1.0 / hw as f32);
     for bi in 0..b {
@@ -716,6 +715,20 @@ mod tests {
         Quantizer::new(&Format::SINGLE)
     }
 
+    /// Run the monomorphized instantiation `q` selects — exactly the
+    /// dispatch the engine's layers perform.
+    fn gemm_dispatch(
+        a: &[f32],
+        w: &[f32],
+        out: &mut [f32],
+        m: usize,
+        k: usize,
+        n: usize,
+        q: &Quantizer,
+    ) {
+        with_quant_op!(q, op => gemm_q(a, w, out, m, k, n, op));
+    }
+
     #[test]
     fn gemm_q_exact_matches_serial_matmul() {
         let m = 3;
@@ -724,7 +737,7 @@ mod tests {
         let a: Vec<f32> = (0..m * k).map(|i| (i as f32 * 0.7).sin()).collect();
         let w: Vec<f32> = (0..k * n).map(|i| (i as f32 * 0.3).cos()).collect();
         let mut out = vec![0.0; m * n];
-        gemm_q(&a, &w, &mut out, m, k, n, &q_exact());
+        gemm_dispatch(&a, &w, &mut out, m, k, n, &q_exact());
         for mi in 0..m {
             for ni in 0..n {
                 let mut acc = 0.0f32;
@@ -744,7 +757,7 @@ mod tests {
         let a = vec![1.0f32; k];
         let w = vec![1.0f32; k];
         let mut out = vec![0.0; 1];
-        gemm_q(&a, &w, &mut out, 1, k, 1, &qz);
+        gemm_dispatch(&a, &w, &mut out, 1, k, 1, &qz);
         assert_eq!(out[0], dot_q(&a, &w, &qz));
         assert_eq!(out[0], 16.0 - 1.0 / 16.0);
     }
@@ -761,7 +774,7 @@ mod tests {
             let q = Quantizer::new(&fmt);
             let mut blocked = vec![0.0; m * n];
             let mut naive = vec![7.0; m * n]; // nonzero: fill must overwrite
-            gemm_q(&a, &w, &mut blocked, m, k, n, &q);
+            gemm_dispatch(&a, &w, &mut blocked, m, k, n, &q);
             gemm_q_naive(&a, &w, &mut naive, m, k, n, &q);
             for i in 0..m * n {
                 assert_eq!(blocked[i].to_bits(), naive[i].to_bits(), "{fmt} elem {i}");
@@ -769,60 +782,64 @@ mod tests {
         }
     }
 
-    /// The `SINGLE` fast path keeps the flush/saturate steps, so it is
-    /// bit-exact with the reference even when values *leave* the normal
-    /// f32 range — a raw subnormal product, and the subtler case of two
-    /// normal partial sums cancelling into the subnormal window, where
-    /// a plain mul-add chain would silently diverge from the
+    /// The `QIdentity` fast path keeps the flush/saturate steps, so it
+    /// is bit-exact with the reference even when values *leave* the
+    /// normal f32 range — a raw subnormal product, and the subtler case
+    /// of two normal partial sums cancelling into the subnormal window,
+    /// where a plain mul-add chain would silently diverge from the
     /// Pallas/PJRT contract.
     #[test]
     fn single_fast_path_is_bitexact_even_off_normal_range() {
         let q = Quantizer::new(&Format::SINGLE);
+        assert!(q.is_identity(), "SINGLE must select the QIdentity instantiation");
         // subnormal product (1e-40 is a representable f32 subnormal)
         let (a, w) = (vec![1.0e-30f32], vec![1.0e-10f32]);
         let (mut fast, mut reference) = (vec![7.0f32], vec![7.0f32]);
-        gemm_q(&a, &w, &mut fast, 1, 1, 1, &q);
+        gemm_dispatch(&a, &w, &mut fast, 1, 1, 1, &q);
         gemm_q_naive(&a, &w, &mut reference, 1, 1, 1, &q);
         assert_eq!(reference[0], 0.0, "reference must flush the subnormal");
         assert_eq!(fast[0].to_bits(), reference[0].to_bits());
         // cancellation: normal acc + normal product -> subnormal sum
         let (a, w) = (vec![1.0f32, 1.0], vec![1.2e-38f32, -1.19e-38]);
         let (mut fast, mut reference) = (vec![7.0f32], vec![7.0f32]);
-        gemm_q(&a, &w, &mut fast, 1, 2, 1, &q);
+        gemm_dispatch(&a, &w, &mut fast, 1, 2, 1, &q);
         gemm_q_naive(&a, &w, &mut reference, 1, 2, 1, &q);
         assert_eq!(reference[0], 0.0, "cancellation result must flush");
         assert_eq!(fast[0].to_bits(), reference[0].to_bits());
         // normal-range chain: still bit-equal
         let (a, w) = (vec![f32::MIN_POSITIVE, -3.5], vec![2.0f32, 0.25]);
         let (mut fast, mut reference) = (vec![7.0f32], vec![7.0f32]);
-        gemm_q(&a, &w, &mut fast, 1, 2, 1, &q);
+        gemm_dispatch(&a, &w, &mut fast, 1, 2, 1, &q);
         gemm_q_naive(&a, &w, &mut reference, 1, 2, 1, &q);
         assert_eq!(fast[0].to_bits(), reference[0].to_bits());
     }
 
-    /// The kernel-equivalence property test (ISSUE 1 acceptance): blocked
-    /// `gemm_q` is bit-exact against the retained naive reference across
-    /// random shapes and both representation kinds, including the
-    /// identity fast path at `Format::SINGLE`.
+    /// The kernel-equivalence property test (ISSUE 1, extended by
+    /// ISSUE 4): every monomorphized `gemm_q::<Q>` instantiation —
+    /// reached through the same `with_quant_op!` dispatch the engine
+    /// uses — is bit-exact against the retained naive reference over
+    /// the scalar `Quantizer::q`, across random shapes and random
+    /// float/fixed formats, including the `QIdentity`/`Format::SINGLE`
+    /// fast path (the shared `arb_format` generator always draws it).
+    /// The dynamic `gemm_q::<Quantizer>` fallback is pinned to the same
+    /// bits while we're here.
     #[test]
-    fn prop_blocked_gemm_bitexact_vs_naive() {
-        use crate::testing::prop::run_prop;
-        run_prop("blocked_gemm_matches_naive", 60, |g| {
+    fn prop_monomorphized_gemm_bitexact_vs_scalar_naive() {
+        use crate::testing::prop::{arb_format, run_prop};
+        run_prop("mono_gemm_matches_scalar_naive", 60, |g| {
             let m = g.usize_in(1, 2 * GEMM_MR + 3);
             let k = g.usize_in(1, 48);
             let n = g.usize_in(1, GEMM_NC + 9);
-            let fmt = match g.usize_in(0, 2) {
-                0 => Format::float(g.usize_in(1, 23) as u32, g.usize_in(2, 8) as u32),
-                1 => Format::fixed(g.usize_in(0, 12) as u32, g.usize_in(0, 12) as u32),
-                _ => Format::SINGLE,
-            };
+            let fmt = arb_format(g);
             let q = Quantizer::new(&fmt);
             let a: Vec<f32> = (0..m * k).map(|_| g.f32_normal()).collect();
             let w: Vec<f32> = (0..k * n).map(|_| g.f32_normal()).collect();
             let mut blocked = vec![0.0; m * n];
             let mut naive = vec![0.0; m * n];
-            gemm_q(&a, &w, &mut blocked, m, k, n, &q);
+            let mut dynamic = vec![0.0; m * n];
+            gemm_dispatch(&a, &w, &mut blocked, m, k, n, &q);
             gemm_q_naive(&a, &w, &mut naive, m, k, n, &q);
+            gemm_q(&a, &w, &mut dynamic, m, k, n, &q); // Q = Quantizer fallback
             for i in 0..m * n {
                 assert_eq!(
                     blocked[i].to_bits(),
@@ -830,6 +847,11 @@ mod tests {
                     "{fmt} m={m} k={k} n={n} elem {i}: {} vs {}",
                     blocked[i],
                     naive[i]
+                );
+                assert_eq!(
+                    dynamic[i].to_bits(),
+                    naive[i].to_bits(),
+                    "{fmt} m={m} k={k} n={n} elem {i}: dynamic fallback diverged"
                 );
             }
         });

@@ -5,8 +5,17 @@
 //! is bit-exact against the jnp implementation and the Pallas kernel —
 //! the `pjrt_cross_check` integration test proves it end-to-end through
 //! whole networks.
+//!
+//! The hot path is **compile-time monomorphized** (DESIGN.md §Perf):
+//! [`QuantOp`] has one zero-branch impl per representation kind
+//! ([`QFloat`], [`QFixed`], [`QIdentity`]), [`Quantizer`] is the thin
+//! enum that picks one per [`crate::formats::Format`], and kernels like
+//! [`q_slice`] / [`crate::nn::gemm_q`] dispatch once per call via
+//! [`with_quant_op!`](crate::with_quant_op) instead of branching per MAC.
 
 mod quant;
 pub mod trace;
 
-pub use quant::{dot_q, mac_q, quantize, quantize_slice, Quantizer};
+pub use quant::{
+    dot_q, mac_q, q_slice, quantize, quantize_slice, QFixed, QFloat, QIdentity, QuantOp, Quantizer,
+};

@@ -7,92 +7,224 @@
 //! flush to zero (no subnormals).  Fixed path: clamp, scale,
 //! `round_ties_even`, unscale, clamp.  Both match qformat.py bit-exactly
 //! (same carrier, same operation order).
+//!
+//! # Monomorphized kernels (DESIGN.md §Perf)
+//!
+//! Each representation kind is its own zero-branch op — [`QFloat`],
+//! [`QFixed`], and the `Format::SINGLE` fast path [`QIdentity`] — all
+//! implementing [`QuantOp`].  [`Quantizer`] is the thin enum that picks
+//! one at construction time; hot loops dispatch ONCE per kernel call via
+//! [`with_quant_op!`](crate::with_quant_op) and then run a fully
+//! monomorphized instantiation (`q_slice::<Q>`, `nn::gemm_q::<Q>`), so
+//! the per-MAC kind branch and the other kind's dead fields are gone
+//! from the inner loops and the compiler can autovectorize them.
+//! `Quantizer::q` remains the scalar reference semantics every
+//! monomorphized kernel is property-tested against.
 
 use crate::formats::Format;
 
-/// Precomputed quantization constants for one [`Format`] — build once,
-/// apply millions of times.
-#[derive(Clone, Copy, Debug)]
-pub struct Quantizer {
-    kind: Kind,
-    /// float: bits of f32 mantissa to drop (23 - m)
-    shift: u32,
-    /// float: min normal (f32-carrier clamped)
-    min_normal: f32,
-    /// saturation bound (both kinds)
-    max_val: f32,
-    /// fixed: 2^r and 2^-r
-    scale: f32,
-    inv_scale: f32,
+/// One representation kind's quantization op: built once from a
+/// [`Format`], applied millions of times.  Implementations carry ONLY
+/// the constants their own kind needs (no zero-initialized fields for
+/// the other kind), and their `q` contains no kind branch — which is
+/// what lets `q_slice::<Q>` / [`crate::nn::gemm_q`]`::<Q>` vectorize.
+pub trait QuantOp: Copy {
+    /// Quantize one value.  The per-MAC op of the paper's §2 chain.
+    fn q(&self, x: f32) -> f32;
 }
 
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-enum Kind {
-    Float,
-    Fixed,
+/// Custom-float op `F(m, e)`: round-half-even on the raw f32 mantissa
+/// bits, saturate to max-finite, flush below min-normal to zero.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct QFloat {
+    /// bits of f32 mantissa to drop (23 - m)
+    shift: u32,
+    /// min normal (f32-carrier clamped); smaller magnitudes flush to 0
+    min_normal: f32,
+    /// saturation bound (max representable finite magnitude)
+    max_val: f32,
 }
+
+/// Custom-fixed op `X(l, r)`: clamp, scale by 2^r, `round_ties_even`,
+/// unscale, clamp.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct QFixed {
+    /// 2^r
+    scale: f32,
+    /// 2^-r
+    inv_scale: f32,
+    /// saturation bound `2^l - 2^-r`
+    max_val: f32,
+}
+
+/// The exact-baseline op for `Format::SINGLE` (F(23, 8)): the mantissa
+/// rounding machinery is dead at m = 23, but the flush-to-zero and
+/// ±inf-saturation steps are KEPT — normal operands can still cancel
+/// into the subnormal window mid-chain, and dropping the flush would
+/// silently break the 0-ulp contract with the Pallas/PJRT path
+/// (`single_fast_path_is_bitexact_even_off_normal_range` in nn::engine).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct QIdentity;
+
+impl QuantOp for QFloat {
+    #[inline(always)]
+    fn q(&self, x: f32) -> f32 {
+        let bits = x.to_bits();
+        let sign = bits & 0x8000_0000;
+        let mag = bits & 0x7FFF_FFFF;
+        let shift = self.shift;
+        // `shift == 0` (F(23, e<8)) skips the rounding add; this is a
+        // loop-invariant, perfectly predicted branch — the per-MAC
+        // *kind* branch is what monomorphization removed.
+        let rmag = if shift == 0 {
+            mag
+        } else {
+            let lsb = (mag >> shift) & 1;
+            let half = (1u32 << (shift - 1)) - 1 + lsb;
+            ((mag.wrapping_add(half)) >> shift) << shift
+        };
+        let y = f32::from_bits(rmag);
+        // match the jnp `where` chain exactly (incl. NaN: both
+        // comparisons false => NaN passes through)
+        let y = if y > self.max_val { self.max_val } else { y };
+        let y = if y < self.min_normal { 0.0 } else { y };
+        f32::from_bits(sign | 0x3F80_0000) * y
+    }
+}
+
+impl QuantOp for QFixed {
+    #[inline(always)]
+    fn q(&self, x: f32) -> f32 {
+        let y = x.clamp(-self.max_val, self.max_val);
+        let y = (y * self.scale).round_ties_even() * self.inv_scale;
+        y.clamp(-self.max_val, self.max_val)
+    }
+}
+
+impl QuantOp for QIdentity {
+    /// [`QFloat::q`] at F(23, 8) with the (no-op) rounding removed:
+    /// flush subnormal magnitudes to zero, saturate ±inf to max-finite,
+    /// pass NaN through — the same operation order as the generic float
+    /// path, so bit-exact with it on every input.
+    #[inline(always)]
+    fn q(&self, x: f32) -> f32 {
+        let bits = x.to_bits();
+        let sign = bits & 0x8000_0000;
+        let mag = f32::from_bits(bits & 0x7FFF_FFFF);
+        let y = if mag > f32::MAX { f32::MAX } else { mag };
+        let y = if y < f32::MIN_POSITIVE { 0.0 } else { y };
+        f32::from_bits(sign | 0x3F80_0000) * y
+    }
+}
+
+/// The thin enum dispatcher over the three monomorphized ops: built
+/// once per [`Format`], it selects which `gemm_q::<Q>` / `q_slice::<Q>`
+/// instantiation a kernel call runs (via
+/// [`with_quant_op!`](crate::with_quant_op)).  Each variant carries
+/// exactly its own kind's constants — the old struct's zero-initialized
+/// wrong-kind fields (`scale`/`inv_scale` on floats, `shift`/
+/// `min_normal` on fixeds) no longer exist, see
+/// `quantizer_debug_carries_no_dead_fields`.
+///
+/// [`Quantizer::q`] is the scalar reference semantics; it also
+/// implements [`QuantOp`] itself (the *dynamic* instantiation, one kind
+/// branch per call) so generic code can fall back to it — but hot paths
+/// must dispatch first.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Quantizer {
+    /// `Format::SINGLE` — the exact baseline fast path.
+    Identity(QIdentity),
+    /// Any other custom float `F(m, e)`.
+    Float(QFloat),
+    /// Any custom fixed `X(l, r)`.
+    Fixed(QFixed),
+}
+
+// One enum discriminant + the widest op's three 4-byte constants: the
+// dispatcher must never grow past four words, or it stops being "build
+// once, copy into every per-layer table slot" cheap (nn::QuantTable).
+const _: () = assert!(std::mem::size_of::<Quantizer>() <= 16);
 
 impl Quantizer {
     pub fn new(fmt: &Format) -> Quantizer {
         match *fmt {
-            Format::Float { mantissa, .. } => Quantizer {
-                kind: Kind::Float,
+            // F(23, 8) is the only format whose rounding, saturation
+            // bound, and flush threshold all coincide with the f32
+            // carrier's own — the monomorphized identity fast path.
+            Format::SINGLE => Quantizer::Identity(QIdentity),
+            Format::Float { mantissa, .. } => Quantizer::Float(QFloat {
                 shift: 23 - mantissa,
                 min_normal: fmt.min_normal() as f32,
                 max_val: fmt.max_value() as f32,
-                scale: 0.0,
-                inv_scale: 0.0,
-            },
+            }),
             Format::Fixed { frac_bits, .. } => {
                 let scale = 2.0f64.powi(frac_bits as i32);
-                Quantizer {
-                    kind: Kind::Fixed,
-                    shift: 0,
-                    min_normal: 0.0,
-                    max_val: fmt.max_value() as f32,
+                Quantizer::Fixed(QFixed {
                     scale: scale as f32,
                     inv_scale: (1.0 / scale) as f32,
-                }
+                    max_val: fmt.max_value() as f32,
+                })
             }
         }
     }
 
-    /// Quantize one value.  `#[inline]` — this sits inside every MAC.
+    /// Quantize one value — the scalar REFERENCE path (one kind branch
+    /// per call).  Every monomorphized kernel is bit-identity
+    /// property-tested against this.
     #[inline(always)]
     pub fn q(&self, x: f32) -> f32 {
-        match self.kind {
-            Kind::Float => {
-                let bits = x.to_bits();
-                let sign = bits & 0x8000_0000;
-                let mag = bits & 0x7FFF_FFFF;
-                let shift = self.shift;
-                let rmag = if shift == 0 {
-                    mag
-                } else {
-                    let lsb = (mag >> shift) & 1;
-                    let half = (1u32 << (shift - 1)) - 1 + lsb;
-                    ((mag.wrapping_add(half)) >> shift) << shift
-                };
-                let y = f32::from_bits(rmag);
-                // match the jnp `where` chain exactly (incl. NaN: both
-                // comparisons false => NaN passes through)
-                let y = if y > self.max_val { self.max_val } else { y };
-                let y = if y < self.min_normal { 0.0 } else { y };
-                f32::from_bits(sign | 0x3F80_0000) * y
-            }
-            Kind::Fixed => {
-                let y = x.clamp(-self.max_val, self.max_val);
-                let y = (y * self.scale).round_ties_even() * self.inv_scale;
-                y.clamp(-self.max_val, self.max_val)
-            }
+        match self {
+            Quantizer::Identity(q) => q.q(x),
+            Quantizer::Float(q) => q.q(x),
+            Quantizer::Fixed(q) => q.q(x),
         }
     }
 
-    /// True if this quantizer is the identity on all normal f32 (the
+    /// True if this quantizer is the `Format::SINGLE` fast path (the
     /// exact baseline F(23,8)).
     pub fn is_identity(&self) -> bool {
-        self.kind == Kind::Float && self.shift == 0 && self.max_val == f32::MAX
+        matches!(self, Quantizer::Identity(_))
     }
+}
+
+/// The dynamic fallback instantiation: a kind branch per call — the
+/// pre-monomorphization behaviour, kept so generic code compiles
+/// against `&Quantizer` and so the bench suite can measure what the
+/// dispatch refactor bought.  Hot paths go through
+/// [`with_quant_op!`](crate::with_quant_op) instead.
+impl QuantOp for Quantizer {
+    #[inline(always)]
+    fn q(&self, x: f32) -> f32 {
+        // method-call syntax resolves the *inherent* `Quantizer::q`
+        // (the match), not this trait method — no recursion
+        (*self).q(x)
+    }
+}
+
+/// Select the monomorphized instantiation for a quantizer's kind:
+/// `with_quant_op!(q, op => body)` expands to a three-way match that
+/// binds `op` to the variant's [`QuantOp`] (`&QFloat` / `&QFixed` /
+/// `&QIdentity`) and runs `body` once — so the kind branch is hoisted
+/// out of whatever loop `body` contains.  `q` must be a `&Quantizer`.
+///
+/// ```
+/// use precis::formats::Format;
+/// use precis::numerics::{q_slice, Quantizer};
+///
+/// let q = Quantizer::new(&Format::float(7, 6));
+/// let mut xs = vec![1.37f32, -0.002, 9.0];
+/// precis::with_quant_op!(&q, op => q_slice(&mut xs, op));
+/// assert_eq!(xs[0], q.q(1.37));
+/// ```
+#[macro_export]
+macro_rules! with_quant_op {
+    ($q:expr, $op:ident => $body:expr) => {
+        match $q {
+            $crate::numerics::Quantizer::Identity($op) => $body,
+            $crate::numerics::Quantizer::Float($op) => $body,
+            $crate::numerics::Quantizer::Fixed($op) => $body,
+        }
+    };
 }
 
 /// Quantize a whole value — convenience for tests/figures.
@@ -100,11 +232,20 @@ pub fn quantize(x: f32, fmt: &Format) -> f32 {
     Quantizer::new(fmt).q(x)
 }
 
-/// Quantize a slice in place.
-pub fn quantize_slice(xs: &mut [f32], q: &Quantizer) {
+/// The monomorphized slice kernel: one `Q` instantiation per op kind,
+/// no per-element kind branch — used for input staging and weight
+/// staging in the engine (via [`quantize_slice`]'s dispatch).
+#[inline]
+pub fn q_slice<Q: QuantOp>(xs: &mut [f32], q: &Q) {
     for x in xs.iter_mut() {
         *x = q.q(*x);
     }
+}
+
+/// Quantize a slice in place: thin dispatch to the monomorphized
+/// [`q_slice`] instantiation for `q`'s kind.
+pub fn quantize_slice(xs: &mut [f32], q: &Quantizer) {
+    with_quant_op!(q, op => q_slice(xs, op));
 }
 
 /// One MAC step of the paper's §2 chain: `q(acc + q(a*b))`.
@@ -128,7 +269,7 @@ pub fn dot_q(a: &[f32], b: &[f32], q: &Quantizer) -> f32 {
 mod tests {
     use super::*;
     use crate::formats::Format;
-    use crate::testing::prop::{run_prop, Gen};
+    use crate::testing::prop::{arb_format, run_prop, Gen};
 
     fn qf(m: u32, e: u32) -> Quantizer {
         Quantizer::new(&Format::float(m, e))
@@ -216,6 +357,43 @@ mod tests {
         assert!(!qx(8, 8).is_identity());
     }
 
+    /// The dispatcher selects exactly one monomorphized op per kind:
+    /// `SINGLE` → [`QIdentity`], other floats → [`QFloat`], fixeds →
+    /// [`QFixed`] — the `with_quant_op!` arm that runs is the kind's own.
+    #[test]
+    fn new_selects_the_monomorphized_op_per_kind() {
+        assert!(matches!(Quantizer::new(&Format::SINGLE), Quantizer::Identity(_)));
+        assert!(matches!(qf(7, 6), Quantizer::Float(_)));
+        assert!(matches!(qf(23, 4), Quantizer::Float(_))); // shift 0 but clamped
+        assert!(matches!(qx(8, 8), Quantizer::Fixed(_)));
+    }
+
+    /// Regression for the dead-field cleanup (ISSUE 4): each kind's
+    /// variant `Debug`-renders only its own constants — a float carries
+    /// no `scale`/`inv_scale`, a fixed no `shift`/`min_normal`, and the
+    /// identity op nothing at all.  (The old struct zero-initialized the
+    /// wrong kind's fields and branch-guarded them per MAC.)
+    #[test]
+    fn quantizer_debug_carries_no_dead_fields() {
+        let f = format!("{:?}", qf(7, 6));
+        assert!(f.contains("Float") && f.contains("shift"), "{f}");
+        assert!(!f.contains("scale"), "float op leaked fixed fields: {f}");
+
+        let x = format!("{:?}", qx(8, 8));
+        assert!(x.contains("Fixed") && x.contains("scale"), "{x}");
+        assert!(
+            !x.contains("shift") && !x.contains("min_normal"),
+            "fixed op leaked float fields: {x}"
+        );
+
+        let i = format!("{:?}", Quantizer::new(&Format::SINGLE));
+        assert!(i.contains("Identity"), "{i}");
+        assert!(
+            !i.contains("shift") && !i.contains("scale"),
+            "identity op carries constants: {i}"
+        );
+    }
+
     // ---- property tests ----------------------------------------------
 
     fn arb_float_format(g: &mut Gen) -> Format {
@@ -233,6 +411,44 @@ mod tests {
         } else {
             mag
         }
+    }
+
+    /// Satellite (ISSUE 4): the monomorphized `q_slice::<Q>` — reached
+    /// through the `quantize_slice` dispatch, so the selected `Q` is the
+    /// one the engine would run — is bit-identical to the scalar
+    /// `Quantizer::q` reference for every kind, including the
+    /// `QIdentity`/`Format::SINGLE` fast path.
+    #[test]
+    fn prop_q_slice_mono_bitexact_vs_scalar_reference() {
+        run_prop("q_slice_mono_vs_scalar", 300, |g| {
+            let fmt = arb_format(g);
+            let q = Quantizer::new(&fmt);
+            let xs: Vec<f32> = (0..g.usize_in(0, 64)).map(|_| arb_value(g)).collect();
+            let mut got = xs.clone();
+            quantize_slice(&mut got, &q);
+            for (i, (&y, &x)) in got.iter().zip(&xs).enumerate() {
+                assert_eq!(
+                    y.to_bits(),
+                    q.q(x).to_bits(),
+                    "{} elem {i}: q_slice {y} vs scalar {}",
+                    fmt.id(),
+                    q.q(x)
+                );
+            }
+        });
+    }
+
+    /// The dynamic fallback (`QuantOp for Quantizer`) and the dispatched
+    /// monomorphized ops are the same function, bitwise.
+    #[test]
+    fn prop_dynamic_fallback_matches_dispatched_op() {
+        run_prop("dyn_vs_mono", 300, |g| {
+            let q = Quantizer::new(&arb_format(g));
+            let x = arb_value(g);
+            let via_mono = with_quant_op!(&q, op => op.q(x));
+            let via_dyn = QuantOp::q(&q, x);
+            assert_eq!(via_mono.to_bits(), via_dyn.to_bits(), "x={x}");
+        });
     }
 
     #[test]

@@ -103,7 +103,12 @@ impl BackendKind {
 /// per-layer quantizer table for the active spec is memoized — resolved
 /// once when the spec changes, reused across every batch after — so
 /// both sweeps (many batches per format) and plan execution stay off
-/// the allocator on the hot path.
+/// the allocator on the hot path.  Each table entry is a thin
+/// [`crate::numerics::Quantizer`] dispatcher, so every layer the engine
+/// runs under this backend executes the monomorphized `gemm_q::<Q>` /
+/// `q_slice::<Q>` instantiation for its format's kind (DESIGN.md
+/// §Perf) — format resolution, memoization, and kernel selection all
+/// happen off the per-MAC path.
 pub struct NativeBackend {
     net: Arc<Network>,
     engine: Engine,

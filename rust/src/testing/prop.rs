@@ -12,6 +12,7 @@
 
 use std::panic::{catch_unwind, AssertUnwindSafe};
 
+use crate::formats::Format;
 use crate::util::rng::Pcg32;
 
 /// Random-value source handed to properties.
@@ -58,6 +59,19 @@ impl Gen {
 
     pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
         &xs[self.rng.below(xs.len() as u32) as usize]
+    }
+}
+
+/// Arbitrary [`Format`] across the whole design surface — both
+/// representation kinds plus an explicit `Format::SINGLE` arm, so
+/// properties over quantized kernels always exercise the
+/// `QIdentity` fast path too (the shared generator the kernel
+/// bit-identity suites use; ISSUE 4).
+pub fn arb_format(g: &mut Gen) -> Format {
+    match g.usize_in(0, 3) {
+        0 => Format::SINGLE,
+        1 => Format::float(g.usize_in(0, 23) as u32, g.usize_in(1, 8) as u32),
+        _ => Format::fixed(g.usize_in(0, 16) as u32, g.usize_in(0, 16) as u32),
     }
 }
 
@@ -154,6 +168,27 @@ mod tests {
             let f = g.f32_in(1.0, 2.0);
             assert!((1.0..=2.0).contains(&f));
         });
+    }
+
+    #[test]
+    fn arb_format_covers_all_kinds_and_parses() {
+        let (mut single, mut float, mut fixed) = (0, 0, 0);
+        for seed in 0..200 {
+            let mut g = Gen::new(seed, 1.0);
+            let f = arb_format(&mut g);
+            // always a valid, parseable point of the design surface
+            assert_eq!(Format::parse(&f.id()).unwrap(), f);
+            if f == Format::SINGLE {
+                single += 1;
+            } else if f.is_float() {
+                float += 1;
+            } else {
+                fixed += 1;
+            }
+        }
+        assert!(single > 0, "SINGLE arm never drawn");
+        assert!(float > 0, "float arm never drawn");
+        assert!(fixed > 0, "fixed arm never drawn");
     }
 
     #[test]
