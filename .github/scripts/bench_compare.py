@@ -14,6 +14,13 @@ count as regressions, and --warn-only downgrades even those to warnings
 (the bring-up mode the CI perf-smoke lane starts in, since shared
 runners are noisy).
 
+Section drift is tolerated by name, not by schema: benchmarks present
+on only one side are warnings/notes (e.g. the PR-5 weight-store
+`forward_cached/*` / `pack/*` sections are absent from the PR-4
+baseline — that must not fail the lane).  The one structural condition
+on the PAIR of reports is a non-empty overlap: two reports sharing NO
+benchmark names cannot be meaningfully compared and exit 2.
+
 Exit codes: 0 ok / warnings only, 1 regressions (without --warn-only),
 2 structural error.
 
@@ -146,6 +153,13 @@ def main():
 
     regressions, improvements, skipped = [], [], []
     common = [n for n in base_by_name if n in cur_by_name]
+    if not common:
+        print(
+            "STRUCTURE ERROR: the reports share no benchmark names — "
+            "nothing to compare (wrong baseline file?)",
+            file=sys.stderr,
+        )
+        return 2
     print(f"\n{'benchmark':<46} {'baseline':>10} {'current':>10} {'delta':>8}")
     for name in common:
         b, c = float(base_by_name[name]["median_s"]), float(cur_by_name[name]["median_s"])
@@ -162,10 +176,20 @@ def main():
             marker = "  (improved)"
         print(f"{name:<46} {human(b):>10} {human(c):>10} {delta:>+7.1%}{marker}")
 
-    for name in sorted(set(base_by_name) - set(cur_by_name)):
+    # missing/new sections are name-level drift, never a failure: a new
+    # suite section (or one retired from the baseline) is reported and
+    # the comparison proceeds over the overlap
+    missing = sorted(set(base_by_name) - set(cur_by_name))
+    new = sorted(set(cur_by_name) - set(base_by_name))
+    for name in missing:
         print(f"warning: baseline benchmark {name!r} missing from current report")
-    for name in sorted(set(cur_by_name) - set(base_by_name)):
+    for name in new:
         print(f"note: new benchmark {name!r} (no baseline yet)")
+    if missing or new:
+        print(
+            f"(section drift: {len(missing)} baseline-only, {len(new)} new; "
+            f"{len(common)} compared)"
+        )
     if skipped:
         print(f"({len(skipped)} sub-{human(args.min_seconds)} benchmarks skipped as noise)")
 

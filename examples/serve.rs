@@ -12,7 +12,7 @@
 //!     cargo run --release --example serve -- \
 //!         [--sessions lenet5@float:m7e6,alexnet-mini@fixed:l8r8] \
 //!         [--requests 256] [--clients 8] [--wait-ms 5] \
-//!         [--backend auto|native|pjrt]
+//!         [--backend auto|native|pjrt] [--weight-budget 8m]
 
 use std::sync::Arc;
 use std::time::{Duration, Instant};
@@ -40,12 +40,18 @@ fn main() -> Result<()> {
     let n_clients = args.get_usize("clients", 8)?.max(1);
     let wait_ms = args.get_usize("wait-ms", 5)?;
     let kind = BackendKind::parse(args.get_or("backend", "auto"))?;
+    // gateway-wide pre-quantized weight-store budget (DESIGN.md §Storage)
+    let weight_budget = args
+        .get("weight-budget")
+        .map(precis::store::parse_byte_size)
+        .transpose()?;
 
     let zoo = Zoo::load(ARTIFACTS)?;
     let batch = zoo.batch;
     let gateway = Gateway::new(zoo, kind).with_options(SessionOptions {
         batch: 0, // the artifact batch size
         max_wait: Duration::from_millis(wait_ms as u64),
+        weight_budget,
     });
     let keys: Vec<SessionKey> = split_session_specs(&specs)
         .iter()

@@ -3,7 +3,8 @@
 //!
 //! The headless sections (quantizer kernels, monomorphized-vs-scalar
 //! `q_slice`, blocked-vs-naive quantized GEMM, fixture forward with a
-//! mixed per-layer plan) are the shared `bench_harness::suite` — the
+//! mixed per-layer plan, warm-store cached-vs-restaged forward, and
+//! the packed weight codec) are the shared `bench_harness::suite` — the
 //! exact suite `repro bench --json` runs for the perf-regression
 //! pipeline, so this bench and the `BENCH_*.json` trajectory can never
 //! measure different code.  Artifact-dependent sections (zoo forward

@@ -10,11 +10,14 @@
 //! speedup ratios are collected into a [`BenchReport`] for
 //! `BENCH_*.json` / `bench_compare.py`.
 
+use std::sync::Arc;
+
 use crate::bench_harness::{section, Bench, BenchReport, BenchResult};
 use crate::formats::{Format, PrecisionSpec};
 use crate::nn::{gemm_q, gemm_q_naive};
 use crate::numerics::{dot_q, quantize_slice, Quantizer};
 use crate::serving::{Backend, NativeBackend};
+use crate::store::{PackedTensor, WeightStore};
 use crate::testing::fixtures::tiny_conv_network;
 use crate::util::rng::Pcg32;
 use crate::with_quant_op;
@@ -149,6 +152,59 @@ fn run_suite(
     report.ratio("plan_uniform_over_mixed/tiny-conv", ratio(&u, &p));
     println!("    -> uniform/mixed ratio {:.2}x (contract: ~1.0x)", ratio(&u, &p));
 
+    // ISSUE 5 acceptance: the store removes the per-forward weight
+    // quantization term.  `cached` stages once and then reads by
+    // reference; `restaged` runs with a disabled store (budget 0), i.e.
+    // the pre-store per-forward quantize-and-copy path.
+    section("weight store: warm cached forward vs per-forward re-staging");
+    let narrow = PrecisionSpec::parse("fixed:l8r8").expect("spec parses");
+    let mut cached_backend =
+        NativeBackend::with_store(net.clone(), Arc::new(WeightStore::unbounded()));
+    cached_backend.run_spec(&x, &narrow).expect("warm-up forward");
+    let warm_misses = cached_backend.store_stats().expect("native store").misses;
+    let cached = bench.run(&format!("forward_cached/tiny-conv/batch{fwd_batch}"), || {
+        cached_backend.run_spec(&x, &narrow).expect("cached forward").data()[0]
+    });
+    assert_eq!(
+        cached_backend.store_stats().expect("native store").misses,
+        warm_misses,
+        "a warm store must do zero weight-quantization work"
+    );
+    let mut restaged_backend =
+        NativeBackend::with_store(net.clone(), Arc::new(WeightStore::with_budget(0)));
+    let restaged = bench.run(&format!("forward_restaged/tiny-conv/batch{fwd_batch}"), || {
+        restaged_backend.run_spec(&x, &narrow).expect("restaged forward").data()[0]
+    });
+    report.ratio("forward_restaged_over_cached/tiny-conv", ratio(&restaged, &cached));
+    println!(
+        "    -> restaged/cached ratio {:.2}x (store removes the staging term)",
+        ratio(&restaged, &cached)
+    );
+
+    // the packed storage tier: encode/decode throughput + the
+    // compression each format achieves over the f32 carrier
+    section("packed codec: pack / unpack vs the f32 carrier");
+    let ws = randv(slice_len, 6);
+    let mut decoded = Vec::new();
+    for fmt in formats_under_test() {
+        let packed = PackedTensor::pack(&ws, &fmt);
+        bench.run(&format!("pack/{slice_len}/{}", fmt.id()), || {
+            PackedTensor::pack(&ws, &fmt).packed_bytes()
+        });
+        let un = bench.run(&format!("unpack/{slice_len}/{}", fmt.id()), || {
+            packed.unpack_into(&mut decoded);
+            decoded[0]
+        });
+        let compression = packed.f32_bytes() as f64 / packed.packed_bytes().max(1) as f64;
+        report.ratio(&format!("packed_compression/{}", fmt.id()), compression);
+        println!(
+            "    -> {} bits/value, {:.2}x compression, decode {:.0} Melem/s",
+            packed.width(),
+            compression,
+            un.throughput(slice_len as f64) / 1e6,
+        );
+    }
+
     report.results.extend_from_slice(bench.results());
 }
 
@@ -181,6 +237,23 @@ mod tests {
             report.ratios.keys().any(|k| k.starts_with("q_slice_mono_over_scalar/")),
             "missing q_slice ratios"
         );
+        // the ISSUE 5 sections: cached-vs-restaged forward + the packed
+        // codec (bench_compare tolerates their absence in older
+        // baselines — missing-section is a warning, not a failure)
+        assert!(
+            report.ratios.contains_key("forward_restaged_over_cached/tiny-conv"),
+            "missing store cached-vs-restaged ratio"
+        );
+        assert!(
+            report.ratios.keys().any(|k| k.starts_with("packed_compression/")),
+            "missing packed-compression ratios"
+        );
+        for name in ["forward_cached/", "forward_restaged/", "pack/", "unpack/"] {
+            assert!(
+                report.results.iter().any(|r| r.name.starts_with(name)),
+                "missing {name} results"
+            );
+        }
         for (k, v) in &report.ratios {
             assert!(v.is_finite() && *v > 0.0, "ratio {k} = {v}");
         }

@@ -5,5 +5,6 @@ pub mod sweep;
 
 pub use metrics::{topk_accuracy, topk_hits};
 pub use sweep::{
-    accuracy, eval_config, forward_eval_parallel, sweep_design_space, ConfigResult, EvalOptions,
+    accuracy, accuracy_with_store, eval_config, forward_eval_parallel, forward_eval_parallel_in,
+    sweep_design_space, ConfigResult, EvalOptions,
 };

@@ -18,6 +18,7 @@ use crate::formats::{Format, PrecisionSpec};
 use crate::hw;
 use crate::nn::Network;
 use crate::serving::{Backend, NativeBackend};
+use crate::store::WeightStore;
 use crate::tensor::Tensor;
 
 /// Evaluation options shared by sweeps and the search.
@@ -118,6 +119,22 @@ pub fn forward_eval_parallel(
     opts: &EvalOptions,
     workers: usize,
 ) -> Result<(Vec<f32>, Vec<i32>)> {
+    let store = Arc::new(WeightStore::default());
+    forward_eval_parallel_in(net, spec, opts, workers, &store)
+}
+
+/// [`forward_eval_parallel`] staging from a caller-supplied
+/// [`WeightStore`]: every worker's backend shares the store, so each
+/// layer's weights are quantized ONCE for the whole pool instead of
+/// once per worker (DESIGN.md §Storage) — and `repro eval
+/// --weight-budget` can cap and report the staging memory.
+pub fn forward_eval_parallel_in(
+    net: &Arc<Network>,
+    spec: impl Into<PrecisionSpec>,
+    opts: &EvalOptions,
+    workers: usize,
+    store: &Arc<WeightStore>,
+) -> Result<(Vec<f32>, Vec<i32>)> {
     let spec: PrecisionSpec = spec.into();
     let n = opts.samples.min(net.eval_len()).max(1);
     // same clamp as forward_eval, so both paths use identical batching
@@ -127,14 +144,14 @@ pub fn forward_eval_parallel(
         .map(|lo| (lo, (lo + batch).min(n)))
         .collect();
     if workers <= 1 || jobs.len() <= 1 {
-        let mut backend = NativeBackend::new(net.clone());
+        let mut backend = NativeBackend::with_store(net.clone(), store.clone());
         return forward_eval(&mut backend, &spec, opts);
     }
     let spec = &spec;
     let chunks = run_indexed(
         &jobs,
         workers,
-        || NativeBackend::new(net.clone()),
+        || NativeBackend::with_store(net.clone(), store.clone()),
         |backend, &(lo, hi)| -> Result<Vec<f32>> {
             let xb = net.eval_x.slice_rows(lo, hi);
             Ok(backend.run_spec(&xb, spec)?.into_data())
@@ -183,6 +200,21 @@ pub fn accuracy(
 ) -> Result<f64> {
     let opts = EvalOptions { samples, ..Default::default() };
     let (logits, labels) = forward_eval_parallel(net, spec, &opts, default_workers())?;
+    Ok(topk_accuracy(&logits, &labels, net.classes, net.topk))
+}
+
+/// [`accuracy`] staging from a caller-supplied (budgeted) weight store
+/// — the `repro eval --weight-budget` path, which reports the store's
+/// counters after the run.
+pub fn accuracy_with_store(
+    net: &Arc<Network>,
+    spec: impl Into<PrecisionSpec>,
+    samples: usize,
+    store: &Arc<WeightStore>,
+) -> Result<f64> {
+    let opts = EvalOptions { samples, ..Default::default() };
+    let (logits, labels) =
+        forward_eval_parallel_in(net, spec, &opts, default_workers(), store)?;
     Ok(topk_accuracy(&logits, &labels, net.classes, net.topk))
 }
 

@@ -17,6 +17,10 @@
 //! * [`serving`]    — the unified execution API: `Backend` (the one
 //!                    substrate), `Session` (dynamic batching) and the
 //!                    multi-model `Gateway` (DESIGN.md §Serving)
+//! * [`store`]      — pre-quantized & bit-packed weight store: each
+//!                    `(net, layer, resolved format)` staged once,
+//!                    shared across sessions under a byte budget with
+//!                    LRU eviction (DESIGN.md §Storage)
 //! * [`coordinator`]— sweep orchestrator: job queue, worker pool, cache
 //! * [`search`]     — the paper's §3.3 contribution: last-layer R² →
 //!                    linear accuracy model → model+N-samples search,
@@ -53,6 +57,7 @@ pub mod numerics;
 pub mod runtime;
 pub mod search;
 pub mod serving;
+pub mod store;
 pub mod tensor;
 pub mod testing;
 pub mod util;

@@ -11,6 +11,8 @@
 //!   figures                      regenerate all figures into --out
 //!   serve    --sessions K,...    multi-model gateway under closed-loop
 //!                                load; K = net@format
+//!   zoo-size <net> --format F    per-layer f32-vs-packed storage table
+//!                                (DESIGN.md §Storage)
 //!   bench    [--json PATH]       headless hot-path suite; --json writes
 //!                                the machine-readable BENCH report
 //!   bench-sweep --net N          quick sequential sweep timing
@@ -26,7 +28,7 @@ use anyhow::{bail, Context, Result};
 use precis::coordinator::cache::ResultCache;
 use precis::coordinator::Coordinator;
 use precis::eval::sweep::EvalOptions;
-use precis::eval::{accuracy, sweep_design_space};
+use precis::eval::{accuracy_with_store, sweep_design_space};
 use precis::figures;
 use precis::formats::{self, Format, PrecisionSpec};
 use precis::nn::Zoo;
@@ -34,6 +36,7 @@ use precis::search::{default_ladder, exhaustive_search, plan_search, search, Pla
 use precis::serving::{
     drive_closed_loop, split_session_specs, warm_up, BackendKind, Gateway, SessionOptions,
 };
+use precis::store::{human_bytes, parse_byte_size, WeightStore};
 use precis::util::cli::Args;
 use precis::util::timer::Timer;
 
@@ -45,9 +48,10 @@ fn main() {
     }
 }
 
-const USAGE: &str = "usage: repro <info|eval|sweep|search|plan|trace|figure|figures|serve|bench|bench-sweep> [flags]
+const USAGE: &str = "usage: repro <info|eval|sweep|search|plan|trace|figure|figures|serve|zoo-size|bench|bench-sweep> [flags]
   repro info
   repro eval   --net lenet5 --format float:m7e6|plan:... [--samples 128] [--backend native|pjrt]
+               [--weight-budget 8m]   (cap + report the pre-quantized weight store)
   repro sweep  --net lenet5 [--samples 128] [--stride 1]
   repro search --net lenet5 [--target 0.99] [--refine 2] [--kind float|fixed|both]
   repro plan   <net> [--target 0.99] [--validate 4]
@@ -57,6 +61,9 @@ const USAGE: &str = "usage: repro <info|eval|sweep|search|plan|trace|figure|figu
   repro figures [--out results]
   repro serve  --sessions lenet5@float:m7e6,lenet5@plan:conv1=float:m4e5,*=fixed:l8r8
                [--requests 256] [--clients 8] [--wait-ms 5] [--backend native|pjrt|auto]
+               [--weight-budget 8m]   (gateway-wide staged-weight byte budget)
+  repro zoo-size <net> --format float:m7e6|plan:...
+               (per-layer f32 vs bit-packed bytes, MAC-weighted; DESIGN.md §Storage)
   repro bench  [--preset quick|full] [--tag T] [--json BENCH_T.json]
                (headless: no artifacts needed; compare files with
                 .github/scripts/bench_compare.py)
@@ -110,11 +117,27 @@ fn run(raw: &[String]) -> Result<()> {
             let net = zoo.network(net_name)?;
             let resolved = spec.resolve(&net)?;
             let t = Timer::start();
+            // --weight-budget caps the pre-quantized weight store the
+            // eval workers share, and reports its counters after
+            let weight_budget = args.get("weight-budget").map(parse_byte_size).transpose()?;
             let acc = match args.get_or("backend", "native") {
-                "native" => accuracy(&net, &spec, samples)?,
+                "native" => {
+                    let store = std::sync::Arc::new(WeightStore::from_budget(weight_budget));
+                    let acc = accuracy_with_store(&net, &spec, samples, &store)?;
+                    if weight_budget.is_some() {
+                        eprintln!("# weight store: {}", store.stats().render());
+                    }
+                    acc
+                }
                 // the AOT executables take one fmt vector: any spec
                 // that resolves uniform runs on PJRT
                 "pjrt" => {
+                    if weight_budget.is_some() {
+                        eprintln!(
+                            "(--weight-budget applies to the native engine's weight store \
+                             only; PJRT holds weights on-device — flag ignored)"
+                        );
+                    }
                     let fmt = spec.resolved_uniform(&net)?;
                     pjrt_eval(&net, &artifacts, &fmt, samples, zoo.batch)?
                 }
@@ -281,10 +304,20 @@ fn run(raw: &[String]) -> Result<()> {
             let n_clients = args.get_usize("clients", 8)?.max(1);
             let wait_ms = args.get_usize("wait-ms", 5)?;
             let kind = BackendKind::parse(args.get_or("backend", "native"))?;
+            // ONE weight store serves every session the gateway hosts
+            // (sessions share staged weights by resolved format)
+            let weight_budget = args.get("weight-budget").map(parse_byte_size).transpose()?;
+            if weight_budget.is_some() && kind == BackendKind::Pjrt {
+                eprintln!(
+                    "(--weight-budget applies to native sessions only; PJRT holds weights \
+                     on-device — the cap will sit unused)"
+                );
+            }
             let zoo = Zoo::load(&artifacts)?;
             let gateway = Gateway::new(zoo, kind).with_options(SessionOptions {
                 batch: 0, // artifact batch size
                 max_wait: Duration::from_millis(wait_ms as u64),
+                weight_budget,
             });
             let mut keys = Vec::new();
             for spec in split_session_specs(&specs) {
@@ -316,6 +349,59 @@ fn run(raw: &[String]) -> Result<()> {
             );
             let fin = gateway.shutdown();
             println!("served {} requests in {} batches total", fin.total_requests(), fin.total_batches());
+        }
+        "zoo-size" => {
+            // per-layer storage footprint: f32 carrier vs the packed
+            // narrow-width encoding, MAC-weighted (DESIGN.md §Storage)
+            let net_name = args
+                .get("net")
+                .or_else(|| args.positional().get(1).map(|s| s.as_str()))
+                .context("--net (or a positional network name) required")?;
+            let spec = PrecisionSpec::parse(
+                args.get("format")
+                    .context("--format float:m7e6 | plan:... required")?,
+            )?;
+            let zoo = Zoo::load(&artifacts)?;
+            let net = zoo.network(net_name)?;
+            let rows = precis::store::zoo_size(&net, &spec)?;
+            println!(
+                "{:<16} {:>14} {:>10} {:>8} {:>10} {:>10} {:>7} {:>9}",
+                "layer", "format", "macs", "params", "f32", "packed", "ratio", "mac-spdup"
+            );
+            let (mut tp, mut tf, mut tpk, mut tmacs) = (0usize, 0usize, 0usize, 0usize);
+            let mut weighted_bits = 0f64;
+            for r in &rows {
+                println!(
+                    "{:<16} {:>14} {:>10} {:>8} {:>10} {:>10} {:>6.2}x {:>8.2}x",
+                    r.layer,
+                    r.fmt.id(),
+                    r.macs,
+                    r.params,
+                    human_bytes(r.f32_bytes),
+                    human_bytes(r.packed_bytes),
+                    r.f32_bytes as f64 / r.packed_bytes.max(1) as f64,
+                    r.mac_speedup,
+                );
+                tp += r.params;
+                tf += r.f32_bytes;
+                tpk += r.packed_bytes;
+                tmacs += r.macs;
+                weighted_bits += r.macs as f64 * r.bits_per_value as f64;
+            }
+            let resolved = spec.resolve(&net)?;
+            println!(
+                "\ntotal: {} params, {} f32 -> {} packed ({:.2}x compression)",
+                tp,
+                human_bytes(tf),
+                human_bytes(tpk),
+                tf as f64 / tpk.max(1) as f64,
+            );
+            println!(
+                "MAC-weighted width {:.1} bits/value; hw speedup {:.2}x, energy {:.2}x (paper Fig 5 framing)",
+                weighted_bits / tmacs.max(1) as f64,
+                precis::hw::plan_speedup(&net, &resolved),
+                precis::hw::plan_energy_savings(&net, &resolved),
+            );
         }
         "bench" => {
             // the headless hot-path suite + machine-readable report

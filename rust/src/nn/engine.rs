@@ -26,6 +26,20 @@
 //! is the M/N cache-blocked [`gemm_q`] with a strictly serial k chain
 //! per output element (§Perf L3 target; DESIGN.md §4).
 //!
+//! Weight staging goes through the [`crate::store::WeightStore`]
+//! (DESIGN.md §Storage): weights are constant per `(layer, resolved
+//! format)`, so each conv/dense reads its pre-quantized tensor from the
+//! store by reference — the quantize-and-copy staging pass survives
+//! only as the store-miss fallback ([`Engine::stage_quantized_weights`]
+//! into the scratch `wq` buffer), which is bit-identical by
+//! construction (the store runs the same `quantize_slice`).
+//! `Format::SINGLE` layers whose weights the identity op leaves
+//! bit-identical skip even that: the table marks them
+//! [`Staging::Direct`] and the kernels borrow the network's tensor
+//! in place (checked once per table resolution, so a weight tensor
+//! containing carrier subnormals still stages — the flush is part of
+//! the bit-exactness contract).
+//!
 //! Every quantized kernel here is **monomorphized** per representation
 //! kind (DESIGN.md §Perf): each layer's [`Quantizer`] is dispatched
 //! ONCE per kernel call via [`crate::with_quant_op!`], selecting the
@@ -43,7 +57,8 @@ use anyhow::{bail, Result};
 use crate::formats::{Format, PrecisionSpec};
 use crate::nn::layers::Layer;
 use crate::nn::network::Network;
-use crate::numerics::{quantize_slice, QuantOp, Quantizer};
+use crate::numerics::{quantize_slice, QIdentity, QuantOp, Quantizer};
+use crate::store::{StoreKey, WeightStore};
 use crate::tensor::Tensor;
 use crate::with_quant_op;
 
@@ -70,11 +85,53 @@ pub struct QuantTable {
 }
 
 enum LayerQuant {
-    /// conv / dense: the layer's own quantizer; unnamed quantized ops:
-    /// the inherited downstream quantizer; exact ops: unused
-    One(Quantizer),
-    /// inception: per-branch quantizers in concat order
-    Branches(Vec<Quantizer>),
+    /// conv / dense: the layer's own entry; unnamed quantized ops: the
+    /// inherited downstream quantizer; exact ops: unused
+    One(LayerQ),
+    /// inception: per-branch entries in concat order
+    Branches(Vec<LayerQ>),
+}
+
+/// One layer's resolved quantization entry: the kernel dispatcher plus
+/// how its weight operand is staged.  Built once per table resolution,
+/// so the hot path performs neither format resolution nor store-key
+/// allocation.
+struct LayerQ {
+    q: Quantizer,
+    staging: Staging,
+}
+
+/// How a layer's weight tensor reaches the GEMM (module docs;
+/// DESIGN.md §Storage).
+enum Staging {
+    /// no weight operand (exact ops, input staging, gavgpool)
+    NoWeights,
+    /// `Format::SINGLE` over weights the identity op leaves
+    /// bit-identical: borrow the network's tensor directly — no copy,
+    /// no quantization, no store bytes
+    Direct,
+    /// read the pre-quantized tensor from the [`WeightStore`] under
+    /// this prebuilt key; scratch-stage on a miss the budget cannot
+    /// admit
+    Store(StoreKey),
+}
+
+/// Build a named layer's entry, classifying its staging path (the key
+/// is prebuilt here so store lookups allocate nothing per forward).
+fn named_layer_q(net: &Network, name: &str, fmt: Format) -> LayerQ {
+    let q = Quantizer::new(&fmt);
+    let staging = if q.is_identity() && identity_clean(net.weight(&format!("{name}.w")).data()) {
+        Staging::Direct
+    } else {
+        Staging::Store(StoreKey::new(&net.name, name, fmt))
+    };
+    LayerQ { q, staging }
+}
+
+/// True when the identity op maps every value to itself — i.e. the
+/// tensor holds no carrier subnormal that `Format::SINGLE` would flush.
+fn identity_clean(w: &[f32]) -> bool {
+    w.iter().all(|&v| QIdentity.q(v).to_bits() == v.to_bits())
 }
 
 impl QuantTable {
@@ -86,11 +143,10 @@ impl QuantTable {
             PrecisionSpec::Uniform(f) => Ok(QuantTable::uniform_for(net, f)),
             PrecisionSpec::PerLayer(p) => {
                 let resolved = p.resolve(net)?;
-                let fmt_of = |name: &str| -> Quantizer {
-                    let f = resolved
+                let fmt_of = |name: &str| -> Format {
+                    resolved
                         .format_for(name)
-                        .unwrap_or_else(|| panic!("resolved plan misses layer {name:?}"));
-                    Quantizer::new(&f)
+                        .unwrap_or_else(|| panic!("resolved plan misses layer {name:?}"))
                 };
                 let mut per_layer: Vec<LayerQuant> = Vec::with_capacity(net.layers.len());
                 // reverse pass: unnamed quantized ops inherit the next
@@ -102,20 +158,22 @@ impl QuantTable {
                 for layer in net.layers.iter().rev() {
                     let lq = match layer {
                         Layer::Conv { name, .. } | Layer::Dense { name, .. } => {
-                            let q = fmt_of(name);
-                            next = Some(q);
-                            LayerQuant::One(q)
+                            let lq = named_layer_q(net, name, fmt_of(name));
+                            next = Some(lq.q);
+                            LayerQuant::One(lq)
                         }
                         Layer::Inception { .. } => {
-                            let qs: Vec<Quantizer> = layer
+                            let qs: Vec<LayerQ> = layer
                                 .inception_branches()
                                 .iter()
                                 .map(|b| match b {
-                                    Layer::Conv { name, .. } => fmt_of(name),
+                                    Layer::Conv { name, .. } => {
+                                        named_layer_q(net, name, fmt_of(name))
+                                    }
                                     _ => unreachable!("inception branches are convs"),
                                 })
                                 .collect();
-                            next = Some(qs[0]);
+                            next = Some(qs[0].q);
                             LayerQuant::Branches(qs)
                         }
                         Layer::GAvgPool => {
@@ -127,13 +185,14 @@ impl QuantTable {
                                     net.name
                                 );
                             };
-                            LayerQuant::One(q)
+                            LayerQuant::One(LayerQ { q, staging: Staging::NoWeights })
                         }
                         // exact ops never consult their entry; the
                         // placeholder is unreachable by construction
-                        _ => LayerQuant::One(
-                            next.unwrap_or_else(|| Quantizer::new(&Format::SINGLE)),
-                        ),
+                        _ => LayerQuant::One(LayerQ {
+                            q: next.unwrap_or_else(|| Quantizer::new(&Format::SINGLE)),
+                            staging: Staging::NoWeights,
+                        }),
                     };
                     per_layer.push(lq);
                 }
@@ -157,10 +216,19 @@ impl QuantTable {
             .layers
             .iter()
             .map(|l| match l {
-                Layer::Inception { .. } => {
-                    LayerQuant::Branches(vec![q; l.inception_branches().len()])
+                Layer::Conv { name, .. } | Layer::Dense { name, .. } => {
+                    LayerQuant::One(named_layer_q(net, name, *fmt))
                 }
-                _ => LayerQuant::One(q),
+                Layer::Inception { .. } => LayerQuant::Branches(
+                    l.inception_branches()
+                        .iter()
+                        .map(|b| match b {
+                            Layer::Conv { name, .. } => named_layer_q(net, name, *fmt),
+                            _ => unreachable!("inception branches are convs"),
+                        })
+                        .collect(),
+                ),
+                _ => LayerQuant::One(LayerQ { q, staging: Staging::NoWeights }),
             })
             .collect();
         QuantTable { input: q, per_layer }
@@ -217,8 +285,17 @@ impl Engine {
 
     /// Run the network on a batch `x` of shape (B, H, W, C) under a
     /// resolved per-layer quantizer table; returns logits (B, classes).
-    pub fn forward(&mut self, net: &Network, x: &Tensor, table: &QuantTable) -> Tensor {
-        let t = self.forward_prefix(net, x, table, net.layers.len());
+    /// `store` is the shared [`WeightStore`] staged weights are read
+    /// from (`None`, or a miss the budget cannot admit, falls back to
+    /// the scratch staging pass — bit-identical by construction).
+    pub fn forward(
+        &mut self,
+        net: &Network,
+        x: &Tensor,
+        table: &QuantTable,
+        store: Option<&WeightStore>,
+    ) -> Tensor {
+        let t = self.forward_prefix(net, x, table, net.layers.len(), store);
         assert_eq!(
             t.shape().len(),
             2,
@@ -241,6 +318,7 @@ impl Engine {
         x: &Tensor,
         table: &QuantTable,
         n_layers: usize,
+        store: Option<&WeightStore>,
     ) -> Tensor {
         let shape = x.shape();
         assert_eq!(shape.len(), 4, "input must be (B, H, W, C)");
@@ -260,7 +338,7 @@ impl Engine {
         quantize_slice(&mut self.act_a, &table.input);
 
         for (layer, lq) in net.layers.iter().zip(&table.per_layer).take(n_layers) {
-            cur = self.apply_layer(net, layer, cur, lq);
+            cur = self.apply_layer(net, layer, cur, lq, store);
         }
 
         let (shape, n) = match cur {
@@ -273,18 +351,25 @@ impl Engine {
     /// Apply one layer reading from `act_a`, leaving the result in
     /// `act_a`.  `lq` is the layer's entry in the resolved quantizer
     /// table (per-branch for inception).
-    fn apply_layer(&mut self, net: &Network, layer: &Layer, cur: ActShape, lq: &LayerQuant) -> ActShape {
+    fn apply_layer(
+        &mut self,
+        net: &Network,
+        layer: &Layer,
+        cur: ActShape,
+        lq: &LayerQuant,
+        store: Option<&WeightStore>,
+    ) -> ActShape {
         match layer {
             Layer::Conv { .. } => {
                 let LayerQuant::One(q) = lq else {
                     panic!("conv layer with branch quantizers");
                 };
-                let out = self.conv(net, layer, cur, q, None);
+                let out = self.conv(net, layer, cur, q, store);
                 std::mem::swap(&mut self.act_a, &mut self.act_b);
                 out
             }
             Layer::Dense { name, in_dim, out_dim } => {
-                let LayerQuant::One(q) = lq else {
+                let LayerQuant::One(lq) = lq else {
                     panic!("dense layer with branch quantizers");
                 };
                 let ActShape::Flat(b, f) = cur else {
@@ -293,13 +378,27 @@ impl Engine {
                 assert_eq!(f, *in_dim, "dense {name}: input dim mismatch");
                 let w = net.weight(&format!("{name}.w"));
                 let bias = net.weight(&format!("{name}.b"));
-                self.stage_quantized_weights(w.data(), q);
+                // staged weights come from the store (by reference), the
+                // network itself (identity-direct), or — on a miss the
+                // budget cannot admit — the scratch staging fallback
+                let cached = match (&lq.staging, store) {
+                    (Staging::Store(key), Some(s)) => s.prepare(key, w.data()),
+                    _ => None,
+                };
+                if cached.is_none() && !matches!(lq.staging, Staging::Direct) {
+                    self.stage_quantized_weights(w.data(), &lq.q);
+                }
+                let wq: &[f32] = match (&lq.staging, &cached) {
+                    (Staging::Direct, _) => w.data(),
+                    (_, Some(entry)) => entry.quantized(),
+                    _ => &self.wq,
+                };
                 resize(&mut self.act_b, b * out_dim);
                 // one dispatch selects the layer's monomorphized kernels
-                with_quant_op!(q, op => {
+                with_quant_op!(&lq.q, op => {
                     gemm_q(
                         &self.act_a[..b * f],
-                        &self.wq,
+                        wq,
                         &mut self.act_b,
                         b,
                         *in_dim,
@@ -344,11 +443,13 @@ impl Engine {
                 };
                 // unnamed quantized op: runs in the inherited
                 // downstream format (QuantTable docs)
-                let LayerQuant::One(q) = lq else {
+                let LayerQuant::One(lq) = lq else {
                     panic!("gavgpool with branch quantizers");
                 };
                 resize(&mut self.act_b, b * c);
-                with_quant_op!(q, op => gavgpool_q(&self.act_a, &mut self.act_b, b, h, w, c, op));
+                with_quant_op!(&lq.q, op => {
+                    gavgpool_q(&self.act_a, &mut self.act_b, b, h, w, c, op)
+                });
                 std::mem::swap(&mut self.act_a, &mut self.act_b);
                 ActShape::Flat(b, c)
             }
@@ -387,7 +488,7 @@ impl Engine {
                         std::mem::swap(&mut self.act_a, &mut self.act_b);
                         bshape = ActShape::Hwc(b, oh, ow, c);
                     }
-                    let out = self.conv(net, br, bshape, &qs[bi], None);
+                    let out = self.conv(net, br, bshape, &qs[bi], store);
                     let ActShape::Hwc(_, boh, bow, bc) = out else { unreachable!() };
                     assert_eq!((boh, bow), (h, w), "inception branches must preserve HxW");
                     // scatter branch channels into the concat buffer
@@ -412,8 +513,8 @@ impl Engine {
         net: &Network,
         layer: &Layer,
         cur: ActShape,
-        q: &Quantizer,
-        weight_override: Option<(&[f32], &[f32])>,
+        lq: &LayerQ,
+        store: Option<&WeightStore>,
     ) -> ActShape {
         let Layer::Conv { name, kh, kw, in_ch, out_ch, stride, pad } = layer else {
             panic!("conv() on non-conv layer");
@@ -431,23 +532,35 @@ impl Engine {
             &self.act_a, &mut self.patches, b, h, w, c, *kh, *kw, *stride, *pad, oh, ow,
         );
 
-        let (wdata, bdata) = match weight_override {
-            Some((wd, bd)) => (wd, bd),
-            None => (
-                net.weight(&format!("{name}.w")).data(),
-                net.weight(&format!("{name}.b")).data(),
-            ),
+        let wt = net.weight(&format!("{name}.w"));
+        let bdata = net.weight(&format!("{name}.b")).data();
+        // staged weights by reference (store / identity-direct), with
+        // scratch staging as the miss fallback — see the Dense arm
+        let cached = match (&lq.staging, store) {
+            (Staging::Store(key), Some(s)) => s.prepare(key, wt.data()),
+            _ => None,
         };
-        self.stage_quantized_weights(wdata, q);
+        if cached.is_none() && !matches!(lq.staging, Staging::Direct) {
+            self.stage_quantized_weights(wt.data(), &lq.q);
+        }
+        let wq: &[f32] = match (&lq.staging, &cached) {
+            (Staging::Direct, _) => wt.data(),
+            (_, Some(entry)) => entry.quantized(),
+            _ => &self.wq,
+        };
         resize(&mut self.act_b, m * out_ch);
         // one dispatch selects the layer's monomorphized kernels
-        with_quant_op!(q, op => {
-            gemm_q(&self.patches, &self.wq, &mut self.act_b, m, k_dim, *out_ch, op);
+        with_quant_op!(&lq.q, op => {
+            gemm_q(&self.patches, wq, &mut self.act_b, m, k_dim, *out_ch, op);
             add_bias_q(&mut self.act_b, bdata, m, *out_ch, op);
         });
         ActShape::Hwc(b, oh, ow, *out_ch)
     }
 
+    /// The store-miss fallback: quantize-and-copy into the scratch `wq`
+    /// buffer — the pre-store staging pass, retained so a budget the
+    /// store cannot admit an entry under degrades to correct
+    /// (bit-identical) re-staging, never to an error.
     fn stage_quantized_weights(&mut self, w: &[f32], q: &Quantizer) {
         self.wq.clear();
         self.wq.extend_from_slice(w);

@@ -21,6 +21,7 @@ use anyhow::{bail, Result};
 
 use crate::formats::{Format, PrecisionSpec};
 use crate::nn::{Engine, Network, QuantTable};
+use crate::store::{StoreStats, WeightStore};
 use crate::tensor::Tensor;
 
 /// Anything that can run a batch (B, H, W, C) -> (B, classes) under a
@@ -52,6 +53,14 @@ pub trait Backend {
     /// padding cannot perturb live rows, since per-sample computation
     /// is independent (DESIGN.md §3).
     fn fixed_batch(&self) -> Option<usize> {
+        None
+    }
+
+    /// Counter snapshot of the weight store this backend stages from
+    /// (DESIGN.md §Storage); `None` for backends that do not stage
+    /// weights host-side (the AOT/PJRT executables hold weights
+    /// on-device).
+    fn store_stats(&self) -> Option<StoreStats> {
         None
     }
 }
@@ -114,11 +123,29 @@ pub struct NativeBackend {
     engine: Engine,
     /// memoized (spec, resolved quantizer table) for the last spec run
     table: Option<(PrecisionSpec, QuantTable)>,
+    /// pre-quantized weight store, shared with every other backend the
+    /// gateway (or a parallel eval driver) built over the same zoo —
+    /// entries are keyed by resolved format, so sessions share them
+    /// (DESIGN.md §Storage)
+    store: Arc<WeightStore>,
 }
 
 impl NativeBackend {
+    /// A backend with its own default-budget store
+    /// ([`crate::store::DEFAULT_WEIGHT_BUDGET`]); use
+    /// [`NativeBackend::with_store`] to share one across backends.
     pub fn new(net: Arc<Network>) -> NativeBackend {
-        NativeBackend { net, engine: Engine::new(), table: None }
+        Self::with_store(net, Arc::new(WeightStore::default()))
+    }
+
+    /// A backend staging from a shared [`WeightStore`].
+    pub fn with_store(net: Arc<Network>, store: Arc<WeightStore>) -> NativeBackend {
+        NativeBackend { net, engine: Engine::new(), table: None, store }
+    }
+
+    /// The weight store this backend stages from.
+    pub fn store(&self) -> &Arc<WeightStore> {
+        &self.store
     }
 
     /// Resolve (or reuse) the quantizer table for `spec`.
@@ -140,7 +167,8 @@ impl NativeBackend {
     /// not intermediate activations.
     pub fn forward_prefix(&mut self, x: &Tensor, fmt: &Format, n_layers: usize) -> Tensor {
         let table = QuantTable::uniform_for(&self.net, fmt);
-        self.engine.forward_prefix(&self.net, x, &table, n_layers)
+        self.engine
+            .forward_prefix(&self.net, x, &table, n_layers, Some(&self.store))
     }
 }
 
@@ -148,7 +176,7 @@ impl Backend for NativeBackend {
     fn run_spec(&mut self, x: &Tensor, spec: &PrecisionSpec) -> Result<Tensor> {
         self.ensure_table(spec)?;
         let (_, table) = self.table.as_ref().expect("table resolved above");
-        Ok(self.engine.forward(&self.net, x, table))
+        Ok(self.engine.forward(&self.net, x, table, Some(&self.store)))
     }
 
     fn network(&self) -> &Arc<Network> {
@@ -157,6 +185,10 @@ impl Backend for NativeBackend {
 
     fn label(&self) -> &'static str {
         "native"
+    }
+
+    fn store_stats(&self) -> Option<StoreStats> {
+        Some(self.store.stats())
     }
 }
 
@@ -225,15 +257,20 @@ fn pjrt_backend(
 /// engine with a note on stderr (including for mixed per-layer plans,
 /// which only the native engine executes); `Pjrt` makes unavailability
 /// a hard error so a silent native run can never be mislabeled as pjrt.
+/// Native backends stage weights from `store` — the gateway passes one
+/// shared store so its sessions share entries by resolved format.
 pub(crate) fn make_factory(
     net: Arc<Network>,
     dir: PathBuf,
     batch: usize,
     spec: PrecisionSpec,
     kind: BackendKind,
+    store: Arc<WeightStore>,
 ) -> BackendFactory {
     Box::new(move || match kind {
-        BackendKind::Native => Ok(Box::new(NativeBackend::new(net)) as Box<dyn Backend>),
+        BackendKind::Native => {
+            Ok(Box::new(NativeBackend::with_store(net, store)) as Box<dyn Backend>)
+        }
         BackendKind::Pjrt => pjrt_backend(&net, &dir, batch, &spec),
         BackendKind::Auto => match pjrt_backend(&net, &dir, batch, &spec) {
             Ok(b) => Ok(b),
@@ -242,7 +279,7 @@ pub(crate) fn make_factory(
                     "(PJRT unavailable for {} — serving on the native engine: {e:#})",
                     net.name
                 );
-                Ok(Box::new(NativeBackend::new(net)) as Box<dyn Backend>)
+                Ok(Box::new(NativeBackend::with_store(net, store)) as Box<dyn Backend>)
             }
         },
     })
@@ -269,6 +306,36 @@ mod tests {
         assert_eq!(out.shape(), &[4, net.classes]);
         assert_eq!(b.label(), "native");
         assert_eq!(b.network().name, net.name);
+    }
+
+    /// The engine stages weights through the backend's store: the first
+    /// forward misses once per quantized layer, a warm forward only
+    /// hits (zero weight-quantization work), and `Format::SINGLE` over
+    /// clean weights bypasses the store entirely (identity-direct
+    /// borrow — the ISSUE 5 `QIdentity` staging fix).
+    #[test]
+    fn native_backend_stages_weights_through_the_store() {
+        let net = crate::testing::fixtures::tiny_conv_network(4);
+        let mut b = NativeBackend::new(net.clone());
+        let x = net.eval_x.slice_rows(0, 4);
+        let fmt = Format::fixed(8, 8);
+        b.run_batch(&x, &fmt).unwrap();
+        let s = b.store_stats().expect("native backends have a store");
+        assert_eq!((s.hits, s.misses, s.entries), (0, 2, 2), "c1 and fc staged once");
+        b.run_batch(&x, &fmt).unwrap();
+        let s = b.store_stats().unwrap();
+        assert_eq!(s.misses, 2, "a warm forward quantizes no weights");
+        assert_eq!(s.hits, 2);
+        // switching specs adds entries only for newly resolved formats
+        b.run_batch(&x, &Format::float(7, 6)).unwrap();
+        assert_eq!(b.store_stats().unwrap().entries, 4);
+
+        // the SINGLE fast path borrows the network's weights directly:
+        // no store traffic, no copies, and still the exact logits
+        let mut ident = NativeBackend::new(net.clone());
+        ident.run_batch(&x, &Format::SINGLE).unwrap();
+        let s = ident.store_stats().unwrap();
+        assert_eq!((s.hits, s.misses, s.entries, s.bytes), (0, 0, 0, 0));
     }
 
     /// The uniform-plan anchor (ISSUE 3 satellite): for random formats

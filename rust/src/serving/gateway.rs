@@ -23,6 +23,7 @@ use crate::formats::PrecisionSpec;
 use crate::nn::Zoo;
 use crate::serving::backend::BackendKind;
 use crate::serving::session::{Session, SessionKey, SessionOptions, SessionStats};
+use crate::store::{StoreStats, WeightStore};
 
 /// Aggregate serving telemetry: one [`SessionStats`] per hosted
 /// session, keyed and sorted by [`SessionKey`].  Like the per-session
@@ -31,6 +32,12 @@ use crate::serving::session::{Session, SessionKey, SessionOptions, SessionStats}
 #[derive(Clone, Debug, Default)]
 pub struct GatewayStats {
     pub sessions: Vec<(SessionKey, SessionStats)>,
+    /// LIVE snapshot of the gateway-owned shared store, taken at the
+    /// moment [`Gateway::stats`] / [`Gateway::shutdown`] ran — unlike
+    /// the per-session copies (which are as of each session's last
+    /// flushed batch).  `None` when that store saw no traffic (all
+    /// PJRT, or adopted sessions staging from their own stores).
+    pub store: Option<StoreStats>,
 }
 
 impl GatewayStats {
@@ -44,16 +51,41 @@ impl GatewayStats {
         self.sessions.iter().map(|(_, s)| s.batches).sum()
     }
 
-    /// Fixed-width table for CLI/reporting output.
+    /// The shared weight-store counters: the gateway-level live
+    /// snapshot when there is one, otherwise the first session's
+    /// last-batch copy (sessions adopted with a custom factory stage
+    /// from their own store, which only they can report).
+    pub fn store(&self) -> Option<StoreStats> {
+        self.store
+            .or_else(|| self.sessions.iter().find_map(|(_, s)| s.store))
+    }
+
+    /// Fixed-width table for CLI/reporting output.  The `store h/m`
+    /// column shows the shared store's hit/miss totals as seen at each
+    /// session's last flushed batch; the footer line is
+    /// [`GatewayStats::store`] (live at snapshot time for
+    /// gateway-opened sessions).
     pub fn render(&self) -> String {
         let mut out = format!(
-            "{:<32} {:>8} {:>9} {:>8} {:>9} {:>7} {:>10} {:>10}\n",
-            "session", "backend", "requests", "batches", "req/batch", "padded", "p50_queue", "p99_queue"
+            "{:<32} {:>8} {:>9} {:>8} {:>9} {:>7} {:>10} {:>10} {:>12}\n",
+            "session",
+            "backend",
+            "requests",
+            "batches",
+            "req/batch",
+            "padded",
+            "p50_queue",
+            "p99_queue",
+            "store h/m"
         );
         for (key, s) in &self.sessions {
             let slots = s.requests + s.padded_slots;
+            let store = match &s.store {
+                Some(st) => format!("{}/{}", st.hits, st.misses),
+                None => "-".to_string(),
+            };
             out.push_str(&format!(
-                "{:<32} {:>8} {:>9} {:>8} {:>9.1} {:>6.1}% {:>8.2}ms {:>8.2}ms\n",
+                "{:<32} {:>8} {:>9} {:>8} {:>9.1} {:>6.1}% {:>8.2}ms {:>8.2}ms {:>12}\n",
                 key.to_string(),
                 s.backend,
                 s.requests,
@@ -62,7 +94,11 @@ impl GatewayStats {
                 100.0 * s.padded_slots as f64 / slots.max(1) as f64,
                 s.p50_queue_ms,
                 s.p99_queue_ms,
+                store,
             ));
+        }
+        if let Some(st) = self.store() {
+            out.push_str(&format!("weight store: {}\n", st.render()));
         }
         out
     }
@@ -74,6 +110,11 @@ pub struct Gateway {
     zoo: Option<Zoo>,
     kind: BackendKind,
     opts: SessionOptions,
+    /// ONE pre-quantized weight store shared by every session this
+    /// gateway opens: entries are keyed by `(net, layer, resolved
+    /// format)`, so sessions with overlapping resolved formats share
+    /// staged weights (DESIGN.md §Storage)
+    store: Arc<WeightStore>,
     sessions: RwLock<BTreeMap<SessionKey, Arc<Session>>>,
 }
 
@@ -81,10 +122,12 @@ impl Gateway {
     /// A gateway over a model zoo; sessions opened through it execute
     /// on `kind` backends.
     pub fn new(zoo: Zoo, kind: BackendKind) -> Gateway {
+        let opts = SessionOptions::default();
         Gateway {
             zoo: Some(zoo),
             kind,
-            opts: SessionOptions::default(),
+            store: opts.build_store(),
+            opts,
             sessions: RwLock::new(BTreeMap::new()),
         }
     }
@@ -92,23 +135,33 @@ impl Gateway {
     /// A gateway with no zoo: only [`Gateway::adopt`]ed sessions can be
     /// hosted (custom backends, tests).
     pub fn empty() -> Gateway {
+        let opts = SessionOptions::default();
         Gateway {
             zoo: None,
             kind: BackendKind::Native,
-            opts: SessionOptions::default(),
+            store: opts.build_store(),
+            opts,
             sessions: RwLock::new(BTreeMap::new()),
         }
     }
 
     /// Set the batching options used by subsequently opened sessions.
+    /// Rebuilds the shared weight store from `opts.weight_budget`
+    /// (`--weight-budget`), so call it before opening sessions.
     pub fn with_options(mut self, opts: SessionOptions) -> Gateway {
         self.opts = opts;
+        self.store = opts.build_store();
         self
     }
 
     /// The zoo this gateway serves from (None for [`Gateway::empty`]).
     pub fn zoo(&self) -> Option<&Zoo> {
         self.zoo.as_ref()
+    }
+
+    /// The gateway-wide weight store its native sessions stage from.
+    pub fn store(&self) -> &Arc<WeightStore> {
+        &self.store
     }
 
     /// Hot-add a session for `(net, spec)` — a uniform [`crate::formats::Format`]
@@ -124,7 +177,7 @@ impl Gateway {
             .zoo
             .as_ref()
             .ok_or_else(|| anyhow!("gateway has no zoo; use adopt() for custom sessions"))?;
-        let session = Session::open_with(zoo, net, spec, self.kind, self.opts)?;
+        let session = Session::open_in(zoo, net, spec, self.kind, self.opts, self.store.clone())?;
         let mut map = self.write_lock();
         // on a lost race with a concurrent open, keep the incumbent —
         // but release the routing lock BEFORE dropping the duplicate,
@@ -194,14 +247,15 @@ impl Gateway {
         session.infer(pixels)
     }
 
-    /// Live aggregate telemetry across every hosted session.
+    /// Live aggregate telemetry across every hosted session, plus a
+    /// live snapshot of the gateway-owned weight store.
     pub fn stats(&self) -> GatewayStats {
         let sessions = self
             .read_lock()
             .iter()
             .map(|(k, s)| (k.clone(), s.stats()))
             .collect();
-        GatewayStats { sessions }
+        GatewayStats { sessions, store: live_store_snapshot(&self.store) }
     }
 
     /// Shut every session down and return the aggregate telemetry.
@@ -223,7 +277,8 @@ impl Gateway {
             };
             sessions.push((key, stats));
         }
-        GatewayStats { sessions }
+        // final store snapshot AFTER every owned session drained
+        GatewayStats { sessions, store: live_store_snapshot(&self.store) }
     }
 
     fn read_lock(&self) -> std::sync::RwLockReadGuard<'_, BTreeMap<SessionKey, Arc<Session>>> {
@@ -233,6 +288,14 @@ impl Gateway {
     fn write_lock(&self) -> std::sync::RwLockWriteGuard<'_, BTreeMap<SessionKey, Arc<Session>>> {
         self.sessions.write().unwrap_or_else(PoisonError::into_inner)
     }
+}
+
+/// `Some(stats)` iff the store has seen any staging traffic — keeps
+/// [`GatewayStats::store`] falling back to per-session snapshots for
+/// gateways whose own store is unused (adopted custom sessions).
+fn live_store_snapshot(store: &WeightStore) -> Option<StoreStats> {
+    let s = store.stats();
+    (s.hits + s.misses + s.rejected > 0).then_some(s)
 }
 
 #[cfg(test)]

@@ -24,7 +24,11 @@
 //! * [`Gateway`] — N concurrent sessions keyed by `(network, spec)`
 //!   with per-key routing, hot add/remove, and live aggregate
 //!   telemetry ([`GatewayStats`] — requests, batches, padded slots,
-//!   p50/p99 queue latency per session).
+//!   p50/p99 queue latency, and shared weight-store counters per
+//!   session).  All native sessions of one gateway stage weights from
+//!   ONE [`crate::store::WeightStore`], so sessions whose specs
+//!   resolve a layer to the same format share its pre-quantized
+//!   tensor (`--weight-budget`; DESIGN.md §Storage).
 //!
 //! ```no_run
 //! use precis::formats::Format;

@@ -24,6 +24,7 @@ use anyhow::{anyhow, Result};
 use crate::formats::PrecisionSpec;
 use crate::nn::{Network, Zoo};
 use crate::serving::backend::{make_factory, BackendFactory, BackendKind};
+use crate::store::{StoreStats, WeightStore};
 use crate::tensor::Tensor;
 
 /// Identity of one hosted session: the `(network, precision spec)`
@@ -96,6 +97,12 @@ pub struct SessionStats {
     pub p50_queue_ms: f64,
     /// 99th-percentile batching-queue wait
     pub p99_queue_ms: f64,
+    /// weight-store counters of the backend this session executes on
+    /// (snapshotted after every flushed batch; `None` for backends
+    /// without a host-side store, e.g. PJRT).  Gateway sessions share
+    /// ONE store per zoo, so every session reports the same shared
+    /// totals (DESIGN.md §Storage).
+    pub store: Option<StoreStats>,
 }
 
 /// Sliding-window size for the queue-latency percentiles.
@@ -108,6 +115,7 @@ struct StatsCell {
     requests: u64,
     batches: u64,
     padded_slots: u64,
+    store: Option<StoreStats>,
     queue_lat_s: Vec<f64>,
     lat_next: usize,
 }
@@ -135,6 +143,7 @@ impl StatsCell {
                 padded_slots: self.padded_slots,
                 p50_queue_ms: 0.0,
                 p99_queue_ms: 0.0,
+                store: self.store,
             },
             self.queue_lat_s.clone(),
         )
@@ -173,11 +182,29 @@ pub struct SessionOptions {
     /// how long the oldest queued request may wait before a partial
     /// batch is flushed
     pub max_wait: Duration,
+    /// byte budget of the pre-quantized weight store (`--weight-budget`;
+    /// DESIGN.md §Storage).  `None` = the store default
+    /// ([`crate::store::DEFAULT_WEIGHT_BUDGET`]); `Some(0)` disables
+    /// caching (every forward re-stages).  A gateway builds ONE store
+    /// from this for all its sessions; a standalone
+    /// [`Session::open_with`] gets its own.
+    pub weight_budget: Option<usize>,
 }
 
 impl Default for SessionOptions {
     fn default() -> Self {
-        SessionOptions { batch: 0, max_wait: Duration::from_millis(5) }
+        SessionOptions {
+            batch: 0,
+            max_wait: Duration::from_millis(5),
+            weight_budget: None,
+        }
+    }
+}
+
+impl SessionOptions {
+    /// Build the weight store these options describe.
+    pub(crate) fn build_store(&self) -> Arc<WeightStore> {
+        Arc::new(WeightStore::from_budget(self.weight_budget))
     }
 }
 
@@ -209,7 +236,8 @@ impl Session {
         Self::open_with(zoo, net, spec, kind, SessionOptions::default())
     }
 
-    /// [`Session::open`] with explicit batching options.
+    /// [`Session::open`] with explicit batching options (the session
+    /// gets its own weight store sized by `opts.weight_budget`).
     pub fn open_with(
         zoo: &Zoo,
         net: &str,
@@ -217,12 +245,29 @@ impl Session {
         kind: BackendKind,
         opts: SessionOptions,
     ) -> Result<Session> {
+        let store = opts.build_store();
+        Self::open_in(zoo, net, spec, kind, opts, store)
+    }
+
+    /// [`Session::open_with`] staging from a caller-shared
+    /// [`WeightStore`] — how a [`crate::serving::Gateway`] makes all
+    /// its sessions share pre-quantized weights by resolved format
+    /// (DESIGN.md §Storage).
+    pub fn open_in(
+        zoo: &Zoo,
+        net: &str,
+        spec: impl Into<PrecisionSpec>,
+        kind: BackendKind,
+        opts: SessionOptions,
+        store: Arc<WeightStore>,
+    ) -> Result<Session> {
         let spec: PrecisionSpec = spec.into();
         let network = zoo.network(net)?;
         // fail malformed plans at open time, not on the first request
         spec.resolve(&network)?;
         let batch = if opts.batch == 0 { zoo.batch } else { opts.batch };
-        let factory = make_factory(network.clone(), zoo.dir.clone(), batch, spec.clone(), kind);
+        let factory =
+            make_factory(network.clone(), zoo.dir.clone(), batch, spec.clone(), kind, store);
         Ok(Self::with_factory(network, spec, batch, opts.max_wait, factory))
     }
 
@@ -469,6 +514,11 @@ fn dispatch(
                     let _ = r.reply.send(Err(anyhow!("batch failed: {msg}")));
                 }
             }
+        }
+        // store counters move during run_spec (weight staging happens
+        // inside the forward), so the snapshot follows the batch
+        if let Some(st) = backend.store_stats() {
+            stats.lock().unwrap_or_else(PoisonError::into_inner).store = Some(st);
         }
     }
 }
@@ -736,5 +786,9 @@ mod tests {
         assert_eq!(mid.padded_slots, 0);
         assert!(mid.p99_queue_ms >= mid.p50_queue_ms);
         assert_eq!(mid.backend, "native");
+        // native sessions surface their weight-store counters live
+        // (SINGLE over clean weights borrows directly: all zeros)
+        let st = mid.store.expect("native sessions report store stats");
+        assert_eq!((st.hits, st.misses, st.entries), (0, 0, 0));
     }
 }

@@ -1,0 +1,114 @@
+//! Per-layer storage-footprint accounting — the data behind
+//! `repro zoo-size`.
+//!
+//! The paper frames custom widths as a *memory* win as much as a MAC
+//! win (PAPER.md §4): an `X(8, 8)` weight occupies 17 bits, not 32.
+//! [`zoo_size`] prices one network under a resolved precision spec —
+//! f32 carrier bytes vs the [`PackedTensor`] layout's packed bytes per
+//! layer — alongside each layer's MAC count and the [`crate::hw`] MAC
+//! speedup, so the table mirrors the paper's footprint framing: wide
+//! layers dominate both the byte total and the MAC-weighted speedup.
+
+use anyhow::Result;
+
+use crate::formats::{Format, PrecisionSpec};
+use crate::nn::Network;
+use crate::store::PackedTensor;
+
+/// One quantized layer's storage and compute footprint under its
+/// resolved format.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FootprintRow {
+    pub layer: String,
+    pub fmt: Format,
+    /// per-sample MACs (the weighting `hw::plan_speedup` uses)
+    pub macs: usize,
+    /// weight + bias parameter count
+    pub params: usize,
+    /// f32-carrier storage of those parameters
+    pub f32_bytes: usize,
+    /// packed code width under `fmt` (DESIGN.md §Storage)
+    pub bits_per_value: u32,
+    /// packed storage of those parameters
+    pub packed_bytes: usize,
+    /// the format's MAC-level hardware speedup (paper Fig 5)
+    pub mac_speedup: f64,
+}
+
+/// Price every quantized layer of `net` under `spec` (validated like
+/// every execution path — typos and uncovered layers are `Err`).  Rows
+/// come back in execution order.
+pub fn zoo_size(net: &Network, spec: &PrecisionSpec) -> Result<Vec<FootprintRow>> {
+    let resolved = spec.resolve(net)?;
+    let macs = net.quantized_layer_macs();
+    debug_assert_eq!(macs.len(), resolved.assignments.len());
+    let rows = resolved
+        .assignments
+        .iter()
+        .zip(&macs)
+        .map(|((name, fmt), (mac_name, macs))| {
+            debug_assert_eq!(name, mac_name);
+            let params = net.weight(&format!("{name}.w")).data().len()
+                + net.weight(&format!("{name}.b")).data().len();
+            FootprintRow {
+                layer: name.clone(),
+                fmt: *fmt,
+                macs: *macs,
+                params,
+                f32_bytes: params * 4,
+                bits_per_value: PackedTensor::bits_per_value(fmt),
+                packed_bytes: PackedTensor::packed_bytes_for(params, fmt),
+                mac_speedup: crate::hw::speedup(fmt),
+            }
+        })
+        .collect();
+    Ok(rows)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::fixtures::tiny_conv_network;
+
+    #[test]
+    fn footprint_of_the_fixture_under_a_mixed_plan() {
+        let net = tiny_conv_network(4); // c1: 3x3x1x2 + 2 = 20; fc: 8x3 + 3 = 27
+        let spec = PrecisionSpec::parse("plan:c1=fixed:l8r8,*=float:m7e6").unwrap();
+        let rows = zoo_size(&net, &spec).unwrap();
+        assert_eq!(rows.len(), 2);
+
+        assert_eq!(rows[0].layer, "c1");
+        assert_eq!(rows[0].params, 20);
+        assert_eq!(rows[0].f32_bytes, 80);
+        assert_eq!(rows[0].bits_per_value, 18); // l + r + 2
+        assert_eq!(rows[0].packed_bytes, 45); // ceil(20 * 18 / 8)
+
+        assert_eq!(rows[1].layer, "fc");
+        assert_eq!(rows[1].params, 27);
+        assert_eq!(rows[1].bits_per_value, 15); // 1 + ebits(7) + m(7)
+        assert_eq!(rows[1].packed_bytes, 51); // ceil(27 * 15 / 8)
+
+        // MAC counts line up with the network's own accounting, so the
+        // hw weighting in the CLI table matches plan_speedup's
+        let macs = net.quantized_layer_macs();
+        assert_eq!(rows[0].macs, macs[0].1);
+        assert_eq!(rows[1].macs, macs[1].1);
+        for r in &rows {
+            assert!(r.mac_speedup > 0.0);
+            assert!(r.packed_bytes < r.f32_bytes, "{}: narrow formats must compress", r.layer);
+        }
+
+        // validation is total, like every execution path
+        assert!(zoo_size(&net, &PrecisionSpec::parse("plan:typo=fixed:l8r8").unwrap()).is_err());
+    }
+
+    #[test]
+    fn baseline_format_packs_at_carrier_width() {
+        let net = tiny_conv_network(4);
+        let rows = zoo_size(&net, &PrecisionSpec::Uniform(Format::SINGLE)).unwrap();
+        for r in rows {
+            assert_eq!(r.bits_per_value, 32);
+            assert_eq!(r.packed_bytes, r.f32_bytes);
+        }
+    }
+}

@@ -1,0 +1,454 @@
+//! `precis::store` — the pre-quantized, bit-packed weight store.
+//!
+//! Weights are constant per `(network, layer, resolved format)`, yet
+//! the engine used to re-copy and re-quantize every layer's full weight
+//! tensor on **every** forward.  A [`WeightStore`] prepares that work
+//! once: each entry holds the layer's weights quantized to f32 for the
+//! kernel path *and* a bit-packed narrow-width [`PackedTensor`] whose
+//! decode is bit-exact to [`crate::numerics::quantize_slice`]
+//! (DESIGN.md §Storage).  After the first forward under a spec, the
+//! engine reads staged weights by reference — zero weight-quantization
+//! work per request, which the store's counters prove and
+//! `bench_harness::suite` quantifies (cached-vs-restaged forward).
+//!
+//! # Keying & sharing
+//!
+//! Entries are keyed by [`StoreKey`] — `(network, layer, resolved
+//! Format)`, *not* by precision spec: two gateway sessions serving
+//! `lenet5@float:m4e5` and `lenet5@plan:conv1=float:m4e5,...` share
+//! every layer whose resolved format matches.  One store is shared by
+//! all sessions a [`crate::serving::Gateway`] hosts over the same zoo.
+//!
+//! # Budget & eviction
+//!
+//! The store holds at most `budget` bytes (each entry priced as its
+//! quantized-f32 bytes plus its packed bytes); admission is checked
+//! *before* building an entry, and inserting past the budget evicts
+//! least-recently-used entries.  A `prepare` the budget cannot admit
+//! returns `None` and the engine falls back to its scratch staging
+//! buffer — eviction degrades to correct (bit-identical) re-staging,
+//! never to an error.  `Some(0)` is the "disabled" budget (the bench
+//! suite's re-staging baseline); `None` is unbounded.
+//!
+//! `Format::SINGLE` layers whose weights the identity quantizer leaves
+//! bit-identical never reach the store at all — the engine borrows the
+//! network's tensor directly (no copy, no store bytes; see
+//! `nn::QuantTable`).
+
+mod footprint;
+mod packed;
+
+pub use footprint::{zoo_size, FootprintRow};
+pub use packed::PackedTensor;
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex, PoisonError};
+
+use anyhow::{bail, Result};
+
+use crate::formats::Format;
+use crate::numerics::{quantize_slice, Quantizer};
+
+/// Default byte budget for stores nobody configured (e.g. a bare
+/// `NativeBackend::new`): generous for every zoo network while keeping
+/// a 240-format design-space sweep from pinning one staged copy per
+/// format it ever visited.
+pub const DEFAULT_WEIGHT_BUDGET: usize = 64 << 20;
+
+/// Identity of one staged weight tensor: the layer's weights under one
+/// **resolved** format.  Specs that resolve a layer to the same format
+/// share its entry (module docs).
+#[derive(Clone, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct StoreKey {
+    pub net: String,
+    pub layer: String,
+    pub fmt: Format,
+}
+
+impl StoreKey {
+    pub fn new(net: &str, layer: &str, fmt: Format) -> StoreKey {
+        StoreKey { net: net.to_string(), layer: layer.to_string(), fmt }
+    }
+}
+
+/// One staged weight tensor: the quantized f32 data the kernels read,
+/// plus the bit-packed narrow-width encoding.
+pub struct StoreEntry {
+    quantized: Vec<f32>,
+    packed: PackedTensor,
+}
+
+impl StoreEntry {
+    fn build(fmt: &Format, weights: &[f32]) -> StoreEntry {
+        // the SAME quantize_slice call the engine's scratch staging
+        // runs — bit-identity between store hits and misses is by
+        // construction, not by test alone
+        let mut quantized = weights.to_vec();
+        quantize_slice(&mut quantized, &Quantizer::new(fmt));
+        let packed = PackedTensor::pack_quantized(&quantized, fmt);
+        StoreEntry { quantized, packed }
+    }
+
+    /// The kernel-ready quantized weights (what `gemm_q` consumes).
+    pub fn quantized(&self) -> &[f32] {
+        &self.quantized
+    }
+
+    /// The narrow-width encoding (storage tier; decodes bit-exactly to
+    /// [`StoreEntry::quantized`]).
+    pub fn packed(&self) -> &PackedTensor {
+        &self.packed
+    }
+
+    /// Budget price of this entry.
+    pub fn bytes(&self) -> usize {
+        Self::bytes_for(self.quantized.len(), self.packed.fmt())
+    }
+
+    /// Budget price of a would-be entry — exact, without building it.
+    pub fn bytes_for(len: usize, fmt: &Format) -> usize {
+        len * 4 + PackedTensor::packed_bytes_for(len, fmt)
+    }
+}
+
+/// Counter snapshot of a [`WeightStore`] (all lifetime-total except the
+/// `entries`/`bytes` gauges).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct StoreStats {
+    /// prepares served from a resident entry
+    pub hits: u64,
+    /// prepares that had to build (and admit) an entry
+    pub misses: u64,
+    /// entries displaced by the LRU policy
+    pub evictions: u64,
+    /// prepares refused because the entry alone exceeds the budget
+    /// (the caller re-stages into scratch — correct, just uncached)
+    pub rejected: u64,
+    /// resident entries
+    pub entries: usize,
+    /// resident bytes (quantized f32 + packed, summed over entries)
+    pub bytes: usize,
+    /// resident packed bytes alone (the narrow storage tier)
+    pub packed_bytes: usize,
+    /// configured budget (`None` = unbounded)
+    pub budget: Option<usize>,
+}
+
+impl StoreStats {
+    /// One-line human rendering for CLI stats tables.
+    pub fn render(&self) -> String {
+        format!(
+            "{} hits, {} misses, {} evictions, {} rejected; {} entries, {} resident ({} packed), budget {}",
+            self.hits,
+            self.misses,
+            self.evictions,
+            self.rejected,
+            self.entries,
+            human_bytes(self.bytes),
+            human_bytes(self.packed_bytes),
+            match self.budget {
+                Some(b) => human_bytes(b),
+                None => "unbounded".to_string(),
+            },
+        )
+    }
+}
+
+struct Slot {
+    entry: Arc<StoreEntry>,
+    last_used: u64,
+}
+
+struct Inner {
+    budget: Option<usize>,
+    tick: u64,
+    entries: HashMap<StoreKey, Slot>,
+    bytes: usize,
+    packed_bytes: usize,
+    hits: u64,
+    misses: u64,
+    evictions: u64,
+    rejected: u64,
+}
+
+/// The shared weight store (module docs).  All methods take `&self`;
+/// clone the surrounding `Arc` to share it across sessions/threads.
+pub struct WeightStore {
+    inner: Mutex<Inner>,
+}
+
+impl Default for WeightStore {
+    fn default() -> Self {
+        WeightStore::with_budget(DEFAULT_WEIGHT_BUDGET)
+    }
+}
+
+impl WeightStore {
+    /// A store capped at `budget` bytes.  `0` disables caching entirely
+    /// (every `prepare` returns `None`; the re-staging baseline).
+    pub fn with_budget(budget: usize) -> WeightStore {
+        WeightStore {
+            inner: Mutex::new(Inner {
+                budget: Some(budget),
+                tick: 0,
+                entries: HashMap::new(),
+                bytes: 0,
+                packed_bytes: 0,
+                hits: 0,
+                misses: 0,
+                evictions: 0,
+                rejected: 0,
+            }),
+        }
+    }
+
+    /// A store with no byte budget.
+    pub fn unbounded() -> WeightStore {
+        let store = WeightStore::with_budget(0);
+        store.lock().budget = None;
+        store
+    }
+
+    /// The CLI `--weight-budget` shape: `Some(b)` →
+    /// [`WeightStore::with_budget`], `None` (flag absent) → the
+    /// [`DEFAULT_WEIGHT_BUDGET`] default.  Unbounded stores are only
+    /// ever explicit ([`WeightStore::unbounded`]).
+    pub fn from_budget(budget: Option<usize>) -> WeightStore {
+        match budget {
+            Some(b) => WeightStore::with_budget(b),
+            None => WeightStore::default(),
+        }
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, Inner> {
+        self.inner.lock().unwrap_or_else(PoisonError::into_inner)
+    }
+
+    /// The staged entry for `key`, building it from `weights` on a
+    /// miss.  `None` means the budget cannot admit the entry (priced
+    /// before building) — the caller must re-stage into scratch, which
+    /// is bit-identical by construction.
+    pub fn prepare(&self, key: &StoreKey, weights: &[f32]) -> Option<Arc<StoreEntry>> {
+        let tick = {
+            let mut g = self.lock();
+            g.tick += 1;
+            let tick = g.tick;
+            if let Some(slot) = g.entries.get_mut(key) {
+                slot.last_used = tick;
+                let entry = slot.entry.clone();
+                g.hits += 1;
+                return Some(entry);
+            }
+            let price = StoreEntry::bytes_for(weights.len(), &key.fmt);
+            if let Some(b) = g.budget {
+                if price > b {
+                    g.rejected += 1;
+                    return None;
+                }
+            }
+            g.misses += 1;
+            tick
+        };
+        // build OUTSIDE the lock: quantization + packing of a large
+        // tensor must not stall other sessions' hits
+        let entry = Arc::new(StoreEntry::build(&key.fmt, weights));
+        let mut g = self.lock();
+        if let Some(slot) = g.entries.get_mut(key) {
+            // lost a race with a concurrent builder — adopt the
+            // incumbent (identical bits by construction)
+            slot.last_used = slot.last_used.max(tick);
+            return Some(slot.entry.clone());
+        }
+        g.bytes += entry.bytes();
+        g.packed_bytes += entry.packed.packed_bytes();
+        g.entries
+            .insert(key.clone(), Slot { entry: entry.clone(), last_used: tick });
+        while g.budget.is_some_and(|b| g.bytes > b) && g.entries.len() > 1 {
+            let lru = g
+                .entries
+                .iter()
+                .min_by_key(|(_, s)| s.last_used)
+                .map(|(k, _)| k.clone())
+                .expect("non-empty map has an LRU entry");
+            let slot = g.entries.remove(&lru).expect("key came from the map");
+            g.bytes -= slot.entry.bytes();
+            g.packed_bytes -= slot.entry.packed.packed_bytes();
+            g.evictions += 1;
+        }
+        Some(entry)
+    }
+
+    /// Counter snapshot (cheap: copies a few words under the lock).
+    pub fn stats(&self) -> StoreStats {
+        let g = self.lock();
+        StoreStats {
+            hits: g.hits,
+            misses: g.misses,
+            evictions: g.evictions,
+            rejected: g.rejected,
+            entries: g.entries.len(),
+            bytes: g.bytes,
+            packed_bytes: g.packed_bytes,
+            budget: g.budget,
+        }
+    }
+
+    /// Drop every entry (counters keep their lifetime totals).
+    pub fn clear(&self) {
+        let mut g = self.lock();
+        g.entries.clear();
+        g.bytes = 0;
+        g.packed_bytes = 0;
+    }
+}
+
+/// `"8m"` / `"512k"` / `"1g"` / plain bytes → bytes (the
+/// `--weight-budget` flag grammar; case-insensitive suffix).
+pub fn parse_byte_size(s: &str) -> Result<usize> {
+    let t = s.trim();
+    if t.is_empty() {
+        bail!("empty byte size");
+    }
+    let (num, mult) = match t.chars().next_back().unwrap().to_ascii_lowercase() {
+        'k' => (&t[..t.len() - 1], 1usize << 10),
+        'm' => (&t[..t.len() - 1], 1usize << 20),
+        'g' => (&t[..t.len() - 1], 1usize << 30),
+        _ => (t, 1usize),
+    };
+    let n: usize = num
+        .trim()
+        .parse()
+        .map_err(|_| anyhow::anyhow!("bad byte size {s:?} (want e.g. 65536, 512k, 8m, 1g)"))?;
+    n.checked_mul(mult)
+        .ok_or_else(|| anyhow::anyhow!("byte size {s:?} overflows"))
+}
+
+/// Compact byte rendering for stats tables.
+pub fn human_bytes(b: usize) -> String {
+    if b >= 1 << 30 {
+        format!("{:.2}GiB", b as f64 / (1u64 << 30) as f64)
+    } else if b >= 1 << 20 {
+        format!("{:.2}MiB", b as f64 / (1 << 20) as f64)
+    } else if b >= 1 << 10 {
+        format!("{:.1}KiB", b as f64 / (1 << 10) as f64)
+    } else {
+        format!("{b}B")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn key(layer: &str, fmt: Format) -> StoreKey {
+        StoreKey::new("unit-net", layer, fmt)
+    }
+
+    #[test]
+    fn hit_miss_and_bit_identity_to_quantize_slice() {
+        let store = WeightStore::unbounded();
+        let fmt = Format::fixed(4, 4);
+        let w: Vec<f32> = (0..64).map(|i| (i as f32 * 0.37).sin() * 7.0).collect();
+        let k = key("c1", fmt);
+
+        let a = store.prepare(&k, &w).expect("unbounded store admits");
+        let s = store.stats();
+        assert_eq!((s.hits, s.misses, s.entries), (0, 1, 1));
+        assert_eq!(s.bytes, StoreEntry::bytes_for(w.len(), &fmt));
+        assert_eq!(s.budget, None);
+
+        let mut want = w.clone();
+        quantize_slice(&mut want, &Quantizer::new(&fmt));
+        assert_eq!(a.quantized(), want.as_slice());
+        // the packed tier decodes to the same bits
+        assert_eq!(a.packed().unpack(), want);
+
+        let b = store.prepare(&k, &w).expect("hit");
+        assert!(Arc::ptr_eq(&a, &b), "a hit returns the SAME staged entry");
+        let s = store.stats();
+        assert_eq!((s.hits, s.misses, s.entries), (1, 1, 1));
+
+        // a different resolved format is a different entry
+        store.prepare(&key("c1", Format::float(7, 6)), &w).unwrap();
+        assert_eq!(store.stats().entries, 2);
+    }
+
+    #[test]
+    fn lru_eviction_under_a_tight_budget() {
+        let fmt = Format::fixed(8, 8);
+        let w: Vec<f32> = (0..32).map(|i| i as f32 * 0.25).collect();
+        let one = StoreEntry::bytes_for(w.len(), &fmt);
+        // room for two entries, not three
+        let store = WeightStore::with_budget(2 * one);
+
+        store.prepare(&key("a", fmt), &w).unwrap();
+        store.prepare(&key("b", fmt), &w).unwrap();
+        assert_eq!(store.stats().entries, 2);
+        // touch `a` so `b` is the LRU victim
+        store.prepare(&key("a", fmt), &w).unwrap();
+        store.prepare(&key("c", fmt), &w).unwrap();
+
+        let s = store.stats();
+        assert_eq!(s.entries, 2);
+        assert_eq!(s.evictions, 1);
+        assert!(s.bytes <= 2 * one);
+        // `b` was evicted: preparing it again is a miss that evicts the
+        // new LRU (`a`); `a` and `c` patterns confirm recency ordering
+        store.prepare(&key("b", fmt), &w).unwrap();
+        let s = store.stats();
+        assert_eq!(s.evictions, 2);
+        assert_eq!(s.misses, 4, "a, b, c, then b again");
+        assert_eq!(s.hits, 1, "only the explicit re-touch of `a` hit");
+    }
+
+    #[test]
+    fn oversized_entries_are_rejected_not_inserted() {
+        let fmt = Format::float(7, 6);
+        let w = vec![1.0f32; 128];
+        let store = WeightStore::with_budget(StoreEntry::bytes_for(w.len(), &fmt) - 1);
+        assert!(store.prepare(&key("big", fmt), &w).is_none());
+        let s = store.stats();
+        assert_eq!((s.rejected, s.misses, s.entries, s.bytes), (1, 0, 0, 0));
+
+        // budget 0 = disabled: everything is rejected
+        let disabled = WeightStore::with_budget(0);
+        assert!(disabled.prepare(&key("any", fmt), &w).is_none());
+        assert_eq!(disabled.stats().rejected, 1);
+    }
+
+    #[test]
+    fn clear_drops_entries_but_keeps_counters() {
+        let store = WeightStore::unbounded();
+        let fmt = Format::fixed(2, 2);
+        store.prepare(&key("a", fmt), &[1.0, 2.0]).unwrap();
+        store.prepare(&key("a", fmt), &[1.0, 2.0]).unwrap();
+        store.clear();
+        let s = store.stats();
+        assert_eq!((s.entries, s.bytes, s.packed_bytes), (0, 0, 0));
+        assert_eq!((s.hits, s.misses), (1, 1));
+        // re-preparing after clear rebuilds
+        store.prepare(&key("a", fmt), &[1.0, 2.0]).unwrap();
+        assert_eq!(store.stats().misses, 2);
+    }
+
+    #[test]
+    fn parse_byte_size_grammar() {
+        assert_eq!(parse_byte_size("65536").unwrap(), 65536);
+        assert_eq!(parse_byte_size("512k").unwrap(), 512 << 10);
+        assert_eq!(parse_byte_size("8m").unwrap(), 8 << 20);
+        assert_eq!(parse_byte_size("2G").unwrap(), 2 << 30);
+        assert_eq!(parse_byte_size(" 16 m ").unwrap(), 16 << 20);
+        assert_eq!(parse_byte_size("0").unwrap(), 0);
+        for bad in ["", "m", "12q", "-4", "1.5m", "99999999999999999999"] {
+            assert!(parse_byte_size(bad).is_err(), "accepted {bad:?}");
+        }
+    }
+
+    #[test]
+    fn human_bytes_rendering() {
+        assert_eq!(human_bytes(64), "64B");
+        assert_eq!(human_bytes(2048), "2.0KiB");
+        assert_eq!(human_bytes(3 << 20), "3.00MiB");
+        assert_eq!(human_bytes(5 << 30), "5.00GiB");
+    }
+}

@@ -1,0 +1,479 @@
+//! `PackedTensor` — the bit-packed narrow-width weight encoding.
+//!
+//! The paper's efficiency argument is about *storage*, not only MAC
+//! cost: a custom-width value occupies `total_bits()` bits, so moving
+//! weights at the format's own width cuts memory traffic
+//! proportionally (PAPER.md §4).  This module makes that claim concrete
+//! in software: a [`PackedTensor`] holds one quantized tensor as a
+//! contiguous bitstream of fixed-width codes whose decode is **bit-exact
+//! to [`quantize_slice`]** — pinned against the normative `qformat.py`
+//! by replaying the 470 golden vectors through the codec
+//! (`rust/tests/golden_quant.rs`) and property-tested across the whole
+//! design surface.
+//!
+//! # Code layouts (DESIGN.md §Storage)
+//!
+//! Every value becomes one unsigned `width`-bit code; the three layouts
+//! are selected per [`Format`]:
+//!
+//! * **Float `F(m, e)`** — `width = 1 + ebits + m`, fields (MSB→LSB)
+//!   `sign | exponent-code | mantissa`.  The exponent code enumerates
+//!   the format's *f32-reachable* exponents `E ∈ [emin, emax]`
+//!   (carrier-clamped, so `e = 8` spans only `[-126, 127]`):
+//!   code `0` is zero, code `E - emin + 1` a normal value, and the top
+//!   code `SAT = span + 1` the saturation value `max_value()` — needed
+//!   because the carrier-clamped `max` of an `e = 8` format is
+//!   `f32::MAX`, whose 23-bit mantissa does not fit in `m` bits.
+//!   `ebits` is the bit-length of `SAT`, so `width ≤ 32` always
+//!   (`float:m23e8` packs at exactly the carrier's 32 bits).
+//! * **Fixed `X(l, r)`, `l + r + 2 < 32`** — `width = l + r + 2`
+//!   two's-complement codes of the scaled integer `k = y · 2^r`
+//!   (`|k| ≤ 2^(l+r)`: the `+2` covers the sign and the carry the
+//!   f32 carrier's 24-bit mantissa can round `2^(l+r) - 1` up to).
+//!   The unused most-negative code `-2^(width-1)` is the `-0.0`
+//!   sentinel — quantization preserves the sign of zero
+//!   (`q(-0.25) = -0.0` under `X(l, 1)`), and two's complement has no
+//!   negative zero of its own.
+//! * **Raw carrier** — formats at least as wide as the carrier
+//!   (`l + r + 2 ≥ 32`) store the f32 bits verbatim at `width = 32`:
+//!   packing *wider* than the carrier would expand the tensor, and the
+//!   carrier already is the exact storage of the quantized value.
+//!
+//! # Bitstream
+//!
+//! Code `i` occupies bits `[i·width, (i+1)·width)` of a little-endian
+//! bitstream over `u64` words: bit `b` lives in `words[b / 64]` at bit
+//! position `b % 64`, and codes are written LSB-first (a code may
+//! straddle two words).  The layout is pinned by
+//! `packed_layout_is_stable` below.
+//!
+//! Packing is defined over **finite** inputs (network weights; the
+//! quantizers map every finite input to a finite grid point).  NaN is
+//! not representable in any code space and is rejected by a
+//! `debug_assert` in [`PackedTensor::pack`].
+
+use crate::formats::Format;
+use crate::numerics::{quantize_slice, Quantizer};
+
+/// One quantized tensor, stored as fixed-width codes in a contiguous
+/// `u64` bitstream (see the module docs for the code layouts).
+#[derive(Clone, Debug, PartialEq)]
+pub struct PackedTensor {
+    fmt: Format,
+    len: usize,
+    width: u32,
+    words: Vec<u64>,
+}
+
+/// The per-format code layout, resolved once per pack/unpack.
+enum Codec {
+    /// sign | exponent-code | m-bit mantissa (see module docs)
+    Float { emin: i32, sat: u32, ebits: u32, m: u32, max_bits: u32 },
+    /// two's-complement `y · 2^r` with a `-0.0` sentinel
+    Fixed { width: u32, scale: f64, inv_scale: f64 },
+    /// the f32 carrier bits verbatim (width 32)
+    Raw,
+}
+
+impl Codec {
+    fn of(fmt: &Format) -> Codec {
+        match *fmt {
+            Format::Float { mantissa, exponent } => {
+                let bias = fmt.bias();
+                let emin = (-bias).max(-126);
+                let emax = ((1i32 << exponent) - 1 - bias).min(127);
+                let sat = (emax - emin + 2) as u32; // span + 1
+                let ebits = 32 - sat.leading_zeros();
+                Codec::Float {
+                    emin,
+                    sat,
+                    ebits,
+                    m: mantissa,
+                    max_bits: (fmt.max_value() as f32).to_bits(),
+                }
+            }
+            Format::Fixed { int_bits, frac_bits } => {
+                let width = 2 + int_bits + frac_bits;
+                if width >= 32 {
+                    Codec::Raw
+                } else {
+                    let scale = 2.0f64.powi(frac_bits as i32);
+                    Codec::Fixed { width, scale, inv_scale: 1.0 / scale }
+                }
+            }
+        }
+    }
+
+    fn width(&self) -> u32 {
+        match *self {
+            Codec::Float { ebits, m, .. } => 1 + ebits + m,
+            Codec::Fixed { width, .. } => width,
+            Codec::Raw => 32,
+        }
+    }
+
+    /// Encode one value that is already on the format's grid (an output
+    /// of the format's quantizer).
+    fn encode(&self, y: f32) -> u64 {
+        match *self {
+            Codec::Float { emin, sat, ebits, m, max_bits } => {
+                let bits = y.to_bits();
+                let sign = (bits >> 31) as u64;
+                let mag = bits & 0x7FFF_FFFF;
+                let (ecode, mant) = if mag == 0 {
+                    (0u64, 0u64)
+                } else if mag == max_bits {
+                    // the saturation value — under an e=8 carrier clamp
+                    // its mantissa is wider than m bits, so it gets the
+                    // dedicated top code
+                    (sat as u64, 0u64)
+                } else {
+                    let e = (mag >> 23) as i32 - 127;
+                    // emax = emin + span - 1 = emin + sat - 2
+                    debug_assert!(
+                        e >= emin && e <= emin + sat as i32 - 2,
+                        "exponent {e} outside the format range"
+                    );
+                    let mant23 = (mag & 0x7F_FFFF) as u64;
+                    debug_assert_eq!(
+                        mant23 & ((1u64 << (23 - m)) - 1),
+                        0,
+                        "mantissa carries sub-grid bits"
+                    );
+                    ((e - emin + 1) as u64, mant23 >> (23 - m))
+                };
+                (sign << (ebits + m)) | (ecode << m) | mant
+            }
+            Codec::Fixed { width, scale, .. } => {
+                if y == 0.0 {
+                    return if y.is_sign_negative() { 1u64 << (width - 1) } else { 0 };
+                }
+                // y = k·2^-r exactly, so this recovers the integer k
+                // exactly in f64 (no rounding for width < 32)
+                let k = (y as f64 * scale).round() as i64;
+                debug_assert!(k.unsigned_abs() <= 1u64 << (width - 2), "code {k} out of range");
+                (k as u64) & ((1u64 << width) - 1)
+            }
+            Codec::Raw => y.to_bits() as u64,
+        }
+    }
+
+    fn decode(&self, code: u64) -> f32 {
+        match *self {
+            Codec::Float { emin, sat, ebits, m, max_bits } => {
+                let sign = ((code >> (ebits + m)) & 1) as u32;
+                let ecode = ((code >> m) & ((1u64 << ebits) - 1)) as u32;
+                let mant = (code & ((1u64 << m) - 1)) as u32;
+                let mag = if ecode == 0 {
+                    0
+                } else if ecode == sat {
+                    max_bits
+                } else {
+                    let e = emin + ecode as i32 - 1;
+                    (((e + 127) as u32) << 23) | (mant << (23 - m))
+                };
+                f32::from_bits((sign << 31) | mag)
+            }
+            Codec::Fixed { width, inv_scale, .. } => {
+                let sign_bit = 1u64 << (width - 1);
+                if code == sign_bit {
+                    return -0.0;
+                }
+                let k = if code & sign_bit != 0 {
+                    (code | !((1u64 << width) - 1)) as i64 // sign-extend
+                } else {
+                    code as i64
+                };
+                (k as f64 * inv_scale) as f32
+            }
+            Codec::Raw => f32::from_bits(code as u32),
+        }
+    }
+}
+
+impl PackedTensor {
+    /// Storage bits per value under `fmt` (the module-docs layout).
+    pub fn bits_per_value(fmt: &Format) -> u32 {
+        Codec::of(fmt).width()
+    }
+
+    /// Exact packed size of a `len`-value tensor under `fmt`, in bytes
+    /// (`⌈len · width / 8⌉`) — computable without packing, which is how
+    /// the store's admission check prices an entry before building it.
+    pub fn packed_bytes_for(len: usize, fmt: &Format) -> usize {
+        (len * Self::bits_per_value(fmt) as usize).div_ceil(8)
+    }
+
+    /// Quantize `data` under `fmt` and pack the result — one
+    /// [`quantize_slice`] (the identical op the engine's staging path
+    /// runs) followed by the encode pass.
+    pub fn pack(data: &[f32], fmt: &Format) -> PackedTensor {
+        let mut q = data.to_vec();
+        quantize_slice(&mut q, &Quantizer::new(fmt));
+        Self::pack_quantized(&q, fmt)
+    }
+
+    /// Pack values that are **already** on `fmt`'s grid (outputs of the
+    /// format's quantizer — [`PackedTensor::pack`] quantizes for you).
+    pub fn pack_quantized(values: &[f32], fmt: &Format) -> PackedTensor {
+        let codec = Codec::of(fmt);
+        let width = codec.width();
+        let mut words = vec![0u64; (values.len() * width as usize).div_ceil(64)];
+        for (i, &v) in values.iter().enumerate() {
+            debug_assert!(!v.is_nan(), "NaN is not packable (module docs)");
+            let code = codec.encode(v);
+            let bit = i * width as usize;
+            let (w, off) = (bit / 64, (bit % 64) as u32);
+            words[w] |= code << off;
+            if off + width > 64 {
+                words[w + 1] |= code >> (64 - off);
+            }
+        }
+        PackedTensor { fmt: *fmt, len: values.len(), width, words }
+    }
+
+    /// Decode into `out` (cleared first).  Bit-exact to running
+    /// [`quantize_slice`] over the tensor [`PackedTensor::pack`] was
+    /// given.
+    pub fn unpack_into(&self, out: &mut Vec<f32>) {
+        let codec = Codec::of(&self.fmt);
+        let width = self.width;
+        let mask = if width == 64 { u64::MAX } else { (1u64 << width) - 1 };
+        out.clear();
+        out.reserve(self.len);
+        for i in 0..self.len {
+            let bit = i * width as usize;
+            let (w, off) = (bit / 64, (bit % 64) as u32);
+            let mut code = self.words[w] >> off;
+            if off + width > 64 {
+                code |= self.words[w + 1] << (64 - off);
+            }
+            out.push(codec.decode(code & mask));
+        }
+    }
+
+    /// Decode into a fresh vector (see [`PackedTensor::unpack_into`]).
+    pub fn unpack(&self) -> Vec<f32> {
+        let mut out = Vec::new();
+        self.unpack_into(&mut out);
+        out
+    }
+
+    pub fn fmt(&self) -> &Format {
+        &self.fmt
+    }
+
+    /// Number of encoded values.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Bits per code in this tensor's layout.
+    pub fn width(&self) -> u32 {
+        self.width
+    }
+
+    /// Packed storage footprint in bytes (`⌈len · width / 8⌉`).
+    pub fn packed_bytes(&self) -> usize {
+        (self.len * self.width as usize).div_ceil(8)
+    }
+
+    /// The f32-carrier footprint the packing is measured against.
+    pub fn f32_bytes(&self) -> usize {
+        self.len * 4
+    }
+
+    /// The raw bitstream words (layout in the module docs).
+    pub fn words(&self) -> &[u64] {
+        &self.words
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::prop::{arb_format, run_prop, Gen};
+
+    fn roundtrip_matches_quantize(data: &[f32], fmt: &Format) {
+        let mut want = data.to_vec();
+        quantize_slice(&mut want, &Quantizer::new(fmt));
+        let packed = PackedTensor::pack(data, fmt);
+        assert_eq!(packed.len(), data.len());
+        let got = packed.unpack();
+        for i in 0..want.len() {
+            assert_eq!(
+                got[i].to_bits(),
+                want[i].to_bits(),
+                "{} elem {i}: decode {} vs quantize {}",
+                fmt.id(),
+                got[i],
+                want[i]
+            );
+        }
+    }
+
+    /// The width table of the golden-vector formats — pins the layout
+    /// rules (float `1 + ebits + m`, fixed `l + r + 2`, raw ≥ 32).
+    #[test]
+    fn bits_per_value_layout_table() {
+        for (fmt, width) in [
+            ("fixed:l0r2", 4),
+            ("fixed:l1r3", 6),
+            ("fixed:l4r4", 10),
+            ("fixed:l8r8", 18),
+            ("fixed:l12r2", 16),
+            ("fixed:l2r12", 16),
+            ("float:m0e5", 7),
+            ("float:m1e2", 5),
+            ("float:m2e8", 11),
+            ("float:m4e4", 10),
+            ("float:m7e6", 15),
+            ("float:m10e3", 15),
+            ("float:m23e8", 32),
+            // formats as wide as the carrier fall back to raw f32 codes
+            ("fixed:l16r16", 32),
+            ("fixed:l64r64", 32),
+        ] {
+            let f = Format::parse(fmt).unwrap();
+            assert_eq!(PackedTensor::bits_per_value(&f), width, "{fmt}");
+        }
+    }
+
+    /// The documented bitstream layout, pinned word-for-word: three
+    /// `fixed:l1r3` codes (width 6) at their LSB-first positions.
+    #[test]
+    fn packed_layout_is_stable() {
+        let fmt = Format::fixed(1, 3);
+        // q is exact on these grid points: codes 4, -4 (two's compl.
+        // 0b111100 = 60), 8
+        let p = PackedTensor::pack(&[0.5, -0.5, 1.0], &fmt);
+        assert_eq!(p.width(), 6);
+        assert_eq!(p.packed_bytes(), 3); // ceil(18 / 8)
+        assert_eq!(p.words(), &[4 | (60 << 6) | (8 << 12)]);
+        assert_eq!(p.unpack(), vec![0.5, -0.5, 1.0]);
+    }
+
+    /// Codes straddling u64 word boundaries decode intact.
+    #[test]
+    fn codes_straddle_word_boundaries() {
+        // width 18: value 3 occupies bits 54..72 — across words 0 and 1
+        let fmt = Format::fixed(8, 8);
+        let vals: Vec<f32> = (0..11).map(|i| i as f32 * 1.5 - 8.0).collect();
+        let p = PackedTensor::pack(&vals, &fmt);
+        assert_eq!(p.width(), 18);
+        assert_eq!(p.words().len(), 4); // ceil(198 / 64)
+        roundtrip_matches_quantize(&vals, &fmt);
+    }
+
+    /// Negative zero survives both code spaces: the fixed sentinel and
+    /// the float sign bit.
+    #[test]
+    fn negative_zero_roundtrips() {
+        for fmt in [Format::fixed(4, 4), Format::float(7, 6), Format::SINGLE] {
+            let p = PackedTensor::pack(&[-0.0, 0.0, -0.25e-30], &fmt);
+            let got = p.unpack();
+            assert_eq!(got[0].to_bits(), (-0.0f32).to_bits(), "{fmt}");
+            assert_eq!(got[1].to_bits(), 0.0f32.to_bits(), "{fmt}");
+        }
+        // a negative value that quantizes to zero keeps its sign under
+        // the float path (sign * 0.0) — the sentinel case in fixed form
+        let q = Quantizer::new(&Format::fixed(4, 1));
+        assert_eq!(q.q(-0.25).to_bits(), (-0.0f32).to_bits());
+        roundtrip_matches_quantize(&[-0.25], &Format::fixed(4, 1));
+    }
+
+    /// Saturation values (incl. the carrier-clamped `e = 8` max whose
+    /// mantissa is wider than `m`) take the dedicated SAT code.
+    #[test]
+    fn saturation_and_flush_roundtrip() {
+        for fmt in [
+            Format::float(4, 4),
+            Format::float(2, 8), // carrier-clamped: max = f32::MAX
+            Format::float(23, 8),
+            Format::fixed(4, 4),
+            Format::fixed(8, 8),
+        ] {
+            let vals = [
+                1.0e38,
+                -1.0e38,
+                f32::INFINITY,
+                f32::NEG_INFINITY,
+                1.0e-40, // carrier subnormal: flushes (floats) / rounds (fixeds)
+                fmt.max_value() as f32,
+                -(fmt.max_value() as f32),
+                fmt.min_normal() as f32,
+            ];
+            roundtrip_matches_quantize(&vals, &fmt);
+        }
+    }
+
+    #[test]
+    fn empty_and_single_value_tensors() {
+        let fmt = Format::float(7, 6);
+        let p = PackedTensor::pack(&[], &fmt);
+        assert!(p.is_empty());
+        assert_eq!(p.packed_bytes(), 0);
+        assert_eq!(p.unpack(), Vec::<f32>::new());
+        roundtrip_matches_quantize(&[3.14159], &fmt);
+    }
+
+    /// An arbitrary format across the *whole* constructor range — the
+    /// shared `arb_format` plus wide fixeds, so the raw-carrier
+    /// fallback (`l + r + 2 ≥ 32`) is always exercised too.
+    fn arb_format_wide(g: &mut Gen) -> Format {
+        if g.usize_in(0, 3) == 0 {
+            Format::fixed(g.usize_in(0, 64) as u32, g.usize_in(0, 64) as u32)
+        } else {
+            arb_format(g)
+        }
+    }
+
+    /// The tentpole property (ISSUE 5): pack → unpack is bit-identical
+    /// to `quantize_slice` across random shapes and formats, including
+    /// `QIdentity`/`Format::SINGLE` (always drawn by `arb_format`) and
+    /// the raw-carrier fixed fallback.
+    #[test]
+    fn prop_pack_unpack_bitexact_vs_quantize_slice() {
+        run_prop("pack_unpack_vs_quantize_slice", 200, |g| {
+            let fmt = arb_format_wide(g);
+            let n = g.usize_in(0, 96);
+            let vals: Vec<f32> = (0..n)
+                .map(|_| {
+                    let mag = g.f32_in(0.0, 1.0) * 2.0f32.powi(g.int_in(-40, 38) as i32);
+                    if g.bool() {
+                        -mag
+                    } else {
+                        mag
+                    }
+                })
+                .collect();
+            roundtrip_matches_quantize(&vals, &fmt);
+        });
+    }
+
+    /// Packing already-quantized data is idempotent with packing raw
+    /// data (quantizers are idempotent), and `packed_bytes_for` prices
+    /// exactly what `pack` builds.
+    #[test]
+    fn prop_pack_quantized_and_size_estimate_agree() {
+        run_prop("pack_quantized_agrees", 120, |g| {
+            let fmt = arb_format_wide(g);
+            let q = Quantizer::new(&fmt);
+            let vals: Vec<f32> = (0..g.usize_in(1, 48)).map(|_| g.f32_normal() * 8.0).collect();
+            let mut quantized = vals.clone();
+            quantize_slice(&mut quantized, &q);
+            let a = PackedTensor::pack(&vals, &fmt);
+            let b = PackedTensor::pack_quantized(&quantized, &fmt);
+            assert_eq!(a, b, "{}", fmt.id());
+            assert_eq!(a.packed_bytes(), PackedTensor::packed_bytes_for(vals.len(), &fmt));
+            // every decoded value is a fixed point of the quantizer
+            for v in a.unpack() {
+                assert_eq!(q.q(v).to_bits(), v.to_bits(), "{} value {v}", fmt.id());
+            }
+        });
+    }
+}

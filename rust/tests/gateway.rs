@@ -46,6 +46,7 @@ fn gateway_serves_two_sessions_bit_identical_to_eval() {
     let gateway = Gateway::new(z, BackendKind::Native).with_options(SessionOptions {
         batch: 8,
         max_wait: Duration::from_millis(3),
+        ..SessionOptions::default()
     });
     let k1 = gateway.open_spec("lenet5@float:m7e6").unwrap();
     let k2 = gateway.open_spec("alexnet-mini@fixed:l8r8").unwrap();
@@ -136,6 +137,7 @@ fn gateway_hot_add_remove_under_traffic() {
     let gateway = Gateway::new(z, BackendKind::Native).with_options(SessionOptions {
         batch: 4,
         max_wait: Duration::from_millis(2),
+        ..SessionOptions::default()
     });
     let k1 = gateway.open("lenet5", Format::float(10, 6)).unwrap();
     let net = gateway.session(&k1).unwrap().network().clone();

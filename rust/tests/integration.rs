@@ -285,7 +285,11 @@ fn serving_session_native_end_to_end() {
         "lenet5",
         fmt,
         BackendKind::Native,
-        SessionOptions { batch: 8, max_wait: Duration::from_millis(5) },
+        SessionOptions {
+            batch: 8,
+            max_wait: Duration::from_millis(5),
+            ..SessionOptions::default()
+        },
     )
     .unwrap();
 
@@ -319,7 +323,11 @@ fn session_rejects_malformed_input() {
         "lenet5",
         Format::SINGLE,
         BackendKind::Native,
-        SessionOptions { batch: 4, max_wait: Duration::from_millis(1) },
+        SessionOptions {
+            batch: 4,
+            max_wait: Duration::from_millis(1),
+            ..SessionOptions::default()
+        },
     )
     .unwrap();
     assert!(session.infer(vec![0.0; 3]).is_err());
