@@ -24,9 +24,16 @@ benchmark names cannot be meaningfully compared and exit 2.
 Exit codes: 0 ok / warnings only, 1 regressions (without --warn-only),
 2 structural error.
 
+A LOW overlap (names mostly differing, but not disjoint) is still a
+comparison — but one where most of the suite escaped the regression
+check.  `--min-overlap` (a fraction of the smaller report's names,
+default 0.5) prints a prominent warning when the shared slice is that
+thin, so a wholesale section rename cannot silently pass as "compared
+fine" (`test_bench_compare.py` pins all of these behaviours).
+
 Usage:
   bench_compare.py BASELINE.json CURRENT.json [--threshold 0.25]
-                   [--warn-only] [--min-seconds 1e-6]
+                   [--warn-only] [--min-seconds 1e-6] [--min-overlap 0.5]
 """
 
 import argparse
@@ -129,6 +136,16 @@ def main():
         help="ignore benchmarks whose baseline median is below this "
         "(sub-microsecond timings are all noise on shared runners)",
     )
+    ap.add_argument(
+        "--min-overlap",
+        type=float,
+        default=0.5,
+        help="warn when the fraction of benchmark names shared by the two "
+        "reports (relative to the smaller one) falls below this — low "
+        "overlap usually means a wholesale section rename left only a "
+        "sliver being compared, which would mask regressions as 'drift' "
+        "(default 0.5)",
+    )
     args = ap.parse_args()
 
     try:
@@ -160,6 +177,16 @@ def main():
             file=sys.stderr,
         )
         return 2
+    smaller = min(len(base_by_name), len(cur_by_name))
+    overlap = len(common) / smaller
+    if overlap < args.min_overlap:
+        print(
+            f"warning: only {overlap:.0%} of benchmark names overlap "
+            f"({len(common)}/{smaller} of the smaller report, "
+            f"--min-overlap {args.min_overlap:.0%}) — name-level drift this "
+            f"wide usually means a section rename, and every renamed "
+            f"benchmark silently escapes regression checking"
+        )
     print(f"\n{'benchmark':<46} {'baseline':>10} {'current':>10} {'delta':>8}")
     for name in common:
         b, c = float(base_by_name[name]["median_s"]), float(cur_by_name[name]["median_s"])

@@ -1,0 +1,163 @@
+#!/usr/bin/env python3
+"""Unit tests for bench_compare.py over synthetic report pairs.
+
+Runs the comparator as a subprocess (the same way CI does) against
+generated BENCH_*.json files and asserts on exit codes and the
+load-bearing output lines: strict structure validation (exit 2),
+noise-tolerant regression detection (exit 1 / 0 with --warn-only),
+name-level section drift as notes, zero-overlap as a structural error,
+and the low-overlap warning that keeps a wholesale section rename from
+passing silently.
+
+Usage: python3 .github/scripts/test_bench_compare.py
+"""
+
+import json
+import os
+import subprocess
+import sys
+import tempfile
+import unittest
+
+SCRIPT = os.path.join(os.path.dirname(os.path.abspath(__file__)), "bench_compare.py")
+
+
+def result(name, median):
+    return {
+        "name": name,
+        "median_s": median,
+        "p10_s": median * 0.9,
+        "p90_s": median * 1.1,
+        "iters_per_batch": 100,
+        "batches": 10,
+    }
+
+
+def report(names, median=1e-3, ratios=None, tag="t", preset="quick", schema="precis-bench/1"):
+    return {
+        "schema": schema,
+        "tag": tag,
+        "preset": preset,
+        "results": [result(n, median) for n in names],
+        "ratios": ratios if ratios is not None else {},
+    }
+
+
+class BenchCompareTest(unittest.TestCase):
+    def setUp(self):
+        self.dir = tempfile.TemporaryDirectory()
+
+    def tearDown(self):
+        self.dir.cleanup()
+
+    def write(self, name, doc):
+        path = os.path.join(self.dir.name, name)
+        with open(path, "w", encoding="utf-8") as fh:
+            if isinstance(doc, str):
+                fh.write(doc)
+            else:
+                json.dump(doc, fh)
+        return path
+
+    def run_compare(self, base, cur, *flags):
+        return subprocess.run(
+            [sys.executable, SCRIPT, base, cur, *flags],
+            capture_output=True,
+            text=True,
+            check=False,
+        )
+
+    def test_identical_reports_pass(self):
+        doc = report(["a/1", "b/2"], ratios={"gemm_blocked_over_naive/x": 2.0})
+        p = self.run_compare(self.write("b.json", doc), self.write("c.json", doc))
+        self.assertEqual(p.returncode, 0, p.stderr)
+        self.assertIn("0 regressed", p.stdout)
+
+    def test_regression_beyond_threshold_fails(self):
+        base = self.write("b.json", report(["a/1"], median=1e-3))
+        cur = self.write("c.json", report(["a/1"], median=2e-3))
+        p = self.run_compare(base, cur, "--threshold", "0.5")
+        self.assertEqual(p.returncode, 1, p.stdout)
+        self.assertIn("REGRESSION: a/1", p.stderr)
+
+    def test_warn_only_downgrades_regressions(self):
+        base = self.write("b.json", report(["a/1"], median=1e-3))
+        cur = self.write("c.json", report(["a/1"], median=2e-3))
+        p = self.run_compare(base, cur, "--threshold", "0.5", "--warn-only")
+        self.assertEqual(p.returncode, 0, p.stdout)
+        self.assertIn("REGRESSION: a/1", p.stderr)
+
+    def test_slowdown_within_threshold_passes(self):
+        base = self.write("b.json", report(["a/1"], median=1e-3))
+        cur = self.write("c.json", report(["a/1"], median=1.2e-3))
+        p = self.run_compare(base, cur, "--threshold", "0.5")
+        self.assertEqual(p.returncode, 0, p.stdout)
+
+    def test_sub_min_seconds_noise_is_skipped(self):
+        # a 10x "regression" in the nanoseconds is noise, not a failure
+        base = self.write("b.json", report(["a/1"], median=1e-8))
+        cur = self.write("c.json", report(["a/1"], median=1e-7))
+        p = self.run_compare(base, cur, "--threshold", "0.1")
+        self.assertEqual(p.returncode, 0, p.stdout)
+        self.assertIn("skipped as noise", p.stdout)
+
+    def test_malformed_structure_exits_2_even_warn_only(self):
+        good = report(["a/1"])
+        for doc in [
+            "not json at all{",
+            report(["a/1"], schema="other/9"),
+            {**report(["a/1"]), "results": []},
+            {**report(["a/1", "a/1"])},  # duplicate names
+            {**good, "ratios": {"r": float("nan")}},
+            {**good, "results": [dict(result("a/1", 1e-3), median_s="fast")]},
+        ]:
+            base = self.write("b.json", good)
+            cur = self.write("c.json", doc)
+            p = self.run_compare(base, cur, "--warn-only")
+            self.assertEqual(p.returncode, 2, f"{doc!r}: {p.stdout}")
+            self.assertIn("STRUCTURE ERROR", p.stderr)
+
+    def test_zero_overlap_is_a_structural_error(self):
+        base = self.write("b.json", report(["a/1", "a/2"]))
+        cur = self.write("c.json", report(["z/1", "z/2"]))
+        p = self.run_compare(base, cur, "--warn-only")
+        self.assertEqual(p.returncode, 2, p.stdout)
+        self.assertIn("share no benchmark names", p.stderr)
+
+    def test_section_drift_is_notes_not_failure(self):
+        # the PR-6 case: new packed-exec sections absent from an older
+        # baseline must be notes, and retired names warnings — exit 0
+        base = self.write("b.json", report(["a/1", "old/1"]))
+        cur = self.write("c.json", report(["a/1", "forward_packed/tiny"]))
+        p = self.run_compare(base, cur)
+        self.assertEqual(p.returncode, 0, p.stdout)
+        self.assertIn("note: new benchmark 'forward_packed/tiny'", p.stdout)
+        self.assertIn("warning: baseline benchmark 'old/1' missing", p.stdout)
+
+    def test_low_overlap_warns_by_fraction(self):
+        # 1 shared name out of 4: a wholesale rename masked as drift —
+        # the comparison still runs, but the warning must be loud
+        base = self.write("b.json", report(["a/1", "b/1", "b/2", "b/3"]))
+        cur = self.write("c.json", report(["a/1", "c/1", "c/2", "c/3"]))
+        p = self.run_compare(base, cur)
+        self.assertEqual(p.returncode, 0, p.stdout)
+        self.assertIn("of benchmark names overlap", p.stdout)
+        self.assertIn("escapes regression checking", p.stdout)
+
+    def test_healthy_overlap_does_not_warn(self):
+        base = self.write("b.json", report(["a/1", "a/2", "a/3", "new/1"]))
+        cur = self.write("c.json", report(["a/1", "a/2", "a/3", "other/1"]))
+        p = self.run_compare(base, cur)
+        self.assertEqual(p.returncode, 0, p.stdout)
+        self.assertNotIn("of benchmark names overlap", p.stdout)
+
+    def test_min_overlap_flag_tightens_the_bar(self):
+        base = self.write("b.json", report(["a/1", "a/2", "b/1"]))
+        cur = self.write("c.json", report(["a/1", "a/2", "c/1"]))
+        p = self.run_compare(base, cur, "--min-overlap", "0.9")
+        self.assertEqual(p.returncode, 0, p.stdout)
+        self.assertIn("of benchmark names overlap", p.stdout)
+
+
+if __name__ == "__main__":
+    unittest.main(verbosity=2)

@@ -205,6 +205,43 @@ fn run_suite(
         );
     }
 
+    // ISSUE 6: the packed execution tier.  For each router lane, warm a
+    // staged backend and a packed one on the same store-backed fixture,
+    // assert the logits are bit-identical (the non-negotiable packed
+    // contract), and report the measured packed/staged ratio next to
+    // the hardware model's prediction so the trajectory records how
+    // much of `hw::speedup` a software integer/LUT kernel realizes.
+    section("packed exec: forward from bit-packed codes vs staged-f32 tier");
+    for fmt in [Format::fixed(3, 3), Format::fixed(4, 4), Format::fixed(8, 8), Format::float(7, 6)]
+    {
+        let id = fmt.id();
+        let spec = PrecisionSpec::parse(&id).expect("packed spec parses");
+        let mut staged = NativeBackend::with_store(net.clone(), Arc::new(WeightStore::unbounded()));
+        let mut packed = NativeBackend::with_store(net.clone(), Arc::new(WeightStore::unbounded()))
+            .with_packed_exec(true);
+        let want = staged.run_spec(&x, &spec).expect("staged warm-up forward");
+        let got = packed.run_spec(&x, &spec).expect("packed warm-up forward");
+        assert_eq!(
+            want.data().iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            got.data().iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            "packed forward must be bit-identical to the staged tier ({id})"
+        );
+        let s = bench.run(&format!("forward_staged/tiny-conv/{id}/batch{fwd_batch}"), || {
+            staged.run_spec(&x, &spec).expect("staged forward").data()[0]
+        });
+        let p = bench.run(&format!("forward_packed/tiny-conv/{id}/batch{fwd_batch}"), || {
+            packed.run_spec(&x, &spec).expect("packed forward").data()[0]
+        });
+        let predicted = crate::hw::speedup(&fmt);
+        report.ratio(&format!("packed_forward_over_f32/{id}"), ratio(&s, &p));
+        report.ratio(&format!("hw_speedup_predicted/{id}"), predicted);
+        println!(
+            "    -> packed/staged {:.2}x measured, {:.2}x predicted by the MAC model",
+            ratio(&s, &p),
+            predicted,
+        );
+    }
+
     report.results.extend_from_slice(bench.results());
 }
 
@@ -248,7 +285,21 @@ mod tests {
             report.ratios.keys().any(|k| k.starts_with("packed_compression/")),
             "missing packed-compression ratios"
         );
-        for name in ["forward_cached/", "forward_restaged/", "pack/", "unpack/"] {
+        // the ISSUE 6 sections: packed-domain forward vs the staged
+        // tier, plus the hardware model's prediction for each format
+        // (also tolerated as missing-section notes in older baselines)
+        for fam in ["packed_forward_over_f32/", "hw_speedup_predicted/"] {
+            let n = report.ratios.keys().filter(|k| k.starts_with(fam)).count();
+            assert!(n >= 4, "expected >=4 {fam} ratios, got {n}");
+        }
+        for name in [
+            "forward_cached/",
+            "forward_restaged/",
+            "pack/",
+            "unpack/",
+            "forward_staged/",
+            "forward_packed/",
+        ] {
             assert!(
                 report.results.iter().any(|r| r.name.starts_with(name)),
                 "missing {name} results"

@@ -5,6 +5,7 @@ pub mod sweep;
 
 pub use metrics::{topk_accuracy, topk_hits};
 pub use sweep::{
-    accuracy, accuracy_with_store, eval_config, forward_eval_parallel, forward_eval_parallel_in,
-    sweep_design_space, ConfigResult, EvalOptions,
+    accuracy, accuracy_with_store, accuracy_with_store_exec, eval_config, forward_eval_parallel,
+    forward_eval_parallel_exec, forward_eval_parallel_in, sweep_design_space, ConfigResult,
+    EvalOptions,
 };

@@ -135,6 +135,22 @@ pub fn forward_eval_parallel_in(
     workers: usize,
     store: &Arc<WeightStore>,
 ) -> Result<(Vec<f32>, Vec<i32>)> {
+    forward_eval_parallel_exec(net, spec, opts, workers, store, false)
+}
+
+/// [`forward_eval_parallel_in`] with packed-domain execution opt-in
+/// (`repro eval --packed-exec`; DESIGN.md §Packed execution): every
+/// worker's backend runs admitted layers straight from the store's
+/// bit-packed codes.  Bit-identical to the staged path by the packed
+/// contract — only memory traffic changes.
+pub fn forward_eval_parallel_exec(
+    net: &Arc<Network>,
+    spec: impl Into<PrecisionSpec>,
+    opts: &EvalOptions,
+    workers: usize,
+    store: &Arc<WeightStore>,
+    packed_exec: bool,
+) -> Result<(Vec<f32>, Vec<i32>)> {
     let spec: PrecisionSpec = spec.into();
     let n = opts.samples.min(net.eval_len()).max(1);
     // same clamp as forward_eval, so both paths use identical batching
@@ -144,14 +160,15 @@ pub fn forward_eval_parallel_in(
         .map(|lo| (lo, (lo + batch).min(n)))
         .collect();
     if workers <= 1 || jobs.len() <= 1 {
-        let mut backend = NativeBackend::with_store(net.clone(), store.clone());
+        let mut backend =
+            NativeBackend::with_store(net.clone(), store.clone()).with_packed_exec(packed_exec);
         return forward_eval(&mut backend, &spec, opts);
     }
     let spec = &spec;
     let chunks = run_indexed(
         &jobs,
         workers,
-        || NativeBackend::with_store(net.clone(), store.clone()),
+        || NativeBackend::with_store(net.clone(), store.clone()).with_packed_exec(packed_exec),
         |backend, &(lo, hi)| -> Result<Vec<f32>> {
             let xb = net.eval_x.slice_rows(lo, hi);
             Ok(backend.run_spec(&xb, spec)?.into_data())
@@ -212,9 +229,23 @@ pub fn accuracy_with_store(
     samples: usize,
     store: &Arc<WeightStore>,
 ) -> Result<f64> {
+    accuracy_with_store_exec(net, spec, samples, store, false)
+}
+
+/// [`accuracy_with_store`] with packed-domain execution opt-in — the
+/// `repro eval --packed-exec` driver.  The accuracy is identical by the
+/// packed bit-exactness contract; the flag exists so the store counters
+/// (and wall-clock) reflect packed execution.
+pub fn accuracy_with_store_exec(
+    net: &Arc<Network>,
+    spec: impl Into<PrecisionSpec>,
+    samples: usize,
+    store: &Arc<WeightStore>,
+    packed_exec: bool,
+) -> Result<f64> {
     let opts = EvalOptions { samples, ..Default::default() };
     let (logits, labels) =
-        forward_eval_parallel_in(net, spec, &opts, default_workers(), store)?;
+        forward_eval_parallel_exec(net, spec, &opts, default_workers(), store, packed_exec)?;
     Ok(topk_accuracy(&logits, &labels, net.classes, net.topk))
 }
 

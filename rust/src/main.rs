@@ -28,7 +28,7 @@ use anyhow::{bail, Context, Result};
 use precis::coordinator::cache::ResultCache;
 use precis::coordinator::Coordinator;
 use precis::eval::sweep::EvalOptions;
-use precis::eval::{accuracy_with_store, sweep_design_space};
+use precis::eval::{accuracy_with_store_exec, sweep_design_space};
 use precis::figures;
 use precis::formats::{self, Format, PrecisionSpec};
 use precis::nn::Zoo;
@@ -52,6 +52,8 @@ const USAGE: &str = "usage: repro <info|eval|sweep|search|plan|trace|figure|figu
   repro info
   repro eval   --net lenet5 --format float:m7e6|plan:... [--samples 128] [--backend native|pjrt]
                [--weight-budget 8m]   (cap + report the pre-quantized weight store)
+               [--packed-exec]        (execute from bit-packed codes where the router
+                                       admits a layer; bit-identical, native only)
   repro sweep  --net lenet5 [--samples 128] [--stride 1]
   repro search --net lenet5 [--target 0.99] [--refine 2] [--kind float|fixed|both]
   repro plan   <net> [--target 0.99] [--validate 4]
@@ -62,16 +64,19 @@ const USAGE: &str = "usage: repro <info|eval|sweep|search|plan|trace|figure|figu
   repro serve  --sessions lenet5@float:m7e6,lenet5@plan:conv1=float:m4e5,*=fixed:l8r8
                [--requests 256] [--clients 8] [--wait-ms 5] [--backend native|pjrt|auto]
                [--weight-budget 8m]   (gateway-wide staged-weight byte budget)
+               [--packed-exec]        (native sessions execute from packed codes)
   repro zoo-size <net> --format float:m7e6|plan:...
-               (per-layer f32 vs bit-packed bytes, MAC-weighted; DESIGN.md §Storage)
+               (per-layer f32 vs bit-packed bytes, MAC-weighted, plus the packed
+                execution lane per layer; DESIGN.md §Storage, §Packed execution)
   repro bench  [--preset quick|full] [--tag T] [--json BENCH_T.json]
-               (headless: no artifacts needed; compare files with
+               (headless: no artifacts needed; includes packed_forward_over_f32
+                sections vs hw::speedup predictions; compare files with
                 .github/scripts/bench_compare.py)
   repro bench-sweep --net lenet5 [--stride 1]
 common: --artifacts DIR --out DIR --samples N --workers W --seed S";
 
 fn run(raw: &[String]) -> Result<()> {
-    let args = Args::parse(raw, &["quiet"])?;
+    let args = Args::parse(raw, &["quiet", "packed-exec"])?;
     let Some(cmd) = args.positional().first().map(|s| s.as_str()) else {
         println!("{USAGE}");
         return Ok(());
@@ -120,12 +125,22 @@ fn run(raw: &[String]) -> Result<()> {
             // --weight-budget caps the pre-quantized weight store the
             // eval workers share, and reports its counters after
             let weight_budget = args.get("weight-budget").map(parse_byte_size).transpose()?;
+            let packed_exec = args.has("packed-exec");
             let acc = match args.get_or("backend", "native") {
                 "native" => {
                     let store = std::sync::Arc::new(WeightStore::from_budget(weight_budget));
-                    let acc = accuracy_with_store(&net, &spec, samples, &store)?;
-                    if weight_budget.is_some() {
+                    let acc = accuracy_with_store_exec(&net, &spec, samples, &store, packed_exec)?;
+                    if weight_budget.is_some() || packed_exec {
                         eprintln!("# weight store: {}", store.stats().render());
+                    }
+                    if packed_exec {
+                        let table = precis::nn::QuantTable::resolve_for(&net, &spec, true)?;
+                        let lanes: Vec<String> = table
+                            .packed_labels(&net)
+                            .into_iter()
+                            .map(|(name, lane)| format!("{name}={lane}"))
+                            .collect();
+                        eprintln!("# packed exec lanes: {}", lanes.join(", "));
                     }
                     acc
                 }
@@ -136,6 +151,12 @@ fn run(raw: &[String]) -> Result<()> {
                         eprintln!(
                             "(--weight-budget applies to the native engine's weight store \
                              only; PJRT holds weights on-device — flag ignored)"
+                        );
+                    }
+                    if packed_exec {
+                        eprintln!(
+                            "(--packed-exec applies to the native engine only; PJRT holds \
+                             weights on-device — flag ignored)"
                         );
                     }
                     let fmt = spec.resolved_uniform(&net)?;
@@ -313,11 +334,19 @@ fn run(raw: &[String]) -> Result<()> {
                      on-device — the cap will sit unused)"
                 );
             }
+            let packed_exec = args.has("packed-exec");
+            if packed_exec && kind == BackendKind::Pjrt {
+                eprintln!(
+                    "(--packed-exec applies to native sessions only; PJRT holds weights \
+                     on-device — flag ignored)"
+                );
+            }
             let zoo = Zoo::load(&artifacts)?;
             let gateway = Gateway::new(zoo, kind).with_options(SessionOptions {
                 batch: 0, // artifact batch size
                 max_wait: Duration::from_millis(wait_ms as u64),
                 weight_budget,
+                packed_exec,
             });
             let mut keys = Vec::new();
             for spec in split_session_specs(&specs) {
@@ -364,15 +393,22 @@ fn run(raw: &[String]) -> Result<()> {
             let zoo = Zoo::load(&artifacts)?;
             let net = zoo.network(net_name)?;
             let rows = precis::store::zoo_size(&net, &spec)?;
+            // the packed-execution lane the router would assign each
+            // layer under --packed-exec (DESIGN.md §Packed execution)
+            let lanes: std::collections::BTreeMap<String, &'static str> =
+                precis::nn::QuantTable::resolve_for(&net, &spec, true)?
+                    .packed_labels(&net)
+                    .into_iter()
+                    .collect();
             println!(
-                "{:<16} {:>14} {:>10} {:>8} {:>10} {:>10} {:>7} {:>9}",
-                "layer", "format", "macs", "params", "f32", "packed", "ratio", "mac-spdup"
+                "{:<16} {:>14} {:>10} {:>8} {:>10} {:>10} {:>7} {:>9} {:>7}",
+                "layer", "format", "macs", "params", "f32", "packed", "ratio", "mac-spdup", "exec"
             );
             let (mut tp, mut tf, mut tpk, mut tmacs) = (0usize, 0usize, 0usize, 0usize);
             let mut weighted_bits = 0f64;
             for r in &rows {
                 println!(
-                    "{:<16} {:>14} {:>10} {:>8} {:>10} {:>10} {:>6.2}x {:>8.2}x",
+                    "{:<16} {:>14} {:>10} {:>8} {:>10} {:>10} {:>6.2}x {:>8.2}x {:>7}",
                     r.layer,
                     r.fmt.id(),
                     r.macs,
@@ -381,6 +417,7 @@ fn run(raw: &[String]) -> Result<()> {
                     human_bytes(r.packed_bytes),
                     r.f32_bytes as f64 / r.packed_bytes.max(1) as f64,
                     r.mac_speedup,
+                    lanes.get(&r.layer).copied().unwrap_or("-"),
                 );
                 tp += r.params;
                 tf += r.f32_bytes;

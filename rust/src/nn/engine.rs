@@ -52,15 +52,21 @@
 //! native implementation of the one execution substrate
 //! (DESIGN.md §Serving).
 
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
 use anyhow::{bail, Result};
 
 use crate::formats::{Format, PrecisionSpec};
 use crate::nn::layers::Layer;
 use crate::nn::network::Network;
 use crate::numerics::{quantize_slice, QIdentity, QuantOp, Quantizer};
-use crate::store::{StoreKey, WeightStore};
+use crate::store::{
+    gemm_packed_int, gemm_packed_lut, ExecScratch, PackedPlan, PackedTensor, StoreKey, WeightStore,
+    LUT_MAX_WIDTH,
+};
 use crate::tensor::Tensor;
-use crate::with_quant_op;
+use crate::{with_packed_op, with_quant_op};
 
 /// The engine-facing form of a [`PrecisionSpec`]: one prebuilt
 /// [`Quantizer`] per layer position, resolved and validated against a
@@ -98,7 +104,13 @@ enum LayerQuant {
 /// allocation.
 struct LayerQ {
     q: Quantizer,
+    /// the resolved format behind `q` — the packed router's input
+    fmt: Format,
     staging: Staging,
+    /// where this layer's GEMM executes (DESIGN.md §Packed execution);
+    /// [`PackedPlan::Staged`] unless the table was resolved with packed
+    /// execution enabled AND the router admitted the layer
+    packed: PackedPlan,
 }
 
 /// How a layer's weight tensor reaches the GEMM (module docs;
@@ -125,7 +137,7 @@ fn named_layer_q(net: &Network, name: &str, fmt: Format) -> LayerQ {
     } else {
         Staging::Store(StoreKey::new(&net.name, name, fmt))
     };
-    LayerQ { q, staging }
+    LayerQ { q, fmt, staging, packed: PackedPlan::Staged }
 }
 
 /// True when the identity op maps every value to itself — i.e. the
@@ -154,12 +166,12 @@ impl QuantTable {
                 // no named layer follows — fatal for an op that
                 // actually quantizes (gavgpool), harmless for exact ops
                 // whose table entry is never read.
-                let mut next: Option<Quantizer> = None;
+                let mut next: Option<(Quantizer, Format)> = None;
                 for layer in net.layers.iter().rev() {
                     let lq = match layer {
                         Layer::Conv { name, .. } | Layer::Dense { name, .. } => {
                             let lq = named_layer_q(net, name, fmt_of(name));
-                            next = Some(lq.q);
+                            next = Some((lq.q, lq.fmt));
                             LayerQuant::One(lq)
                         }
                         Layer::Inception { .. } => {
@@ -173,11 +185,11 @@ impl QuantTable {
                                     _ => unreachable!("inception branches are convs"),
                                 })
                                 .collect();
-                            next = Some(qs[0].q);
+                            next = Some((qs[0].q, qs[0].fmt));
                             LayerQuant::Branches(qs)
                         }
                         Layer::GAvgPool => {
-                            let Some(q) = next else {
+                            let Some((q, fmt)) = next else {
                                 bail!(
                                     "{}: global average pool has no named quantized layer \
                                      downstream to inherit a format from — per-layer plans \
@@ -185,19 +197,31 @@ impl QuantTable {
                                     net.name
                                 );
                             };
-                            LayerQuant::One(LayerQ { q, staging: Staging::NoWeights })
+                            LayerQuant::One(LayerQ {
+                                q,
+                                fmt,
+                                staging: Staging::NoWeights,
+                                packed: PackedPlan::Staged,
+                            })
                         }
                         // exact ops never consult their entry; the
                         // placeholder is unreachable by construction
-                        _ => LayerQuant::One(LayerQ {
-                            q: next.unwrap_or_else(|| Quantizer::new(&Format::SINGLE)),
-                            staging: Staging::NoWeights,
-                        }),
+                        _ => {
+                            let (q, fmt) = next.unwrap_or_else(|| {
+                                (Quantizer::new(&Format::SINGLE), Format::SINGLE)
+                            });
+                            LayerQuant::One(LayerQ {
+                                q,
+                                fmt,
+                                staging: Staging::NoWeights,
+                                packed: PackedPlan::Staged,
+                            })
+                        }
                     };
                     per_layer.push(lq);
                 }
                 per_layer.reverse();
-                let Some(input) = next else {
+                let Some((input, _)) = next else {
                     // unreachable: p.resolve() errors when the network
                     // has no quantized layers; kept as a hard error so
                     // a future refactor cannot silently mis-quantize
@@ -228,10 +252,125 @@ impl QuantTable {
                         })
                         .collect(),
                 ),
-                _ => LayerQuant::One(LayerQ { q, staging: Staging::NoWeights }),
+                _ => LayerQuant::One(LayerQ {
+                    q,
+                    fmt: *fmt,
+                    staging: Staging::NoWeights,
+                    packed: PackedPlan::Staged,
+                }),
             })
             .collect();
         QuantTable { input: q, per_layer }
+    }
+
+    /// [`QuantTable::resolve`], then — when `packed_exec` is on — run
+    /// the packed-execution router over the resolved table
+    /// ([`assign_packed`](Self::assign_packed)).  The backends' entry
+    /// point: `resolve_for(net, spec, false)` ≡ `resolve(net, spec)`.
+    pub fn resolve_for(
+        net: &Network,
+        spec: &PrecisionSpec,
+        packed_exec: bool,
+    ) -> Result<QuantTable> {
+        let mut table = QuantTable::resolve(net, spec)?;
+        if packed_exec {
+            table.assign_packed(net);
+        }
+        Ok(table)
+    }
+
+    /// The packed-execution router pass (DESIGN.md §Packed execution):
+    /// walk the network FORWARD tracking which quantizer's grid the
+    /// flowing activations live on, and give each named layer the
+    /// [`PackedPlan`] that [`crate::store::route`] admits under that
+    /// premise.  Grid tracking is the integer lanes' soundness
+    /// condition — `gemm_packed_int` stages activations with an *exact*
+    /// grid conversion, so it may only run when every activation
+    /// entering the layer is an output of the layer's own quantizer:
+    ///
+    /// * the input staging pass puts the input on `self.input`'s grid;
+    /// * conv / dense / gavgpool outputs are on their own quantizer's
+    ///   grid (every kernel ends each element with `q(..)`);
+    /// * relu (negatives to `0.0`, on every grid), maxpool (selection,
+    ///   `0.0` pad) and flatten (relayout) preserve the grid;
+    /// * an identity-quantized layer (`Format::SINGLE`) emits raw f32 —
+    ///   tracked as the identity grid, which no fixed grid equals, so
+    ///   downstream integer lanes are refused;
+    /// * an inception module's concat is on a single grid only when
+    ///   every branch resolved to the same quantizer.
+    ///
+    /// Decode LUTs depend only on the format, so they are built once
+    /// per distinct format and shared across layers.
+    fn assign_packed(&mut self, net: &Network) {
+        let mut luts: BTreeMap<Format, Arc<Vec<f32>>> = BTreeMap::new();
+        let mut lut_for = |fmt: &Format| -> Arc<Vec<f32>> {
+            luts.entry(*fmt)
+                .or_insert_with(|| {
+                    Arc::new(
+                        PackedTensor::decode_table(fmt, LUT_MAX_WIDTH)
+                            .expect("router admits LUT only for table-sized formats"),
+                    )
+                })
+                .clone()
+        };
+        let mut plan = |lq: &mut LayerQ, upstream: &Option<Quantizer>| {
+            let direct = !matches!(lq.staging, Staging::Store(_));
+            let on_grid = *upstream == Some(lq.q);
+            let fmt = lq.fmt;
+            lq.packed = PackedPlan::for_layer(&fmt, direct, on_grid, || lut_for(&fmt));
+        };
+        // the engine quantizes the input once, onto the first named
+        // layer's grid
+        let mut current: Option<Quantizer> = Some(self.input);
+        for (layer, entry) in net.layers.iter().zip(self.per_layer.iter_mut()) {
+            match (layer, entry) {
+                (Layer::Conv { .. } | Layer::Dense { .. }, LayerQuant::One(lq)) => {
+                    plan(lq, &current);
+                    current = Some(lq.q);
+                }
+                (Layer::Inception { .. }, LayerQuant::Branches(qs)) => {
+                    // every branch reads the module input (the pool
+                    // branch through a grid-preserving maxpool)
+                    for lq in qs.iter_mut() {
+                        plan(lq, &current);
+                    }
+                    current = match qs.split_first() {
+                        Some((q0, rest)) if rest.iter().all(|lq| lq.q == q0.q) => Some(q0.q),
+                        _ => None,
+                    };
+                }
+                (Layer::GAvgPool, LayerQuant::One(lq)) => {
+                    // unnamed quantized op: output lands on its
+                    // inherited quantizer's grid
+                    current = Some(lq.q);
+                }
+                // relu / maxpool / flatten preserve the grid
+                _ => {}
+            }
+        }
+    }
+
+    /// Per named layer, the packed-execution lane the router assigned
+    /// (`staged` / `int16` / `int32` / `lut`), in execution order —
+    /// surfaced by `repro zoo-size` and the serving stats.
+    pub fn packed_labels(&self, net: &Network) -> Vec<(String, &'static str)> {
+        let mut out = Vec::new();
+        for (layer, entry) in net.layers.iter().zip(&self.per_layer) {
+            match (layer, entry) {
+                (Layer::Conv { name, .. } | Layer::Dense { name, .. }, LayerQuant::One(lq)) => {
+                    out.push((name.clone(), lq.packed.label()));
+                }
+                (Layer::Inception { .. }, LayerQuant::Branches(qs)) => {
+                    for (br, lq) in layer.inception_branches().iter().zip(qs) {
+                        if let Layer::Conv { name, .. } = br {
+                            out.push((name.clone(), lq.packed.label()));
+                        }
+                    }
+                }
+                _ => {}
+            }
+        }
+        out
     }
 }
 
@@ -246,6 +385,8 @@ pub struct Engine {
     wq: Vec<f32>,
     /// per-layer output staging for inception concat
     branch_out: Vec<f32>,
+    /// packed-kernel scratch (integer lanes, decoded weight tiles)
+    exec: ExecScratch,
 }
 
 /// Shape of the activation tensor flowing through the engine.
@@ -280,6 +421,7 @@ impl Engine {
             patches: Vec::new(),
             wq: Vec::new(),
             branch_out: Vec::new(),
+            exec: ExecScratch::default(),
         }
     }
 
@@ -385,28 +527,66 @@ impl Engine {
                     (Staging::Store(key), Some(s)) => s.prepare(key, w.data()),
                     _ => None,
                 };
-                if cached.is_none() && !matches!(lq.staging, Staging::Direct) {
-                    self.stage_quantized_weights(w.data(), &lq.q);
-                }
-                let wq: &[f32] = match (&lq.staging, &cached) {
-                    (Staging::Direct, _) => w.data(),
-                    (_, Some(entry)) => entry.quantized(),
-                    _ => &self.wq,
-                };
                 resize(&mut self.act_b, b * out_dim);
-                // one dispatch selects the layer's monomorphized kernels
-                with_quant_op!(&lq.q, op => {
-                    gemm_q(
-                        &self.act_a[..b * f],
-                        wq,
-                        &mut self.act_b,
-                        b,
-                        *in_dim,
-                        *out_dim,
-                        op,
-                    );
-                    add_bias_q(&mut self.act_b, bias.data(), b, *out_dim, op);
-                });
+                match (&lq.packed, &cached) {
+                    // packed-domain execution: the MAC loop reads the
+                    // store's bit-packed codes; bias is fused into the
+                    // kernel epilogue (bit-exact to gemm_q + add_bias_q
+                    // by the router's admission rules)
+                    (PackedPlan::Int(op), Some(entry)) => {
+                        with_packed_op!(op, o => gemm_packed_int(
+                            &self.act_a[..b * f],
+                            entry.packed(),
+                            Some(bias.data()),
+                            &mut self.act_b,
+                            b,
+                            *in_dim,
+                            *out_dim,
+                            o,
+                            &mut self.exec,
+                        ));
+                    }
+                    (PackedPlan::Lut(lut), Some(entry)) => {
+                        with_quant_op!(&lq.q, op => gemm_packed_lut(
+                            &self.act_a[..b * f],
+                            entry.packed(),
+                            lut,
+                            Some(bias.data()),
+                            &mut self.act_b,
+                            b,
+                            *in_dim,
+                            *out_dim,
+                            op,
+                            &mut self.exec,
+                        ));
+                    }
+                    // staged f32 tier: planned, or a packed layer whose
+                    // store entry the budget could not admit
+                    _ => {
+                        if cached.is_none() && !matches!(lq.staging, Staging::Direct) {
+                            self.stage_quantized_weights(w.data(), &lq.q);
+                        }
+                        let wq: &[f32] = match (&lq.staging, &cached) {
+                            (Staging::Direct, _) => w.data(),
+                            (_, Some(entry)) => entry.quantized(),
+                            _ => &self.wq,
+                        };
+                        // one dispatch selects the layer's monomorphized
+                        // kernels
+                        with_quant_op!(&lq.q, op => {
+                            gemm_q(
+                                &self.act_a[..b * f],
+                                wq,
+                                &mut self.act_b,
+                                b,
+                                *in_dim,
+                                *out_dim,
+                                op,
+                            );
+                            add_bias_q(&mut self.act_b, bias.data(), b, *out_dim, op);
+                        });
+                    }
+                }
                 std::mem::swap(&mut self.act_a, &mut self.act_b);
                 ActShape::Flat(b, *out_dim)
             }
@@ -540,20 +720,53 @@ impl Engine {
             (Staging::Store(key), Some(s)) => s.prepare(key, wt.data()),
             _ => None,
         };
-        if cached.is_none() && !matches!(lq.staging, Staging::Direct) {
-            self.stage_quantized_weights(wt.data(), &lq.q);
-        }
-        let wq: &[f32] = match (&lq.staging, &cached) {
-            (Staging::Direct, _) => wt.data(),
-            (_, Some(entry)) => entry.quantized(),
-            _ => &self.wq,
-        };
         resize(&mut self.act_b, m * out_ch);
-        // one dispatch selects the layer's monomorphized kernels
-        with_quant_op!(&lq.q, op => {
-            gemm_q(&self.patches, wq, &mut self.act_b, m, k_dim, *out_ch, op);
-            add_bias_q(&mut self.act_b, bdata, m, *out_ch, op);
-        });
+        match (&lq.packed, &cached) {
+            // packed-domain execution over the im2col patches — see the
+            // Dense arm for the contract
+            (PackedPlan::Int(op), Some(entry)) => {
+                with_packed_op!(op, o => gemm_packed_int(
+                    &self.patches,
+                    entry.packed(),
+                    Some(bdata),
+                    &mut self.act_b,
+                    m,
+                    k_dim,
+                    *out_ch,
+                    o,
+                    &mut self.exec,
+                ));
+            }
+            (PackedPlan::Lut(lut), Some(entry)) => {
+                with_quant_op!(&lq.q, op => gemm_packed_lut(
+                    &self.patches,
+                    entry.packed(),
+                    lut,
+                    Some(bdata),
+                    &mut self.act_b,
+                    m,
+                    k_dim,
+                    *out_ch,
+                    op,
+                    &mut self.exec,
+                ));
+            }
+            _ => {
+                if cached.is_none() && !matches!(lq.staging, Staging::Direct) {
+                    self.stage_quantized_weights(wt.data(), &lq.q);
+                }
+                let wq: &[f32] = match (&lq.staging, &cached) {
+                    (Staging::Direct, _) => wt.data(),
+                    (_, Some(entry)) => entry.quantized(),
+                    _ => &self.wq,
+                };
+                // one dispatch selects the layer's monomorphized kernels
+                with_quant_op!(&lq.q, op => {
+                    gemm_q(&self.patches, wq, &mut self.act_b, m, k_dim, *out_ch, op);
+                    add_bias_q(&mut self.act_b, bdata, m, *out_ch, op);
+                });
+            }
+        }
         ActShape::Hwc(b, oh, ow, *out_ch)
     }
 

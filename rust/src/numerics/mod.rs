@@ -13,9 +13,11 @@
 //! [`q_slice`] / [`crate::nn::gemm_q`] dispatch once per call via
 //! [`with_quant_op!`](crate::with_quant_op) instead of branching per MAC.
 
+mod packed;
 mod quant;
 pub mod trace;
 
+pub use packed::{AccInt, PackedOp, QFixedInt, I16_MAX_TOTAL_BITS, I32_MAX_TOTAL_BITS};
 pub use quant::{
     dot_q, mac_q, q_slice, quantize, quantize_slice, QFixed, QFloat, QIdentity, QuantOp, Quantizer,
 };

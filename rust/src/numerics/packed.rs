@@ -1,0 +1,388 @@
+//! Integer-domain fixed-point ops for packed-domain execution
+//! (DESIGN.md §Packed execution).
+//!
+//! A fixed format `X(l, r)` quantizes onto the uniform grid `k · 2^-r`,
+//! `|k| ≤ M = 2^(l+r) - 1`.  When **both** operands of every MAC are on
+//! that grid, the staged-f32 chain `q(acc + q(a·w))` is an exact
+//! computation over grid integers — so it can run as an integer MAC
+//! chain on the tensor's packed two's-complement codes directly, with
+//! ONE rescale (`· 2^-r`) per output element:
+//!
+//! * product: `q(f32(a·w)) ≡ clamp(rte_shr(i·j, r), ±M)` — exact while
+//!   `i·j` is exactly representable in the f32 carrier, i.e. `M² < 2^24`
+//!   ⇒ **`l + r ≤ 12`** ([`I32_MAX_TOTAL_BITS`]).  Beyond that the f32
+//!   product rounds before the grid rounding (double rounding) and the
+//!   chains genuinely diverge (e.g. `X(0,13)`: `4091·4915 = 20107265`
+//!   rescales to 2455 directly but 2454 through f32).
+//! * sum: `q(f32(acc + p)) ≡ clamp(acc + p, ±M)` — both addends are
+//!   clamped to `±M`, so the sum magnitude `≤ 2M < 2^24` is exact, and
+//!   `rte` of an on-grid value is the identity.
+//! * `l + r ≤ 7` ([`I16_MAX_TOTAL_BITS`]) additionally bounds every
+//!   intermediate (`|i·j| ≤ M² = 16129 < 2^15`) inside **i16**, so the
+//!   whole chain runs in 16-bit lanes — debug-build overflow checks
+//!   genuinely prove the bound.
+//!
+//! Clamp/round commute at the saturation boundary because `rte` is
+//! monotone and the `M + 0.5` tie resolves to the even `M + 1` (`M` is
+//! odd for `l + r ≥ 1`), which clamps back to `M` — identical to
+//! clamping first.  The `-0.0` grid point is integer `0` on every path.
+//!
+//! [`PackedOp`] is the [`Quantizer`]-shaped dispatcher: built once per
+//! format (when the format qualifies), it selects which monomorphized
+//! `store::exec::gemm_packed_int::<A>` instantiation a kernel call runs
+//! via [`with_packed_op!`](crate::with_packed_op) — the same
+//! dispatch-once pattern as [`with_quant_op!`](crate::with_quant_op).
+//!
+//! [`Quantizer`]: crate::numerics::Quantizer
+
+use crate::formats::Format;
+
+/// `l + r` bound for the i16 accumulator lane: every product and
+/// clamped sum fits 16 bits (`M² = 16129 < 2^15`).
+pub const I16_MAX_TOTAL_BITS: u32 = 7;
+
+/// `l + r` bound for integer execution at all: raw products must be
+/// exactly representable in the f32 carrier (`M² < 2^24`), or the
+/// staged chain's product rounding cannot be reproduced.
+pub const I32_MAX_TOTAL_BITS: u32 = 12;
+
+/// An accumulator integer for the packed MAC chain (i16 or i32).  The
+/// arithmetic runs IN this type — no silent widening — so debug-build
+/// overflow checks prove the width bounds the module docs derive.
+pub trait AccInt: Copy + PartialEq + std::fmt::Debug + 'static {
+    const ZERO: Self;
+    /// Narrow from a decoded code (caller guarantees range).
+    fn from_i64(v: i64) -> Self;
+    /// Saturating f32 → integer conversion (`as`-cast semantics).
+    fn from_f32(v: f32) -> Self;
+    fn to_f32(self) -> f32;
+    fn mul(self, rhs: Self) -> Self;
+    fn add(self, rhs: Self) -> Self;
+    /// Round-half-even of `self / 2^r` (exact rational RHE).
+    fn rte_shr(self, r: u32) -> Self;
+    /// Clamp into `[-m, m]`.
+    fn clamp_mag(self, m: Self) -> Self;
+}
+
+macro_rules! impl_acc_int {
+    ($t:ty) => {
+        impl AccInt for $t {
+            const ZERO: Self = 0;
+
+            #[inline(always)]
+            fn from_i64(v: i64) -> Self {
+                debug_assert!(
+                    <$t>::try_from(v).is_ok(),
+                    "code {v} exceeds the accumulator width"
+                );
+                v as $t
+            }
+
+            #[inline(always)]
+            fn from_f32(v: f32) -> Self {
+                v as $t
+            }
+
+            #[inline(always)]
+            fn to_f32(self) -> f32 {
+                self as f32
+            }
+
+            #[inline(always)]
+            fn mul(self, rhs: Self) -> Self {
+                self * rhs
+            }
+
+            #[inline(always)]
+            fn add(self, rhs: Self) -> Self {
+                self + rhs
+            }
+
+            #[inline(always)]
+            fn rte_shr(self, r: u32) -> Self {
+                if r == 0 {
+                    return self;
+                }
+                // arithmetic shift floors; the masked remainder is the
+                // non-negative fractional part in grid units
+                let down = self >> r;
+                let rem = self & ((1 << r) - 1);
+                let half = 1 << (r - 1);
+                down + (rem > half || (rem == half && (down & 1) == 1)) as $t
+            }
+
+            #[inline(always)]
+            fn clamp_mag(self, m: Self) -> Self {
+                self.clamp(-m, m)
+            }
+        }
+    };
+}
+
+impl_acc_int!(i16);
+impl_acc_int!(i32);
+
+/// The integer-domain counterpart of [`crate::numerics::QFixed`]: the
+/// fixed format's grid constants in accumulator units.  `A` is the lane
+/// width ([`PackedOp::for_format`] picks it from `l + r`).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct QFixedInt<A> {
+    /// fractional shift `r` — the one rescale per product
+    r: u32,
+    /// grid bound `M = 2^(l+r) - 1` in grid units
+    max: A,
+    /// `2^r` (exact): stages on-grid f32 values to grid integers
+    scale: f32,
+    /// `2^-r` (exact): the final rescale per output element
+    inv_scale: f32,
+}
+
+impl<A: AccInt> QFixedInt<A> {
+    /// Stage a value that is ON the grid (an output of the format's own
+    /// quantizer — the router's upstream condition) to grid units.
+    #[inline(always)]
+    pub fn stage(&self, x: f32) -> A {
+        // x = k·2^-r exactly, so the scaling recovers k exactly
+        A::from_f32(x * self.scale)
+    }
+
+    /// Stage a possibly OFF-grid value (a raw bias) to grid units:
+    /// `clamp(rte(x·2^r), ±M)` — bit-equivalent to staging `q(x)`
+    /// (clamp/round commute; module docs).
+    #[inline(always)]
+    pub fn stage_rounded(&self, x: f32) -> A {
+        A::from_f32((x * self.scale).round_ties_even()).clamp_mag(self.max)
+    }
+
+    /// One product in grid units: `q(f32(a·w))` as integers.
+    #[inline(always)]
+    pub fn product(&self, a: A, w: A) -> A {
+        a.mul(w).rte_shr(self.r).clamp_mag(self.max)
+    }
+
+    /// One accumulate in grid units: `q(f32(acc + p))` as integers.
+    #[inline(always)]
+    pub fn accumulate(&self, acc: A, p: A) -> A {
+        acc.add(p).clamp_mag(self.max)
+    }
+
+    /// Back to the f32 carrier — exact (`|acc| ≤ M < 2^24`, then a
+    /// power-of-two rescale).
+    #[inline(always)]
+    pub fn finish(&self, acc: A) -> f32 {
+        acc.to_f32() * self.inv_scale
+    }
+}
+
+/// The thin dispatcher over the integer-lane instantiations — the
+/// [`Quantizer`](crate::numerics::Quantizer) counterpart for
+/// packed-domain execution.  [`PackedOp::for_format`] is the width
+/// bound in type form: formats it returns `None` for CANNOT run the
+/// integer chain bit-exactly and must route elsewhere (store::exec).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum PackedOp {
+    /// `l + r ≤ 7`: the whole chain fits 16-bit lanes.
+    I16(QFixedInt<i16>),
+    /// `7 < l + r ≤ 12`: products exact in f32, chain fits i32.
+    I32(QFixedInt<i32>),
+}
+
+impl PackedOp {
+    /// The integer op for `fmt`, if the format's chain is bit-exactly
+    /// representable as integer MACs (fixed, `l + r ≤ 12`).  Floats and
+    /// wider fixeds return `None` — they route to LUT or staged-f32.
+    pub fn for_format(fmt: &Format) -> Option<PackedOp> {
+        let Format::Fixed { int_bits, frac_bits } = *fmt else {
+            return None;
+        };
+        let t = int_bits + frac_bits;
+        if t > I32_MAX_TOTAL_BITS {
+            return None; // f32 product rounding is not reproducible
+        }
+        let r = frac_bits;
+        let scale = 2.0f32.powi(r as i32);
+        let max = (1i64 << t) - 1;
+        Some(if t <= I16_MAX_TOTAL_BITS {
+            PackedOp::I16(QFixedInt {
+                r,
+                max: max as i16,
+                scale,
+                inv_scale: 1.0 / scale,
+            })
+        } else {
+            PackedOp::I32(QFixedInt {
+                r,
+                max: max as i32,
+                scale,
+                inv_scale: 1.0 / scale,
+            })
+        })
+    }
+
+    /// Stats/CLI label of the selected lane.
+    pub fn label(&self) -> &'static str {
+        match self {
+            PackedOp::I16(_) => "int16",
+            PackedOp::I32(_) => "int32",
+        }
+    }
+}
+
+/// Select the monomorphized integer-lane instantiation:
+/// `with_packed_op!(p, op => body)` binds `op` to the variant's
+/// [`QFixedInt`] (`&QFixedInt<i16>` / `&QFixedInt<i32>`) and runs
+/// `body` once — the [`with_quant_op!`](crate::with_quant_op) pattern
+/// for the packed-int kernels.  `p` must be a `&PackedOp`.
+#[macro_export]
+macro_rules! with_packed_op {
+    ($p:expr, $op:ident => $body:expr) => {
+        match $p {
+            $crate::numerics::PackedOp::I16($op) => $body,
+            $crate::numerics::PackedOp::I32($op) => $body,
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::numerics::Quantizer;
+    use crate::testing::prop::{run_prop, Gen};
+
+    #[test]
+    fn for_format_width_bounds() {
+        // lane selection is exactly the l + r thresholds
+        for (l, r, want) in [
+            (0u32, 2u32, Some("int16")),
+            (3, 3, Some("int16")),
+            (0, 7, Some("int16")),
+            (7, 0, Some("int16")),
+            (4, 4, Some("int32")),
+            (8, 4, Some("int32")),
+            (6, 6, Some("int32")),
+            (0, 12, Some("int32")),
+            (12, 0, Some("int32")),
+            (6, 7, None), // t = 13: double rounding becomes possible
+            (8, 8, None),
+            (16, 16, None),
+        ] {
+            let got = PackedOp::for_format(&Format::fixed(l, r)).map(|p| p.label());
+            assert_eq!(got, want, "fixed:l{l}r{r}");
+        }
+        // floats and the exact baseline never take the integer lane
+        assert!(PackedOp::for_format(&Format::float(7, 6)).is_none());
+        assert!(PackedOp::for_format(&Format::SINGLE).is_none());
+    }
+
+    /// `rte_shr` against an independent exact reference: f64 division is
+    /// exact for these magnitudes, and f64 `round_ties_even` IS rational
+    /// round-half-even.
+    #[test]
+    fn prop_rte_shr_is_round_half_even() {
+        run_prop("rte_shr_rhe", 500, |g| {
+            let r = g.usize_in(0, 12) as u32;
+            let p = g.int_in(-(1 << 24), 1 << 24) as i32;
+            let want = ((p as f64) / 2f64.powi(r as i32)).round_ties_even() as i32;
+            assert_eq!(p.rte_shr(r), want, "p={p} r={r}");
+            let p16 = g.int_in(-(1 << 14), 1 << 14) as i16;
+            let r16 = g.usize_in(0, 7) as u32;
+            let want16 = ((p16 as f64) / 2f64.powi(r16 as i32)).round_ties_even() as i16;
+            assert_eq!(p16.rte_shr(r16), want16, "p={p16} r={r16}");
+        });
+    }
+
+    /// The product/accumulate/finish ops against the scalar f32
+    /// reference chain, through the real dispatch — on-grid operands
+    /// drawn across every `(l, r)` regime both lanes cover.
+    #[test]
+    fn prop_integer_ops_match_f32_reference_chain() {
+        run_prop("packed_int_vs_f32_chain", 400, |g| {
+            let l = g.usize_in(0, 12) as u32;
+            let r = g.usize_in(0, 12 - l as usize) as u32;
+            let fmt = Format::fixed(l, r);
+            let q = Quantizer::new(&fmt);
+            let p = PackedOp::for_format(&fmt).expect("l + r <= 12 qualifies");
+            let mx = 2.0f32.powi(l as i32) * 1.5;
+            let k = g.usize_in(1, 24);
+            let a: Vec<f32> = (0..k).map(|_| q.q(g.f32_in(-mx, mx))).collect();
+            let w: Vec<f32> = (0..k).map(|_| q.q(g.f32_in(-mx, mx))).collect();
+            let bias = g.f32_in(-mx, mx);
+
+            // f32 reference: the gemm serial-k chain + add_bias_q step
+            let mut want = 0.0f32;
+            for i in 0..k {
+                want = q.q(want + q.q(a[i] * w[i]));
+            }
+            want = q.q(want + q.q(bias));
+
+            let got = crate::with_packed_op!(&p, op => {
+                let mut acc = AccInt::ZERO;
+                for i in 0..k {
+                    acc = op.accumulate(acc, op.product(op.stage(a[i]), op.stage(w[i])));
+                }
+                op.finish(op.accumulate(acc, op.stage_rounded(bias)))
+            });
+            assert_eq!(
+                got.to_bits(),
+                want.to_bits(),
+                "{}: int chain {got} vs f32 chain {want}",
+                fmt.id()
+            );
+        });
+    }
+
+    /// Worst-case magnitudes at both lane boundaries: all-max operand
+    /// vectors drive every intermediate to its peak — debug-build
+    /// overflow checks fail loudly here if the width bounds were wrong.
+    #[test]
+    fn worst_case_magnitudes_stay_in_lane_at_the_boundaries() {
+        for (l, r) in [(7u32, 0u32), (0, 7), (4, 3), (12, 0), (0, 12), (6, 6)] {
+            let fmt = Format::fixed(l, r);
+            let q = Quantizer::new(&fmt);
+            let p = PackedOp::for_format(&fmt).unwrap();
+            let max = q.q(f32::MAX); // the format's max grid point
+            for k in [1usize, 2, 64, 300] {
+                for sign in [1.0f32, -1.0] {
+                    let a = vec![max; k];
+                    let w = vec![sign * max; k];
+                    let mut want = 0.0f32;
+                    for i in 0..k {
+                        want = q.q(want + q.q(a[i] * w[i]));
+                    }
+                    let got = crate::with_packed_op!(&p, op => {
+                        let mut acc = AccInt::ZERO;
+                        for i in 0..k {
+                            acc = op.accumulate(
+                                acc,
+                                op.product(op.stage(a[i]), op.stage(w[i])),
+                            );
+                        }
+                        op.finish(acc)
+                    });
+                    assert_eq!(
+                        got.to_bits(),
+                        want.to_bits(),
+                        "fixed:l{l}r{r} k={k} sign={sign}"
+                    );
+                }
+            }
+        }
+    }
+
+    /// Signed zero: `-0.0` grid points stage to integer 0 and the chain
+    /// finishes at `+0.0`, exactly like the f32 chain (whose
+    /// accumulator never goes negative-zero: `+0 + -0 = +0`).
+    #[test]
+    fn negative_zero_stages_to_integer_zero() {
+        let fmt = Format::fixed(4, 4);
+        let q = Quantizer::new(&fmt);
+        let p = PackedOp::for_format(&fmt).unwrap();
+        crate::with_packed_op!(&p, op => {
+            assert_eq!(op.stage(-0.0), 0);
+            assert_eq!(op.stage_rounded(-0.03), 0, "q(-0.03) = -0.0 is integer 0");
+            assert_eq!(q.q(-0.03).to_bits(), (-0.0f32).to_bits());
+            let acc = op.accumulate(AccInt::ZERO, op.product(op.stage(-0.0), op.stage(1.0)));
+            assert_eq!(op.finish(acc).to_bits(), 0.0f32.to_bits());
+        });
+    }
+}

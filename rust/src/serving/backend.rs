@@ -128,6 +128,11 @@ pub struct NativeBackend {
     /// entries are keyed by resolved format, so sessions share them
     /// (DESIGN.md §Storage)
     store: Arc<WeightStore>,
+    /// run packed-domain kernels where the router admits them
+    /// (DESIGN.md §Packed execution); off = the staged f32 tier, the
+    /// pre-existing behaviour.  Bit-identical either way — the flag
+    /// trades weight-memory traffic, never numerics.
+    packed_exec: bool,
 }
 
 impl NativeBackend {
@@ -140,7 +145,23 @@ impl NativeBackend {
 
     /// A backend staging from a shared [`WeightStore`].
     pub fn with_store(net: Arc<Network>, store: Arc<WeightStore>) -> NativeBackend {
-        NativeBackend { net, engine: Engine::new(), table: None, store }
+        NativeBackend { net, engine: Engine::new(), table: None, store, packed_exec: false }
+    }
+
+    /// Builder: enable (or disable) packed-domain execution for every
+    /// spec this backend runs.  Invalidates the memoized table — the
+    /// packed router runs at resolve time.
+    pub fn with_packed_exec(mut self, packed_exec: bool) -> NativeBackend {
+        if self.packed_exec != packed_exec {
+            self.table = None;
+        }
+        self.packed_exec = packed_exec;
+        self
+    }
+
+    /// Whether this backend executes from packed codes where admitted.
+    pub fn packed_exec(&self) -> bool {
+        self.packed_exec
     }
 
     /// The weight store this backend stages from.
@@ -155,7 +176,7 @@ impl NativeBackend {
             None => true,
         };
         if stale {
-            let table = QuantTable::resolve(&self.net, spec)?;
+            let table = QuantTable::resolve_for(&self.net, spec, self.packed_exec)?;
             self.table = Some((spec.clone(), table));
         }
         Ok(())
@@ -266,11 +287,16 @@ pub(crate) fn make_factory(
     spec: PrecisionSpec,
     kind: BackendKind,
     store: Arc<WeightStore>,
+    packed_exec: bool,
 ) -> BackendFactory {
+    // packed execution is a native-engine concept: the AOT executables
+    // hold weights on-device in their own layout, so the flag only
+    // shapes native backends (the serve CLI notes this for --backend
+    // pjrt)
     Box::new(move || match kind {
-        BackendKind::Native => {
-            Ok(Box::new(NativeBackend::with_store(net, store)) as Box<dyn Backend>)
-        }
+        BackendKind::Native => Ok(Box::new(
+            NativeBackend::with_store(net, store).with_packed_exec(packed_exec),
+        ) as Box<dyn Backend>),
         BackendKind::Pjrt => pjrt_backend(&net, &dir, batch, &spec),
         BackendKind::Auto => match pjrt_backend(&net, &dir, batch, &spec) {
             Ok(b) => Ok(b),
@@ -279,7 +305,9 @@ pub(crate) fn make_factory(
                     "(PJRT unavailable for {} — serving on the native engine: {e:#})",
                     net.name
                 );
-                Ok(Box::new(NativeBackend::with_store(net, store)) as Box<dyn Backend>)
+                Ok(Box::new(
+                    NativeBackend::with_store(net, store).with_packed_exec(packed_exec),
+                ) as Box<dyn Backend>)
             }
         },
     })

@@ -67,9 +67,10 @@ impl GatewayStats {
     /// gateway-opened sessions).
     pub fn render(&self) -> String {
         let mut out = format!(
-            "{:<32} {:>8} {:>9} {:>8} {:>9} {:>7} {:>10} {:>10} {:>12}\n",
+            "{:<32} {:>8} {:>6} {:>9} {:>8} {:>9} {:>7} {:>10} {:>10} {:>12}\n",
             "session",
             "backend",
+            "exec",
             "requests",
             "batches",
             "req/batch",
@@ -85,9 +86,10 @@ impl GatewayStats {
                 None => "-".to_string(),
             };
             out.push_str(&format!(
-                "{:<32} {:>8} {:>9} {:>8} {:>9.1} {:>6.1}% {:>8.2}ms {:>8.2}ms {:>12}\n",
+                "{:<32} {:>8} {:>6} {:>9} {:>8} {:>9.1} {:>6.1}% {:>8.2}ms {:>8.2}ms {:>12}\n",
                 key.to_string(),
                 s.backend,
+                if s.packed_exec { "packed" } else { "staged" },
                 s.requests,
                 s.batches,
                 s.requests as f64 / s.batches.max(1) as f64,

@@ -103,6 +103,9 @@ pub struct SessionStats {
     /// ONE store per zoo, so every session reports the same shared
     /// totals (DESIGN.md §Storage).
     pub store: Option<StoreStats>,
+    /// whether this session was opened with packed-domain execution
+    /// (`SessionOptions::packed_exec`; DESIGN.md §Packed execution)
+    pub packed_exec: bool,
 }
 
 /// Sliding-window size for the queue-latency percentiles.
@@ -144,6 +147,7 @@ impl StatsCell {
                 p50_queue_ms: 0.0,
                 p99_queue_ms: 0.0,
                 store: self.store,
+                packed_exec: false, // the Session overrides from its options
             },
             self.queue_lat_s.clone(),
         )
@@ -189,6 +193,11 @@ pub struct SessionOptions {
     /// from this for all its sessions; a standalone
     /// [`Session::open_with`] gets its own.
     pub weight_budget: Option<usize>,
+    /// execute from the store's bit-packed codes where the packed
+    /// router admits a layer (`--packed-exec`; DESIGN.md §Packed
+    /// execution).  Bit-identical to staged execution by contract;
+    /// native backends only (PJRT executables hold weights on-device).
+    pub packed_exec: bool,
 }
 
 impl Default for SessionOptions {
@@ -197,6 +206,7 @@ impl Default for SessionOptions {
             batch: 0,
             max_wait: Duration::from_millis(5),
             weight_budget: None,
+            packed_exec: false,
         }
     }
 }
@@ -221,6 +231,10 @@ pub struct Session {
     input_len: usize,
     classes: usize,
     stats: Arc<Mutex<StatsCell>>,
+    /// whether this session was opened with packed-domain execution
+    /// (false for [`Session::with_factory`] — custom factories decide
+    /// their backend's configuration themselves)
+    packed_exec: bool,
 }
 
 impl Session {
@@ -266,9 +280,18 @@ impl Session {
         // fail malformed plans at open time, not on the first request
         spec.resolve(&network)?;
         let batch = if opts.batch == 0 { zoo.batch } else { opts.batch };
-        let factory =
-            make_factory(network.clone(), zoo.dir.clone(), batch, spec.clone(), kind, store);
-        Ok(Self::with_factory(network, spec, batch, opts.max_wait, factory))
+        let factory = make_factory(
+            network.clone(),
+            zoo.dir.clone(),
+            batch,
+            spec.clone(),
+            kind,
+            store,
+            opts.packed_exec,
+        );
+        let mut session = Self::with_factory(network, spec, batch, opts.max_wait, factory);
+        session.packed_exec = opts.packed_exec;
+        Ok(session)
     }
 
     /// Advanced constructor: run on a caller-supplied backend factory
@@ -304,7 +327,18 @@ impl Session {
             input_len: h * w * c,
             classes,
             stats,
+            packed_exec: false,
         }
+    }
+
+    /// Annotate a [`Session::with_factory`] session whose custom
+    /// factory builds packed-exec backends, so the serving stats
+    /// ([`SessionStats::packed_exec`], the gateway `exec` column)
+    /// report the lane truthfully.  [`Session::open_in`] sets this
+    /// from its [`SessionOptions`] automatically.
+    pub fn with_packed_exec(mut self, packed_exec: bool) -> Session {
+        self.packed_exec = packed_exec;
+        self
     }
 
     /// The `(network, precision spec)` pair this session serves.
@@ -383,6 +417,7 @@ impl Session {
         let (p50, p99) = window_percentiles_ms(lats);
         stats.p50_queue_ms = p50;
         stats.p99_queue_ms = p99;
+        stats.packed_exec = self.packed_exec;
         stats
     }
 

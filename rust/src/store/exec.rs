@@ -1,0 +1,582 @@
+//! Packed-domain execution: GEMM kernels that compute directly from
+//! [`PackedTensor`] codes (DESIGN.md §Packed execution).
+//!
+//! PR 5's store realized the paper's *storage* claim; this module makes
+//! the narrow representation the **execution** representation too: the
+//! weight stream a kernel reads from memory is the packed bitstream
+//! itself, cutting weight-memory traffic by the bit-width ratio the
+//! analytical `hw::speedup` model prices (PAPER.md §4,
+//! `bench_harness::suite` measures the realized ratio).
+//!
+//! Two strategies, selected statically per layer by [`route`]:
+//!
+//! * **Integer MAC chain** ([`gemm_packed_int`]) — fixed formats with
+//!   `l + r ≤ 12` whose *activations are on the same grid* run the
+//!   whole serial-k chain in i16/i32 grid units with one rescale per
+//!   output element; bit-exactness is by the bounds derived in
+//!   [`crate::numerics::PackedOp`]'s module docs.
+//! * **Decode-LUT MAC** ([`gemm_packed_lut`]) — any format whose code
+//!   space is LUT-sized (`width ≤ `[`LUT_MAX_WIDTH`]) decodes each
+//!   weight code through a per-format table fused into the f32 MAC
+//!   loop; bit-exactness is by the codec contract (`decode ≡
+//!   quantize_slice`, pinned by the golden vectors).
+//!
+//! Everything else — raw-carrier formats, `Format::SINGLE`/direct
+//! layers, integer-eligible layers whose upstream activations are NOT
+//! on the grid — routes to [`Route::Staged`], the pre-existing f32
+//! tier.  **Bit-exactness versus that staged path is the non-negotiable
+//! contract**: the router never lets a format that cannot reproduce the
+//! serial-k f32 chain reach a packed kernel (`tests/packed_exec.rs`
+//! pins the decisions).
+
+use std::sync::Arc;
+
+use crate::formats::Format;
+use crate::numerics::{AccInt, PackedOp, QFixedInt, QuantOp};
+use crate::store::PackedTensor;
+
+/// Mirror of the engine's blocking (nn::engine `GEMM_MR`/`GEMM_NC`):
+/// the packed kernels tile identically so their per-element serial-k
+/// chains — the only order that matters for bit-exactness — line up
+/// with `gemm_q`'s, and their cache behaviour is comparable in the
+/// bench suite.
+const GEMM_MR: usize = 8;
+const GEMM_NC: usize = 64;
+
+/// Cap on LUT code width: `2^18` f32 entries = 1 MiB per table — wide
+/// enough for the paper's headline `fixed:l8r8` (width 18) while
+/// keeping tables L2-resident.
+pub const LUT_MAX_WIDTH: u32 = 18;
+
+/// Where one layer's GEMM executes.  Chosen statically at resolve time
+/// ([`route`]); formats that cannot meet the bit-exactness contract on
+/// a packed lane are routed to [`Route::Staged`], never approximated.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Route {
+    /// Integer MAC chain, i16 lanes (`l + r ≤ 7`, on-grid upstream).
+    Int16,
+    /// Integer MAC chain, i32 lanes (`l + r ≤ 12`, on-grid upstream).
+    Int32,
+    /// Per-format decode LUT fused into the f32 MAC loop.
+    Lut,
+    /// The kernel-ready f32 tier (the pre-existing staged path).
+    Staged,
+}
+
+/// The static router.  `direct` is the engine's identity-staging fast
+/// path (`Format::SINGLE` over clean weights — no packed tier exists);
+/// `upstream_on_grid` certifies every activation entering the layer is
+/// an output of the layer's own quantizer (same grid), the premise the
+/// integer chain's exactness proof needs.  Off-grid activations still
+/// execute packed — through the LUT lane, whose proof needs nothing
+/// from the activations.
+pub fn route(fmt: &Format, direct: bool, upstream_on_grid: bool) -> Route {
+    if direct {
+        return Route::Staged;
+    }
+    if upstream_on_grid {
+        if let Some(op) = PackedOp::for_format(fmt) {
+            return match op {
+                PackedOp::I16(_) => Route::Int16,
+                PackedOp::I32(_) => Route::Int32,
+            };
+        }
+    }
+    if PackedTensor::bits_per_value(fmt) <= LUT_MAX_WIDTH {
+        Route::Lut
+    } else {
+        Route::Staged // raw carrier / wider than any feasible LUT
+    }
+}
+
+/// One layer's resolved execution strategy — the router's decision plus
+/// the artifacts the kernel needs (the integer op, or the decode
+/// table).  Carried per quantized layer by `nn::QuantTable` when packed
+/// execution is enabled; [`PackedPlan::Staged`] is both the default and
+/// the dynamic fallback when the store cannot supply the packed tier.
+#[derive(Clone, Debug, Default)]
+pub enum PackedPlan {
+    /// Execute from the kernel-ready f32 tier.
+    #[default]
+    Staged,
+    /// Integer MAC chain on the packed codes.
+    Int(PackedOp),
+    /// Decode-LUT MAC on the packed codes.
+    Lut(Arc<Vec<f32>>),
+}
+
+impl PackedPlan {
+    /// Build the plan [`route`] picks for one layer.  `lut` supplies
+    /// (and memoizes) the decode table when the LUT lane is chosen —
+    /// tables depend only on the format, so callers share them across
+    /// layers.
+    pub fn for_layer(
+        fmt: &Format,
+        direct: bool,
+        upstream_on_grid: bool,
+        lut: impl FnOnce() -> Arc<Vec<f32>>,
+    ) -> PackedPlan {
+        match route(fmt, direct, upstream_on_grid) {
+            Route::Staged => PackedPlan::Staged,
+            Route::Int16 | Route::Int32 => {
+                PackedPlan::Int(PackedOp::for_format(fmt).expect("router checked the format"))
+            }
+            Route::Lut => PackedPlan::Lut(lut()),
+        }
+    }
+
+    /// Stats/CLI label (`staged` / `int16` / `int32` / `lut`).
+    pub fn label(&self) -> &'static str {
+        match self {
+            PackedPlan::Staged => "staged",
+            PackedPlan::Int(op) => op.label(),
+            PackedPlan::Lut(_) => "lut",
+        }
+    }
+
+    pub fn is_staged(&self) -> bool {
+        matches!(self, PackedPlan::Staged)
+    }
+}
+
+/// Integer-lane scratch for one accumulator width.
+#[derive(Default)]
+pub struct IntLanes<A> {
+    /// staged activation grid integers (m × k)
+    a: Vec<A>,
+    /// decoded weight integers for the current n-tile (k × nw)
+    wblk: Vec<A>,
+    /// staged bias grid integers (n)
+    bias: Vec<A>,
+}
+
+/// Reusable scratch for the packed kernels — owned by the engine so a
+/// warm forward allocates nothing (the `act_a`/`wq` discipline).
+#[derive(Default)]
+pub struct ExecScratch {
+    i16: IntLanes<i16>,
+    i32: IntLanes<i32>,
+    /// decoded f32 weights for the current n-tile (k × nw) — LUT lane
+    wblk_f: Vec<f32>,
+    /// quantized bias (n) — LUT lane epilogue (`add_bias_q` semantics)
+    bias_f: Vec<f32>,
+}
+
+/// Selects the scratch lane matching an accumulator width — the
+/// `ExecScratch` end of [`AccInt`] (kept here so `numerics` stays
+/// independent of the store).
+pub trait HasLanes: AccInt {
+    fn lanes(s: &mut ExecScratch) -> &mut IntLanes<Self>
+    where
+        Self: Sized;
+}
+
+impl HasLanes for i16 {
+    fn lanes(s: &mut ExecScratch) -> &mut IntLanes<i16> {
+        &mut s.i16
+    }
+}
+
+impl HasLanes for i32 {
+    fn lanes(s: &mut ExecScratch) -> &mut IntLanes<i32> {
+        &mut s.i32
+    }
+}
+
+/// The integer MAC kernel: `out[m × n] = a[m × k] · w[k × n]` (+ bias)
+/// computed entirely in grid units from the packed bitstream, one
+/// rescale per output element.  Bit-exact to `gemm_q` + `add_bias_q`
+/// over the same operands **when** `a` is on the format's grid and
+/// `l + r ≤ 12` — the router's premises ([`route`]); the arithmetic
+/// stays in `A` throughout, so debug builds verify the width bounds.
+///
+/// `a` values of exactly zero skip their inner loop: `clamp(acc + 0) ==
+/// acc` is an identity in grid units (`|acc| ≤ M` is an invariant), so
+/// the skip is bit-free — unlike in the f32 chain, where proving
+/// `q(acc + q(av·wv))` inert requires reasoning about signed zeros.
+pub fn gemm_packed_int<A: HasLanes>(
+    a: &[f32],
+    w: &PackedTensor,
+    bias: Option<&[f32]>,
+    out: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    op: &QFixedInt<A>,
+    scratch: &mut ExecScratch,
+) {
+    debug_assert_eq!(w.len(), k * n, "packed weight shape");
+    debug_assert!(a.len() >= m * k && out.len() >= m * n);
+    let lanes = A::lanes(scratch);
+    // stage activations to grid integers once per call (exact: the
+    // router guarantees they are outputs of this layer's quantizer)
+    lanes.a.clear();
+    lanes.a.extend(a[..m * k].iter().map(|&x| op.stage(x)));
+    lanes.bias.clear();
+    if let Some(b) = bias {
+        // add_bias_q's "quantize the bias once" staging, in grid units
+        lanes.bias.extend(b[..n].iter().map(|&x| op.stage_rounded(x)));
+    }
+    for n0 in (0..n).step_by(GEMM_NC) {
+        let nw = GEMM_NC.min(n - n0);
+        // decode this k × nw code block once; this bitstream read is
+        // the kernel's only weight-memory traffic
+        lanes.wblk.clear();
+        for ki in 0..k {
+            let row = ki * n + n0;
+            lanes
+                .wblk
+                .extend((row..row + nw).map(|i| A::from_i64(w.fixed_int_at(i))));
+        }
+        for m0 in (0..m).step_by(GEMM_MR) {
+            let mh = GEMM_MR.min(m - m0);
+            let mut acc = [[A::ZERO; GEMM_NC]; GEMM_MR];
+            for ki in 0..k {
+                let wrow = &lanes.wblk[ki * nw..ki * nw + nw];
+                for (mi, arow) in acc.iter_mut().enumerate().take(mh) {
+                    let av = lanes.a[(m0 + mi) * k + ki];
+                    if av == A::ZERO {
+                        continue; // exact: clamp(acc + 0) == acc
+                    }
+                    for (o, &wv) in arow[..nw].iter_mut().zip(wrow) {
+                        *o = op.accumulate(*o, op.product(av, wv));
+                    }
+                }
+            }
+            for mi in 0..mh {
+                let off = (m0 + mi) * n + n0;
+                for (j, o) in out[off..off + nw].iter_mut().enumerate() {
+                    let mut v = acc[mi][j];
+                    if !lanes.bias.is_empty() {
+                        v = op.accumulate(v, lanes.bias[n0 + j]);
+                    }
+                    *o = op.finish(v);
+                }
+            }
+        }
+    }
+}
+
+/// The decode-LUT kernel: the same blocked serial-k f32 chain as
+/// `gemm_q` + `add_bias_q`, but each weight is read as its narrow code
+/// and decoded through `lut` (`lut[code]` is bit-exact to the staged
+/// f32 weight by the codec contract) — so the result is bit-identical
+/// to the staged path for ANY format and ANY activations, on-grid or
+/// not.  No zero-skip here: the f32 chain's signed-zero algebra is kept
+/// exactly as `gemm_q` runs it.
+pub fn gemm_packed_lut<Q: QuantOp>(
+    a: &[f32],
+    w: &PackedTensor,
+    lut: &[f32],
+    bias: Option<&[f32]>,
+    out: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    q: &Q,
+    scratch: &mut ExecScratch,
+) {
+    debug_assert_eq!(w.len(), k * n, "packed weight shape");
+    debug_assert!(a.len() >= m * k && out.len() >= m * n);
+    debug_assert_eq!(lut.len(), 1usize << w.width(), "LUT covers the code space");
+    scratch.bias_f.clear();
+    if let Some(b) = bias {
+        scratch.bias_f.extend(b[..n].iter().map(|&x| q.q(x)));
+    }
+    for n0 in (0..n).step_by(GEMM_NC) {
+        let nw = GEMM_NC.min(n - n0);
+        scratch.wblk_f.clear();
+        for ki in 0..k {
+            let row = ki * n + n0;
+            scratch
+                .wblk_f
+                .extend((row..row + nw).map(|i| lut[w.code_at(i) as usize]));
+        }
+        for m0 in (0..m).step_by(GEMM_MR) {
+            let mh = GEMM_MR.min(m - m0);
+            for mi in 0..mh {
+                let off = (m0 + mi) * n + n0;
+                out[off..off + nw].fill(0.0);
+            }
+            for ki in 0..k {
+                let wrow = &scratch.wblk_f[ki * nw..ki * nw + nw];
+                for mi in 0..mh {
+                    let av = a[(m0 + mi) * k + ki];
+                    let off = (m0 + mi) * n + n0;
+                    for (o, &wv) in out[off..off + nw].iter_mut().zip(wrow) {
+                        *o = q.q(*o + q.q(av * wv));
+                    }
+                }
+            }
+            if !scratch.bias_f.is_empty() {
+                for mi in 0..mh {
+                    let off = (m0 + mi) * n + n0;
+                    for (j, o) in out[off..off + nw].iter_mut().enumerate() {
+                        *o = q.q(*o + scratch.bias_f[n0 + j]);
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::numerics::{quantize_slice, Quantizer};
+    use crate::testing::prop::{arb_format, run_prop, Gen};
+    use crate::with_packed_op;
+
+    /// The staged-f32 reference chain the kernels must reproduce:
+    /// serial increasing-k `q(acc + q(a·w))` per output element, then
+    /// the `add_bias_q` step — `gemm_q`'s pinned semantics.
+    fn reference(
+        a: &[f32],
+        wq: &[f32],
+        bias: Option<&[f32]>,
+        m: usize,
+        k: usize,
+        n: usize,
+        q: &Quantizer,
+    ) -> Vec<f32> {
+        let mut out = vec![0.0f32; m * n];
+        for mi in 0..m {
+            for ni in 0..n {
+                let mut acc = 0.0f32;
+                for ki in 0..k {
+                    acc = q.q(acc + q.q(a[mi * k + ki] * wq[ki * n + ni]));
+                }
+                if let Some(b) = bias {
+                    acc = q.q(acc + q.q(b[ni]));
+                }
+                out[mi * n + ni] = acc;
+            }
+        }
+        out
+    }
+
+    fn assert_bits(got: &[f32], want: &[f32], ctx: &str) {
+        assert_eq!(got.len(), want.len(), "{ctx}");
+        for i in 0..want.len() {
+            assert_eq!(
+                got[i].to_bits(),
+                want[i].to_bits(),
+                "{ctx} elem {i}: {} vs {}",
+                got[i],
+                want[i]
+            );
+        }
+    }
+
+    #[test]
+    fn router_decision_table() {
+        use Route::*;
+        for (fmt, direct, upstream, want) in [
+            // integer lanes: fixed, on-grid upstream, l + r thresholds
+            ("fixed:l0r2", false, true, Int16),
+            ("fixed:l1r3", false, true, Int16),
+            ("fixed:l3r3", false, true, Int16),
+            ("fixed:l4r4", false, true, Int32),
+            ("fixed:l12r0", false, true, Int32),
+            // off-grid upstream: integer premise fails → LUT
+            ("fixed:l0r2", false, false, Lut),
+            ("fixed:l4r4", false, false, Lut),
+            // t > 12 never integer; width ≤ 18 → LUT either way
+            ("fixed:l8r8", false, true, Lut),
+            ("fixed:l12r2", false, true, Lut),
+            ("fixed:l2r12", false, false, Lut),
+            // floats: LUT when the code space fits
+            ("float:m0e5", false, true, Lut),
+            ("float:m7e6", false, false, Lut),
+            ("float:m10e3", false, true, Lut),
+            // statically staged: raw carrier, 32-bit codes, direct
+            ("float:m23e8", false, true, Staged),
+            ("fixed:l16r16", false, true, Staged),
+            ("fixed:l30r30", false, false, Staged),
+            ("float:m7e6", true, true, Staged),
+            ("float:m23e8", true, true, Staged),
+        ] {
+            let f = Format::parse(fmt).unwrap();
+            let got = route(&f, direct, upstream);
+            assert_eq!(got, want, "{fmt} direct={direct} upstream={upstream}");
+        }
+    }
+
+    #[test]
+    fn plan_labels_follow_routes() {
+        let lut = |f: &Format| {
+            let f = *f;
+            move || Arc::new(PackedTensor::decode_table(&f, LUT_MAX_WIDTH).unwrap())
+        };
+        for (fmt, upstream, want) in [
+            ("fixed:l1r3", true, "int16"),
+            ("fixed:l4r4", true, "int32"),
+            ("fixed:l8r8", true, "lut"),
+            ("float:m7e6", true, "lut"),
+            ("float:m23e8", true, "staged"),
+            ("fixed:l16r16", true, "staged"),
+        ] {
+            let f = Format::parse(fmt).unwrap();
+            let plan = PackedPlan::for_layer(&f, false, upstream, lut(&f));
+            assert_eq!(plan.label(), want, "{fmt}");
+        }
+        assert!(PackedPlan::for_layer(&Format::SINGLE, true, true, || unreachable!()).is_staged());
+    }
+
+    /// Both kernels against the serial-k reference across random
+    /// shapes, formats, and operand distributions — ragged tiles
+    /// included (m, n, k straddle the 8/64 blocking).
+    #[test]
+    fn prop_packed_kernels_bitexact_vs_reference() {
+        run_prop("packed_kernels_vs_reference", 120, |g| {
+            let fmt = arb_format(g);
+            let q = Quantizer::new(&fmt);
+            let (m, k, n) = (g.usize_in(1, 17), g.usize_in(1, 40), g.usize_in(1, 70));
+            // activations ON the grid (the integer lane's premise); the
+            // LUT lane must hold for off-grid too — exercised at the
+            // engine level, where inputs are staged by a DIFFERENT
+            // layer's quantizer
+            let mut a: Vec<f32> = (0..m * k).map(|_| g.f32_normal() * 4.0).collect();
+            quantize_slice(&mut a, &q);
+            let wraw: Vec<f32> = (0..k * n).map(|_| g.f32_normal() * 2.0).collect();
+            let bias: Vec<f32> = (0..n).map(|_| g.f32_normal()).collect();
+            let packed = PackedTensor::pack(&wraw, &fmt);
+            let mut wq = wraw.clone();
+            quantize_slice(&mut wq, &q);
+            let want = reference(&a, &wq, Some(&bias), m, k, n, &q);
+
+            let mut scratch = ExecScratch::default();
+            let mut out = vec![0.0f32; m * n];
+            match route(&fmt, false, true) {
+                Route::Int16 | Route::Int32 => {
+                    let op = PackedOp::for_format(&fmt).unwrap();
+                    with_packed_op!(&op, o => gemm_packed_int(
+                        &a, &packed, Some(&bias), &mut out, m, k, n, o, &mut scratch,
+                    ));
+                    assert_bits(&out, &want, &format!("{} int", fmt.id()));
+                }
+                Route::Lut => {}
+                Route::Staged => return, // raw carrier: no packed lane
+            }
+            // every LUT-sized format also runs the LUT lane
+            if let Some(lut) = PackedTensor::decode_table(&fmt, LUT_MAX_WIDTH) {
+                let mut out = vec![0.0f32; m * n];
+                gemm_packed_lut(
+                    &a, &packed, &lut, Some(&bias), &mut out, m, k, n, &q, &mut scratch,
+                );
+                assert_bits(&out, &want, &format!("{} lut", fmt.id()));
+            }
+        });
+    }
+
+    /// The zero-skip is exact: activation rows dominated by ±0.0
+    /// (including -0.0, which survives relu) change nothing.
+    #[test]
+    fn int_kernel_zero_skip_is_exact() {
+        let fmt = Format::fixed(4, 4);
+        let q = Quantizer::new(&fmt);
+        let (m, k, n) = (3, 9, 5);
+        let mut a = vec![0.0f32; m * k];
+        a[4] = -0.0;
+        a[9] = 1.5;
+        a[20] = -0.0625;
+        let wraw: Vec<f32> = (0..k * n).map(|i| ((i * 7 % 13) as f32 - 6.0) * 0.75).collect();
+        let packed = PackedTensor::pack(&wraw, &fmt);
+        let mut wq = wraw.clone();
+        quantize_slice(&mut wq, &q);
+        let want = reference(&a, &wq, None, m, k, n, &q);
+        let op = PackedOp::for_format(&fmt).unwrap();
+        let mut out = vec![0.0f32; m * n];
+        with_packed_op!(&op, o => gemm_packed_int(
+            &a, &packed, None, &mut out, m, k, n, o, &mut ExecScratch::default(),
+        ));
+        assert_bits(&out, &want, "zero-skip");
+    }
+
+    /// Saturation pressure at both lane boundaries: all-max operands
+    /// drive every intermediate to its peak (the debug-build overflow
+    /// proof) and the chain must still match the f32 reference exactly.
+    #[test]
+    fn int_kernel_worst_case_magnitude_at_lane_boundaries() {
+        for (l, r) in [(7u32, 0u32), (0, 7), (6, 6), (0, 12), (12, 0)] {
+            let fmt = Format::fixed(l, r);
+            let q = Quantizer::new(&fmt);
+            let max = q.q(f32::MAX);
+            let (m, k, n) = (2, 130, 3);
+            let a = vec![max; m * k];
+            let wraw: Vec<f32> = (0..k * n)
+                .map(|i| if i % 2 == 0 { max } else { -max })
+                .collect();
+            let packed = PackedTensor::pack(&wraw, &fmt);
+            let mut wq = wraw.clone();
+            quantize_slice(&mut wq, &q);
+            let bias = vec![max; n];
+            let want = reference(&a, &wq, Some(&bias), m, k, n, &q);
+            let op = PackedOp::for_format(&fmt).unwrap();
+            let mut out = vec![0.0f32; m * n];
+            with_packed_op!(&op, o => gemm_packed_int(
+                &a, &packed, Some(&bias), &mut out, m, k, n, o, &mut ExecScratch::default(),
+            ));
+            assert_bits(&out, &want, &format!("fixed:l{l}r{r} worst case"));
+        }
+    }
+
+    /// LUT lane with OFF-grid activations (a coarser upstream grid than
+    /// the layer's own): the integer premise fails here, the LUT proof
+    /// does not need it.
+    #[test]
+    fn lut_kernel_handles_off_grid_activations() {
+        let fmt = Format::float(4, 4);
+        let q = Quantizer::new(&fmt);
+        let (m, k, n) = (4, 11, 6);
+        // raw, unquantized activations — deliberately off every grid
+        let a: Vec<f32> = (0..m * k).map(|i| ((i as f32) * 0.731).sin() * 3.3).collect();
+        let wraw: Vec<f32> = (0..k * n).map(|i| ((i as f32) * 0.517).cos()).collect();
+        let packed = PackedTensor::pack(&wraw, &fmt);
+        let mut wq = wraw.clone();
+        quantize_slice(&mut wq, &q);
+        let bias: Vec<f32> = (0..n).map(|i| i as f32 * 0.21 - 0.5).collect();
+        let want = reference(&a, &wq, Some(&bias), m, k, n, &q);
+        let lut = PackedTensor::decode_table(&fmt, LUT_MAX_WIDTH).unwrap();
+        let mut out = vec![0.0f32; m * n];
+        gemm_packed_lut(
+            &a, &packed, &lut, Some(&bias), &mut out, m, k, n, &q, &mut ExecScratch::default(),
+        );
+        assert_bits(&out, &want, "off-grid lut");
+    }
+
+    /// Scratch reuse across calls of different shapes leaves no stale
+    /// state behind (the engine holds ONE ExecScratch across layers).
+    #[test]
+    fn scratch_reuse_across_shapes_and_lanes() {
+        let mut scratch = ExecScratch::default();
+        let mut g = Gen::new(0xacc, 1.0);
+        for case in 0..12 {
+            let fmt = if case % 2 == 0 {
+                Format::fixed(3, 3)
+            } else {
+                Format::fixed(5, 5)
+            };
+            let q = Quantizer::new(&fmt);
+            let (m, k, n) = (g.usize_in(1, 9), g.usize_in(1, 30), g.usize_in(1, 80));
+            let mut a: Vec<f32> = (0..m * k).map(|_| g.f32_normal() * 3.0).collect();
+            quantize_slice(&mut a, &q);
+            let wraw: Vec<f32> = (0..k * n).map(|_| g.f32_normal()).collect();
+            let packed = PackedTensor::pack(&wraw, &fmt);
+            let mut wq = wraw.clone();
+            quantize_slice(&mut wq, &q);
+            let want = reference(&a, &wq, None, m, k, n, &q);
+            let op = PackedOp::for_format(&fmt).unwrap();
+            let mut out = vec![0.0f32; m * n];
+            with_packed_op!(&op, o => gemm_packed_int(
+                &a, &packed, None, &mut out, m, k, n, o, &mut scratch,
+            ));
+            assert_bits(&out, &want, &format!("reuse case {case}"));
+            // interleave a LUT call over the same scratch
+            let lut = PackedTensor::decode_table(&fmt, LUT_MAX_WIDTH).unwrap();
+            let mut out2 = vec![0.0f32; m * n];
+            gemm_packed_lut(&a, &packed, &lut, None, &mut out2, m, k, n, &q, &mut scratch);
+            assert_bits(&out2, &want, &format!("reuse lut case {case}"));
+        }
+    }
+}

@@ -35,9 +35,14 @@
 //! network's tensor directly (no copy, no store bytes; see
 //! `nn::QuantTable`).
 
+mod exec;
 mod footprint;
 mod packed;
 
+pub use exec::{
+    gemm_packed_int, gemm_packed_lut, route, ExecScratch, HasLanes, PackedPlan, Route,
+    LUT_MAX_WIDTH,
+};
 pub use footprint::{zoo_size, FootprintRow};
 pub use packed::PackedTensor;
 

@@ -259,6 +259,60 @@ impl PackedTensor {
         out
     }
 
+    /// The raw `width`-bit code of element `i` (the module-docs
+    /// bitstream layout) — the read the packed-domain kernels fuse into
+    /// their MAC loops (store::exec): the weight stream they pull from
+    /// memory is this bitstream, not the f32 tier.
+    #[inline]
+    pub fn code_at(&self, i: usize) -> u64 {
+        debug_assert!(i < self.len);
+        let width = self.width;
+        let mask = if width == 64 { u64::MAX } else { (1u64 << width) - 1 };
+        let bit = i * width as usize;
+        let (w, off) = (bit / 64, (bit % 64) as u32);
+        let mut code = self.words[w] >> off;
+        if off + width > 64 {
+            code |= self.words[w + 1] << (64 - off);
+        }
+        code & mask
+    }
+
+    /// Fixed-codec tensors only: element `i` as its two's-complement
+    /// grid integer `k = y · 2^r` (the `-0.0` sentinel is numerically
+    /// 0).  The packed-int execution lane streams weights through this.
+    #[inline]
+    pub fn fixed_int_at(&self, i: usize) -> i64 {
+        debug_assert!(
+            matches!(Codec::of(&self.fmt), Codec::Fixed { .. }),
+            "fixed_int_at on a {} tensor",
+            self.fmt.id()
+        );
+        let code = self.code_at(i);
+        let width = self.width;
+        let sign_bit = 1u64 << (width - 1);
+        if code & sign_bit == 0 {
+            code as i64
+        } else if code == sign_bit {
+            0 // the -0.0 sentinel: numerically zero
+        } else {
+            (code | !((1u64 << width) - 1)) as i64 // sign-extend
+        }
+    }
+
+    /// The full `code → value` decode table for `fmt`, when the code
+    /// space is LUT-sized (`width ≤ max_width`, and not the raw-carrier
+    /// layout, whose 2^32 codes never are): `table[code]` is bit-exact
+    /// to [`PackedTensor::unpack`] of that code by construction.  Codes
+    /// the encoder never emits decode to unspecified (harmless,
+    /// unreachable) values.
+    pub fn decode_table(fmt: &Format, max_width: u32) -> Option<Vec<f32>> {
+        let codec = Codec::of(fmt);
+        if matches!(codec, Codec::Raw) || codec.width() > max_width {
+            return None;
+        }
+        Some((0u64..1u64 << codec.width()).map(|c| codec.decode(c)).collect())
+    }
+
     pub fn fmt(&self) -> &Format {
         &self.fmt
     }
@@ -453,6 +507,68 @@ mod tests {
                 .collect();
             roundtrip_matches_quantize(&vals, &fmt);
         });
+    }
+
+    /// `code_at` + `decode_table` reproduce `unpack` bit-exactly — the
+    /// LUT execution lane's contract (store::exec reads the bitstream
+    /// through exactly this pair).
+    #[test]
+    fn prop_code_at_through_decode_table_matches_unpack() {
+        run_prop("code_at_lut_vs_unpack", 150, |g| {
+            let fmt = arb_format(g);
+            if PackedTensor::bits_per_value(&fmt) > 18 {
+                assert!(PackedTensor::decode_table(&fmt, 18).is_none(), "{}", fmt.id());
+                return;
+            }
+            let lut = PackedTensor::decode_table(&fmt, 18).unwrap();
+            assert_eq!(lut.len(), 1 << PackedTensor::bits_per_value(&fmt));
+            let vals: Vec<f32> = (0..g.usize_in(1, 64))
+                .map(|_| g.f32_normal() * 2.0f32.powi(g.int_in(-20, 20) as i32))
+                .collect();
+            let p = PackedTensor::pack(&vals, &fmt);
+            let want = p.unpack();
+            for i in 0..p.len() {
+                let got = lut[p.code_at(i) as usize];
+                assert_eq!(
+                    got.to_bits(),
+                    want[i].to_bits(),
+                    "{} elem {i}: lut {got} vs unpack {}",
+                    fmt.id(),
+                    want[i]
+                );
+            }
+        });
+    }
+
+    /// `fixed_int_at` is the decoded value in grid units, with the
+    /// `-0.0` sentinel mapped to numeric 0 — what the integer MAC lane
+    /// streams.
+    #[test]
+    fn fixed_int_at_recovers_grid_integers() {
+        let fmt = Format::fixed(4, 4); // grid k/16, M = 255
+        let vals = [0.5f32, -0.5, 15.9375, -15.9375, 0.0, -0.0, -0.01];
+        let p = PackedTensor::pack(&vals, &fmt);
+        let want: Vec<i64> = vec![8, -8, 255, -255, 0, 0, 0]; // q(-0.01) = -0.0
+        for (i, &w) in want.iter().enumerate() {
+            assert_eq!(p.fixed_int_at(i), w, "elem {i}");
+        }
+        // every decoded grid integer rescales to the unpacked value
+        let unpacked = p.unpack();
+        for i in 0..p.len() {
+            let v = (p.fixed_int_at(i) as f32) / 16.0;
+            assert_eq!(v.to_bits(), (unpacked[i] + 0.0).to_bits(), "elem {i}");
+        }
+    }
+
+    /// The raw-carrier layout has no LUT (2^32 codes), and the width
+    /// cap is honoured.
+    #[test]
+    fn decode_table_bounds() {
+        assert!(PackedTensor::decode_table(&Format::fixed(16, 16), 18).is_none());
+        assert!(PackedTensor::decode_table(&Format::float(23, 8), 18).is_none());
+        assert!(PackedTensor::decode_table(&Format::fixed(8, 8), 17).is_none());
+        let lut = PackedTensor::decode_table(&Format::fixed(8, 8), 18).unwrap();
+        assert_eq!(lut.len(), 1 << 18);
     }
 
     /// Packing already-quantized data is idempotent with packing raw

@@ -1,0 +1,278 @@
+//! Packed-domain execution acceptance (ISSUE 6) — tier-1, fixture
+//! based, no artifacts:
+//!
+//! * the golden 470-vector set replays through the packed kernels
+//!   themselves: every python-normative (input → quantized output)
+//!   pair flows through `gemm_packed_int` / `gemm_packed_lut` as a
+//!   packed weight and must reproduce the staged-f32 serial-k chain
+//!   bit-exactly, while wide-code formats are pinned to the staged
+//!   router decision;
+//! * the router's per-layer assignments are pinned through the
+//!   resolved `QuantTable` (on-grid / off-grid upstream, packed off);
+//! * a packed-exec forward through the real engine is bit-identical
+//!   to the staged forward for every golden format and for random
+//!   formats/plans (property), including the dynamic fallback when a
+//!   zero-budget store rejects the packed tier.
+
+use std::cell::Cell;
+use std::collections::{BTreeMap, BTreeSet};
+use std::sync::Arc;
+
+use precis::formats::{Format, Plan, PrecisionSpec};
+use precis::nn::QuantTable;
+use precis::numerics::{PackedOp, Quantizer};
+use precis::serving::{Backend, NativeBackend};
+use precis::store::{
+    gemm_packed_int, gemm_packed_lut, route, ExecScratch, PackedTensor, Route, WeightStore,
+    LUT_MAX_WIDTH,
+};
+use precis::testing::fixtures::{tiny_conv_network, tiny_network};
+use precis::testing::prop::{arb_format, run_prop};
+use precis::util::json::Json;
+use precis::with_packed_op;
+
+const GOLDEN: &str = include_str!("golden/quant_golden.json");
+
+/// The 13 golden formats — the conformance surface the whole repo pins.
+const GOLDEN_FORMATS: [&str; 13] = [
+    "fixed:l0r2",
+    "fixed:l1r3",
+    "fixed:l4r4",
+    "fixed:l8r8",
+    "fixed:l12r2",
+    "fixed:l2r12",
+    "float:m0e5",
+    "float:m1e2",
+    "float:m2e8",
+    "float:m4e4",
+    "float:m7e6",
+    "float:m10e3",
+    "float:m23e8",
+];
+
+fn hex32(j: &Json, key: &str) -> u32 {
+    let s = j.req(key).unwrap().as_str().unwrap();
+    u32::from_str_radix(s, 16).unwrap_or_else(|e| panic!("bad hex {key}={s:?}: {e}"))
+}
+
+fn assert_bits_eq(got: &[f32], want: &[f32], ctx: &str) {
+    assert_eq!(got.len(), want.len(), "{ctx}: length");
+    for i in 0..want.len() {
+        assert_eq!(
+            got[i].to_bits(),
+            want[i].to_bits(),
+            "{ctx}: elem {i} ({} vs {})",
+            got[i],
+            want[i]
+        );
+    }
+}
+
+/// The staged-f32 chain the packed kernels must reproduce: serial
+/// increasing-k `q(acc + q(a·w))` per output element — `gemm_q`'s
+/// pinned order (no bias here; the golden replay is bias-free).
+fn reference_chain(a: &[f32], wq: &[f32], m: usize, k: usize, n: usize, q: &Quantizer) -> Vec<f32> {
+    let mut out = vec![0.0f32; m * n];
+    for mi in 0..m {
+        for ni in 0..n {
+            let mut acc = 0.0f32;
+            for ki in 0..k {
+                acc = q.q(acc + q.q(a[mi * k + ki] * wq[ki * n + ni]));
+            }
+            out[mi * n + ni] = acc;
+        }
+    }
+    out
+}
+
+/// Satellite 1: the golden differential replay.  Per format, the golden
+/// raw inputs become a packed k×1 weight column and the activations a
+/// one-hot k×k matrix at the representable `q(1.0)` — so output row `i`
+/// runs a full serial-k chain in which golden vector `i` is the single
+/// surviving product.  The packed kernels (integer lane where the
+/// router admits it, LUT lane for every table-sized format) must match
+/// the staged chain built from the PYTHON-normative outputs bit-for-bit
+/// — and the wide-code formats must be pinned to `Route::Staged`.
+#[test]
+fn packed_kernels_replay_golden_vectors_bit_exactly() {
+    let j = Json::parse(GOLDEN).expect("golden JSON parses");
+    let cases = j.req("cases").unwrap().as_arr().unwrap();
+
+    let mut by_fmt: BTreeMap<String, (Vec<f32>, Vec<f32>)> = BTreeMap::new();
+    for case in cases {
+        let id = case.req("fmt").unwrap().as_str().unwrap().to_string();
+        let bucket = by_fmt.entry(id).or_default();
+        bucket.0.push(f32::from_bits(hex32(case, "x")));
+        bucket.1.push(f32::from_bits(hex32(case, "q")));
+    }
+    assert!(by_fmt.len() >= 10, "conformance needs ~10+ formats, have {}", by_fmt.len());
+
+    let (mut checked, mut lut_formats, mut int_formats) = (0usize, 0usize, 0usize);
+    for (id, (xs, wq)) in &by_fmt {
+        let fmt = Format::parse(id).unwrap();
+        let q = Quantizer::new(&fmt);
+        let k = xs.len();
+        let packed = PackedTensor::pack(xs, &fmt);
+        let hot = q.q(1.0);
+        assert!(hot != 0.0, "{id}: fixture needs a representable 1.0-ish activation");
+        let mut a = vec![0.0f32; k * k];
+        for i in 0..k {
+            a[i * k + i] = hot;
+        }
+        let want = reference_chain(&a, wq, k, k, 1, &q);
+
+        let lane = route(&fmt, false, true);
+        if matches!(lane, Route::Int16 | Route::Int32) {
+            let op = PackedOp::for_format(&fmt).expect("integer routes imply a PackedOp");
+            let mut out = vec![0.0f32; k];
+            with_packed_op!(&op, o => gemm_packed_int(
+                &a, &packed, None, &mut out, k, k, 1, o, &mut ExecScratch::default(),
+            ));
+            assert_bits_eq(&out, &want, &format!("{id} integer lane"));
+            int_formats += 1;
+        }
+        match PackedTensor::decode_table(&fmt, LUT_MAX_WIDTH) {
+            Some(lut) => {
+                let mut out = vec![0.0f32; k];
+                gemm_packed_lut(
+                    &a,
+                    &packed,
+                    &lut,
+                    None,
+                    &mut out,
+                    k,
+                    k,
+                    1,
+                    &q,
+                    &mut ExecScratch::default(),
+                );
+                assert_bits_eq(&out, &want, &format!("{id} LUT lane"));
+                lut_formats += 1;
+            }
+            None => {
+                // no packed kernel exists for this code width: the
+                // router must statically pin it to the staged tier
+                assert_eq!(lane, Route::Staged, "{id}: wide codes must route staged");
+            }
+        }
+        checked += xs.len();
+    }
+    assert_eq!(checked, cases.len(), "every golden case must flow through the replay");
+    assert!(lut_formats >= 10, "only {lut_formats} formats ran the LUT lane");
+    assert!(int_formats >= 2, "only {int_formats} formats ran the integer lane");
+}
+
+/// The router's decisions, pinned through the real resolve pass: the
+/// lane each fixture layer gets under uniform specs (on-grid upstream
+/// everywhere), a mixed plan whose second layer sees a FOREIGN upstream
+/// grid (integer premise fails → LUT), and the packed-exec-off default.
+#[test]
+fn router_assignments_pin_through_the_resolved_table() {
+    let net = tiny_conv_network(4);
+    let labels = |spec: &str, packed: bool| {
+        let spec = PrecisionSpec::parse(spec).unwrap();
+        let table = QuantTable::resolve_for(&net, &spec, packed).unwrap();
+        table.packed_labels(&net)
+    };
+    for (spec, c1, fc) in [
+        ("fixed:l0r2", "int16", "int16"),
+        ("fixed:l3r3", "int16", "int16"),
+        ("fixed:l4r4", "int32", "int32"),
+        ("fixed:l12r0", "int32", "int32"),
+        // t = l + r > 12: no exact integer chain; codes are LUT-sized
+        ("fixed:l8r8", "lut", "lut"),
+        ("fixed:l12r2", "lut", "lut"),
+        ("float:m7e6", "lut", "lut"),
+        ("float:m0e5", "lut", "lut"),
+        // raw carrier: no packed tier exists at all
+        ("float:m23e8", "staged", "staged"),
+        // mixed plan: relu/maxpool/flatten carry c1's grid into fc, so
+        // fc's upstream is a foreign grid — the integer premise fails
+        // and the router must fall to the (activation-agnostic) LUT
+        ("plan:c1=fixed:l2r2,fc=fixed:l3r3", "int16", "lut"),
+        // an identity-quantized c1 emits raw f32: fc is off-grid too
+        ("plan:c1=float:m23e8,fc=fixed:l1r2", "staged", "lut"),
+    ] {
+        let got = labels(spec, true);
+        let want = vec![("c1".to_string(), c1), ("fc".to_string(), fc)];
+        assert_eq!(got, want, "{spec}");
+    }
+    // packed exec off (the default): everything stays on the staged
+    // tier — the flag is a strict opt-in
+    for spec in ["fixed:l3r3", "float:m7e6"] {
+        assert!(
+            labels(spec, false).iter().all(|(_, l)| *l == "staged"),
+            "{spec}: packed lanes assigned without the opt-in"
+        );
+    }
+}
+
+/// Every golden format forwards bit-identically through the engine's
+/// packed dispatch, and the matrix collectively exercises all four
+/// lanes (int16 / int32 / lut / staged) end-to-end.
+#[test]
+fn golden_format_forwards_are_bit_identical_across_all_lanes() {
+    let net = tiny_conv_network(6);
+    let x = net.eval_x.slice_rows(0, 6);
+    let mut lanes_seen: BTreeSet<&'static str> = BTreeSet::new();
+    for id in GOLDEN_FORMATS {
+        let spec = PrecisionSpec::parse(id).unwrap();
+        let mut staged = NativeBackend::with_store(net.clone(), Arc::new(WeightStore::unbounded()));
+        let mut packed = NativeBackend::with_store(net.clone(), Arc::new(WeightStore::unbounded()))
+            .with_packed_exec(true);
+        let want = staged.run_spec(&x, &spec).unwrap();
+        let cold = packed.run_spec(&x, &spec).unwrap();
+        let warm = packed.run_spec(&x, &spec).unwrap();
+        assert_bits_eq(cold.data(), want.data(), &format!("{id} cold"));
+        assert_bits_eq(warm.data(), want.data(), &format!("{id} warm"));
+        for (_, lane) in QuantTable::resolve_for(&net, &spec, true).unwrap().packed_labels(&net) {
+            lanes_seen.insert(lane);
+        }
+    }
+    for lane in ["int16", "int32", "lut", "staged"] {
+        assert!(lanes_seen.contains(lane), "golden matrix never exercised the {lane} lane");
+    }
+}
+
+/// Satellite 2 (property): across random formats, plans, and both
+/// fixtures, a packed-exec forward is bit-identical to the staged
+/// forward — and stays so when a zero-budget store rejects every entry,
+/// which forces the engine's dynamic per-layer fallback from the
+/// packed plan to scratch re-staging.
+#[test]
+fn prop_packed_forward_bit_identical_to_staged_engine() {
+    let conv = tiny_conv_network(5);
+    let dense = tiny_network(5);
+    let packed_layers = Cell::new(0usize);
+    run_prop("packed_engine_vs_staged", 50, |g| {
+        let net = if g.bool() { &conv } else { &dense };
+        let x = net.eval_x.slice_rows(0, 5);
+        let spec = if g.bool() {
+            PrecisionSpec::parse(&arb_format(g).id()).unwrap()
+        } else {
+            let names: &[&str] = if Arc::ptr_eq(net, &conv) { &["c1", "fc"] } else { &["fc"] };
+            let fmts: Vec<(String, Format)> =
+                names.iter().map(|n| (n.to_string(), arb_format(g))).collect();
+            PrecisionSpec::from(Plan::explicit(fmts).unwrap())
+        };
+        let mut staged = NativeBackend::with_store(net.clone(), Arc::new(WeightStore::unbounded()));
+        let mut packed = NativeBackend::with_store(net.clone(), Arc::new(WeightStore::unbounded()))
+            .with_packed_exec(true);
+        let mut rejected =
+            NativeBackend::with_store(net.clone(), Arc::new(WeightStore::with_budget(0)))
+                .with_packed_exec(true);
+        let want = staged.run_spec(&x, &spec).unwrap();
+        for round in 0..2 {
+            let got = packed.run_spec(&x, &spec).unwrap();
+            assert_bits_eq(got.data(), want.data(), &format!("{} round {round}", spec.id()));
+            let fb = rejected.run_spec(&x, &spec).unwrap();
+            assert_bits_eq(fb.data(), want.data(), &format!("{} fallback {round}", spec.id()));
+        }
+        let table = QuantTable::resolve_for(net, &spec, true).unwrap();
+        let n = table.packed_labels(net).iter().filter(|(_, l)| *l != "staged").count();
+        packed_layers.set(packed_layers.get() + n);
+    });
+    // the run must actually have exercised packed lanes somewhere, or
+    // the property is vacuous
+    assert!(packed_layers.get() > 0, "no case assigned a packed lane");
+}

@@ -193,6 +193,122 @@ fn tight_budget_evicts_lru_and_stays_bit_identical() {
     assert_eq!(s.hits, 0, "{s:?}");
 }
 
+/// ISSUE 6: packed-domain execution obeys the same store contract as
+/// the staged tier — a warm packed forward is bit-identical to the
+/// pre-store reference and performs zero weight-quantization work, and
+/// a thrashing one-entry budget degrades to correct per-layer fallback
+/// (scratch re-staging), never to divergence or an error.
+#[test]
+fn packed_exec_forward_obeys_the_store_contract() {
+    let net = tiny_conv_network(8);
+    let x = net.eval_x.slice_rows(0, 8);
+    for spec in [
+        "fixed:l3r3",  // integer lane (i16)
+        "fixed:l4r4",  // integer lane (i32)
+        "fixed:l8r8",  // LUT lane (t > 12)
+        "float:m7e6",  // LUT lane (float)
+        "plan:c1=fixed:l2r2,fc=fixed:l3r3", // int16 + off-grid LUT
+    ] {
+        let spec = PrecisionSpec::parse(spec).unwrap();
+        let want = NativeBackend::with_store(net.clone(), Arc::new(WeightStore::with_budget(0)))
+            .run_spec(&x, &spec)
+            .unwrap();
+
+        // warm packed store: bit-identity + zero requantization
+        let store = Arc::new(WeightStore::unbounded());
+        let mut packed =
+            NativeBackend::with_store(net.clone(), store.clone()).with_packed_exec(true);
+        let first = packed.run_spec(&x, &spec).unwrap();
+        let warm = store.stats();
+        let second = packed.run_spec(&x, &spec).unwrap();
+        let hot = store.stats();
+        assert_bits_eq(first.data(), want.data(), &format!("{} packed cold", spec.id()));
+        assert_bits_eq(second.data(), want.data(), &format!("{} packed warm", spec.id()));
+        assert_eq!(hot.misses, warm.misses, "{}: warm packed quantizes NO weights", spec.id());
+        assert!(hot.hits > warm.hits, "{}: warm packed forward reads the store", spec.id());
+
+        // LRU thrash: a budget that fits only one of the two layers
+        // evicts on every staging step; the packed lanes keep running
+        // from each freshly staged entry and stay bit-identical
+        let costs: Vec<usize> = spec
+            .resolve(&net)
+            .unwrap()
+            .assignments
+            .iter()
+            .map(|(n, f)| StoreEntry::bytes_for(net.weight(&format!("{n}.w")).data().len(), f))
+            .collect();
+        let budget = costs.iter().copied().max().unwrap();
+        assert!(budget < costs.iter().sum(), "budget must not fit both entries");
+        let store = Arc::new(WeightStore::with_budget(budget));
+        let mut thrash =
+            NativeBackend::with_store(net.clone(), store.clone()).with_packed_exec(true);
+        for round in 0..3 {
+            let got = thrash.run_spec(&x, &spec).unwrap();
+            assert_bits_eq(got.data(), want.data(), &format!("{} thrash {round}", spec.id()));
+            assert!(store.stats().bytes <= budget, "{}: over budget", spec.id());
+        }
+        let s = store.stats();
+        assert!(s.evictions > 0, "{}: the thrash regime must evict ({s:?})", spec.id());
+        assert_eq!(s.hits, 0, "{}: one-entry budget never hits ({s:?})", spec.id());
+    }
+}
+
+/// The serving surface of packed execution: per-session opt-in shows
+/// up in [`precis::serving::SessionStats`] and the gateway's `exec`
+/// column, while responses stay bit-identical to the staged reference.
+#[test]
+fn gateway_surfaces_the_packed_exec_lane() {
+    let net = tiny_conv_network(4);
+    let store = Arc::new(WeightStore::unbounded());
+    let gw = Gateway::empty();
+    let open = |spec: &str, packed: bool| {
+        let n = net.clone();
+        let s = store.clone();
+        Session::with_factory(
+            net.clone(),
+            PrecisionSpec::parse(spec).unwrap(),
+            4,
+            Duration::from_millis(3),
+            Box::new(move || {
+                let b = NativeBackend::with_store(n, s).with_packed_exec(packed);
+                Ok(Box::new(b) as Box<dyn Backend>)
+            }),
+        )
+        .with_packed_exec(packed)
+    };
+    let kp = gw.adopt(open("fixed:l3r3", true));
+    let ks = gw.adopt(open("float:m7e6", false));
+
+    let px: usize = net.input.iter().product();
+    let pixels = net.eval_x.data()[..px].to_vec();
+    for (key, spec) in [(&kp, "fixed:l3r3"), (&ks, "float:m7e6")] {
+        let spec = PrecisionSpec::parse(spec).unwrap();
+        let want = NativeBackend::with_store(net.clone(), Arc::new(WeightStore::with_budget(0)))
+            .run_spec(&net.eval_x.slice_rows(0, 1), &spec)
+            .unwrap();
+        let got = gw.infer(key, pixels.clone()).unwrap();
+        assert_bits_eq(&got, want.data(), &key.to_string());
+    }
+
+    let stats = gw.stats();
+    let flag = |key: &str| {
+        stats
+            .sessions
+            .iter()
+            .find(|(k, _)| k.to_string() == key)
+            .expect("session listed")
+            .1
+            .packed_exec
+    };
+    assert!(flag(&kp.to_string()), "packed session reports packed_exec");
+    assert!(!flag(&ks.to_string()), "staged session reports staged");
+    let table = stats.render();
+    assert!(table.contains("exec"), "{table}");
+    assert!(table.contains("packed"), "{table}");
+    assert!(table.contains("staged"), "{table}");
+    gw.shutdown();
+}
+
 /// Property (ISSUE 5 satellite): a forward through a budget-constrained
 /// store — across random per-layer formats and budgets spanning the
 /// reject / thrash / fit regimes — is bit-identical to the uncached
