@@ -1,6 +1,7 @@
 //! Serving-style driver: the multi-model, multi-format gateway under a
-//! closed-loop client population, reporting per-session latency
-//! percentiles, accuracy, throughput and batching efficiency.
+//! closed-loop client population or an open-loop arrival trace,
+//! reporting per-session latency percentiles, accuracy, throughput,
+//! batching efficiency and shed accounting.
 //!
 //! One process hosts N `(network, format)` sessions simultaneously —
 //! by default `lenet5@float:m7e6` and `alexnet-mini@fixed:l8r8` — and
@@ -12,18 +13,19 @@
 //!     cargo run --release --example serve -- \
 //!         [--sessions lenet5@float:m7e6,alexnet-mini@fixed:l8r8] \
 //!         [--requests 256] [--clients 8] [--wait-ms 5] \
-//!         [--backend auto|native|pjrt] [--weight-budget 8m]
+//!         [--backend auto|native|pjrt] [--weight-budget 8m] \
+//!         [--arrivals poisson:200rps] [--slo 20ms:256] [--seed 2018]
 
 use std::sync::Arc;
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
 use anyhow::Result;
 
 use precis::eval::topk_accuracy;
 use precis::nn::Zoo;
 use precis::serving::{
-    drive_closed_loop, split_session_specs, warm_up, BackendKind, Gateway, SessionKey,
-    SessionOptions,
+    drive_open_loop, split_session_specs, warm_up, ArrivalSchedule, BackendKind, ClosedLoop,
+    Gateway, SessionKey, SessionOptions, SloTarget,
 };
 use precis::util::cli::Args;
 
@@ -39,11 +41,18 @@ fn main() -> Result<()> {
     let n_requests = args.get_usize("requests", 256)?;
     let n_clients = args.get_usize("clients", 8)?.max(1);
     let wait_ms = args.get_usize("wait-ms", 5)?;
+    let seed = args.get_usize("seed", 2018)? as u64;
     let kind = BackendKind::parse(args.get_or("backend", "auto"))?;
     // gateway-wide pre-quantized weight-store budget (DESIGN.md §Storage)
     let weight_budget = args
         .get("weight-budget")
         .map(precis::store::parse_byte_size)
+        .transpose()?;
+    // QoS: SLO-gated admission + open-loop arrivals (DESIGN.md §Serving QoS)
+    let slo = args.get("slo").map(SloTarget::parse).transpose()?;
+    let arrivals = args
+        .get("arrivals")
+        .map(|s| ArrivalSchedule::parse(s, seed))
         .transpose()?;
 
     let zoo = Zoo::load(ARTIFACTS)?;
@@ -52,63 +61,68 @@ fn main() -> Result<()> {
         batch: 0, // the artifact batch size
         max_wait: Duration::from_millis(wait_ms as u64),
         weight_budget,
+        slo,
+        ..SessionOptions::default()
     });
     let keys: Vec<SessionKey> = split_session_specs(&specs)
         .iter()
         .map(|s| gateway.open_spec(s))
         .collect::<Result<_>>()?;
 
+    let mode = match &arrivals {
+        Some(sched) => format!("open-loop {sched}"),
+        None => format!("{n_clients} closed-loop clients"),
+    };
     println!(
         "gateway: {} concurrent session(s) in one process (batch {batch}, backend {}, \
-         {n_clients} closed-loop clients, {n_requests} requests round-robined by key)",
+         {mode}, {n_requests} requests round-robined by key)",
         keys.len(),
         kind.as_str()
     );
 
     // One warm-up request per session before measurement (proves each
     // backend end to end, absorbs cold-start symmetrically), then the
-    // shared closed-loop driver — the same one `repro serve` uses.
+    // shared drivers — the same ones `repro serve` uses.
     warm_up(&gateway, &keys)?;
 
-    let t0 = Instant::now();
-    let served = drive_closed_loop(&gateway, &keys, n_requests, n_clients);
-    let wall = t0.elapsed().as_secs_f64();
+    let report = match &arrivals {
+        Some(sched) => drive_open_loop(&gateway, &keys, sched, n_requests),
+        None => ClosedLoop::new(n_clients).drive(&gateway, &keys, n_requests),
+    };
 
-    // live telemetry snapshot while the gateway still serves — stats
-    // are not a shutdown-only artifact
-    println!("\n{}", gateway.stats().render());
-    println!("throughput: {:.1} req/s aggregate ({wall:.2}s wall)\n", n_requests as f64 / wall);
+    // the shared per-key offered/served/shed table, then the live
+    // telemetry snapshot while the gateway still serves — stats are
+    // not a shutdown-only artifact
+    println!("\n{}", report.render(&keys));
+    println!("{}", gateway.stats().render());
+    println!(
+        "throughput: {:.1} served/s aggregate ({:.2}s wall)\n",
+        report.served.len() as f64 / report.wall_s.max(1e-9),
+        report.wall_s
+    );
 
-    // per-session report: end-to-end latency percentiles + the accuracy
-    // of the actually-served responses
+    // per-session accuracy of the actually-served responses (sheds
+    // refuse work; they never perturb what IS served)
     for (ki, key) in keys.iter().enumerate() {
         let net: Arc<_> = gateway.session(key).unwrap().network().clone();
-        let mut lats: Vec<f64> = Vec::new();
         let mut rows: Vec<(usize, &[f32])> = Vec::new();
-        for (k, sample, lat, logits) in &served {
+        for (k, sample, _, logits) in &report.served {
             if k == &ki {
-                lats.push(*lat);
                 rows.push((*sample, logits.as_slice()));
             }
         }
-        lats.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        let pct = |q: f64| {
-            if lats.is_empty() { 0.0 } else { lats[((lats.len() - 1) as f64 * q) as usize] * 1e3 }
-        };
         let logits: Vec<f32> = rows.iter().flat_map(|(_, l)| l.iter().copied()).collect();
         let labels: Vec<i32> = rows.iter().map(|(s, _)| net.eval_y[*s]).collect();
         let acc = topk_accuracy(&logits, &labels, net.classes, net.topk);
         println!(
-            "{:<32} {} requests  p50 {:.2} ms  p90 {:.2} ms  p99 {:.2} ms  top-{} acc {:.4}",
+            "{:<32} {} served  top-{} acc {:.4}",
             key.to_string(),
             rows.len(),
-            pct(0.5),
-            pct(0.9),
-            pct(0.99),
             net.topk,
             acc
         );
     }
+    assert!(report.is_balanced(), "drive accounting is unbalanced");
 
     let stats = gateway.shutdown();
     println!(

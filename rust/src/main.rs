@@ -34,7 +34,8 @@ use precis::formats::{self, Format, PrecisionSpec};
 use precis::nn::Zoo;
 use precis::search::{default_ladder, exhaustive_search, plan_search, search, PlanSearchSpec, SearchSpec};
 use precis::serving::{
-    drive_closed_loop, split_session_specs, warm_up, BackendKind, Gateway, SessionOptions,
+    drive_open_loop, split_session_specs, warm_up, ArrivalSchedule, BackendKind, ClosedLoop,
+    Gateway, SessionOptions, SloTarget,
 };
 use precis::store::{human_bytes, parse_byte_size, WeightStore};
 use precis::util::cli::Args;
@@ -65,6 +66,15 @@ const USAGE: &str = "usage: repro <info|eval|sweep|search|plan|trace|figure|figu
                [--requests 256] [--clients 8] [--wait-ms 5] [--backend native|pjrt|auto]
                [--weight-budget 8m]   (gateway-wide staged-weight byte budget)
                [--packed-exec]        (native sessions execute from packed codes)
+               [--arrivals poisson:200rps | burst:20rps:400rps:100ms:0.25
+                           | ramp:50rps:500rps:200ms]
+                                      (open-loop trace-driven load, seeded by --seed;
+                                       default is closed-loop --clients)
+               [--slo 20ms:256]       (per-session p99 queue-latency budget [+ max
+                                       queue depth]; excess load is shed with a typed
+                                       error, never silently dropped)
+               [--qos-slots 2]        (gateway-wide execution slots: sessions closest
+                                       to SLO violation drain first)
   repro zoo-size <net> --format float:m7e6|plan:...
                (per-layer f32 vs bit-packed bytes, MAC-weighted, plus the packed
                 execution lane per layer; DESIGN.md §Storage, §Packed execution)
@@ -341,40 +351,79 @@ fn run(raw: &[String]) -> Result<()> {
                      on-device — flag ignored)"
                 );
             }
+            // QoS: an SLO makes every opened session shed (typed, loud)
+            // instead of queueing without bound; --qos-slots bounds
+            // concurrent batch executions gateway-wide, granted by SLO
+            // headroom (DESIGN.md §Serving QoS)
+            let slo = args.get("slo").map(SloTarget::parse).transpose()?;
+            let qos_slots = args.get_usize("qos-slots", 0)?;
+            // open-loop trace-driven load: requests fire at schedule
+            // time regardless of completions (the only mode where an
+            // SLO has anything to shed); seeded for reproducibility
+            let arrivals = args
+                .get("arrivals")
+                .map(|s| ArrivalSchedule::parse(s, seed))
+                .transpose()?;
             let zoo = Zoo::load(&artifacts)?;
             let gateway = Gateway::new(zoo, kind).with_options(SessionOptions {
                 batch: 0, // artifact batch size
                 max_wait: Duration::from_millis(wait_ms as u64),
                 weight_budget,
                 packed_exec,
+                slo,
+                qos_slots,
             });
             let mut keys = Vec::new();
             for spec in split_session_specs(&specs) {
                 keys.push(gateway.open_spec(&spec)?);
             }
+            let mode = match &arrivals {
+                Some(sched) => format!("open-loop {sched}"),
+                None => format!("{n_clients} closed-loop clients"),
+            };
             println!(
-                "gateway: {} session(s) [{}], backend {}, {n_clients} closed-loop clients, {n_requests} requests",
+                "gateway: {} session(s) [{}], backend {}, {mode}, {n_requests} requests{}",
                 keys.len(),
                 keys.iter().map(|k| k.to_string()).collect::<Vec<_>>().join(", "),
-                kind.as_str()
+                kind.as_str(),
+                match slo {
+                    Some(s) => format!(", slo {s}"),
+                    None => String::new(),
+                }
             );
 
             // one warm-up request per session proves each backend end
             // to end before the measured load
             warm_up(&gateway, &keys)?;
 
-            let t = Timer::start();
-            let served = drive_closed_loop(&gateway, &keys, n_requests, n_clients);
-            let wall = t.elapsed_s();
-            debug_assert_eq!(served.len(), n_requests);
+            let report = match &arrivals {
+                Some(sched) => drive_open_loop(&gateway, &keys, sched, n_requests),
+                None => ClosedLoop::new(n_clients).drive(&gateway, &keys, n_requests),
+            };
 
-            // live stats snapshot (the gateway is still serving here —
-            // telemetry is not a shutdown-only artifact)
-            println!("\n{}", gateway.stats().render());
+            // per-key offered/served/shed/latency table, then the live
+            // gateway stats snapshot (the gateway is still serving here
+            // — telemetry is not a shutdown-only artifact)
+            println!("\n{}", report.render(&keys));
+            println!("{}", gateway.stats().render());
             println!(
-                "throughput: {:.1} req/s over {} session(s) ({wall:.2}s wall)",
-                n_requests as f64 / wall.max(1e-9),
-                keys.len()
+                "throughput: {:.1} served/s over {} session(s) ({:.2}s wall; \
+                 {} offered = {} served + {} shed + {} failed)",
+                report.served.len() as f64 / report.wall_s.max(1e-9),
+                keys.len(),
+                report.wall_s,
+                report.offered,
+                report.served.len(),
+                report.shed(),
+                report.failed()
+            );
+            anyhow::ensure!(
+                report.is_balanced(),
+                "drive accounting is unbalanced: {} offered != {} served + {} shed + {} failed",
+                report.offered,
+                report.served.len(),
+                report.shed(),
+                report.failed()
             );
             let fin = gateway.shutdown();
             println!("served {} requests in {} batches total", fin.total_requests(), fin.total_batches());

@@ -22,6 +22,7 @@ use anyhow::{anyhow, Result};
 use crate::formats::PrecisionSpec;
 use crate::nn::Zoo;
 use crate::serving::backend::BackendKind;
+use crate::serving::qos::{QosScheduler, SloTarget};
 use crate::serving::session::{Session, SessionKey, SessionOptions, SessionStats};
 use crate::store::{StoreStats, WeightStore};
 
@@ -46,6 +47,12 @@ impl GatewayStats {
         self.sessions.iter().map(|(_, s)| s.requests).sum()
     }
 
+    /// Requests shed by admission control across every session
+    /// (DESIGN.md §Serving QoS).
+    pub fn total_shed(&self) -> u64 {
+        self.sessions.iter().map(|(_, s)| s.shed).sum()
+    }
+
     /// Batches flushed across every session.
     pub fn total_batches(&self) -> u64 {
         self.sessions.iter().map(|(_, s)| s.batches).sum()
@@ -67,7 +74,7 @@ impl GatewayStats {
     /// gateway-opened sessions).
     pub fn render(&self) -> String {
         let mut out = format!(
-            "{:<32} {:>8} {:>6} {:>9} {:>8} {:>9} {:>7} {:>10} {:>10} {:>12}\n",
+            "{:<32} {:>8} {:>6} {:>9} {:>8} {:>9} {:>7} {:>10} {:>10} {:>6} {:>6} {:>12}\n",
             "session",
             "backend",
             "exec",
@@ -77,6 +84,8 @@ impl GatewayStats {
             "padded",
             "p50_queue",
             "p99_queue",
+            "depth",
+            "shed",
             "store h/m"
         );
         for (key, s) in &self.sessions {
@@ -86,7 +95,7 @@ impl GatewayStats {
                 None => "-".to_string(),
             };
             out.push_str(&format!(
-                "{:<32} {:>8} {:>6} {:>9} {:>8} {:>9.1} {:>6.1}% {:>8.2}ms {:>8.2}ms {:>12}\n",
+                "{:<32} {:>8} {:>6} {:>9} {:>8} {:>9.1} {:>6.1}% {:>8.2}ms {:>8.2}ms {:>6} {:>6} {:>12}\n",
                 key.to_string(),
                 s.backend,
                 if s.packed_exec { "packed" } else { "staged" },
@@ -96,6 +105,8 @@ impl GatewayStats {
                 100.0 * s.padded_slots as f64 / slots.max(1) as f64,
                 s.p50_queue_ms,
                 s.p99_queue_ms,
+                s.depth,
+                s.shed,
                 store,
             ));
         }
@@ -117,6 +128,11 @@ pub struct Gateway {
     /// format)`, so sessions with overlapping resolved formats share
     /// staged weights (DESIGN.md §Storage)
     store: Arc<WeightStore>,
+    /// ONE execution-permit scheduler shared by every session this
+    /// gateway opens, when `opts.qos_slots > 0`: batches execute in
+    /// SLO-headroom order instead of free-running (DESIGN.md §Serving
+    /// QoS).  `None` (the default) leaves dispatchers unthrottled.
+    sched: Option<Arc<QosScheduler>>,
     sessions: RwLock<BTreeMap<SessionKey, Arc<Session>>>,
 }
 
@@ -129,6 +145,7 @@ impl Gateway {
             zoo: Some(zoo),
             kind,
             store: opts.build_store(),
+            sched: build_scheduler(&opts),
             opts,
             sessions: RwLock::new(BTreeMap::new()),
         }
@@ -142,6 +159,7 @@ impl Gateway {
             zoo: None,
             kind: BackendKind::Native,
             store: opts.build_store(),
+            sched: build_scheduler(&opts),
             opts,
             sessions: RwLock::new(BTreeMap::new()),
         }
@@ -149,11 +167,21 @@ impl Gateway {
 
     /// Set the batching options used by subsequently opened sessions.
     /// Rebuilds the shared weight store from `opts.weight_budget`
-    /// (`--weight-budget`), so call it before opening sessions.
+    /// (`--weight-budget`) and the priority scheduler from
+    /// `opts.qos_slots` (`--qos-slots`), so call it before opening
+    /// sessions.
     pub fn with_options(mut self, opts: SessionOptions) -> Gateway {
         self.opts = opts;
         self.store = opts.build_store();
+        self.sched = build_scheduler(&opts);
         self
+    }
+
+    /// The gateway-wide priority scheduler, when `qos_slots > 0`.
+    /// Sessions adopted from custom factories can share it via
+    /// [`Session::with_factory_qos`].
+    pub fn scheduler(&self) -> Option<&Arc<QosScheduler>> {
+        self.sched.as_ref()
     }
 
     /// The zoo this gateway serves from (None for [`Gateway::empty`]).
@@ -170,6 +198,19 @@ impl Gateway {
     /// or a per-layer [`crate::formats::Plan`].  Idempotent: opening a
     /// key that is already hosted returns it unchanged.
     pub fn open(&self, net: &str, spec: impl Into<PrecisionSpec>) -> Result<SessionKey> {
+        self.open_slo(net, spec, self.opts.slo)
+    }
+
+    /// [`Gateway::open`] with a per-session SLO override: `slo` replaces
+    /// the gateway-default `SessionOptions::slo` for this session only,
+    /// so one gateway can host latency-guaranteed and best-effort
+    /// sessions side by side (DESIGN.md §Serving QoS).
+    pub fn open_slo(
+        &self,
+        net: &str,
+        spec: impl Into<PrecisionSpec>,
+        slo: Option<SloTarget>,
+    ) -> Result<SessionKey> {
         let spec: PrecisionSpec = spec.into();
         let key = SessionKey::new(net, spec.clone());
         if self.session(&key).is_some() {
@@ -179,7 +220,16 @@ impl Gateway {
             .zoo
             .as_ref()
             .ok_or_else(|| anyhow!("gateway has no zoo; use adopt() for custom sessions"))?;
-        let session = Session::open_in(zoo, net, spec, self.kind, self.opts, self.store.clone())?;
+        let opts = SessionOptions { slo, ..self.opts };
+        let session = Session::open_qos(
+            zoo,
+            net,
+            spec,
+            self.kind,
+            opts,
+            self.store.clone(),
+            self.sched.clone(),
+        )?;
         let mut map = self.write_lock();
         // on a lost race with a concurrent open, keep the incumbent —
         // but release the routing lock BEFORE dropping the duplicate,
@@ -292,6 +342,14 @@ impl Gateway {
     }
 }
 
+/// The execution-permit scheduler `opts` describe: `qos_slots > 0`
+/// bounds gateway-wide concurrent batch executions (granted by SLO
+/// headroom — DESIGN.md §Serving QoS); 0 (the default) means no
+/// scheduler and free-running dispatchers, the pre-QoS behavior.
+fn build_scheduler(opts: &SessionOptions) -> Option<Arc<QosScheduler>> {
+    (opts.qos_slots > 0).then(|| QosScheduler::new(opts.qos_slots))
+}
+
 /// `Some(stats)` iff the store has seen any staging traffic — keeps
 /// [`GatewayStats::store`] falling back to per-session snapshots for
 /// gateways whose own store is unused (adopted custom sessions).
@@ -398,5 +456,51 @@ mod tests {
         let table = gw.stats().render();
         assert!(table.contains(&k.to_string()), "{table}");
         assert_eq!(gw.stats().total_batches(), 0);
+    }
+
+    /// Satellite (ISSUE 7): the stats table surfaces the shedding
+    /// inputs — live queue depth and shed totals — next to the latency
+    /// percentiles operators already read, and `total_shed` aggregates
+    /// across sessions.
+    #[test]
+    fn render_includes_depth_and_shed_columns() {
+        let mk = |requests, shed, depth| SessionStats {
+            backend: "native".to_string(),
+            requests,
+            shed,
+            depth,
+            ..SessionStats::default()
+        };
+        let stats = GatewayStats {
+            sessions: vec![
+                (SessionKey::new("a", Format::SINGLE), mk(10, 3, 7)),
+                (SessionKey::new("b", Format::float(7, 6)), mk(20, 4, 0)),
+            ],
+            store: None,
+        };
+        let table = stats.render();
+        let header = table.lines().next().unwrap();
+        assert!(header.contains("depth"), "{header}");
+        assert!(header.contains("shed"), "{header}");
+        // column order in every row matches the header: depth then shed
+        let row_a = table.lines().nth(1).unwrap();
+        let d = row_a.find(" 7 ").expect("depth value rendered");
+        let s = row_a.rfind(" 3").expect("shed value rendered");
+        assert!(d < s, "depth before shed: {row_a}");
+        assert_eq!(stats.total_shed(), 7);
+        assert_eq!(stats.total_requests(), 30);
+    }
+
+    /// `qos_slots` builds ONE scheduler shared by everything the
+    /// gateway opens; 0 (the default) leaves dispatchers unthrottled.
+    #[test]
+    fn qos_slots_option_builds_the_scheduler() {
+        let gw = Gateway::empty();
+        assert!(gw.scheduler().is_none(), "default: no scheduler");
+        let gw = Gateway::empty()
+            .with_options(SessionOptions { qos_slots: 3, ..SessionOptions::default() });
+        let sched = gw.scheduler().expect("qos_slots > 0 builds a scheduler");
+        assert_eq!(sched.slots(), 3);
+        assert_eq!(sched.waiting(), 0);
     }
 }

@@ -1,16 +1,351 @@
-//! Closed-loop load generation over a [`Gateway`] — shared by the
-//! `repro serve` subcommand and the `serve` example so the two drivers
-//! cannot drift.
+//! Load generation over a [`Gateway`] — shared by the `repro serve`
+//! subcommand and the `serve` example so the two drivers cannot drift.
+//!
+//! Two drive modes (DESIGN.md §Serving QoS):
+//!
+//! * **Closed loop** ([`ClosedLoop`], [`drive_closed_loop`]) — N client
+//!   threads, each firing its next request only after the previous one
+//!   answers.  Offered load self-throttles to the service rate, so a
+//!   closed-loop drive can never observe queue growth or shedding; it
+//!   measures latency under a bounded concurrency.
+//! * **Open loop** ([`ArrivalSchedule`], [`drive_open_loop`]) — requests
+//!   fire at their scheduled arrival time *regardless of completions*,
+//!   the way real traffic arrives.  This is the only mode where an SLO
+//!   gate has anything to shed, and the driver accounts every offered
+//!   request exactly once: `served + shed + failed == offered`
+//!   ([`DriveReport`]), with sheds kept as typed [`ShedError`] records —
+//!   reject-don't-collapse, never silently dropped.
+//!
+//! Both modes route request `i` to `keys[i % keys.len()]` with eval
+//! sample `(i / keys.len()) % eval_len`, so every key receives an
+//! identical, deterministic sample stream regardless of client count or
+//! arrival shape — which is what lets the chaos tests assert bit-exact
+//! logits against a direct backend reference.
 
+use std::fmt;
+use std::sync::mpsc::{channel, Receiver};
 use std::time::Instant;
 
-use anyhow::{anyhow, Result};
+use anyhow::{anyhow, bail, Result};
 
+use crate::serving::qos::ShedError;
+use crate::serving::session::SubmitError;
 use crate::serving::{Gateway, SessionKey};
+use crate::util::rng::Pcg32;
 
 /// One served request: (key index into the driven key list, eval-sample
 /// index, end-to-end latency in seconds, logits).
 pub type ServedRequest = (usize, usize, f64, Vec<f32>);
+
+// ---------------------------------------------------------------------------
+// Arrival schedules
+// ---------------------------------------------------------------------------
+
+/// The rate profile of an open-loop arrival process.  All three shapes
+/// are driven by one non-homogeneous Poisson sampler
+/// ([`ArrivalSchedule::times`]); the shape only supplies the
+/// instantaneous rate `λ(t)`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum ArrivalShape {
+    /// Constant-rate Poisson arrivals: `poisson:200rps`.
+    Poisson { rps: f64 },
+    /// On/off bursts: `burst:<base>rps:<peak>rps:<period>ms:<duty>` —
+    /// each period opens at `peak` for its first `duty` fraction, then
+    /// falls back to `base`.  `burst:20rps:400rps:100ms:0.25`.
+    Burst { base_rps: f64, peak_rps: f64, period_ms: f64, duty: f64 },
+    /// Diurnal-style sawtooth ramp: `ramp:<lo>rps:<hi>rps:<period>ms` —
+    /// the rate climbs linearly from `lo` to `hi` over each period,
+    /// then resets.  `ramp:50rps:500rps:200ms`.
+    Ramp { lo_rps: f64, hi_rps: f64, period_ms: f64 },
+}
+
+fn check_rate(what: &str, rps: f64) -> Result<()> {
+    if !rps.is_finite() || rps <= 0.0 {
+        bail!("{what} must be a positive request rate, got {rps}");
+    }
+    Ok(())
+}
+
+fn check_period(period_ms: f64) -> Result<()> {
+    if !period_ms.is_finite() || period_ms <= 0.0 {
+        bail!("arrival period must be a positive number of ms, got {period_ms}");
+    }
+    Ok(())
+}
+
+impl ArrivalShape {
+    fn validate(&self) -> Result<()> {
+        match *self {
+            ArrivalShape::Poisson { rps } => check_rate("poisson rate", rps),
+            ArrivalShape::Burst { base_rps, peak_rps, period_ms, duty } => {
+                check_rate("burst base rate", base_rps)?;
+                check_rate("burst peak rate", peak_rps)?;
+                check_period(period_ms)?;
+                if !duty.is_finite() || duty <= 0.0 || duty >= 1.0 {
+                    bail!("burst duty must be a fraction in (0, 1), got {duty}");
+                }
+                Ok(())
+            }
+            ArrivalShape::Ramp { lo_rps, hi_rps, period_ms } => {
+                check_rate("ramp low rate", lo_rps)?;
+                check_rate("ramp high rate", hi_rps)?;
+                check_period(period_ms)
+            }
+        }
+    }
+
+    /// The maximum instantaneous rate — the thinning envelope `λmax`.
+    fn peak_rate(&self) -> f64 {
+        match *self {
+            ArrivalShape::Poisson { rps } => rps,
+            ArrivalShape::Burst { base_rps, peak_rps, .. } => base_rps.max(peak_rps),
+            ArrivalShape::Ramp { lo_rps, hi_rps, .. } => lo_rps.max(hi_rps),
+        }
+    }
+
+    /// Instantaneous rate `λ(t)` at `t` seconds into the trace.
+    fn rate_at(&self, t_s: f64) -> f64 {
+        match *self {
+            ArrivalShape::Poisson { rps } => rps,
+            ArrivalShape::Burst { base_rps, peak_rps, period_ms, duty } => {
+                let phase = (t_s * 1e3) % period_ms;
+                if phase < duty * period_ms {
+                    peak_rps
+                } else {
+                    base_rps
+                }
+            }
+            ArrivalShape::Ramp { lo_rps, hi_rps, period_ms } => {
+                let phase = (t_s * 1e3) % period_ms;
+                lo_rps + (hi_rps - lo_rps) * (phase / period_ms)
+            }
+        }
+    }
+}
+
+fn parse_rate(what: &str, s: &str) -> Result<f64> {
+    let Some(num) = s.strip_suffix("rps") else {
+        bail!("bad {what} '{s}': expected '<rate>rps', e.g. 200rps");
+    };
+    num.parse::<f64>()
+        .map_err(|_| anyhow!("bad {what} '{s}': '{num}' is not a number"))
+}
+
+fn parse_period(s: &str) -> Result<f64> {
+    let Some(num) = s.strip_suffix("ms") else {
+        bail!("bad arrival period '{s}': expected '<period>ms', e.g. 100ms");
+    };
+    num.parse::<f64>()
+        .map_err(|_| anyhow!("bad arrival period '{s}': '{num}' is not a number"))
+}
+
+/// A seeded, reproducible open-loop arrival trace: the shape plus the
+/// PRNG seed.  The trace is a pure timestamp stream —
+/// [`ArrivalSchedule::times`] does no sleeping and touches no clock, so
+/// the same `(shape, seed)` always yields the bit-identical schedule
+/// (the chaos tests depend on this).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ArrivalSchedule {
+    pub shape: ArrivalShape,
+    pub seed: u64,
+}
+
+impl ArrivalSchedule {
+    /// Validated constructor.
+    pub fn new(shape: ArrivalShape, seed: u64) -> Result<ArrivalSchedule> {
+        shape.validate()?;
+        Ok(ArrivalSchedule { shape, seed })
+    }
+
+    /// Parse the CLI spelling (`--arrivals`):
+    /// `poisson:200rps`, `burst:20rps:400rps:100ms:0.25`,
+    /// `ramp:50rps:500rps:200ms`.
+    pub fn parse(s: &str, seed: u64) -> Result<ArrivalSchedule> {
+        let parts: Vec<&str> = s.split(':').collect();
+        let shape = match parts.as_slice() {
+            ["poisson", rate] => ArrivalShape::Poisson { rps: parse_rate("poisson rate", rate)? },
+            ["burst", base, peak, period, duty] => ArrivalShape::Burst {
+                base_rps: parse_rate("burst base rate", base)?,
+                peak_rps: parse_rate("burst peak rate", peak)?,
+                period_ms: parse_period(period)?,
+                duty: duty
+                    .parse::<f64>()
+                    .map_err(|_| anyhow!("bad burst duty '{duty}': not a number"))?,
+            },
+            ["ramp", lo, hi, period] => ArrivalShape::Ramp {
+                lo_rps: parse_rate("ramp low rate", lo)?,
+                hi_rps: parse_rate("ramp high rate", hi)?,
+                period_ms: parse_period(period)?,
+            },
+            _ => bail!(
+                "bad arrival schedule '{s}': expected poisson:<rate>rps, \
+                 burst:<base>rps:<peak>rps:<period>ms:<duty>, or \
+                 ramp:<lo>rps:<hi>rps:<period>ms"
+            ),
+        };
+        ArrivalSchedule::new(shape, seed)
+    }
+
+    /// The first `n` arrival timestamps, in seconds from trace start,
+    /// strictly increasing.  Non-homogeneous Poisson sampling by
+    /// Lewis–Shedler thinning: candidate gaps are exponential at the
+    /// envelope rate `λmax`, and each candidate survives with
+    /// probability `λ(t)/λmax`.  Pure function of `(shape, seed)`.
+    pub fn times(&self, n: usize) -> Vec<f64> {
+        let mut rng = Pcg32::seeded(self.seed);
+        let lmax = self.shape.peak_rate();
+        let mut t = 0.0f64;
+        let mut out = Vec::with_capacity(n);
+        while out.len() < n {
+            // exponential gap at λmax; 1 - u keeps ln away from zero
+            t += -(1.0 - rng.uniform_f64()).ln() / lmax;
+            if rng.uniform_f64() * lmax < self.shape.rate_at(t) {
+                out.push(t);
+            }
+        }
+        out
+    }
+}
+
+impl fmt::Display for ArrivalSchedule {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self.shape {
+            ArrivalShape::Poisson { rps } => write!(f, "poisson:{rps}rps"),
+            ArrivalShape::Burst { base_rps, peak_rps, period_ms, duty } => {
+                write!(f, "burst:{base_rps}rps:{peak_rps}rps:{period_ms}ms:{duty}")
+            }
+            ArrivalShape::Ramp { lo_rps, hi_rps, period_ms } => {
+                write!(f, "ramp:{lo_rps}rps:{hi_rps}rps:{period_ms}ms")
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Drive reports
+// ---------------------------------------------------------------------------
+
+/// Why one offered request was not served.
+#[derive(Clone, Debug)]
+pub enum FailureKind {
+    /// Refused by admission control (or fired at a closed/vanished
+    /// session — [`ShedReason::Closed`]).  Counted as `shed`.
+    Shed(ShedError),
+    /// The request was admitted but execution failed (backend error,
+    /// dropped reply channel).  Counted as `failed`, never as shed.
+    Failed(String),
+}
+
+/// One unserved request: which offered request it was and why.
+#[derive(Clone, Debug)]
+pub struct DriveFailure {
+    /// Global request index in the offered stream (`i`-th fire).
+    pub index: usize,
+    /// The session key the request was routed to.
+    pub key: SessionKey,
+    /// Shed or failed.
+    pub kind: FailureKind,
+}
+
+/// Everything a drive observed, with exact accounting:
+/// `served.len() + shed() + failed() == offered` always
+/// ([`DriveReport::is_balanced`] — the chaos test's core invariant).
+#[derive(Debug, Default)]
+pub struct DriveReport {
+    /// Requests the driver fired (counted at the fire site, not derived).
+    pub offered: u64,
+    /// Successfully answered requests, with latencies and logits.
+    pub served: Vec<ServedRequest>,
+    /// Typed per-request records for everything not served.
+    pub failures: Vec<DriveFailure>,
+    /// Wall-clock duration of the drive, seconds.
+    pub wall_s: f64,
+}
+
+impl DriveReport {
+    /// Requests refused by admission control (plus closed-key fires).
+    pub fn shed(&self) -> u64 {
+        self.failures
+            .iter()
+            .filter(|f| matches!(f.kind, FailureKind::Shed(_)))
+            .count() as u64
+    }
+
+    /// Requests admitted but not answered successfully.
+    pub fn failed(&self) -> u64 {
+        self.failures
+            .iter()
+            .filter(|f| matches!(f.kind, FailureKind::Failed(_)))
+            .count() as u64
+    }
+
+    /// The accounting invariant: every offered request is either served,
+    /// shed, or failed — exactly once, nothing silently dropped.
+    pub fn is_balanced(&self) -> bool {
+        self.served.len() as u64 + self.shed() + self.failed() == self.offered
+    }
+
+    /// Render the per-key offered/served/shed/latency table shared by
+    /// `repro serve` and the `serve` example.  `keys` must be the key
+    /// list the drive ran over (key indices in `served` index into it).
+    pub fn render(&self, keys: &[SessionKey]) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "{:<44} {:>8} {:>8} {:>8} {:>8} {:>9} {:>9}\n",
+            "session", "offered", "served", "shed", "failed", "p50 ms", "p99 ms"
+        ));
+        for (ki, key) in keys.iter().enumerate() {
+            let mut lats: Vec<f64> = self
+                .served
+                .iter()
+                .filter(|(k, _, _, _)| *k == ki)
+                .map(|(_, _, lat, _)| *lat)
+                .collect();
+            let served = lats.len() as u64;
+            let mut shed = 0u64;
+            let mut failed = 0u64;
+            for f in self.failures.iter().filter(|f| f.key == *key) {
+                match f.kind {
+                    FailureKind::Shed(_) => shed += 1,
+                    FailureKind::Failed(_) => failed += 1,
+                }
+            }
+            lats.sort_by(|a, b| a.total_cmp(b));
+            let pct = |q: f64| -> f64 {
+                if lats.is_empty() {
+                    0.0
+                } else {
+                    lats[((lats.len() - 1) as f64 * q) as usize] * 1e3
+                }
+            };
+            out.push_str(&format!(
+                "{:<44} {:>8} {:>8} {:>8} {:>8} {:>9.3} {:>9.3}\n",
+                key.to_string(),
+                served + shed + failed,
+                served,
+                shed,
+                failed,
+                pct(0.5),
+                pct(0.99)
+            ));
+        }
+        out.push_str(&format!(
+            "{:<44} {:>8} {:>8} {:>8} {:>8}   ({:.2}s wall{})\n",
+            "total",
+            self.offered,
+            self.served.len(),
+            self.shed(),
+            self.failed(),
+            self.wall_s,
+            if self.is_balanced() { "" } else { "; UNBALANCED" }
+        ));
+        out
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Warm-up
+// ---------------------------------------------------------------------------
 
 /// Send one request per session, outside any measurement window: it
 /// proves each backend end to end (`Auto` resolves its fallback here —
@@ -30,49 +365,277 @@ pub fn warm_up(gateway: &Gateway, keys: &[SessionKey]) -> Result<()> {
     Ok(())
 }
 
-/// Drive `n_requests` through the gateway from `n_clients` closed-loop
-/// client threads, round-robining by session key: request `i` goes to
-/// `keys[i % keys.len()]` with eval sample `(i / keys.len()) %
-/// eval_len`, so every key receives an identical, deterministic sample
-/// stream regardless of client count.  Returns one record per request;
-/// callers aggregate what they need (latency percentiles, accuracy, or
-/// nothing).  Panics if a session vanishes or a request fails
-/// mid-drive — load-generator semantics, not server semantics.
+// ---------------------------------------------------------------------------
+// Closed-loop driver
+// ---------------------------------------------------------------------------
+
+/// Closed-loop drive configuration: `clients` threads, each firing its
+/// next request only after the previous one answers.
+///
+/// [`ClosedLoop::new`] records every per-request failure as a typed
+/// [`DriveFailure`] the caller aggregates; [`ClosedLoop::strict`] keeps
+/// the historical load-generator semantics — panic the moment a session
+/// vanishes or a request fails mid-drive — which the benches rely on to
+/// fail fast instead of producing a report with holes in it.
+#[derive(Clone, Copy, Debug)]
+pub struct ClosedLoop {
+    clients: usize,
+    strict: bool,
+}
+
+impl ClosedLoop {
+    /// Record failures as typed per-request records (never panics).
+    pub fn new(clients: usize) -> ClosedLoop {
+        ClosedLoop { clients: clients.max(1), strict: false }
+    }
+
+    /// Panic on a vanished session or failed request (bench semantics).
+    pub fn strict(clients: usize) -> ClosedLoop {
+        ClosedLoop { clients: clients.max(1), strict: true }
+    }
+
+    /// Drive `n_requests` through the gateway, round-robining by key:
+    /// request `i` goes to `keys[i % keys.len()]` with eval sample
+    /// `(i / keys.len()) % eval_len`.
+    pub fn drive(
+        &self,
+        gateway: &Gateway,
+        keys: &[SessionKey],
+        n_requests: usize,
+    ) -> DriveReport {
+        assert!(!keys.is_empty(), "closed-loop drive needs at least one session key");
+        let start = Instant::now();
+        let strict = self.strict;
+        let mut served: Vec<ServedRequest> = Vec::with_capacity(n_requests);
+        let mut failures: Vec<DriveFailure> = Vec::new();
+        std::thread::scope(|scope| {
+            let mut handles = Vec::new();
+            for cid in 0..self.clients {
+                handles.push(scope.spawn(move || {
+                    let mut out = Vec::new();
+                    let mut bad = Vec::new();
+                    let mut i = cid;
+                    while i < n_requests {
+                        let ki = i % keys.len();
+                        match drive_one(gateway, &keys[ki], i, keys.len(), strict) {
+                            Ok(rec) => out.push(rec),
+                            Err(kind) => {
+                                bad.push(DriveFailure { index: i, key: keys[ki].clone(), kind })
+                            }
+                        }
+                        i += self.clients;
+                    }
+                    (out, bad)
+                }));
+            }
+            for h in handles {
+                let (out, bad) = h.join().unwrap();
+                served.extend(out);
+                failures.extend(bad);
+            }
+        });
+        DriveReport {
+            offered: n_requests as u64,
+            served,
+            failures,
+            wall_s: start.elapsed().as_secs_f64(),
+        }
+    }
+}
+
+/// Fire one closed-loop request and wait for its answer.  In strict
+/// mode the historical panic messages are preserved verbatim.
+fn drive_one(
+    gateway: &Gateway,
+    key: &SessionKey,
+    i: usize,
+    n_keys: usize,
+    strict: bool,
+) -> Result<ServedRequest, FailureKind> {
+    let Some(session) = gateway.session(key) else {
+        if strict {
+            panic!("session vanished");
+        }
+        return Err(FailureKind::Shed(ShedError::closed(key.clone())));
+    };
+    let net = session.network();
+    let px: usize = net.input.iter().product();
+    let sample = (i / n_keys) % net.eval_len();
+    let pixels = net.eval_x.data()[sample * px..(sample + 1) * px].to_vec();
+    let t = Instant::now();
+    let reply = match session.submit(pixels) {
+        Ok(rx) => rx.recv(),
+        Err(SubmitError::Shed(e)) => {
+            if strict {
+                panic!("inference failed");
+            }
+            return Err(FailureKind::Shed(e));
+        }
+        Err(SubmitError::Down { key }) => {
+            if strict {
+                panic!("inference failed");
+            }
+            return Err(FailureKind::Shed(ShedError::closed(key)));
+        }
+        Err(e @ SubmitError::BadInput { .. }) => {
+            if strict {
+                panic!("inference failed");
+            }
+            return Err(FailureKind::Failed(e.to_string()));
+        }
+    };
+    match reply {
+        Ok(Ok(logits)) => Ok((i % n_keys, sample, t.elapsed().as_secs_f64(), logits)),
+        Ok(Err(e)) => {
+            if strict {
+                panic!("inference failed");
+            }
+            Err(FailureKind::Failed(e.to_string()))
+        }
+        Err(_) => {
+            // the session shut down mid-request without answering —
+            // churn, not a backend failure
+            if strict {
+                panic!("inference failed");
+            }
+            Err(FailureKind::Shed(ShedError::closed(key.clone())))
+        }
+    }
+}
+
+/// Historical entry point: strict closed-loop drive returning only the
+/// served records.  Panics if a session vanishes or a request fails
+/// mid-drive — load-generator semantics, not server semantics; use
+/// [`ClosedLoop::new`] for typed per-request failures instead.
 pub fn drive_closed_loop(
     gateway: &Gateway,
     keys: &[SessionKey],
     n_requests: usize,
     n_clients: usize,
 ) -> Vec<ServedRequest> {
-    assert!(!keys.is_empty(), "drive_closed_loop needs at least one session key");
-    let n_clients = n_clients.max(1);
+    ClosedLoop::strict(n_clients).drive(gateway, keys, n_requests).served
+}
+
+// ---------------------------------------------------------------------------
+// Open-loop driver
+// ---------------------------------------------------------------------------
+
+/// Drive `n_requests` through the gateway **open loop**: request `i`
+/// fires at `schedule.times(n)[i]` seconds after the drive starts,
+/// whether or not earlier requests have completed — so offered load does
+/// not self-throttle to the service rate, queues genuinely grow, and the
+/// SLO gate has something to shed.
+///
+/// Routing and sample selection match the closed-loop driver (request
+/// `i` → `keys[i % keys.len()]`, sample `(i / keys.len()) % eval_len`).
+/// Every fire is accounted exactly once in the returned [`DriveReport`]:
+/// answered requests land in `served`, admission-control rejections and
+/// closed-key fires are `shed`, execution errors are `failed` —
+/// `served + shed + failed == offered` always, even while sessions are
+/// hot-opened and closed mid-drive (the chaos-lane contract).
+///
+/// One collector thread per key receives in-flight replies in firing
+/// order (per-session replies are FIFO), so the firing thread never
+/// blocks on completions.
+pub fn drive_open_loop(
+    gateway: &Gateway,
+    keys: &[SessionKey],
+    schedule: &ArrivalSchedule,
+    n_requests: usize,
+) -> DriveReport {
+    assert!(!keys.is_empty(), "open-loop drive needs at least one session key");
+    type InFlight = (usize, usize, Instant, Receiver<Result<Vec<f32>>>);
+
+    let times = schedule.times(n_requests);
+    let start = Instant::now();
+    let mut offered = 0u64;
     let mut served: Vec<ServedRequest> = Vec::with_capacity(n_requests);
+    let mut failures: Vec<DriveFailure> = Vec::new();
+
     std::thread::scope(|scope| {
-        let mut handles = Vec::new();
-        for cid in 0..n_clients {
-            handles.push(scope.spawn(move || {
-                let mut out = Vec::new();
-                let mut i = cid;
-                while i < n_requests {
-                    let ki = i % keys.len();
-                    let session = gateway.session(&keys[ki]).expect("session vanished");
-                    let net = session.network();
-                    let px: usize = net.input.iter().product();
-                    let sample = (i / keys.len()) % net.eval_len();
-                    let pixels = net.eval_x.data()[sample * px..(sample + 1) * px].to_vec();
-                    let t = Instant::now();
-                    let logits = session.infer(pixels).expect("inference failed");
-                    out.push((ki, sample, t.elapsed().as_secs_f64(), logits));
-                    i += n_clients;
+        let mut txs = Vec::with_capacity(keys.len());
+        let mut collectors = Vec::with_capacity(keys.len());
+        for (ki, key) in keys.iter().enumerate() {
+            let (tx, rx) = channel::<InFlight>();
+            txs.push(tx);
+            collectors.push(scope.spawn(move || {
+                let mut out: Vec<ServedRequest> = Vec::new();
+                let mut bad: Vec<DriveFailure> = Vec::new();
+                while let Ok((i, sample, fired, reply)) = rx.recv() {
+                    match reply.recv() {
+                        Ok(Ok(logits)) => {
+                            out.push((ki, sample, fired.elapsed().as_secs_f64(), logits))
+                        }
+                        Ok(Err(e)) => bad.push(DriveFailure {
+                            index: i,
+                            key: key.clone(),
+                            kind: FailureKind::Failed(e.to_string()),
+                        }),
+                        // shut down mid-request without an answer: churn
+                        Err(_) => bad.push(DriveFailure {
+                            index: i,
+                            key: key.clone(),
+                            kind: FailureKind::Shed(ShedError::closed(key.clone())),
+                        }),
+                    }
                 }
-                out
+                (out, bad)
             }));
         }
-        for h in handles {
-            served.extend(h.join().unwrap());
+
+        for (i, &t) in times.iter().enumerate() {
+            let deadline = start + std::time::Duration::from_secs_f64(t);
+            let now = Instant::now();
+            if deadline > now {
+                std::thread::sleep(deadline - now);
+            }
+            let ki = i % keys.len();
+            offered += 1;
+            let Some(session) = gateway.session(&keys[ki]) else {
+                failures.push(DriveFailure {
+                    index: i,
+                    key: keys[ki].clone(),
+                    kind: FailureKind::Shed(ShedError::closed(keys[ki].clone())),
+                });
+                continue;
+            };
+            let net = session.network();
+            let px: usize = net.input.iter().product();
+            let sample = (i / keys.len()) % net.eval_len();
+            let pixels = net.eval_x.data()[sample * px..(sample + 1) * px].to_vec();
+            let fired = Instant::now();
+            match session.submit(pixels) {
+                Ok(rx) => {
+                    // a send can only fail if the collector is gone,
+                    // which cannot happen while txs is alive
+                    let _ = txs[ki].send((i, sample, fired, rx));
+                }
+                Err(SubmitError::Shed(e)) => failures.push(DriveFailure {
+                    index: i,
+                    key: keys[ki].clone(),
+                    kind: FailureKind::Shed(e),
+                }),
+                Err(SubmitError::Down { key }) => failures.push(DriveFailure {
+                    index: i,
+                    key: keys[ki].clone(),
+                    kind: FailureKind::Shed(ShedError::closed(key)),
+                }),
+                Err(e @ SubmitError::BadInput { .. }) => failures.push(DriveFailure {
+                    index: i,
+                    key: keys[ki].clone(),
+                    kind: FailureKind::Failed(e.to_string()),
+                }),
+            }
+        }
+        drop(txs); // collectors drain their in-flight queues and retire
+        for h in collectors {
+            let (out, bad) = h.join().unwrap();
+            served.extend(out);
+            failures.extend(bad);
         }
     });
-    served
+
+    DriveReport { offered, served, failures, wall_s: start.elapsed().as_secs_f64() }
 }
 
 #[cfg(test)]
@@ -82,24 +645,144 @@ mod tests {
 
     use crate::formats::Format;
     use crate::serving::backend::{Backend, NativeBackend};
+    use crate::serving::qos::ShedReason;
     use crate::serving::Session;
     use crate::testing::fixtures::tiny_network;
 
+    // -- ArrivalSchedule: pure timestamp-stream properties (no sleeping) ----
+
     #[test]
-    fn drives_every_request_exactly_once_across_keys() {
+    fn schedule_is_deterministic_under_seed() {
+        let sched = ArrivalSchedule::parse("poisson:200rps", 42).unwrap();
+        let a: Vec<u64> = sched.times(256).iter().map(|t| t.to_bits()).collect();
+        let b: Vec<u64> = sched.times(256).iter().map(|t| t.to_bits()).collect();
+        assert_eq!(a, b, "same (shape, seed) must be bit-identical");
+        let other = ArrivalSchedule::parse("poisson:200rps", 43).unwrap();
+        let c: Vec<u64> = other.times(256).iter().map(|t| t.to_bits()).collect();
+        assert_ne!(a, c, "a different seed must yield a different trace");
+    }
+
+    #[test]
+    fn schedule_times_are_strictly_increasing_and_positive() {
+        for spec in ["poisson:500rps", "burst:20rps:400rps:100ms:0.25", "ramp:50rps:500rps:200ms"]
+        {
+            let times = ArrivalSchedule::parse(spec, 7).unwrap().times(512);
+            assert_eq!(times.len(), 512);
+            assert!(times[0] > 0.0, "{spec}");
+            for w in times.windows(2) {
+                assert!(w[1] > w[0], "{spec}: arrivals must be strictly increasing");
+            }
+        }
+    }
+
+    #[test]
+    fn poisson_mean_rate_is_within_tolerance() {
+        let n = 4000;
+        let times = ArrivalSchedule::parse("poisson:200rps", 2018).unwrap().times(n);
+        // n arrivals at 200 rps should span ~20 s of trace time
+        let span = times[n - 1];
+        let expect = n as f64 / 200.0;
+        assert!(
+            (span - expect).abs() / expect < 0.1,
+            "trace span {span:.2}s vs expected {expect:.2}s"
+        );
+    }
+
+    #[test]
+    fn burst_concentrates_arrivals_in_the_duty_window() {
+        // peak 1000 rps for the first half of each 1000 ms period, base
+        // 10 rps for the rest: ~99% of arrivals land in the duty window
+        let sched = ArrivalSchedule::parse("burst:10rps:1000rps:1000ms:0.5", 5).unwrap();
+        let times = sched.times(2000);
+        let in_burst =
+            times.iter().filter(|&&t| (t * 1e3) % 1000.0 < 500.0).count() as f64;
+        let frac = in_burst / times.len() as f64;
+        assert!(frac > 0.9, "burst fraction {frac:.3} too low");
+    }
+
+    #[test]
+    fn ramp_skews_arrivals_toward_the_high_end() {
+        // lo 10 rps -> hi 1000 rps sawtooth: the second half of each
+        // period (mean rate 752.5) must collect ~3x the arrivals of the
+        // first half (mean rate 257.5)
+        let sched = ArrivalSchedule::parse("ramp:10rps:1000rps:500ms", 9).unwrap();
+        let times = sched.times(4000);
+        let late =
+            times.iter().filter(|&&t| (t * 1e3) % 500.0 >= 250.0).count() as f64;
+        let early = times.len() as f64 - late;
+        assert!(late > 2.0 * early, "late {late} vs early {early}");
+    }
+
+    #[test]
+    fn schedule_parse_accepts_and_rejects() {
+        assert_eq!(
+            ArrivalSchedule::parse("poisson:200rps", 1).unwrap().shape,
+            ArrivalShape::Poisson { rps: 200.0 }
+        );
+        assert_eq!(
+            ArrivalSchedule::parse("burst:20rps:400rps:100ms:0.25", 1).unwrap().shape,
+            ArrivalShape::Burst {
+                base_rps: 20.0,
+                peak_rps: 400.0,
+                period_ms: 100.0,
+                duty: 0.25
+            }
+        );
+        assert_eq!(
+            ArrivalSchedule::parse("ramp:50rps:500rps:200ms", 1).unwrap().shape,
+            ArrivalShape::Ramp { lo_rps: 50.0, hi_rps: 500.0, period_ms: 200.0 }
+        );
+        for bad in [
+            "",
+            "poisson",
+            "poisson:200",          // missing rps suffix
+            "poisson:xrps",         // not a number
+            "poisson:0rps",         // zero rate
+            "poisson:-5rps",        // negative rate
+            "burst:20rps:400rps",   // missing period + duty
+            "burst:20rps:400rps:100ms:1.5", // duty out of (0,1)
+            "burst:20rps:400rps:0ms:0.5",   // zero period
+            "ramp:50rps:500rps",    // missing period
+            "ramp:50rps:500rps:200", // missing ms suffix
+            "sine:50rps:500rps:200ms", // unknown shape
+        ] {
+            assert!(ArrivalSchedule::parse(bad, 1).is_err(), "'{bad}' should not parse");
+        }
+    }
+
+    #[test]
+    fn schedule_display_round_trips() {
+        for spec in ["poisson:200rps", "burst:20rps:400rps:100ms:0.25", "ramp:50rps:500rps:200ms"]
+        {
+            let sched = ArrivalSchedule::parse(spec, 11).unwrap();
+            let again = ArrivalSchedule::parse(&sched.to_string(), 11).unwrap();
+            assert_eq!(sched, again, "{spec}");
+        }
+    }
+
+    // -- drivers over a fixture gateway -------------------------------------
+
+    fn fixture_gateway(n_keys: usize) -> (Gateway, Vec<SessionKey>) {
         let gw = Gateway::empty();
         let mut keys = Vec::new();
-        for fmt in [Format::float(7, 6), Format::fixed(8, 8)] {
+        let fmts = [Format::float(7, 6), Format::fixed(8, 8)];
+        for fmt in fmts.iter().take(n_keys) {
             let net = tiny_network(8);
             let n = net.clone();
             keys.push(gw.adopt(Session::with_factory(
                 net,
-                fmt,
+                *fmt,
                 4,
                 Duration::from_millis(3),
                 Box::new(move || Ok(Box::new(NativeBackend::new(n)) as Box<dyn Backend>)),
             )));
         }
+        (gw, keys)
+    }
+
+    #[test]
+    fn drives_every_request_exactly_once_across_keys() {
+        let (gw, keys) = fixture_gateway(2);
         warm_up(&gw, &keys).unwrap();
         let served = drive_closed_loop(&gw, &keys, 24, 3);
         assert_eq!(served.len(), 24);
@@ -126,5 +809,89 @@ mod tests {
         let gw = Gateway::empty();
         let key = SessionKey::new("ghost", Format::SINGLE);
         assert!(warm_up(&gw, std::slice::from_ref(&key)).is_err());
+    }
+
+    /// Satellite (ISSUE 1): the non-strict closed loop records a
+    /// vanished session as typed per-request sheds — no panic, exact
+    /// accounting.
+    #[test]
+    fn closed_loop_records_vanished_sessions_instead_of_panicking() {
+        let gw = Gateway::empty();
+        let ghost = vec![SessionKey::new("ghost", Format::SINGLE)];
+        let report = ClosedLoop::new(3).drive(&gw, &ghost, 12);
+        assert_eq!(report.offered, 12);
+        assert!(report.served.is_empty());
+        assert_eq!(report.shed(), 12);
+        assert_eq!(report.failed(), 0);
+        assert!(report.is_balanced());
+        for f in &report.failures {
+            match &f.kind {
+                FailureKind::Shed(e) => assert_eq!(e.reason, ShedReason::Closed),
+                other => panic!("expected a closed shed, got {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn closed_loop_report_balances_on_a_healthy_gateway() {
+        let (gw, keys) = fixture_gateway(2);
+        let report = ClosedLoop::new(2).drive(&gw, &keys, 16);
+        assert_eq!(report.offered, 16);
+        assert_eq!(report.served.len(), 16);
+        assert_eq!(report.shed() + report.failed(), 0);
+        assert!(report.is_balanced());
+        // the render table lists every key and the totals line
+        let table = report.render(&keys);
+        for key in &keys {
+            assert!(table.contains(&key.to_string()), "{table}");
+        }
+        assert!(table.contains("total"));
+        assert!(!table.contains("UNBALANCED"), "{table}");
+    }
+
+    #[test]
+    fn open_loop_serves_everything_under_light_load() {
+        let (gw, keys) = fixture_gateway(2);
+        // 20k rps over 32 requests: ~1.6 ms of schedule, served easily
+        let sched = ArrivalSchedule::parse("poisson:20000rps", 13).unwrap();
+        let report = drive_open_loop(&gw, &keys, &sched, 32);
+        assert_eq!(report.offered, 32);
+        assert_eq!(report.served.len(), 32);
+        assert!(report.is_balanced());
+        // sample streams match the closed-loop routing contract
+        for ki in 0..keys.len() {
+            let mut samples: Vec<usize> = report
+                .served
+                .iter()
+                .filter(|(k, _, _, _)| *k == ki)
+                .map(|(_, s, _, _)| *s)
+                .collect();
+            samples.sort_unstable();
+            let mut want: Vec<usize> = (0..16).map(|i| i % 8).collect();
+            want.sort_unstable();
+            assert_eq!(samples, want);
+        }
+    }
+
+    /// Fires at a key with no routed session are counted as Closed
+    /// sheds, keeping the books exact — the churn-chaos foundation.
+    #[test]
+    fn open_loop_counts_unrouted_fires_as_closed_sheds() {
+        let gw = Gateway::empty();
+        let ghost = vec![SessionKey::new("ghost", Format::SINGLE)];
+        let sched = ArrivalSchedule::parse("poisson:50000rps", 3).unwrap();
+        let report = drive_open_loop(&gw, &ghost, &sched, 20);
+        assert_eq!(report.offered, 20);
+        assert!(report.served.is_empty());
+        assert_eq!(report.shed(), 20);
+        assert!(report.is_balanced());
+        for f in &report.failures {
+            match &f.kind {
+                FailureKind::Shed(e) => assert_eq!(e.reason, ShedReason::Closed),
+                other => panic!("expected a closed shed, got {other:?}"),
+            }
+        }
+        let table = report.render(&ghost);
+        assert!(!table.contains("UNBALANCED"), "{table}");
     }
 }

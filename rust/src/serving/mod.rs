@@ -24,11 +24,23 @@
 //! * [`Gateway`] — N concurrent sessions keyed by `(network, spec)`
 //!   with per-key routing, hot add/remove, and live aggregate
 //!   telemetry ([`GatewayStats`] — requests, batches, padded slots,
-//!   p50/p99 queue latency, and shared weight-store counters per
-//!   session).  All native sessions of one gateway stage weights from
-//!   ONE [`crate::store::WeightStore`], so sessions whose specs
-//!   resolve a layer to the same format share its pre-quantized
-//!   tensor (`--weight-budget`; DESIGN.md §Storage).
+//!   p50/p99 queue latency, queue depth, shed counts, and shared
+//!   weight-store counters per session).  All native sessions of one
+//!   gateway stage weights from ONE [`crate::store::WeightStore`], so
+//!   sessions whose specs resolve a layer to the same format share its
+//!   pre-quantized tensor (`--weight-budget`; DESIGN.md §Storage).
+//! * **QoS** ([`SloTarget`], [`QosGate`], [`QosScheduler`]) — the
+//!   control layer over that telemetry (DESIGN.md §Serving QoS): a
+//!   session opened with an SLO (p99 queue-latency budget + max queue
+//!   depth, `--slo`) sheds excess load with a typed, loud
+//!   [`ShedError`] instead of queueing without bound, and a gateway
+//!   with `--qos-slots` drains sessions by SLO headroom
+//!   (closest-to-violation first, with a starvation floor).  The
+//!   open-loop trace-driven load generator ([`ArrivalSchedule`],
+//!   [`drive_open_loop`]) fires requests at schedule time regardless
+//!   of completions — the only drive mode where shedding and queue
+//!   growth are observable — and accounts every offered request
+//!   exactly once (`served + shed == offered`).
 //!
 //! ```no_run
 //! use precis::formats::Format;
@@ -48,13 +60,21 @@
 mod backend;
 mod gateway;
 mod loadgen;
+mod qos;
 mod session;
 
 #[cfg(feature = "pjrt")]
 pub use backend::PjrtBackend;
 pub use backend::{Backend, BackendFactory, BackendKind, NativeBackend};
 pub use gateway::{Gateway, GatewayStats};
-pub use loadgen::{drive_closed_loop, warm_up, ServedRequest};
+pub use loadgen::{
+    drive_closed_loop, drive_open_loop, warm_up, ArrivalSchedule, ArrivalShape, ClosedLoop,
+    DriveFailure, DriveReport, FailureKind, ServedRequest,
+};
+pub use qos::{
+    QosGate, QosScheduler, ShedError, ShedReason, SloTarget, DEFAULT_SLO_DEPTH, STARVATION_FLOOR,
+};
 pub use session::{
-    QUEUE_LAT_WINDOW, Session, SessionKey, SessionOptions, SessionStats, split_session_specs,
+    QUEUE_LAT_WINDOW, Session, SessionKey, SessionOptions, SessionStats, SubmitError,
+    split_session_specs,
 };

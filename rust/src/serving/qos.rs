@@ -1,0 +1,708 @@
+//! SLO-driven quality-of-service: admission control + priority scheduling.
+//!
+//! The Gateway serves many sessions from one process; under heavy traffic
+//! the PR 2/5/6 telemetry (queue-latency percentiles, store counters)
+//! must become *control inputs* (ROADMAP item 4).  This module is that
+//! control layer, in two halves:
+//!
+//! * [`QosGate`] — per-session admission control.  A session opened with
+//!   an [`SloTarget`] (p99 queue-latency budget + max queue depth) sheds
+//!   new work with a typed, loud [`ShedError`] the moment its queue
+//!   exceeds the depth bound or its sliding-window p99 exceeds the
+//!   budget.  Reject-don't-collapse: every offered request is either
+//!   served bit-exactly or refused visibly — never silently dropped —
+//!   so `served + shed == offered` holds exactly (DESIGN.md §Serving
+//!   QoS).  Sessions without an SLO are never shed (byte-for-byte the
+//!   pre-QoS behavior).
+//!
+//! * [`QosScheduler`] — cross-session priority scheduling.  When the
+//!   gateway models limited compute (`SessionOptions::qos_slots > 0`),
+//!   each dispatcher acquires an execution [`Permit`] before running a
+//!   batch.  Grants go to the waiter with the least SLO *headroom*
+//!   (closest to violating its budget first); best-effort sessions
+//!   (no SLO) have infinite headroom but a starvation floor guarantees
+//!   they still progress: a waiter passed over [`STARVATION_FLOOR`]
+//!   times is granted next regardless of headroom.
+//!
+//! The decision logic is pure and unit-tested ([`QosGate::admit`],
+//! `pick`); the wiring lives in `serving::session` / `serving::gateway`.
+
+use std::fmt;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+
+use anyhow::{bail, Result};
+
+use crate::serving::session::SessionKey;
+
+/// Default queue-depth bound when an SLO names only a latency budget.
+pub const DEFAULT_SLO_DEPTH: usize = 256;
+
+/// Grants a waiter is passed over before it is scheduled unconditionally.
+pub const STARVATION_FLOOR: u64 = 4;
+
+// ---------------------------------------------------------------------------
+// SLO target
+// ---------------------------------------------------------------------------
+
+/// A per-session service-level objective: sliding-window p99 queue-latency
+/// budget plus a hard queue-depth bound (the shedding inputs).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SloTarget {
+    /// p99 queue-latency budget in milliseconds (sliding window,
+    /// `SessionStats::p99_queue_ms`).
+    pub p99_ms: f64,
+    /// Maximum admitted-but-uncompleted requests before depth shedding.
+    pub max_depth: usize,
+}
+
+impl SloTarget {
+    /// Validated constructor: the budget must be a positive finite number
+    /// of milliseconds and the depth bound at least 1.
+    pub fn new(p99_ms: f64, max_depth: usize) -> Result<SloTarget> {
+        if !p99_ms.is_finite() || p99_ms <= 0.0 {
+            bail!("slo p99 budget must be a positive number of ms, got {p99_ms}");
+        }
+        if max_depth == 0 {
+            bail!("slo max queue depth must be >= 1");
+        }
+        Ok(SloTarget { p99_ms, max_depth })
+    }
+
+    /// Parse the CLI spelling: `"<budget>ms"` or `"<budget>ms:<depth>"`,
+    /// e.g. `20ms` (depth defaults to [`DEFAULT_SLO_DEPTH`]) or `5ms:64`.
+    pub fn parse(s: &str) -> Result<SloTarget> {
+        let (budget, depth) = match s.split_once(':') {
+            Some((b, d)) => (b, Some(d)),
+            None => (s, None),
+        };
+        let Some(ms) = budget.strip_suffix("ms") else {
+            bail!("bad SLO '{s}': expected '<budget>ms[:<depth>]', e.g. 20ms or 5ms:64");
+        };
+        let p99_ms: f64 = ms
+            .parse()
+            .map_err(|_| anyhow::anyhow!("bad SLO '{s}': '{ms}' is not a number of ms"))?;
+        let max_depth = match depth {
+            Some(d) => d
+                .parse()
+                .map_err(|_| anyhow::anyhow!("bad SLO '{s}': '{d}' is not a queue depth"))?,
+            None => DEFAULT_SLO_DEPTH,
+        };
+        SloTarget::new(p99_ms, max_depth)
+    }
+}
+
+impl fmt::Display for SloTarget {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}ms:{}", self.p99_ms, self.max_depth)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Typed shed error
+// ---------------------------------------------------------------------------
+
+/// Why a request was shed.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ShedReason {
+    /// The session's queue depth reached `SloTarget::max_depth`.
+    Depth,
+    /// The session's sliding-window p99 queue latency exceeded
+    /// `SloTarget::p99_ms` (only enforced while a backlog exists, so a
+    /// drained session always recovers — see [`QosGate::admit`]).
+    Latency,
+    /// No session is routed for the key (closed or never opened); the
+    /// open-loop driver records unrouted fires as sheds so
+    /// `served + shed == offered` holds exactly under churn.
+    Closed,
+}
+
+impl ShedReason {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            ShedReason::Depth => "depth",
+            ShedReason::Latency => "latency",
+            ShedReason::Closed => "closed",
+        }
+    }
+}
+
+/// Typed, loud rejection: admission control refused a request.
+///
+/// Carried as the `anyhow` error of `Session::infer_async` (and the
+/// typed `Session::submit`), so callers distinguish shedding from real
+/// failures with `err.downcast_ref::<ShedError>()`.
+#[derive(Clone, Debug)]
+pub struct ShedError {
+    /// Which session shed.
+    pub key: SessionKey,
+    /// Which bound tripped.
+    pub reason: ShedReason,
+    /// Queue depth observed at the decision.
+    pub depth: usize,
+    /// Sliding-window p99 queue latency (ms) observed at the decision.
+    pub p99_ms: f64,
+    /// The violated target (`None` for [`ShedReason::Closed`], which is
+    /// routing state, not an SLO decision).
+    pub slo: Option<SloTarget>,
+}
+
+impl ShedError {
+    /// Shed record for a request fired at a key with no routed session.
+    pub fn closed(key: SessionKey) -> ShedError {
+        ShedError {
+            key,
+            reason: ShedReason::Closed,
+            depth: 0,
+            p99_ms: 0.0,
+            slo: None,
+        }
+    }
+}
+
+impl fmt::Display for ShedError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self.slo {
+            Some(slo) => write!(
+                f,
+                "session {} shed request ({}): queue depth {}, window p99 {:.3}ms, slo {}",
+                self.key,
+                self.reason.as_str(),
+                self.depth,
+                self.p99_ms,
+                slo
+            ),
+            None => write!(f, "session {} shed request (closed): no session routed", self.key),
+        }
+    }
+}
+
+impl std::error::Error for ShedError {}
+
+// ---------------------------------------------------------------------------
+// Admission gate
+// ---------------------------------------------------------------------------
+
+/// Per-session admission control state.  Shared (`Arc`) between the
+/// submitting side (`Session::submit` calls [`QosGate::admit`]) and the
+/// dispatcher (which completes requests and publishes the window p99).
+///
+/// Depth accounting is exact: `admit` increments with a compare-and-swap
+/// loop that refuses to exceed `max_depth`, and the dispatcher decrements
+/// *before* replies are delivered, so `depth == admitted - completed`
+/// never over-counts a request the caller has already seen answered.
+#[derive(Debug)]
+pub struct QosGate {
+    key: SessionKey,
+    slo: Option<SloTarget>,
+    /// Admitted-but-uncompleted requests (queued + in the running batch).
+    depth: AtomicUsize,
+    shed_depth: AtomicU64,
+    shed_latency: AtomicU64,
+    /// Latest sliding-window p99 queue latency, as `f64::to_bits`.
+    p99_bits: AtomicU64,
+}
+
+impl QosGate {
+    pub fn new(key: SessionKey, slo: Option<SloTarget>) -> QosGate {
+        QosGate {
+            key,
+            slo,
+            depth: AtomicUsize::new(0),
+            shed_depth: AtomicU64::new(0),
+            shed_latency: AtomicU64::new(0),
+            p99_bits: AtomicU64::new(0.0f64.to_bits()),
+        }
+    }
+
+    pub fn slo(&self) -> Option<SloTarget> {
+        self.slo
+    }
+
+    /// Admit or shed one request.  Decision table (DESIGN.md §Serving QoS):
+    ///
+    /// | SLO  | window p99 > budget   | depth < max_depth | outcome         |
+    /// |------|-----------------------|-------------------|-----------------|
+    /// | none | —                     | —                 | admit           |
+    /// | set  | yes, and depth > 0    | —                 | shed (latency)  |
+    /// | set  | no, or depth == 0     | yes               | admit           |
+    /// | set  | no, or depth == 0     | no                | shed (depth)    |
+    ///
+    /// The latency bound only sheds while a backlog exists (`depth > 0`):
+    /// the window percentile is history, and once the queue has fully
+    /// drained the next request cannot inherit the old wait — without the
+    /// backlog condition a session would stay wedged shut long after
+    /// recovering.
+    pub fn admit(&self) -> Result<(), ShedError> {
+        let Some(slo) = self.slo else {
+            // Best-effort session: never shed, but still track depth so
+            // the stats table shows backlog.
+            self.depth.fetch_add(1, Ordering::AcqRel);
+            return Ok(());
+        };
+        let p99_ms = self.window_p99_ms();
+        if p99_ms > slo.p99_ms {
+            let depth = self.depth.load(Ordering::Acquire);
+            if depth > 0 {
+                self.shed_latency.fetch_add(1, Ordering::Relaxed);
+                return Err(ShedError {
+                    key: self.key.clone(),
+                    reason: ShedReason::Latency,
+                    depth,
+                    p99_ms,
+                    slo: Some(slo),
+                });
+            }
+        }
+        // Compare-and-increment: depth never exceeds max_depth, even with
+        // concurrent submitters racing.
+        match self
+            .depth
+            .fetch_update(Ordering::AcqRel, Ordering::Acquire, |d| {
+                (d < slo.max_depth).then_some(d + 1)
+            }) {
+            Ok(_) => Ok(()),
+            Err(depth) => {
+                self.shed_depth.fetch_add(1, Ordering::Relaxed);
+                Err(ShedError {
+                    key: self.key.clone(),
+                    reason: ShedReason::Depth,
+                    depth,
+                    p99_ms,
+                    slo: Some(slo),
+                })
+            }
+        }
+    }
+
+    /// Mark `n` admitted requests complete (replied or withdrawn).
+    pub(crate) fn on_completed(&self, n: usize) {
+        // Saturating: a stray extra decrement must not wrap the gate open.
+        let _ = self
+            .depth
+            .fetch_update(Ordering::AcqRel, Ordering::Acquire, |d| {
+                Some(d.saturating_sub(n))
+            });
+    }
+
+    /// Publish the dispatcher's sliding-window p99 queue latency (ms).
+    pub(crate) fn record_p99_ms(&self, p99_ms: f64) {
+        self.p99_bits.store(p99_ms.to_bits(), Ordering::Release);
+    }
+
+    /// Current admitted-but-uncompleted request count.
+    pub fn depth(&self) -> usize {
+        self.depth.load(Ordering::Acquire)
+    }
+
+    /// Latest published sliding-window p99 queue latency (ms).
+    pub fn window_p99_ms(&self) -> f64 {
+        f64::from_bits(self.p99_bits.load(Ordering::Acquire))
+    }
+
+    pub fn shed_depth(&self) -> u64 {
+        self.shed_depth.load(Ordering::Relaxed)
+    }
+
+    pub fn shed_latency(&self) -> u64 {
+        self.shed_latency.load(Ordering::Relaxed)
+    }
+
+    /// Total requests shed by this gate.
+    pub fn shed_total(&self) -> u64 {
+        self.shed_depth() + self.shed_latency()
+    }
+
+    /// SLO headroom in `(-inf, 1]`: the min of the latency margin
+    /// `(budget - p99) / budget` and the depth margin
+    /// `1 - depth / max_depth`.  `<= 0` means at/over the bound;
+    /// best-effort sessions report `f64::INFINITY` (always last pick,
+    /// modulo the starvation floor).
+    pub fn headroom(&self) -> f64 {
+        let Some(slo) = self.slo else {
+            return f64::INFINITY;
+        };
+        let lat = (slo.p99_ms - self.window_p99_ms()) / slo.p99_ms;
+        let dep = 1.0 - self.depth() as f64 / slo.max_depth as f64;
+        lat.min(dep)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Priority scheduler
+// ---------------------------------------------------------------------------
+
+/// Cross-session execution-permit scheduler.
+///
+/// Models limited compute: at most `slots` batches run concurrently
+/// gateway-wide.  Dispatchers call [`QosScheduler::acquire`] before
+/// `Backend::run_spec`; the returned [`Permit`] releases the slot on
+/// drop.  Among waiting dispatchers the grant goes to the one whose
+/// [`QosGate::headroom`] is smallest (closest to violating its SLO),
+/// except that any waiter already passed over [`STARVATION_FLOOR`] times
+/// is granted first (oldest such waiter wins) so best-effort sessions
+/// cannot starve.
+///
+/// With `SessionOptions::qos_slots == 0` (the default) no scheduler is
+/// built and dispatch order is exactly the pre-QoS behavior.
+#[derive(Debug)]
+pub struct QosScheduler {
+    slots: usize,
+    state: Mutex<SchedState>,
+    cv: Condvar,
+}
+
+#[derive(Debug, Default)]
+struct SchedState {
+    in_flight: usize,
+    next_ticket: u64,
+    waiters: Vec<Waiter>,
+}
+
+#[derive(Debug)]
+struct Waiter {
+    ticket: u64,
+    gate: Arc<QosGate>,
+    passed_over: u64,
+}
+
+impl QosScheduler {
+    /// `slots` is the number of concurrent batch executions permitted.
+    pub fn new(slots: usize) -> Arc<QosScheduler> {
+        assert!(slots >= 1, "QosScheduler needs at least one slot");
+        Arc::new(QosScheduler {
+            slots,
+            state: Mutex::new(SchedState::default()),
+            cv: Condvar::new(),
+        })
+    }
+
+    pub fn slots(&self) -> usize {
+        self.slots
+    }
+
+    /// Number of dispatchers currently waiting for a slot.
+    pub fn waiting(&self) -> usize {
+        self.lock().waiters.len()
+    }
+
+    /// Block until this gate's dispatcher is granted an execution slot.
+    pub fn acquire(self: &Arc<Self>, gate: &Arc<QosGate>) -> Permit {
+        let mut st = self.lock();
+        let ticket = st.next_ticket;
+        st.next_ticket += 1;
+        st.waiters.push(Waiter {
+            ticket,
+            gate: gate.clone(),
+            passed_over: 0,
+        });
+        loop {
+            if st.in_flight < self.slots {
+                let ranked: Vec<(u64, f64, u64)> = st
+                    .waiters
+                    .iter()
+                    .map(|w| (w.ticket, w.gate.headroom(), w.passed_over))
+                    .collect();
+                let idx = pick(&ranked).expect("acquire: at least this waiter is queued");
+                if st.waiters[idx].ticket == ticket {
+                    st.waiters.swap_remove(idx);
+                    st.in_flight += 1;
+                    // Everyone left behind was passed over by this grant.
+                    for w in &mut st.waiters {
+                        w.passed_over += 1;
+                    }
+                    return Permit {
+                        sched: self.clone(),
+                    };
+                }
+                // A different waiter is next in line; wake it and wait.
+                self.cv.notify_all();
+            }
+            st = self
+                .cv
+                .wait(st)
+                .unwrap_or_else(std::sync::PoisonError::into_inner);
+        }
+    }
+
+    fn release(&self) {
+        let mut st = self.lock();
+        st.in_flight = st.in_flight.saturating_sub(1);
+        drop(st);
+        self.cv.notify_all();
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, SchedState> {
+        self.state
+            .lock()
+            .unwrap_or_else(std::sync::PoisonError::into_inner)
+    }
+}
+
+/// An execution slot; releases (and wakes waiters) on drop.
+#[derive(Debug)]
+pub struct Permit {
+    sched: Arc<QosScheduler>,
+}
+
+impl Drop for Permit {
+    fn drop(&mut self) {
+        self.sched.release();
+    }
+}
+
+/// Pure selection policy over `(ticket, headroom, passed_over)` waiters:
+/// the oldest waiter at/over the starvation floor wins; otherwise the
+/// waiter with the least headroom (ties to the oldest ticket).
+fn pick(waiters: &[(u64, f64, u64)]) -> Option<usize> {
+    if waiters.is_empty() {
+        return None;
+    }
+    let starved = waiters
+        .iter()
+        .enumerate()
+        .filter(|(_, w)| w.2 >= STARVATION_FLOOR)
+        .min_by_key(|(_, w)| w.0);
+    if let Some((i, _)) = starved {
+        return Some(i);
+    }
+    waiters
+        .iter()
+        .enumerate()
+        .min_by(|(_, a), (_, b)| a.1.total_cmp(&b.1).then(a.0.cmp(&b.0)))
+        .map(|(i, _)| i)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::formats::PrecisionSpec;
+    use std::sync::atomic::AtomicUsize;
+    use std::time::Duration;
+
+    fn key(name: &str) -> SessionKey {
+        SessionKey {
+            net: name.to_string(),
+            spec: "float:m7e6".parse::<PrecisionSpec>().unwrap(),
+        }
+    }
+
+    // -- SloTarget ----------------------------------------------------------
+
+    #[test]
+    fn slo_parse_accepts_budget_and_depth() {
+        let s = SloTarget::parse("20ms").unwrap();
+        assert_eq!(s.p99_ms, 20.0);
+        assert_eq!(s.max_depth, DEFAULT_SLO_DEPTH);
+
+        let s = SloTarget::parse("5ms:64").unwrap();
+        assert_eq!(s.p99_ms, 5.0);
+        assert_eq!(s.max_depth, 64);
+
+        let s = SloTarget::parse("0.5ms:8").unwrap();
+        assert_eq!(s.p99_ms, 0.5);
+        assert_eq!(s.max_depth, 8);
+    }
+
+    #[test]
+    fn slo_parse_rejects_malformed() {
+        for bad in ["", "20", "20s", "ms", "xms", "20ms:", "20ms:x", "20ms:0", "-3ms", "0ms"] {
+            assert!(SloTarget::parse(bad).is_err(), "'{bad}' should not parse");
+        }
+    }
+
+    #[test]
+    fn slo_display_round_trips() {
+        let s = SloTarget::parse("5ms:64").unwrap();
+        assert_eq!(SloTarget::parse(&s.to_string()).unwrap(), s);
+    }
+
+    // -- QosGate ------------------------------------------------------------
+
+    #[test]
+    fn gate_without_slo_always_admits_and_tracks_depth() {
+        let g = QosGate::new(key("a"), None);
+        for _ in 0..1000 {
+            g.admit().unwrap();
+        }
+        assert_eq!(g.depth(), 1000);
+        assert_eq!(g.shed_total(), 0);
+        g.on_completed(1000);
+        assert_eq!(g.depth(), 0);
+    }
+
+    #[test]
+    fn gate_sheds_on_depth_bound_and_recovers() {
+        let g = QosGate::new(key("a"), Some(SloTarget::new(50.0, 4).unwrap()));
+        for _ in 0..4 {
+            g.admit().unwrap();
+        }
+        let err = g.admit().unwrap_err();
+        assert_eq!(err.reason, ShedReason::Depth);
+        assert_eq!(err.depth, 4);
+        assert_eq!(g.shed_depth(), 1);
+        assert_eq!(g.depth(), 4);
+
+        g.on_completed(2);
+        assert_eq!(g.depth(), 2);
+        g.admit().unwrap();
+        g.admit().unwrap();
+        assert_eq!(g.admit().unwrap_err().reason, ShedReason::Depth);
+    }
+
+    #[test]
+    fn gate_depth_bound_is_exact_under_contention() {
+        let g = Arc::new(QosGate::new(key("a"), Some(SloTarget::new(50.0, 16).unwrap())));
+        let admitted = Arc::new(AtomicUsize::new(0));
+        std::thread::scope(|s| {
+            for _ in 0..8 {
+                let g = g.clone();
+                let admitted = admitted.clone();
+                s.spawn(move || {
+                    for _ in 0..100 {
+                        if g.admit().is_ok() {
+                            admitted.fetch_add(1, Ordering::Relaxed);
+                        }
+                    }
+                });
+            }
+        });
+        // Exactly max_depth admissions succeed; every other attempt is a
+        // counted depth shed, and the books balance.
+        assert_eq!(admitted.load(Ordering::Relaxed), 16);
+        assert_eq!(g.depth(), 16);
+        assert_eq!(g.shed_depth(), 800 - 16);
+    }
+
+    #[test]
+    fn gate_latency_shed_requires_backlog() {
+        let g = QosGate::new(key("a"), Some(SloTarget::new(5.0, 64).unwrap()));
+        g.record_p99_ms(12.0);
+        // Over budget but fully drained: the next request cannot inherit
+        // the historical wait, so it is admitted (recovery rule).
+        g.admit().unwrap();
+        // Now a backlog exists and the window is still over budget: shed.
+        let err = g.admit().unwrap_err();
+        assert_eq!(err.reason, ShedReason::Latency);
+        assert_eq!(err.p99_ms, 12.0);
+        assert_eq!(g.shed_latency(), 1);
+        // Window recovers: admission resumes even with the backlog.
+        g.record_p99_ms(1.0);
+        g.admit().unwrap();
+        assert_eq!(g.depth(), 2);
+    }
+
+    #[test]
+    fn shed_error_downcasts_through_anyhow() {
+        let g = QosGate::new(key("a"), Some(SloTarget::new(50.0, 1).unwrap()));
+        g.admit().unwrap();
+        let err = anyhow::Error::new(g.admit().unwrap_err());
+        let shed = err.downcast_ref::<ShedError>().expect("typed shed");
+        assert_eq!(shed.reason, ShedReason::Depth);
+        assert_eq!(shed.key, key("a"));
+    }
+
+    #[test]
+    fn headroom_orders_sessions_by_slo_pressure() {
+        let best_effort = QosGate::new(key("be"), None);
+        assert_eq!(best_effort.headroom(), f64::INFINITY);
+
+        let g = QosGate::new(key("a"), Some(SloTarget::new(10.0, 10).unwrap()));
+        assert_eq!(g.headroom(), 1.0);
+        g.record_p99_ms(5.0); // latency margin 0.5, depth margin 1.0
+        assert_eq!(g.headroom(), 0.5);
+        for _ in 0..8 {
+            g.admit().unwrap(); // depth margin 0.2 < latency margin
+        }
+        assert!((g.headroom() - 0.2).abs() < 1e-12);
+        g.record_p99_ms(20.0); // over budget: headroom goes negative
+        assert!(g.headroom() < 0.0);
+    }
+
+    // -- pick() policy ------------------------------------------------------
+
+    #[test]
+    fn pick_prefers_least_headroom_then_oldest() {
+        assert_eq!(pick(&[]), None);
+        // (ticket, headroom, passed_over)
+        let w = [(0, 0.9, 0), (1, 0.1, 0), (2, 0.5, 0)];
+        assert_eq!(pick(&w), Some(1));
+        // Tie on headroom: oldest ticket wins.
+        let w = [(7, 0.3, 0), (3, 0.3, 0)];
+        assert_eq!(pick(&w), Some(1));
+    }
+
+    #[test]
+    fn pick_starvation_floor_overrides_headroom() {
+        // The best-effort waiter (infinite headroom) has been passed over
+        // STARVATION_FLOOR times: it goes first despite an SLO waiter
+        // being near violation.
+        let w = [
+            (0, f64::INFINITY, STARVATION_FLOOR),
+            (1, 0.01, 0),
+            (2, f64::INFINITY, STARVATION_FLOOR + 2),
+        ];
+        // Oldest starved waiter wins (ticket 0).
+        assert_eq!(pick(&w), Some(0));
+        // Below the floor, headroom rules.
+        let w = [(0, f64::INFINITY, STARVATION_FLOOR - 1), (1, 0.01, 0)];
+        assert_eq!(pick(&w), Some(1));
+    }
+
+    // -- QosScheduler -------------------------------------------------------
+
+    #[test]
+    fn scheduler_enforces_slot_bound() {
+        let sched = QosScheduler::new(1);
+        let gate = Arc::new(QosGate::new(key("a"), None));
+        let running = Arc::new(AtomicUsize::new(0));
+        let peak = Arc::new(AtomicUsize::new(0));
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                let sched = sched.clone();
+                let gate = gate.clone();
+                let running = running.clone();
+                let peak = peak.clone();
+                s.spawn(move || {
+                    for _ in 0..10 {
+                        let permit = sched.acquire(&gate);
+                        let now = running.fetch_add(1, Ordering::SeqCst) + 1;
+                        peak.fetch_max(now, Ordering::SeqCst);
+                        std::thread::sleep(Duration::from_micros(50));
+                        running.fetch_sub(1, Ordering::SeqCst);
+                        drop(permit);
+                    }
+                });
+            }
+        });
+        assert_eq!(peak.load(Ordering::SeqCst), 1, "slot bound violated");
+        assert_eq!(sched.waiting(), 0);
+    }
+
+    #[test]
+    fn scheduler_grants_all_waiters_no_deadlock() {
+        let sched = QosScheduler::new(2);
+        let tight = Arc::new(QosGate::new(
+            key("tight"),
+            Some(SloTarget::new(1.0, 2).unwrap()),
+        ));
+        let be = Arc::new(QosGate::new(key("be"), None));
+        let done = Arc::new(AtomicUsize::new(0));
+        std::thread::scope(|s| {
+            for i in 0..6 {
+                let sched = sched.clone();
+                let gate = if i % 2 == 0 { tight.clone() } else { be.clone() };
+                let done = done.clone();
+                s.spawn(move || {
+                    for _ in 0..20 {
+                        let _permit = sched.acquire(&gate);
+                        std::thread::sleep(Duration::from_micros(20));
+                        done.fetch_add(1, Ordering::SeqCst);
+                    }
+                });
+            }
+        });
+        // Starvation floor + release wakeups: every acquisition completes.
+        assert_eq!(done.load(Ordering::SeqCst), 120);
+    }
+}

@@ -24,6 +24,7 @@ use anyhow::{anyhow, Result};
 use crate::formats::PrecisionSpec;
 use crate::nn::{Network, Zoo};
 use crate::serving::backend::{make_factory, BackendFactory, BackendKind};
+use crate::serving::qos::{QosGate, QosScheduler, ShedError, SloTarget};
 use crate::store::{StoreStats, WeightStore};
 use crate::tensor::Tensor;
 
@@ -106,6 +107,12 @@ pub struct SessionStats {
     /// whether this session was opened with packed-domain execution
     /// (`SessionOptions::packed_exec`; DESIGN.md §Packed execution)
     pub packed_exec: bool,
+    /// requests refused by admission control (`SessionOptions::slo`;
+    /// DESIGN.md §Serving QoS).  Always 0 without an SLO.
+    pub shed: u64,
+    /// admitted-but-uncompleted requests right now (queued + in the
+    /// running batch) — the depth-shedding input, visible live
+    pub depth: usize,
 }
 
 /// Sliding-window size for the queue-latency percentiles.
@@ -148,6 +155,8 @@ impl StatsCell {
                 p99_queue_ms: 0.0,
                 store: self.store,
                 packed_exec: false, // the Session overrides from its options
+                shed: 0,            // the Session overrides from its gate
+                depth: 0,           // the Session overrides from its gate
             },
             self.queue_lat_s.clone(),
         )
@@ -198,6 +207,18 @@ pub struct SessionOptions {
     /// execution).  Bit-identical to staged execution by contract;
     /// native backends only (PJRT executables hold weights on-device).
     pub packed_exec: bool,
+    /// per-session service-level objective (`--slo`; DESIGN.md §Serving
+    /// QoS): p99 queue-latency budget + max queue depth.  With an SLO
+    /// set, submissions are admission-controlled and shed with a typed
+    /// [`ShedError`] when a bound trips; `None` (the default) never
+    /// sheds — byte-for-byte the pre-QoS behavior.
+    pub slo: Option<SloTarget>,
+    /// gateway-wide execution slots for SLO-priority scheduling
+    /// (`--qos-slots`).  Consumed by [`crate::serving::Gateway`] when it
+    /// builds its [`QosScheduler`]; 0 (the default) disables the
+    /// scheduler entirely and dispatchers run unthrottled as before.
+    /// Ignored by standalone sessions.
+    pub qos_slots: usize,
 }
 
 impl Default for SessionOptions {
@@ -207,6 +228,8 @@ impl Default for SessionOptions {
             max_wait: Duration::from_millis(5),
             weight_budget: None,
             packed_exec: false,
+            slo: None,
+            qos_slots: 0,
         }
     }
 }
@@ -231,10 +254,61 @@ pub struct Session {
     input_len: usize,
     classes: usize,
     stats: Arc<Mutex<StatsCell>>,
+    /// admission-control state, shared with the dispatcher (which
+    /// completes requests and publishes the window p99)
+    gate: Arc<QosGate>,
     /// whether this session was opened with packed-domain execution
     /// (false for [`Session::with_factory`] — custom factories decide
     /// their backend's configuration themselves)
     packed_exec: bool,
+}
+
+/// Typed submission failure from [`Session::submit`]: shed by admission
+/// control, session down, or malformed input.  `infer_async` carries the
+/// same values as `anyhow` errors (a shed converts to the bare
+/// [`ShedError`] so `downcast_ref::<ShedError>()` works on either path).
+#[derive(Debug)]
+pub enum SubmitError {
+    /// Admission control refused the request (reject-don't-collapse).
+    Shed(ShedError),
+    /// The dispatcher has retired; no requests can be queued.
+    Down { key: SessionKey },
+    /// Wrong pixel count for the session's network.
+    BadInput { key: SessionKey, expected: usize, got: usize },
+}
+
+impl fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            SubmitError::Shed(e) => e.fmt(f),
+            SubmitError::Down { key } => write!(f, "session {key} is down"),
+            SubmitError::BadInput { key, expected, got } => {
+                write!(f, "{key}: expected {expected} pixels, got {got}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for SubmitError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            SubmitError::Shed(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl SubmitError {
+    /// Convert for the `anyhow`-surface methods.  A shed becomes the
+    /// bare [`ShedError`] (not wrapped), so callers can downcast it from
+    /// the `anyhow::Error` directly; the messages of the other variants
+    /// are unchanged from the pre-QoS `infer_async`.
+    pub fn into_anyhow(self) -> anyhow::Error {
+        match self {
+            SubmitError::Shed(e) => anyhow::Error::new(e),
+            other => anyhow::Error::new(other),
+        }
+    }
 }
 
 impl Session {
@@ -275,6 +349,23 @@ impl Session {
         opts: SessionOptions,
         store: Arc<WeightStore>,
     ) -> Result<Session> {
+        Self::open_qos(zoo, net, spec, kind, opts, store, None)
+    }
+
+    /// [`Session::open_in`] under a gateway-wide [`QosScheduler`]: the
+    /// dispatcher acquires an execution permit before every batch, so
+    /// sessions closest to violating their SLO drain first
+    /// (DESIGN.md §Serving QoS).
+    #[allow(clippy::too_many_arguments)]
+    pub fn open_qos(
+        zoo: &Zoo,
+        net: &str,
+        spec: impl Into<PrecisionSpec>,
+        kind: BackendKind,
+        opts: SessionOptions,
+        store: Arc<WeightStore>,
+        scheduler: Option<Arc<QosScheduler>>,
+    ) -> Result<Session> {
         let spec: PrecisionSpec = spec.into();
         let network = zoo.network(net)?;
         // fail malformed plans at open time, not on the first request
@@ -289,7 +380,8 @@ impl Session {
             store,
             opts.packed_exec,
         );
-        let mut session = Self::with_factory(network, spec, batch, opts.max_wait, factory);
+        let resolved = SessionOptions { batch, ..opts };
+        let mut session = Self::with_factory_qos(network, spec, resolved, scheduler, factory);
         session.packed_exec = opts.packed_exec;
         Ok(session)
     }
@@ -305,18 +397,40 @@ impl Session {
         max_wait: Duration,
         factory: BackendFactory,
     ) -> Session {
-        assert!(batch >= 1, "session batch size must be >= 1");
+        let opts = SessionOptions { batch, max_wait, ..SessionOptions::default() };
+        Self::with_factory_qos(net, spec, opts, None, factory)
+    }
+
+    /// [`Session::with_factory`] with full [`SessionOptions`] (SLO
+    /// admission control) and an optional shared [`QosScheduler`]
+    /// (priority execution permits).  `opts.batch` must already be
+    /// resolved (>= 1); `opts.weight_budget` is not consulted here —
+    /// the factory owns backend construction.
+    pub fn with_factory_qos(
+        net: Arc<Network>,
+        spec: impl Into<PrecisionSpec>,
+        opts: SessionOptions,
+        scheduler: Option<Arc<QosScheduler>>,
+        factory: BackendFactory,
+    ) -> Session {
+        assert!(opts.batch >= 1, "session batch size must be >= 1");
         let spec: PrecisionSpec = spec.into();
         let (tx, rx): (Sender<Request>, Receiver<Request>) = channel();
         let [h, w, c] = net.input;
         let classes = net.classes;
         let stats = Arc::new(Mutex::new(StatsCell::default()));
         let key = SessionKey::new(&net.name, spec.clone());
+        let gate = Arc::new(QosGate::new(key.clone(), opts.slo));
 
         let worker = {
             let net = net.clone();
             let stats = stats.clone();
-            std::thread::spawn(move || dispatch(net, spec, batch, max_wait, factory, rx, stats))
+            let gate = gate.clone();
+            let batch = opts.batch;
+            let max_wait = opts.max_wait;
+            std::thread::spawn(move || {
+                dispatch(net, spec, batch, max_wait, factory, rx, stats, gate, scheduler)
+            })
         };
 
         Session {
@@ -327,6 +441,7 @@ impl Session {
             input_len: h * w * c,
             classes,
             stats,
+            gate,
             packed_exec: false,
         }
     }
@@ -358,21 +473,43 @@ impl Session {
             .map_err(|_| anyhow!("session {} dropped the request", self.key))?
     }
 
-    /// Async-style submit: returns a receiver for the logits.
+    /// Async-style submit: returns a receiver for the logits.  With an
+    /// SLO configured, consults the admission gate first; a shed comes
+    /// back as a downcastable [`ShedError`].
     pub fn infer_async(&self, pixels: Vec<f32>) -> Result<Receiver<Result<Vec<f32>>>> {
+        self.submit(pixels).map_err(SubmitError::into_anyhow)
+    }
+
+    /// Typed submit: like [`Session::infer_async`] but the failure is a
+    /// [`SubmitError`] the caller can match on without string parsing —
+    /// the loadgen drivers aggregate sheds/downs per request from this.
+    pub fn submit(&self, pixels: Vec<f32>) -> Result<Receiver<Result<Vec<f32>>>, SubmitError> {
         if pixels.len() != self.input_len {
-            anyhow::bail!(
-                "{}: expected {} pixels, got {}",
-                self.key,
-                self.input_len,
-                pixels.len()
-            );
+            return Err(SubmitError::BadInput {
+                key: self.key.clone(),
+                expected: self.input_len,
+                got: pixels.len(),
+            });
         }
+        self.gate.admit().map_err(SubmitError::Shed)?;
         let (rtx, rrx) = channel();
-        self.tx
+        if self
+            .tx
             .send(Request { pixels, reply: rtx, enqueued: Instant::now() })
-            .map_err(|_| anyhow!("session {} is down", self.key))?;
+            .is_err()
+        {
+            // withdrawn: the request never reached the queue, so it must
+            // not count against the depth bound
+            self.gate.on_completed(1);
+            return Err(SubmitError::Down { key: self.key.clone() });
+        }
         Ok(rrx)
+    }
+
+    /// The session's admission-control gate (live shed counters, queue
+    /// depth, published window p99).
+    pub fn qos_gate(&self) -> &Arc<QosGate> {
+        &self.gate
     }
 
     /// Run a whole (B, H, W, C) tensor through the request path and
@@ -418,6 +555,8 @@ impl Session {
         stats.p50_queue_ms = p50;
         stats.p99_queue_ms = p99;
         stats.packed_exec = self.packed_exec;
+        stats.shed = self.gate.shed_total();
+        stats.depth = self.gate.depth();
         stats
     }
 
@@ -447,6 +586,13 @@ impl Drop for Session {
 
 /// The dispatcher loop: build the backend, then batch-and-flush until
 /// every sender is gone and the queue is drained.
+///
+/// QoS contract: the gate's depth is decremented (`on_completed`)
+/// *before* replies are delivered on every path — success, batch
+/// failure, bad tensor, init failure — so a caller that has seen its
+/// answer can immediately resubmit without phantom backlog, and
+/// `depth == admitted - completed` holds exactly.
+#[allow(clippy::too_many_arguments)]
 fn dispatch(
     net: Arc<Network>,
     spec: PrecisionSpec,
@@ -455,6 +601,8 @@ fn dispatch(
     factory: BackendFactory,
     rx: Receiver<Request>,
     stats: Arc<Mutex<StatsCell>>,
+    gate: Arc<QosGate>,
+    scheduler: Option<Arc<QosScheduler>>,
 ) {
     let mut backend = match factory() {
         Ok(b) => {
@@ -467,6 +615,7 @@ fn dispatch(
             // fail every queued and future request with the
             // construction error, then retire
             while let Ok(r) = rx.recv() {
+                gate.on_completed(1);
                 let _ = r.reply.send(Err(anyhow!("backend init failed: {e}")));
             }
             return;
@@ -515,7 +664,7 @@ fn dispatch(
             xdata.extend_from_slice(&r.pixels);
         }
         xdata.resize(rows * input_len, 0.0); // pad dead slots (if any)
-        {
+        let window = {
             let mut s = stats.lock().unwrap_or_else(PoisonError::into_inner);
             s.requests += live as u64;
             s.batches += 1;
@@ -523,12 +672,20 @@ fn dispatch(
             for r in &queue {
                 s.push_lat(r.enqueued.elapsed().as_secs_f64());
             }
+            // snapshot the window for admission decisions (sorted after
+            // the lock is dropped; only priced when an SLO consumes it)
+            gate.slo().map(|_| s.queue_lat_s.clone())
+        };
+        if let Some(lats) = window {
+            let (_, p99) = window_percentiles_ms(lats);
+            gate.record_p99_ms(p99);
         }
 
         let x = match Tensor::new(vec![rows, h, w, c], xdata) {
             Ok(t) => t,
             Err(e) => {
                 let msg = format!("{e}");
+                gate.on_completed(live);
                 for r in queue.drain(..) {
                     let _ = r.reply.send(Err(anyhow!("bad batch: {msg}")));
                 }
@@ -536,7 +693,14 @@ fn dispatch(
             }
         };
 
-        match backend.run_spec(&x, &spec) {
+        let result = {
+            // under priority scheduling, wait for an execution slot —
+            // granted by SLO headroom, not FIFO (DESIGN.md §Serving QoS)
+            let _permit = scheduler.as_ref().map(|s| s.acquire(&gate));
+            backend.run_spec(&x, &spec)
+        };
+        gate.on_completed(live);
+        match result {
             Ok(out) => {
                 for (i, r) in queue.drain(..).enumerate() {
                     let row = out.data()[i * classes..(i + 1) * classes].to_vec();
@@ -804,6 +968,120 @@ mod tests {
         }
         let (_, lats) = cell.raw();
         assert!(lats.iter().all(|&v| v == 2e-3), "a full extra pass rewrites every slot");
+    }
+
+    /// ISSUE 7 tentpole: with an SLO, admission sheds at the *exact*
+    /// depth bound with a typed [`ShedError`], recovers after
+    /// completions, and the books balance (served + shed == offered).
+    /// Deterministic: the backend is gated on a token channel, so the
+    /// test controls exactly when depth drains — no timing assumptions.
+    #[test]
+    fn slo_session_sheds_at_depth_bound_and_recovers() {
+        use crate::serving::qos::ShedReason;
+
+        struct GatedBackend {
+            inner: NativeBackend,
+            tokens: Receiver<()>,
+        }
+        impl Backend for GatedBackend {
+            fn run_spec(&mut self, x: &Tensor, spec: &PrecisionSpec) -> Result<Tensor> {
+                // one token per batch; the test holds the sender
+                let _ = self.tokens.recv();
+                self.inner.run_spec(x, spec)
+            }
+            fn network(&self) -> &Arc<Network> {
+                self.inner.network()
+            }
+            fn label(&self) -> &'static str {
+                "native"
+            }
+        }
+
+        let net = tiny_network(8);
+        let (token_tx, token_rx) = channel::<()>();
+        let opts = SessionOptions {
+            batch: 1,
+            max_wait: Duration::from_millis(0),
+            slo: Some(SloTarget::new(1000.0, 3).unwrap()),
+            ..SessionOptions::default()
+        };
+        let n = net.clone();
+        let session = Session::with_factory_qos(
+            net.clone(),
+            Format::SINGLE,
+            opts,
+            None,
+            Box::new(move || {
+                Ok(Box::new(GatedBackend { inner: NativeBackend::new(n), tokens: token_rx })
+                    as Box<dyn Backend>)
+            }),
+        );
+        let px = net.input.iter().product::<usize>();
+        let sample = || net.eval_x.data()[..px].to_vec();
+
+        // Admit exactly max_depth = 3 (first blocks in the backend, the
+        // rest queue), then the 4th is shed with a typed error.
+        let pending: Vec<_> = (0..3).map(|_| session.submit(sample()).unwrap()).collect();
+        let err = session.submit(sample()).unwrap_err();
+        match &err {
+            SubmitError::Shed(shed) => {
+                assert_eq!(shed.reason, ShedReason::Depth);
+                assert_eq!(shed.depth, 3);
+                assert_eq!(shed.key, *session.key());
+            }
+            other => panic!("expected a depth shed, got {other}"),
+        }
+        // ...and the anyhow surface downcasts to the same type
+        let err = session.infer_async(sample()).unwrap_err();
+        let shed = err.downcast_ref::<ShedError>().expect("typed shed via anyhow");
+        assert_eq!(shed.reason, ShedReason::Depth);
+        let mid = session.stats();
+        assert_eq!(mid.shed, 2);
+        assert_eq!(mid.depth, 3);
+
+        // Release the backend: every admitted request completes...
+        for _ in 0..3 {
+            token_tx.send(()).unwrap();
+        }
+        let served: Vec<Vec<f32>> =
+            pending.into_iter().map(|rx| rx.recv().unwrap().unwrap()).collect();
+        // ...bit-identical to a direct backend run (sheds never perturb
+        // served results)
+        let direct = NativeBackend::new(net.clone())
+            .run_batch(&net.eval_x.slice_rows(0, 1), &Format::SINGLE)
+            .unwrap();
+        for logits in &served {
+            assert_eq!(logits.as_slice(), direct.data());
+        }
+
+        // ...and admission recovers: depth drained back below the bound.
+        token_tx.send(()).unwrap();
+        let rx = session.submit(sample()).expect("gate must reopen after drain");
+        rx.recv().unwrap().unwrap();
+
+        // Books balance: offered = 6, served = 4, shed = 2.
+        let st = session.shutdown();
+        assert_eq!(st.requests, 4);
+        assert_eq!(st.shed, 2);
+        assert_eq!(st.requests + st.shed, 6);
+        assert_eq!(st.depth, 0);
+    }
+
+    /// Without an SLO the gate is wide open: no request is ever shed and
+    /// `SessionStats::{shed, depth}` stay zero at rest — the pre-QoS
+    /// behavior, byte for byte.
+    #[test]
+    fn no_slo_session_never_sheds() {
+        let net = tiny_network(8);
+        let session = native_session(&net, Format::SINGLE, 4);
+        let px = net.input.iter().product::<usize>();
+        for i in 0..8 {
+            session.infer(net.eval_x.data()[i * px..(i + 1) * px].to_vec()).unwrap();
+        }
+        let st = session.shutdown();
+        assert_eq!(st.requests, 8);
+        assert_eq!(st.shed, 0);
+        assert_eq!(st.depth, 0);
     }
 
     #[test]

@@ -84,6 +84,15 @@ impl Pcg32 {
         (self.next_u32() >> 8) as f32 * (1.0 / (1u32 << 24) as f32)
     }
 
+    /// Uniform f64 in `[0, 1)` with 53 bits of randomness — enough
+    /// resolution for exponential inter-arrival sampling
+    /// (`serving::ArrivalSchedule`), where the f32 variant's 2^-24 grid
+    /// would visibly quantize short gaps at high request rates.
+    #[inline]
+    pub fn uniform_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
     /// Uniform f32 in `[lo, hi)`.
     pub fn range(&mut self, lo: f32, hi: f32) -> f32 {
         lo + self.uniform() * (hi - lo)
@@ -176,6 +185,31 @@ mod tests {
         }
         let mean = sum / n as f64;
         assert!((mean - 0.5).abs() < 0.01, "mean {mean}");
+    }
+
+    #[test]
+    fn uniform_f64_bounds_mean_and_determinism() {
+        let mut r = Pcg32::seeded(17);
+        let n = 20_000;
+        let mut sum = 0.0f64;
+        for _ in 0..n {
+            let v = r.uniform_f64();
+            assert!((0.0..1.0).contains(&v));
+            sum += v;
+        }
+        let mean = sum / n as f64;
+        assert!((mean - 0.5).abs() < 0.01, "mean {mean}");
+        // bit-exact under the same seed (the ArrivalSchedule contract
+        // inherits this)
+        let a: Vec<u64> = {
+            let mut r = Pcg32::seeded(23);
+            (0..8).map(|_| r.uniform_f64().to_bits()).collect()
+        };
+        let b: Vec<u64> = {
+            let mut r = Pcg32::seeded(23);
+            (0..8).map(|_| r.uniform_f64().to_bits()).collect()
+        };
+        assert_eq!(a, b);
     }
 
     #[test]

@@ -1,0 +1,315 @@
+//! Churn-chaos lane for the QoS gateway (ISSUE 7 tentpole, part d):
+//! fixture-based, artifact-free, tier-1.
+//!
+//! The scenario: a gateway under sustained **open-loop** traffic — the
+//! only drive mode where offered load does not self-throttle, so SLO
+//! gates genuinely shed — while sessions are hot-opened and hot-closed
+//! mid-drive and the shared weight store thrashes under a deliberately
+//! tiny `--weight-budget`.  The contracts under test:
+//!
+//! * **Exact accounting**: `served + shed + failed == offered`, with
+//!   every non-served request a typed [`FailureKind::Shed`] record —
+//!   reject-don't-collapse, nothing silently dropped, even while the
+//!   routed session disappears and reappears under the driver.
+//! * **Bit-identity under duress**: every served logit vector is
+//!   bit-identical to a direct [`NativeBackend`] reference for the same
+//!   `(format, sample)` — shedding, priority scheduling, store
+//!   eviction, and churn may refuse work but may never perturb it.
+//! * **Liveness**: the drive, the churn thread, and shutdown all
+//!   complete — no deadlock between the permit scheduler, the
+//!   dispatchers, and session teardown (the test finishing is the
+//!   assertion).
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::Result;
+
+use precis::formats::{Format, PrecisionSpec};
+use precis::nn::Network;
+use precis::serving::{
+    drive_open_loop, warm_up, ArrivalSchedule, Backend, DriveReport, FailureKind, Gateway,
+    NativeBackend, QosScheduler, Session, SessionKey, SessionOptions, ShedReason, SloTarget,
+};
+use precis::store::{StoreEntry, WeightStore};
+use precis::tensor::Tensor;
+use precis::testing::fixtures::tiny_network;
+
+const EVAL_N: usize = 8;
+
+/// A native backend slowed to `delay` per batch: capacity is a test
+/// parameter, so a fast arrival schedule *provably* exceeds it and the
+/// depth gate must shed — no timing luck involved.
+struct SlowBackend {
+    inner: NativeBackend,
+    delay: Duration,
+}
+
+impl Backend for SlowBackend {
+    fn run_spec(&mut self, x: &Tensor, spec: &PrecisionSpec) -> Result<Tensor> {
+        std::thread::sleep(self.delay);
+        self.inner.run_spec(x, spec)
+    }
+    fn network(&self) -> &Arc<Network> {
+        self.inner.network()
+    }
+    fn label(&self) -> &'static str {
+        "native"
+    }
+    fn store_stats(&self) -> Option<precis::store::StoreStats> {
+        self.inner.store_stats()
+    }
+}
+
+/// An SLO-gated session over the shared (budget-capped) weight store
+/// and the shared permit scheduler, executing one request per batch at
+/// `delay` per batch.
+fn slow_session(
+    net: &Arc<Network>,
+    fmt: Format,
+    slo: SloTarget,
+    store: &Arc<WeightStore>,
+    sched: &Arc<QosScheduler>,
+    delay: Duration,
+) -> Session {
+    let n = net.clone();
+    let st = store.clone();
+    let opts = SessionOptions {
+        batch: 1,
+        max_wait: Duration::from_millis(0),
+        slo: Some(slo),
+        ..SessionOptions::default()
+    };
+    Session::with_factory_qos(
+        net.clone(),
+        fmt,
+        opts,
+        Some(sched.clone()),
+        Box::new(move || {
+            let inner = NativeBackend::with_store(n, st);
+            Ok(Box::new(SlowBackend { inner, delay }) as Box<dyn Backend>)
+        }),
+    )
+}
+
+/// A weight-store budget that admits any single staged entry of the
+/// fixture's `fc` layer but cannot hold two formats' entries at once —
+/// every cross-format batch alternation evicts (the `--weight-budget`
+/// thrash lane).
+fn thrash_budget(fmts: &[Format]) -> usize {
+    let w_len = 4 * 3; // tiny_network fc: 4 -> 3
+    fmts.iter().map(|f| StoreEntry::bytes_for(w_len, f)).max().unwrap() + 8
+}
+
+/// Bit-identity of every served logit vector against a direct
+/// [`NativeBackend`] run of the same `(format, sample)` — computed on a
+/// fresh, unbounded store, so it also cross-checks the store contract
+/// (hits, misses, and evicted-then-restaged entries all agree).
+fn assert_served_bit_identical(report: &DriveReport, net: &Arc<Network>, fmts: &[Format]) {
+    let refs: Vec<Tensor> = fmts
+        .iter()
+        .map(|fmt| {
+            NativeBackend::new(net.clone())
+                .run_batch(&net.eval_x.slice_rows(0, EVAL_N), fmt)
+                .unwrap()
+        })
+        .collect();
+    for (ki, sample, _, logits) in &report.served {
+        let want = &refs[*ki].data()[sample * net.classes..(sample + 1) * net.classes];
+        assert_eq!(logits.len(), want.len());
+        for (j, (a, b)) in logits.iter().zip(want).enumerate() {
+            assert_eq!(
+                a.to_bits(),
+                b.to_bits(),
+                "key {ki} sample {sample} logit {j}: served logits must be bit-identical"
+            );
+        }
+    }
+}
+
+/// Every failure must be a typed shed (admission control or a closed
+/// key) — an execution failure under chaos would be a real bug.
+fn assert_failures_are_typed_sheds(report: &DriveReport) {
+    for f in &report.failures {
+        match &f.kind {
+            FailureKind::Shed(_) => {}
+            FailureKind::Failed(msg) => panic!("request {} failed outright: {msg}", f.index),
+        }
+    }
+}
+
+/// Part 1 (no churn yet): burst arrivals far above the throttled
+/// service rate force depth sheds; the books balance exactly, the gate
+/// counters agree with the driver's records, served responses stay
+/// bit-exact, and the tiny shared budget provably thrashed.
+#[test]
+fn open_loop_burst_sheds_exactly_and_serves_bit_exact() {
+    let net = tiny_network(EVAL_N);
+    let fmts = [Format::float(7, 6), Format::fixed(8, 8)];
+    let store = Arc::new(WeightStore::with_budget(thrash_budget(&fmts)));
+    let sched = QosScheduler::new(1); // one execution slot gateway-wide
+    let slo = SloTarget::new(10_000.0, 4).unwrap(); // depth-gated only
+    let delay = Duration::from_millis(3);
+
+    let gw = Gateway::empty();
+    let keys: Vec<SessionKey> = fmts
+        .iter()
+        .map(|&fmt| gw.adopt(slow_session(&net, fmt, slo, &store, &sched, delay)))
+        .collect();
+    warm_up(&gw, &keys).unwrap();
+
+    // ~200 fires in a few ms of schedule against a ~333 req/s service
+    // rate: the depth bound (4/session) must shed most of the stream.
+    let sched_arrivals = ArrivalSchedule::parse("burst:1000rps:50000rps:20ms:0.5", 2018).unwrap();
+    let report = drive_open_loop(&gw, &keys, &sched_arrivals, 200);
+
+    assert_eq!(report.offered, 200);
+    assert!(
+        report.is_balanced(),
+        "served {} + shed {} + failed {} != offered {}",
+        report.served.len(),
+        report.shed(),
+        report.failed(),
+        report.offered
+    );
+    assert_failures_are_typed_sheds(&report);
+    assert_eq!(report.failed(), 0);
+    assert!(report.shed() > 0, "over-capacity open-loop drive must shed");
+    // the first fire per key lands in an empty queue: always admitted
+    assert!(report.served.len() >= keys.len());
+
+    assert_served_bit_identical(&report, &net, &fmts);
+
+    // driver records and gate counters are the same books: no session
+    // vanished here, so every shed is an admission-control shed
+    let gate_shed: u64 = keys.iter().map(|k| gw.session(k).unwrap().stats().shed).sum();
+    assert_eq!(gate_shed, report.shed());
+
+    // the tiny budget cannot hold both formats' staged entries: the
+    // alternating batches provably evicted (--weight-budget thrash)
+    let st = store.stats();
+    assert!(st.evictions > 0, "expected store thrash, got {}", st.render());
+
+    // full drain on shutdown: depth gauges return to zero
+    let fin = gw.shutdown();
+    for (key, s) in &fin.sessions {
+        assert_eq!(s.depth, 0, "{key} retired with phantom backlog");
+    }
+}
+
+/// The chaos lane proper: sustained open-loop traffic while one session
+/// is hot-closed and re-adopted in a loop.  Accounting stays exact,
+/// nothing fails outright, every served logit stays bit-identical, and
+/// everything shuts down (liveness).
+#[test]
+fn churn_under_open_loop_traffic_keeps_books_exact() {
+    let net = tiny_network(EVAL_N);
+    let fmts = [Format::float(7, 6), Format::fixed(8, 8), Format::float(4, 5)];
+    let store = Arc::new(WeightStore::with_budget(thrash_budget(&fmts)));
+    let sched = QosScheduler::new(1);
+    let slo = SloTarget::new(10_000.0, 4).unwrap();
+    let delay = Duration::from_millis(2);
+
+    let gw = Gateway::empty();
+    let keys: Vec<SessionKey> = fmts
+        .iter()
+        .map(|&fmt| gw.adopt(slow_session(&net, fmt, slo, &store, &sched, delay)))
+        .collect();
+    warm_up(&gw, &keys).unwrap();
+
+    let churn_fmt = fmts[2];
+    let churn_key = keys[2].clone();
+    let stop = AtomicBool::new(false);
+    let arrivals = ArrivalSchedule::parse("poisson:20000rps", 7).unwrap();
+
+    let report = std::thread::scope(|scope| {
+        let churner = scope.spawn(|| {
+            // hot close/re-open the third session for as long as the
+            // drive runs
+            let mut cycles = 0u32;
+            let mut closed = 0u32;
+            while !stop.load(Ordering::Acquire) {
+                if gw.close(&churn_key).is_some() {
+                    closed += 1;
+                }
+                std::thread::sleep(Duration::from_millis(1));
+                let again = slow_session(&net, churn_fmt, slo, &store, &sched, delay);
+                assert_eq!(gw.adopt(again), churn_key, "key must be stable across re-adoption");
+                cycles += 1;
+            }
+            assert_eq!(closed, cycles, "every cycle must find the re-adopted session to close");
+            cycles
+        });
+        let report = drive_open_loop(&gw, &keys, &arrivals, 300);
+        stop.store(true, Ordering::Release);
+        let cycles = churner.join().unwrap();
+        assert!(cycles > 0, "the churn thread must have cycled at least once");
+        report
+    });
+
+    assert_eq!(report.offered, 300);
+    assert!(
+        report.is_balanced(),
+        "served {} + shed {} + failed {} != offered {}",
+        report.served.len(),
+        report.shed(),
+        report.failed(),
+        report.offered
+    );
+    assert_failures_are_typed_sheds(&report);
+    assert!(report.shed() > 0);
+    assert!(!report.served.is_empty());
+    assert_served_bit_identical(&report, &net, &fmts);
+
+    // liveness: shutdown drains and joins everything that remains
+    let fin = gw.shutdown();
+    for (key, s) in &fin.sessions {
+        assert_eq!(s.depth, 0, "{key} retired with phantom backlog");
+    }
+}
+
+/// Deterministic closed-key accounting: once a key is hot-removed,
+/// every subsequent fire at it is a loud [`ShedReason::Closed`] record
+/// — and the other session keeps serving bit-exactly.
+#[test]
+fn fires_at_closed_keys_are_loud_closed_sheds() {
+    let net = tiny_network(EVAL_N);
+    let fmts = [Format::float(7, 6), Format::fixed(8, 8)];
+    let store = Arc::new(WeightStore::with_budget(thrash_budget(&fmts)));
+    let sched = QosScheduler::new(1);
+    // a depth bound far above the offered load: the live session never
+    // sheds, so the split is exactly closed-vs-served
+    let slo = SloTarget::new(10_000.0, 64).unwrap();
+    let delay = Duration::from_micros(50);
+
+    let gw = Gateway::empty();
+    let keys: Vec<SessionKey> = fmts
+        .iter()
+        .map(|&fmt| gw.adopt(slow_session(&net, fmt, slo, &store, &sched, delay)))
+        .collect();
+    warm_up(&gw, &keys).unwrap();
+    gw.close(&keys[1]).expect("second session was hosted");
+
+    let arrivals = ArrivalSchedule::parse("poisson:50000rps", 3).unwrap();
+    let report = drive_open_loop(&gw, &keys, &arrivals, 40);
+
+    assert_eq!(report.offered, 40);
+    assert!(report.is_balanced());
+    // request i -> keys[i % 2]: exactly half the stream hits the closed
+    // key and every one of those is a typed Closed shed
+    assert_eq!(report.served.len(), 20);
+    assert_eq!(report.shed(), 20);
+    assert_eq!(report.failed(), 0);
+    for f in &report.failures {
+        assert_eq!(f.key, keys[1]);
+        match &f.kind {
+            FailureKind::Shed(e) => assert_eq!(e.reason, ShedReason::Closed),
+            other => panic!("expected a closed shed, got {other:?}"),
+        }
+    }
+    assert!(report.served.iter().all(|(ki, _, _, _)| *ki == 0));
+    assert_served_bit_identical(&report, &net, &fmts);
+
+    gw.shutdown();
+}
