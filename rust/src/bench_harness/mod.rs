@@ -93,12 +93,17 @@ impl BenchResult {
     }
 }
 
-/// Exact order statistic the harness reports: the element at index
-/// `floor((len - 1) * q)` of the sorted samples (no interpolation — a
-/// reported time is always one that was measured).
+/// Exact order statistic the harness reports: the element at the
+/// nearest rank, index `round((len - 1) * q)`, of the sorted samples
+/// (no interpolation — a reported time is always one that was
+/// measured).  Flooring here biased quantiles low by up to one full
+/// rank — p99 of a 10-sample window truncated rank 8.91 down to sample
+/// 8 (the p89 statistic), and every even-length median picked the lower
+/// middle element — an optimistic skew on exactly the tail values the
+/// regression gates care about (ISSUE 8).
 pub fn percentile(sorted: &[f64], q: f64) -> f64 {
     assert!(!sorted.is_empty(), "percentile of an empty sample set");
-    sorted[((sorted.len() - 1) as f64 * q) as usize]
+    sorted[((sorted.len() - 1) as f64 * q).round() as usize]
 }
 
 /// Reduce raw per-iteration batch timings to a [`BenchResult`] —
@@ -323,29 +328,61 @@ mod tests {
         assert!((r.throughput(10.0) - 5000.0).abs() < 1e-9);
     }
 
-    /// Exact selection (ISSUE 4 satellite): on a known synthetic timing
-    /// sequence, median/p10/p90 are the exact elements at indices
-    /// `floor((len-1)*q)` of the sorted sequence — no interpolation.
+    /// Exact selection (ISSUE 4 satellite, rank rule fixed by ISSUE 8):
+    /// on a known synthetic timing sequence, median/p10/p90 are the
+    /// exact elements at indices `round((len-1)*q)` of the sorted
+    /// sequence — nearest rank, no interpolation.
     #[test]
     fn summarize_selects_exact_order_statistics() {
         // 5 samples, shuffled: sorted = [1, 2, 3, 4, 5] (ms)
         let r = summarize("synthetic", vec![0.005, 0.001, 0.004, 0.002, 0.003], 7);
-        assert_eq!(r.median, 0.003); // idx (4 * 0.5) = 2
-        assert_eq!(r.p10, 0.001); // idx (4 * 0.1) = 0
-        assert_eq!(r.p90, 0.004); // idx (4 * 0.9) = 3
+        assert_eq!(r.median, 0.003); // idx round(4 * 0.5) = 2
+        assert_eq!(r.p10, 0.001); // idx round(4 * 0.1) = 0
+        assert_eq!(r.p90, 0.005); // idx round(4 * 0.9) = round(3.6) = 4
         assert_eq!(r.iters_per_batch, 7);
         assert_eq!(r.batches, 5);
 
-        // 10 samples 1..=10: median idx 4 -> 5, p10 idx 0 -> 1, p90 idx 8 -> 9
+        // 10 samples 1..=10: median idx round(4.5) = 5 -> 6, p10 idx
+        // round(0.9) = 1 -> 2, p90 idx round(8.1) = 8 -> 9 (the old
+        // floor rule picked 5 / 1 / 9 — low-biased on two of three)
         let seq: Vec<f64> = (1..=10).rev().map(|i| i as f64).collect();
         let r = summarize("synthetic10", seq, 1);
-        assert_eq!(r.median, 5.0);
-        assert_eq!(r.p10, 1.0);
+        assert_eq!(r.median, 6.0);
+        assert_eq!(r.p10, 2.0);
         assert_eq!(r.p90, 9.0);
 
         // a single sample is every statistic
         let r = summarize("one", vec![0.25], 1);
         assert_eq!((r.p10, r.median, r.p90), (0.25, 0.25, 0.25));
+    }
+
+    /// ISSUE 8 satellite: the exact cases the floor rule got wrong —
+    /// even-length windows (median must be the upper middle element,
+    /// nearest rank) and q = 0.99 tails over window sizes where
+    /// truncation dropped a full rank.
+    #[test]
+    fn percentile_even_windows_and_p99_are_nearest_rank() {
+        // even-length window: median rank (3 * 0.5) = 1.5 rounds UP to
+        // index 2 (floor silently picked the lower middle, index 1)
+        let four = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(percentile(&four, 0.5), 3.0);
+        assert_eq!(percentile(&four, 0.99), 4.0); // round(2.97) = 3
+
+        // p99 of a 10-sample window: rank 8.91 -> 9 (the max); the old
+        // floor returned index 8 — the p89 order statistic
+        let ten: Vec<f64> = (1..=10).map(|i| i as f64).collect();
+        assert_eq!(percentile(&ten, 0.99), 10.0);
+
+        // the QoS-window shape: 200 samples, p99 rank 199 * 0.99 =
+        // 197.01 -> 197, the 198th smallest — and p50 rank 99.5 rounds
+        // to 100 (value 101), not down to 99
+        let two_hundred: Vec<f64> = (1..=200).map(|i| i as f64).collect();
+        assert_eq!(percentile(&two_hundred, 0.99), 198.0);
+        assert_eq!(percentile(&two_hundred, 0.5), 101.0);
+
+        // boundary quantiles stay exact selections at any length
+        assert_eq!(percentile(&ten, 0.0), 1.0);
+        assert_eq!(percentile(&ten, 1.0), 10.0);
     }
 
     /// The stopping rule in isolation: batch floor OR time floor keeps

@@ -15,12 +15,14 @@ use std::sync::Arc;
 use crate::bench_harness::{section, Bench, BenchReport, BenchResult};
 use crate::formats::{Format, PrecisionSpec};
 use crate::nn::{gemm_q, gemm_q_naive};
-use crate::numerics::{dot_q, quantize_slice, Quantizer};
+use crate::numerics::{dot_q, quantize_slice, PackedOp, Quantizer};
 use crate::serving::{Backend, NativeBackend};
-use crate::store::{PackedTensor, WeightStore};
+use crate::store::{
+    gemm_packed_int, gemm_packed_int_scalar, ExecScratch, PackedTensor, StoreKey, WeightStore,
+};
 use crate::testing::fixtures::tiny_conv_network;
 use crate::util::rng::Pcg32;
-use crate::with_quant_op;
+use crate::{with_packed_op, with_quant_op};
 
 /// GEMM shapes of the seed networks' conv (im2col) and dense layers at
 /// batch 32: (M, K, N) = (b*oh*ow, kh*kw*cin, cout) / (b, in, out).
@@ -242,6 +244,99 @@ fn run_suite(
         );
     }
 
+    // ISSUE 8 tentpole (a): the lock-free warm path.  One resident
+    // entry; the locked side re-runs `prepare` per read (mutex + map
+    // lookup — the pre-PR-8 per-layer warm cost), the lock-free side
+    // validates a lease with one atomic epoch load.  The correctness
+    // half rides along: the lock-acquisition counter must not move
+    // across the lock-free timing loop.
+    section("warm store reads: lock-free lease validation vs locked prepare");
+    let store = WeightStore::unbounded();
+    let key = StoreKey::new("bench", "fc", Format::fixed(8, 8));
+    let weights = randv(slice_len, 7);
+    let lease = store.prepare_lease(&key, &weights).expect("unbounded store admits");
+    let locked = bench.run(&format!("warm_locked_prepare/{slice_len}"), || {
+        store.prepare(&key, &weights).expect("resident entry").bytes()
+    });
+    let locks_before = store.lock_acquisitions();
+    let lockfree = bench.run(&format!("warm_lockfree_hit/{slice_len}"), || {
+        store.hit_if_current(&lease).expect("lease stays current").bytes()
+    });
+    assert_eq!(
+        store.lock_acquisitions(),
+        locks_before,
+        "a lock-free warm read must not acquire the store mutex"
+    );
+    report.ratio("warm_lockfree_over_locked", ratio(&locked, &lockfree));
+    println!("    -> locked/lock-free ratio {:.2}x", ratio(&locked, &lockfree));
+
+    // ISSUE 8 tentpole (b): the lane-chunked gemm_q against the scalar
+    // per-element chain (gemm_q_naive computes the identical serial-k
+    // semantics with no blocking and no lanes), one ratio per kernel
+    // kind at the widest shape in this run
+    section("gemm SIMD: lane-chunked kernel vs scalar per-element chain");
+    {
+        let &(m, k, n) = gemm_shapes.last().expect("at least one GEMM shape");
+        let a = randv(m * k, 8);
+        let w = randv(k * n, 9);
+        let mut out = vec![0.0f32; m * n];
+        let macs = (m * k * n) as f64;
+        for fmt in formats_under_test() {
+            let q = Quantizer::new(&fmt);
+            let simd = bench.run(&format!("gemm_simd/{m}x{k}x{n}/{}", fmt.id()), || {
+                with_quant_op!(&q, op => gemm_q(&a, &w, &mut out, m, k, n, op));
+                out[0]
+            });
+            let scalar = bench.run(&format!("gemm_scalar/{m}x{k}x{n}/{}", fmt.id()), || {
+                gemm_q_naive(&a, &w, &mut out, m, k, n, &q);
+                out[0]
+            });
+            report.ratio(&format!("gemm_simd_over_scalar/{}", fmt.id()), ratio(&scalar, &simd));
+            println!(
+                "    -> simd {:.1} Mmac/s, scalar {:.1} Mmac/s: {:.2}x",
+                simd.throughput(macs) / 1e6,
+                scalar.throughput(macs) / 1e6,
+                ratio(&scalar, &simd),
+            );
+        }
+    }
+
+    // ...and the packed integer MAC lanes (PR 6) against their untiled
+    // scalar reference — one ratio per accumulator width
+    section("packed int MAC: lane-chunked integer kernel vs scalar reference");
+    {
+        let &(m, k, n) = gemm_shapes.last().expect("at least one GEMM shape");
+        let macs = (m * k * n) as f64;
+        for (lane, fmt) in [("int16", Format::fixed(3, 3)), ("int32", Format::fixed(6, 6))] {
+            let q = Quantizer::new(&fmt);
+            let mut a = randv(m * k, 10);
+            quantize_slice(&mut a, &q); // the integer lane's on-grid premise
+            let packed = PackedTensor::pack(&randv(k * n, 11), &fmt);
+            let op = PackedOp::for_format(&fmt).expect("fixed l+r<=12 has an integer op");
+            let mut scratch = ExecScratch::default();
+            let mut out = vec![0.0f32; m * n];
+            let simd = bench.run(&format!("packed_int_simd/{m}x{k}x{n}/{lane}"), || {
+                with_packed_op!(&op, o => gemm_packed_int(
+                    &a, &packed, None, &mut out, m, k, n, o, &mut scratch,
+                ));
+                out[0]
+            });
+            let scalar = bench.run(&format!("packed_int_scalar/{m}x{k}x{n}/{lane}"), || {
+                with_packed_op!(&op, o => gemm_packed_int_scalar(
+                    &a, &packed, None, &mut out, m, k, n, o, &mut scratch,
+                ));
+                out[0]
+            });
+            report.ratio(&format!("packed_int_simd_over_scalar/{lane}"), ratio(&scalar, &simd));
+            println!(
+                "    -> simd {:.1} Mmac/s, scalar {:.1} Mmac/s: {:.2}x",
+                simd.throughput(macs) / 1e6,
+                scalar.throughput(macs) / 1e6,
+                ratio(&scalar, &simd),
+            );
+        }
+    }
+
     report.results.extend_from_slice(bench.results());
 }
 
@@ -292,6 +387,23 @@ mod tests {
             let n = report.ratios.keys().filter(|k| k.starts_with(fam)).count();
             assert!(n >= 4, "expected >=4 {fam} ratios, got {n}");
         }
+        // the ISSUE 8 sections: lock-free warm reads + the two SIMD
+        // ratio families (also warn-only in older baselines)
+        assert!(
+            report.ratios.contains_key("warm_lockfree_over_locked"),
+            "missing lock-free warm-path ratio"
+        );
+        assert_eq!(
+            report.ratios.keys().filter(|k| k.starts_with("gemm_simd_over_scalar/")).count(),
+            3,
+            "one gemm SIMD ratio per kernel kind"
+        );
+        for lane in ["int16", "int32"] {
+            assert!(
+                report.ratios.contains_key(&format!("packed_int_simd_over_scalar/{lane}")),
+                "missing packed int SIMD ratio for {lane}"
+            );
+        }
         for name in [
             "forward_cached/",
             "forward_restaged/",
@@ -299,6 +411,12 @@ mod tests {
             "unpack/",
             "forward_staged/",
             "forward_packed/",
+            "warm_locked_prepare/",
+            "warm_lockfree_hit/",
+            "gemm_simd/",
+            "gemm_scalar/",
+            "packed_int_simd/",
+            "packed_int_scalar/",
         ] {
             assert!(
                 report.results.iter().any(|r| r.name.starts_with(name)),

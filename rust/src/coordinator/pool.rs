@@ -63,6 +63,59 @@ where
     })
 }
 
+/// Run `f` over disjoint consecutive chunks of `out` (each `chunk_len`
+/// elements; the last one ragged) on up to `workers` scoped threads.
+/// `f(start, chunk)` receives the chunk's element offset into `out`.
+///
+/// This is the mutable-output counterpart of [`run_indexed`] — the
+/// engine's intra-forward GEMM row parallelism hands each worker a
+/// disjoint `&mut` row range of the output (`nn::engine::gemm_q_rows`).
+/// Chunks are claimed from a shared queue; `workers <= 1` (or a single
+/// chunk) degenerates to a plain serial loop with no threads spawned.
+/// Panics in workers propagate when the scope joins (fail fast).
+pub fn run_sliced<T: Send>(
+    out: &mut [T],
+    chunk_len: usize,
+    workers: usize,
+    f: impl Fn(usize, &mut [T]) + Sync,
+) {
+    assert!(chunk_len > 0, "chunk_len must be positive");
+    if out.is_empty() {
+        return;
+    }
+    let mut chunks: Vec<(usize, &mut [T])> = Vec::new();
+    let mut start = 0;
+    for c in out.chunks_mut(chunk_len) {
+        let len = c.len();
+        chunks.push((start, c));
+        start += len;
+    }
+    let workers = workers.clamp(1, chunks.len());
+    if workers <= 1 {
+        for (s, c) in chunks {
+            f(s, c);
+        }
+        return;
+    }
+    let queue = std::sync::Mutex::new(chunks);
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            let queue = &queue;
+            let f = &f;
+            scope.spawn(move || loop {
+                let item = queue
+                    .lock()
+                    .unwrap_or_else(std::sync::PoisonError::into_inner)
+                    .pop();
+                match item {
+                    Some((s, c)) => f(s, c),
+                    None => break,
+                }
+            });
+        }
+    });
+}
+
 /// Default worker count: one per available core.
 pub fn default_workers() -> usize {
     std::thread::available_parallelism()
@@ -104,6 +157,47 @@ mod tests {
         assert!(out.is_empty());
         let out = run_indexed(&[9u32], 16, || (), |_, &j| j + 1);
         assert_eq!(out, vec![10]);
+    }
+
+    #[test]
+    fn sliced_covers_every_element_exactly_once() {
+        // write chunk-start+offset into every element: full coverage
+        // with disjoint writes means every element holds its own index
+        let mut out = vec![0usize; 103];
+        run_sliced(&mut out, 10, 4, |start, chunk| {
+            for (i, v) in chunk.iter_mut().enumerate() {
+                *v += start + i + 1;
+            }
+        });
+        for (i, &v) in out.iter().enumerate() {
+            assert_eq!(v, i + 1, "element {i} written other than exactly once");
+        }
+        // serial path (workers = 1) and the empty slice
+        let mut one = vec![0usize; 7];
+        run_sliced(&mut one, 3, 1, |start, chunk| chunk[0] = start);
+        assert_eq!((one[0], one[3], one[6]), (0, 3, 6));
+        let empty: &mut [usize] = &mut [];
+        run_sliced(empty, 5, 8, |_, _| panic!("no chunks on empty input"));
+    }
+
+    #[test]
+    fn prop_sliced_matches_serial_for_any_geometry() {
+        run_prop("sliced_matches_serial", 30, |g| {
+            let n = g.usize_in(0, 200);
+            let chunk = g.usize_in(1, 40);
+            let workers = g.usize_in(1, 9);
+            let mut par = vec![0u64; n];
+            let mut seq = vec![0u64; n];
+            run_sliced(&mut par, chunk, workers, |start, c| {
+                for (i, v) in c.iter_mut().enumerate() {
+                    *v = ((start + i) as u64) * 31 + 7;
+                }
+            });
+            for (i, v) in seq.iter_mut().enumerate() {
+                *v = (i as u64) * 31 + 7;
+            }
+            assert_eq!(par, seq);
+        });
     }
 
     #[test]

@@ -75,6 +75,8 @@ const USAGE: &str = "usage: repro <info|eval|sweep|search|plan|trace|figure|figu
                                        error, never silently dropped)
                [--qos-slots 2]        (gateway-wide execution slots: sessions closest
                                        to SLO violation drain first)
+               [--gemm-threads 4]     (row-parallelize large GEMMs inside each native
+                                       forward; bit-identical at any setting, 0 = serial)
   repro zoo-size <net> --format float:m7e6|plan:...
                (per-layer f32 vs bit-packed bytes, MAC-weighted, plus the packed
                 execution lane per layer; DESIGN.md §Storage, §Packed execution)
@@ -357,6 +359,15 @@ fn run(raw: &[String]) -> Result<()> {
             // headroom (DESIGN.md §Serving QoS)
             let slo = args.get("slo").map(SloTarget::parse).transpose()?;
             let qos_slots = args.get_usize("qos-slots", 0)?;
+            // intra-forward GEMM row parallelism (native engine only;
+            // bit-identical at any thread count — DESIGN.md §Perf)
+            let gemm_threads = args.get_usize("gemm-threads", 0)?;
+            if gemm_threads > 1 && kind == BackendKind::Pjrt {
+                eprintln!(
+                    "(--gemm-threads applies to native sessions only; PJRT executables \
+                     schedule their own kernels — flag ignored)"
+                );
+            }
             // open-loop trace-driven load: requests fire at schedule
             // time regardless of completions (the only mode where an
             // SLO has anything to shed); seeded for reproducibility
@@ -372,6 +383,7 @@ fn run(raw: &[String]) -> Result<()> {
                 packed_exec,
                 slo,
                 qos_slots,
+                gemm_threads,
             });
             let mut keys = Vec::new();
             for spec in split_session_specs(&specs) {

@@ -52,6 +52,7 @@
 //! native implementation of the one execution substrate
 //! (DESIGN.md §Serving).
 
+use std::cell::RefCell;
 use std::collections::BTreeMap;
 use std::sync::Arc;
 
@@ -62,8 +63,8 @@ use crate::nn::layers::Layer;
 use crate::nn::network::Network;
 use crate::numerics::{quantize_slice, QIdentity, QuantOp, Quantizer};
 use crate::store::{
-    gemm_packed_int, gemm_packed_lut, ExecScratch, PackedPlan, PackedTensor, StoreKey, WeightStore,
-    LUT_MAX_WIDTH,
+    gemm_packed_int, gemm_packed_lut, ExecScratch, Lease, PackedPlan, PackedTensor, StoreEntry,
+    StoreKey, WeightStore, LUT_MAX_WIDTH,
 };
 use crate::tensor::Tensor;
 use crate::{with_packed_op, with_quant_op};
@@ -111,6 +112,40 @@ struct LayerQ {
     /// [`PackedPlan::Staged`] unless the table was resolved with packed
     /// execution enabled AND the router admitted the layer
     packed: PackedPlan,
+    /// the lock-free warm path (DESIGN.md §Storage): the last [`Lease`]
+    /// the store issued for this layer's key.  While it validates
+    /// ([`WeightStore::hit_if_current`] — one atomic load), the forward
+    /// touches no store mutex; eviction/clear invalidate it and the
+    /// next forward re-prepares through the locked path.  `RefCell`
+    /// because a table is owned by one backend (one thread) but the
+    /// forward only holds `&QuantTable`.
+    cache: RefCell<Option<Lease>>,
+}
+
+impl LayerQ {
+    /// The staged store entry for this layer: cached-lease validation
+    /// first (lock-free), locked `prepare_lease` on a miss or stale
+    /// epoch (the fresh lease replaces the cache).  `None` = no store,
+    /// not store-staged, or budget-rejected — callers fall back to
+    /// scratch staging, bit-identical by construction.
+    fn staged_entry(
+        &self,
+        store: Option<&WeightStore>,
+        weights: &[f32],
+    ) -> Option<Arc<StoreEntry>> {
+        let (Staging::Store(key), Some(s)) = (&self.staging, store) else {
+            return None;
+        };
+        if let Some(lease) = self.cache.borrow().as_ref() {
+            if let Some(entry) = s.hit_if_current(lease) {
+                return Some(entry);
+            }
+        }
+        let lease = s.prepare_lease(key, weights);
+        let entry = lease.as_ref().map(|l| l.entry().clone());
+        *self.cache.borrow_mut() = lease;
+        entry
+    }
 }
 
 /// How a layer's weight tensor reaches the GEMM (module docs;
@@ -137,7 +172,7 @@ fn named_layer_q(net: &Network, name: &str, fmt: Format) -> LayerQ {
     } else {
         Staging::Store(StoreKey::new(&net.name, name, fmt))
     };
-    LayerQ { q, fmt, staging, packed: PackedPlan::Staged }
+    LayerQ { q, fmt, staging, packed: PackedPlan::Staged, cache: RefCell::new(None) }
 }
 
 /// True when the identity op maps every value to itself — i.e. the
@@ -202,6 +237,7 @@ impl QuantTable {
                                 fmt,
                                 staging: Staging::NoWeights,
                                 packed: PackedPlan::Staged,
+                                cache: RefCell::new(None),
                             })
                         }
                         // exact ops never consult their entry; the
@@ -215,6 +251,7 @@ impl QuantTable {
                                 fmt,
                                 staging: Staging::NoWeights,
                                 packed: PackedPlan::Staged,
+                                cache: RefCell::new(None),
                             })
                         }
                     };
@@ -257,6 +294,7 @@ impl QuantTable {
                     fmt: *fmt,
                     staging: Staging::NoWeights,
                     packed: PackedPlan::Staged,
+                    cache: RefCell::new(None),
                 }),
             })
             .collect();
@@ -387,6 +425,11 @@ pub struct Engine {
     branch_out: Vec<f32>,
     /// packed-kernel scratch (integer lanes, decoded weight tiles)
     exec: ExecScratch,
+    /// intra-forward row parallelism for big staged GEMMs: workers the
+    /// M dimension is split across (`0`/`1` = serial).  Rows are
+    /// independent chains, so any split is bit-identical by
+    /// construction (DESIGN.md §Perf).
+    gemm_threads: usize,
 }
 
 /// Shape of the activation tensor flowing through the engine.
@@ -422,7 +465,16 @@ impl Engine {
             wq: Vec::new(),
             branch_out: Vec::new(),
             exec: ExecScratch::default(),
+            gemm_threads: 0,
         }
+    }
+
+    /// Configure intra-forward GEMM row parallelism (`0`/`1` = serial;
+    /// the `--gemm-threads` flag).  Only staged-tier GEMMs with at
+    /// least `GEMM_PAR_MIN_M` rows split — small GEMMs and the packed
+    /// kernels (which own mutable scratch) stay serial.
+    pub fn set_gemm_threads(&mut self, threads: usize) {
+        self.gemm_threads = threads;
     }
 
     /// Run the network on a batch `x` of shape (B, H, W, C) under a
@@ -520,13 +572,11 @@ impl Engine {
                 assert_eq!(f, *in_dim, "dense {name}: input dim mismatch");
                 let w = net.weight(&format!("{name}.w"));
                 let bias = net.weight(&format!("{name}.b"));
-                // staged weights come from the store (by reference), the
-                // network itself (identity-direct), or — on a miss the
-                // budget cannot admit — the scratch staging fallback
-                let cached = match (&lq.staging, store) {
-                    (Staging::Store(key), Some(s)) => s.prepare(key, w.data()),
-                    _ => None,
-                };
+                // staged weights come from the store (lock-free when the
+                // cached lease validates), the network itself
+                // (identity-direct), or — on a miss the budget cannot
+                // admit — the scratch staging fallback
+                let cached = lq.staged_entry(store, w.data());
                 resize(&mut self.act_b, b * out_dim);
                 match (&lq.packed, &cached) {
                     // packed-domain execution: the MAC loop reads the
@@ -574,7 +624,7 @@ impl Engine {
                         // one dispatch selects the layer's monomorphized
                         // kernels
                         with_quant_op!(&lq.q, op => {
-                            gemm_q(
+                            gemm_q_rows(
                                 &self.act_a[..b * f],
                                 wq,
                                 &mut self.act_b,
@@ -582,6 +632,7 @@ impl Engine {
                                 *in_dim,
                                 *out_dim,
                                 op,
+                                self.gemm_threads,
                             );
                             add_bias_q(&mut self.act_b, bias.data(), b, *out_dim, op);
                         });
@@ -716,10 +767,7 @@ impl Engine {
         let bdata = net.weight(&format!("{name}.b")).data();
         // staged weights by reference (store / identity-direct), with
         // scratch staging as the miss fallback — see the Dense arm
-        let cached = match (&lq.staging, store) {
-            (Staging::Store(key), Some(s)) => s.prepare(key, wt.data()),
-            _ => None,
-        };
+        let cached = lq.staged_entry(store, wt.data());
         resize(&mut self.act_b, m * out_ch);
         match (&lq.packed, &cached) {
             // packed-domain execution over the im2col patches — see the
@@ -762,7 +810,16 @@ impl Engine {
                 };
                 // one dispatch selects the layer's monomorphized kernels
                 with_quant_op!(&lq.q, op => {
-                    gemm_q(&self.patches, wq, &mut self.act_b, m, k_dim, *out_ch, op);
+                    gemm_q_rows(
+                        &self.patches,
+                        wq,
+                        &mut self.act_b,
+                        m,
+                        k_dim,
+                        *out_ch,
+                        op,
+                        self.gemm_threads,
+                    );
                     add_bias_q(&mut self.act_b, bdata, m, *out_ch, op);
                 });
             }
@@ -840,6 +897,18 @@ const GEMM_MR: usize = 8;
 /// Output columns per tile: the out tile (`GEMM_MR * GEMM_NC` floats)
 /// and one W row stay L1-resident across the whole k loop.
 const GEMM_NC: usize = 64;
+/// Fixed inner-lane width of the [`gemm_q`] n loop (divides `GEMM_NC`,
+/// so full tiles have no remainder).  The lane loop advances `GEMM_LANES`
+/// *independent* chains one k step in lockstep over plain arrays — the
+/// array-of-lanes layout stable-Rust auto-vectorization needs; each
+/// lane's op sequence is exactly the scalar `q(o + q(a*w))`, so bits
+/// are untouched (DESIGN.md §Perf).
+const GEMM_LANES: usize = 8;
+/// Minimum M (GEMM rows) before [`gemm_q_rows`] splits across pool
+/// workers — below this the queue/join overhead beats the win (the
+/// seed nets' conv GEMMs at batch 32 are 3k–25k rows; dense layers
+/// are `M = batch` and stay serial).
+const GEMM_PAR_MIN_M: usize = 256;
 
 /// Per-op-truncated GEMM: out[m][n] = chain_k q(acc + q(a[m][k] * w[k][n])).
 /// Row-major A (M,K), W (K,N), out (M,N).
@@ -887,13 +956,60 @@ pub fn gemm_q<Q: QuantOp>(
                 for mi in m0..m1 {
                     let av = a[mi * k + ki];
                     let orow = &mut out[mi * n + n0..mi * n + n1];
-                    for (o, &wv) in orow.iter_mut().zip(wrow) {
+                    // array-of-lanes inner loop (`GEMM_LANES` chains per
+                    // step over fixed-width arrays): same per-element op
+                    // sequence as the scalar zip, restructured so the
+                    // monomorphized, branch-minimal `q.q` bodies
+                    // auto-vectorize on stable Rust
+                    let mut oc = orow.chunks_exact_mut(GEMM_LANES);
+                    let mut wc = wrow.chunks_exact(GEMM_LANES);
+                    for (ol, wl) in (&mut oc).zip(&mut wc) {
+                        let mut prod = [0f32; GEMM_LANES];
+                        for j in 0..GEMM_LANES {
+                            prod[j] = q.q(av * wl[j]);
+                        }
+                        for j in 0..GEMM_LANES {
+                            ol[j] = q.q(ol[j] + prod[j]);
+                        }
+                    }
+                    for (o, &wv) in oc.into_remainder().iter_mut().zip(wc.remainder()) {
                         *o = q.q(*o + q.q(av * wv));
                     }
                 }
             }
         }
     }
+}
+
+/// [`gemm_q`] with optional intra-forward row parallelism.  Rows of A
+/// are **independent** per-element k chains, so splitting M across
+/// `coordinator::pool` workers regroups whole chains without touching
+/// any chain's internal order — every split is bit-identical to the
+/// serial call by construction (each output element still runs
+/// `q(acc + q(a·w))` over increasing k from a zero accumulator;
+/// DESIGN.md §Perf).  Serial for `threads <= 1` or below the
+/// [`GEMM_PAR_MIN_M`] row floor; row chunks are `GEMM_MR`-aligned so
+/// every worker's tile boundaries match the serial kernel's.
+#[allow(clippy::too_many_arguments)]
+fn gemm_q_rows<Q: QuantOp + Sync>(
+    a: &[f32],
+    w: &[f32],
+    out: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    q: &Q,
+    threads: usize,
+) {
+    if threads <= 1 || m < GEMM_PAR_MIN_M {
+        return gemm_q(a, w, out, m, k, n, q);
+    }
+    let rows_per = (((m + threads - 1) / threads) + GEMM_MR - 1) / GEMM_MR * GEMM_MR;
+    crate::coordinator::pool::run_sliced(&mut out[..m * n], rows_per * n, threads, |start, chunk| {
+        let r0 = start / n;
+        let rows = chunk.len() / n;
+        gemm_q(&a[r0 * k..(r0 + rows) * k], w, chunk, rows, k, n, q);
+    });
 }
 
 /// The retained naive triple loop over the scalar [`Quantizer::q`]
@@ -1181,6 +1297,41 @@ mod tests {
                 );
             }
         });
+    }
+
+    /// Row-parallel GEMM is bit-identical to the serial kernel for any
+    /// thread count: splitting M regroups whole (independent) chains,
+    /// never the serial-k order inside one (ISSUE 8 tentpole b).
+    #[test]
+    fn row_parallel_gemm_is_bitexact_vs_serial() {
+        let (m, k, n) = (GEMM_PAR_MIN_M + 11, 17, GEMM_NC + 5);
+        let a: Vec<f32> = (0..m * k).map(|i| (i as f32 * 0.113).sin()).collect();
+        let w: Vec<f32> = (0..k * n).map(|i| (i as f32 * 0.271).cos()).collect();
+        for fmt in [Format::float(5, 5), Format::fixed(4, 6), Format::SINGLE] {
+            let q = Quantizer::new(&fmt);
+            let mut serial = vec![0.0; m * n];
+            with_quant_op!(&q, op => gemm_q(&a, &w, &mut serial, m, k, n, op));
+            for threads in [2, 3, 8] {
+                let mut par = vec![7.0; m * n];
+                with_quant_op!(&q, op => gemm_q_rows(&a, &w, &mut par, m, k, n, op, threads));
+                for i in 0..m * n {
+                    assert_eq!(
+                        par[i].to_bits(),
+                        serial[i].to_bits(),
+                        "{fmt} threads={threads} elem {i}"
+                    );
+                }
+            }
+            // below the row floor the wrapper must stay serial (and
+            // therefore trivially bit-identical)
+            let small_m = GEMM_PAR_MIN_M - 1;
+            let mut small_serial = vec![0.0; small_m * n];
+            let mut small_par = vec![0.0; small_m * n];
+            let sa = &a[..small_m * k];
+            with_quant_op!(&q, op => gemm_q(sa, &w, &mut small_serial, small_m, k, n, op));
+            with_quant_op!(&q, op => gemm_q_rows(sa, &w, &mut small_par, small_m, k, n, op, 4));
+            assert_eq!(small_par, small_serial);
+        }
     }
 
     #[test]

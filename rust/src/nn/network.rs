@@ -39,6 +39,33 @@ pub struct Network {
 
 impl Network {
     fn from_meta(name: &str, meta: &Json, dir: &Path) -> Result<Network> {
+        // every scalar manifest field is validated UP FRONT with a typed
+        // error naming the network and the offending key — a malformed
+        // manifest must surface the loader contract's loud Err, never an
+        // unwrap panic, and must do so before any file IO
+        let req_str = |key: &str| -> Result<String> {
+            Ok(meta
+                .req(key)
+                .with_context(|| format!("network {name}: manifest"))?
+                .as_str()
+                .ok_or_else(|| {
+                    anyhow!("network {name}: manifest key {key:?} must be a string")
+                })?
+                .to_string())
+        };
+        let req_usize = |key: &str| -> Result<usize> {
+            meta.req(key)
+                .with_context(|| format!("network {name}: manifest"))?
+                .as_usize()
+                .ok_or_else(|| anyhow!("network {name}: manifest key {key:?} must be a number"))
+        };
+        let wfile = req_str("weights_file")?;
+        let efile = req_str("eval_file")?;
+        let classes = req_usize("classes")?;
+        let topk = req_usize("topk")?;
+        let n_params = req_usize("params")?;
+        let max_chain = req_usize("max_chain")?;
+
         let input: Vec<usize> = meta
             .req("input")?
             .as_arr()
@@ -66,7 +93,6 @@ impl Network {
             .map(|v| v.as_str().unwrap_or("").to_string())
             .collect();
 
-        let wfile = meta.req("weights_file")?.as_str().unwrap().to_string();
         let weights_c = read_container(&dir.join(&wfile))
             .with_context(|| format!("loading weights for {name}"))?;
         let mut weights = BTreeMap::new();
@@ -74,7 +100,6 @@ impl Network {
             weights.insert(wname.clone(), weights_c.f32(wname)?.clone());
         }
 
-        let efile = meta.req("eval_file")?.as_str().unwrap().to_string();
         let eval_c = read_container(&dir.join(&efile))
             .with_context(|| format!("loading eval set for {name}"))?;
         let eval_x = eval_c.f32("x")?.clone();
@@ -93,8 +118,8 @@ impl Network {
         Ok(Network {
             name: name.to_string(),
             input: [input[0], input[1], input[2]],
-            classes: meta.req("classes")?.as_usize().unwrap(),
-            topk: meta.req("topk")?.as_usize().unwrap(),
+            classes,
+            topk,
             layers,
             weight_order,
             weights,
@@ -102,8 +127,8 @@ impl Network {
             eval_y,
             eval_acc_exact: meta.req("eval_acc_exact")?.as_f64().unwrap_or(0.0),
             hlo_files,
-            n_params: meta.req("params")?.as_usize().unwrap(),
-            max_chain: meta.req("max_chain")?.as_usize().unwrap(),
+            n_params,
+            max_chain,
         })
     }
 
@@ -235,5 +260,77 @@ impl Zoo {
         let mut v: Vec<_> = self.networks.values().cloned().collect();
         v.sort_by(|a, b| b.n_params.cmp(&a.n_params));
         v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A structurally complete manifest whose scalar fields are spliced
+    /// in verbatim — callers pass JSON fragments (`"\"w.prt\""`, `"7"`)
+    /// so each case can corrupt exactly one field's type.
+    fn manifest(
+        wfile: &str,
+        efile: &str,
+        classes: &str,
+        topk: &str,
+        params: &str,
+        max_chain: &str,
+    ) -> String {
+        format!(
+            r#"{{
+                "input": [2, 2, 1], "layers": [], "weights": [],
+                "weights_file": {wfile}, "eval_file": {efile},
+                "classes": {classes}, "topk": {topk},
+                "eval_acc_exact": 1.0,
+                "params": {params}, "max_chain": {max_chain}
+            }}"#
+        )
+    }
+
+    fn try_load(text: &str) -> Result<Network> {
+        let meta = Json::parse(text).expect("test manifests are syntactically valid JSON");
+        Network::from_meta("m", &meta, Path::new("/nonexistent"))
+    }
+
+    /// ISSUE 8 satellite: a manifest with a wrong-typed scalar field
+    /// surfaces a typed `Err` naming the network and the offending key —
+    /// the old `.as_str().unwrap()` on `weights_file`/`eval_file`
+    /// panicked instead.  Validation runs before any file IO, so the
+    /// matrix needs no artifact files on disk.
+    #[test]
+    fn malformed_manifest_fields_surface_typed_errors_not_panics() {
+        let s = |v: &str| format!("{v:?}"); // JSON string literal
+        let cases: Vec<(String, &str)> = vec![
+            // non-string file fields (the original panic sites)
+            (manifest("7", &s("e.prt"), "10", "1", "0", "0"), "weights_file"),
+            (manifest("[1, 2]", &s("e.prt"), "10", "1", "0", "0"), "weights_file"),
+            (manifest(&s("w.prt"), "3.5", "10", "1", "0", "0"), "eval_file"),
+            // non-numeric count fields (same unwrap pattern, same fix)
+            (manifest(&s("w.prt"), &s("e.prt"), &s("ten"), "1", "0", "0"), "classes"),
+            (manifest(&s("w.prt"), &s("e.prt"), "10", "[]", "0", "0"), "topk"),
+            (manifest(&s("w.prt"), &s("e.prt"), "10", "1", &s("big"), "0"), "params"),
+            (manifest(&s("w.prt"), &s("e.prt"), "10", "1", "0", "{}"), "max_chain"),
+        ];
+        for (text, key) in &cases {
+            let err = format!("{:#}", try_load(text).expect_err(key));
+            assert!(err.contains(&format!("{key:?}")), "{key}: {err}");
+            assert!(err.contains("network m"), "{key}: error must name the network: {err}");
+        }
+        // a missing key reports through the same contract
+        let text = manifest(&s("w.prt"), &s("e.prt"), "10", "1", "0", "0")
+            .replace(r#""eval_file": "e.prt","#, "");
+        let err = format!("{:#}", try_load(&text).unwrap_err());
+        assert!(err.contains("eval_file"), "{err}");
+        assert!(err.contains("network m"), "{err}");
+        // an all-valid manifest gets PAST field validation: its failure
+        // is the weights-file IO (no artifacts on disk), proving the
+        // checks run before — and do not mask — the load itself
+        let err = format!(
+            "{:#}",
+            try_load(&manifest(&s("w.prt"), &s("e.prt"), "10", "1", "0", "0")).unwrap_err()
+        );
+        assert!(err.contains("loading weights for m"), "{err}");
     }
 }

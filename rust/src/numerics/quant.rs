@@ -232,12 +232,31 @@ pub fn quantize(x: f32, fmt: &Format) -> f32 {
     Quantizer::new(fmt).q(x)
 }
 
+/// Fixed lane width of [`q_slice`]'s main loop (array-of-lanes
+/// restructuring for stable-Rust auto-vectorization; DESIGN.md §Perf).
+const Q_SLICE_LANES: usize = 8;
+
 /// The monomorphized slice kernel: one `Q` instantiation per op kind,
 /// no per-element kind branch — used for input staging and weight
 /// staging in the engine (via [`quantize_slice`]'s dispatch).
+///
+/// The main loop walks fixed-width `Q_SLICE_LANES` chunks through a
+/// local array, applying the identical scalar `q` per lane — same ops,
+/// same bits, but a shape the vectorizer can turn into vector code for
+/// the branch-minimal monomorphized op bodies.  The ragged tail runs
+/// the plain scalar loop.
 #[inline]
 pub fn q_slice<Q: QuantOp>(xs: &mut [f32], q: &Q) {
-    for x in xs.iter_mut() {
+    let mut chunks = xs.chunks_exact_mut(Q_SLICE_LANES);
+    for c in &mut chunks {
+        let mut v = [0f32; Q_SLICE_LANES];
+        v.copy_from_slice(c);
+        for lane in v.iter_mut() {
+            *lane = q.q(*lane);
+        }
+        c.copy_from_slice(&v);
+    }
+    for x in chunks.into_remainder().iter_mut() {
         *x = q.q(*x);
     }
 }

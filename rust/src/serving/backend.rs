@@ -159,6 +159,16 @@ impl NativeBackend {
         self
     }
 
+    /// Builder: row-parallelize large staged-tier GEMMs across up to
+    /// `threads` pool workers (`0` or `1` = serial, the default).
+    /// Bit-identical at any setting: workers own disjoint row ranges
+    /// and every output element's serial-k chain runs unchanged on
+    /// exactly one worker (DESIGN.md §Perf).
+    pub fn with_gemm_threads(mut self, threads: usize) -> NativeBackend {
+        self.engine.set_gemm_threads(threads);
+        self
+    }
+
     /// Whether this backend executes from packed codes where admitted.
     pub fn packed_exec(&self) -> bool {
         self.packed_exec
@@ -288,6 +298,7 @@ pub(crate) fn make_factory(
     kind: BackendKind,
     store: Arc<WeightStore>,
     packed_exec: bool,
+    gemm_threads: usize,
 ) -> BackendFactory {
     // packed execution is a native-engine concept: the AOT executables
     // hold weights on-device in their own layout, so the flag only
@@ -295,7 +306,9 @@ pub(crate) fn make_factory(
     // pjrt)
     Box::new(move || match kind {
         BackendKind::Native => Ok(Box::new(
-            NativeBackend::with_store(net, store).with_packed_exec(packed_exec),
+            NativeBackend::with_store(net, store)
+                .with_packed_exec(packed_exec)
+                .with_gemm_threads(gemm_threads),
         ) as Box<dyn Backend>),
         BackendKind::Pjrt => pjrt_backend(&net, &dir, batch, &spec),
         BackendKind::Auto => match pjrt_backend(&net, &dir, batch, &spec) {
@@ -306,7 +319,9 @@ pub(crate) fn make_factory(
                     net.name
                 );
                 Ok(Box::new(
-                    NativeBackend::with_store(net, store).with_packed_exec(packed_exec),
+                    NativeBackend::with_store(net, store)
+                        .with_packed_exec(packed_exec)
+                        .with_gemm_threads(gemm_threads),
                 ) as Box<dyn Backend>)
             }
         },

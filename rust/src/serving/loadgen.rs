@@ -315,7 +315,8 @@ impl DriveReport {
                 if lats.is_empty() {
                     0.0
                 } else {
-                    lats[((lats.len() - 1) as f64 * q) as usize] * 1e3
+                    // nearest rank, matching bench_harness::percentile
+                    lats[((lats.len() - 1) as f64 * q).round() as usize] * 1e3
                 }
             };
             out.push_str(&format!(

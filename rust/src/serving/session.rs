@@ -171,7 +171,10 @@ struct Request {
 }
 
 /// The (p50, p99) of a queue-latency window, in milliseconds, computed
-/// by nearest-rank over the sorted window: index `(n-1) * q`, truncated.
+/// by nearest-rank over the sorted window: index `(n-1) * q`, rounded to
+/// the nearest integer (truncating here biased the window p99 — the
+/// value the QoS gate sheds on — optimistically by up to one rank; the
+/// `bench_harness::percentile` fix, applied to the serving window too).
 /// An empty window reports `(0.0, 0.0)` — never NaN.  `total_cmp` makes
 /// the sort panic-free for any float input.
 fn window_percentiles_ms(mut lats_s: Vec<f64>) -> (f64, f64) {
@@ -180,7 +183,7 @@ fn window_percentiles_ms(mut lats_s: Vec<f64>) -> (f64, f64) {
         if lats_s.is_empty() {
             0.0
         } else {
-            lats_s[((lats_s.len() - 1) as f64 * q) as usize] * 1e3
+            lats_s[((lats_s.len() - 1) as f64 * q).round() as usize] * 1e3
         }
     };
     (pct(0.5), pct(0.99))
@@ -219,6 +222,11 @@ pub struct SessionOptions {
     /// scheduler entirely and dispatchers run unthrottled as before.
     /// Ignored by standalone sessions.
     pub qos_slots: usize,
+    /// row-parallelize large staged-tier GEMMs across this many pool
+    /// workers inside each forward (`--gemm-threads`; DESIGN.md §Perf).
+    /// 0 or 1 (the default) = serial.  Bit-identical at any setting;
+    /// native backends only.
+    pub gemm_threads: usize,
 }
 
 impl Default for SessionOptions {
@@ -230,6 +238,7 @@ impl Default for SessionOptions {
             packed_exec: false,
             slo: None,
             qos_slots: 0,
+            gemm_threads: 0,
         }
     }
 }
@@ -379,6 +388,7 @@ impl Session {
             kind,
             store,
             opts.packed_exec,
+            opts.gemm_threads,
         );
         let resolved = SessionOptions { batch, ..opts };
         let mut session = Self::with_factory_qos(network, spec, resolved, scheduler, factory);
@@ -913,7 +923,8 @@ mod tests {
     #[test]
     fn stats_window_percentiles_are_exact() {
         // 1..=100 ms, pushed in scrambled order: nearest-rank indices
-        // (n-1)*0.5 = 49 and (n-1)*0.99 = 98 pick exactly 50 and 99 ms
+        // round((n-1)*0.5) = round(49.5) = 50 and round((n-1)*0.99) =
+        // round(98.01) = 98 pick exactly 51 and 99 ms
         let mut cell = StatsCell::default();
         for i in (1..=100u32).rev() {
             cell.push_lat(i as f64 * 1e-3);
@@ -921,7 +932,7 @@ mod tests {
         let (_, lats) = cell.raw();
         assert_eq!(lats.len(), 100);
         let (p50, p99) = window_percentiles_ms(lats);
-        assert_eq!(p50, 50.0);
+        assert_eq!(p50, 51.0);
         assert_eq!(p99, 99.0);
 
         // single-element window: both percentiles are that element
@@ -961,7 +972,7 @@ mod tests {
         }
         let (p50, p99) = window_percentiles_ms(lats);
         assert_eq!(p50, 1.0, "8/4096 outliers cannot move the median");
-        assert_eq!(p99, 1.0, "p99 rank (4095*0.99=4054) is below the outliers");
+        assert_eq!(p99, 1.0, "p99 rank (round(4095*0.99)=4054) is below the outliers");
         // wrap-around continues cyclically
         for _ in 0..QUEUE_LAT_WINDOW {
             cell.push_lat(2e-3);

@@ -43,6 +43,16 @@ use crate::store::PackedTensor;
 const GEMM_MR: usize = 8;
 const GEMM_NC: usize = 64;
 
+/// Fixed lane width for the integer MAC inner loop (mirrors the
+/// engine's `GEMM_LANES`): the accumulate loop is expressed over
+/// `chunks_exact` blocks of this many outputs through a local
+/// array-of-lanes, which the optimizer can keep in vector registers —
+/// i16 lanes pack 16-wide in a 256-bit register, i32 lanes 8-wide.
+/// Divides `GEMM_NC`, so full tiles see no remainder loop.  Per-element
+/// op order (`product` then clamped `accumulate`, serial in k) is
+/// untouched: lanes are independent output elements.
+const INT_LANES: usize = 8;
+
 /// Cap on LUT code width: `2^18` f32 entries = 1 MiB per table — wide
 /// enough for the paper's headline `fixed:l8r8` (width 18) while
 /// keeping tables L2-resident.
@@ -238,7 +248,22 @@ pub fn gemm_packed_int<A: HasLanes>(
                     if av == A::ZERO {
                         continue; // exact: clamp(acc + 0) == acc
                     }
-                    for (o, &wv) in arow[..nw].iter_mut().zip(wrow) {
+                    // array-of-lanes accumulate: same per-element op
+                    // sequence, expressed in fixed-width blocks the
+                    // optimizer vectorizes (lanes are independent
+                    // output elements; k stays serial per element)
+                    let mut oc = arow[..nw].chunks_exact_mut(INT_LANES);
+                    let mut wc = wrow.chunks_exact(INT_LANES);
+                    for (ol, wl) in (&mut oc).zip(&mut wc) {
+                        let mut prod = [A::ZERO; INT_LANES];
+                        for j in 0..INT_LANES {
+                            prod[j] = op.product(av, wl[j]);
+                        }
+                        for j in 0..INT_LANES {
+                            ol[j] = op.accumulate(ol[j], prod[j]);
+                        }
+                    }
+                    for (o, &wv) in oc.into_remainder().iter_mut().zip(wc.remainder()) {
                         *o = op.accumulate(*o, op.product(av, wv));
                     }
                 }
@@ -253,6 +278,52 @@ pub fn gemm_packed_int<A: HasLanes>(
                     *o = op.finish(v);
                 }
             }
+        }
+    }
+}
+
+/// Scalar reference for [`gemm_packed_int`]: the identical grid-unit
+/// serial-k chain, one output element at a time — no tiling, no lane
+/// chunking, weights decoded on every access.  Exists as the
+/// denominator of the `packed_int_simd_over_scalar/<lane>` bench ratio
+/// and as the differential oracle for the lane-chunked kernel; the
+/// engine never calls it.
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_packed_int_scalar<A: HasLanes>(
+    a: &[f32],
+    w: &PackedTensor,
+    bias: Option<&[f32]>,
+    out: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    op: &QFixedInt<A>,
+    scratch: &mut ExecScratch,
+) {
+    debug_assert_eq!(w.len(), k * n, "packed weight shape");
+    debug_assert!(a.len() >= m * k && out.len() >= m * n);
+    let lanes = A::lanes(scratch);
+    lanes.a.clear();
+    lanes.a.extend(a[..m * k].iter().map(|&x| op.stage(x)));
+    lanes.bias.clear();
+    if let Some(b) = bias {
+        lanes.bias.extend(b[..n].iter().map(|&x| op.stage_rounded(x)));
+    }
+    for mi in 0..m {
+        for ni in 0..n {
+            let mut acc = A::ZERO;
+            for ki in 0..k {
+                let av = lanes.a[mi * k + ki];
+                if av == A::ZERO {
+                    continue; // exact: clamp(acc + 0) == acc
+                }
+                let wv = A::from_i64(w.fixed_int_at(ki * n + ni));
+                acc = op.accumulate(acc, op.product(av, wv));
+            }
+            if !lanes.bias.is_empty() {
+                acc = op.accumulate(acc, lanes.bias[ni]);
+            }
+            out[mi * n + ni] = op.finish(acc);
         }
     }
 }
@@ -454,6 +525,13 @@ mod tests {
                         &a, &packed, Some(&bias), &mut out, m, k, n, o, &mut scratch,
                     ));
                     assert_bits(&out, &want, &format!("{} int", fmt.id()));
+                    // the untiled scalar reference must agree bit-for-bit
+                    // with both the f32 chain and the lane-chunked kernel
+                    let mut out_s = vec![0.0f32; m * n];
+                    with_packed_op!(&op, o => gemm_packed_int_scalar(
+                        &a, &packed, Some(&bias), &mut out_s, m, k, n, o, &mut scratch,
+                    ));
+                    assert_bits(&out_s, &want, &format!("{} int scalar", fmt.id()));
                 }
                 Route::Lut => {}
                 Route::Staged => return, // raw carrier: no packed lane

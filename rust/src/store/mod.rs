@@ -34,19 +34,34 @@
 //! bit-identical never reach the store at all — the engine borrows the
 //! network's tensor directly (no copy, no store bytes; see
 //! `nn::QuantTable`).
+//!
+//! # Lock-free warm path
+//!
+//! A [`WeightStore::prepare_lease`] miss (or cold hit) goes through the
+//! store mutex as before, but returns a [`Lease`]: the entry `Arc` plus
+//! the slot's per-key epoch and the epoch value observed at issue time.
+//! The engine caches the lease inside its resolved `QuantTable`; every
+//! subsequent warm forward revalidates with
+//! [`WeightStore::hit_if_current`] — one `Acquire` load, zero mutex
+//! acquisitions.  Eviction and [`WeightStore::clear`] bump the epoch
+//! (`Release`), so stale leases fail validation and fall back to the
+//! locked path, which is always correct (entries are immutable and
+//! rebuilt bit-identically).  DESIGN.md §Storage has the full
+//! load/validate/fallback/invalidate protocol table.
 
 mod exec;
 mod footprint;
 mod packed;
 
 pub use exec::{
-    gemm_packed_int, gemm_packed_lut, route, ExecScratch, HasLanes, PackedPlan, Route,
-    LUT_MAX_WIDTH,
+    gemm_packed_int, gemm_packed_int_scalar, gemm_packed_lut, route, ExecScratch, HasLanes,
+    PackedPlan, Route, LUT_MAX_WIDTH,
 };
 pub use footprint::{zoo_size, FootprintRow};
 pub use packed::PackedTensor;
 
 use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, PoisonError};
 
 use anyhow::{bail, Result};
@@ -129,6 +144,10 @@ pub struct StoreStats {
     /// prepares refused because the entry alone exceeds the budget
     /// (the caller re-stages into scratch — correct, just uncached)
     pub rejected: u64,
+    /// lost-race adopts: a concurrent prepare built a duplicate entry
+    /// but was served the incumbent — counted in `hits`, not `misses`,
+    /// so `hits + misses + rejected` always equals total prepares
+    pub races: u64,
     /// resident entries
     pub entries: usize,
     /// resident bytes (quantized f32 + packed, summed over entries)
@@ -143,11 +162,12 @@ impl StoreStats {
     /// One-line human rendering for CLI stats tables.
     pub fn render(&self) -> String {
         format!(
-            "{} hits, {} misses, {} evictions, {} rejected; {} entries, {} resident ({} packed), budget {}",
+            "{} hits, {} misses, {} evictions, {} rejected, {} races; {} entries, {} resident ({} packed), budget {}",
             self.hits,
             self.misses,
             self.evictions,
             self.rejected,
+            self.races,
             self.entries,
             human_bytes(self.bytes),
             human_bytes(self.packed_bytes),
@@ -161,7 +181,38 @@ impl StoreStats {
 
 struct Slot {
     entry: Arc<StoreEntry>,
+    /// Per-key epoch published to [`Lease`] holders: bumped (`Release`)
+    /// when this slot is evicted or cleared, so every outstanding lease
+    /// on it goes stale with one atomic store.  A re-inserted key gets
+    /// a FRESH epoch cell, so leases from a previous residency can
+    /// never revalidate by accident.
+    epoch: Arc<AtomicU64>,
     last_used: u64,
+}
+
+/// An epoch-validated claim on a staged entry — the lock-free warm
+/// path (module docs, DESIGN.md §Storage).  The engine caches the
+/// lease inside its resolved `QuantTable`; while the slot's epoch still
+/// equals the value observed at issue time,
+/// [`WeightStore::hit_if_current`] serves the entry with a single
+/// atomic load and **no mutex**.  Eviction and [`WeightStore::clear`]
+/// bump the epoch, so stale leases fall back to the locked
+/// [`WeightStore::prepare_lease`] path.
+#[derive(Clone)]
+pub struct Lease {
+    entry: Arc<StoreEntry>,
+    epoch: Arc<AtomicU64>,
+    seen: u64,
+}
+
+impl Lease {
+    /// The staged entry this lease was issued against.  Readable even
+    /// when stale — entries are immutable, staleness only means the
+    /// store has since evicted the slot (the engine re-prepares so the
+    /// store's accounting stays truthful).
+    pub fn entry(&self) -> &Arc<StoreEntry> {
+        &self.entry
+    }
 }
 
 struct Inner {
@@ -170,16 +221,25 @@ struct Inner {
     entries: HashMap<StoreKey, Slot>,
     bytes: usize,
     packed_bytes: usize,
-    hits: u64,
     misses: u64,
     evictions: u64,
     rejected: u64,
+    races: u64,
 }
 
 /// The shared weight store (module docs).  All methods take `&self`;
 /// clone the surrounding `Arc` to share it across sessions/threads.
 pub struct WeightStore {
     inner: Mutex<Inner>,
+    /// prepares served from a resident entry (locked hit, lost-race
+    /// adopt, or lock-free lease validation) — atomic so the warm path
+    /// can count hits without touching the mutex
+    hits: AtomicU64,
+    /// data-path mutex acquisitions; [`WeightStore::stats`] reads do
+    /// not count.  The store-contract concurrency tests assert this
+    /// stays flat across warm forwards — the "zero locks when warm"
+    /// proof counter.
+    lock_acquisitions: AtomicU64,
 }
 
 impl Default for WeightStore {
@@ -199,18 +259,20 @@ impl WeightStore {
                 entries: HashMap::new(),
                 bytes: 0,
                 packed_bytes: 0,
-                hits: 0,
                 misses: 0,
                 evictions: 0,
                 rejected: 0,
+                races: 0,
             }),
+            hits: AtomicU64::new(0),
+            lock_acquisitions: AtomicU64::new(0),
         }
     }
 
     /// A store with no byte budget.
     pub fn unbounded() -> WeightStore {
         let store = WeightStore::with_budget(0);
-        store.lock().budget = None;
+        store.lock_raw().budget = None;
         store
     }
 
@@ -226,23 +288,40 @@ impl WeightStore {
     }
 
     fn lock(&self) -> std::sync::MutexGuard<'_, Inner> {
+        self.lock_acquisitions.fetch_add(1, Ordering::Relaxed);
+        self.lock_raw()
+    }
+
+    /// The mutex without the data-path acquisition counter — for
+    /// [`WeightStore::stats`] and construction, so the counter measures
+    /// exactly what forwards pay.
+    fn lock_raw(&self) -> std::sync::MutexGuard<'_, Inner> {
         self.inner.lock().unwrap_or_else(PoisonError::into_inner)
     }
 
-    /// The staged entry for `key`, building it from `weights` on a
-    /// miss.  `None` means the budget cannot admit the entry (priced
-    /// before building) — the caller must re-stage into scratch, which
-    /// is bit-identical by construction.
-    pub fn prepare(&self, key: &StoreKey, weights: &[f32]) -> Option<Arc<StoreEntry>> {
+    fn lease_for(&self, slot: &Slot) -> Lease {
+        self.hits.fetch_add(1, Ordering::Relaxed);
+        Lease {
+            entry: slot.entry.clone(),
+            seen: slot.epoch.load(Ordering::Acquire),
+            epoch: slot.epoch.clone(),
+        }
+    }
+
+    /// The staged entry for `key` as an epoch-validated [`Lease`],
+    /// building it from `weights` on a miss.  This is the LOCKED slow
+    /// path; callers cache the lease and serve warm forwards through
+    /// [`WeightStore::hit_if_current`].  `None` means the budget cannot
+    /// admit the entry (priced before building) — the caller must
+    /// re-stage into scratch, which is bit-identical by construction.
+    pub fn prepare_lease(&self, key: &StoreKey, weights: &[f32]) -> Option<Lease> {
         let tick = {
             let mut g = self.lock();
             g.tick += 1;
             let tick = g.tick;
             if let Some(slot) = g.entries.get_mut(key) {
                 slot.last_used = tick;
-                let entry = slot.entry.clone();
-                g.hits += 1;
-                return Some(entry);
+                return Some(self.lease_for(slot));
             }
             let price = StoreEntry::bytes_for(weights.len(), &key.fmt);
             if let Some(b) = g.budget {
@@ -251,7 +330,6 @@ impl WeightStore {
                     return None;
                 }
             }
-            g.misses += 1;
             tick
         };
         // build OUTSIDE the lock: quantization + packing of a large
@@ -260,14 +338,24 @@ impl WeightStore {
         let mut g = self.lock();
         if let Some(slot) = g.entries.get_mut(key) {
             // lost a race with a concurrent builder — adopt the
-            // incumbent (identical bits by construction)
+            // incumbent (identical bits by construction).  Serving a
+            // resident entry is a HIT; `races` records the duplicate
+            // build, so hit/miss totals balance per prepare even under
+            // contention.
             slot.last_used = slot.last_used.max(tick);
-            return Some(slot.entry.clone());
+            g.races += 1;
+            return Some(self.lease_for(slot));
         }
+        // the insert is what makes it a miss — counted here, not before
+        // the build, so a lost race cannot count a miss AND a hit
+        g.misses += 1;
         g.bytes += entry.bytes();
         g.packed_bytes += entry.packed.packed_bytes();
-        g.entries
-            .insert(key.clone(), Slot { entry: entry.clone(), last_used: tick });
+        let epoch = Arc::new(AtomicU64::new(0));
+        g.entries.insert(
+            key.clone(),
+            Slot { entry: entry.clone(), epoch: epoch.clone(), last_used: tick },
+        );
         while g.budget.is_some_and(|b| g.bytes > b) && g.entries.len() > 1 {
             let lru = g
                 .entries
@@ -276,21 +364,50 @@ impl WeightStore {
                 .map(|(k, _)| k.clone())
                 .expect("non-empty map has an LRU entry");
             let slot = g.entries.remove(&lru).expect("key came from the map");
+            slot.epoch.fetch_add(1, Ordering::Release);
             g.bytes -= slot.entry.bytes();
             g.packed_bytes -= slot.entry.packed.packed_bytes();
             g.evictions += 1;
         }
-        Some(entry)
+        Some(Lease { entry, epoch, seen: 0 })
     }
 
-    /// Counter snapshot (cheap: copies a few words under the lock).
+    /// [`WeightStore::prepare_lease`] without the lease — for callers
+    /// that re-resolve tables per call (eval/search) and cannot cache.
+    pub fn prepare(&self, key: &StoreKey, weights: &[f32]) -> Option<Arc<StoreEntry>> {
+        self.prepare_lease(key, weights).map(|l| l.entry)
+    }
+
+    /// The lock-free warm path: if `lease` is still current (one
+    /// `Acquire` load of the slot's epoch — no mutex), count a hit and
+    /// return its entry.  `None` means the slot was evicted or cleared
+    /// since the lease was issued; re-prepare through the locked path.
+    pub fn hit_if_current(&self, lease: &Lease) -> Option<Arc<StoreEntry>> {
+        if lease.epoch.load(Ordering::Acquire) == lease.seen {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            Some(lease.entry.clone())
+        } else {
+            None
+        }
+    }
+
+    /// Lifetime count of data-path mutex acquisitions.  Does not lock;
+    /// a warm multi-session run must leave this flat
+    /// (tests/store_contract.rs).
+    pub fn lock_acquisitions(&self) -> u64 {
+        self.lock_acquisitions.load(Ordering::Relaxed)
+    }
+
+    /// Counter snapshot (cheap: copies a few words under the lock; not
+    /// counted as a data-path acquisition).
     pub fn stats(&self) -> StoreStats {
-        let g = self.lock();
+        let g = self.lock_raw();
         StoreStats {
-            hits: g.hits,
+            hits: self.hits.load(Ordering::Relaxed),
             misses: g.misses,
             evictions: g.evictions,
             rejected: g.rejected,
+            races: g.races,
             entries: g.entries.len(),
             bytes: g.bytes,
             packed_bytes: g.packed_bytes,
@@ -298,9 +415,14 @@ impl WeightStore {
         }
     }
 
-    /// Drop every entry (counters keep their lifetime totals).
+    /// Drop every entry (counters keep their lifetime totals).  Every
+    /// outstanding [`Lease`] is invalidated by bumping its slot's epoch
+    /// before the slot is dropped.
     pub fn clear(&self) {
         let mut g = self.lock();
+        for slot in g.entries.values() {
+            slot.epoch.fetch_add(1, Ordering::Release);
+        }
         g.entries.clear();
         g.bytes = 0;
         g.packed_bytes = 0;
@@ -314,10 +436,14 @@ pub fn parse_byte_size(s: &str) -> Result<usize> {
     if t.is_empty() {
         bail!("empty byte size");
     }
-    let (num, mult) = match t.chars().next_back().unwrap().to_ascii_lowercase() {
-        'k' => (&t[..t.len() - 1], 1usize << 10),
-        'm' => (&t[..t.len() - 1], 1usize << 20),
-        'g' => (&t[..t.len() - 1], 1usize << 30),
+    // Split off the final CHARACTER, not the final byte: a multi-byte
+    // final char (e.g. "8µ") must fall through to the plain-number
+    // parse and come back as a typed Err — never a mid-UTF-8 slice.
+    let last = t.chars().next_back().expect("non-empty after trim");
+    let (num, mult) = match last.to_ascii_lowercase() {
+        'k' => (&t[..t.len() - last.len_utf8()], 1usize << 10),
+        'm' => (&t[..t.len() - last.len_utf8()], 1usize << 20),
+        'g' => (&t[..t.len() - last.len_utf8()], 1usize << 30),
         _ => (t, 1usize),
     };
     let n: usize = num
@@ -436,6 +562,55 @@ mod tests {
         assert_eq!(store.stats().misses, 2);
     }
 
+    /// The lock-free warm path in isolation: a current lease validates
+    /// with zero mutex acquisitions and still counts hits; `clear()`
+    /// invalidates it and the locked fallback rebuilds bit-identically.
+    #[test]
+    fn lease_warm_path_is_lockfree_until_invalidated() {
+        let store = WeightStore::unbounded();
+        let fmt = Format::fixed(4, 4);
+        let w: Vec<f32> = (0..32).map(|i| i as f32 * 0.5 - 8.0).collect();
+        let lease = store.prepare_lease(&key("c1", fmt), &w).expect("unbounded store admits");
+
+        let locks = store.lock_acquisitions();
+        for _ in 0..5 {
+            let e = store.hit_if_current(&lease).expect("current lease validates");
+            assert!(Arc::ptr_eq(&e, lease.entry()), "validation serves the leased entry");
+        }
+        assert_eq!(store.lock_acquisitions(), locks, "warm validation takes no mutex");
+        assert_eq!(store.stats().hits, 5, "lock-free validations still count as hits");
+
+        // clear() bumps the epoch: the lease goes stale and the caller
+        // falls back to the locked path, which rebuilds bit-identically
+        store.clear();
+        assert!(store.hit_if_current(&lease).is_none(), "cleared slot invalidates the lease");
+        let fresh = store.prepare_lease(&key("c1", fmt), &w).expect("re-admitted");
+        assert_eq!(fresh.entry().quantized(), lease.entry().quantized());
+        assert_eq!(store.stats().misses, 2, "the stale fallback is a real (locked) miss");
+    }
+
+    /// Eviction invalidates outstanding leases, and a key that re-enters
+    /// the store gets a FRESH epoch cell — an old lease can never
+    /// revalidate against the new residency.
+    #[test]
+    fn eviction_invalidates_leases_and_reinsert_gets_a_fresh_epoch() {
+        let fmt = Format::fixed(8, 8);
+        let w: Vec<f32> = (0..32).map(|i| i as f32 * 0.25).collect();
+        let one = StoreEntry::bytes_for(w.len(), &fmt);
+        let store = WeightStore::with_budget(2 * one);
+
+        let la = store.prepare_lease(&key("a", fmt), &w).unwrap();
+        store.prepare_lease(&key("b", fmt), &w).unwrap();
+        store.prepare_lease(&key("b", fmt), &w).unwrap(); // touch b: a is the LRU victim
+        store.prepare_lease(&key("c", fmt), &w).unwrap(); // evicts a
+        assert_eq!(store.stats().evictions, 1);
+        assert!(store.hit_if_current(&la).is_none(), "evicted slot invalidates the lease");
+
+        let la2 = store.prepare_lease(&key("a", fmt), &w).unwrap();
+        assert!(store.hit_if_current(&la).is_none(), "old lease stays stale after re-insert");
+        assert!(store.hit_if_current(&la2).is_some(), "the new residency's lease is current");
+    }
+
     #[test]
     fn parse_byte_size_grammar() {
         assert_eq!(parse_byte_size("65536").unwrap(), 65536);
@@ -445,6 +620,11 @@ mod tests {
         assert_eq!(parse_byte_size(" 16 m ").unwrap(), 16 << 20);
         assert_eq!(parse_byte_size("0").unwrap(), 0);
         for bad in ["", "m", "12q", "-4", "1.5m", "99999999999999999999"] {
+            assert!(parse_byte_size(bad).is_err(), "accepted {bad:?}");
+        }
+        // multi-byte final characters must come back as a typed Err,
+        // never a mid-UTF-8 slice panic (ISSUE 8 satellite)
+        for bad in ["8µ", "µ", "16µ", "…", "8µb", "8\u{03bc}"] {
             assert!(parse_byte_size(bad).is_err(), "accepted {bad:?}");
         }
     }

@@ -11,12 +11,12 @@
 //!   re-staging, never to an error.
 
 use std::cell::Cell;
-use std::sync::Arc;
+use std::sync::{Arc, Barrier};
 use std::time::Duration;
 
 use precis::formats::{Format, Plan, PrecisionSpec};
 use precis::serving::{Backend, Gateway, NativeBackend, Session};
-use precis::store::{StoreEntry, WeightStore};
+use precis::store::{StoreEntry, StoreKey, WeightStore};
 use precis::testing::fixtures::tiny_conv_network;
 use precis::testing::prop::{arb_format, run_prop};
 
@@ -307,6 +307,144 @@ fn gateway_surfaces_the_packed_exec_lane() {
     assert!(table.contains("packed"), "{table}");
     assert!(table.contains("staged"), "{table}");
     gw.shutdown();
+}
+
+/// ISSUE 8 acceptance: once every session is warm, concurrent forwards
+/// acquire the store mutex ZERO times — the epoch-validated lease path
+/// serves every staged layer with one atomic load per layer.  Proved by
+/// the data-path lock-acquisition counter staying flat across a
+/// multi-session warm phase, with every logit bit-identical to the
+/// uncached reference.  `clear()` then invalidates the outstanding
+/// leases and the next forward degrades to the locked re-staging path,
+/// still bit-identically.
+#[test]
+fn warm_forwards_are_lockfree_across_concurrent_sessions() {
+    let net = tiny_conv_network(4);
+    let x = net.eval_x.slice_rows(0, 4);
+    let spec = PrecisionSpec::parse("plan:c1=fixed:l8r8,fc=float:m7e6").unwrap();
+    let want = NativeBackend::with_store(net.clone(), Arc::new(WeightStore::with_budget(0)))
+        .run_spec(&x, &spec)
+        .unwrap();
+
+    const SESSIONS: usize = 4;
+    const WARM_FORWARDS: usize = 8;
+    let store = Arc::new(WeightStore::unbounded());
+    // two rendezvous points bracket the snapshot: every session is warm
+    // (lease cached per layer) BEFORE the counter is read, and no warm
+    // forward starts until AFTER it is read
+    let warmed = Barrier::new(SESSIONS + 1);
+    let measured = Barrier::new(SESSIONS + 1);
+    let locks_when_warm = std::thread::scope(|s| {
+        for t in 0..SESSIONS {
+            let (net, store) = (net.clone(), store.clone());
+            let (x, want, spec) = (&x, &want, &spec);
+            let (warmed, measured) = (&warmed, &measured);
+            s.spawn(move || {
+                let mut backend = NativeBackend::with_store(net, store);
+                let cold = backend.run_spec(x, spec).unwrap();
+                assert_bits_eq(cold.data(), want.data(), &format!("session {t} cold"));
+                warmed.wait();
+                measured.wait();
+                for round in 0..WARM_FORWARDS {
+                    let got = backend.run_spec(x, spec).unwrap();
+                    assert_bits_eq(got.data(), want.data(), &format!("session {t} warm {round}"));
+                }
+            });
+        }
+        warmed.wait();
+        let snapshot = store.lock_acquisitions();
+        measured.wait();
+        snapshot
+    });
+    assert_eq!(
+        store.lock_acquisitions(),
+        locks_when_warm,
+        "warm forwards must acquire the store mutex zero times"
+    );
+    let s = store.stats();
+    assert_eq!(s.misses, 2, "each layer staged exactly once across all sessions: {s:?}");
+    assert_eq!(s.entries, 2, "{s:?}");
+    // the warm phase alone contributes sessions * forwards * layers
+    // lock-free hits on top of whatever the cold phase counted
+    assert!(
+        s.hits >= (SESSIONS * WARM_FORWARDS * 2) as u64,
+        "warm traffic is served as hits: {s:?}"
+    );
+
+    // invalidation: clear() bumps every slot epoch, so a session's
+    // cached leases go stale and its next forward re-stages through the
+    // locked path — bit-identical, and the counters show the rebuild
+    let mut survivor = NativeBackend::with_store(net.clone(), store.clone());
+    let warm = survivor.run_spec(&x, &spec).unwrap();
+    assert_bits_eq(warm.data(), want.data(), "survivor warm");
+    let before = store.stats();
+    store.clear();
+    let rebuilt = survivor.run_spec(&x, &spec).unwrap();
+    assert_bits_eq(rebuilt.data(), want.data(), "rebuilt after clear");
+    let after = store.stats();
+    assert_eq!(
+        after.misses,
+        before.misses + 2,
+        "stale leases fall back to the locked prepare, which re-stages"
+    );
+}
+
+/// ISSUE 8 satellite: many threads calling `prepare` on the SAME key
+/// concurrently keep the counters balanced — exactly one insert counts
+/// as the miss, every other prepare is a hit (including the lost-race
+/// adopt, which additionally ticks `races` instead of double-counting a
+/// miss), and every issued lease validates lock-free against the one
+/// shared entry.
+#[test]
+fn concurrent_same_key_prepare_balances_counters_and_leases_stay_lockfree() {
+    let store = Arc::new(WeightStore::unbounded());
+    let key = StoreKey::new("contract", "fc", Format::fixed(6, 6));
+    let weights: Vec<f32> = (0..96).map(|i| (i as f32 - 48.0) / 16.0).collect();
+
+    const THREADS: usize = 8;
+    const PREPARES: usize = 16;
+    let start = Barrier::new(THREADS);
+    let leases: Vec<_> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..THREADS)
+            .map(|_| {
+                let store = store.clone();
+                let (key, weights, start) = (&key, &weights, &start);
+                s.spawn(move || {
+                    start.wait();
+                    let mut last = None;
+                    for _ in 0..PREPARES {
+                        last = store.prepare_lease(key, weights);
+                    }
+                    last.expect("unbounded store admits the entry")
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+
+    let s = store.stats();
+    assert_eq!(s.entries, 1, "{s:?}");
+    assert_eq!(s.misses, 1, "one insert wins; duplicates adopt, they do not re-miss: {s:?}");
+    assert_eq!(s.rejected, 0, "{s:?}");
+    assert_eq!(
+        s.hits + s.misses,
+        (THREADS * PREPARES) as u64,
+        "every prepare is exactly one hit or the single miss: {s:?}"
+    );
+    assert!(
+        s.races <= (THREADS - 1) as u64,
+        "only builds started before the winning insert can race: {s:?}"
+    );
+
+    // every surviving lease points at the one shared entry and
+    // validates without touching the mutex
+    let locks = store.lock_acquisitions();
+    let canonical = store.hit_if_current(&leases[0]).expect("entry is resident");
+    for (t, lease) in leases.iter().enumerate() {
+        let entry = store.hit_if_current(lease).expect("entry is resident");
+        assert!(Arc::ptr_eq(&entry, &canonical), "thread {t} adopted a different entry");
+    }
+    assert_eq!(store.lock_acquisitions(), locks, "lease validation is lock-free");
 }
 
 /// Property (ISSUE 5 satellite): a forward through a budget-constrained
