@@ -17,10 +17,13 @@ runners are noisy).
 Section drift is tolerated by name, not by schema: benchmarks present
 on only one side are warnings/notes (e.g. the PR-5 weight-store
 `forward_cached/*` / `pack/*` sections, the PR-6 `forward_packed/*`
-lanes, and the PR-8 lock-free/SIMD sections behind the
+lanes, the PR-8 lock-free/SIMD sections behind the
 `warm_lockfree_over_locked`, `gemm_simd_over_scalar/<fmt>`, and
-`packed_int_simd_over_scalar/<lane>` ratios are all absent from the
-PR-4 baseline — that must not fail the lane).  The one structural condition
+`packed_int_simd_over_scalar/<lane>` ratios, and the PR-9
+split-precision section — `forward_split/<w>+<a>` /
+`forward_act_uniform/*` results with the
+`split_over_activation_uniform/<pair>` ratios — are all absent from
+the PR-4 baseline; that must not fail the lane).  The one structural condition
 on the PAIR of reports is a non-empty overlap: two reports sharing NO
 benchmark names cannot be meaningfully compared and exit 2.
 

@@ -42,6 +42,7 @@ from python.compile.kernels.qformat import (  # noqa: E402
     FloatFormat,
     fixed_params,
     float_params,
+    format_params,
     quantize,
 )
 
@@ -69,6 +70,31 @@ FIXED_FORMATS = [
     FixedFormat(12, 2),
     FixedFormat(1, 3),
 ]
+
+# Split-precision (w, a) pairs (ISSUE 9): a weight staged on the
+# weight-half grid entering an activation-half MAC chain composes the
+# two quantizers, q = q_a(q_w(x)).  Pair cases are APPENDED under
+# separate JSON keys with a SECONDARY seeded rng so the single-format
+# `cases` above stay byte-identical across regeneration.
+PAIR_FORMATS = [
+    (FloatFormat(4, 5), FixedFormat(4, 8)),   # the plan-syntax example pair
+    (FixedFormat(8, 8), FloatFormat(4, 5)),   # mixed kinds, other direction
+    (FloatFormat(7, 6), FixedFormat(4, 4)),   # headline float into fixed
+    (FixedFormat(2, 12), FloatFormat(2, 8)),
+    (FloatFormat(23, 8), FixedFormat(0, 2)),  # exact weights, saturating acts
+    (FloatFormat(10, 3), FloatFormat(1, 2)),  # float/float split
+    (FixedFormat(12, 2), FixedFormat(1, 3)),  # fixed/fixed split
+]
+
+
+def _kind(fmt) -> str:
+    return "float" if isinstance(fmt, FloatFormat) else "fixed"
+
+
+def _name(fmt) -> str:
+    if isinstance(fmt, FloatFormat):
+        return f"float:m{fmt.mantissa}e{fmt.exponent}"
+    return f"fixed:l{fmt.int_bits}r{fmt.frac_bits}"
 
 
 def f32(x) -> np.float32:
@@ -144,17 +170,48 @@ def main() -> None:
             y = np.asarray(quantize(x, params, "fixed"), dtype=np.float32)
             cases.append({"fmt": name, "x": f"{bits(x):08x}", "q": f"{bits(y):08x}"})
 
+    # split-precision pairs: q = q_a(q_w(x)), with the intermediate
+    # weight-grid value recorded so both hops are pinned independently.
+    # A fresh rng keeps the single-format cases above byte-identical.
+    prng = np.random.default_rng(20181)
+    pair_cases = []
+    for w, a in PAIR_FORMATS:
+        name = f"w:{_name(w)}+a:{_name(a)}"
+        wp, ap = format_params(w), format_params(a)
+        ins = (
+            float_inputs(w, prng)
+            if isinstance(w, FloatFormat)
+            else fixed_inputs(w, prng)
+        )
+        for x in ins:
+            qw = np.asarray(quantize(x, wp, _kind(w)), dtype=np.float32)
+            q = np.asarray(quantize(qw, ap, _kind(a)), dtype=np.float32)
+            pair_cases.append(
+                {
+                    "fmt": name,
+                    "x": f"{bits(x):08x}",
+                    "qw": f"{bits(qw):08x}",
+                    "q": f"{bits(q):08x}",
+                }
+            )
+
     out = {
         "_generator": "python/gen_golden_vectors.py (normative: qformat.py)",
         "_seed": 2018,
         "formats": sorted({c["fmt"] for c in cases}),
         "cases": cases,
+        "pair_formats": sorted({c["fmt"] for c in pair_cases}),
+        "pair_cases": pair_cases,
     }
     os.makedirs(os.path.dirname(OUT_PATH), exist_ok=True)
     with open(OUT_PATH, "w") as fh:
         json.dump(out, fh, indent=1)
         fh.write("\n")
-    print(f"wrote {len(cases)} cases for {len(out['formats'])} formats -> {OUT_PATH}")
+    print(
+        f"wrote {len(cases)} cases for {len(out['formats'])} formats "
+        f"+ {len(pair_cases)} pair cases for {len(out['pair_formats'])} pairs "
+        f"-> {OUT_PATH}"
+    )
 
 
 if __name__ == "__main__":

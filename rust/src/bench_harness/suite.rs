@@ -244,6 +244,39 @@ fn run_suite(
         );
     }
 
+    // ISSUE 9: split weight/activation precision.  A warm split-pair
+    // forward runs the SAME staged chain as its activation half run
+    // uniformly (the weight half only changes what was staged, which is
+    // warm here), so the ratio's contract is ~1.0x — drift is a
+    // pair-resolution regression.  Result names follow
+    // `forward_split/<w>+<a>` so the trajectory keys on the pair.
+    section("split precision: (w, a) pair forward vs the activation half alone");
+    for (pair, act) in [
+        ("w:fixed:l8r8+a:float:m7e6", "float:m7e6"),
+        ("w:float:m4e5+a:fixed:l4r8", "fixed:l4r8"),
+    ] {
+        let split_spec =
+            PrecisionSpec::parse(&format!("plan:*={pair}")).expect("split pair spec parses");
+        let act_spec = PrecisionSpec::parse(act).expect("activation half parses");
+        let mut split_backend =
+            NativeBackend::with_store(net.clone(), Arc::new(WeightStore::unbounded()));
+        let mut act_backend =
+            NativeBackend::with_store(net.clone(), Arc::new(WeightStore::unbounded()));
+        split_backend.run_spec(&x, &split_spec).expect("split warm-up forward");
+        act_backend.run_spec(&x, &act_spec).expect("uniform warm-up forward");
+        let s = bench.run(&format!("forward_split/tiny-conv/{pair}/batch{fwd_batch}"), || {
+            split_backend.run_spec(&x, &split_spec).expect("split forward").data()[0]
+        });
+        let u = bench.run(&format!("forward_act_uniform/tiny-conv/{act}/batch{fwd_batch}"), || {
+            act_backend.run_spec(&x, &act_spec).expect("uniform forward").data()[0]
+        });
+        report.ratio(&format!("split_over_activation_uniform/{pair}"), ratio(&s, &u));
+        println!(
+            "    -> split/uniform ratio {:.2}x (contract: ~1.0x; pair {pair})",
+            ratio(&s, &u)
+        );
+    }
+
     // ISSUE 8 tentpole (a): the lock-free warm path.  One resident
     // entry; the locked side re-runs `prepare` per read (mutex + map
     // lookup — the pre-PR-8 per-layer warm cost), the lock-free side
@@ -387,6 +420,13 @@ mod tests {
             let n = report.ratios.keys().filter(|k| k.starts_with(fam)).count();
             assert!(n >= 4, "expected >=4 {fam} ratios, got {n}");
         }
+        // the ISSUE 9 section: split-pair forwards vs the activation
+        // half (warn-only missing-section in older baselines)
+        assert_eq!(
+            report.ratios.keys().filter(|k| k.starts_with("split_over_activation_uniform/")).count(),
+            2,
+            "one split-pair ratio per benchmarked pair"
+        );
         // the ISSUE 8 sections: lock-free warm reads + the two SIMD
         // ratio families (also warn-only in older baselines)
         assert!(
@@ -411,6 +451,8 @@ mod tests {
             "unpack/",
             "forward_staged/",
             "forward_packed/",
+            "forward_split/",
+            "forward_act_uniform/",
             "warm_locked_prepare/",
             "warm_lockfree_hit/",
             "gemm_simd/",

@@ -13,13 +13,15 @@
 //! the AOT HLO artifacts.
 //!
 //! The [`plan`] submodule generalizes the single-format setting to
-//! per-layer mixed precision: a [`Plan`] assigns a format per named
-//! layer, and [`PrecisionSpec`] (uniform format | plan) is what every
-//! execution driver accepts (DESIGN.md §Mixed precision).
+//! per-layer mixed precision: a [`Plan`] assigns a [`FormatPair`]
+//! (weight format + activation format; single-format rules are sugar
+//! for `w == a`) per named layer, and [`PrecisionSpec`] (uniform
+//! format | plan) is what every execution driver accepts (DESIGN.md
+//! §Mixed precision).
 
 pub mod plan;
 
-pub use plan::{Plan, PrecisionSpec, ResolvedPlan};
+pub use plan::{FormatPair, Plan, PrecisionSpec, ResolvedPlan};
 
 use std::fmt;
 

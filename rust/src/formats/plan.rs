@@ -14,6 +14,27 @@
 //! wildcard would be unreachable and is rejected at parse time, as are
 //! duplicate patterns.  `Plan::parse` ⇄ `Display` round-trip exactly.
 //!
+//! # The second axis: weight/activation format pairs
+//!
+//! The ARM inference paper (float weights, fixed activations) shows the
+//! best operating points pair *different* representations per operand,
+//! so a rule's right-hand side is a [`FormatPair`] — a weight format
+//! and an activation format:
+//!
+//! ```text
+//! plan:conv1=w:float:m4e5+a:fixed:l4r8,*=float:m7e6
+//! ```
+//!
+//! A single-format rule is **sugar for `w == a`**: every pre-existing
+//! spec string parses, displays and resolves byte-identically, and a
+//! uniform pair executes the identical code path a single format does.
+//! A split pair stages weights through the `w:` half and runs the MAC
+//! chain (input staging, products, accumulation, bias, pooling) under
+//! the `a:` half (DESIGN.md §Mixed precision).  Both half orders parse
+//! (`w:…+a:…` and `a:…+w:…`); the canonical [`FormatPair::id`] spelling
+//! is `w:` first, collapsing to the bare format id when the halves are
+//! equal.
+//!
 //! [`PrecisionSpec`] is the execution-facing sum of both worlds — a
 //! single [`Format`] (the paper's setting, and the bit-exactness
 //! anchor: a uniform plan executes the identical per-layer quantizer
@@ -36,12 +57,124 @@ use anyhow::{anyhow, bail, Result};
 use crate::formats::Format;
 use crate::nn::Network;
 
-/// One `pattern=format` rule: `pattern` is an exact layer name or the
+/// A per-layer `(weight format, activation format)` assignment — the
+/// second precision axis (module docs).  `w == a` is the paper's
+/// single-format setting and spells/parses as the bare format id;
+/// split pairs spell `w:<fmt>+a:<fmt>`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct FormatPair {
+    /// The format weights are staged (and stored/packed) under.
+    pub w: Format,
+    /// The format the MAC chain and activations run under.
+    pub a: Format,
+}
+
+impl FormatPair {
+    /// The `w == a` pair — the single-format sugar's meaning.
+    pub const fn uniform(fmt: Format) -> FormatPair {
+        FormatPair { w: fmt, a: fmt }
+    }
+
+    /// An explicit weight/activation split.
+    pub const fn split(w: Format, a: Format) -> FormatPair {
+        FormatPair { w, a }
+    }
+
+    /// `true` when the two halves differ (a genuinely mixed pair).
+    pub fn is_split(&self) -> bool {
+        self.w != self.a
+    }
+
+    /// `Some(fmt)` when both halves are the same format — the
+    /// single-format view uniform pairs collapse to.
+    pub fn uniform_format(&self) -> Option<Format> {
+        (self.w == self.a).then_some(self.w)
+    }
+
+    /// Stable identifier, also the parse form: the bare format id when
+    /// `w == a` (so single-format spellings survive byte-identically),
+    /// else `w:<fmt>+a:<fmt>`.
+    pub fn id(&self) -> String {
+        if self.w == self.a {
+            self.w.id()
+        } else {
+            format!("w:{}+a:{}", self.w.id(), self.a.id())
+        }
+    }
+
+    /// Parse a bare format id (sugar for `w == a`) or a
+    /// `w:<fmt>+a:<fmt>` pair (either half order).  A lone half —
+    /// `w:float:m4e5` with no `+`, or a `+` with a missing/duplicate
+    /// half — is a dedicated `Err`, never a panic.
+    pub fn parse(s: &str) -> Result<FormatPair> {
+        if !s.contains('+') && !s.starts_with("w:") && !s.starts_with("a:") {
+            return Ok(FormatPair::uniform(Format::parse(s)?));
+        }
+        if !s.contains('+') {
+            bail!(
+                "format pair {s:?}: lone {:?} half — a split pair needs both halves \
+                 (`w:<format>+a:<format>`)",
+                &s[..2]
+            );
+        }
+        let halves: Vec<&str> = s.split('+').collect();
+        if halves.len() != 2 {
+            bail!(
+                "format pair {s:?}: expected exactly one `+` separating a `w:` and an `a:` half"
+            );
+        }
+        let mut w = None;
+        let mut a = None;
+        for half in halves {
+            if half.is_empty() {
+                bail!("format pair {s:?}: empty half (write `w:<format>+a:<format>`)");
+            }
+            if let Some(rest) = half.strip_prefix("w:") {
+                if w.is_some() {
+                    bail!("format pair {s:?}: duplicate `w:` half");
+                }
+                if rest.is_empty() {
+                    bail!("format pair {s:?}: `w:` half names no format");
+                }
+                w = Some(Format::parse(rest)?);
+            } else if let Some(rest) = half.strip_prefix("a:") {
+                if a.is_some() {
+                    bail!("format pair {s:?}: duplicate `a:` half");
+                }
+                if rest.is_empty() {
+                    bail!("format pair {s:?}: `a:` half names no format");
+                }
+                a = Some(Format::parse(rest)?);
+            } else {
+                bail!("format pair {s:?}: half {half:?} must start with `w:` or `a:`");
+            }
+        }
+        match (w, a) {
+            (Some(w), Some(a)) => Ok(FormatPair { w, a }),
+            (Some(_), None) => bail!("format pair {s:?}: missing the `a:` half"),
+            (None, _) => bail!("format pair {s:?}: missing the `w:` half"),
+        }
+    }
+}
+
+impl fmt::Display for FormatPair {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.id())
+    }
+}
+
+impl From<Format> for FormatPair {
+    fn from(f: Format) -> FormatPair {
+        FormatPair::uniform(f)
+    }
+}
+
+/// One `pattern=pair` rule: `pattern` is an exact layer name or the
 /// wildcard `*`.
 #[derive(Clone, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
 struct PlanRule {
     pattern: String,
-    fmt: Format,
+    fmt: FormatPair,
 }
 
 /// An ordered per-layer format assignment (see the module docs for the
@@ -57,13 +190,22 @@ impl Plan {
     /// uniform-plan anchor; property-tested in `serving::backend`).
     pub fn uniform(fmt: Format) -> Plan {
         Plan {
-            rules: vec![PlanRule { pattern: "*".to_string(), fmt }],
+            rules: vec![PlanRule { pattern: "*".to_string(), fmt: FormatPair::uniform(fmt) }],
         }
     }
 
-    /// A plan with one explicit rule per (layer, format) pair, in
-    /// order.  Errs on duplicate layer names.
+    /// A plan with one explicit single-format rule per (layer, format)
+    /// pair, in order (`w == a` sugar).  Errs on duplicate layer names.
     pub fn explicit(pairs: Vec<(String, Format)>) -> Result<Plan> {
+        Plan::explicit_pairs(
+            pairs.into_iter().map(|(n, f)| (n, FormatPair::uniform(f))).collect(),
+        )
+    }
+
+    /// A plan with one explicit rule per (layer, [`FormatPair`]), in
+    /// order — the 2-axis generalization [`crate::search`] builds its
+    /// candidates through.  Errs on duplicate layer names.
+    pub fn explicit_pairs(pairs: Vec<(String, FormatPair)>) -> Result<Plan> {
         let rules = pairs
             .into_iter()
             .map(|(pattern, fmt)| PlanRule { pattern, fmt })
@@ -79,7 +221,7 @@ impl Plan {
             if r.pattern.is_empty() {
                 bail!("plan rule {i}: empty layer pattern");
             }
-            if r.pattern != "*" && r.pattern.contains(['*', '=', ',', '@', ':']) {
+            if r.pattern != "*" && r.pattern.contains(['*', '=', ',', '@', ':', '+']) {
                 bail!("plan rule {i}: invalid layer pattern {:?}", r.pattern);
             }
             if rules[..i].iter().any(|p| p.pattern == r.pattern) {
@@ -92,22 +234,35 @@ impl Plan {
         Ok(Plan { rules })
     }
 
-    /// Parse the `plan:layer=format[,layer=format...]` spelling.  Every
+    /// Parse the `plan:layer=format[,layer=format...]` spelling, where
+    /// each format is a bare id or a `w:<fmt>+a:<fmt>` pair.  Every
     /// format goes through the range-checked [`Format::parse`], so an
     /// out-of-range format (e.g. `fixed:l100r100`) is an `Err` here
-    /// too, never a constructor panic.
+    /// too, never a constructor panic.  An empty body, an empty rule
+    /// between commas, and a trailing comma each get a dedicated error
+    /// naming the position.
     pub fn parse(s: &str) -> Result<Plan> {
         let body = s
             .strip_prefix("plan:")
             .ok_or_else(|| anyhow!("plan {s:?}: expected `plan:layer=format,...`"))?;
+        if body.is_empty() {
+            bail!("plan {s:?}: empty plan body (write `plan:layer=format,...`)");
+        }
+        let parts: Vec<&str> = body.split(',').collect();
         let mut rules = Vec::new();
-        for part in body.split(',') {
+        for (i, part) in parts.iter().enumerate() {
+            if part.is_empty() {
+                if i + 1 == parts.len() {
+                    bail!("plan {s:?}: trailing comma after rule {}", i.saturating_sub(1));
+                }
+                bail!("plan {s:?}: empty rule at position {i} (consecutive commas)");
+            }
             let (pattern, fmt) = part
                 .split_once('=')
                 .ok_or_else(|| anyhow!("plan {s:?}: rule {part:?} is not `layer=format`"))?;
             rules.push(PlanRule {
                 pattern: pattern.to_string(),
-                fmt: Format::parse(fmt)?,
+                fmt: FormatPair::parse(fmt)?,
             });
         }
         Plan::validated(rules)
@@ -119,8 +274,9 @@ impl Plan {
         self.to_string()
     }
 
-    /// The format the first matching rule assigns to `layer`, if any.
-    pub fn format_for(&self, layer: &str) -> Option<Format> {
+    /// The format pair the first matching rule assigns to `layer`, if
+    /// any.
+    pub fn format_for(&self, layer: &str) -> Option<FormatPair> {
         self.rules
             .iter()
             .find(|r| r.pattern == layer || r.pattern == "*")
@@ -128,10 +284,10 @@ impl Plan {
     }
 
     /// `Some(fmt)` when this plan is the single-wildcard uniform shape
-    /// (the [`Plan::uniform`] constructor's output).
+    /// (the [`Plan::uniform`] constructor's output) with `w == a`.
     pub fn uniform_format(&self) -> Option<Format> {
         match self.rules.as_slice() {
-            [r] if r.pattern == "*" => Some(r.fmt),
+            [r] if r.pattern == "*" => r.fmt.uniform_format(),
             _ => None,
         }
     }
@@ -182,33 +338,36 @@ impl fmt::Display for Plan {
     }
 }
 
-/// A plan resolved against one network: the format of every named
+/// A plan resolved against one network: the format pair of every named
 /// quantized layer, in execution order.  This is what the engine's
 /// per-layer quantizer table and [`crate::hw::plan_speedup`] consume.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct ResolvedPlan {
-    /// `(layer name, format)` per quantized layer, in network order.
-    pub assignments: Vec<(String, Format)>,
+    /// `(layer name, format pair)` per quantized layer, in network
+    /// order.
+    pub assignments: Vec<(String, FormatPair)>,
 }
 
 impl ResolvedPlan {
-    /// The assigned format of `layer`, if it is a quantized layer.
-    pub fn format_for(&self, layer: &str) -> Option<Format> {
+    /// The assigned format pair of `layer`, if it is a quantized layer.
+    pub fn format_for(&self, layer: &str) -> Option<FormatPair> {
         self.assignments
             .iter()
             .find(|(n, _)| n == layer)
             .map(|(_, f)| *f)
     }
 
-    /// `Some(fmt)` when every layer resolved to the same format — the
-    /// gate for single-format backends (the AOT/PJRT executables take
-    /// one runtime `fmt` vector).
+    /// `Some(fmt)` when every layer resolved to the same `w == a`
+    /// format — the gate for single-format backends (the AOT/PJRT
+    /// executables take one runtime `fmt` vector).  A split pair
+    /// anywhere disqualifies the plan.
     pub fn uniform(&self) -> Option<Format> {
         let (_, first) = self.assignments.first()?;
+        let fmt = first.uniform_format()?;
         self.assignments
             .iter()
-            .all(|(_, f)| f == first)
-            .then_some(*first)
+            .all(|(_, f)| *f == *first)
+            .then_some(fmt)
     }
 }
 
@@ -228,7 +387,9 @@ impl fmt::Display for ResolvedPlan {
 /// (the paper's §2.2 setting) or a per-layer [`Plan`].  The parse
 /// spelling is either a bare format id (`float:m7e6`) or the
 /// `plan:...` syntax, so existing `net@format` session keys and CLI
-/// flags keep their meaning unchanged.
+/// flags keep their meaning unchanged.  Weight/activation split pairs
+/// are expressed through plan rules (`plan:*=w:<fmt>+a:<fmt>` for a
+/// network-wide split).
 #[derive(Clone, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub enum PrecisionSpec {
     /// One format for the whole network.
@@ -266,7 +427,7 @@ impl PrecisionSpec {
                 assignments: net
                     .quantized_layer_names()
                     .into_iter()
-                    .map(|n| (n, *f))
+                    .map(|n| (n, FormatPair::uniform(*f)))
                     .collect(),
             }),
             PrecisionSpec::PerLayer(p) => p.resolve(net),
@@ -276,7 +437,7 @@ impl PrecisionSpec {
     /// The single format this spec runs under on `net`, for backends
     /// that take one runtime format vector (PJRT).  Uniform specs pass
     /// through unresolved; a plan qualifies iff its resolved assignment
-    /// is uniform.
+    /// is uniform (every layer the same `w == a` format).
     pub fn resolved_uniform(&self, net: &Network) -> Result<Format> {
         match self {
             PrecisionSpec::Uniform(f) => Ok(*f),
@@ -291,7 +452,8 @@ impl PrecisionSpec {
     }
 
     /// `Some(fmt)` for specs that are syntactically uniform (a bare
-    /// format, or the single-wildcard plan) without needing a network.
+    /// format, or the single-wildcard `w == a` plan) without needing a
+    /// network.
     pub fn uniform_format(&self) -> Option<Format> {
         match self {
             PrecisionSpec::Uniform(f) => Some(*f),
@@ -345,12 +507,16 @@ mod tests {
     use crate::testing::fixtures::{tiny_conv_network, tiny_network};
     use crate::testing::prop::{run_prop, Gen};
 
+    fn upair(f: Format) -> FormatPair {
+        FormatPair::uniform(f)
+    }
+
     #[test]
     fn uniform_plan_shape_and_id() {
         let p = Plan::uniform(Format::float(7, 6));
         assert_eq!(p.id(), "plan:*=float:m7e6");
         assert_eq!(p.uniform_format(), Some(Format::float(7, 6)));
-        assert_eq!(p.format_for("anything"), Some(Format::float(7, 6)));
+        assert_eq!(p.format_for("anything"), Some(upair(Format::float(7, 6))));
         assert_eq!(Plan::parse(&p.id()).unwrap(), p);
     }
 
@@ -360,11 +526,83 @@ mod tests {
         let p = Plan::parse(s).unwrap();
         assert_eq!(p.to_string(), s);
         assert_eq!(Plan::parse(&p.to_string()).unwrap(), p);
-        assert_eq!(p.format_for("conv1"), Some(Format::float(4, 5)));
-        assert_eq!(p.format_for("conv2"), Some(Format::fixed(2, 12)));
+        assert_eq!(p.format_for("conv1"), Some(upair(Format::float(4, 5))));
+        assert_eq!(p.format_for("conv2"), Some(upair(Format::fixed(2, 12))));
         // first-match-wins: unknown names fall to the wildcard
-        assert_eq!(p.format_for("fc9"), Some(Format::float(7, 6)));
+        assert_eq!(p.format_for("fc9"), Some(upair(Format::float(7, 6))));
         assert_eq!(p.uniform_format(), None);
+    }
+
+    /// The tentpole grammar: `w:<fmt>+a:<fmt>` rules parse in either
+    /// half order, display canonically (`w:` first), and collapse to
+    /// the single-format spelling when the halves are equal.
+    #[test]
+    fn parse_display_roundtrip_split_pairs() {
+        let s = "plan:conv1=w:float:m4e5+a:fixed:l4r8,*=float:m7e6";
+        let p = Plan::parse(s).unwrap();
+        assert_eq!(p.to_string(), s);
+        assert_eq!(Plan::parse(&p.to_string()).unwrap(), p);
+        assert_eq!(
+            p.format_for("conv1"),
+            Some(FormatPair::split(Format::float(4, 5), Format::fixed(4, 8)))
+        );
+        let pair = p.format_for("conv1").unwrap();
+        assert!(pair.is_split());
+        assert_eq!(pair.uniform_format(), None);
+        // the wildcard sugar is a uniform pair
+        assert_eq!(p.format_for("fc"), Some(upair(Format::float(7, 6))));
+
+        // either half order parses; the id is canonical (`w:` first)
+        let swapped = Plan::parse("plan:conv1=a:fixed:l4r8+w:float:m4e5,*=float:m7e6").unwrap();
+        assert_eq!(swapped, p);
+        assert_eq!(swapped.to_string(), s);
+
+        // equal halves collapse to the bare-format spelling
+        let collapsed = Plan::parse("plan:*=w:float:m7e6+a:float:m7e6").unwrap();
+        assert_eq!(collapsed, Plan::uniform(Format::float(7, 6)));
+        assert_eq!(collapsed.to_string(), "plan:*=float:m7e6");
+        assert_eq!(collapsed.uniform_format(), Some(Format::float(7, 6)));
+        // a genuinely split wildcard is NOT a uniform format
+        let split = Plan::parse("plan:*=w:float:m7e6+a:fixed:l4r8").unwrap();
+        assert_eq!(split.uniform_format(), None);
+    }
+
+    #[test]
+    fn format_pair_parse_and_id() {
+        // bare ids stay the w==a sugar, byte-identically
+        let u = FormatPair::parse("float:m7e6").unwrap();
+        assert_eq!(u, upair(Format::float(7, 6)));
+        assert_eq!(u.id(), "float:m7e6");
+        // split pairs round-trip through the canonical id
+        let s = FormatPair::split(Format::fixed(8, 8), Format::float(4, 5));
+        assert_eq!(s.id(), "w:fixed:l8r8+a:float:m4e5");
+        assert_eq!(FormatPair::parse(&s.id()).unwrap(), s);
+        assert_eq!(FormatPair::parse("a:float:m4e5+w:fixed:l8r8").unwrap(), s);
+    }
+
+    /// Satellite: malformed pair halves are dedicated errors, never the
+    /// generic rule error and never a panic.
+    #[test]
+    fn pair_parse_rejects_malformed_halves() {
+        for bad in [
+            "w:float:m4e5",                  // lone half, no '+'
+            "a:fixed:l4r8",                  // lone half, no '+'
+            "w:float:m4e5+",                 // empty second half
+            "+a:fixed:l4r8",                 // empty first half
+            "a:+w:float:m4e5",               // 'a:' half names no format
+            "w:+a:fixed:l4r8",               // 'w:' half names no format
+            "w:float:m4e5+w:float:m7e6",     // duplicate 'w:' halves
+            "a:fixed:l4r8+a:fixed:l2r2",     // duplicate 'a:' halves
+            "w:float:m4e5+fixed:l4r8",       // unprefixed second half
+            "w:float:m4e5+a:fixed:l4r8+a:fixed:l2r2", // three halves
+            "w:float:m99e9+a:fixed:l4r8",    // out-of-range w half
+            "w:float:m4e5+a:fixed:l100r100", // out-of-range a half
+            "+",
+            "w:+a:",
+        ] {
+            assert!(FormatPair::parse(bad).is_err(), "accepted {bad:?}");
+            assert!(Plan::parse(&format!("plan:*={bad}")).is_err(), "plan accepted {bad:?}");
+        }
     }
 
     #[test]
@@ -382,8 +620,28 @@ mod tests {
             "plan:*=float:m7e6,a=fixed:l8r8", // unreachable after wildcard
             "plan:a*b=float:m7e6",          // '*' inside a name
             "plan:a=float:m7e6,",           // trailing empty rule
+            "plan:a+b=float:m7e6",          // '+' inside a name
         ] {
             assert!(Plan::parse(bad).is_err(), "accepted {bad:?}");
+        }
+    }
+
+    /// Satellite: the empty-body / trailing-comma / empty-rule shapes
+    /// get dedicated errors naming the position, not the generic
+    /// ``rule "" is not `layer=format` `` fall-through.
+    #[test]
+    fn parse_empty_and_trailing_rules_get_dedicated_errors() {
+        let err = |s: &str| Plan::parse(s).unwrap_err().to_string();
+        assert!(err("plan:").contains("empty plan body"), "{}", err("plan:"));
+        let trailing = err("plan:a=float:m7e6,");
+        assert!(trailing.contains("trailing comma after rule 0"), "{trailing}");
+        let trailing2 = err("plan:a=float:m7e6,b=fixed:l8r8,");
+        assert!(trailing2.contains("trailing comma after rule 1"), "{trailing2}");
+        let between = err("plan:a=float:m7e6,,b=fixed:l8r8");
+        assert!(between.contains("empty rule at position 1"), "{between}");
+        // none of them fall through to the generic rule error
+        for s in ["plan:", "plan:a=float:m7e6,", "plan:a=float:m7e6,,b=fixed:l8r8"] {
+            assert!(!err(s).contains("is not `layer=format`"), "{}", err(s));
         }
     }
 
@@ -395,6 +653,7 @@ mod tests {
         assert!(Plan::parse("plan:*=fixed:l100r100").is_err());
         assert!(Plan::parse("plan:c1=fixed:l100r100,*=float:m7e6").is_err());
         assert!(PrecisionSpec::parse("plan:*=fixed:l65r0").is_err());
+        assert!(PrecisionSpec::parse("plan:*=w:fixed:l65r0+a:float:m7e6").is_err());
         // the full accepted constructor range still parses
         assert_eq!(
             Plan::parse("plan:*=fixed:l64r64").unwrap().uniform_format(),
@@ -414,6 +673,42 @@ mod tests {
         // a uniform plan stays a plan through parse (faithful round-trip)
         assert_eq!(PrecisionSpec::parse(&s.id()).unwrap(), s);
         assert!(PrecisionSpec::parse("warp:x1y2").is_err());
+        // a bare spec is never a pair — splits live inside plan rules
+        assert!(PrecisionSpec::parse("w:float:m7e6+a:fixed:l8r8").is_err());
+    }
+
+    /// Tentpole acceptance: every pre-existing single-format spec
+    /// string parses, displays, and resolves byte-identically to the
+    /// pre-pair grammar (the `w == a` sugar is invisible end to end).
+    #[test]
+    fn single_format_specs_are_byte_identical_sugar() {
+        let net = tiny_conv_network(4); // quantized layers: c1, fc
+        for s in [
+            "float:m7e6",
+            "fixed:l8r8",
+            "float:m23e8",
+            "plan:*=float:m7e6",
+            "plan:c1=float:m4e5,*=fixed:l8r8",
+            "plan:c1=float:m4e5,fc=fixed:l2r12",
+        ] {
+            let spec = PrecisionSpec::parse(s).unwrap();
+            assert_eq!(spec.id(), s, "display drifted for {s:?}");
+            assert_eq!(spec.to_string(), s);
+            let resolved = spec.resolve(&net).unwrap();
+            for (name, pair) in &resolved.assignments {
+                assert_eq!(
+                    pair.uniform_format().map(|f| f.id()),
+                    Some(pair.id()),
+                    "layer {name} of {s:?} resolved to a split pair"
+                );
+            }
+        }
+        // the pinned pre-pair resolved Display shape survives
+        let r = PrecisionSpec::parse("plan:c1=float:m4e5,*=fixed:l8r8")
+            .unwrap()
+            .resolve(&net)
+            .unwrap();
+        assert_eq!(r.to_string(), "c1=float:m4e5,fc=fixed:l8r8");
     }
 
     #[test]
@@ -426,12 +721,12 @@ mod tests {
         assert_eq!(
             r.assignments,
             vec![
-                ("c1".to_string(), Format::float(4, 5)),
-                ("fc".to_string(), Format::fixed(8, 8)),
+                ("c1".to_string(), upair(Format::float(4, 5))),
+                ("fc".to_string(), upair(Format::fixed(8, 8))),
             ]
         );
         assert_eq!(r.uniform(), None);
-        assert_eq!(r.format_for("fc"), Some(Format::fixed(8, 8)));
+        assert_eq!(r.format_for("fc"), Some(upair(Format::fixed(8, 8))));
         assert_eq!(r.to_string(), "c1=float:m4e5,fc=fixed:l8r8");
 
         // uncovered layer: error (no wildcard)
@@ -450,6 +745,16 @@ mod tests {
         assert_eq!(spec.resolved_uniform(&net).unwrap(), Format::float(7, 6));
         let mixed = PrecisionSpec::parse("plan:c1=float:m4e5,*=fixed:l8r8").unwrap();
         assert!(mixed.resolved_uniform(&net).is_err());
+        // a split pair is not PJRT-expressible even when both layers
+        // carry the identical pair
+        let split = PrecisionSpec::parse("plan:*=w:float:m7e6+a:fixed:l8r8").unwrap();
+        let rs = split.resolve(&net).unwrap();
+        assert_eq!(rs.uniform(), None);
+        assert!(split.resolved_uniform(&net).is_err());
+        assert_eq!(
+            rs.to_string(),
+            "c1=w:float:m7e6+a:fixed:l8r8,fc=w:float:m7e6+a:fixed:l8r8"
+        );
     }
 
     #[test]
@@ -457,7 +762,7 @@ mod tests {
         let net = tiny_network(4); // dense-only fixture
         let spec = PrecisionSpec::Uniform(Format::fixed(4, 4));
         let r = spec.resolve(&net).unwrap();
-        assert_eq!(r.assignments, vec![("fc".to_string(), Format::fixed(4, 4))]);
+        assert_eq!(r.assignments, vec![("fc".to_string(), upair(Format::fixed(4, 4)))]);
         assert_eq!(r.uniform(), Some(Format::fixed(4, 4)));
     }
 
@@ -469,8 +774,17 @@ mod tests {
         }
     }
 
+    fn arb_pair(g: &mut Gen) -> FormatPair {
+        if g.bool() {
+            FormatPair::uniform(arb_format(g))
+        } else {
+            FormatPair::split(arb_format(g), arb_format(g))
+        }
+    }
+
     /// Plan (and PrecisionSpec) Display ⇄ parse round-trips for random
-    /// valid rule lists over the whole constructor-valid format range.
+    /// valid rule lists over the whole constructor-valid format range,
+    /// including split weight/activation pairs.
     #[test]
     fn prop_plan_roundtrip() {
         const NAMES: [&str; 6] = ["conv1", "conv2", "inc1.1x1", "inc1.proj", "fc1", "fc2"];
@@ -480,9 +794,9 @@ mod tests {
             let mut rules = Vec::new();
             for _ in 0..n {
                 let i = g.usize_in(0, pool.len() - 1);
-                rules.push((pool.swap_remove(i).to_string(), arb_format(g)));
+                rules.push((pool.swap_remove(i).to_string(), arb_pair(g)));
             }
-            let mut plan = Plan::explicit(rules).unwrap();
+            let mut plan = Plan::explicit_pairs(rules).unwrap();
             if g.bool() {
                 // append a wildcard default
                 let mut with_star = plan
@@ -490,8 +804,8 @@ mod tests {
                     .iter()
                     .map(|r| (r.pattern.clone(), r.fmt))
                     .collect::<Vec<_>>();
-                with_star.push(("*".to_string(), arb_format(g)));
-                plan = Plan::explicit(with_star).unwrap();
+                with_star.push(("*".to_string(), arb_pair(g)));
+                plan = Plan::explicit_pairs(with_star).unwrap();
             }
             assert_eq!(Plan::parse(&plan.id()).unwrap(), plan);
             let spec = PrecisionSpec::PerLayer(plan.clone());
@@ -500,7 +814,8 @@ mod tests {
     }
 
     /// Format Display is the human form, `id()` the parse form; the
-    /// parse form round-trips for every constructor-valid format.
+    /// parse form round-trips for every constructor-valid format and
+    /// format pair.
     #[test]
     fn prop_format_id_roundtrip() {
         run_prop("format_id_roundtrip", 300, |g| {
@@ -508,23 +823,27 @@ mod tests {
             assert_eq!(Format::parse(&f.id()).unwrap(), f);
             let spec = PrecisionSpec::Uniform(f);
             assert_eq!(PrecisionSpec::parse(&spec.id()).unwrap(), spec);
+            let pair = arb_pair(g);
+            assert_eq!(FormatPair::parse(&pair.id()).unwrap(), pair);
         });
     }
 
     /// Malformed plan strings must return `Err` — never panic — for
-    /// arbitrary mutations of valid plans and for random garbage.
+    /// arbitrary mutations of valid plans and for random garbage,
+    /// including the `w:…+a:…` pair grammar.
     #[test]
     fn prop_malformed_plans_err_not_panic() {
-        const CHARS: [char; 14] =
-            ['p', 'l', 'a', 'n', ':', '=', ',', '*', 'm', 'e', 'r', '1', '@', '.'];
+        const CHARS: [char; 16] =
+            ['p', 'l', 'a', 'n', ':', '=', ',', '*', 'm', 'e', 'r', '1', '@', '.', 'w', '+'];
         run_prop("malformed_plan_err", 300, |g| {
             let len = g.usize_in(0, 40);
             let s: String = (0..len).map(|_| *g.choose(&CHARS)).collect();
             // must return (Ok or Err), not panic
             let _ = Plan::parse(&s);
             let _ = PrecisionSpec::parse(&s);
+            let _ = FormatPair::parse(&s);
             // mutated valid plan: truncate at a random byte boundary
-            let valid = "plan:conv1=float:m4e5,conv2=fixed:l2r12,*=float:m7e6";
+            let valid = "plan:conv1=w:float:m4e5+a:fixed:l4r8,conv2=fixed:l2r12,*=float:m7e6";
             let cut = g.usize_in(0, valid.len());
             let _ = Plan::parse(&valid[..cut]);
         });

@@ -80,53 +80,71 @@ const FLOAT_FIXED_OVERHEAD_AREA: f64 = 48.0; // flags, sign, control
 const SAT_DELAY: f64 = 1.5; // fixed-point saturation mux
 const SAT_AREA_PER_BIT: f64 = 1.0;
 
-fn float_raw(m: u32, e: u32) -> (f64, f64) {
-    let s = (m + 1) as f64; // significand incl. hidden bit
-    let ew = e as f64;
-    // delays along the MAC critical path (Fig 3c): multiply -> align ->
-    // add -> normalize -> round, plus the exponent compare feeding align
-    let delay = mult_delay(s)
-        + shift_delay(s).max(add_delay(ew)) // align vs exponent path overlap
-        + add_delay(2.0 * s + 2.0)
-        + shift_delay(s)
-        + ROUND_DELAY;
-    let area = mult_area(s)
-        + 2.0 * shift_area(s)            // align + normalize shifters
-        + add_area(2.0 * s + 2.0)
-        + 3.0 * add_area(ew)             // exponent add/sub/compare
-        + FLOAT_FIXED_OVERHEAD_AREA;
-    (delay, area)
+/// Multiplier operand width of one format: the significand (m+1, incl.
+/// the hidden bit) for floats, the word width (1+l+r) for fixed point.
+fn mult_width(fmt: &Format) -> f64 {
+    match *fmt {
+        Format::Float { mantissa, .. } => (mantissa + 1) as f64,
+        Format::Fixed { .. } => fmt.total_bits() as f64,
+    }
 }
 
-fn fixed_raw(total_bits: u32) -> (f64, f64) {
-    let n = total_bits as f64;
-    let delay = mult_delay(n) + add_delay(2.0 * n) + SAT_DELAY;
-    let area = mult_area(n) + add_area(2.0 * n) + SAT_AREA_PER_BIT * 2.0 * n;
-    (delay, area)
+/// Raw (un-normalized) delay/area of a MAC whose multiplier takes a
+/// `w`-format weight operand and an `a`-format activation operand, and
+/// whose accumulator path runs in the **activation** format (the split
+/// pair's MAC semantics: the product/accumulate grid is the
+/// activations', the weight format only sizes its multiplier port).
+///
+/// The multiplier is priced at the geometric mean of the two operand
+/// widths — an `s_w × s_a` partial-product array has `s_w · s_a` cells,
+/// i.e. the area of a square `√(s_w·s_a)` multiplier, and the CSA tree
+/// depth tracks the same effective width.  For a uniform pair the
+/// geomean is EXACT (`sqrt(s·s) == s` in IEEE for these integer-valued
+/// widths), so `pair_raw(f, f)` reproduces the pre-pair single-format
+/// model bit-for-bit and every `BENCH_pr4_baseline.json` ratio stays
+/// comparable.
+fn pair_raw(w: &Format, a: &Format) -> (f64, f64) {
+    let mw = (mult_width(w) * mult_width(a)).sqrt();
+    match *a {
+        Format::Float { mantissa, exponent } => {
+            let s = (mantissa + 1) as f64; // significand incl. hidden bit
+            let ew = exponent as f64;
+            // delays along the MAC critical path (Fig 3c): multiply ->
+            // align -> add -> normalize -> round, plus the exponent
+            // compare feeding align
+            let delay = mult_delay(mw)
+                + shift_delay(s).max(add_delay(ew)) // align vs exponent path overlap
+                + add_delay(2.0 * s + 2.0)
+                + shift_delay(s)
+                + ROUND_DELAY;
+            let area = mult_area(mw)
+                + 2.0 * shift_area(s)            // align + normalize shifters
+                + add_area(2.0 * s + 2.0)
+                + 3.0 * add_area(ew)             // exponent add/sub/compare
+                + FLOAT_FIXED_OVERHEAD_AREA;
+            (delay, area)
+        }
+        Format::Fixed { .. } => {
+            let n = a.total_bits() as f64;
+            let delay = mult_delay(mw) + add_delay(2.0 * n) + SAT_DELAY;
+            let area = mult_area(mw) + add_area(2.0 * n) + SAT_AREA_PER_BIT * 2.0 * n;
+            (delay, area)
+        }
+    }
 }
 
 fn baseline() -> (f64, f64) {
-    float_raw(23, 8)
+    pair_raw(&Format::SINGLE, &Format::SINGLE)
 }
 
 /// Relative critical-path delay (1.0 = SP float MAC).
 pub fn delay(fmt: &Format) -> f64 {
-    let (base_d, _) = baseline();
-    let d = match *fmt {
-        Format::Float { mantissa, exponent } => float_raw(mantissa, exponent).0,
-        Format::Fixed { .. } => fixed_raw(fmt.total_bits()).0,
-    };
-    d / base_d
+    delay_pair(fmt, fmt)
 }
 
 /// Relative silicon area (1.0 = SP float MAC).
 pub fn area(fmt: &Format) -> f64 {
-    let (_, base_a) = baseline();
-    let a = match *fmt {
-        Format::Float { mantissa, exponent } => float_raw(mantissa, exponent).1,
-        Format::Fixed { .. } => fixed_raw(fmt.total_bits()).1,
-    };
-    a / base_a
+    area_pair(fmt, fmt)
 }
 
 /// Relative power ≈ switched capacitance ≈ area.
@@ -134,12 +152,39 @@ pub fn power(fmt: &Format) -> f64 {
     area(fmt)
 }
 
+/// Relative critical-path delay of a split weight/activation MAC
+/// (1.0 = SP float MAC; `delay_pair(f, f) == delay(f)` exactly).
+pub fn delay_pair(w: &Format, a: &Format) -> f64 {
+    let (base_d, _) = baseline();
+    pair_raw(w, a).0 / base_d
+}
+
+/// Relative silicon area of a split weight/activation MAC
+/// (`area_pair(f, f) == area(f)` exactly).
+pub fn area_pair(w: &Format, a: &Format) -> f64 {
+    let (_, base_a) = baseline();
+    pair_raw(w, a).1 / base_a
+}
+
+/// Relative power of a split weight/activation MAC (≈ its area).
+pub fn power_pair(w: &Format, a: &Format) -> f64 {
+    area_pair(w, a)
+}
+
 /// All three at once.
 pub fn cost(fmt: &Format) -> MacCost {
+    cost_pair(fmt, fmt)
+}
+
+/// All three for a split weight/activation MAC.  Uniform pairs
+/// reproduce [`cost`] exactly (asserted across the whole design grid in
+/// tests), so single-format numbers are the `w == a` diagonal of this
+/// model.
+pub fn cost_pair(w: &Format, a: &Format) -> MacCost {
     MacCost {
-        delay: delay(fmt),
-        area: area(fmt),
-        power: power(fmt),
+        delay: delay_pair(w, a),
+        area: area_pair(w, a),
+        power: power_pair(w, a),
     }
 }
 
@@ -224,5 +269,59 @@ mod tests {
         let a6 = area(&Format::float(10, 6));
         let a8 = area(&Format::float(10, 8));
         assert!((a8 - a6) / a6 < 0.05);
+    }
+
+    /// The pair model's backward-compatibility anchor: a uniform pair
+    /// reproduces the single-format cost EXACTLY (f64 equality, not a
+    /// tolerance) across the entire design grid, so every pre-pair
+    /// `BENCH_pr4_baseline.json` ratio stays comparable.
+    #[test]
+    fn uniform_pairs_reproduce_single_format_costs_exactly() {
+        for f in crate::formats::design_space(1) {
+            let single = cost(&f);
+            let pair = cost_pair(&f, &f);
+            assert_eq!(single.delay, pair.delay, "delay drifted for {}", f.id());
+            assert_eq!(single.area, pair.area, "area drifted for {}", f.id());
+            assert_eq!(single.power, pair.power, "power drifted for {}", f.id());
+        }
+    }
+
+    /// With the activation half held fixed, narrowing the weight half
+    /// shrinks the multiplier monotonically — the pair axis the search
+    /// descends is well-ordered in the cost model.
+    #[test]
+    fn pair_cost_monotone_in_weight_width() {
+        let a = Format::fixed(4, 4);
+        let mut last_d = 0.0;
+        let mut last_a = 0.0;
+        for m in 1..=23u32 {
+            let w = Format::float(m, 6);
+            let c = cost_pair(&w, &a);
+            assert!(c.delay > last_d, "pair delay not monotone at m={m}");
+            assert!(c.area > last_a, "pair area not monotone at m={m}");
+            last_d = c.delay;
+            last_a = c.area;
+        }
+    }
+
+    /// The ARM-paper operating point — float weights with fixed
+    /// activations — is priced between the two uniform designs: the
+    /// narrow fixed accumulator helps, the wider float multiplier port
+    /// costs, and the result is finite and positive like every pair.
+    #[test]
+    fn split_pair_costs_are_finite_and_bracketed() {
+        let w = Format::float(7, 6); // mult width 8
+        let a = Format::fixed(3, 4); // word width 8
+        let c = cost_pair(&w, &a);
+        assert!(c.delay.is_finite() && c.delay > 0.0);
+        assert!(c.area.is_finite() && c.area > 0.0);
+        // same multiplier widths => the split pair prices exactly like
+        // uniform fixed:l3r4 (the accumulator path is the a-half's)
+        let uni = cost(&a);
+        assert_eq!(c.delay, uni.delay);
+        assert_eq!(c.area, uni.area);
+        // a wider weight port than uniform-fixed costs more
+        let wide = cost_pair(&Format::float(15, 6), &a);
+        assert!(wide.delay > c.delay && wide.area > c.area);
     }
 }

@@ -15,5 +15,8 @@
 pub mod mac;
 pub mod speedup;
 
-pub use mac::{area, delay, power, MacCost};
-pub use speedup::{energy_savings, plan_energy_savings, plan_speedup, speedup, Efficiency};
+pub use mac::{area, cost_pair, delay, power, MacCost};
+pub use speedup::{
+    energy_savings, pair_energy_savings, pair_speedup, plan_energy_savings, plan_speedup, speedup,
+    Efficiency,
+};

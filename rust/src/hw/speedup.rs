@@ -10,7 +10,7 @@
 //! units cannot shrink — calibrated so F(7,6) lands at the paper's
 //! 3.4× energy savings while its speedup is 7.2×.
 
-use crate::formats::{Format, ResolvedPlan};
+use crate::formats::{Format, FormatPair, ResolvedPlan};
 use crate::hw::mac;
 use crate::nn::Network;
 
@@ -41,6 +41,24 @@ pub fn energy_savings(fmt: &Format) -> f64 {
     1.0 / rel_energy
 }
 
+/// Throughput gain of a split weight/activation MAC over the SP-float
+/// baseline — the same quadratic `(1/delay)·(1/area)` combination over
+/// [`mac::cost_pair`].  A uniform pair reproduces [`speedup`] exactly
+/// (the single-format numbers are the `w == a` diagonal).
+pub fn pair_speedup(pair: &FormatPair) -> f64 {
+    let c = mac::cost_pair(&pair.w, &pair.a);
+    (1.0 / c.delay) * (1.0 / c.area)
+}
+
+/// Energy-per-op savings of a split weight/activation MAC over the
+/// SP-float baseline; uniform pairs reproduce [`energy_savings`]
+/// exactly.
+pub fn pair_energy_savings(pair: &FormatPair) -> f64 {
+    let c = mac::cost_pair(&pair.w, &pair.a);
+    let rel_energy = ENERGY_AREA_FRACTION * c.power + (1.0 - ENERGY_AREA_FRACTION);
+    1.0 / rel_energy
+}
+
 /// MAC-weighted throughput gain of a per-layer plan over the SP-float
 /// baseline: layer `i` contributes its per-sample MAC count at its
 /// format's [`speedup`]; the aggregate is total MACs over total
@@ -52,7 +70,7 @@ pub fn energy_savings(fmt: &Format) -> f64 {
 /// has but the plan does not cover) — the same fail-loudly rule as the
 /// engine's quantizer table, never a silently wrong estimate.
 pub fn plan_speedup(net: &Network, plan: &ResolvedPlan) -> f64 {
-    plan_harmonic(net, plan, speedup)
+    plan_harmonic(net, plan, pair_speedup)
 }
 
 /// MAC-weighted energy savings of a per-layer plan over the SP-float
@@ -60,10 +78,10 @@ pub fn plan_speedup(net: &Network, plan: &ResolvedPlan) -> f64 {
 /// [`energy_savings`]).  Panics on a plan/network mismatch, like
 /// [`plan_speedup`].
 pub fn plan_energy_savings(net: &Network, plan: &ResolvedPlan) -> f64 {
-    plan_harmonic(net, plan, energy_savings)
+    plan_harmonic(net, plan, pair_energy_savings)
 }
 
-fn plan_harmonic(net: &Network, plan: &ResolvedPlan, gain: impl Fn(&Format) -> f64) -> f64 {
+fn plan_harmonic(net: &Network, plan: &ResolvedPlan, gain: impl Fn(&FormatPair) -> f64) -> f64 {
     let macs = net.quantized_layer_macs();
     let total: f64 = macs.iter().map(|(_, m)| *m as f64).sum();
     if total == 0.0 {
@@ -75,7 +93,17 @@ fn plan_harmonic(net: &Network, plan: &ResolvedPlan, gain: impl Fn(&Format) -> f
             let fmt = plan.format_for(name).unwrap_or_else(|| {
                 panic!("plan was not resolved against {}: layer {name:?} unassigned", net.name)
             });
-            *m as f64 / gain(&fmt)
+            let g = gain(&fmt);
+            // a NaN/inf/zero gain would silently corrupt the whole
+            // harmonic aggregate (and every plan_search ranking built
+            // on it) — fail as loudly as the unresolved-plan case
+            assert!(
+                g.is_finite() && g > 0.0,
+                "plan gain for layer {name:?} of {} is not finite-positive (got {g} for {})",
+                net.name,
+                fmt.id()
+            );
+            *m as f64 / g
         })
         .sum();
     total / weighted
@@ -165,7 +193,7 @@ mod tests {
         use crate::formats::ResolvedPlan;
         let net = crate::testing::fixtures::tiny_conv_network(4);
         let foreign = ResolvedPlan {
-            assignments: vec![("conv9".to_string(), Format::float(7, 6))],
+            assignments: vec![("conv9".to_string(), FormatPair::uniform(Format::float(7, 6)))],
         };
         let _ = plan_speedup(&net, &foreign);
     }
@@ -176,5 +204,58 @@ mod tests {
         let tiny = Format::float(1, 2);
         assert!(energy_savings(&tiny) < 1.0 / (1.0 - ENERGY_AREA_FRACTION));
         assert!(energy_savings(&tiny) > 1.0);
+    }
+
+    /// Uniform pairs ARE the single-format numbers — exact f64
+    /// equality, the backward-compatibility contract the pair model
+    /// rides on.
+    #[test]
+    fn uniform_pair_gains_match_single_format_exactly() {
+        for f in crate::formats::design_space(1) {
+            let p = FormatPair::uniform(f);
+            assert_eq!(pair_speedup(&p), speedup(&f), "speedup drifted for {}", f.id());
+            assert_eq!(
+                pair_energy_savings(&p),
+                energy_savings(&f),
+                "energy drifted for {}",
+                f.id()
+            );
+        }
+    }
+
+    /// Satellite: pair speedup/energy are finite and positive across
+    /// the WHOLE admissible format grid (every ordered pair of design
+    /// points) — a NaN/inf anywhere would poison `plan_harmonic`'s
+    /// aggregate, which now asserts against exactly that.
+    #[test]
+    fn pair_gains_are_finite_across_the_admissible_grid() {
+        let grid = crate::formats::design_space(4); // 60 designs, 3600 pairs
+        for w in &grid {
+            for a in &grid {
+                let p = FormatPair::split(*w, *a);
+                let s = pair_speedup(&p);
+                let e = pair_energy_savings(&p);
+                assert!(s.is_finite() && s > 0.0, "speedup {s} for {}", p.id());
+                assert!(e.is_finite() && e > 0.0, "energy {e} for {}", p.id());
+            }
+        }
+    }
+
+    /// A plan with a split pair aggregates through the pair gains: the
+    /// ARM-paper shape (float weights, fixed activations) is priced as
+    /// the pair model says, not as either half alone.
+    #[test]
+    fn plan_speedup_aggregates_split_pairs() {
+        use crate::formats::Plan;
+        let net = crate::testing::fixtures::tiny_conv_network(4);
+        let plan = Plan::parse("plan:c1=w:float:m7e6+a:fixed:l4r8,*=float:m7e6")
+            .unwrap()
+            .resolve(&net)
+            .unwrap();
+        let s = plan_speedup(&net, &plan);
+        let pair = FormatPair::split(Format::float(7, 6), Format::fixed(4, 8));
+        let want = 312.0 / (288.0 / pair_speedup(&pair) + 24.0 / speedup(&Format::float(7, 6)));
+        assert!((s - want).abs() < 1e-9, "expected {want}, got {s}");
+        assert!(s.is_finite() && s > 0.0);
     }
 }

@@ -52,6 +52,9 @@ fn main() {
 const USAGE: &str = "usage: repro <info|eval|sweep|search|plan|trace|figure|figures|serve|zoo-size|bench|bench-sweep> [flags]
   repro info
   repro eval   --net lenet5 --format float:m7e6|plan:... [--samples 128] [--backend native|pjrt]
+               (a plan rule may split weight and activation formats:
+                plan:conv1=w:float:m4e5+a:fixed:l4r8,*=float:m7e6 — single-format
+                rules are sugar for w == a)
                [--weight-budget 8m]   (cap + report the pre-quantized weight store)
                [--packed-exec]        (execute from bit-packed codes where the router
                                        admits a layer; bit-identical, native only)
@@ -59,6 +62,8 @@ const USAGE: &str = "usage: repro <info|eval|sweep|search|plan|trace|figure|figu
   repro search --net lenet5 [--target 0.99] [--refine 2] [--kind float|fixed|both]
   repro plan   <net> [--target 0.99] [--validate 4]
                [--ladder float:m23e8,float:m7e6,...]
+               (greedy descent over BOTH axes: each layer's weight and activation
+                half narrow independently; the table reports both per layer)
   repro trace  --net alexnet-mini [--sample 0]
   repro figure <fig4|fig5|fig6|fig7|fig8|fig9|fig10|fig11> [--net N]
   repro figures [--out results]
@@ -260,14 +265,21 @@ fn run(raw: &[String]) -> Result<()> {
             let out = plan_search(&net, &spec, &model)?;
             coord.cache.flush()?;
 
-            println!("{:<16} {:>14} {:>10} {:>10}", "layer", "format", "macs", "speedup");
+            // 2-axis table: the weight and activation halves narrow
+            // independently, so each gets its own column; speedup is
+            // the pair's (uniform pairs = the single-format figure)
+            println!(
+                "{:<16} {:>14} {:>14} {:>10} {:>10}",
+                "layer", "weights", "activations", "macs", "speedup"
+            );
             let resolved = out.plan.resolve(&net)?;
             for (name, macs) in net.quantized_layer_macs() {
-                let fmt = resolved.format_for(&name).expect("resolved plan covers every layer");
+                let pair = resolved.format_for(&name).expect("resolved plan covers every layer");
                 println!(
-                    "{name:<16} {:>14} {macs:>10} {:>9.2}x",
-                    fmt.id(),
-                    precis::hw::speedup(&fmt)
+                    "{name:<16} {:>14} {:>14} {macs:>10} {:>9.2}x",
+                    pair.w.id(),
+                    pair.a.id(),
+                    precis::hw::pair_speedup(&pair)
                 );
             }
             println!("\nchosen plan  : {}", out.plan.id());
@@ -471,7 +483,7 @@ fn run(raw: &[String]) -> Result<()> {
                 println!(
                     "{:<16} {:>14} {:>10} {:>8} {:>10} {:>10} {:>6.2}x {:>8.2}x {:>7}",
                     r.layer,
-                    r.fmt.id(),
+                    r.pair.id(),
                     r.macs,
                     r.params,
                     human_bytes(r.f32_bytes),

@@ -58,7 +58,7 @@ use std::sync::Arc;
 
 use anyhow::{bail, Result};
 
-use crate::formats::{Format, PrecisionSpec};
+use crate::formats::{Format, FormatPair, PrecisionSpec};
 use crate::nn::layers::Layer;
 use crate::nn::network::Network;
 use crate::numerics::{quantize_slice, QIdentity, QuantOp, Quantizer};
@@ -99,14 +99,27 @@ enum LayerQuant {
     Branches(Vec<LayerQ>),
 }
 
-/// One layer's resolved quantization entry: the kernel dispatcher plus
+/// One layer's resolved quantization entry: the kernel dispatchers plus
 /// how its weight operand is staged.  Built once per table resolution,
 /// so the hot path performs neither format resolution nor store-key
 /// allocation.
+///
+/// With split precision (DESIGN.md §Mixed precision, second axis) one
+/// layer carries TWO quantizers: `q` (the **activation** half) runs the
+/// MAC chain, bias add, input staging and gavgpool — everything the
+/// flowing activations touch — while `wq` (the **weight** half) stages
+/// the constant weight tensor (and keys the store, via `staging`).  A
+/// uniform pair makes them the same quantizer, which is the
+/// bit-exactness anchor for every pre-existing single-format spec.
 struct LayerQ {
+    /// activation-half quantizer: the MAC-chain dispatcher
     q: Quantizer,
-    /// the resolved format behind `q` — the packed router's input
-    fmt: Format,
+    /// weight-half quantizer: the scratch-staging fallback op (the
+    /// store path quantizes under the same format via the store key)
+    wq: Quantizer,
+    /// the resolved (weight, activation) pair — the packed router's
+    /// input
+    pair: FormatPair,
     staging: Staging,
     /// where this layer's GEMM executes (DESIGN.md §Packed execution);
     /// [`PackedPlan::Staged`] unless the table was resolved with packed
@@ -149,30 +162,35 @@ impl LayerQ {
 }
 
 /// How a layer's weight tensor reaches the GEMM (module docs;
-/// DESIGN.md §Storage).
+/// DESIGN.md §Storage).  Classification and store keying follow the
+/// **weight** half of the layer's pair alone: weights are constant per
+/// `(layer, weight format)`, so sessions that differ only in their
+/// activation half share the same store entries (pinned by
+/// `tests/store_contract.rs`).
 enum Staging {
     /// no weight operand (exact ops, input staging, gavgpool)
     NoWeights,
-    /// `Format::SINGLE` over weights the identity op leaves
+    /// weight half `Format::SINGLE` over weights the identity op leaves
     /// bit-identical: borrow the network's tensor directly — no copy,
     /// no quantization, no store bytes
     Direct,
     /// read the pre-quantized tensor from the [`WeightStore`] under
-    /// this prebuilt key; scratch-stage on a miss the budget cannot
-    /// admit
+    /// this prebuilt key (keyed on the weight half); scratch-stage on a
+    /// miss the budget cannot admit
     Store(StoreKey),
 }
 
 /// Build a named layer's entry, classifying its staging path (the key
 /// is prebuilt here so store lookups allocate nothing per forward).
-fn named_layer_q(net: &Network, name: &str, fmt: Format) -> LayerQ {
-    let q = Quantizer::new(&fmt);
-    let staging = if q.is_identity() && identity_clean(net.weight(&format!("{name}.w")).data()) {
+fn named_layer_q(net: &Network, name: &str, pair: FormatPair) -> LayerQ {
+    let q = Quantizer::new(&pair.a);
+    let wq = Quantizer::new(&pair.w);
+    let staging = if wq.is_identity() && identity_clean(net.weight(&format!("{name}.w")).data()) {
         Staging::Direct
     } else {
-        Staging::Store(StoreKey::new(&net.name, name, fmt))
+        Staging::Store(StoreKey::new(&net.name, name, pair.w))
     };
-    LayerQ { q, fmt, staging, packed: PackedPlan::Staged, cache: RefCell::new(None) }
+    LayerQ { q, wq, pair, staging, packed: PackedPlan::Staged, cache: RefCell::new(None) }
 }
 
 /// True when the identity op maps every value to itself — i.e. the
@@ -190,23 +208,24 @@ impl QuantTable {
             PrecisionSpec::Uniform(f) => Ok(QuantTable::uniform_for(net, f)),
             PrecisionSpec::PerLayer(p) => {
                 let resolved = p.resolve(net)?;
-                let fmt_of = |name: &str| -> Format {
+                let fmt_of = |name: &str| -> FormatPair {
                     resolved
                         .format_for(name)
                         .unwrap_or_else(|| panic!("resolved plan misses layer {name:?}"))
                 };
                 let mut per_layer: Vec<LayerQuant> = Vec::with_capacity(net.layers.len());
                 // reverse pass: unnamed quantized ops inherit the next
-                // named layer downstream (see type docs).  `None` means
-                // no named layer follows — fatal for an op that
-                // actually quantizes (gavgpool), harmless for exact ops
-                // whose table entry is never read.
-                let mut next: Option<(Quantizer, Format)> = None;
+                // named layer downstream (see type docs) — specifically
+                // its ACTIVATION half, whose operand they compute.
+                // `None` means no named layer follows — fatal for an op
+                // that actually quantizes (gavgpool), harmless for
+                // exact ops whose table entry is never read.
+                let mut next: Option<(Quantizer, FormatPair)> = None;
                 for layer in net.layers.iter().rev() {
                     let lq = match layer {
                         Layer::Conv { name, .. } | Layer::Dense { name, .. } => {
                             let lq = named_layer_q(net, name, fmt_of(name));
-                            next = Some((lq.q, lq.fmt));
+                            next = Some((lq.q, lq.pair));
                             LayerQuant::One(lq)
                         }
                         Layer::Inception { .. } => {
@@ -220,11 +239,11 @@ impl QuantTable {
                                     _ => unreachable!("inception branches are convs"),
                                 })
                                 .collect();
-                            next = Some((qs[0].q, qs[0].fmt));
+                            next = Some((qs[0].q, qs[0].pair));
                             LayerQuant::Branches(qs)
                         }
                         Layer::GAvgPool => {
-                            let Some((q, fmt)) = next else {
+                            let Some((q, pair)) = next else {
                                 bail!(
                                     "{}: global average pool has no named quantized layer \
                                      downstream to inherit a format from — per-layer plans \
@@ -234,7 +253,8 @@ impl QuantTable {
                             };
                             LayerQuant::One(LayerQ {
                                 q,
-                                fmt,
+                                wq: q,
+                                pair,
                                 staging: Staging::NoWeights,
                                 packed: PackedPlan::Staged,
                                 cache: RefCell::new(None),
@@ -243,12 +263,16 @@ impl QuantTable {
                         // exact ops never consult their entry; the
                         // placeholder is unreachable by construction
                         _ => {
-                            let (q, fmt) = next.unwrap_or_else(|| {
-                                (Quantizer::new(&Format::SINGLE), Format::SINGLE)
+                            let (q, pair) = next.unwrap_or_else(|| {
+                                (
+                                    Quantizer::new(&Format::SINGLE),
+                                    FormatPair::uniform(Format::SINGLE),
+                                )
                             });
                             LayerQuant::One(LayerQ {
                                 q,
-                                fmt,
+                                wq: q,
+                                pair,
                                 staging: Staging::NoWeights,
                                 packed: PackedPlan::Staged,
                                 cache: RefCell::new(None),
@@ -273,25 +297,27 @@ impl QuantTable {
     /// everywhere.  Infallible (no names to validate).
     pub fn uniform_for(net: &Network, fmt: &Format) -> QuantTable {
         let q = Quantizer::new(fmt);
+        let pair = FormatPair::uniform(*fmt);
         let per_layer = net
             .layers
             .iter()
             .map(|l| match l {
                 Layer::Conv { name, .. } | Layer::Dense { name, .. } => {
-                    LayerQuant::One(named_layer_q(net, name, *fmt))
+                    LayerQuant::One(named_layer_q(net, name, pair))
                 }
                 Layer::Inception { .. } => LayerQuant::Branches(
                     l.inception_branches()
                         .iter()
                         .map(|b| match b {
-                            Layer::Conv { name, .. } => named_layer_q(net, name, *fmt),
+                            Layer::Conv { name, .. } => named_layer_q(net, name, pair),
                             _ => unreachable!("inception branches are convs"),
                         })
                         .collect(),
                 ),
                 _ => LayerQuant::One(LayerQ {
                     q,
-                    fmt: *fmt,
+                    wq: q,
+                    pair,
                     staging: Staging::NoWeights,
                     packed: PackedPlan::Staged,
                     cache: RefCell::new(None),
@@ -337,8 +363,16 @@ impl QuantTable {
     /// * an inception module's concat is on a single grid only when
     ///   every branch resolved to the same quantizer.
     ///
-    /// Decode LUTs depend only on the format, so they are built once
-    /// per distinct format and shared across layers.
+    /// Split pairs: grid tracking follows each layer's **activation**
+    /// half (that is the grid its outputs land on), and routing goes
+    /// through [`crate::store::route_pair`] — a mixed pair can never
+    /// satisfy the integer premise (activations would have to be on the
+    /// *weight* grid), so it pins to the LUT lane or Staged, never a
+    /// silent approximation.
+    ///
+    /// Decode LUTs depend only on the stored (weight-half) format, so
+    /// they are built once per distinct weight format and shared across
+    /// layers and activation halves.
     fn assign_packed(&mut self, net: &Network) {
         let mut luts: BTreeMap<Format, Arc<Vec<f32>>> = BTreeMap::new();
         let mut lut_for = |fmt: &Format| -> Arc<Vec<f32>> {
@@ -354,8 +388,8 @@ impl QuantTable {
         let mut plan = |lq: &mut LayerQ, upstream: &Option<Quantizer>| {
             let direct = !matches!(lq.staging, Staging::Store(_));
             let on_grid = *upstream == Some(lq.q);
-            let fmt = lq.fmt;
-            lq.packed = PackedPlan::for_layer(&fmt, direct, on_grid, || lut_for(&fmt));
+            let pair = lq.pair;
+            lq.packed = PackedPlan::for_layer(&pair, direct, on_grid, || lut_for(&pair.w));
         };
         // the engine quantizes the input once, onto the first named
         // layer's grid
@@ -611,10 +645,12 @@ impl Engine {
                         ));
                     }
                     // staged f32 tier: planned, or a packed layer whose
-                    // store entry the budget could not admit
+                    // store entry the budget could not admit.  Weights
+                    // stage under the WEIGHT half; the chain below runs
+                    // under the activation half.
                     _ => {
                         if cached.is_none() && !matches!(lq.staging, Staging::Direct) {
-                            self.stage_quantized_weights(w.data(), &lq.q);
+                            self.stage_quantized_weights(w.data(), &lq.wq);
                         }
                         let wq: &[f32] = match (&lq.staging, &cached) {
                             (Staging::Direct, _) => w.data(),
@@ -801,7 +837,9 @@ impl Engine {
             }
             _ => {
                 if cached.is_none() && !matches!(lq.staging, Staging::Direct) {
-                    self.stage_quantized_weights(wt.data(), &lq.q);
+                    // weight half stages the constant tensor; the MAC
+                    // chain below dispatches on the activation half
+                    self.stage_quantized_weights(wt.data(), &lq.wq);
                 }
                 let wq: &[f32] = match (&lq.staging, &cached) {
                     (Staging::Direct, _) => wt.data(),

@@ -1,24 +1,31 @@
-//! Greedy per-layer mixed-precision search.
+//! Greedy per-layer mixed-precision search, over BOTH format axes.
 //!
-//! Per-layer assignment blows the design space up combinatorially
-//! (`ladder^layers` plans), which is exactly where the paper's fast
-//! probe machinery pays off: instead of measuring accuracy for every
-//! plan, [`plan_search`] walks a **greedy descent** —
+//! Per-layer split-precision assignment blows the design space up
+//! combinatorially (`(ladder²)^layers` weight/activation plans), which
+//! is exactly where the paper's fast probe machinery pays off: instead
+//! of measuring accuracy for every plan, [`plan_search`] walks a
+//! **greedy descent** —
 //!
-//! 1. start from the uniform-wide plan (every layer at `ladder[0]`);
-//! 2. each round, propose narrowing ONE layer one ladder step; rank
-//!    every proposal by its last-layer probe-R² (ten inputs, §3.3)
-//!    mapped through the fitted [`AccuracyModel`], and accept the
-//!    best-R² proposal whose *prediction* still clears the target;
+//! 1. start from the uniform-wide plan (every layer's weight AND
+//!    activation half at `ladder[0]`);
+//! 2. each round, propose narrowing ONE layer one ladder step on ONE
+//!    axis (its weight half or its activation half — two proposals per
+//!    layer); rank every proposal by its last-layer probe-R² (ten
+//!    inputs, §3.3) mapped through the fitted [`AccuracyModel`], and
+//!    accept the best-R² proposal whose *prediction* still clears the
+//!    target — so the axis order per layer is chosen by which
+//!    narrowing survives the probe;
 //! 3. stop when no proposal clears; only then spend full accuracy
 //!    evaluations — validate the surviving plan, and walk accepted
-//!    moves back one at a time if the measurement misses the target.
+//!    moves (layer, axis) back one at a time if the measurement misses
+//!    the target.
 //!
 //! Cost: `O(layers² · ladder)` ten-input probes plus a handful of full
-//! evaluations, against `ladder^layers` full evaluations for exhaustive
-//! per-layer enumeration — the `repro plan` subcommand reports both
-//! numbers, plus the [`crate::hw::plan_speedup`] estimate of the chosen
-//! plan.
+//! evaluations, against `(ladder²)^layers` full evaluations for
+//! exhaustive two-axis per-layer enumeration — the `repro plan`
+//! subcommand reports both numbers, plus the
+//! [`crate::hw::plan_speedup`] estimate of the chosen plan (priced
+//! through the pair cost model when the descent split a layer's axes).
 
 use std::sync::Arc;
 
@@ -26,7 +33,7 @@ use anyhow::{bail, Result};
 
 use crate::eval::metrics::topk_accuracy;
 use crate::eval::sweep::{forward_eval, forward_indices, EvalOptions};
-use crate::formats::{Format, Plan, PrecisionSpec};
+use crate::formats::{Format, FormatPair, Plan, PrecisionSpec};
 use crate::hw;
 use crate::nn::Network;
 use crate::search::model::AccuracyModel;
@@ -95,9 +102,17 @@ pub struct PlanSearchOutcome {
     /// Total forward passes in sample units (probes + baseline +
     /// validations).
     pub sample_forwards: usize,
-    /// `ladder^layers`: what exhaustive per-layer enumeration would
-    /// have had to validate.
+    /// `(ladder²)^layers`: what exhaustive two-axis per-layer
+    /// enumeration (every weight/activation pair per layer) would have
+    /// had to validate.
     pub exhaustive_plans: f64,
+}
+
+/// Which half of a layer's [`FormatPair`] one descent move narrows.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Axis {
+    Weight,
+    Activation,
 }
 
 /// Run the greedy descent described in the module docs.  `model` maps
@@ -124,20 +139,23 @@ pub fn plan_search(
     let probe = rng.sample_indices(net.eval_len(), probe_n);
     let exact_probe = forward_indices(&mut backend, &Format::SINGLE, &probe)?;
 
-    let plan_of = |pos: &[usize]| -> Plan {
-        let pairs: Vec<(String, Format)> = layers
+    let plan_of = |pos: &[(usize, usize)]| -> Plan {
+        let pairs: Vec<(String, FormatPair)> = layers
             .iter()
             .cloned()
-            .zip(pos.iter().map(|&i| spec.ladder[i]))
+            .zip(
+                pos.iter()
+                    .map(|&(wi, ai)| FormatPair::split(spec.ladder[wi], spec.ladder[ai])),
+            )
             .collect();
-        Plan::explicit(pairs).expect("quantized layer names are unique")
+        Plan::explicit_pairs(pairs).expect("quantized layer names are unique")
     };
 
-    // ladder position per layer; 0 = widest
-    let mut pos = vec![0usize; layers.len()];
+    // ladder position per layer and axis; (0, 0) = uniform-widest
+    let mut pos = vec![(0usize, 0usize); layers.len()];
     let mut plans_probed = 0usize;
     let probe_pred = |backend: &mut NativeBackend,
-                      pos: &[usize],
+                      pos: &[(usize, usize)],
                       plans_probed: &mut usize|
      -> Result<f64> {
         let cand = PrecisionSpec::from(plan_of(pos));
@@ -149,30 +167,41 @@ pub fn plan_search(
     // honest prediction for the uniform-wide start
     let start_pred = probe_pred(&mut backend, &pos, &mut plans_probed)?;
     let mut predicted = start_pred;
-    // accepted moves in order: (layer index, prediction after the move)
-    let mut accepted: Vec<(usize, f64)> = Vec::new();
+    // accepted moves in order: (layer, axis, prediction after the move)
+    let mut accepted: Vec<(usize, Axis, f64)> = Vec::new();
     loop {
-        let mut best: Option<(usize, f64)> = None; // (layer, prediction)
+        let mut best: Option<(usize, Axis, f64)> = None;
         for li in 0..layers.len() {
-            if pos[li] + 1 >= spec.ladder.len() {
-                continue;
-            }
-            let mut cand = pos.to_vec();
-            cand[li] += 1;
-            let pred = probe_pred(&mut backend, &cand, &mut plans_probed)?;
-            // rank by prediction (a monotone map of probe-R²): narrow
-            // the layer that damages the activations least
-            let improves = match best {
-                Some((_, bp)) => pred > bp,
-                None => true,
-            };
-            if pred >= spec.target && improves {
-                best = Some((li, pred));
+            for axis in [Axis::Weight, Axis::Activation] {
+                let (wi, ai) = pos[li];
+                let stepped = match axis {
+                    Axis::Weight => (wi + 1, ai),
+                    Axis::Activation => (wi, ai + 1),
+                };
+                if stepped.0 >= spec.ladder.len() || stepped.1 >= spec.ladder.len() {
+                    continue;
+                }
+                let mut cand = pos.to_vec();
+                cand[li] = stepped;
+                let pred = probe_pred(&mut backend, &cand, &mut plans_probed)?;
+                // rank by prediction (a monotone map of probe-R²):
+                // narrow the (layer, axis) that damages the
+                // activations least
+                let improves = match best {
+                    Some((_, _, bp)) => pred > bp,
+                    None => true,
+                };
+                if pred >= spec.target && improves {
+                    best = Some((li, axis, pred));
+                }
             }
         }
-        let Some((li, pred)) = best else { break };
-        pos[li] += 1;
-        accepted.push((li, pred));
+        let Some((li, axis, pred)) = best else { break };
+        match axis {
+            Axis::Weight => pos[li].0 += 1,
+            Axis::Activation => pos[li].1 += 1,
+        }
+        accepted.push((li, axis, pred));
         predicted = pred;
     }
 
@@ -190,9 +219,12 @@ pub fn plan_search(
         if na >= spec.target || validations >= spec.max_validations.max(1) {
             break na;
         }
-        let Some((li, _)) = accepted.pop() else { break na };
-        pos[li] -= 1;
-        predicted = accepted.last().map(|&(_, p)| p).unwrap_or(start_pred);
+        let Some((li, axis, _)) = accepted.pop() else { break na };
+        match axis {
+            Axis::Weight => pos[li].0 -= 1,
+            Axis::Activation => pos[li].1 -= 1,
+        }
+        predicted = accepted.last().map(|&(_, _, p)| p).unwrap_or(start_pred);
     };
 
     let plan = plan_of(&pos);
@@ -205,7 +237,7 @@ pub fn plan_search(
         plans_probed,
         validations_spent: validations,
         sample_forwards: (plans_probed + 1) * probe_n + (validations + 1) * samples,
-        exhaustive_plans: (spec.ladder.len() as f64).powi(layers.len() as i32),
+        exhaustive_plans: (spec.ladder.len() as f64).powi(2 * layers.len() as i32),
     })
 }
 
@@ -242,7 +274,7 @@ mod tests {
         let out = plan_search(&net, &spec, &identity_model()).unwrap();
 
         assert!(out.measured_norm_acc >= spec.target, "{}", out.measured_norm_acc);
-        assert_eq!(out.exhaustive_plans, 16.0, "4 ladder steps ^ 2 layers");
+        assert_eq!(out.exhaustive_plans, 256.0, "(4 ladder steps ^ 2 axes) ^ 2 layers");
         assert!(
             (out.validations_spent as f64) < out.exhaustive_plans,
             "greedy must validate fewer plans than exhaustive ({} vs {})",
@@ -255,12 +287,49 @@ mod tests {
         // the chosen plan is explicit and resolves on its network
         let resolved = out.plan.resolve(&net).unwrap();
         assert_eq!(resolved.assignments.len(), 2);
-        for (_, fmt) in &resolved.assignments {
-            assert!(spec.ladder.contains(fmt), "{fmt} not from the ladder");
+        for (_, pair) in &resolved.assignments {
+            assert!(spec.ladder.contains(&pair.w), "{} weight half not from the ladder", pair.id());
+            assert!(
+                spec.ladder.contains(&pair.a),
+                "{} activation half not from the ladder",
+                pair.id()
+            );
         }
         // round-trips through the session-key syntax
         let key = format!("tiny@{}", out.plan.id());
         assert!(crate::serving::SessionKey::parse(&key).is_ok());
+    }
+
+    /// Both axes really descend: with the target floored at zero every
+    /// proposal clears, so the greedy walk must take each layer's
+    /// weight AND activation half all the way down the ladder — the
+    /// final plan is uniform-narrowest on both axes.
+    #[test]
+    fn two_axis_descent_narrows_both_halves() {
+        let net = tiny_conv_network(8);
+        let ladder = vec![Format::SINGLE, Format::float(10, 6), Format::float(5, 5)];
+        let spec = PlanSearchSpec {
+            ladder: ladder.clone(),
+            target: 0.0,
+            max_validations: 1,
+            opts: EvalOptions { samples: 8, batch: 4 },
+            seed: 7,
+        };
+        let out = plan_search(&net, &spec, &identity_model()).unwrap();
+        assert_eq!(out.exhaustive_plans, 81.0, "(3^2)^2 two-axis plans");
+        let resolved = out.plan.resolve(&net).unwrap();
+        let narrowest = *ladder.last().unwrap();
+        for (name, pair) in &resolved.assignments {
+            assert_eq!(
+                *pair,
+                FormatPair::uniform(narrowest),
+                "layer {name}: both axes must bottom out, got {}",
+                pair.id()
+            );
+        }
+        // 2 layers × 2 axes × 2 ladder steps accepted moves, each found
+        // by probing; the start probe rides on top
+        assert!(out.plans_probed > 8, "descent probed {} plans", out.plans_probed);
     }
 
     /// Degenerate inputs fail cleanly.

@@ -772,6 +772,23 @@ mod tests {
         assert!(SessionKey::parse("lenet5@plan:conv1=float:m99e9,*=fixed:l8r8").is_err());
     }
 
+    /// Split-precision pair specs (ISSUE 9): the `w:…+a:…` spelling
+    /// rides through SessionKey parse ⇄ Display unchanged, and
+    /// malformed halves surface as clean errors.
+    #[test]
+    fn key_parses_split_pair_specs() {
+        let s = "lenet5@plan:conv1=w:float:m4e5+a:fixed:l4r8,*=float:m7e6";
+        let k = SessionKey::parse(s).unwrap();
+        assert_eq!(k.net, "lenet5");
+        assert_eq!(k.spec.uniform_format(), None);
+        assert_eq!(k.to_string(), s);
+        assert_eq!(SessionKey::parse(&k.to_string()).unwrap(), k);
+        // a lone half, a missing half, and an out-of-range half all err
+        assert!(SessionKey::parse("lenet5@plan:conv1=w:float:m4e5").is_err());
+        assert!(SessionKey::parse("lenet5@plan:conv1=w:float:m4e5+").is_err());
+        assert!(SessionKey::parse("lenet5@plan:conv1=w:float:m4e5+a:fixed:l100r100").is_err());
+    }
+
     #[test]
     fn split_session_specs_handles_plan_commas() {
         assert_eq!(
@@ -792,30 +809,64 @@ mod tests {
         assert_eq!(split_session_specs("oops,a@float:m7e6"), vec!["oops", "a@float:m7e6"]);
     }
 
+    /// `--sessions` splitting with `+`-bearing pair rules (ISSUE 9):
+    /// pair halves contain no `@`, so the comma re-attach logic keeps a
+    /// split-precision plan spec in one piece next to other sessions.
+    #[test]
+    fn split_session_specs_handles_pair_rules() {
+        assert_eq!(
+            split_session_specs(
+                "a@plan:c1=w:float:m4e5+a:fixed:l4r8,*=float:m7e6,b@fixed:l8r8"
+            ),
+            vec!["a@plan:c1=w:float:m4e5+a:fixed:l4r8,*=float:m7e6", "b@fixed:l8r8"]
+        );
+        // pair rules on BOTH sessions, in either order
+        let both = split_session_specs(
+            "b@fixed:l8r8,a@plan:c1=w:fixed:l8r8+a:float:m4e5,fc=w:float:m7e6+a:fixed:l4r8"
+        );
+        assert_eq!(
+            both,
+            vec![
+                "b@fixed:l8r8",
+                "a@plan:c1=w:fixed:l8r8+a:float:m4e5,fc=w:float:m7e6+a:fixed:l4r8"
+            ]
+        );
+        for spec in both {
+            assert!(SessionKey::parse(&spec).is_ok(), "{spec}");
+        }
+    }
+
     /// SessionKey Display ⇄ parse round-trips for random valid keys
     /// (uniform and plan specs alike).
     #[test]
     fn prop_session_key_roundtrip() {
-        use crate::formats::Plan;
+        use crate::formats::{FormatPair, Plan};
         use crate::testing::prop::run_prop;
         run_prop("session_key_roundtrip", 200, |g| {
-            let fmt = if g.bool() {
-                Format::float(g.usize_in(0, 23) as u32, g.usize_in(1, 8) as u32)
-            } else {
-                Format::fixed(g.usize_in(0, 64) as u32, g.usize_in(0, 64) as u32)
+            let mut fmt = |g: &mut crate::testing::prop::Gen| {
+                if g.bool() {
+                    Format::float(g.usize_in(0, 23) as u32, g.usize_in(1, 8) as u32)
+                } else {
+                    Format::fixed(g.usize_in(0, 64) as u32, g.usize_in(0, 64) as u32)
+                }
             };
             let net = ["lenet5", "alexnet-mini", "vgg-mini"][g.usize_in(0, 2)];
-            let key = if g.bool() {
-                SessionKey::new(net, fmt)
-            } else {
-                let mut pairs = vec![("conv1".to_string(), fmt)];
-                if g.bool() {
-                    pairs.push((
-                        "fc1".to_string(),
-                        Format::float(g.usize_in(0, 23) as u32, g.usize_in(1, 8) as u32),
-                    ));
+            let key = match g.usize_in(0, 2) {
+                0 => SessionKey::new(net, fmt(g)),
+                1 => {
+                    let mut pairs = vec![("conv1".to_string(), fmt(g))];
+                    if g.bool() {
+                        pairs.push(("fc1".to_string(), fmt(g)));
+                    }
+                    SessionKey::new(net, Plan::explicit(pairs).unwrap())
                 }
-                SessionKey::new(net, Plan::explicit(pairs).unwrap())
+                // split (w, a) pairs — some collapse to uniform sugar,
+                // which must round-trip through the BARE spelling
+                _ => {
+                    let pair = FormatPair::split(fmt(g), fmt(g));
+                    let plan = Plan::explicit_pairs(vec![("conv1".to_string(), pair)]).unwrap();
+                    SessionKey::new(net, plan)
+                }
             };
             assert_eq!(SessionKey::parse(&key.to_string()).unwrap(), key);
         });

@@ -31,7 +31,7 @@
 
 use std::sync::Arc;
 
-use crate::formats::Format;
+use crate::formats::{Format, FormatPair};
 use crate::numerics::{AccInt, PackedOp, QFixedInt, QuantOp};
 use crate::store::PackedTensor;
 
@@ -99,6 +99,29 @@ pub fn route(fmt: &Format, direct: bool, upstream_on_grid: bool) -> Route {
     }
 }
 
+/// The router over a weight/activation [`FormatPair`].  A uniform pair
+/// is exactly [`route`] (the single-format diagonal).  A split pair can
+/// NEVER take an integer lane: the integer chain's exactness proof
+/// needs activations staged on the *weight* grid, and a split pair
+/// breaks that grid by construction — those layers pin to the LUT lane
+/// (whose proof is activation-agnostic: weight codes decode through the
+/// `w`-half's table, the f32 MAC chain runs under the `a`-half's
+/// quantizer) when the weight code space fits, else to
+/// [`Route::Staged`].  Never a silent approximation.
+pub fn route_pair(pair: &FormatPair, direct: bool, upstream_on_grid: bool) -> Route {
+    if let Some(fmt) = pair.uniform_format() {
+        return route(&fmt, direct, upstream_on_grid);
+    }
+    if direct {
+        return Route::Staged;
+    }
+    if PackedTensor::bits_per_value(&pair.w) <= LUT_MAX_WIDTH {
+        Route::Lut
+    } else {
+        Route::Staged // raw-carrier weight half: no packed tier to read
+    }
+}
+
 /// One layer's resolved execution strategy — the router's decision plus
 /// the artifacts the kernel needs (the integer op, or the decode
 /// table).  Carried per quantized layer by `nn::QuantTable` when packed
@@ -116,20 +139,23 @@ pub enum PackedPlan {
 }
 
 impl PackedPlan {
-    /// Build the plan [`route`] picks for one layer.  `lut` supplies
-    /// (and memoizes) the decode table when the LUT lane is chosen —
-    /// tables depend only on the format, so callers share them across
-    /// layers.
+    /// Build the plan [`route_pair`] picks for one layer.  `lut`
+    /// supplies (and memoizes) the decode table for the **weight** half
+    /// when the LUT lane is chosen — tables depend only on the stored
+    /// (weight) format, so callers share them across layers and across
+    /// activation halves.
     pub fn for_layer(
-        fmt: &Format,
+        pair: &FormatPair,
         direct: bool,
         upstream_on_grid: bool,
         lut: impl FnOnce() -> Arc<Vec<f32>>,
     ) -> PackedPlan {
-        match route(fmt, direct, upstream_on_grid) {
+        match route_pair(pair, direct, upstream_on_grid) {
             Route::Staged => PackedPlan::Staged,
             Route::Int16 | Route::Int32 => {
-                PackedPlan::Int(PackedOp::for_format(fmt).expect("router checked the format"))
+                // integer routes only exist on the uniform diagonal, so
+                // the weight half IS the (single) layer format here
+                PackedPlan::Int(PackedOp::for_format(&pair.w).expect("router checked the format"))
             }
             Route::Lut => PackedPlan::Lut(lut()),
         }
@@ -473,25 +499,75 @@ mod tests {
         }
     }
 
+    /// The split-pair router: mixed (w, a) pairs may NEVER take an
+    /// integer lane, even when both halves alone are integer-eligible —
+    /// they pin to LUT (weight codes fit) or Staged (raw carrier),
+    /// never a silent approximation.  Uniform pairs reproduce the
+    /// single-format table above exactly.
+    #[test]
+    fn router_split_pair_decision_table() {
+        use Route::*;
+        for (spec, direct, upstream, want) in [
+            // both halves integer-eligible alone — still never Int
+            ("w:fixed:l1r3+a:fixed:l2r2", false, true, Lut),
+            ("w:fixed:l4r4+a:fixed:l1r3", false, true, Lut),
+            // mixed-kind pairs: routed by the weight half's code width
+            ("w:float:m7e6+a:fixed:l4r8", false, true, Lut),
+            ("w:fixed:l8r8+a:float:m7e6", false, false, Lut),
+            ("w:float:m4e5+a:float:m10e6", false, true, Lut),
+            // raw-carrier weight half: no packed tier to read
+            ("w:float:m23e8+a:fixed:l4r4", false, true, Staged),
+            ("w:fixed:l16r16+a:float:m7e6", false, true, Staged),
+            // a LUT-sized weight half with a raw-carrier ACTIVATION half
+            // is fine — only the weight half is read from codes
+            ("w:fixed:l4r4+a:float:m23e8", false, true, Lut),
+            // direct always wins
+            ("w:float:m4e5+a:fixed:l4r8", true, true, Staged),
+        ] {
+            let p = FormatPair::parse(spec).unwrap();
+            let got = route_pair(&p, direct, upstream);
+            assert_eq!(got, want, "{spec} direct={direct} upstream={upstream}");
+        }
+        // the uniform diagonal IS `route` — every single-format decision
+        // is unchanged when spelled as a pair
+        for fmt in crate::formats::design_space(3) {
+            for direct in [false, true] {
+                for upstream in [false, true] {
+                    assert_eq!(
+                        route_pair(&FormatPair::uniform(fmt), direct, upstream),
+                        route(&fmt, direct, upstream),
+                        "{} direct={direct} upstream={upstream}",
+                        fmt.id()
+                    );
+                }
+            }
+        }
+    }
+
     #[test]
     fn plan_labels_follow_routes() {
-        let lut = |f: &Format| {
-            let f = *f;
-            move || Arc::new(PackedTensor::decode_table(&f, LUT_MAX_WIDTH).unwrap())
+        let lut = |p: &FormatPair| {
+            let w = p.w;
+            move || Arc::new(PackedTensor::decode_table(&w, LUT_MAX_WIDTH).unwrap())
         };
-        for (fmt, upstream, want) in [
+        for (spec, upstream, want) in [
             ("fixed:l1r3", true, "int16"),
             ("fixed:l4r4", true, "int32"),
             ("fixed:l8r8", true, "lut"),
             ("float:m7e6", true, "lut"),
             ("float:m23e8", true, "staged"),
             ("fixed:l16r16", true, "staged"),
+            // split pairs: integer-eligible halves still land on lut
+            ("w:fixed:l1r3+a:fixed:l2r2", true, "lut"),
+            ("w:float:m7e6+a:fixed:l4r8", true, "lut"),
+            ("w:float:m23e8+a:fixed:l4r4", true, "staged"),
         ] {
-            let f = Format::parse(fmt).unwrap();
-            let plan = PackedPlan::for_layer(&f, false, upstream, lut(&f));
-            assert_eq!(plan.label(), want, "{fmt}");
+            let p = FormatPair::parse(spec).unwrap();
+            let plan = PackedPlan::for_layer(&p, false, upstream, lut(&p));
+            assert_eq!(plan.label(), want, "{spec}");
         }
-        assert!(PackedPlan::for_layer(&Format::SINGLE, true, true, || unreachable!()).is_staged());
+        let single = FormatPair::uniform(Format::SINGLE);
+        assert!(PackedPlan::for_layer(&single, true, true, || unreachable!()).is_staged());
     }
 
     /// Both kernels against the serial-k reference across random

@@ -11,27 +11,31 @@
 
 use anyhow::Result;
 
-use crate::formats::{Format, PrecisionSpec};
+use crate::formats::{FormatPair, PrecisionSpec};
 use crate::nn::Network;
 use crate::store::PackedTensor;
 
 /// One quantized layer's storage and compute footprint under its
-/// resolved format.
+/// resolved weight/activation pair.  Storage columns follow the
+/// **weight** half alone — that is what the store packs; activations
+/// are transient — while `mac_speedup` prices the full pair through
+/// the two-operand MAC model.
 #[derive(Clone, Debug, PartialEq)]
 pub struct FootprintRow {
     pub layer: String,
-    pub fmt: Format,
+    pub pair: FormatPair,
     /// per-sample MACs (the weighting `hw::plan_speedup` uses)
     pub macs: usize,
     /// weight + bias parameter count
     pub params: usize,
     /// f32-carrier storage of those parameters
     pub f32_bytes: usize,
-    /// packed code width under `fmt` (DESIGN.md §Storage)
+    /// packed code width under the weight half (DESIGN.md §Storage)
     pub bits_per_value: u32,
     /// packed storage of those parameters
     pub packed_bytes: usize,
-    /// the format's MAC-level hardware speedup (paper Fig 5)
+    /// the pair's MAC-level hardware speedup (paper Fig 5; uniform
+    /// pairs are the single-format numbers exactly)
     pub mac_speedup: f64,
 }
 
@@ -46,19 +50,19 @@ pub fn zoo_size(net: &Network, spec: &PrecisionSpec) -> Result<Vec<FootprintRow>
         .assignments
         .iter()
         .zip(&macs)
-        .map(|((name, fmt), (mac_name, macs))| {
+        .map(|((name, pair), (mac_name, macs))| {
             debug_assert_eq!(name, mac_name);
             let params = net.weight(&format!("{name}.w")).data().len()
                 + net.weight(&format!("{name}.b")).data().len();
             FootprintRow {
                 layer: name.clone(),
-                fmt: *fmt,
+                pair: *pair,
                 macs: *macs,
                 params,
                 f32_bytes: params * 4,
-                bits_per_value: PackedTensor::bits_per_value(fmt),
-                packed_bytes: PackedTensor::packed_bytes_for(params, fmt),
-                mac_speedup: crate::hw::speedup(fmt),
+                bits_per_value: PackedTensor::bits_per_value(&pair.w),
+                packed_bytes: PackedTensor::packed_bytes_for(params, &pair.w),
+                mac_speedup: crate::hw::pair_speedup(pair),
             }
         })
         .collect();
@@ -68,6 +72,7 @@ pub fn zoo_size(net: &Network, spec: &PrecisionSpec) -> Result<Vec<FootprintRow>
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::formats::Format;
     use crate::testing::fixtures::tiny_conv_network;
 
     #[test]
@@ -100,6 +105,25 @@ mod tests {
 
         // validation is total, like every execution path
         assert!(zoo_size(&net, &PrecisionSpec::parse("plan:typo=fixed:l8r8").unwrap()).is_err());
+    }
+
+    /// Split pairs: the storage columns price the WEIGHT half only
+    /// (identical bytes to the same weight format under any activation
+    /// half), while the speedup column prices the full pair.
+    #[test]
+    fn split_pair_rows_price_weight_half_storage() {
+        let net = tiny_conv_network(4);
+        let split =
+            PrecisionSpec::parse("plan:c1=w:fixed:l8r8+a:float:m4e5,*=float:m7e6").unwrap();
+        let uniform_w = PrecisionSpec::parse("plan:c1=fixed:l8r8,*=float:m7e6").unwrap();
+        let srows = zoo_size(&net, &split).unwrap();
+        let urows = zoo_size(&net, &uniform_w).unwrap();
+        assert_eq!(srows[0].bits_per_value, urows[0].bits_per_value);
+        assert_eq!(srows[0].packed_bytes, urows[0].packed_bytes);
+        assert_eq!(srows[0].pair.id(), "w:fixed:l8r8+a:float:m4e5");
+        let pair = FormatPair::split(Format::fixed(8, 8), Format::float(4, 5));
+        assert_eq!(srows[0].mac_speedup, crate::hw::pair_speedup(&pair));
+        assert_ne!(srows[0].mac_speedup, urows[0].mac_speedup);
     }
 
     #[test]

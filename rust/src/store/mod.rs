@@ -54,8 +54,8 @@ mod footprint;
 mod packed;
 
 pub use exec::{
-    gemm_packed_int, gemm_packed_int_scalar, gemm_packed_lut, route, ExecScratch, HasLanes,
-    PackedPlan, Route, LUT_MAX_WIDTH,
+    gemm_packed_int, gemm_packed_int_scalar, gemm_packed_lut, route, route_pair, ExecScratch,
+    HasLanes, PackedPlan, Route, LUT_MAX_WIDTH,
 };
 pub use footprint::{zoo_size, FootprintRow};
 pub use packed::PackedTensor;

@@ -6,8 +6,9 @@
 //! (DESIGN.md §6).
 
 use std::collections::BTreeMap;
+use std::fmt;
 use std::fs::File;
-use std::io::{BufReader, Read};
+use std::io::{BufReader, Read, Seek};
 use std::path::Path;
 
 use anyhow::{bail, Context, Result};
@@ -15,6 +16,27 @@ use anyhow::{bail, Context, Result};
 use super::{Tensor, TensorI32};
 
 pub const MAGIC: u32 = 0x5052_5431; // "PRT1"
+
+/// Typed header-validation failure: names the offending tensor and the
+/// reason, so zoo loading can report WHICH entry of a corrupt container
+/// broke (and tests can downcast instead of string-matching).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct MalformedTensor {
+    pub tensor: String,
+    pub reason: String,
+}
+
+impl fmt::Display for MalformedTensor {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "malformed tensor {:?}: {}", self.tensor, self.reason)
+    }
+}
+
+impl std::error::Error for MalformedTensor {}
+
+fn malformed(tensor: &str, reason: String) -> anyhow::Error {
+    anyhow::Error::new(MalformedTensor { tensor: tensor.to_string(), reason })
+}
 
 /// Everything a `.prt` file can hold.
 #[derive(Clone, Debug)]
@@ -87,8 +109,19 @@ fn read_vec4<T>(r: &mut impl Read, n: usize, decode: fn([u8; 4]) -> T) -> Result
 }
 
 /// Read a `.prt` container.
+///
+/// Every size field in the header is UNTRUSTED: the element count is
+/// computed with `checked_mul` over the dims and bounded against the
+/// bytes actually remaining in the file BEFORE any payload buffer is
+/// allocated, so a corrupt or truncated container surfaces as a
+/// [`MalformedTensor`] error naming the entry — never as an abort on a
+/// multi-gigabyte preallocation or a debug overflow panic.
 pub fn read_container(path: &Path) -> Result<Container> {
     let f = File::open(path).with_context(|| format!("open {}", path.display()))?;
+    let file_len = f
+        .metadata()
+        .with_context(|| format!("stat {}", path.display()))?
+        .len();
     let mut r = BufReader::new(f);
 
     let magic = read_u32(&mut r)?;
@@ -96,6 +129,14 @@ pub fn read_container(path: &Path) -> Result<Container> {
         bail!("{}: bad magic {magic:#x} (want {MAGIC:#x})", path.display());
     }
     let count = read_u32(&mut r)? as usize;
+    // each entry costs ≥ 4 header bytes, so a count the file cannot
+    // possibly hold is rejected before `with_capacity` trusts it
+    if count as u64 > file_len / 4 {
+        bail!(
+            "{}: header claims {count} tensors but the file is only {file_len} bytes",
+            path.display()
+        );
+    }
     let mut entries = Vec::with_capacity(count);
     let mut index = BTreeMap::new();
 
@@ -111,8 +152,28 @@ pub fn read_container(path: &Path) -> Result<Container> {
         for _ in 0..ndim {
             shape.push(read_u32(&mut r)? as usize);
         }
-        let n: usize = shape.iter().product::<usize>().max(1);
-        let n = if ndim == 0 { 1 } else { n };
+        let n = shape
+            .iter()
+            .try_fold(1usize, |acc, &d| acc.checked_mul(d))
+            .ok_or_else(|| {
+                malformed(&name, format!("shape {shape:?} overflows the element count"))
+            })
+            .with_context(|| format!("in {}", path.display()))?
+            .max(1);
+        let payload = n.checked_mul(4).ok_or_else(|| {
+            malformed(&name, format!("{n} elements overflow the byte count"))
+        })?;
+        let remaining = file_len.saturating_sub(r.stream_position()?);
+        if payload as u64 > remaining {
+            return Err(malformed(
+                &name,
+                format!(
+                    "header claims {n} elements ({payload} bytes) but only \
+                     {remaining} bytes remain"
+                ),
+            ))
+            .with_context(|| format!("in {}", path.display()));
+        }
 
         let t = match dtype {
             0 => AnyTensor::F32(Tensor::new(shape, read_vec4(&mut r, n, f32::from_le_bytes)?)?),
@@ -182,6 +243,71 @@ mod tests {
         let p = std::env::temp_dir().join("precis_test_badmagic.prt");
         File::create(&p).unwrap().write_all(&[0u8; 16]).unwrap();
         assert!(read_container(&p).is_err());
+        std::fs::remove_file(&p).ok();
+    }
+
+    /// Malformed-header matrix (ISSUE 9 satellite): every corrupt size
+    /// field errs BEFORE the payload allocation, with the typed
+    /// [`MalformedTensor`] naming the offending entry.
+    #[test]
+    fn malformed_headers_err_before_allocating() {
+        let entry_header = |name: u8, ndim: u8, dims: &[u32]| {
+            let mut buf: Vec<u8> = Vec::new();
+            buf.extend(MAGIC.to_le_bytes());
+            buf.extend(1u32.to_le_bytes());
+            buf.extend(1u16.to_le_bytes());
+            buf.push(name);
+            buf.push(0); // dtype f32
+            buf.push(ndim);
+            for &d in dims {
+                buf.extend(d.to_le_bytes());
+            }
+            buf
+        };
+        let write = |tag: &str, buf: &[u8]| {
+            let p = std::env::temp_dir().join(format!("precis_test_{tag}.prt"));
+            File::create(&p).unwrap().write_all(buf).unwrap();
+            p
+        };
+
+        // oversized count: claims ~1e9 elements (4 GB) in a tiny file —
+        // must be rejected by the length bound, not attempted
+        let p = write("oversized", &entry_header(b'a', 1, &[1_000_000_000]));
+        let err = read_container(&p).unwrap_err();
+        let m = err.downcast_ref::<MalformedTensor>().expect("typed error");
+        assert_eq!(m.tensor, "a");
+        assert!(m.reason.contains("1000000000 elements"), "{m}");
+        std::fs::remove_file(&p).ok();
+
+        // dim overflow: the shape product exceeds usize — checked_mul
+        // catches it instead of wrapping to a small bogus count
+        let p = write("dimoverflow", &entry_header(b'b', 3, &[u32::MAX, u32::MAX, u32::MAX]));
+        let err = read_container(&p).unwrap_err();
+        let m = err.downcast_ref::<MalformedTensor>().expect("typed error");
+        assert_eq!(m.tensor, "b");
+        assert!(m.reason.contains("overflows"), "{m}");
+        std::fs::remove_file(&p).ok();
+
+        // shape/count mismatch: shape says 2x3 but the payload holds 4
+        // values — the next entry's header then reads into the payload
+        // bytes and the container must err, not misparse
+        let mut buf = entry_header(b'c', 2, &[2, 3]);
+        buf[4..8].copy_from_slice(&2u32.to_le_bytes()); // claim 2 entries
+        for v in [1.0f32, 2.0, 3.0, 4.0] {
+            buf.extend(v.to_le_bytes());
+        }
+        let p = write("mismatch", &buf);
+        assert!(read_container(&p).is_err());
+        std::fs::remove_file(&p).ok();
+
+        // entry-count bomb: a count no file this size could hold is
+        // rejected before `Vec::with_capacity` trusts it
+        let mut buf: Vec<u8> = Vec::new();
+        buf.extend(MAGIC.to_le_bytes());
+        buf.extend(u32::MAX.to_le_bytes());
+        let p = write("countbomb", &buf);
+        let err = read_container(&p).unwrap_err();
+        assert!(err.to_string().contains("claims 4294967295 tensors"), "{err}");
         std::fs::remove_file(&p).ok();
     }
 

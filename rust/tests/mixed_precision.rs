@@ -16,6 +16,7 @@ use std::time::Duration;
 use precis::eval::sweep::{forward_eval, EvalOptions};
 use precis::formats::{Format, Plan, PrecisionSpec};
 use precis::nn::Network;
+use precis::numerics::{quantize_slice, Quantizer};
 use precis::search::{plan_search, AccuracyModel, PlanSearchSpec};
 use precis::serving::{Backend, BackendFactory, Gateway, NativeBackend, Session, SessionKey};
 use precis::testing::fixtures::tiny_conv_network;
@@ -154,6 +155,85 @@ fn plan_session_specs_reject_bad_input_cleanly() {
     assert_eq!(SessionKey::parse(&k.to_string()).unwrap(), k);
 }
 
+/// The split-pair forward factors exactly as specified (ISSUE 9):
+/// weights staged on the WEIGHT half's grid, everything else — input
+/// staging, the MAC chain, the bias add — on the ACTIVATION half's.
+/// Reference: pre-quantize the network's weights onto the weight grid
+/// by hand and run the activation half uniformly.  The weight grid is
+/// chosen as a SUBSET of the activation grid (every `X(2,2)` value is
+/// exactly representable in `F(10,6)`), so the uniform run's own weight
+/// staging is a no-op on the pre-quantized values and the two paths
+/// must agree bit-for-bit.
+#[test]
+fn split_pair_forward_composes_weight_and_activation_halves() {
+    let net = tiny_conv_network(8);
+    let x = net.eval_x.slice_rows(0, 8);
+    let split = PrecisionSpec::parse("plan:*=w:fixed:l2r2+a:float:m10e6").unwrap();
+    let got = NativeBackend::new(net.clone()).run_spec(&x, &split).unwrap();
+
+    let wq = Quantizer::new(&Format::fixed(2, 2));
+    let mut pre = (*net).clone();
+    for name in net.quantized_layer_names() {
+        let t = pre.weights.get_mut(&format!("{name}.w")).unwrap();
+        quantize_slice(t.data_mut(), &wq);
+    }
+    let pre = Arc::new(pre);
+    let uniform_a = PrecisionSpec::parse("plan:*=float:m10e6").unwrap();
+    let want = NativeBackend::new(pre.clone()).run_spec(&x, &uniform_a).unwrap();
+
+    assert_eq!(got.shape(), want.shape());
+    for i in 0..got.data().len() {
+        assert_eq!(
+            got.data()[i].to_bits(),
+            want.data()[i].to_bits(),
+            "logit {i}: {} vs {}",
+            got.data()[i],
+            want.data()[i]
+        );
+    }
+
+    // the pair is live on BOTH axes: neither uniform spelling matches
+    let w_only = NativeBackend::new(net.clone())
+        .run_spec(&x, &PrecisionSpec::parse("fixed:l2r2").unwrap())
+        .unwrap();
+    let a_only = NativeBackend::new(net.clone())
+        .run_spec(&x, &PrecisionSpec::parse("float:m10e6").unwrap())
+        .unwrap();
+    assert_ne!(got.data(), w_only.data(), "activation half must be live");
+    assert_ne!(got.data(), a_only.data(), "weight half must be live");
+}
+
+/// Split-pair session keys round-trip through the gateway exactly like
+/// uniform plan keys: the `+` spelling IS the session identity.
+#[test]
+fn split_pair_session_keys_roundtrip_and_serve() {
+    let net = tiny_conv_network(8);
+    let plan = Plan::parse("plan:c1=w:float:m4e5+a:fixed:l4r8,*=float:m7e6").unwrap();
+    let session = Session::with_factory(
+        net.clone(),
+        plan.clone(),
+        4,
+        Duration::from_millis(3),
+        native_factory(net.clone()),
+    );
+    let key = session.key().clone();
+    assert_eq!(
+        key.to_string(),
+        "tiny-conv-fixture@plan:c1=w:float:m4e5+a:fixed:l4r8,*=float:m7e6"
+    );
+    assert_eq!(SessionKey::parse(&key.to_string()).unwrap(), key);
+
+    let x = net.eval_x.slice_rows(0, 4);
+    let served = session.run_batch(&x).unwrap();
+    let want = NativeBackend::new(net.clone())
+        .run_spec(&x, &PrecisionSpec::from(plan))
+        .unwrap();
+    for i in 0..want.data().len() {
+        assert_eq!(served.data()[i].to_bits(), want.data()[i].to_bits(), "logit {i}");
+    }
+    assert_eq!(session.shutdown().requests, 4);
+}
+
 /// `plan_search` end to end on the public API: the greedy search
 /// returns a plan that meets the target after validating at most its
 /// budget — orders of magnitude below exhaustive per-layer enumeration.
@@ -176,7 +256,7 @@ fn plan_search_meets_target_with_few_validations() {
     let model = AccuracyModel { a: 1.0, b: 0.0, fit_r: 1.0, n_points: 0 };
     let out = plan_search(&net, &spec, &model).unwrap();
     assert!(out.measured_norm_acc >= spec.target);
-    assert_eq!(out.exhaustive_plans, 25.0, "5^2 per-layer plans");
+    assert_eq!(out.exhaustive_plans, 625.0, "(5^2 axes)^2 layers of per-layer pairs");
     assert!((out.validations_spent as f64) < out.exhaustive_plans);
     // the chosen plan serves: open a session under it and check one
     // response against the offline eval path (the one-substrate rule)

@@ -18,7 +18,7 @@ use std::cell::Cell;
 use std::collections::{BTreeMap, BTreeSet};
 use std::sync::Arc;
 
-use precis::formats::{Format, Plan, PrecisionSpec};
+use precis::formats::{Format, FormatPair, Plan, PrecisionSpec};
 use precis::nn::QuantTable;
 use precis::numerics::{PackedOp, Quantizer};
 use precis::serving::{Backend, NativeBackend};
@@ -192,6 +192,17 @@ fn router_assignments_pin_through_the_resolved_table() {
         ("plan:c1=fixed:l2r2,fc=fixed:l3r3", "int16", "lut"),
         // an identity-quantized c1 emits raw f32: fc is off-grid too
         ("plan:c1=float:m23e8,fc=fixed:l1r2", "staged", "lut"),
+        // split pairs (ISSUE 9): a layer whose weight and activation
+        // halves differ breaks the integer premise BY CONSTRUCTION
+        // (upstream activations are never on the weight grid), so the
+        // router must pin to lut/staged — never an integer lane.  The
+        // downstream uniform layer still sees the split layer's
+        // ACTIVATION grid: fc stays integer when it matches.
+        ("plan:c1=w:fixed:l2r2+a:fixed:l3r3,fc=fixed:l3r3", "lut", "int16"),
+        ("plan:c1=w:float:m23e8+a:fixed:l4r4,fc=fixed:l4r4", "staged", "int32"),
+        // a split fc whose activation half matches upstream is STILL
+        // not integer (weight grid differs); LUT-sized w-half → lut
+        ("plan:c1=fixed:l2r2,fc=w:fixed:l3r3+a:fixed:l2r2", "int16", "lut"),
     ] {
         let got = labels(spec, true);
         let want = vec![("c1".to_string(), c1), ("fc".to_string(), fc)];
@@ -247,13 +258,23 @@ fn prop_packed_forward_bit_identical_to_staged_engine() {
     run_prop("packed_engine_vs_staged", 50, |g| {
         let net = if g.bool() { &conv } else { &dense };
         let x = net.eval_x.slice_rows(0, 5);
-        let spec = if g.bool() {
-            PrecisionSpec::parse(&arb_format(g).id()).unwrap()
-        } else {
-            let names: &[&str] = if Arc::ptr_eq(net, &conv) { &["c1", "fc"] } else { &["fc"] };
-            let fmts: Vec<(String, Format)> =
-                names.iter().map(|n| (n.to_string(), arb_format(g))).collect();
-            PrecisionSpec::from(Plan::explicit(fmts).unwrap())
+        let names: &[&str] = if Arc::ptr_eq(net, &conv) { &["c1", "fc"] } else { &["fc"] };
+        let spec = match g.usize_in(0, 2) {
+            0 => PrecisionSpec::parse(&arb_format(g).id()).unwrap(),
+            1 => {
+                let fmts: Vec<(String, Format)> =
+                    names.iter().map(|n| (n.to_string(), arb_format(g))).collect();
+                PrecisionSpec::from(Plan::explicit(fmts).unwrap())
+            }
+            // split pairs: each layer's weight and activation halves
+            // drawn independently (some collapse back to uniform sugar)
+            _ => {
+                let pairs: Vec<(String, FormatPair)> = names
+                    .iter()
+                    .map(|n| (n.to_string(), FormatPair::split(arb_format(g), arb_format(g))))
+                    .collect();
+                PrecisionSpec::from(Plan::explicit_pairs(pairs).unwrap())
+            }
         };
         let mut staged = NativeBackend::with_store(net.clone(), Arc::new(WeightStore::unbounded()));
         let mut packed = NativeBackend::with_store(net.clone(), Arc::new(WeightStore::unbounded()))

@@ -69,14 +69,15 @@ fn warm_store_forward_is_bit_identical_and_quantization_free() {
         assert_bits_eq(first.data(), want.data(), &format!("{} cold", spec.id()));
         assert_bits_eq(second.data(), want.data(), &format!("{} warm", spec.id()));
 
-        // store-eligible layers = resolved layers that are not the
-        // identity-direct SINGLE fast path (fixture weights are clean)
+        // store-eligible layers = resolved layers whose WEIGHT half is
+        // not the identity-direct SINGLE fast path (fixture weights are
+        // clean; staging classifies on the weight half alone)
         let store_layers = spec
             .resolve(&net)
             .unwrap()
             .assignments
             .iter()
-            .filter(|(_, f)| *f != Format::SINGLE)
+            .filter(|(_, p)| p.w != Format::SINGLE)
             .count() as u64;
         assert_eq!(warm.misses, store_layers, "{}: one miss per staged layer", spec.id());
         assert_eq!(hot.misses, store_layers, "{}: warm forward quantizes NO weights", spec.id());
@@ -159,6 +160,70 @@ fn gateway_sessions_share_store_entries_by_resolved_format() {
     gw.shutdown();
 }
 
+/// The split-precision store contract (ISSUE 9): the store keys on the
+/// WEIGHT half of each layer's pair, so two sessions whose specs differ
+/// only in their activation formats share every entry — the second
+/// session's traffic adds ZERO entries and ZERO misses, and the hit
+/// counters see the sharing.
+#[test]
+fn sessions_differing_only_in_activation_format_share_every_entry() {
+    let net = tiny_conv_network(6);
+    let store = Arc::new(WeightStore::unbounded());
+    let gw = Gateway::empty();
+    let open = |spec: &str| {
+        let n = net.clone();
+        let s = store.clone();
+        Session::with_factory(
+            net.clone(),
+            PrecisionSpec::parse(spec).unwrap(),
+            4,
+            Duration::from_millis(3),
+            Box::new(move || Ok(Box::new(NativeBackend::with_store(n, s)) as Box<dyn Backend>)),
+        )
+    };
+    // identical weight halves (c1@l8r8, fc@m7e6); only the activation
+    // halves differ — session 1 runs the uniform sugar, session 2 splits
+    // both layers onto different activation grids
+    let uniform = "plan:c1=fixed:l8r8,*=float:m7e6";
+    let split = "plan:c1=w:fixed:l8r8+a:float:m4e5,fc=w:float:m7e6+a:fixed:l4r8";
+    let k1 = gw.adopt(open(uniform));
+    let k2 = gw.adopt(open(split));
+
+    let px: usize = net.input.iter().product();
+    let pixels = |i: usize| net.eval_x.data()[i * px..(i + 1) * px].to_vec();
+
+    for i in 0..3 {
+        gw.infer(&k1, pixels(i)).unwrap();
+    }
+    let s1 = store.stats();
+    assert_eq!((s1.misses, s1.entries), (2, 2), "c1@l8r8 + fc@m7e6 staged once");
+
+    // session 2's first forward re-uses BOTH weight-half entries: no new
+    // entries, no new misses, only hits
+    gw.infer(&k2, pixels(0)).unwrap();
+    let s2 = store.stats();
+    assert_eq!(s2.entries, 2, "activation-only difference adds no store entries");
+    assert_eq!(s2.misses, 2, "no layer re-staged for the split session");
+    assert!(s2.hits > s1.hits, "the sharing shows up on the hit counters");
+
+    // the shared entries feed DIFFERENT activation chains: both sessions
+    // stay bit-identical to their own uncached references, and the split
+    // session's logits diverge from the uniform session's (the
+    // activation half is live, not ignored)
+    let mut refs = Vec::new();
+    for (key, spec) in [(&k1, uniform), (&k2, split)] {
+        let spec = PrecisionSpec::parse(spec).unwrap();
+        let want = NativeBackend::with_store(net.clone(), Arc::new(WeightStore::with_budget(0)))
+            .run_spec(&net.eval_x.slice_rows(0, 1), &spec)
+            .unwrap();
+        let got = gw.infer(key, pixels(0)).unwrap();
+        assert_bits_eq(&got, want.data(), &key.to_string());
+        refs.push(want.data().to_vec());
+    }
+    assert_ne!(refs[0], refs[1], "split activation half must change the math");
+    gw.shutdown();
+}
+
 /// A budget that fits only ONE of the two layers forces an eviction on
 /// every staging step; the forward stays bit-identical throughout and
 /// the store never exceeds its budget.
@@ -235,7 +300,7 @@ fn packed_exec_forward_obeys_the_store_contract() {
             .unwrap()
             .assignments
             .iter()
-            .map(|(n, f)| StoreEntry::bytes_for(net.weight(&format!("{n}.w")).data().len(), f))
+            .map(|(n, p)| StoreEntry::bytes_for(net.weight(&format!("{n}.w")).data().len(), &p.w))
             .collect();
         let budget = costs.iter().copied().max().unwrap();
         assert!(budget < costs.iter().sum(), "budget must not fit both entries");
@@ -482,8 +547,8 @@ fn prop_budget_constrained_forward_bit_identical_to_uncached() {
             .unwrap()
             .assignments
             .iter()
-            .map(|(n, f)| {
-                StoreEntry::bytes_for(net.weight(&format!("{n}.w")).data().len(), f)
+            .map(|(n, p)| {
+                StoreEntry::bytes_for(net.weight(&format!("{n}.w")).data().len(), &p.w)
             })
             .collect();
         let budget = match regime {
