@@ -19,13 +19,25 @@ on only one side are warnings/notes (e.g. the PR-5 weight-store
 `forward_cached/*` / `pack/*` sections, the PR-6 `forward_packed/*`
 lanes, the PR-8 lock-free/SIMD sections behind the
 `warm_lockfree_over_locked`, `gemm_simd_over_scalar/<fmt>`, and
-`packed_int_simd_over_scalar/<lane>` ratios, and the PR-9
+`packed_int_simd_over_scalar/<lane>` ratios, the PR-9
 split-precision section — `forward_split/<w>+<a>` /
 `forward_act_uniform/*` results with the
-`split_over_activation_uniform/<pair>` ratios — are all absent from
-the PR-4 baseline; that must not fail the lane).  The one structural condition
+`split_over_activation_uniform/<pair>` ratios — and the PR-10
+observability section — `obs_overhead/*` results pricing the
+metrics/profiling hot paths with the `obs_profile_overhead/tiny-conv`
+ratio — are all absent from the PR-4 baseline; that must not fail the
+lane).  The one structural condition
 on the PAIR of reports is a non-empty overlap: two reports sharing NO
 benchmark names cannot be meaningfully compared and exit 2.
+
+Opt-in tracks layer semantic checks over the ratio families.
+`--track packed_gap` compares how much of the hardware model's
+predicted speedup the packed kernels actually realize — per format,
+realization = `packed_forward_over_f32/<fmt>` /
+`hw_speedup_predicted/<fmt>` — between the two reports.  A format
+whose realization falls more than --threshold below the baseline's
+counts as a regression (downgraded by --warn-only like any other), and
+a measured ratio without its prediction (or vice versa) is a warning.
 
 Exit codes: 0 ok / warnings only, 1 regressions (without --warn-only),
 2 structural error.
@@ -40,6 +52,7 @@ fine" (`test_bench_compare.py` pins all of these behaviours).
 Usage:
   bench_compare.py BASELINE.json CURRENT.json [--threshold 0.25]
                    [--warn-only] [--min-seconds 1e-6] [--min-overlap 0.5]
+                   [--track packed_gap]
 """
 
 import argparse
@@ -109,6 +122,25 @@ def load_report(path):
     return doc
 
 
+def packed_gap(ratios):
+    """Per-format speedup realization (measured packed / hw-model predicted).
+
+    Returns ({fmt: realization}, [fmt with only one side of the pair]).
+    """
+    measured, predicted = {}, {}
+    for name, v in ratios.items():
+        if name.startswith("packed_forward_over_f32/"):
+            measured[name.split("/", 1)[1]] = float(v)
+        elif name.startswith("hw_speedup_predicted/"):
+            predicted[name.split("/", 1)[1]] = float(v)
+    gaps = {
+        fmt: measured[fmt] / predicted[fmt]
+        for fmt in measured
+        if fmt in predicted and predicted[fmt] > 0.0
+    }
+    return gaps, sorted(set(measured) ^ set(predicted))
+
+
 def human(seconds):
     if seconds < 1e-6:
         return f"{seconds * 1e9:.1f}ns"
@@ -141,6 +173,15 @@ def main():
         default=1e-6,
         help="ignore benchmarks whose baseline median is below this "
         "(sub-microsecond timings are all noise on shared runners)",
+    )
+    ap.add_argument(
+        "--track",
+        action="append",
+        default=[],
+        choices=["packed_gap"],
+        help="opt-in semantic checks over the ratio families: 'packed_gap' "
+        "regresses when a format's measured/predicted packed-speedup "
+        "realization drops more than --threshold below the baseline's",
     )
     ap.add_argument(
         "--min-overlap",
@@ -241,6 +282,31 @@ def main():
     ]
     for name, v in slow_blocked:
         print(f"warning: {name} = {float(v):.2f}x — blocked kernel slower than naive")
+
+    # opt-in track: how much of the hardware model's predicted speedup
+    # the packed kernels realize, format by format, vs the baseline
+    if "packed_gap" in args.track:
+        base_gap, _ = packed_gap(base["ratios"])
+        cur_gap, cur_lone = packed_gap(cur["ratios"])
+        print(f"\n{'packed_gap (measured/predicted)':<56} {'baseline':>9} {'current':>9}")
+        show = lambda v: f"{v:.2f}" if v is not None else "-"
+        for fmt_id in sorted(set(base_gap) | set(cur_gap)):
+            b, c = base_gap.get(fmt_id), cur_gap.get(fmt_id)
+            print(f"{'packed_gap/' + fmt_id:<56} {show(b):>9} {show(c):>9}")
+            if b is not None and c is not None and b > 0.0:
+                delta = (c - b) / b
+                if delta < -args.threshold:
+                    regressions.append((f"packed_gap/{fmt_id}", delta))
+        for fmt_id in cur_lone:
+            print(
+                f"warning: packed_gap/{fmt_id}: measured or predicted ratio "
+                f"present without its pair"
+            )
+        if not cur_gap:
+            print(
+                "warning: --track packed_gap: current report has no "
+                "packed_forward_over_f32 / hw_speedup_predicted pairs"
+            )
 
     print(
         f"\n{len(common)} compared, {len(regressions)} regressed, "

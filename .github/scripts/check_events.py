@@ -1,0 +1,113 @@
+#!/usr/bin/env python3
+"""Validate a precis `--events-out` JSON-lines event log.
+
+The CI smoke lanes run the serving example with `--events-out
+events.jsonl` and gate on this script: every line must be a valid JSON
+object with the envelope fields (`seq`, `t_s`, `kind`), sequence
+numbers must be UNIQUE (not monotonic — the sink is a lock-free MPSC
+queue, so concurrent emitters can drain out of seq order, and a
+dropped event consumes its seq), timestamps must be finite and
+non-negative, and the session lifecycle must balance: every
+`session_open` is matched by exactly one `session_close` once the
+gateway has shut down.
+
+Exit codes: 0 valid, 1 invalid, 2 usage/IO error.
+
+Usage: check_events.py events.jsonl [--min-events 1]
+"""
+
+import argparse
+import json
+import math
+import sys
+
+# the event vocabulary of precis::obs::Event::kind()
+KINDS = {
+    "session_open",
+    "session_close",
+    "store_evict",
+    "store_reject",
+    "shed",
+    "slo_state",
+    "alert",
+}
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("log")
+    ap.add_argument(
+        "--min-events",
+        type=int,
+        default=1,
+        help="fail when the log carries fewer events than this — an empty "
+        "log from a lane that definitely opened sessions means the sink "
+        "was never wired (default 1)",
+    )
+    args = ap.parse_args()
+
+    try:
+        with open(args.log, "r", encoding="utf-8") as fh:
+            lines = [ln for ln in fh.read().splitlines() if ln.strip()]
+    except OSError as e:
+        print(f"ERROR: cannot read {args.log}: {e}", file=sys.stderr)
+        return 2
+
+    errors = []
+    seqs = set()
+    kinds = {}
+    for i, line in enumerate(lines, 1):
+        try:
+            ev = json.loads(line)
+        except json.JSONDecodeError as e:
+            errors.append(f"line {i}: not valid JSON: {e}")
+            continue
+        if not isinstance(ev, dict):
+            errors.append(f"line {i}: not a JSON object")
+            continue
+        seq = ev.get("seq")
+        if isinstance(seq, bool) or not isinstance(seq, (int, float)):
+            errors.append(f"line {i}: 'seq' missing or not a number")
+        elif seq in seqs:
+            errors.append(f"line {i}: duplicate seq {seq}")
+        else:
+            seqs.add(seq)
+        t = ev.get("t_s")
+        if (
+            isinstance(t, bool)
+            or not isinstance(t, (int, float))
+            or not math.isfinite(float(t))
+            or float(t) < 0.0
+        ):
+            errors.append(f"line {i}: 't_s' missing or not a finite non-negative number")
+        kind = ev.get("kind")
+        if kind not in KINDS:
+            errors.append(f"line {i}: unknown kind {kind!r}")
+        else:
+            kinds[kind] = kinds.get(kind, 0) + 1
+
+    opens = kinds.get("session_open", 0)
+    closes = kinds.get("session_close", 0)
+    if opens != closes:
+        errors.append(
+            f"unbalanced session lifecycle: {opens} session_open vs "
+            f"{closes} session_close (gateway shutdown must close every session)"
+        )
+    if len(lines) < args.min_events:
+        errors.append(
+            f"only {len(lines)} events (< --min-events {args.min_events}) — "
+            f"was the sink wired?"
+        )
+
+    by_kind = ", ".join(f"{k}={v}" for k, v in sorted(kinds.items())) or "none"
+    print(f"{args.log}: {len(lines)} events ({by_kind})")
+    if errors:
+        for e in errors:
+            print(f"INVALID: {e}", file=sys.stderr)
+        return 1
+    print("event log valid: JSON lines well-formed, seqs unique, open/close balanced")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -158,6 +158,61 @@ class BenchCompareTest(unittest.TestCase):
         self.assertEqual(p.returncode, 0, p.stdout)
         self.assertIn("of benchmark names overlap", p.stdout)
 
+    @staticmethod
+    def gap_ratios(measured, predicted):
+        ratios = {f"packed_forward_over_f32/{f}": v for f, v in measured.items()}
+        ratios.update({f"hw_speedup_predicted/{f}": v for f, v in predicted.items()})
+        return ratios
+
+    def test_packed_gap_track_passes_when_realization_holds(self):
+        ratios = self.gap_ratios({"fixed:l8r8": 4.0}, {"fixed:l8r8": 8.0})
+        base = self.write("b.json", report(["a/1"], ratios=ratios))
+        cur = self.write("c.json", report(["a/1"], ratios=ratios))
+        p = self.run_compare(base, cur, "--track", "packed_gap")
+        self.assertEqual(p.returncode, 0, p.stdout)
+        self.assertIn("packed_gap/fixed:l8r8", p.stdout)
+        self.assertIn("0.50", p.stdout)  # the realization column
+
+    def test_packed_gap_realization_drop_is_a_regression(self):
+        # prediction unchanged, measured speedup halved: the kernels now
+        # realize half as much of the model — that's the regression the
+        # track exists to catch, even though no raw timing regressed
+        base_r = self.gap_ratios({"fixed:l8r8": 4.0}, {"fixed:l8r8": 8.0})
+        cur_r = self.gap_ratios({"fixed:l8r8": 2.0}, {"fixed:l8r8": 8.0})
+        base = self.write("b.json", report(["a/1"], ratios=base_r))
+        cur = self.write("c.json", report(["a/1"], ratios=cur_r))
+        p = self.run_compare(base, cur, "--track", "packed_gap")
+        self.assertEqual(p.returncode, 1, p.stdout)
+        self.assertIn("REGRESSION: packed_gap/fixed:l8r8", p.stderr)
+
+    def test_packed_gap_regression_respects_warn_only(self):
+        base_r = self.gap_ratios({"fixed:l8r8": 4.0}, {"fixed:l8r8": 8.0})
+        cur_r = self.gap_ratios({"fixed:l8r8": 2.0}, {"fixed:l8r8": 8.0})
+        base = self.write("b.json", report(["a/1"], ratios=base_r))
+        cur = self.write("c.json", report(["a/1"], ratios=cur_r))
+        p = self.run_compare(base, cur, "--track", "packed_gap", "--warn-only")
+        self.assertEqual(p.returncode, 0, p.stdout)
+        self.assertIn("REGRESSION: packed_gap/fixed:l8r8", p.stderr)
+
+    def test_packed_gap_unpaired_ratio_warns(self):
+        # a measured ratio with no prediction (or vice versa) cannot be
+        # a realization — warn, don't crash or silently skip
+        cur_r = self.gap_ratios({"fixed:l8r8": 4.0, "fixed:l3r3": 3.0}, {"fixed:l8r8": 8.0})
+        base = self.write("b.json", report(["a/1"], ratios={}))
+        cur = self.write("c.json", report(["a/1"], ratios=cur_r))
+        p = self.run_compare(base, cur, "--track", "packed_gap")
+        self.assertEqual(p.returncode, 0, p.stdout)
+        self.assertIn("warning: packed_gap/fixed:l3r3", p.stdout)
+
+    def test_packed_gap_not_checked_without_the_flag(self):
+        base_r = self.gap_ratios({"fixed:l8r8": 4.0}, {"fixed:l8r8": 8.0})
+        cur_r = self.gap_ratios({"fixed:l8r8": 2.0}, {"fixed:l8r8": 8.0})
+        base = self.write("b.json", report(["a/1"], ratios=base_r))
+        cur = self.write("c.json", report(["a/1"], ratios=cur_r))
+        p = self.run_compare(base, cur)
+        self.assertEqual(p.returncode, 0, p.stdout)
+        self.assertNotIn("packed_gap", p.stdout)
+
 
 if __name__ == "__main__":
     unittest.main(verbosity=2)

@@ -14,7 +14,8 @@
 //!         [--sessions lenet5@float:m7e6,alexnet-mini@fixed:l8r8] \
 //!         [--requests 256] [--clients 8] [--wait-ms 5] \
 //!         [--backend auto|native|pjrt] [--weight-budget 8m] \
-//!         [--arrivals poisson:200rps] [--slo 20ms:256] [--seed 2018]
+//!         [--arrivals poisson:200rps] [--slo 20ms:256] [--seed 2018] \
+//!         [--events-out events.jsonl]
 
 use std::sync::Arc;
 use std::time::Duration;
@@ -55,15 +56,26 @@ fn main() -> Result<()> {
         .map(|s| ArrivalSchedule::parse(s, seed))
         .transpose()?;
 
+    // structured event log (session lifecycle, sheds, store evictions,
+    // SLO burn alerts) — DESIGN.md §Observability
+    let events_path = args.get("events-out").map(|s| s.to_string());
+    let events = events_path
+        .as_deref()
+        .map(|p| precis::obs::EventSink::to_file(std::path::Path::new(p)).map(Arc::new))
+        .transpose()?;
+
     let zoo = Zoo::load(ARTIFACTS)?;
     let batch = zoo.batch;
-    let gateway = Gateway::new(zoo, kind).with_options(SessionOptions {
+    let mut gateway = Gateway::new(zoo, kind).with_options(SessionOptions {
         batch: 0, // the artifact batch size
         max_wait: Duration::from_millis(wait_ms as u64),
         weight_budget,
         slo,
         ..SessionOptions::default()
     });
+    if let Some(sink) = &events {
+        gateway = gateway.with_events(sink.clone());
+    }
     let keys: Vec<SessionKey> = split_session_specs(&specs)
         .iter()
         .map(|s| gateway.open_spec(s))
@@ -131,5 +143,12 @@ fn main() -> Result<()> {
         stats.total_batches(),
         stats.sessions.len()
     );
+    // dropping the last sink Arc joins the writer thread, so the log
+    // file is complete before we report it
+    if let (Some(sink), Some(path)) = (events, events_path) {
+        let (emitted, dropped) = (sink.emitted(), sink.dropped());
+        drop(sink);
+        println!("events: {emitted} emitted ({dropped} dropped) -> {path}");
+    }
     Ok(())
 }

@@ -14,6 +14,7 @@ use std::sync::Arc;
 
 use crate::bench_harness::{section, Bench, BenchReport, BenchResult};
 use crate::formats::{Format, PrecisionSpec};
+use crate::obs::{Counter, Histogram};
 use crate::nn::{gemm_q, gemm_q_naive};
 use crate::numerics::{dot_q, quantize_slice, PackedOp, Quantizer};
 use crate::serving::{Backend, NativeBackend};
@@ -61,9 +62,10 @@ pub fn hot_paths_report(tag: &str, quick: bool) -> BenchReport {
 }
 
 /// The suite body, parameterized over problem sizes so the structural
-/// unit test can run it at trivial sizes (names and ratio families are
-/// identical either way; only the dimension strings differ).
-fn run_suite(
+/// unit test and `tests/obs_contract.rs` can run it at trivial sizes
+/// (names and ratio families are identical either way; only the
+/// dimension strings differ).
+pub fn run_suite(
     bench: &mut Bench,
     report: &mut BenchReport,
     slice_len: usize,
@@ -370,6 +372,48 @@ fn run_suite(
         }
     }
 
+    // ISSUE 10 tentpole: the observability hot paths.  The registry
+    // primitives must price like bare relaxed atomics, and a profiled
+    // forward must cost within noise of a plain one — the
+    // `obs_profile_overhead/tiny-conv` ratio is the zero-overhead
+    // contract's regression gate (contract: ~1.0x; the span clock is
+    // two `Instant::now` calls per layer against a whole-layer GEMM).
+    section("obs overhead: metric primitives + profiled vs plain forward");
+    {
+        let counter = Counter::new();
+        let c = bench.run("obs_overhead/counter_add", || {
+            counter.add(1);
+            counter.get()
+        });
+        let hist = Histogram::new();
+        let mut tick = 0u64;
+        let h = bench.run("obs_overhead/histogram_record", || {
+            tick += 1;
+            hist.record((tick % 1024) as f64 * 1e-6);
+            hist.count()
+        });
+        println!(
+            "    -> counter {:.0} Mops/s, histogram {:.0} Mops/s",
+            c.throughput(1.0) / 1e6,
+            h.throughput(1.0) / 1e6,
+        );
+        let spec = PrecisionSpec::parse("fixed:l8r8").expect("spec parses");
+        let mut plain = NativeBackend::with_store(net.clone(), Arc::new(WeightStore::unbounded()));
+        let mut profiled =
+            NativeBackend::with_store(net.clone(), Arc::new(WeightStore::unbounded()))
+                .with_profiling(true);
+        plain.run_spec(&x, &spec).expect("plain warm-up forward");
+        profiled.run_spec(&x, &spec).expect("profiled warm-up forward");
+        let fp = bench.run(&format!("obs_overhead/forward_plain/batch{fwd_batch}"), || {
+            plain.run_spec(&x, &spec).expect("plain forward").data()[0]
+        });
+        let fq = bench.run(&format!("obs_overhead/forward_profiled/batch{fwd_batch}"), || {
+            profiled.run_spec(&x, &spec).expect("profiled forward").data()[0]
+        });
+        report.ratio("obs_profile_overhead/tiny-conv", ratio(&fp, &fq));
+        println!("    -> profiled/plain ratio {:.2}x (contract: ~1.0x)", ratio(&fp, &fq));
+    }
+
     report.results.extend_from_slice(bench.results());
 }
 
@@ -444,6 +488,13 @@ mod tests {
                 "missing packed int SIMD ratio for {lane}"
             );
         }
+        // the ISSUE 10 section: metrics/profiling hot-path pricing (the
+        // zero-overhead contract's regression gate; warn-only in older
+        // baselines)
+        assert!(
+            report.ratios.contains_key("obs_profile_overhead/tiny-conv"),
+            "missing profiled-vs-plain forward ratio"
+        );
         for name in [
             "forward_cached/",
             "forward_restaged/",
@@ -459,6 +510,10 @@ mod tests {
             "gemm_scalar/",
             "packed_int_simd/",
             "packed_int_scalar/",
+            "obs_overhead/counter_add",
+            "obs_overhead/histogram_record",
+            "obs_overhead/forward_plain/",
+            "obs_overhead/forward_profiled/",
         ] {
             assert!(
                 report.results.iter().any(|r| r.name.starts_with(name)),

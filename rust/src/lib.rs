@@ -12,6 +12,9 @@
 //! * [`tensor`]     — minimal NDArray + `.prt` container IO
 //! * [`nn`]         — pure-Rust quantized inference engine (the "modified
 //!                    Caffe" substitute; bit-exact vs the Pallas kernel)
+//! * [`obs`]        — observability: lock-free metrics registry,
+//!                    per-layer forward profiling, JSON-lines event log,
+//!                    SLO burn-rate alerts (DESIGN.md §Observability)
 //! * [`runtime`]    — PJRT client: load + execute `artifacts/*.hlo.txt`
 //!                    (behind the `pjrt` feature; DESIGN.md §5)
 //! * [`serving`]    — the unified execution API: `Backend` (the one
@@ -54,6 +57,7 @@ pub mod formats;
 pub mod hw;
 pub mod nn;
 pub mod numerics;
+pub mod obs;
 pub mod runtime;
 pub mod search;
 pub mod serving;

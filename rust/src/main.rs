@@ -58,6 +58,9 @@ const USAGE: &str = "usage: repro <info|eval|sweep|search|plan|trace|figure|figu
                [--weight-budget 8m]   (cap + report the pre-quantized weight store)
                [--packed-exec]        (execute from bit-packed codes where the router
                                        admits a layer; bit-identical, native only)
+               [--profile]            (per-layer span profile of one forward: wall time,
+                                       executed lane, MACs, clamped activations;
+                                       native only — DESIGN.md §Observability)
   repro sweep  --net lenet5 [--samples 128] [--stride 1]
   repro search --net lenet5 [--target 0.99] [--refine 2] [--kind float|fixed|both]
   repro plan   <net> [--target 0.99] [--validate 4]
@@ -82,18 +85,25 @@ const USAGE: &str = "usage: repro <info|eval|sweep|search|plan|trace|figure|figu
                                        to SLO violation drain first)
                [--gemm-threads 4]     (row-parallelize large GEMMs inside each native
                                        forward; bit-identical at any setting, 0 = serial)
+               [--profile]            (capture each session's latest per-layer span
+                                       profile and print it after the drive)
+               [--events-out events.jsonl]
+                                      (JSON-lines structured event log: session
+                                       open/close, sheds, store evict/reject, SLO burn
+                                       alerts; DESIGN.md §Observability)
   repro zoo-size <net> --format float:m7e6|plan:...
                (per-layer f32 vs bit-packed bytes, MAC-weighted, plus the packed
                 execution lane per layer; DESIGN.md §Storage, §Packed execution)
   repro bench  [--preset quick|full] [--tag T] [--json BENCH_T.json]
                (headless: no artifacts needed; includes packed_forward_over_f32
-                sections vs hw::speedup predictions; compare files with
+                sections vs hw::speedup predictions and obs_overhead sections
+                pricing the metrics/profiling hot paths; compare files with
                 .github/scripts/bench_compare.py)
   repro bench-sweep --net lenet5 [--stride 1]
 common: --artifacts DIR --out DIR --samples N --workers W --seed S";
 
 fn run(raw: &[String]) -> Result<()> {
-    let args = Args::parse(raw, &["quiet", "packed-exec"])?;
+    let args = Args::parse(raw, &["quiet", "packed-exec", "profile"])?;
     let Some(cmd) = args.positional().first().map(|s| s.as_str()) else {
         println!("{USAGE}");
         return Ok(());
@@ -159,6 +169,21 @@ fn run(raw: &[String]) -> Result<()> {
                             .collect();
                         eprintln!("# packed exec lanes: {}", lanes.join(", "));
                     }
+                    // --profile: one extra profiled forward over the
+                    // warm store (the accuracy pass above staged it),
+                    // reporting per-layer wall/lane/MACs/clamps
+                    if args.has("profile") {
+                        use precis::serving::{Backend, NativeBackend};
+                        let mut b = NativeBackend::with_store(net.clone(), store.clone())
+                            .with_packed_exec(packed_exec)
+                            .with_profiling(true);
+                        let n = samples.min(net.eval_len()).min(32).max(1);
+                        let x = net.eval_x.slice_rows(0, n);
+                        b.run_spec(&x, &spec)?;
+                        if let Some(p) = Backend::take_profile(&mut b) {
+                            println!("{}", p.render());
+                        }
+                    }
                     acc
                 }
                 // the AOT executables take one fmt vector: any spec
@@ -174,6 +199,11 @@ fn run(raw: &[String]) -> Result<()> {
                         eprintln!(
                             "(--packed-exec applies to the native engine only; PJRT holds \
                              weights on-device — flag ignored)"
+                        );
+                    }
+                    if args.has("profile") {
+                        eprintln!(
+                            "(--profile applies to the native engine only — flag ignored)"
                         );
                     }
                     let fmt = spec.resolved_uniform(&net)?;
@@ -387,8 +417,18 @@ fn run(raw: &[String]) -> Result<()> {
                 .get("arrivals")
                 .map(|s| ArrivalSchedule::parse(s, seed))
                 .transpose()?;
+            // --events-out: stream typed lifecycle/shed/store/alert
+            // records as JSON lines (DESIGN.md §Observability)
+            let events_path = args.get("events-out").map(|s| s.to_string());
+            let events = events_path
+                .as_deref()
+                .map(|p| {
+                    precis::obs::EventSink::to_file(std::path::Path::new(p))
+                        .map(std::sync::Arc::new)
+                })
+                .transpose()?;
             let zoo = Zoo::load(&artifacts)?;
-            let gateway = Gateway::new(zoo, kind).with_options(SessionOptions {
+            let mut gateway = Gateway::new(zoo, kind).with_options(SessionOptions {
                 batch: 0, // artifact batch size
                 max_wait: Duration::from_millis(wait_ms as u64),
                 weight_budget,
@@ -396,7 +436,11 @@ fn run(raw: &[String]) -> Result<()> {
                 slo,
                 qos_slots,
                 gemm_threads,
+                profile: args.has("profile"),
             });
+            if let Some(sink) = &events {
+                gateway = gateway.with_events(sink.clone());
+            }
             let mut keys = Vec::new();
             for spec in split_session_specs(&specs) {
                 keys.push(gateway.open_spec(&spec)?);
@@ -430,6 +474,14 @@ fn run(raw: &[String]) -> Result<()> {
             // — telemetry is not a shutdown-only artifact)
             println!("\n{}", report.render(&keys));
             println!("{}", gateway.stats().render());
+            // --profile: each session's latest per-layer span profile
+            if args.has("profile") {
+                for key in &keys {
+                    if let Some(p) = gateway.session(key).and_then(|s| s.last_profile()) {
+                        println!("profile {key}:\n{}", p.render());
+                    }
+                }
+            }
             println!(
                 "throughput: {:.1} served/s over {} session(s) ({:.2}s wall; \
                  {} offered = {} served + {} shed + {} failed)",
@@ -451,6 +503,13 @@ fn run(raw: &[String]) -> Result<()> {
             );
             let fin = gateway.shutdown();
             println!("served {} requests in {} batches total", fin.total_requests(), fin.total_batches());
+            // dropping the last sink Arc joins the writer, so the log
+            // file is complete before we report it
+            if let (Some(sink), Some(path)) = (events, events_path) {
+                let (emitted, dropped) = (sink.emitted(), sink.dropped());
+                drop(sink);
+                println!("events: {emitted} emitted ({dropped} dropped) -> {path}");
+            }
         }
         "zoo-size" => {
             // per-layer storage footprint: f32 carrier vs the packed

@@ -55,6 +55,7 @@
 use std::cell::RefCell;
 use std::collections::BTreeMap;
 use std::sync::Arc;
+use std::time::Instant;
 
 use anyhow::{bail, Result};
 
@@ -62,6 +63,7 @@ use crate::formats::{Format, FormatPair, PrecisionSpec};
 use crate::nn::layers::Layer;
 use crate::nn::network::Network;
 use crate::numerics::{quantize_slice, QIdentity, QuantOp, Quantizer};
+use crate::obs::LayerSpan;
 use crate::store::{
     gemm_packed_int, gemm_packed_lut, ExecScratch, Lease, PackedPlan, PackedTensor, StoreEntry,
     StoreKey, WeightStore, LUT_MAX_WIDTH,
@@ -464,6 +466,11 @@ pub struct Engine {
     /// independent chains, so any split is bit-identical by
     /// construction (DESIGN.md §Perf).
     gemm_threads: usize,
+    /// per-layer span collection (`obs` profiler; DESIGN.md
+    /// §Observability).  `None` = profiling off: the hot path performs
+    /// ONE `is_some` check per named layer and is otherwise untouched —
+    /// no timestamps, no output scans, bit-identical forwards.
+    prof: Option<Vec<LayerSpan>>,
 }
 
 /// Shape of the activation tensor flowing through the engine.
@@ -500,7 +507,21 @@ impl Engine {
             branch_out: Vec::new(),
             exec: ExecScratch::default(),
             gemm_threads: 0,
+            prof: None,
         }
+    }
+
+    /// Toggle per-layer span profiling (`SessionOptions.profile`,
+    /// `repro eval --profile`).  Off is the default and costs nothing.
+    pub fn set_profiling(&mut self, on: bool) {
+        self.prof = if on { Some(Vec::new()) } else { None };
+    }
+
+    /// Drain the spans the last forward recorded (empty when profiling
+    /// is off).  Callers wrap them into an
+    /// [`crate::obs::ForwardProfile`] with their own end-to-end timer.
+    pub fn take_spans(&mut self) -> Vec<LayerSpan> {
+        self.prof.as_mut().map(std::mem::take).unwrap_or_default()
     }
 
     /// Configure intra-forward GEMM row parallelism (`0`/`1` = serial;
@@ -558,6 +579,9 @@ impl Engine {
         );
         let b = shape[0];
         let mut cur = ActShape::Hwc(b, net.input[0], net.input[1], net.input[2]);
+        if let Some(spans) = &mut self.prof {
+            spans.clear();
+        }
 
         // stage input into act_a, quantized as the first GEMM's operand
         // (monomorphized q_slice via the dispatcher)
@@ -611,6 +635,7 @@ impl Engine {
                 // (identity-direct), or — on a miss the budget cannot
                 // admit — the scratch staging fallback
                 let cached = lq.staged_entry(store, w.data());
+                let t0 = self.prof.as_ref().map(|_| Instant::now());
                 resize(&mut self.act_b, b * out_dim);
                 match (&lq.packed, &cached) {
                     // packed-domain execution: the MAC loop reads the
@@ -671,6 +696,20 @@ impl Engine {
                                 self.gemm_threads,
                             );
                             add_bias_q(&mut self.act_b, bias.data(), b, *out_dim, op);
+                        });
+                    }
+                }
+                if let Some(t0) = t0 {
+                    let wall_s = t0.elapsed().as_secs_f64();
+                    let lane = executed_lane(&lq.packed, cached.is_some());
+                    let clamps = clamp_count(&self.act_b[..b * out_dim], &lq.q, &lq.pair.a);
+                    if let Some(spans) = &mut self.prof {
+                        spans.push(LayerSpan {
+                            name: name.clone(),
+                            lane: lane.to_string(),
+                            wall_s,
+                            macs: (b * in_dim * out_dim) as u64,
+                            clamps,
                         });
                     }
                 }
@@ -804,6 +843,7 @@ impl Engine {
         // staged weights by reference (store / identity-direct), with
         // scratch staging as the miss fallback — see the Dense arm
         let cached = lq.staged_entry(store, wt.data());
+        let t0 = self.prof.as_ref().map(|_| Instant::now());
         resize(&mut self.act_b, m * out_ch);
         match (&lq.packed, &cached) {
             // packed-domain execution over the im2col patches — see the
@@ -862,6 +902,20 @@ impl Engine {
                 });
             }
         }
+        if let Some(t0) = t0 {
+            let wall_s = t0.elapsed().as_secs_f64();
+            let lane = executed_lane(&lq.packed, cached.is_some());
+            let clamps = clamp_count(&self.act_b[..m * out_ch], &lq.q, &lq.pair.a);
+            if let Some(spans) = &mut self.prof {
+                spans.push(LayerSpan {
+                    name: name.clone(),
+                    lane: lane.to_string(),
+                    wall_s,
+                    macs: (m * k_dim * out_ch) as u64,
+                    clamps,
+                });
+            }
+        }
         ActShape::Hwc(b, oh, ow, *out_ch)
     }
 
@@ -879,6 +933,34 @@ impl Engine {
 fn resize(buf: &mut Vec<f32>, n: usize) {
     buf.clear();
     buf.resize(n, 0.0);
+}
+
+/// The lane a layer ACTUALLY executed this forward: the router's
+/// assignment when its store entry was available, the staged fallback
+/// otherwise (a packed plan without its packed bytes degrades to the
+/// staged tier — see the Dense arm).  With the store warm this is
+/// exactly [`PackedPlan::label`], which `tests/obs_contract.rs` pins
+/// against [`QuantTable::packed_labels`].
+fn executed_lane(plan: &PackedPlan, staged_hit: bool) -> &'static str {
+    if staged_hit {
+        plan.label()
+    } else {
+        PackedPlan::Staged.label()
+    }
+}
+
+/// Count output activations at or beyond the activation format's
+/// representable magnitude — the per-forward generalization of
+/// `numerics::trace::AccumTrace::first_saturation` (same threshold).
+/// Identity-quantized outputs are exact f32 and never clamp.  Runs only
+/// under the profiler (`Engine::set_profiling`), so forwards with
+/// profiling off never touch it.
+fn clamp_count(y: &[f32], q: &Quantizer, fmt: &Format) -> u64 {
+    if q.is_identity() {
+        return 0;
+    }
+    let max = fmt.max_value() as f32;
+    y.iter().filter(|v| v.abs() >= max).count() as u64
 }
 
 fn out_hw(h: usize, w: usize, k: usize, stride: usize, pad: usize) -> (usize, usize) {

@@ -1,0 +1,189 @@
+//! SLO error-budget burn-rate computation (ROADMAP item 4).
+//!
+//! The error budget is the fraction of offered requests a session is
+//! ALLOWED to shed (`BurnConfig::budget`, default 1%).  Burn rate is
+//! actual shed fraction divided by that budget, computed over two
+//! windows in the multi-window style of SRE burn alerts:
+//!
+//! * **slow** — cumulative over the session's lifetime counters:
+//!   `(shed / offered) / budget`.
+//! * **fast** — over the delta since the previous [`BurnMeter::check`]
+//!   call (the meter keeps per-session `(shed, offered)` snapshots), so
+//!   a fresh overload spikes the fast window immediately while the slow
+//!   window confirms it is sustained.
+//!
+//! An [`Alert`](super::Event::Alert) fires only when BOTH windows are
+//! at or above 1.0 — fast alone is a blip, slow alone is old news.  The
+//! inputs are the same shed/served counters `DriveReport` books against,
+//! so an alert's totals reconcile exactly with the driver's ledger
+//! (pinned by `tests/obs_contract.rs`).
+
+use std::collections::BTreeMap;
+use std::sync::{Mutex, PoisonError};
+
+/// Burn-rate policy knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct BurnConfig {
+    /// allowed shed fraction of offered traffic (the error budget)
+    pub budget: f64,
+    /// minimum offered requests in a window before burn is meaningful —
+    /// avoids a 1-of-2 shed reading as a 50x burn
+    pub min_offered: u64,
+}
+
+impl Default for BurnConfig {
+    fn default() -> Self {
+        BurnConfig { budget: 0.01, min_offered: 20 }
+    }
+}
+
+/// One burn evaluation for one session.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct BurnReading {
+    /// delta-window burn multiple (1.0 = exactly on budget)
+    pub fast: f64,
+    /// lifetime burn multiple
+    pub slow: f64,
+    /// cumulative shed count the reading was computed from
+    pub shed: u64,
+    /// cumulative served count the reading was computed from
+    pub served: u64,
+    /// both windows at or over budget
+    pub alerting: bool,
+}
+
+#[derive(Clone, Copy, Default)]
+struct SessionWindow {
+    shed: u64,
+    offered: u64,
+    burning: bool,
+}
+
+/// Tracks per-session shed/offered snapshots between stat polls and
+/// turns counter deltas into burn readings.  Locking is confined to
+/// `check`, which runs on the stats path (`Gateway::stats`), never on
+/// a forward.
+#[derive(Default)]
+pub struct BurnMeter {
+    cfg: BurnConfig,
+    windows: Mutex<BTreeMap<String, SessionWindow>>,
+}
+
+impl BurnMeter {
+    pub fn new(cfg: BurnConfig) -> BurnMeter {
+        BurnMeter { cfg, windows: Mutex::new(BTreeMap::new()) }
+    }
+
+    pub fn config(&self) -> BurnConfig {
+        self.cfg
+    }
+
+    fn burn(&self, shed: u64, offered: u64) -> f64 {
+        if offered < self.cfg.min_offered.max(1) {
+            return 0.0;
+        }
+        (shed as f64 / offered as f64) / self.cfg.budget
+    }
+
+    /// Evaluate one session from its cumulative counters.  `served` and
+    /// `shed` must be lifetime totals (the same books `DriveReport`
+    /// keeps); offered = served + shed.
+    pub fn check(&self, session: &str, shed: u64, served: u64) -> BurnReading {
+        let offered = shed + served;
+        let slow = self.burn(shed, offered);
+        let mut windows = self.windows.lock().unwrap_or_else(PoisonError::into_inner);
+        let prev = windows.entry(session.to_string()).or_default();
+        // counters are monotonic per session; a smaller value means the
+        // session was replaced — restart the window
+        let (d_shed, d_offered) = if shed >= prev.shed && offered >= prev.offered {
+            (shed - prev.shed, offered - prev.offered)
+        } else {
+            (shed, offered)
+        };
+        let fast = self.burn(d_shed, d_offered);
+        let alerting = fast >= 1.0 && slow >= 1.0;
+        prev.shed = shed;
+        prev.offered = offered;
+        prev.burning = alerting;
+        BurnReading { fast, slow, shed, served, alerting }
+    }
+
+    /// Whether the previous `check` left this session in the burning
+    /// state (drives `SloState` transition events).
+    pub fn was_burning(&self, session: &str) -> bool {
+        self.windows
+            .lock()
+            .unwrap_or_else(PoisonError::into_inner)
+            .get(session)
+            .map(|w| w.burning)
+            .unwrap_or(false)
+    }
+
+    /// Forget a closed session's window.
+    pub fn forget(&self, session: &str) {
+        self.windows.lock().unwrap_or_else(PoisonError::into_inner).remove(session);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn under_budget_reads_below_one() {
+        let m = BurnMeter::new(BurnConfig { budget: 0.01, min_offered: 10 });
+        // 1 shed in 1000 offered at a 1% budget: burn 0.1x
+        let r = m.check("s", 1, 999);
+        assert!((r.slow - 0.1).abs() < 1e-12, "slow {}", r.slow);
+        assert!((r.fast - 0.1).abs() < 1e-12, "fast {}", r.fast);
+        assert!(!r.alerting);
+    }
+
+    #[test]
+    fn sustained_overload_alerts_on_both_windows() {
+        let m = BurnMeter::new(BurnConfig { budget: 0.01, min_offered: 10 });
+        // 100 shed of 400 offered: shed fraction 25%, burn 25x
+        let r = m.check("s", 100, 300);
+        assert!(r.fast >= 1.0 && r.slow >= 1.0);
+        assert!(r.alerting);
+        assert_eq!((r.shed, r.served), (100, 300));
+        assert!(m.was_burning("s"));
+    }
+
+    #[test]
+    fn recovery_clears_the_fast_window_first() {
+        let m = BurnMeter::new(BurnConfig { budget: 0.01, min_offered: 10 });
+        assert!(m.check("s", 50, 50).alerting, "overload poll");
+        // next poll: 400 more requests, none shed — fast window clean,
+        // slow window still over budget from history
+        let r = m.check("s", 50, 450);
+        assert_eq!(r.fast, 0.0);
+        assert!(r.slow >= 1.0);
+        assert!(!r.alerting, "one clean window is enough to stop alerting");
+        assert!(!m.was_burning("s"));
+    }
+
+    #[test]
+    fn tiny_windows_do_not_alert() {
+        let m = BurnMeter::new(BurnConfig::default());
+        // 1 of 2 shed is a 50% fraction but far below min_offered
+        let r = m.check("s", 1, 1);
+        assert_eq!(r.fast, 0.0);
+        assert_eq!(r.slow, 0.0);
+        assert!(!r.alerting);
+    }
+
+    #[test]
+    fn sessions_are_tracked_independently_and_forgettable() {
+        let m = BurnMeter::new(BurnConfig { budget: 0.01, min_offered: 10 });
+        m.check("a", 100, 0);
+        let r = m.check("b", 0, 100);
+        assert!(!r.alerting);
+        assert!(m.was_burning("a") && !m.was_burning("b"));
+        m.forget("a");
+        assert!(!m.was_burning("a"));
+        // a replaced session (counters reset) restarts the window
+        let r = m.check("b", 5, 45);
+        assert!(r.fast >= 1.0, "delta window sees the 5-of-{} shed burst", 50);
+    }
+}

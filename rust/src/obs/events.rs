@@ -1,0 +1,342 @@
+//! Structured event log: a bounded MPSC JSON-lines sink.
+//!
+//! Producers (`Gateway`, `Session`, `WeightStore`) call
+//! [`EventSink::emit`] from serving hot paths, so the send side is
+//! lock-free: a sequence-number `fetch_add` plus an `std::sync::mpsc`
+//! `try_send` into a bounded channel.  When the channel is full or the
+//! writer is gone the event is counted in `dropped` and discarded —
+//! telemetry must never block a forward.  A single writer thread
+//! serializes each event through `util::json` (no new deps) and writes
+//! one object per line, flushing whenever the queue momentarily drains
+//! so a tailing reader sees near-real-time output.  Dropping the last
+//! `Arc<EventSink>` closes the channel and joins the writer, so the
+//! file is complete on shutdown.
+
+use std::fs::File;
+use std::io::{BufWriter, Write};
+use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TryRecvError};
+use std::sync::{Arc, Mutex, PoisonError};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use super::Counter;
+use crate::util::json::Json;
+
+/// Bounded queue depth: enough for a burst of sheds during overload,
+/// small enough that a stuck disk cannot hold gigabytes of events.
+const QUEUE_DEPTH: usize = 4096;
+
+/// One typed record in the event log.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Event {
+    /// a session was opened or adopted into the gateway
+    SessionOpen { key: String },
+    /// a session was closed or shut down; `requests` is its lifetime total
+    SessionClose { key: String, requests: u64 },
+    /// the weight store evicted an entry to make room
+    StoreEvict { key: String, bytes: usize },
+    /// the weight store refused an entry that cannot fit
+    StoreReject { key: String, bytes: usize },
+    /// QoS admission shed a request (`reason`: "depth" or "latency")
+    Shed { key: String, reason: &'static str, depth: usize },
+    /// SLO burn state transition (`"ok"` ⇄ `"burning"`)
+    SloState { key: String, from: &'static str, to: &'static str },
+    /// burn-rate alert: both windows are over budget
+    Alert { key: String, fast: f64, slow: f64, shed: u64, served: u64 },
+}
+
+impl Event {
+    /// `kind` discriminator used in the JSON encoding.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            Event::SessionOpen { .. } => "session_open",
+            Event::SessionClose { .. } => "session_close",
+            Event::StoreEvict { .. } => "store_evict",
+            Event::StoreReject { .. } => "store_reject",
+            Event::Shed { .. } => "shed",
+            Event::SloState { .. } => "slo_state",
+            Event::Alert { .. } => "alert",
+        }
+    }
+
+    fn to_json(&self, seq: u64, t_s: f64) -> Json {
+        let mut pairs = vec![
+            ("seq", Json::num(seq as f64)),
+            ("t_s", Json::num(t_s)),
+            ("kind", Json::str(self.kind())),
+        ];
+        match self {
+            Event::SessionOpen { key } => pairs.push(("key", Json::str(key))),
+            Event::SessionClose { key, requests } => {
+                pairs.push(("key", Json::str(key)));
+                pairs.push(("requests", Json::num(*requests as f64)));
+            }
+            Event::StoreEvict { key, bytes } | Event::StoreReject { key, bytes } => {
+                pairs.push(("key", Json::str(key)));
+                pairs.push(("bytes", Json::num(*bytes as f64)));
+            }
+            Event::Shed { key, reason, depth } => {
+                pairs.push(("key", Json::str(key)));
+                pairs.push(("reason", Json::str(reason)));
+                pairs.push(("depth", Json::num(*depth as f64)));
+            }
+            Event::SloState { key, from, to } => {
+                pairs.push(("key", Json::str(key)));
+                pairs.push(("from", Json::str(from)));
+                pairs.push(("to", Json::str(to)));
+            }
+            Event::Alert { key, fast, slow, shed, served } => {
+                pairs.push(("key", Json::str(key)));
+                pairs.push(("fast", Json::num(*fast)));
+                pairs.push(("slow", Json::num(*slow)));
+                pairs.push(("shed", Json::num(*shed as f64)));
+                pairs.push(("served", Json::num(*served as f64)));
+            }
+        }
+        Json::obj(pairs)
+    }
+}
+
+struct Stamped {
+    seq: u64,
+    t_s: f64,
+    event: Event,
+}
+
+/// In-memory capture target for tests (`EventSink::capture`).
+#[derive(Clone, Default)]
+pub struct Captured(Arc<Mutex<Vec<u8>>>);
+
+impl Captured {
+    /// The captured bytes as a string (call after the sink is dropped
+    /// for a complete log).
+    pub fn text(&self) -> String {
+        let buf = self.0.lock().unwrap_or_else(PoisonError::into_inner);
+        String::from_utf8_lossy(&buf).into_owned()
+    }
+
+    /// Parsed JSON lines (panics on malformed output — test-only).
+    pub fn lines(&self) -> Vec<Json> {
+        self.text()
+            .lines()
+            .filter(|l| !l.trim().is_empty())
+            .map(|l| Json::parse(l).expect("event line is valid JSON"))
+            .collect()
+    }
+}
+
+impl Write for Captured {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        self.0.lock().unwrap_or_else(PoisonError::into_inner).extend_from_slice(buf);
+        Ok(buf.len())
+    }
+
+    fn flush(&mut self) -> std::io::Result<()> {
+        Ok(())
+    }
+}
+
+/// The bounded JSON-lines event sink.  Cheap to share as
+/// `Arc<EventSink>`; `emit` never blocks and never locks.
+pub struct EventSink {
+    tx: Option<SyncSender<Stamped>>,
+    seq: AtomicU64,
+    dropped: Counter,
+    start: Instant,
+    worker: Mutex<Option<JoinHandle<()>>>,
+}
+
+impl EventSink {
+    fn spawn(out: Box<dyn Write + Send>) -> EventSink {
+        let (tx, rx) = sync_channel::<Stamped>(QUEUE_DEPTH);
+        let worker = std::thread::Builder::new()
+            .name("obs-events".into())
+            .spawn(move || writer_loop(rx, out))
+            .expect("spawn event writer");
+        EventSink {
+            tx: Some(tx),
+            seq: AtomicU64::new(0),
+            dropped: Counter::new(),
+            start: Instant::now(),
+            worker: Mutex::new(Some(worker)),
+        }
+    }
+
+    /// Sink writing JSON lines to `path` (truncates an existing file).
+    pub fn to_file(path: &Path) -> Result<EventSink> {
+        let f = File::create(path).with_context(|| format!("create {}", path.display()))?;
+        Ok(EventSink::spawn(Box::new(BufWriter::new(f))))
+    }
+
+    /// Sink writing into an in-memory buffer — returns the sink and the
+    /// capture handle (tests and the events smoke lane).
+    pub fn capture() -> (EventSink, Captured) {
+        let cap = Captured::default();
+        (EventSink::spawn(Box::new(cap.clone())), cap)
+    }
+
+    /// Enqueue one event.  Non-blocking: a full queue or a dead writer
+    /// increments `dropped` instead of stalling the caller.
+    pub fn emit(&self, event: Event) {
+        let seq = self.seq.fetch_add(1, Ordering::Relaxed);
+        let t_s = self.start.elapsed().as_secs_f64();
+        if let Some(tx) = &self.tx {
+            if tx.try_send(Stamped { seq, t_s, event }).is_err() {
+                self.dropped.incr();
+            }
+        }
+    }
+
+    /// Events discarded because the queue was full.
+    pub fn dropped(&self) -> u64 {
+        self.dropped.get()
+    }
+
+    /// Events accepted for serialization so far.
+    pub fn emitted(&self) -> u64 {
+        self.seq.load(Ordering::Relaxed) - self.dropped()
+    }
+}
+
+impl Drop for EventSink {
+    fn drop(&mut self) {
+        // closing the channel ends the writer loop; joining it
+        // guarantees the file is flushed and complete
+        self.tx = None;
+        let handle = self.worker.lock().unwrap_or_else(PoisonError::into_inner).take();
+        if let Some(h) = handle {
+            let _ = h.join();
+        }
+    }
+}
+
+fn writer_loop(rx: Receiver<Stamped>, mut out: Box<dyn Write + Send>) {
+    loop {
+        // drain eagerly; when the queue momentarily empties, flush so a
+        // tailing reader sees the log in near real time
+        let msg = match rx.try_recv() {
+            Ok(m) => m,
+            Err(TryRecvError::Empty) => {
+                let _ = out.flush();
+                match rx.recv() {
+                    Ok(m) => m,
+                    Err(_) => break,
+                }
+            }
+            Err(TryRecvError::Disconnected) => break,
+        };
+        let line = msg.event.to_json(msg.seq, msg.t_s).to_string();
+        if writeln!(out, "{line}").is_err() {
+            // sink is broken (disk full, pipe closed): keep draining so
+            // producers don't fill the queue, but stop writing
+            for _ in rx.iter() {}
+            break;
+        }
+    }
+    let _ = out.flush();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn events_serialize_with_seq_kind_and_payload() {
+        let (sink, cap) = EventSink::capture();
+        sink.emit(Event::SessionOpen { key: "mlp@int8".into() });
+        sink.emit(Event::Shed { key: "mlp@int8".into(), reason: "depth", depth: 9 });
+        sink.emit(Event::SessionClose { key: "mlp@int8".into(), requests: 41 });
+        drop(sink);
+
+        let lines = cap.lines();
+        assert_eq!(lines.len(), 3);
+        let kinds: Vec<&str> =
+            lines.iter().map(|l| l.get("kind").and_then(Json::as_str).unwrap()).collect();
+        assert_eq!(kinds, vec!["session_open", "shed", "session_close"]);
+        // seq strictly increasing from 0
+        for (i, l) in lines.iter().enumerate() {
+            assert_eq!(l.get("seq").and_then(Json::as_f64), Some(i as f64));
+            assert!(l.get("t_s").and_then(Json::as_f64).unwrap() >= 0.0);
+        }
+        assert_eq!(lines[1].get("reason").and_then(Json::as_str), Some("depth"));
+        assert_eq!(lines[1].get("depth").and_then(Json::as_f64), Some(9.0));
+        assert_eq!(lines[2].get("requests").and_then(Json::as_f64), Some(41.0));
+    }
+
+    #[test]
+    fn alert_and_store_events_carry_their_books() {
+        let (sink, cap) = EventSink::capture();
+        sink.emit(Event::StoreEvict { key: "mlp@int8/int8".into(), bytes: 1024 });
+        sink.emit(Event::StoreReject { key: "big@f32".into(), bytes: 1 << 30 });
+        sink.emit(Event::SloState { key: "mlp@int8".into(), from: "ok", to: "burning" });
+        sink.emit(Event::Alert {
+            key: "mlp@int8".into(),
+            fast: 2.5,
+            slow: 1.5,
+            shed: 10,
+            served: 90,
+        });
+        drop(sink);
+
+        let lines = cap.lines();
+        assert_eq!(lines.len(), 4);
+        assert_eq!(lines[0].get("bytes").and_then(Json::as_f64), Some(1024.0));
+        assert_eq!(lines[2].get("to").and_then(Json::as_str), Some("burning"));
+        let alert = &lines[3];
+        assert_eq!(alert.get("kind").and_then(Json::as_str), Some("alert"));
+        assert_eq!(alert.get("fast").and_then(Json::as_f64), Some(2.5));
+        assert_eq!(alert.get("shed").and_then(Json::as_f64), Some(10.0));
+        assert_eq!(alert.get("served").and_then(Json::as_f64), Some(90.0));
+    }
+
+    #[test]
+    fn file_sink_is_complete_after_drop() {
+        let dir = std::env::temp_dir().join("precis_obs_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("events.jsonl");
+        let sink = EventSink::to_file(&path).unwrap();
+        for i in 0..100 {
+            sink.emit(Event::Shed { key: format!("s{}", i % 3), reason: "latency", depth: i });
+        }
+        assert_eq!(sink.emitted(), 100);
+        assert_eq!(sink.dropped(), 0);
+        drop(sink);
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = text.lines().filter(|l| !l.trim().is_empty()).collect();
+        assert_eq!(lines.len(), 100, "every event lands exactly once");
+        for l in lines {
+            Json::parse(l).expect("valid JSON line");
+        }
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn emit_from_many_threads_keeps_unique_seqs() {
+        let (sink, cap) = EventSink::capture();
+        let sink = Arc::new(sink);
+        let mut handles = Vec::new();
+        for t in 0..4 {
+            let s = Arc::clone(&sink);
+            handles.push(std::thread::spawn(move || {
+                for i in 0..50 {
+                    s.emit(Event::Shed { key: format!("t{t}"), reason: "depth", depth: i });
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        drop(sink);
+        let lines = cap.lines();
+        assert_eq!(lines.len(), 200);
+        let mut seqs: Vec<u64> =
+            lines.iter().map(|l| l.get("seq").and_then(Json::as_f64).unwrap() as u64).collect();
+        seqs.sort_unstable();
+        let want: Vec<u64> = (0..200).collect();
+        assert_eq!(seqs, want, "every seq assigned exactly once");
+    }
+}

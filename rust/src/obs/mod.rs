@@ -1,0 +1,35 @@
+//! Observability: metrics registry, forward profiling, structured
+//! events, and SLO burn-rate alerts (ISSUE 10, ROADMAP item 4).
+//!
+//! Four pieces, one contract:
+//!
+//! * [`Registry`] — named [`Counter`]s, [`Gauge`]s, and log-scale
+//!   latency [`Histogram`]s on relaxed atomics.  Subsystems that
+//!   already own counters (weight store, QoS gates) *adopt* their
+//!   existing cells into the registry, so stats snapshots and the
+//!   registry read the same atomics.
+//! * [`ForwardProfile`] / [`LayerSpan`] — per-layer wall time, executed
+//!   lane, MACs, and clamp counts for one profiled forward
+//!   (`SessionOptions.profile`, `repro eval --profile`).
+//! * [`EventSink`] / [`Event`] — bounded MPSC JSON-lines log
+//!   (`--events-out events.jsonl`) of session, store, shed, and SLO
+//!   lifecycle records.
+//! * [`BurnMeter`] — fast/slow-window error-budget burn from the
+//!   shed/served books; feeds `Alert` events and the
+//!   `GatewayStats::render` burn column.
+//!
+//! The contract (pinned by `tests/obs_contract.rs` and the
+//! `obs_overhead/*` bench section): **zero overhead when off, lock-free
+//! when on**.  Profiling off is byte-identical to a build without this
+//! module; with the registry live, warm forwards still take no lock
+//! (`tests/store_contract.rs`).
+
+pub mod burn;
+pub mod events;
+pub mod profile;
+pub mod registry;
+
+pub use burn::{BurnConfig, BurnMeter, BurnReading};
+pub use events::{Captured, Event, EventSink};
+pub use profile::{ForwardProfile, LayerSpan};
+pub use registry::{Counter, Gauge, Histogram, MetricValue, Registry};

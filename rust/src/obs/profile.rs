@@ -1,0 +1,173 @@
+//! Per-forward span profiling: per-layer wall time, executed lane,
+//! MAC count, and an opt-in activation clamp/saturation counter — the
+//! runtime generalization of `numerics::trace::AccumTrace`'s
+//! `first_saturation` probe, applied to live traffic instead of a
+//! single traced dot product.
+//!
+//! The profiler is strictly opt-in (`SessionOptions.profile`,
+//! `repro eval --profile`).  When off, the engine takes no timestamps,
+//! runs no saturation scans, and produces bit-identical outputs to a
+//! build without this module (pinned by `tests/obs_contract.rs`).
+
+use crate::util::json::Json;
+use crate::util::table::Columns;
+use crate::util::timer::human;
+
+/// One executed layer inside a profiled forward.
+#[derive(Clone, Debug, PartialEq)]
+pub struct LayerSpan {
+    /// layer name from the network spec (e.g. `"c1"`, `"fc"`)
+    pub name: String,
+    /// executed lane label: `"staged"`, `"int16"`, `"int32"`, or
+    /// `"lut"` (the `PackedPlan::label` vocabulary)
+    pub lane: String,
+    /// wall time spent inside the layer's kernel dispatch
+    pub wall_s: f64,
+    /// multiply-accumulates issued: `m * k * n` of the layer's GEMM
+    /// (convolutions count their im2col-equivalent GEMM)
+    pub macs: u64,
+    /// output activations at or beyond the activation format's
+    /// representable magnitude — 0 when the layer output is f32-exact
+    pub clamps: u64,
+}
+
+/// The aggregate of one profiled forward.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct ForwardProfile {
+    pub layers: Vec<LayerSpan>,
+    /// end-to-end wall time of the forward (covers layer spans plus
+    /// inter-layer glue; per-layer times sum to ~this)
+    pub total_s: f64,
+    /// batch size the forward executed with
+    pub batch: usize,
+}
+
+impl ForwardProfile {
+    /// Sum of per-layer wall times (≤ `total_s` up to glue and timer
+    /// granularity).
+    pub fn layers_total_s(&self) -> f64 {
+        self.layers.iter().map(|l| l.wall_s).sum()
+    }
+
+    pub fn total_macs(&self) -> u64 {
+        self.layers.iter().map(|l| l.macs).sum()
+    }
+
+    pub fn total_clamps(&self) -> u64 {
+        self.layers.iter().map(|l| l.clamps).sum()
+    }
+
+    /// Per-layer table: name, lane, wall, share of layer time, MACs,
+    /// effective GMAC/s, clamped activations.
+    pub fn render(&self) -> String {
+        let cols = Columns::new(&[16, 8, 10, 7, 12, 9, 8]);
+        let mut out = String::new();
+        out.push_str(&cols.row(&["layer", "lane", "wall", "share", "macs", "gmac/s", "clamps"]));
+        out.push('\n');
+        let span_total = self.layers_total_s();
+        for l in &self.layers {
+            let share = if span_total > 0.0 { 100.0 * l.wall_s / span_total } else { 0.0 };
+            let gmacs = if l.wall_s > 0.0 { l.macs as f64 / l.wall_s / 1e9 } else { 0.0 };
+            out.push_str(&cols.row(&[
+                l.name.clone(),
+                l.lane.clone(),
+                human(l.wall_s),
+                format!("{share:.1}%"),
+                l.macs.to_string(),
+                format!("{gmacs:.2}"),
+                l.clamps.to_string(),
+            ]));
+            out.push('\n');
+        }
+        out.push_str(&format!(
+            "forward total: {} (layers {}, batch {}, {} MACs, {} clamped)\n",
+            human(self.total_s),
+            human(span_total),
+            self.batch,
+            self.total_macs(),
+            self.total_clamps(),
+        ));
+        out
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("batch", Json::num(self.batch as f64)),
+            ("total_s", Json::num(self.total_s)),
+            (
+                "layers",
+                Json::arr(
+                    self.layers
+                        .iter()
+                        .map(|l| {
+                            Json::obj(vec![
+                                ("name", Json::str(&l.name)),
+                                ("lane", Json::str(&l.lane)),
+                                ("wall_s", Json::num(l.wall_s)),
+                                ("macs", Json::num(l.macs as f64)),
+                                ("clamps", Json::num(l.clamps as f64)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fixture() -> ForwardProfile {
+        ForwardProfile {
+            layers: vec![
+                LayerSpan {
+                    name: "c1".into(),
+                    lane: "int16".into(),
+                    wall_s: 3e-3,
+                    macs: 1_000_000,
+                    clamps: 2,
+                },
+                LayerSpan {
+                    name: "fc".into(),
+                    lane: "staged".into(),
+                    wall_s: 1e-3,
+                    macs: 250_000,
+                    clamps: 0,
+                },
+            ],
+            total_s: 4.2e-3,
+            batch: 8,
+        }
+    }
+
+    #[test]
+    fn totals_aggregate_over_layers() {
+        let p = fixture();
+        assert!((p.layers_total_s() - 4e-3).abs() < 1e-12);
+        assert_eq!(p.total_macs(), 1_250_000);
+        assert_eq!(p.total_clamps(), 2);
+    }
+
+    #[test]
+    fn render_lists_layers_lanes_and_totals() {
+        let r = fixture().render();
+        assert!(r.contains("layer"), "header:\n{r}");
+        assert!(r.contains("int16") && r.contains("staged"), "lanes:\n{r}");
+        assert!(r.contains("75.0%"), "c1 holds 3/4 of layer time:\n{r}");
+        assert!(r.contains("batch 8"), "totals:\n{r}");
+        assert!(r.contains("2 clamped"), "clamp total:\n{r}");
+    }
+
+    #[test]
+    fn json_roundtrips_through_util_json() {
+        let doc = fixture().to_json().to_string();
+        let parsed = Json::parse(&doc).expect("valid json");
+        let layers = parsed.get("layers").and_then(Json::as_arr).expect("layers");
+        assert_eq!(layers.len(), 2);
+        assert_eq!(layers[0].get("lane").and_then(Json::as_str), Some("int16"));
+        assert_eq!(layers[1].get("name").and_then(Json::as_str), Some("fc"));
+        assert_eq!(parsed.get("batch").and_then(Json::as_f64), Some(8.0));
+    }
+}

@@ -1,0 +1,444 @@
+//! The lock-free metrics registry: named counters, gauges, and
+//! fixed-bucket log-scale latency histograms.
+//!
+//! Hot-path contract (DESIGN.md §Observability): every mutation —
+//! [`Counter::add`], [`Gauge::set`], [`Histogram::record`] — is a
+//! handful of `Relaxed` atomic operations on pre-allocated cells.  The
+//! registry's own map IS behind a mutex, but it is touched only at
+//! registration and snapshot time: callers prefetch `Arc` handles once
+//! (session open, store construction) and the serving hot path never
+//! sees the lock.  [`Registry::adopt_counter`] lets a subsystem that
+//! already owns its counters (the weight store, the QoS gates) register
+//! the SAME cells instead of mirroring them, so the stats surfaces and
+//! the registry are views over one set of atomics by construction.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, PoisonError};
+
+/// A monotonically increasing relaxed-atomic counter.
+#[derive(Debug, Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub const fn new() -> Counter {
+        Counter(AtomicU64::new(0))
+    }
+
+    #[inline]
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn incr(&self) {
+        self.add(1);
+    }
+
+    #[inline]
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// A last-value-wins f64 cell (stored as bits, like
+/// `QosGate::record_p99_ms`).
+#[derive(Debug, Default)]
+pub struct Gauge(AtomicU64);
+
+impl Gauge {
+    pub const fn new() -> Gauge {
+        Gauge(AtomicU64::new(0))
+    }
+
+    #[inline]
+    pub fn set(&self, v: f64) {
+        self.0.store(v.to_bits(), Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.0.load(Ordering::Relaxed))
+    }
+}
+
+/// Sub-buckets per power-of-two octave.  8 keeps any bucket's relative
+/// width at 1/8 of its lower bound — a p99 read off the histogram is
+/// within ~12.5% of the exact order statistic by construction.
+pub const HIST_SUB_BUCKETS: u64 = 8;
+/// Octaves covered above the 1ns floor: 2^40 ns ≈ 18 minutes, far past
+/// any latency this system reports; beyond that is one overflow bucket.
+pub const HIST_OCTAVES: usize = 40;
+/// Total buckets: the `< 1ns` floor bucket, `HIST_OCTAVES * 8` log-scale
+/// buckets, and the overflow bucket.
+pub const HIST_BUCKETS: usize = 1 + HIST_OCTAVES * HIST_SUB_BUCKETS as usize + 1;
+
+/// Fixed-bucket log-scale latency histogram over seconds.
+///
+/// Values are mapped to whole nanoseconds, then to `(octave, sub)`
+/// where `octave = floor(log2(ns))` and the octave is split into
+/// [`HIST_SUB_BUCKETS`] linear sub-buckets (the HdrHistogram layout).
+/// The index math is pure integer arithmetic, so bucket boundaries are
+/// EXACT — `bounds_s(bucket_index(v))` always brackets `v` — and a
+/// merge is bucket-wise count addition (associative and commutative).
+#[derive(Debug)]
+pub struct Histogram {
+    buckets: [AtomicU64; HIST_BUCKETS],
+    count: Counter,
+    /// total recorded time in whole nanoseconds (throughput/mean views)
+    sum_ns: Counter,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Histogram {
+        Histogram {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            count: Counter::new(),
+            sum_ns: Counter::new(),
+        }
+    }
+
+    /// The bucket index for a duration in seconds.  Non-finite and
+    /// negative inputs land in the floor bucket (they carry no
+    /// duration; see `util::timer::human`).
+    pub fn bucket_index(seconds: f64) -> usize {
+        if !seconds.is_finite() || seconds <= 0.0 {
+            return 0;
+        }
+        let ns = (seconds * 1e9) as u64;
+        if ns == 0 {
+            return 0;
+        }
+        let octave = 63 - ns.leading_zeros() as u64;
+        if octave >= HIST_OCTAVES as u64 {
+            return HIST_BUCKETS - 1;
+        }
+        // linear split of [2^octave, 2^(octave+1)) into 8 sub-buckets
+        let sub = ((ns - (1u64 << octave)) * HIST_SUB_BUCKETS) >> octave;
+        1 + (octave * HIST_SUB_BUCKETS + sub) as usize
+    }
+
+    /// The `[lo, hi)` bounds of bucket `i`, in seconds.
+    pub fn bounds_s(i: usize) -> (f64, f64) {
+        if i == 0 {
+            return (0.0, 1e-9);
+        }
+        if i >= HIST_BUCKETS - 1 {
+            return ((1u64 << HIST_OCTAVES) as f64 * 1e-9, f64::INFINITY);
+        }
+        let k = (i - 1) as u64;
+        let (octave, sub) = (k / HIST_SUB_BUCKETS, k % HIST_SUB_BUCKETS);
+        let base = (1u64 << octave) as f64;
+        let step = base / HIST_SUB_BUCKETS as f64;
+        let lo = base + sub as f64 * step;
+        ((lo) * 1e-9, (lo + step) * 1e-9)
+    }
+
+    #[inline]
+    pub fn record(&self, seconds: f64) {
+        self.buckets[Self::bucket_index(seconds)].fetch_add(1, Ordering::Relaxed);
+        self.count.incr();
+        if seconds.is_finite() && seconds > 0.0 {
+            self.sum_ns.add((seconds * 1e9) as u64);
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.get()
+    }
+
+    /// Mean recorded duration in seconds (0 when empty).
+    pub fn mean_s(&self) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            0.0
+        } else {
+            self.sum_ns.get() as f64 * 1e-9 / n as f64
+        }
+    }
+
+    /// Nearest-rank quantile over the bucket counts: the midpoint of
+    /// the bucket holding the element at rank `round((count-1) * q)` —
+    /// the same rank rule as [`crate::bench_harness::percentile`], so
+    /// the two agree within one bucket width on any sample set.
+    pub fn quantile(&self, q: f64) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            return 0.0;
+        }
+        let rank = ((n - 1) as f64 * q.clamp(0.0, 1.0)).round() as u64;
+        let mut seen = 0u64;
+        for i in 0..HIST_BUCKETS {
+            seen += self.buckets[i].load(Ordering::Relaxed);
+            if seen > rank {
+                let (lo, hi) = Self::bounds_s(i);
+                // the overflow bucket has no finite midpoint
+                return if hi.is_finite() { (lo + hi) / 2.0 } else { lo };
+            }
+        }
+        // counts raced upward between count() and the scan: the last
+        // populated bucket is still the right answer
+        Self::bounds_s(HIST_BUCKETS - 1).0
+    }
+
+    /// Fold another histogram's counts into this one (bucket-wise
+    /// addition — associative, commutative, identity = empty).
+    pub fn merge_from(&self, other: &Histogram) {
+        for i in 0..HIST_BUCKETS {
+            let n = other.buckets[i].load(Ordering::Relaxed);
+            if n > 0 {
+                self.buckets[i].fetch_add(n, Ordering::Relaxed);
+            }
+        }
+        self.count.add(other.count());
+        self.sum_ns.add(other.sum_ns.get());
+    }
+
+    /// Raw bucket counts (tests, exporters).
+    pub fn bucket_counts(&self) -> Vec<u64> {
+        self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect()
+    }
+}
+
+/// A point-in-time reading of one metric.
+#[derive(Clone, Debug, PartialEq)]
+pub enum MetricValue {
+    Counter(u64),
+    Gauge(f64),
+    /// (count, mean_s, p50_s, p99_s)
+    Histogram { count: u64, mean_s: f64, p50_s: f64, p99_s: f64 },
+}
+
+#[derive(Default)]
+struct Inner {
+    counters: BTreeMap<String, Arc<Counter>>,
+    gauges: BTreeMap<String, Arc<Gauge>>,
+    histograms: BTreeMap<String, Arc<Histogram>>,
+}
+
+/// The named-metric registry.  Registration and snapshots lock; the
+/// returned `Arc` handles never do.
+#[derive(Default)]
+pub struct Registry {
+    inner: Mutex<Inner>,
+}
+
+impl Registry {
+    pub fn new() -> Registry {
+        Registry::default()
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, Inner> {
+        self.inner.lock().unwrap_or_else(PoisonError::into_inner)
+    }
+
+    /// Get-or-create: idempotent by name, so re-registration under the
+    /// same name hands back the SAME cell.
+    pub fn counter(&self, name: &str) -> Arc<Counter> {
+        self.lock().counters.entry(name.to_string()).or_default().clone()
+    }
+
+    /// Register an EXISTING counter cell under `name` — the adoption
+    /// path for subsystems that already own their atomics (store,
+    /// gates).  If the name is taken the incumbent wins and is
+    /// returned, keeping adoption idempotent.
+    pub fn adopt_counter(&self, name: &str, cell: &Arc<Counter>) -> Arc<Counter> {
+        self.lock().counters.entry(name.to_string()).or_insert_with(|| cell.clone()).clone()
+    }
+
+    pub fn gauge(&self, name: &str) -> Arc<Gauge> {
+        self.lock().gauges.entry(name.to_string()).or_default().clone()
+    }
+
+    pub fn histogram(&self, name: &str) -> Arc<Histogram> {
+        self.lock().histograms.entry(name.to_string()).or_default().clone()
+    }
+
+    /// Read every registered metric, sorted by name.
+    pub fn snapshot(&self) -> Vec<(String, MetricValue)> {
+        let g = self.lock();
+        let mut out: Vec<(String, MetricValue)> = Vec::new();
+        for (k, c) in &g.counters {
+            out.push((k.clone(), MetricValue::Counter(c.get())));
+        }
+        for (k, v) in &g.gauges {
+            out.push((k.clone(), MetricValue::Gauge(v.get())));
+        }
+        for (k, h) in &g.histograms {
+            out.push((
+                k.clone(),
+                MetricValue::Histogram {
+                    count: h.count(),
+                    mean_s: h.mean_s(),
+                    p50_s: h.quantile(0.5),
+                    p99_s: h.quantile(0.99),
+                },
+            ));
+        }
+        out.sort_by(|a, b| a.0.cmp(&b.0));
+        out
+    }
+
+    /// The counter's current value, if registered (stats views).
+    pub fn counter_value(&self, name: &str) -> Option<u64> {
+        self.lock().counters.get(name).map(|c| c.get())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bench_harness::percentile;
+
+    #[test]
+    fn counters_and_gauges_read_back() {
+        let reg = Registry::new();
+        let c = reg.counter("store/hits");
+        c.add(3);
+        c.incr();
+        assert_eq!(reg.counter("store/hits").get(), 4, "same cell by name");
+        assert_eq!(reg.counter_value("store/hits"), Some(4));
+        assert_eq!(reg.counter_value("absent"), None);
+        let g = reg.gauge("qos/p99_ms");
+        g.set(12.5);
+        assert_eq!(reg.gauge("qos/p99_ms").get(), 12.5);
+    }
+
+    #[test]
+    fn adopt_counter_shares_the_cell_and_is_idempotent() {
+        let reg = Registry::new();
+        let owned = Arc::new(Counter::new());
+        let adopted = reg.adopt_counter("store/misses", &owned);
+        assert!(Arc::ptr_eq(&owned, &adopted));
+        owned.add(7);
+        assert_eq!(reg.counter_value("store/misses"), Some(7), "one set of atomics");
+        // a second adoption (or a plain counter() lookup) keeps the
+        // incumbent cell
+        let other = Arc::new(Counter::new());
+        assert!(Arc::ptr_eq(&reg.adopt_counter("store/misses", &other), &owned));
+        assert!(Arc::ptr_eq(&reg.counter("store/misses"), &owned));
+    }
+
+    /// ISSUE 10 satellite: bucket-boundary exactness.  For every bucket
+    /// the returned bounds bracket exactly the values that map to it —
+    /// checked at and adjacent to each boundary in integer nanoseconds.
+    #[test]
+    fn histogram_bucket_boundaries_are_exact() {
+        for i in 1..HIST_BUCKETS - 1 {
+            let (lo, hi) = Histogram::bounds_s(i);
+            let (lo_ns, hi_ns) = (lo * 1e9, hi * 1e9);
+            // the lower bound is IN the bucket, one ns below is not
+            assert_eq!(Histogram::bucket_index(lo_ns * 1e-9), i, "lo of {i}");
+            assert_eq!(
+                Histogram::bucket_index((lo_ns - 1.0) * 1e-9),
+                i - 1,
+                "lo-1ns of {i} (lo = {lo_ns}ns)"
+            );
+            // the upper bound is the NEXT bucket's lower bound
+            assert_eq!(Histogram::bucket_index(hi_ns * 1e-9), i + 1, "hi of {i}");
+        }
+        // floor and overflow
+        assert_eq!(Histogram::bucket_index(0.0), 0);
+        assert_eq!(Histogram::bucket_index(-1.0), 0);
+        assert_eq!(Histogram::bucket_index(f64::NAN), 0);
+        assert_eq!(Histogram::bucket_index(0.4e-9), 0);
+        assert_eq!(Histogram::bucket_index(1e9), HIST_BUCKETS - 1);
+        let (lo, hi) = Histogram::bounds_s(HIST_BUCKETS - 1);
+        assert_eq!(lo, (1u64 << HIST_OCTAVES) as f64 * 1e-9);
+        assert!(hi.is_infinite());
+    }
+
+    /// ISSUE 10 satellite: merge associativity — (a ⊕ b) ⊕ c and
+    /// a ⊕ (b ⊕ c) produce identical bucket counts, sums, and counts.
+    #[test]
+    fn histogram_merge_is_associative() {
+        let seqs: [&[f64]; 3] = [
+            &[1e-6, 2e-6, 3e-3],
+            &[5e-9, 0.5, 0.25, 1e-4],
+            &[2e-3, 2e-3, 7.0],
+        ];
+        let fill = |vals: &[f64]| {
+            let h = Histogram::new();
+            for &v in vals {
+                h.record(v);
+            }
+            h
+        };
+        let left = fill(&[]);
+        let ab = fill(&[]);
+        ab.merge_from(&fill(seqs[0]));
+        ab.merge_from(&fill(seqs[1]));
+        left.merge_from(&ab);
+        left.merge_from(&fill(seqs[2]));
+
+        let right = fill(&[]);
+        let bc = fill(&[]);
+        bc.merge_from(&fill(seqs[1]));
+        bc.merge_from(&fill(seqs[2]));
+        right.merge_from(&fill(seqs[0]));
+        right.merge_from(&bc);
+
+        assert_eq!(left.bucket_counts(), right.bucket_counts());
+        assert_eq!(left.count(), right.count());
+        assert_eq!(left.mean_s(), right.mean_s());
+    }
+
+    /// ISSUE 10 satellite: histogram-derived p50/p99 agree with
+    /// `bench_harness::percentile`'s nearest-rank statistic within one
+    /// bucket width, on synthetic sequences spanning several octaves.
+    #[test]
+    fn histogram_quantiles_agree_with_nearest_rank_within_a_bucket() {
+        let sequences: Vec<Vec<f64>> = vec![
+            (1..=200).map(|i| i as f64 * 1e-4).collect(),
+            (1..=50).map(|i| 1e-6 * 1.3f64.powi(i)).collect(),
+            vec![3e-3; 100],
+            (1..=10).map(|i| i as f64 * 1e-2).collect(),
+        ];
+        for seq in sequences {
+            let h = Histogram::new();
+            for &v in &seq {
+                h.record(v);
+            }
+            let mut sorted = seq.clone();
+            sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            for q in [0.5, 0.99] {
+                let exact = percentile(&sorted, q);
+                let approx = h.quantile(q);
+                let (lo, hi) = Histogram::bounds_s(Histogram::bucket_index(exact));
+                let width = hi - lo;
+                assert!(
+                    (approx - exact).abs() <= width,
+                    "q={q}: |{approx} - {exact}| > bucket width {width} (n={})",
+                    seq.len()
+                );
+            }
+            assert_eq!(h.count(), seq.len() as u64);
+        }
+    }
+
+    #[test]
+    fn snapshot_lists_every_metric_sorted() {
+        let reg = Registry::new();
+        reg.counter("b/count").add(2);
+        reg.gauge("a/gauge").set(1.5);
+        let h = reg.histogram("c/lat");
+        h.record(1e-3);
+        let snap = reg.snapshot();
+        let names: Vec<&str> = snap.iter().map(|(n, _)| n.as_str()).collect();
+        assert_eq!(names, vec!["a/gauge", "b/count", "c/lat"]);
+        match &snap[2].1 {
+            MetricValue::Histogram { count, p50_s, .. } => {
+                assert_eq!(*count, 1);
+                let (lo, hi) = Histogram::bounds_s(Histogram::bucket_index(1e-3));
+                assert!(*p50_s >= lo && *p50_s <= hi);
+            }
+            v => panic!("expected a histogram, got {v:?}"),
+        }
+    }
+}

@@ -16,11 +16,13 @@
 
 use std::path::{Path, PathBuf};
 use std::sync::Arc;
+use std::time::Instant;
 
 use anyhow::{bail, Result};
 
 use crate::formats::{Format, PrecisionSpec};
 use crate::nn::{Engine, Network, QuantTable};
+use crate::obs::ForwardProfile;
 use crate::store::{StoreStats, WeightStore};
 use crate::tensor::Tensor;
 
@@ -61,6 +63,18 @@ pub trait Backend {
     /// weights host-side (the AOT/PJRT executables hold weights
     /// on-device).
     fn store_stats(&self) -> Option<StoreStats> {
+        None
+    }
+
+    /// Toggle per-layer span profiling for subsequent forwards
+    /// (`SessionOptions.profile`; DESIGN.md §Observability).  Default is
+    /// a no-op: backends without a profiler stay unprofiled and return
+    /// `None` from [`Backend::take_profile`].
+    fn set_profiling(&mut self, _on: bool) {}
+
+    /// The [`ForwardProfile`] of the most recent profiled forward, if
+    /// profiling is on and a forward has run since the last take.
+    fn take_profile(&mut self) -> Option<ForwardProfile> {
         None
     }
 }
@@ -133,6 +147,12 @@ pub struct NativeBackend {
     /// pre-existing behaviour.  Bit-identical either way — the flag
     /// trades weight-memory traffic, never numerics.
     packed_exec: bool,
+    /// per-layer span profiling (`obs`); off by default and free when
+    /// off — `run_spec` takes no timestamps and the engine records no
+    /// spans
+    profiling: bool,
+    /// the profile of the last profiled forward, until taken
+    last_profile: Option<ForwardProfile>,
 }
 
 impl NativeBackend {
@@ -145,7 +165,22 @@ impl NativeBackend {
 
     /// A backend staging from a shared [`WeightStore`].
     pub fn with_store(net: Arc<Network>, store: Arc<WeightStore>) -> NativeBackend {
-        NativeBackend { net, engine: Engine::new(), table: None, store, packed_exec: false }
+        NativeBackend {
+            net,
+            engine: Engine::new(),
+            table: None,
+            store,
+            packed_exec: false,
+            profiling: false,
+            last_profile: None,
+        }
+    }
+
+    /// Builder: enable per-layer span profiling (`repro eval --profile`
+    /// builds its profiled backend this way).
+    pub fn with_profiling(mut self, on: bool) -> NativeBackend {
+        Backend::set_profiling(&mut self, on);
+        self
     }
 
     /// Builder: enable (or disable) packed-domain execution for every
@@ -207,7 +242,17 @@ impl Backend for NativeBackend {
     fn run_spec(&mut self, x: &Tensor, spec: &PrecisionSpec) -> Result<Tensor> {
         self.ensure_table(spec)?;
         let (_, table) = self.table.as_ref().expect("table resolved above");
-        Ok(self.engine.forward(&self.net, x, table, Some(&self.store)))
+        if !self.profiling {
+            return Ok(self.engine.forward(&self.net, x, table, Some(&self.store)));
+        }
+        let t0 = Instant::now();
+        let out = self.engine.forward(&self.net, x, table, Some(&self.store));
+        self.last_profile = Some(ForwardProfile {
+            layers: self.engine.take_spans(),
+            total_s: t0.elapsed().as_secs_f64(),
+            batch: x.shape()[0],
+        });
+        Ok(out)
     }
 
     fn network(&self) -> &Arc<Network> {
@@ -220,6 +265,18 @@ impl Backend for NativeBackend {
 
     fn store_stats(&self) -> Option<StoreStats> {
         Some(self.store.stats())
+    }
+
+    fn set_profiling(&mut self, on: bool) {
+        self.profiling = on;
+        self.engine.set_profiling(on);
+        if !on {
+            self.last_profile = None;
+        }
+    }
+
+    fn take_profile(&mut self) -> Option<ForwardProfile> {
+        self.last_profile.take()
     }
 }
 

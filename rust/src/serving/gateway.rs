@@ -15,16 +15,18 @@
 
 use std::collections::btree_map::Entry;
 use std::collections::BTreeMap;
-use std::sync::{Arc, PoisonError, RwLock};
+use std::sync::{Arc, OnceLock, PoisonError, RwLock};
 
 use anyhow::{anyhow, Result};
 
 use crate::formats::PrecisionSpec;
 use crate::nn::Zoo;
+use crate::obs::{BurnConfig, BurnMeter, Event, EventSink, Registry};
 use crate::serving::backend::BackendKind;
 use crate::serving::qos::{QosScheduler, SloTarget};
 use crate::serving::session::{Session, SessionKey, SessionOptions, SessionStats};
 use crate::store::{StoreStats, WeightStore};
+use crate::util::table::Columns;
 
 /// Aggregate serving telemetry: one [`SessionStats`] per hosted
 /// session, keyed and sorted by [`SessionKey`].  Like the per-session
@@ -67,14 +69,17 @@ impl GatewayStats {
             .or_else(|| self.sessions.iter().find_map(|(_, s)| s.store))
     }
 
-    /// Fixed-width table for CLI/reporting output.  The `store h/m`
-    /// column shows the shared store's hit/miss totals as seen at each
-    /// session's last flushed batch; the footer line is
-    /// [`GatewayStats::store`] (live at snapshot time for
-    /// gateway-opened sessions).
+    /// Fixed-width table for CLI/reporting output, built on the shared
+    /// [`Columns`] row builder.  The `store h/m` column shows the
+    /// shared store's hit/miss totals as seen at each session's last
+    /// flushed batch; the footer line is [`GatewayStats::store`] (live
+    /// at snapshot time for gateway-opened sessions).  The trailing
+    /// `burn` column is the slow-window SLO error-budget burn multiple
+    /// (`-` until something is shed, `!`-suffixed while the burn alert
+    /// fires — DESIGN.md §Observability).
     pub fn render(&self) -> String {
-        let mut out = format!(
-            "{:<32} {:>8} {:>6} {:>9} {:>8} {:>9} {:>7} {:>10} {:>10} {:>6} {:>6} {:>12}\n",
+        let cols = Columns::new(&[32, 8, 6, 9, 8, 9, 7, 10, 10, 6, 6, 12, 7]);
+        let mut out = cols.row(&[
             "session",
             "backend",
             "exec",
@@ -86,29 +91,37 @@ impl GatewayStats {
             "p99_queue",
             "depth",
             "shed",
-            "store h/m"
-        );
+            "store h/m",
+            "burn",
+        ]);
+        out.push('\n');
         for (key, s) in &self.sessions {
             let slots = s.requests + s.padded_slots;
             let store = match &s.store {
                 Some(st) => format!("{}/{}", st.hits, st.misses),
                 None => "-".to_string(),
             };
-            out.push_str(&format!(
-                "{:<32} {:>8} {:>6} {:>9} {:>8} {:>9.1} {:>6.1}% {:>8.2}ms {:>8.2}ms {:>6} {:>6} {:>12}\n",
+            let burn = if s.shed == 0 && !s.alerting {
+                "-".to_string()
+            } else {
+                format!("{:.1}x{}", s.burn, if s.alerting { "!" } else { "" })
+            };
+            out.push_str(&cols.row(&[
                 key.to_string(),
-                s.backend,
-                if s.packed_exec { "packed" } else { "staged" },
-                s.requests,
-                s.batches,
-                s.requests as f64 / s.batches.max(1) as f64,
-                100.0 * s.padded_slots as f64 / slots.max(1) as f64,
-                s.p50_queue_ms,
-                s.p99_queue_ms,
-                s.depth,
-                s.shed,
+                s.backend.clone(),
+                (if s.packed_exec { "packed" } else { "staged" }).to_string(),
+                s.requests.to_string(),
+                s.batches.to_string(),
+                format!("{:.1}", s.requests as f64 / s.batches.max(1) as f64),
+                format!("{:.1}%", 100.0 * s.padded_slots as f64 / slots.max(1) as f64),
+                format!("{:.2}ms", s.p50_queue_ms),
+                format!("{:.2}ms", s.p99_queue_ms),
+                s.depth.to_string(),
+                s.shed.to_string(),
                 store,
-            ));
+                burn,
+            ]));
+            out.push('\n');
         }
         if let Some(st) = self.store() {
             out.push_str(&format!("weight store: {}\n", st.render()));
@@ -133,6 +146,18 @@ pub struct Gateway {
     /// SLO-headroom order instead of free-running (DESIGN.md §Serving
     /// QoS).  `None` (the default) leaves dispatchers unthrottled.
     sched: Option<Arc<QosScheduler>>,
+    /// ONE metrics registry shared by everything this gateway hosts:
+    /// the store and every session register their existing atomic
+    /// cells into it at open time, so the registry is a VIEW over the
+    /// counters the stats surfaces already read, not a mirror
+    /// (DESIGN.md §Observability)
+    registry: Arc<Registry>,
+    /// structured event log ([`Gateway::with_events`]); fanned out to
+    /// the store and every session, which each hold their own `Arc`
+    events: OnceLock<Arc<EventSink>>,
+    /// per-session SLO error-budget burn tracking, evaluated on the
+    /// stats path (never on a forward)
+    burn: BurnMeter,
     sessions: RwLock<BTreeMap<SessionKey, Arc<Session>>>,
 }
 
@@ -141,12 +166,18 @@ impl Gateway {
     /// on `kind` backends.
     pub fn new(zoo: Zoo, kind: BackendKind) -> Gateway {
         let opts = SessionOptions::default();
+        let store = opts.build_store();
+        let registry = Arc::new(Registry::new());
+        store.register_into(&registry);
         Gateway {
             zoo: Some(zoo),
             kind,
-            store: opts.build_store(),
+            store,
             sched: build_scheduler(&opts),
             opts,
+            registry,
+            events: OnceLock::new(),
+            burn: BurnMeter::new(BurnConfig::default()),
             sessions: RwLock::new(BTreeMap::new()),
         }
     }
@@ -155,26 +186,56 @@ impl Gateway {
     /// hosted (custom backends, tests).
     pub fn empty() -> Gateway {
         let opts = SessionOptions::default();
+        let store = opts.build_store();
+        let registry = Arc::new(Registry::new());
+        store.register_into(&registry);
         Gateway {
             zoo: None,
             kind: BackendKind::Native,
-            store: opts.build_store(),
+            store,
             sched: build_scheduler(&opts),
             opts,
+            registry,
+            events: OnceLock::new(),
+            burn: BurnMeter::new(BurnConfig::default()),
             sessions: RwLock::new(BTreeMap::new()),
         }
     }
 
     /// Set the batching options used by subsequently opened sessions.
     /// Rebuilds the shared weight store from `opts.weight_budget`
-    /// (`--weight-budget`) and the priority scheduler from
-    /// `opts.qos_slots` (`--qos-slots`), so call it before opening
-    /// sessions.
+    /// (`--weight-budget`), the priority scheduler from `opts.qos_slots`
+    /// (`--qos-slots`), and the metrics registry (so the registry's
+    /// `store/*` names track the NEW store's cells) — call it before
+    /// opening sessions.
     pub fn with_options(mut self, opts: SessionOptions) -> Gateway {
         self.opts = opts;
         self.store = opts.build_store();
         self.sched = build_scheduler(&opts);
+        self.registry = Arc::new(Registry::new());
+        self.store.register_into(&self.registry);
         self
+    }
+
+    /// Attach a structured event log (`--events-out`): session
+    /// open/close, sheds, store evict/reject, SLO state transitions and
+    /// burn alerts all flow into `sink`.  Set-once — call before
+    /// opening sessions; a second call is ignored.
+    pub fn with_events(self, sink: Arc<EventSink>) -> Gateway {
+        if self.events.set(sink.clone()).is_ok() {
+            self.store.set_events(sink.clone());
+            for session in self.read_lock().values() {
+                session.set_events(sink.clone());
+            }
+        }
+        self
+    }
+
+    /// The gateway-wide metrics registry: live named views over the
+    /// store's and every hosted session's counters and latency
+    /// histograms.
+    pub fn registry(&self) -> &Arc<Registry> {
+        &self.registry
     }
 
     /// The gateway-wide priority scheduler, when `qos_slots > 0`.
@@ -237,7 +298,12 @@ impl Gateway {
         let mut duplicate = None;
         match map.entry(key.clone()) {
             Entry::Vacant(v) => {
-                v.insert(Arc::new(session));
+                let session = v.insert(Arc::new(session));
+                session.register_obs(&self.registry);
+                if let Some(sink) = self.events.get() {
+                    session.set_events(sink.clone());
+                    sink.emit(Event::SessionOpen { key: key.to_string() });
+                }
             }
             Entry::Occupied(_) => duplicate = Some(session),
         }
@@ -258,10 +324,18 @@ impl Gateway {
     /// once its in-flight requests drain.
     pub fn adopt(&self, session: Session) -> SessionKey {
         let key = session.key().clone();
+        session.register_obs(&self.registry);
+        if let Some(sink) = self.events.get() {
+            session.set_events(sink.clone());
+            sink.emit(Event::SessionOpen { key: key.to_string() });
+        }
         // bind the displaced session so the write-guard temporary is
         // released before the old session drops (its Drop may join a
         // dispatcher draining in-flight requests)
         let displaced = self.write_lock().insert(key.clone(), Arc::new(session));
+        if let (Some(d), Some(sink)) = (&displaced, self.events.get()) {
+            sink.emit(Event::SessionClose { key: key.to_string(), requests: d.stats().requests });
+        }
         drop(displaced);
         key
     }
@@ -273,11 +347,16 @@ impl Gateway {
     /// alive until they drop it.
     pub fn close(&self, key: &SessionKey) -> Option<SessionStats> {
         let session = self.write_lock().remove(key)?;
-        Some(match Arc::try_unwrap(session) {
+        let stats = match Arc::try_unwrap(session) {
             Ok(s) => s.shutdown(),
             // other holders remain: snapshot now, they drain it later
             Err(arc) => arc.stats(),
-        })
+        };
+        if let Some(sink) = self.events.get() {
+            sink.emit(Event::SessionClose { key: key.to_string(), requests: stats.requests });
+        }
+        self.burn.forget(&key.to_string());
+        Some(stats)
     }
 
     /// The hosted session for `key`, if any.
@@ -302,11 +381,14 @@ impl Gateway {
     /// Live aggregate telemetry across every hosted session, plus a
     /// live snapshot of the gateway-owned weight store.
     pub fn stats(&self) -> GatewayStats {
-        let sessions = self
+        let mut sessions: Vec<(SessionKey, SessionStats)> = self
             .read_lock()
             .iter()
             .map(|(k, s)| (k.clone(), s.stats()))
             .collect();
+        for (key, stats) in &mut sessions {
+            observe_burn(&self.burn, self.events.get(), key, stats);
+        }
         GatewayStats { sessions, store: live_store_snapshot(&self.store) }
     }
 
@@ -323,10 +405,14 @@ impl Gateway {
             .unwrap_or_else(PoisonError::into_inner);
         let mut sessions = Vec::with_capacity(map.len());
         for (key, session) in map {
-            let stats = match Arc::try_unwrap(session) {
+            let mut stats = match Arc::try_unwrap(session) {
                 Ok(s) => s.shutdown(),
                 Err(arc) => arc.stats(),
             };
+            observe_burn(&self.burn, self.events.get(), &key, &mut stats);
+            if let Some(sink) = self.events.get() {
+                sink.emit(Event::SessionClose { key: key.to_string(), requests: stats.requests });
+            }
             sessions.push((key, stats));
         }
         // final store snapshot AFTER every owned session drained
@@ -348,6 +434,40 @@ impl Gateway {
 /// scheduler and free-running dispatchers, the pre-QoS behavior.
 fn build_scheduler(opts: &SessionOptions) -> Option<Arc<QosScheduler>> {
     (opts.qos_slots > 0).then(|| QosScheduler::new(opts.qos_slots))
+}
+
+/// Fill one session's burn-rate fields from the meter and emit SLO
+/// state transitions / alerts into the event log.  Runs on the stats
+/// path only; the inputs are the same lifetime shed/served counters
+/// `DriveReport` books against, so an alert's totals reconcile exactly
+/// with the driver's ledger (`tests/obs_contract.rs`).
+fn observe_burn(
+    burn: &BurnMeter,
+    events: Option<&Arc<EventSink>>,
+    key: &SessionKey,
+    stats: &mut SessionStats,
+) {
+    let label = key.to_string();
+    let was = burn.was_burning(&label);
+    let reading = burn.check(&label, stats.shed, stats.requests);
+    stats.burn = reading.slow;
+    stats.alerting = reading.alerting;
+    if let Some(sink) = events {
+        if reading.alerting != was {
+            let (from, to) =
+                if reading.alerting { ("ok", "burning") } else { ("burning", "ok") };
+            sink.emit(Event::SloState { key: label.clone(), from, to });
+        }
+        if reading.alerting {
+            sink.emit(Event::Alert {
+                key: label,
+                fast: reading.fast,
+                slow: reading.slow,
+                shed: reading.shed,
+                served: reading.served,
+            });
+        }
+    }
 }
 
 /// `Some(stats)` iff the store has seen any staging traffic — keeps
@@ -489,6 +609,116 @@ mod tests {
         assert!(d < s, "depth before shed: {row_a}");
         assert_eq!(stats.total_shed(), 7);
         assert_eq!(stats.total_requests(), 30);
+    }
+
+    /// ISSUE 10 satellite: `GatewayStats::render` is pinned as a golden
+    /// string through the shared [`Columns`] builder — header and data
+    /// rows can never drift apart again, and the new trailing `burn`
+    /// column renders the alert marker.
+    #[test]
+    fn render_golden_table() {
+        let stats = GatewayStats {
+            sessions: vec![(
+                SessionKey::new("lenet5", Format::fixed(8, 8)),
+                SessionStats {
+                    backend: "native".to_string(),
+                    requests: 100,
+                    batches: 25,
+                    p50_queue_ms: 1.0,
+                    p99_queue_ms: 2.5,
+                    depth: 2,
+                    shed: 5,
+                    burn: 4.8,
+                    alerting: true,
+                    ..SessionStats::default()
+                },
+            )],
+            store: None,
+        };
+        let header = "session".to_string()
+            + &" ".repeat(27)
+            + "backend   exec  requests  batches req/batch  padded  p50_queue  \
+               p99_queue  depth   shed    store h/m    burn";
+        let row = "lenet5@fixed:l8r8".to_string()
+            + &" ".repeat(18)
+            + "native staged"
+            + &" ".repeat(7)
+            + "100"
+            + &" ".repeat(7)
+            + "25"
+            + &" ".repeat(7)
+            + "4.0    0.0%     1.00ms     2.50ms      2      5"
+            + &" ".repeat(12)
+            + "-   4.8x!";
+        assert_eq!(stats.render(), format!("{header}\n{row}\n"));
+    }
+
+    /// ISSUE 10 tentpole: the gateway's event log records the session
+    /// lifecycle — adopt emits `session_open`, shutdown emits
+    /// `session_close` carrying the lifetime request count — and the
+    /// gateway registry holds live views of the store and session
+    /// counters.
+    #[test]
+    fn event_log_records_session_lifecycle() {
+        use crate::obs::EventSink;
+        use crate::util::json::Json;
+
+        let (sink, captured) = EventSink::capture();
+        let gw = Gateway::empty().with_events(Arc::new(sink));
+        assert_eq!(gw.registry().counter_value("store/hits"), Some(0));
+        let key = adopt_native(&gw, Format::SINGLE, 2);
+        assert_eq!(
+            gw.registry().counter_value(&format!("session/{key}/shed_depth")),
+            Some(0),
+            "adopt registers the session's gate counters"
+        );
+        let net = tiny_network(8);
+        let px = net.input.iter().product::<usize>();
+        gw.infer(&key, net.eval_x.data()[..px].to_vec()).unwrap();
+        gw.shutdown(); // drops every Arc of the sink; the writer drains
+
+        let lines = captured.lines();
+        let kinds: Vec<&str> =
+            lines.iter().filter_map(|l| l.get("kind").and_then(Json::as_str)).collect();
+        assert_eq!(kinds, vec!["session_open", "session_close"]);
+        assert_eq!(lines[0].get("key").and_then(Json::as_str), Some(key.to_string().as_str()));
+        assert_eq!(lines[1].get("requests").and_then(Json::as_f64), Some(1.0));
+    }
+
+    /// ROADMAP item 4: sustained overload flips a session to `burning`
+    /// (state transition + alert whose books carry the exact shed and
+    /// served counters), and recovery flips it back to `ok`.
+    #[test]
+    fn observe_burn_emits_transitions_and_alerts() {
+        use crate::obs::EventSink;
+        use crate::util::json::Json;
+
+        let burn = BurnMeter::new(BurnConfig { budget: 0.01, min_offered: 10 });
+        let (sink, captured) = EventSink::capture();
+        let sink = Arc::new(sink);
+        let key = SessionKey::new("a", Format::SINGLE);
+
+        // 70 shed of 100 offered at a 1% budget: 70x burn on both windows
+        let mut hot = SessionStats { requests: 30, shed: 70, ..SessionStats::default() };
+        observe_burn(&burn, Some(&sink), &key, &mut hot);
+        assert!(hot.alerting, "overload must alert");
+        assert!(hot.burn >= 1.0, "slow window over budget: {}", hot.burn);
+
+        // 10k clean requests later: fast window clean, slow diluted
+        let mut cool =
+            SessionStats { requests: 10_030, shed: 70, ..SessionStats::default() };
+        observe_burn(&burn, Some(&sink), &key, &mut cool);
+        assert!(!cool.alerting, "recovery must clear the alert");
+        drop(sink);
+
+        let lines = captured.lines();
+        let kinds: Vec<&str> =
+            lines.iter().filter_map(|l| l.get("kind").and_then(Json::as_str)).collect();
+        assert_eq!(kinds, vec!["slo_state", "alert", "slo_state"]);
+        assert_eq!(lines[0].get("to").and_then(Json::as_str), Some("burning"));
+        assert_eq!(lines[1].get("shed").and_then(Json::as_f64), Some(70.0));
+        assert_eq!(lines[1].get("served").and_then(Json::as_f64), Some(30.0));
+        assert_eq!(lines[2].get("to").and_then(Json::as_str), Some("ok"));
     }
 
     /// `qos_slots` builds ONE scheduler shared by everything the

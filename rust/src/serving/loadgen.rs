@@ -32,6 +32,7 @@ use crate::serving::qos::ShedError;
 use crate::serving::session::SubmitError;
 use crate::serving::{Gateway, SessionKey};
 use crate::util::rng::Pcg32;
+use crate::util::table::Columns;
 
 /// One served request: (key index into the driven key list, eval-sample
 /// index, end-to-end latency in seconds, logits).
@@ -286,14 +287,16 @@ impl DriveReport {
     }
 
     /// Render the per-key offered/served/shed/latency table shared by
-    /// `repro serve` and the `serve` example.  `keys` must be the key
-    /// list the drive ran over (key indices in `served` index into it).
+    /// `repro serve` and the `serve` example, built on the shared
+    /// [`Columns`] row builder (golden-pinned by `render_golden_table`).
+    /// `keys` must be the key list the drive ran over (key indices in
+    /// `served` index into it).
     pub fn render(&self, keys: &[SessionKey]) -> String {
-        let mut out = String::new();
-        out.push_str(&format!(
-            "{:<44} {:>8} {:>8} {:>8} {:>8} {:>9} {:>9}\n",
-            "session", "offered", "served", "shed", "failed", "p50 ms", "p99 ms"
-        ));
+        let cols = Columns::new(&[44, 8, 8, 8, 8, 9, 9]);
+        let mut out = cols.row(&[
+            "session", "offered", "served", "shed", "failed", "p50 ms", "p99 ms",
+        ]);
+        out.push('\n');
         for (ki, key) in keys.iter().enumerate() {
             let mut lats: Vec<f64> = self
                 .served
@@ -319,24 +322,26 @@ impl DriveReport {
                     lats[((lats.len() - 1) as f64 * q).round() as usize] * 1e3
                 }
             };
-            out.push_str(&format!(
-                "{:<44} {:>8} {:>8} {:>8} {:>8} {:>9.3} {:>9.3}\n",
+            out.push_str(&cols.row(&[
                 key.to_string(),
-                served + shed + failed,
-                served,
-                shed,
-                failed,
-                pct(0.5),
-                pct(0.99)
-            ));
+                (served + shed + failed).to_string(),
+                served.to_string(),
+                shed.to_string(),
+                failed.to_string(),
+                format!("{:.3}", pct(0.5)),
+                format!("{:.3}", pct(0.99)),
+            ]));
+            out.push('\n');
         }
+        out.push_str(&cols.row(&[
+            "total".to_string(),
+            self.offered.to_string(),
+            self.served.len().to_string(),
+            self.shed().to_string(),
+            self.failed().to_string(),
+        ]));
         out.push_str(&format!(
-            "{:<44} {:>8} {:>8} {:>8} {:>8}   ({:.2}s wall{})\n",
-            "total",
-            self.offered,
-            self.served.len(),
-            self.shed(),
-            self.failed(),
+            "   ({:.2}s wall{})\n",
             self.wall_s,
             if self.is_balanced() { "" } else { "; UNBALANCED" }
         ));
@@ -649,6 +654,48 @@ mod tests {
     use crate::serving::qos::ShedReason;
     use crate::serving::Session;
     use crate::testing::fixtures::tiny_network;
+
+    /// ISSUE 10 satellite: `DriveReport::render` is pinned as a golden
+    /// string through the shared [`Columns`] builder, like
+    /// `GatewayStats::render` — the two CLI tables share one geometry
+    /// implementation and can no longer drift independently.
+    #[test]
+    fn render_golden_table() {
+        let keys = vec![SessionKey::new("lenet5", Format::fixed(8, 8))];
+        let report = DriveReport {
+            offered: 3,
+            served: vec![
+                (0, 0, 0.001, vec![]),
+                (0, 1, 0.002, vec![]),
+                (0, 2, 0.004, vec![]),
+            ],
+            failures: vec![],
+            wall_s: 1.5,
+        };
+        assert!(report.is_balanced());
+        let header = "session".to_string()
+            + &" ".repeat(39)
+            + "offered   served     shed   failed    p50 ms    p99 ms";
+        let row = "lenet5@fixed:l8r8".to_string()
+            + &" ".repeat(35)
+            + "3"
+            + &" ".repeat(8)
+            + "3"
+            + &" ".repeat(8)
+            + "0"
+            + &" ".repeat(8)
+            + "0     2.000     4.000";
+        let total = "total".to_string()
+            + &" ".repeat(47)
+            + "3"
+            + &" ".repeat(8)
+            + "3"
+            + &" ".repeat(8)
+            + "0"
+            + &" ".repeat(8)
+            + "0   (1.50s wall)";
+        assert_eq!(report.render(&keys), format!("{header}\n{row}\n{total}\n"));
+    }
 
     // -- ArrivalSchedule: pure timestamp-stream properties (no sleeping) ----
 

@@ -41,6 +41,15 @@
 //!   of completions — the only drive mode where shedding and queue
 //!   growth are observable — and accounts every offered request
 //!   exactly once (`served + shed == offered`).
+//! * **Observability** ([`crate::obs`], DESIGN.md §Observability) — a
+//!   gateway registers its store and sessions into one lock-free
+//!   metrics [`crate::obs::Registry`] ([`Gateway::registry`]), streams
+//!   typed lifecycle/shed/store/alert events into an
+//!   [`crate::obs::EventSink`] ([`Gateway::with_events`],
+//!   `--events-out`), evaluates per-session SLO burn rates on the
+//!   stats path (the `burn` column of [`GatewayStats::render`]), and
+//!   captures per-layer forward profiles when a session is opened with
+//!   [`SessionOptions::profile`] (`--profile`).
 //!
 //! ```no_run
 //! use precis::formats::Format;

@@ -33,6 +33,7 @@ use std::sync::{Arc, Condvar, Mutex};
 
 use anyhow::{bail, Result};
 
+use crate::obs::{Counter, Registry};
 use crate::serving::session::SessionKey;
 
 /// Default queue-depth bound when an SLO names only a latency budget.
@@ -197,8 +198,10 @@ pub struct QosGate {
     slo: Option<SloTarget>,
     /// Admitted-but-uncompleted requests (queued + in the running batch).
     depth: AtomicUsize,
-    shed_depth: AtomicU64,
-    shed_latency: AtomicU64,
+    /// Shed counters as `obs` cells so the gateway's registry can adopt
+    /// the SAME atomics the stats path reads (DESIGN.md §Observability).
+    shed_depth: Arc<Counter>,
+    shed_latency: Arc<Counter>,
     /// Latest sliding-window p99 queue latency, as `f64::to_bits`.
     p99_bits: AtomicU64,
 }
@@ -209,10 +212,18 @@ impl QosGate {
             key,
             slo,
             depth: AtomicUsize::new(0),
-            shed_depth: AtomicU64::new(0),
-            shed_latency: AtomicU64::new(0),
+            shed_depth: Arc::new(Counter::new()),
+            shed_latency: Arc::new(Counter::new()),
             p99_bits: AtomicU64::new(0.0f64.to_bits()),
         }
+    }
+
+    /// Adopt this gate's shed counters into `reg` under
+    /// `session/<key>/shed_*` names — the registry reads the same cells
+    /// [`QosGate::shed_depth`]/[`QosGate::shed_latency`] count into.
+    pub fn register_into(&self, reg: &Registry) {
+        reg.adopt_counter(&format!("session/{}/shed_depth", self.key), &self.shed_depth);
+        reg.adopt_counter(&format!("session/{}/shed_latency", self.key), &self.shed_latency);
     }
 
     pub fn slo(&self) -> Option<SloTarget> {
@@ -244,7 +255,7 @@ impl QosGate {
         if p99_ms > slo.p99_ms {
             let depth = self.depth.load(Ordering::Acquire);
             if depth > 0 {
-                self.shed_latency.fetch_add(1, Ordering::Relaxed);
+                self.shed_latency.incr();
                 return Err(ShedError {
                     key: self.key.clone(),
                     reason: ShedReason::Latency,
@@ -263,7 +274,7 @@ impl QosGate {
             }) {
             Ok(_) => Ok(()),
             Err(depth) => {
-                self.shed_depth.fetch_add(1, Ordering::Relaxed);
+                self.shed_depth.incr();
                 Err(ShedError {
                     key: self.key.clone(),
                     reason: ShedReason::Depth,
@@ -301,11 +312,11 @@ impl QosGate {
     }
 
     pub fn shed_depth(&self) -> u64 {
-        self.shed_depth.load(Ordering::Relaxed)
+        self.shed_depth.get()
     }
 
     pub fn shed_latency(&self) -> u64 {
-        self.shed_latency.load(Ordering::Relaxed)
+        self.shed_latency.get()
     }
 
     /// Total requests shed by this gate.

@@ -15,7 +15,7 @@
 
 use std::fmt;
 use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::{Arc, Mutex, PoisonError};
+use std::sync::{Arc, Mutex, OnceLock, PoisonError};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
@@ -23,6 +23,7 @@ use anyhow::{anyhow, Result};
 
 use crate::formats::PrecisionSpec;
 use crate::nn::{Network, Zoo};
+use crate::obs::{Event, EventSink, ForwardProfile, Histogram, Registry};
 use crate::serving::backend::{make_factory, BackendFactory, BackendKind};
 use crate::serving::qos::{QosGate, QosScheduler, ShedError, SloTarget};
 use crate::store::{StoreStats, WeightStore};
@@ -113,6 +114,14 @@ pub struct SessionStats {
     /// admitted-but-uncompleted requests right now (queued + in the
     /// running batch) — the depth-shedding input, visible live
     pub depth: usize,
+    /// slow-window SLO error-budget burn rate computed by the gateway's
+    /// [`crate::obs::BurnMeter`] (DESIGN.md §Observability).  1.0 means
+    /// the shed fraction exactly consumes the budget; 0 for standalone
+    /// sessions and sessions that have never shed.
+    pub burn: f64,
+    /// whether the burn-rate alert is firing (fast AND slow windows
+    /// both over budget); only a gateway sets this
+    pub alerting: bool,
 }
 
 /// Sliding-window size for the queue-latency percentiles.
@@ -128,10 +137,18 @@ struct StatsCell {
     store: Option<StoreStats>,
     queue_lat_s: Vec<f64>,
     lat_next: usize,
+    /// registry view of the queue-latency stream
+    /// ([`Session::register_obs`]); `None` until registered.  Recording
+    /// happens inside the per-batch stats lock the dispatcher already
+    /// holds, so registration adds no new synchronization.
+    hist: Option<Arc<Histogram>>,
 }
 
 impl StatsCell {
     fn push_lat(&mut self, secs: f64) {
+        if let Some(h) = &self.hist {
+            h.record(secs);
+        }
         if self.queue_lat_s.len() < QUEUE_LAT_WINDOW {
             self.queue_lat_s.push(secs);
         } else {
@@ -157,6 +174,8 @@ impl StatsCell {
                 packed_exec: false, // the Session overrides from its options
                 shed: 0,            // the Session overrides from its gate
                 depth: 0,           // the Session overrides from its gate
+                burn: 0.0,          // a Gateway overrides from its meter
+                alerting: false,    // a Gateway overrides from its meter
             },
             self.queue_lat_s.clone(),
         )
@@ -227,6 +246,13 @@ pub struct SessionOptions {
     /// 0 or 1 (the default) = serial.  Bit-identical at any setting;
     /// native backends only.
     pub gemm_threads: usize,
+    /// per-forward span profiling (`--profile`; DESIGN.md
+    /// §Observability): the backend records per-layer wall time,
+    /// executed lane, MACs, and clamped activations into a
+    /// [`ForwardProfile`] readable via [`Session::last_profile`].
+    /// Off (the default) the engine takes no timestamps and forwards
+    /// are bit-identical to a build without the profiler.
+    pub profile: bool,
 }
 
 impl Default for SessionOptions {
@@ -239,6 +265,7 @@ impl Default for SessionOptions {
             slo: None,
             qos_slots: 0,
             gemm_threads: 0,
+            profile: false,
         }
     }
 }
@@ -270,6 +297,14 @@ pub struct Session {
     /// (false for [`Session::with_factory`] — custom factories decide
     /// their backend's configuration themselves)
     packed_exec: bool,
+    /// latest [`ForwardProfile`] the dispatcher captured; `None` unless
+    /// opened with `SessionOptions::profile` (the mutex is only ever
+    /// touched when profiling is on, so the off path stays lock-free)
+    profile: Option<Arc<Mutex<Option<ForwardProfile>>>>,
+    /// structured event log ([`Session::set_events`]); shed events are
+    /// emitted from `submit` on the caller thread with one atomic
+    /// pointer load when unset
+    events: OnceLock<Arc<EventSink>>,
 }
 
 /// Typed submission failure from [`Session::submit`]: shed by admission
@@ -431,15 +466,17 @@ impl Session {
         let stats = Arc::new(Mutex::new(StatsCell::default()));
         let key = SessionKey::new(&net.name, spec.clone());
         let gate = Arc::new(QosGate::new(key.clone(), opts.slo));
+        let profile = opts.profile.then(|| Arc::new(Mutex::new(None)));
 
         let worker = {
             let net = net.clone();
             let stats = stats.clone();
             let gate = gate.clone();
+            let profile = profile.clone();
             let batch = opts.batch;
             let max_wait = opts.max_wait;
             std::thread::spawn(move || {
-                dispatch(net, spec, batch, max_wait, factory, rx, stats, gate, scheduler)
+                dispatch(net, spec, batch, max_wait, factory, rx, stats, gate, scheduler, profile)
             })
         };
 
@@ -453,6 +490,8 @@ impl Session {
             stats,
             gate,
             packed_exec: false,
+            profile,
+            events: OnceLock::new(),
         }
     }
 
@@ -501,7 +540,16 @@ impl Session {
                 got: pixels.len(),
             });
         }
-        self.gate.admit().map_err(SubmitError::Shed)?;
+        if let Err(shed) = self.gate.admit() {
+            if let Some(sink) = self.events.get() {
+                sink.emit(Event::Shed {
+                    key: self.key.to_string(),
+                    reason: shed.reason.as_str(),
+                    depth: shed.depth,
+                });
+            }
+            return Err(SubmitError::Shed(shed));
+        }
         let (rtx, rrx) = channel();
         if self
             .tx
@@ -520,6 +568,38 @@ impl Session {
     /// depth, published window p99).
     pub fn qos_gate(&self) -> &Arc<QosGate> {
         &self.gate
+    }
+
+    /// Register this session's counters and queue-latency histogram
+    /// into an [`crate::obs::Registry`], under
+    /// `session/<key>/{shed_depth, shed_latency, queue_latency}`.
+    /// The registry shares the SAME atomic cells the session already
+    /// mutates — registration creates views, not copies, so the hot
+    /// path gains no extra synchronization (DESIGN.md §Observability).
+    pub fn register_obs(&self, reg: &Registry) {
+        self.gate.register_into(reg);
+        let hist = reg.histogram(&format!("session/{}/queue_latency", self.key));
+        self.stats
+            .lock()
+            .unwrap_or_else(PoisonError::into_inner)
+            .hist = Some(hist);
+    }
+
+    /// Attach a structured event log; shed events flow into it from
+    /// `submit`.  Set-once: later calls are ignored, so the emit path
+    /// can read the sink with a single atomic load.
+    pub fn set_events(&self, sink: Arc<EventSink>) {
+        let _ = self.events.set(sink);
+    }
+
+    /// The most recent [`ForwardProfile`] the dispatcher captured.
+    /// Always `None` unless the session was opened with
+    /// [`SessionOptions::profile`] set; otherwise `None` only until the
+    /// first batch completes.
+    pub fn last_profile(&self) -> Option<ForwardProfile> {
+        self.profile
+            .as_ref()
+            .and_then(|cell| cell.lock().unwrap_or_else(PoisonError::into_inner).clone())
     }
 
     /// Run a whole (B, H, W, C) tensor through the request path and
@@ -613,9 +693,13 @@ fn dispatch(
     stats: Arc<Mutex<StatsCell>>,
     gate: Arc<QosGate>,
     scheduler: Option<Arc<QosScheduler>>,
+    profile: Option<Arc<Mutex<Option<ForwardProfile>>>>,
 ) {
     let mut backend = match factory() {
-        Ok(b) => {
+        Ok(mut b) => {
+            if profile.is_some() {
+                b.set_profiling(true);
+            }
             let mut s = stats.lock().unwrap_or_else(PoisonError::into_inner);
             s.backend = b.label();
             drop(s);
@@ -710,6 +794,13 @@ fn dispatch(
             backend.run_spec(&x, &spec)
         };
         gate.on_completed(live);
+        // publish the batch's span profile (profiling sessions only;
+        // the cell is absent — not merely empty — when profiling is off)
+        if let Some(cell) = &profile {
+            if let Some(p) = backend.take_profile() {
+                *cell.lock().unwrap_or_else(PoisonError::into_inner) = Some(p);
+            }
+        }
         match result {
             Ok(out) => {
                 for (i, r) in queue.drain(..).enumerate() {
@@ -1144,6 +1235,125 @@ mod tests {
         assert_eq!(st.requests, 8);
         assert_eq!(st.shed, 0);
         assert_eq!(st.depth, 0);
+    }
+
+    /// ISSUE 10 tentpole: a session opened with `profile` captures a
+    /// per-layer span profile after each batch, readable live; without
+    /// the flag the accessor is always `None` (the profile cell does
+    /// not even exist, so the off path takes no lock).
+    #[test]
+    fn profiled_session_reports_layer_spans() {
+        let net = tiny_network(4);
+        let n = net.clone();
+        let opts =
+            SessionOptions { batch: 2, profile: true, ..SessionOptions::default() };
+        let session = Session::with_factory_qos(
+            net.clone(),
+            Format::fixed(8, 8),
+            opts,
+            None,
+            Box::new(move || Ok(Box::new(NativeBackend::new(n)) as Box<dyn Backend>)),
+        );
+        let px = net.input.iter().product::<usize>();
+        assert!(session.last_profile().is_none(), "no batch has run yet");
+        session.infer(net.eval_x.data()[..px].to_vec()).unwrap();
+        let p = session.last_profile().expect("profile after the first batch");
+        assert_eq!(p.batch, 1, "native partial flush executes 1 live row");
+        assert_eq!(p.layers.len(), 1, "the fixture has one named layer");
+        assert_eq!(p.layers[0].name, "fc");
+        assert_eq!(p.layers[0].lane, "staged", "no packed exec: staged lane");
+        assert_eq!(p.layers[0].macs, (px * net.classes) as u64);
+        assert!(p.total_s > 0.0);
+
+        // a plain session never allocates the profile cell
+        let plain = native_session(&net, Format::fixed(8, 8), 2);
+        plain.infer(net.eval_x.data()[..px].to_vec()).unwrap();
+        assert!(plain.last_profile().is_none());
+    }
+
+    /// ISSUE 10 tentpole: `register_obs` shares the session's gate
+    /// counters and queue-latency stream with a metrics registry —
+    /// the same atomic cells, not copies, visible live.
+    #[test]
+    fn register_obs_shares_gate_counters_and_latency_histogram() {
+        let reg = Registry::new();
+        let net = tiny_network(4);
+        let session = native_session(&net, Format::SINGLE, 2);
+        session.register_obs(&reg);
+        let px = net.input.iter().product::<usize>();
+        for i in 0..4 {
+            session.infer(net.eval_x.data()[i * px..(i + 1) * px].to_vec()).unwrap();
+        }
+        let key = session.key().to_string();
+        let h = reg.histogram(&format!("session/{key}/queue_latency"));
+        assert_eq!(h.count(), 4, "every request's queue latency is recorded");
+        assert_eq!(reg.counter_value(&format!("session/{key}/shed_depth")), Some(0));
+        assert_eq!(reg.counter_value(&format!("session/{key}/shed_latency")), Some(0));
+    }
+
+    /// ISSUE 10 tentpole: shed refusals flow into the structured event
+    /// log as typed `shed` records carrying the reason and the queue
+    /// depth observed at refusal time.
+    #[test]
+    fn sheds_are_logged_to_the_event_sink() {
+        use crate::obs::EventSink;
+        use crate::util::json::Json;
+
+        struct GatedBackend {
+            inner: NativeBackend,
+            tokens: Receiver<()>,
+        }
+        impl Backend for GatedBackend {
+            fn run_spec(&mut self, x: &Tensor, spec: &PrecisionSpec) -> Result<Tensor> {
+                let _ = self.tokens.recv();
+                self.inner.run_spec(x, spec)
+            }
+            fn network(&self) -> &Arc<Network> {
+                self.inner.network()
+            }
+            fn label(&self) -> &'static str {
+                "native"
+            }
+        }
+
+        let net = tiny_network(4);
+        let (token_tx, token_rx) = channel::<()>();
+        let opts = SessionOptions {
+            batch: 1,
+            max_wait: Duration::from_millis(0),
+            slo: Some(SloTarget::new(1000.0, 1).unwrap()),
+            ..SessionOptions::default()
+        };
+        let n = net.clone();
+        let session = Session::with_factory_qos(
+            net.clone(),
+            Format::SINGLE,
+            opts,
+            None,
+            Box::new(move || {
+                Ok(Box::new(GatedBackend { inner: NativeBackend::new(n), tokens: token_rx })
+                    as Box<dyn Backend>)
+            }),
+        );
+        let (sink, captured) = EventSink::capture();
+        session.set_events(Arc::new(sink));
+
+        let px = net.input.iter().product::<usize>();
+        let sample = || net.eval_x.data()[..px].to_vec();
+        let pending = session.submit(sample()).unwrap(); // fills depth bound 1
+        let err = session.submit(sample()).unwrap_err(); // refused -> event
+        assert!(matches!(err, SubmitError::Shed(_)), "{err}");
+        token_tx.send(()).unwrap();
+        pending.recv().unwrap().unwrap();
+        let key = session.key().to_string();
+        drop(session); // drops the sink's last Arc; the writer drains
+
+        let lines = captured.lines();
+        assert_eq!(lines.len(), 1, "exactly the one shed is logged");
+        assert_eq!(lines[0].get("kind").and_then(Json::as_str), Some("shed"));
+        assert_eq!(lines[0].get("reason").and_then(Json::as_str), Some("depth"));
+        assert_eq!(lines[0].get("depth").and_then(Json::as_f64), Some(1.0));
+        assert_eq!(lines[0].get("key").and_then(Json::as_str), Some(key.as_str()));
     }
 
     #[test]

@@ -62,12 +62,13 @@ pub use packed::PackedTensor;
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Mutex, PoisonError};
+use std::sync::{Arc, Mutex, OnceLock, PoisonError};
 
 use anyhow::{bail, Result};
 
 use crate::formats::Format;
 use crate::numerics::{quantize_slice, Quantizer};
+use crate::obs::{Counter, Event, EventSink, Registry};
 
 /// Default byte budget for stores nobody configured (e.g. a bare
 /// `NativeBackend::new`): generous for every zoo network while keeping
@@ -221,10 +222,14 @@ struct Inner {
     entries: HashMap<StoreKey, Slot>,
     bytes: usize,
     packed_bytes: usize,
-    misses: u64,
-    evictions: u64,
-    rejected: u64,
-    races: u64,
+    // lifetime counters as obs cells: mutated only under this mutex (so
+    // their relative ordering is exactly the old plain-u64 behaviour)
+    // but adoptable into an `obs::Registry`, which then reads the SAME
+    // atomics `stats()` snapshots — one set of books, two views
+    misses: Arc<Counter>,
+    evictions: Arc<Counter>,
+    rejected: Arc<Counter>,
+    races: Arc<Counter>,
 }
 
 /// The shared weight store (module docs).  All methods take `&self`;
@@ -234,12 +239,16 @@ pub struct WeightStore {
     /// prepares served from a resident entry (locked hit, lost-race
     /// adopt, or lock-free lease validation) — atomic so the warm path
     /// can count hits without touching the mutex
-    hits: AtomicU64,
+    hits: Arc<Counter>,
     /// data-path mutex acquisitions; [`WeightStore::stats`] reads do
     /// not count.  The store-contract concurrency tests assert this
     /// stays flat across warm forwards — the "zero locks when warm"
     /// proof counter.
-    lock_acquisitions: AtomicU64,
+    lock_acquisitions: Arc<Counter>,
+    /// structured event sink for evict/reject records (`obs::events`).
+    /// Set-once and read lock-free; unset costs one pointer check per
+    /// eviction/rejection — never per warm forward.
+    events: OnceLock<Arc<EventSink>>,
 }
 
 impl Default for WeightStore {
@@ -259,14 +268,37 @@ impl WeightStore {
                 entries: HashMap::new(),
                 bytes: 0,
                 packed_bytes: 0,
-                misses: 0,
-                evictions: 0,
-                rejected: 0,
-                races: 0,
+                misses: Arc::new(Counter::new()),
+                evictions: Arc::new(Counter::new()),
+                rejected: Arc::new(Counter::new()),
+                races: Arc::new(Counter::new()),
             }),
-            hits: AtomicU64::new(0),
-            lock_acquisitions: AtomicU64::new(0),
+            hits: Arc::new(Counter::new()),
+            lock_acquisitions: Arc::new(Counter::new()),
+            events: OnceLock::new(),
         }
+    }
+
+    /// Adopt this store's counters into `reg` under `store/*` names.
+    /// The registry then reads the SAME cells every mutation touches —
+    /// [`WeightStore::stats`] and a registry snapshot can never
+    /// disagree.  Adoption locks once (registration time); the data
+    /// path is untouched, so warm forwards stay lock-free with the
+    /// registry live (tests/store_contract.rs).
+    pub fn register_into(&self, reg: &Registry) {
+        reg.adopt_counter("store/hits", &self.hits);
+        reg.adopt_counter("store/lock_acquisitions", &self.lock_acquisitions);
+        let g = self.lock_raw();
+        reg.adopt_counter("store/misses", &g.misses);
+        reg.adopt_counter("store/evictions", &g.evictions);
+        reg.adopt_counter("store/rejected", &g.rejected);
+        reg.adopt_counter("store/races", &g.races);
+    }
+
+    /// Wire the structured event sink (evict/reject records).  Set-once:
+    /// later calls are ignored, matching the gateway's one-sink model.
+    pub fn set_events(&self, sink: Arc<EventSink>) {
+        let _ = self.events.set(sink);
     }
 
     /// A store with no byte budget.
@@ -288,7 +320,7 @@ impl WeightStore {
     }
 
     fn lock(&self) -> std::sync::MutexGuard<'_, Inner> {
-        self.lock_acquisitions.fetch_add(1, Ordering::Relaxed);
+        self.lock_acquisitions.incr();
         self.lock_raw()
     }
 
@@ -300,7 +332,7 @@ impl WeightStore {
     }
 
     fn lease_for(&self, slot: &Slot) -> Lease {
-        self.hits.fetch_add(1, Ordering::Relaxed);
+        self.hits.incr();
         Lease {
             entry: slot.entry.clone(),
             seen: slot.epoch.load(Ordering::Acquire),
@@ -326,7 +358,10 @@ impl WeightStore {
             let price = StoreEntry::bytes_for(weights.len(), &key.fmt);
             if let Some(b) = g.budget {
                 if price > b {
-                    g.rejected += 1;
+                    g.rejected.incr();
+                    if let Some(sink) = self.events.get() {
+                        sink.emit(Event::StoreReject { key: key_label(key), bytes: price });
+                    }
                     return None;
                 }
             }
@@ -343,12 +378,12 @@ impl WeightStore {
             // build, so hit/miss totals balance per prepare even under
             // contention.
             slot.last_used = slot.last_used.max(tick);
-            g.races += 1;
+            g.races.incr();
             return Some(self.lease_for(slot));
         }
         // the insert is what makes it a miss — counted here, not before
         // the build, so a lost race cannot count a miss AND a hit
-        g.misses += 1;
+        g.misses.incr();
         g.bytes += entry.bytes();
         g.packed_bytes += entry.packed.packed_bytes();
         let epoch = Arc::new(AtomicU64::new(0));
@@ -367,7 +402,10 @@ impl WeightStore {
             slot.epoch.fetch_add(1, Ordering::Release);
             g.bytes -= slot.entry.bytes();
             g.packed_bytes -= slot.entry.packed.packed_bytes();
-            g.evictions += 1;
+            g.evictions.incr();
+            if let Some(sink) = self.events.get() {
+                sink.emit(Event::StoreEvict { key: key_label(&lru), bytes: slot.entry.bytes() });
+            }
         }
         Some(Lease { entry, epoch, seen: 0 })
     }
@@ -384,7 +422,7 @@ impl WeightStore {
     /// since the lease was issued; re-prepare through the locked path.
     pub fn hit_if_current(&self, lease: &Lease) -> Option<Arc<StoreEntry>> {
         if lease.epoch.load(Ordering::Acquire) == lease.seen {
-            self.hits.fetch_add(1, Ordering::Relaxed);
+            self.hits.incr();
             Some(lease.entry.clone())
         } else {
             None
@@ -395,7 +433,7 @@ impl WeightStore {
     /// a warm multi-session run must leave this flat
     /// (tests/store_contract.rs).
     pub fn lock_acquisitions(&self) -> u64 {
-        self.lock_acquisitions.load(Ordering::Relaxed)
+        self.lock_acquisitions.get()
     }
 
     /// Counter snapshot (cheap: copies a few words under the lock; not
@@ -403,11 +441,11 @@ impl WeightStore {
     pub fn stats(&self) -> StoreStats {
         let g = self.lock_raw();
         StoreStats {
-            hits: self.hits.load(Ordering::Relaxed),
-            misses: g.misses,
-            evictions: g.evictions,
-            rejected: g.rejected,
-            races: g.races,
+            hits: self.hits.get(),
+            misses: g.misses.get(),
+            evictions: g.evictions.get(),
+            rejected: g.rejected.get(),
+            races: g.races.get(),
             entries: g.entries.len(),
             bytes: g.bytes,
             packed_bytes: g.packed_bytes,
@@ -427,6 +465,11 @@ impl WeightStore {
         g.bytes = 0;
         g.packed_bytes = 0;
     }
+}
+
+/// Event-log spelling of a [`StoreKey`]: `net/layer@fmt`.
+fn key_label(key: &StoreKey) -> String {
+    format!("{}/{}@{}", key.net, key.layer, key.fmt)
 }
 
 /// `"8m"` / `"512k"` / `"1g"` / plain bytes → bytes (the
@@ -609,6 +652,57 @@ mod tests {
         let la2 = store.prepare_lease(&key("a", fmt), &w).unwrap();
         assert!(store.hit_if_current(&la).is_none(), "old lease stays stale after re-insert");
         assert!(store.hit_if_current(&la2).is_some(), "the new residency's lease is current");
+    }
+
+    /// ISSUE 10: the registry adopts the store's OWN counter cells —
+    /// `stats()` and the registry can never disagree — and evictions /
+    /// rejections land in the structured event log with their byte
+    /// prices.
+    #[test]
+    fn registry_adoption_and_events_share_the_books() {
+        use crate::obs::{EventSink, Registry};
+        use crate::util::json::Json;
+
+        let fmt = Format::fixed(8, 8);
+        let w: Vec<f32> = (0..32).map(|i| i as f32 * 0.25).collect();
+        let one = StoreEntry::bytes_for(w.len(), &fmt);
+        let store = WeightStore::with_budget(2 * one);
+        let reg = Registry::new();
+        store.register_into(&reg);
+        let (sink, cap) = EventSink::capture();
+        store.set_events(Arc::new(sink));
+
+        store.prepare(&key("a", fmt), &w).unwrap();
+        store.prepare(&key("b", fmt), &w).unwrap();
+        store.prepare(&key("a", fmt), &w).unwrap(); // touch a: b is LRU
+        store.prepare(&key("c", fmt), &w).unwrap(); // evicts b
+        let big = vec![1.0f32; 4096];
+        assert!(store.prepare(&key("big", fmt), &big).is_none(), "over budget");
+
+        let s = store.stats();
+        assert_eq!((s.misses, s.evictions, s.rejected, s.hits), (3, 1, 1, 1));
+        for (name, want) in [
+            ("store/hits", s.hits),
+            ("store/misses", s.misses),
+            ("store/evictions", s.evictions),
+            ("store/rejected", s.rejected),
+            ("store/races", s.races),
+            ("store/lock_acquisitions", store.lock_acquisitions()),
+        ] {
+            assert_eq!(reg.counter_value(name), Some(want), "{name}");
+        }
+
+        drop(store); // joins the sink's writer: the capture is complete
+        let lines = cap.lines();
+        assert_eq!(lines.len(), 2, "one evict + one reject:\n{}", cap.text());
+        assert_eq!(lines[0].get("kind").and_then(Json::as_str), Some("store_evict"));
+        assert_eq!(lines[0].get("key").and_then(Json::as_str), Some("unit-net/b@FI l8 r8"));
+        assert_eq!(lines[0].get("bytes").and_then(Json::as_f64), Some(one as f64));
+        assert_eq!(lines[1].get("kind").and_then(Json::as_str), Some("store_reject"));
+        assert_eq!(
+            lines[1].get("bytes").and_then(Json::as_f64),
+            Some(StoreEntry::bytes_for(big.len(), &fmt) as f64)
+        );
     }
 
     #[test]

@@ -8,4 +8,5 @@ pub mod cli;
 pub mod json;
 pub mod rng;
 pub mod stats;
+pub mod table;
 pub mod timer;

@@ -1,0 +1,82 @@
+//! Shared fixed-width row builder for the CLI stat tables.
+//!
+//! `DriveReport::render` and `GatewayStats::render` used to build their
+//! headers and rows from SEPARATE `format!` strings, and the two
+//! drifted once already (ISSUE 10 satellite).  [`Columns`] is the one
+//! place the widths live: the first column is left-aligned (it carries
+//! the row key), every other column is right-aligned, cells are
+//! single-space separated, and callers pre-format numeric cells (the
+//! builder never decides precision — only geometry).
+
+/// Column geometry for one table: a width per column.
+#[derive(Clone, Debug)]
+pub struct Columns {
+    widths: Vec<usize>,
+}
+
+impl Columns {
+    pub fn new(widths: &[usize]) -> Columns {
+        assert!(!widths.is_empty(), "a table needs at least one column");
+        Columns { widths: widths.to_vec() }
+    }
+
+    /// Render one row (no trailing newline).  Fewer cells than columns
+    /// renders a prefix row (the totals line of `DriveReport` appends
+    /// free text after its first columns); more cells than columns is a
+    /// caller bug.
+    pub fn row<S: AsRef<str>>(&self, cells: &[S]) -> String {
+        assert!(
+            cells.len() <= self.widths.len(),
+            "{} cells for {} columns",
+            cells.len(),
+            self.widths.len()
+        );
+        let mut out = String::new();
+        for (i, cell) in cells.iter().enumerate() {
+            if i > 0 {
+                out.push(' ');
+            }
+            let (c, w) = (cell.as_ref(), self.widths[i]);
+            if i == 0 {
+                out.push_str(&format!("{c:<w$}"));
+            } else {
+                out.push_str(&format!("{c:>w$}"));
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn first_column_left_rest_right() {
+        let cols = Columns::new(&[6, 4, 5]);
+        assert_eq!(cols.row(&["key", "12", "3.40"]), "key      12  3.40");
+    }
+
+    #[test]
+    fn oversized_cells_widen_without_truncation() {
+        let cols = Columns::new(&[3, 2]);
+        assert_eq!(cols.row(&["longkey", "12345"]), "longkey 12345");
+    }
+
+    #[test]
+    fn prefix_rows_render_only_the_given_cells() {
+        let cols = Columns::new(&[4, 3, 3]);
+        assert_eq!(cols.row(&["tot", "10"]), "tot   10");
+    }
+
+    #[test]
+    fn header_and_row_share_the_geometry() {
+        // the regression this type exists to prevent: header and data
+        // rows built from the same widths can never drift
+        let cols = Columns::new(&[8, 6]);
+        let header = cols.row(&["session", "shed"]);
+        let row = cols.row(&["a@f", "3"]);
+        assert_eq!(header.len(), row.len());
+        assert_eq!(header.find("shed").map(|i| i + 4), row.find('3').map(|i| i + 1));
+    }
+}

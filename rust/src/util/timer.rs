@@ -21,9 +21,15 @@ impl Timer {
     }
 }
 
-/// Format a duration in adaptive units.
+/// Format a duration in adaptive units.  Negative and non-finite
+/// inputs render as a typed `"n/a"` — they can reach here when diffing
+/// timestamps against the open-loop driver's absolute deadlines, and
+/// `"-3000000.0µs"` or `"NaNns"` in a report is worse than admitting
+/// the value carries no duration.
 pub fn human(seconds: f64) -> String {
-    if seconds < 1e-6 {
+    if !seconds.is_finite() || seconds < 0.0 {
+        "n/a".to_string()
+    } else if seconds < 1e-6 {
         format!("{:.1}ns", seconds * 1e9)
     } else if seconds < 1e-3 {
         format!("{:.1}µs", seconds * 1e6)
@@ -54,5 +60,25 @@ mod tests {
         assert!(human(3e-2).ends_with("ms"));
         assert!(human(3.0).ends_with('s'));
         assert!(human(300.0).ends_with("min"));
+    }
+
+    /// ISSUE 10 satellite: the case matrix for inputs that are not
+    /// durations — negative diffs and non-finite values render as a
+    /// typed "n/a", never unit-suffixed nonsense; zero and denormal
+    /// positives still take the normal unit ladder.
+    #[test]
+    fn human_non_durations_are_na() {
+        for (input, want) in [
+            (-3.0, "n/a"),
+            (-1e-9, "n/a"),
+            (f64::NEG_INFINITY, "n/a"),
+            (f64::INFINITY, "n/a"),
+            (f64::NAN, "n/a"),
+        ] {
+            assert_eq!(human(input), want, "human({input})");
+        }
+        assert_eq!(human(0.0), "0.0ns");
+        assert_eq!(human(-0.0), "0.0ns", "negative zero is a zero duration");
+        assert!(human(f64::MIN_POSITIVE).ends_with("ns"));
     }
 }

@@ -1,0 +1,332 @@
+//! The `precis::obs` acceptance contract (ISSUE 10) — tier-1, fixture
+//! based, no artifacts:
+//!
+//! * **Zero overhead when off, lock-free when on**: with profiling off
+//!   and the metrics registry live, forwards are bit-identical to the
+//!   plain pre-obs path and a concurrent warm phase acquires the store
+//!   mutex ZERO times; the registry is a view over the store's own
+//!   atomics, never a copy.
+//! * **Profiled spans pin the router**: a profiled packed forward
+//!   reports per-layer lanes exactly matching the packed router's
+//!   assignments ([`QuantTable::resolve_for`] → `packed_labels`), with
+//!   layer span times summing to at most the forward total.
+//! * **Burn alerts reconcile with the books**: a driven overload
+//!   (open-loop burst against a depth-gated slow session) emits at
+//!   least one burn-rate [`Alert`](precis::obs::Event) whose shed and
+//!   served counts equal the [`DriveReport`]'s records exactly, plus
+//!   one structured shed event per driver-recorded shed.
+//! * **The bench suite prices the obs hot paths**: `obs_overhead/*`
+//!   sections and the `obs_profile_overhead/tiny-conv` ratio are in the
+//!   `repro bench --json` report, and `bench_compare.py` documents the
+//!   new section drift and the `packed_gap` track.
+
+use std::sync::{Arc, Barrier};
+use std::time::Duration;
+
+use anyhow::Result;
+
+use precis::bench_harness::suite::run_suite;
+use precis::bench_harness::{Bench, BenchReport};
+use precis::formats::{Format, PrecisionSpec};
+use precis::nn::{Network, QuantTable};
+use precis::obs::{EventSink, Registry};
+use precis::serving::{
+    drive_open_loop, ArrivalSchedule, Backend, Gateway, NativeBackend, Session, SessionOptions,
+    SloTarget,
+};
+use precis::store::WeightStore;
+use precis::tensor::Tensor;
+use precis::testing::fixtures::{tiny_conv_network, tiny_network};
+use precis::util::json::Json;
+
+fn assert_bits_eq(got: &[f32], want: &[f32], ctx: &str) {
+    assert_eq!(got.len(), want.len(), "{ctx}: length");
+    for i in 0..want.len() {
+        assert_eq!(
+            got[i].to_bits(),
+            want[i].to_bits(),
+            "{ctx}: logit {i} ({} vs {})",
+            got[i],
+            want[i]
+        );
+    }
+}
+
+/// Acceptance (1): profiling off is bit-identical to the plain forward
+/// path, and a concurrent warm phase with the registry live acquires
+/// the store mutex zero times.  Profiling ON must not perturb the math
+/// either — same bits, plus a profile.
+#[test]
+fn profiling_off_is_bit_identical_and_lockfree_with_the_registry_live() {
+    let net = tiny_conv_network(4);
+    let x = net.eval_x.slice_rows(0, 4);
+    let spec = PrecisionSpec::parse("plan:c1=fixed:l8r8,fc=float:m7e6").unwrap();
+    // the pre-obs reference: an uncached forward, profiler never touched
+    let want = NativeBackend::with_store(net.clone(), Arc::new(WeightStore::with_budget(0)))
+        .run_spec(&x, &spec)
+        .unwrap();
+
+    let store = Arc::new(WeightStore::unbounded());
+    let registry = Registry::new();
+    store.register_into(&registry);
+
+    const SESSIONS: usize = 4;
+    const WARM_FORWARDS: usize = 8;
+    let warmed = Barrier::new(SESSIONS + 1);
+    let measured = Barrier::new(SESSIONS + 1);
+    let locks_when_warm = std::thread::scope(|s| {
+        for t in 0..SESSIONS {
+            let (net, store) = (net.clone(), store.clone());
+            let (x, want, spec) = (&x, &want, &spec);
+            let (warmed, measured) = (&warmed, &measured);
+            s.spawn(move || {
+                // profiling explicitly OFF: the obs build must behave
+                // exactly like a build without the module
+                let mut backend = NativeBackend::with_store(net, store).with_profiling(false);
+                let cold = backend.run_spec(x, spec).unwrap();
+                assert_bits_eq(cold.data(), want.data(), &format!("session {t} cold"));
+                warmed.wait();
+                measured.wait();
+                for round in 0..WARM_FORWARDS {
+                    let got = backend.run_spec(x, spec).unwrap();
+                    assert_bits_eq(got.data(), want.data(), &format!("session {t} warm {round}"));
+                }
+            });
+        }
+        warmed.wait();
+        let snapshot = store.lock_acquisitions();
+        measured.wait();
+        snapshot
+    });
+    assert_eq!(
+        store.lock_acquisitions(),
+        locks_when_warm,
+        "warm forwards must stay mutex-free with the registry live"
+    );
+
+    // the registry reads the store's own atomics — identical books
+    let s = store.stats();
+    for (name, value) in [
+        ("store/hits", s.hits),
+        ("store/misses", s.misses),
+        ("store/evictions", s.evictions),
+        ("store/rejected", s.rejected),
+        ("store/lock_acquisitions", store.lock_acquisitions()),
+    ] {
+        assert_eq!(registry.counter_value(name), Some(value), "{name}");
+    }
+
+    // profiling ON yields the same bits plus a profile; a plain backend
+    // yields no profile at all
+    let mut profiled = NativeBackend::with_store(net.clone(), store.clone()).with_profiling(true);
+    let got = profiled.run_spec(&x, &spec).unwrap();
+    assert_bits_eq(got.data(), want.data(), "profiled forward");
+    let p = Backend::take_profile(&mut profiled).expect("profiling on records a profile");
+    assert_eq!(p.batch, 4);
+    let mut plain = NativeBackend::with_store(net, store);
+    plain.run_spec(&x, &spec).unwrap();
+    assert!(Backend::take_profile(&mut plain).is_none(), "profiling off records nothing");
+}
+
+/// Acceptance (2): a profiled packed forward's per-layer lanes are
+/// exactly the packed router's assignments, over every router lane
+/// (int16, int32, LUT, staged), and the layer spans sum to at most the
+/// end-to-end forward time.
+#[test]
+fn profiled_spans_pin_the_packed_routers_lane_assignments() {
+    let net = tiny_conv_network(8);
+    let x = net.eval_x.slice_rows(0, 8);
+    for spec_str in [
+        "fixed:l3r3",                       // int16 lane
+        "fixed:l4r4",                       // int32 lane
+        "float:m7e6",                       // LUT lane
+        "plan:c1=fixed:l3r3,fc=fixed:l8r8", // mixed int16 + LUT
+        "float:m23e8",                      // identity: stays staged
+    ] {
+        let spec = PrecisionSpec::parse(spec_str).unwrap();
+        let want: Vec<(String, String)> = QuantTable::resolve_for(&net, &spec, true)
+            .unwrap()
+            .packed_labels(&net)
+            .into_iter()
+            .map(|(n, l)| (n, l.to_string()))
+            .collect();
+
+        let mut backend = NativeBackend::with_store(net.clone(), Arc::new(WeightStore::unbounded()))
+            .with_packed_exec(true)
+            .with_profiling(true);
+        backend.run_spec(&x, &spec).unwrap(); // cold: stages the weights
+        backend.run_spec(&x, &spec).unwrap(); // warm: steady-state lanes
+        let p = Backend::take_profile(&mut backend).expect("profiled forward records spans");
+
+        let got: Vec<(String, String)> =
+            p.layers.iter().map(|l| (l.name.clone(), l.lane.clone())).collect();
+        assert_eq!(got, want, "{spec_str}: profiled lanes must match the router's assignments");
+        assert_eq!(p.batch, 8, "{spec_str}");
+        assert!(p.total_macs() > 0, "{spec_str}: GEMM layers issue MACs");
+        assert!(p.total_s > 0.0 && p.layers_total_s() > 0.0, "{spec_str}: spans are timed");
+        assert!(
+            p.layers_total_s() <= p.total_s + 1e-6,
+            "{spec_str}: layer spans ({}) cannot exceed the forward total ({})",
+            p.layers_total_s(),
+            p.total_s
+        );
+    }
+}
+
+/// A native backend slowed to `delay` per batch, so a burst arrival
+/// schedule provably exceeds capacity and the depth gate must shed —
+/// the same no-timing-luck idiom as `tests/qos_chaos.rs`.
+struct SlowBackend {
+    inner: NativeBackend,
+    delay: Duration,
+}
+
+impl Backend for SlowBackend {
+    fn run_spec(&mut self, x: &Tensor, spec: &PrecisionSpec) -> Result<Tensor> {
+        std::thread::sleep(self.delay);
+        self.inner.run_spec(x, spec)
+    }
+    fn network(&self) -> &Arc<Network> {
+        self.inner.network()
+    }
+    fn label(&self) -> &'static str {
+        "native"
+    }
+}
+
+/// Acceptance (3): a driven overload emits at least one burn-rate
+/// alert, and the alert's shed/served books reconcile EXACTLY with the
+/// drive report's records — plus one structured shed event per
+/// driver-recorded shed and a balanced session lifecycle.
+#[test]
+fn overload_drive_emits_burn_alerts_that_reconcile_with_the_books() {
+    let net = tiny_network(8);
+    let (sink, captured) = EventSink::capture();
+    let sink = Arc::new(sink);
+    let gw = Gateway::empty().with_events(sink.clone());
+
+    // one depth-gated session at ~500 req/s capacity (2ms per
+    // single-request batch); no warm-up, so the session's counters are
+    // exactly the driver's books
+    let n = net.clone();
+    let opts = SessionOptions {
+        batch: 1,
+        max_wait: Duration::from_millis(0),
+        slo: Some(SloTarget::new(10_000.0, 2).unwrap()), // depth-gated only
+        ..SessionOptions::default()
+    };
+    let key = gw.adopt(Session::with_factory_qos(
+        net.clone(),
+        Format::fixed(8, 8),
+        opts,
+        None,
+        Box::new(move || {
+            let inner = NativeBackend::new(n);
+            Ok(Box::new(SlowBackend { inner, delay: Duration::from_millis(2) }) as Box<dyn Backend>)
+        }),
+    ));
+
+    // ~200 fires within a few ms against the 2ms/request service rate:
+    // the depth bound (2) must shed most of the stream
+    let arrivals = ArrivalSchedule::parse("burst:1000rps:50000rps:20ms:0.5", 2018).unwrap();
+    let keys = [key.clone()];
+    let report = drive_open_loop(&gw, &keys, &arrivals, 200);
+    assert_eq!(report.offered, 200);
+    assert!(
+        report.is_balanced(),
+        "served {} + shed {} + failed {} != offered {}",
+        report.served.len(),
+        report.shed(),
+        report.failed(),
+        report.offered
+    );
+    assert_eq!(report.failed(), 0);
+    assert!(report.shed() > 0, "over-capacity open-loop drive must shed");
+
+    // the stats path evaluates burn: a shed fraction this far above the
+    // 1% error budget must alert, and the render surfaces it
+    let stats = gw.stats();
+    let (_, s) = stats.sessions.iter().find(|(k, _)| k == &key).expect("session listed");
+    assert!(s.alerting, "burn {} over budget must alert (shed {})", s.burn, s.shed);
+    assert!(s.burn >= 1.0, "slow-window burn must be over budget, got {}", s.burn);
+    assert!(stats.render().contains('!'), "the burn column marks the alert:\n{}", stats.render());
+
+    gw.shutdown();
+    drop(sink); // last Arc: joins the writer, completing the capture
+
+    let lines = captured.lines();
+    let of_kind = |k: &str| -> Vec<&Json> {
+        lines.iter().filter(|l| l.get("kind").and_then(Json::as_str) == Some(k)).collect()
+    };
+    assert_eq!(of_kind("session_open").len(), 1);
+    assert_eq!(of_kind("session_close").len(), 1, "shutdown closes the session");
+    assert_eq!(
+        of_kind("shed").len() as u64,
+        report.shed(),
+        "one structured shed event per driver-recorded shed"
+    );
+
+    let alerts = of_kind("alert");
+    assert!(!alerts.is_empty(), "a driven overload must emit at least one burn alert");
+    let a = alerts[0];
+    assert_eq!(a.get("key").and_then(Json::as_str), Some(key.to_string().as_str()));
+    assert_eq!(
+        a.get("shed").and_then(Json::as_f64),
+        Some(report.shed() as f64),
+        "the alert's shed count must reconcile with the drive report"
+    );
+    assert_eq!(
+        a.get("served").and_then(Json::as_f64),
+        Some(report.served.len() as f64),
+        "the alert's served count must reconcile with the drive report"
+    );
+    assert!(a.get("fast").and_then(Json::as_f64).expect("fast burn") >= 1.0);
+    assert!(a.get("slow").and_then(Json::as_f64).expect("slow burn") >= 1.0);
+    // the alert was preceded by an ok -> burning transition
+    let transitions = of_kind("slo_state");
+    assert!(!transitions.is_empty(), "alerting must record a state transition");
+    assert_eq!(transitions[0].get("to").and_then(Json::as_str), Some("burning"));
+}
+
+/// Acceptance (4): the bench suite prices the obs hot paths — the
+/// `obs_overhead/*` sections and the `obs_profile_overhead/tiny-conv`
+/// ratio are in the JSON report `repro bench --json` emits — and
+/// `bench_compare.py`'s drift docstring documents both the new section
+/// and the `packed_gap` track.
+#[test]
+fn bench_suite_prices_the_obs_hot_paths_and_the_comparator_documents_them() {
+    let mut bench = Bench::quick();
+    bench.warmup_iters = 1;
+    bench.min_batches = 2;
+    bench.min_time_s = 0.0;
+    let mut report = BenchReport::new("obs-contract", "quick");
+    run_suite(&mut bench, &mut report, 64, &[16], &[(10, 7, 9)], 4);
+
+    let json = report.to_json().to_string();
+    for name in [
+        "obs_overhead/counter_add",
+        "obs_overhead/histogram_record",
+        "obs_overhead/forward_plain/batch4",
+        "obs_overhead/forward_profiled/batch4",
+    ] {
+        assert!(json.contains(name), "bench json missing {name}");
+    }
+    let overhead = report.ratios.get("obs_profile_overhead/tiny-conv").copied();
+    let overhead = overhead.expect("profiled-vs-plain forward ratio present");
+    assert!(overhead.is_finite() && overhead > 0.0, "overhead ratio {overhead}");
+
+    let compare = std::fs::read_to_string(concat!(
+        env!("CARGO_MANIFEST_DIR"),
+        "/../.github/scripts/bench_compare.py"
+    ))
+    .expect("bench_compare.py is readable from the repo");
+    let docstring = compare.split("\"\"\"").nth(1).expect("module docstring");
+    assert!(
+        docstring.contains("obs_overhead"),
+        "the comparator's drift docstring must note the obs section"
+    );
+    assert!(
+        docstring.contains("packed_gap"),
+        "the comparator's docstring must document the packed_gap track"
+    );
+}

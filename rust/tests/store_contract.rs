@@ -15,6 +15,7 @@ use std::sync::{Arc, Barrier};
 use std::time::Duration;
 
 use precis::formats::{Format, Plan, PrecisionSpec};
+use precis::obs::Registry;
 use precis::serving::{Backend, Gateway, NativeBackend, Session};
 use precis::store::{StoreEntry, StoreKey, WeightStore};
 use precis::testing::fixtures::tiny_conv_network;
@@ -382,6 +383,11 @@ fn gateway_surfaces_the_packed_exec_lane() {
 /// uncached reference.  `clear()` then invalidates the outstanding
 /// leases and the next forward degrades to the locked re-staging path,
 /// still bit-identically.
+///
+/// ISSUE 10 extension: the whole scenario runs with a live
+/// [`Registry`] adopted over the store's counters BEFORE the warm
+/// phase — metrics instrumentation must not re-introduce a lock on the
+/// warm path, and the registry's view must agree with `stats()`.
 #[test]
 fn warm_forwards_are_lockfree_across_concurrent_sessions() {
     let net = tiny_conv_network(4);
@@ -394,6 +400,8 @@ fn warm_forwards_are_lockfree_across_concurrent_sessions() {
     const SESSIONS: usize = 4;
     const WARM_FORWARDS: usize = 8;
     let store = Arc::new(WeightStore::unbounded());
+    let registry = Registry::new();
+    store.register_into(&registry);
     // two rendezvous points bracket the snapshot: every session is warm
     // (lease cached per layer) BEFORE the counter is read, and no warm
     // forward starts until AFTER it is read
@@ -452,6 +460,17 @@ fn warm_forwards_are_lockfree_across_concurrent_sessions() {
         before.misses + 2,
         "stale leases fall back to the locked prepare, which re-stages"
     );
+
+    // the registry adopted the store's own atomics at the top: after
+    // all the traffic above, its view and stats() are the same books
+    for (name, value) in [
+        ("store/hits", after.hits),
+        ("store/misses", after.misses),
+        ("store/evictions", after.evictions),
+        ("store/lock_acquisitions", store.lock_acquisitions()),
+    ] {
+        assert_eq!(registry.counter_value(name), Some(value), "{name}");
+    }
 }
 
 /// ISSUE 8 satellite: many threads calling `prepare` on the SAME key
